@@ -1,0 +1,59 @@
+//! End-to-end validation driver (DESIGN.md): the ICE-Lab conveyor-belt
+//! classification application from the paper's evaluation (Sec. V).
+//!
+//! Streams the ICE-Lab image stream at 20 FPS through the full split-
+//! computing pipeline — head inference on the (simulated) edge device,
+//! latent transfer over the simulated TCP channel, tail inference on the
+//! server — with *real* PJRT execution of both model halves, and reports
+//! accuracy, latency and the QoS verdict for several loss rates.
+//!
+//!     cargo run --release --example ice_lab_conveyor [artifacts] [frames]
+
+use std::path::Path;
+
+use sei::coordinator::{
+    self, ModelScale, QosRequirements, ScenarioConfig, ScenarioKind,
+};
+use sei::model::DeviceProfile;
+use sei::netsim::transfer::{NetworkConfig, Protocol};
+use sei::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "artifacts".to_string());
+    let frames: usize = std::env::args()
+        .nth(2)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(480);
+    let engine = Engine::load(Path::new(&artifacts))?;
+    let ice = engine.dataset("ice")?;
+    let qos = QosRequirements::ice_lab(); // 0.05 s / 20 FPS conveyor
+
+    // Pick the deepest exported split (smallest latent on the wire).
+    let splits = engine.manifest.available_splits();
+    let split = *splits.last().expect("no split artifacts");
+    println!("=== ICE-Lab conveyor, split computing at L{split} ===");
+    println!(
+        "workload: {} frames @ 20 FPS from the ICE stream ({} images)\n",
+        frames,
+        ice.len()
+    );
+
+    for loss in [0.0, 0.02, 0.05] {
+        let cfg = ScenarioConfig {
+            kind: ScenarioKind::Sc { split },
+            net: NetworkConfig::gigabit(Protocol::Tcp, loss, 1234),
+            edge: DeviceProfile::edge_gpu(),
+            server: DeviceProfile::server_gpu(),
+            scale: ModelScale::Slim,
+            frame_period_ns: 50_000_000,
+        };
+        let report = coordinator::serve(&engine, &cfg, &ice, frames, &qos)?;
+        println!("--- loss rate {:.0}% ---", loss * 100.0);
+        print!("{}", report.render(&qos));
+        println!();
+    }
+    Ok(())
+}

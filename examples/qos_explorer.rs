@@ -1,0 +1,69 @@
+//! QoS design-space explorer: sweep channel presets x protocols x split
+//! points and print which configurations satisfy a target QoS — the
+//! "three-dimensional design space" of the paper's introduction, explored
+//! by rapid simulation instead of try-and-test deployment.
+//!
+//!     cargo run --release --example qos_explorer [artifacts]
+
+use std::path::Path;
+
+use sei::coordinator::{
+    self, ModelScale, QosRequirements, ScenarioConfig, ScenarioKind,
+};
+use sei::model::DeviceProfile;
+use sei::netsim::transfer::{NetworkConfig, Protocol};
+use sei::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "artifacts".to_string());
+    let engine = Engine::load(Path::new(&artifacts))?;
+    let test = engine.dataset("test")?;
+    let qos = QosRequirements::with_fps(20.0).and_accuracy(0.85);
+    println!("=== QoS explorer: {} ===\n", qos.describe());
+
+    let channels: [(&str, fn(Protocol, f64, u64) -> NetworkConfig); 3] = [
+        ("gigabit", NetworkConfig::gigabit),
+        ("fast-ethernet", NetworkConfig::fast_ethernet),
+        ("wifi", NetworkConfig::wifi),
+    ];
+    let mut kinds = vec![ScenarioKind::Lc, ScenarioKind::Rc];
+    for s in engine.manifest.available_splits() {
+        kinds.push(ScenarioKind::Sc { split: s });
+    }
+
+    println!(
+        "{:<14} {:<5} {:<8} {:>9} {:>12} {:>8}",
+        "channel", "proto", "config", "accuracy", "mean lat", "QoS"
+    );
+    let loss = 0.02;
+    for (cname, make) in channels {
+        for protocol in [Protocol::Tcp, Protocol::Udp] {
+            for &kind in &kinds {
+                let cfg = ScenarioConfig {
+                    kind,
+                    net: make(protocol, loss, 7),
+                    edge: DeviceProfile::edge_gpu(),
+                    server: DeviceProfile::server_gpu(),
+                    scale: ModelScale::Slim,
+                    frame_period_ns: 50_000_000,
+                };
+                let r = coordinator::run_scenario(&engine, &cfg, &test, 64,
+                                                  &qos)?;
+                let ok = qos
+                    .satisfied_by(r.mean_latency_ns as u64, r.accuracy);
+                println!(
+                    "{:<14} {:<5} {:<8} {:>8.1}% {:>9.3} ms {:>8}",
+                    cname,
+                    protocol.to_string(),
+                    kind.to_string(),
+                    r.accuracy * 100.0,
+                    r.mean_latency_ns / 1e6,
+                    if ok { "ok" } else { "-" }
+                );
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Quickstart: load the artifacts, print the model card, compare LC / RC /
+//! SC on a short workload, and ask the framework for a suggestion.
+//!
+//! Run after `make artifacts && cargo build --release`:
+//!     cargo run --release --example quickstart
+
+use std::path::Path;
+
+use sei::coordinator::{
+    self, CsCurve, ModelScale, QosRequirements, ScenarioConfig, ScenarioKind,
+};
+use sei::model::DeviceProfile;
+use sei::netsim::transfer::{NetworkConfig, Protocol};
+use sei::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "artifacts".to_string());
+    let engine = Engine::load(Path::new(&artifacts))?;
+    let m = &engine.manifest.model;
+    println!("=== Split-Et-Impera quickstart ===");
+    println!(
+        "model: {} ({} params), trained test accuracy {:.1}%",
+        m.arch,
+        m.total_params,
+        m.base_test_accuracy * 100.0
+    );
+    println!("PJRT platform: {}\n", engine.platform());
+
+    // 1. Saliency-based split-point candidates (paper Fig. 1, step i).
+    let curve = CsCurve::from_manifest(&engine);
+    let candidates = curve.candidates(2);
+    println!("CS candidate split points: {candidates:?}");
+    for &c in &candidates {
+        if let Some(row) = engine.manifest.split_eval_for(c) {
+            println!(
+                "  L{c:<2} {:<14} split accuracy {:.1}%, latent {} B/frame",
+                row.layer_name,
+                row.accuracy * 100.0,
+                row.latent_bytes_per_image
+            );
+        }
+    }
+
+    // 2. Simulate LC, RC and the best-available SC on a Gigabit TCP channel
+    //    with 2% loss (paper Fig. 1, step ii).
+    let qos = QosRequirements::ice_lab();
+    let test = engine.dataset("test")?;
+    let split = *candidates.last().unwrap_or(&13);
+    println!("\nscenario comparison (TCP, 1 Gb/s, 2% loss, QoS {}):",
+             qos.describe());
+    for kind in [ScenarioKind::Lc, ScenarioKind::Rc,
+                 ScenarioKind::Sc { split }] {
+        let cfg = ScenarioConfig {
+            kind,
+            net: NetworkConfig::gigabit(Protocol::Tcp, 0.02, 7),
+            edge: DeviceProfile::edge_gpu(),
+            server: DeviceProfile::server_gpu(),
+            scale: ModelScale::Slim,
+            frame_period_ns: 50_000_000,
+        };
+        let r = coordinator::run_scenario(&engine, &cfg, &test, 96, &qos)?;
+        println!(
+            "  {:<8} accuracy {:>5.1}%  mean latency {:>8.3} ms  {}",
+            kind.to_string(),
+            r.accuracy * 100.0,
+            r.mean_latency_ns / 1e6,
+            match r.qos_satisfied {
+                Some(true) => "QoS ok",
+                Some(false) => "QoS violated",
+                None => "",
+            }
+        );
+    }
+
+    // 3. Ask the suggestion engine (paper Fig. 1, step iii).
+    let suggestions = coordinator::suggest(
+        &engine,
+        &NetworkConfig::gigabit(Protocol::Tcp, 0.02, 7),
+        &DeviceProfile::edge_gpu(),
+        &DeviceProfile::server_gpu(),
+        &qos,
+        &test,
+        96,
+        2,
+    )?;
+    if let Some(best) = coordinator::best(&suggestions) {
+        println!(
+            "\nframework suggestion: {} (accuracy {:.1}%, {:.2} ms)",
+            best.rank.kind,
+            best.report.accuracy * 100.0,
+            best.report.mean_latency_ns / 1e6
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,467 @@
+"""AOT pipeline: train everything, compute the CS curve, evaluate splits,
+and export every HLO artifact + weight file + the manifest the Rust
+coordinator consumes.
+
+Run once by `make artifacts` (python is never on the request path):
+
+  cd python && python -m compile.aot --outdir ../artifacts
+
+Stages (each checkpointed under artifacts/checkpoints/ so reruns are cheap):
+  1. synthetic datasets (train / test / ICE-Lab stream)       -> dataset/
+  2. base VGG16-slim training (Adam, lr 5e-3 — paper Sec. V)  -> weights/base/
+  3. Grad-CAM Cumulative Saliency curve (Eqs. 1-2)            -> manifest
+  4. per-layer split evaluation: bottleneck AE (Eq. 3, lr 5e-4)
+     + end-to-end fine-tune (Eq. 4)                           -> manifest
+  5. HLO exports: full fwd (jnp + Pallas variants), head/tail per
+     candidate split, per-layer Grad-CAM reducers             -> *.hlo.txt
+  6. fixtures for the Rust integration tests                  -> fixtures/
+  7. manifest.json
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bottleneck as B
+from . import dataset as D
+from . import model as M
+from . import saliency as S
+from . import train as T
+from .hlo import export_fn
+
+SEED = 7
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint helpers
+# ---------------------------------------------------------------------------
+
+def _ckpt_path(outdir, name):
+    return os.path.join(outdir, "checkpoints", name + ".npz")
+
+
+def _save_params(outdir, name, params):
+    os.makedirs(os.path.join(outdir, "checkpoints"), exist_ok=True)
+    np.savez(_ckpt_path(outdir, name),
+             **{k: np.asarray(v) for k, v in params.items()})
+
+
+def _load_params(outdir, name):
+    p = _ckpt_path(outdir, name)
+    if not os.path.exists(p):
+        return None
+    with np.load(p) as z:
+        return {k: jnp.asarray(z[k]) for k in z.files}
+
+
+def _save_json(outdir, name, obj):
+    with open(os.path.join(outdir, "checkpoints", name + ".json"), "w") as f:
+        json.dump(obj, f)
+
+
+def _load_json(outdir, name):
+    p = os.path.join(outdir, "checkpoints", name + ".json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# Stages
+# ---------------------------------------------------------------------------
+
+def stage_datasets(outdir, fast):
+    ddir = os.path.join(outdir, "dataset")
+    os.makedirs(ddir, exist_ok=True)
+    sizes = {"train": 512 if fast else 4096,
+             "test": 256 if fast else 1024,
+             "ice": 128 if fast else 512}
+    sets, meta = {}, {}
+    for split, n in sizes.items():
+        imgs, labels = D.make_dataset(n, seed=SEED + hash(split) % 1000,
+                                      ice=(split == "ice"))
+        D.save_tensor_f32(os.path.join(ddir, f"{split}_images.bin"), imgs)
+        D.save_tensor_i32(os.path.join(ddir, f"{split}_labels.bin"), labels)
+        sets[split] = (imgs, labels)
+        meta[split] = {
+            "images": f"dataset/{split}_images.bin",
+            "labels": f"dataset/{split}_labels.bin",
+            "count": n,
+            "image_shape": [3, D.IMG_SIZE, D.IMG_SIZE],
+        }
+    meta["class_names"] = D.CLASS_NAMES
+    return sets, meta
+
+
+def stage_base_training(outdir, cfg, sets, fast):
+    params = _load_params(outdir, "base")
+    meta = _load_json(outdir, "base_meta")
+    if params is not None and meta is not None:
+        print("[base] checkpoint hit", flush=True)
+        return params, meta
+    t0 = time.time()
+    imgs, labels = sets["train"]
+    steps = 120 if fast else 900
+    params = M.init_params(cfg, seed=SEED)
+    loss_fn = functools.partial(M.loss_ce, cfg)
+    params, losses = T.train(loss_fn, params, imgs, labels, steps=steps,
+                             batch=96, lr=5e-4 if fast else 1e-3,
+                             seed=SEED, log_every=100, tag="base")
+    acc_fn = jax.jit(functools.partial(M.accuracy, cfg))
+    acc = T.eval_accuracy(acc_fn, params, *sets["test"])
+    acc_ice = T.eval_accuracy(acc_fn, params, *sets["ice"])
+    meta = {"steps": steps, "test_accuracy": acc, "ice_accuracy": acc_ice,
+            "final_loss": losses[-1], "train_seconds": time.time() - t0}
+    print(f"[base] test acc {acc:.3f}, ice acc {acc_ice:.3f} "
+          f"({meta['train_seconds']:.0f}s)", flush=True)
+    _save_params(outdir, "base", params)
+    _save_json(outdir, "base_meta", meta)
+    return params, meta
+
+
+def stage_lite_training(outdir, lite_cfg, sets, fast):
+    """Local-computing baseline: a lightweight model small enough for the
+    sensing device (the paper's MobileNet stand-in). Lower accuracy than
+    the full model — the LC/RC/SC trade-off of Sec. II."""
+    params = _load_params(outdir, "lite")
+    meta = _load_json(outdir, "lite_meta")
+    if params is not None and meta is not None:
+        print("[lite] checkpoint hit", flush=True)
+        return params, meta
+    t0 = time.time()
+    imgs, labels = sets["train"]
+    steps = 80 if fast else 500
+    params = M.init_params(lite_cfg, seed=SEED + 1)
+    loss_fn = functools.partial(M.loss_ce, lite_cfg)
+    params, losses = T.train(loss_fn, params, imgs, labels, steps=steps,
+                             batch=96, lr=1e-3, seed=SEED + 1,
+                             log_every=200, tag="lite")
+    acc_fn = jax.jit(functools.partial(M.accuracy, lite_cfg))
+    acc = T.eval_accuracy(acc_fn, params, *sets["test"])
+    meta = {"steps": steps, "test_accuracy": acc,
+            "train_seconds": time.time() - t0}
+    print(f"[lite] test acc {acc:.3f} ({meta['train_seconds']:.0f}s)",
+          flush=True)
+    _save_params(outdir, "lite", params)
+    _save_json(outdir, "lite_meta", meta)
+    return params, meta
+
+
+def stage_cs_curve(outdir, cfg, params, sets, fast):
+    cached = _load_json(outdir, "cs_curve")
+    if cached is not None:
+        print("[cs] checkpoint hit", flush=True)
+        return cached
+    t0 = time.time()
+    imgs, labels = sets["test"]
+    n = 128 if fast else 512
+    norm, raw = S.cs_curve(cfg, params, imgs[:n], labels[:n], batch=64)
+    cands = S.local_maxima(norm)
+    out = {"norm": [float(v) for v in norm], "raw": [float(v) for v in raw],
+           "candidates": [int(c) for c in cands],
+           "layer_names": M.VGG16_LAYER_NAMES,
+           "seconds": time.time() - t0}
+    print(f"[cs] candidates {cands} ({out['seconds']:.0f}s)", flush=True)
+    _save_json(outdir, "cs_curve", out)
+    return out
+
+
+def stage_split_eval(outdir, cfg, params, sets, layers, fast):
+    """Per-layer bottleneck training (Eq. 3) + fine-tune (Eq. 4) + accuracy.
+
+    Returns (eval rows, {layer: fine-tuned full param dict}).
+    """
+    rows = _load_json(outdir, "split_eval") or []
+    done = {r["layer"] for r in rows}
+    split_params = {}
+    imgs, labels = sets["train"]
+    ae_steps = 60 if fast else 300
+    ft_steps = 40 if fast else 200
+    for li in layers:
+        name = f"split_L{li}"
+        if li in done:
+            p = _load_params(outdir, name)
+            if p is not None:
+                split_params[li] = p
+                continue
+        t0 = time.time()
+        full = dict(params)
+        full.update(B.init_ae_params(cfg, li, seed=SEED))
+        trainable = set(B.ae_param_names(li))
+        # Eq. 3: train the sole bottleneck, backbone frozen.
+        full, _ = T.train(functools.partial(B.loss_ae, cfg, li), full,
+                          imgs, labels, steps=ae_steps, batch=48, lr=5e-4,
+                          seed=SEED + li, trainable=trainable, tag=f"ae{li}")
+        # Eq. 4: fine-tune end-to-end.
+        full, _ = T.train(functools.partial(B.loss_finetune, cfg, li), full,
+                          imgs, labels, steps=ft_steps, batch=48, lr=3e-4,
+                          seed=SEED + li, tag=f"ft{li}")
+        acc = B.split_accuracy(cfg, full, li, *sets["test"])
+        zshape = B.latent_shape(cfg, li)
+        rows = [r for r in rows if r["layer"] != li]
+        rows.append({
+            "layer": li,
+            "layer_name": M.VGG16_LAYER_NAMES[li],
+            "accuracy": acc,
+            "latent_shape": list(zshape),
+            "latent_bytes_per_image": int(np.prod(zshape)) * 4,
+            "feature_bytes_per_image":
+                int(np.prod(cfg.feature_shape(li))) * 4,
+            "seconds": time.time() - t0,
+        })
+        rows.sort(key=lambda r: r["layer"])
+        split_params[li] = full
+        _save_params(outdir, name, full)
+        _save_json(outdir, "split_eval", rows)
+        print(f"[split L{li} {M.VGG16_LAYER_NAMES[li]}] acc {acc:.3f} "
+              f"({time.time() - t0:.0f}s)", flush=True)
+    return rows, split_params
+
+
+# ---------------------------------------------------------------------------
+# Export helpers
+# ---------------------------------------------------------------------------
+
+def _write_weights(outdir, setname, named):
+    wdir = os.path.join(outdir, "weights", setname)
+    os.makedirs(wdir, exist_ok=True)
+    entries = []
+    for name, arr in named:
+        rel = f"weights/{setname}/{name}.bin"
+        D.save_tensor_f32(os.path.join(outdir, rel), np.asarray(arr))
+        entries.append({"name": name, "file": rel,
+                        "shape": list(arr.shape)})
+    return entries
+
+
+def _flat_params(cfg, params, extra_names=()):
+    names = M.param_names(cfg) + list(extra_names)
+    return [(n, params[n]) for n in names]
+
+
+def _export(outdir, name, fn, inputs, weight_entries, weight_arrays,
+            outputs, kind, extra=None):
+    """Lower fn(x..., *weights) and record a manifest executable entry."""
+    rel = name + ".hlo.txt"
+    example = [a for _, a in inputs] + weight_arrays
+    nbytes = export_fn(fn, example, os.path.join(outdir, rel))
+    entry = {
+        "name": name, "hlo": rel, "kind": kind,
+        "inputs": [{"name": n, "shape": list(a.shape),
+                    "dtype": str(a.dtype)} for n, a in inputs],
+        "weights": weight_entries,
+        "outputs": outputs,
+        "hlo_chars": nbytes,
+    }
+    if extra:
+        entry.update(extra)
+    print(f"[export] {rel} ({nbytes} chars)", flush=True)
+    return entry
+
+
+def stage_export(outdir, cfg, params, split_params, split_eval_rows,
+                 candidates, sets, fast, lite=None):
+    execs = []
+    base_named = _flat_params(cfg, params)
+    base_entries = _write_weights(outdir, "base", base_named)
+    base_arrays = [a for _, a in base_named]
+    x1 = jnp.zeros((1, 3, cfg.img_size, cfg.img_size), jnp.float32)
+    x16 = jnp.zeros((16, 3, cfg.img_size, cfg.img_size), jnp.float32)
+
+    def full_fn(x, *ws):
+        p = {n: w for (n, _), w in zip(base_named, ws)}
+        return (M.forward(cfg, p, x),)
+
+    for bs, xb in (("b1", x1), ("b16", x16)):
+        execs.append(_export(
+            outdir, f"full_fwd_{bs}", full_fn, [("x", xb)], base_entries,
+            base_arrays,
+            [{"name": "logits", "shape": [xb.shape[0], cfg.num_classes]}],
+            kind="full", extra={"batch": int(xb.shape[0])}))
+
+    # Local-computing (LC) lightweight model.
+    if lite is not None:
+        lite_cfg, lite_params = lite
+        lite_named = [(n, lite_params[n]) for n in M.param_names(lite_cfg)]
+        lite_entries = _write_weights(outdir, "lite", lite_named)
+        lite_arrays = [a for _, a in lite_named]
+
+        def lite_fn(x, *ws):
+            p = {n: w for (n, _), w in zip(lite_named, ws)}
+            return (M.forward(lite_cfg, p, x),)
+
+        for bs, xb in (("b1", x1), ("b16", x16)):
+            execs.append(_export(
+                outdir, f"full_fwd_lite_{bs}", lite_fn, [("x", xb)],
+                lite_entries, lite_arrays,
+                [{"name": "logits",
+                  "shape": [xb.shape[0], cfg.num_classes]}],
+                kind="full_lite", extra={"batch": int(xb.shape[0])}))
+
+    # Pallas-conv variant of the same forward (numerics equality is a rust
+    # integration test; pallas interpret lowering is large, keep batch small)
+    pcfg = M.ModelConfig(cfg.width_mult, cfg.num_classes, cfg.img_size,
+                         cfg.hidden, use_pallas=True)
+    x4 = jnp.zeros((4, 3, cfg.img_size, cfg.img_size), jnp.float32)
+
+    def full_pallas_fn(x, *ws):
+        p = {n: w for (n, _), w in zip(base_named, ws)}
+        return (M.forward(pcfg, p, x),)
+
+    execs.append(_export(
+        outdir, "full_fwd_pallas_b4", full_pallas_fn, [("x", x4)],
+        base_entries, base_arrays,
+        [{"name": "logits", "shape": [4, cfg.num_classes]}],
+        kind="full_pallas", extra={"batch": 4}))
+
+    # Head/tail per candidate split (fine-tuned weight set per split).
+    for li in candidates:
+        full = split_params[li]
+        named = _flat_params(cfg, full, extra_names=B.ae_param_names(li))
+        entries = _write_weights(outdir, f"split_L{li}", named)
+        arrays = [a for _, a in named]
+        zc, zh, zw = B.latent_shape(cfg, li)
+
+        def head_fn(x, *ws, _li=li, _named=named):
+            p = {n: w for (n, _), w in zip(_named, ws)}
+            return (B.head_forward(cfg, p, x, _li),)
+
+        def tail_fn(z, *ws, _li=li, _named=named):
+            p = {n: w for (n, _), w in zip(_named, ws)}
+            return (B.tail_forward(cfg, p, z, _li),)
+
+        for bs, n in (("b1", 1), ("b16", 16)):
+            xb = jnp.zeros((n, 3, cfg.img_size, cfg.img_size), jnp.float32)
+            zb = jnp.zeros((n, zc, zh, zw), jnp.float32)
+            execs.append(_export(
+                outdir, f"head_L{li}_{bs}", head_fn, [("x", xb)], entries,
+                arrays, [{"name": "latent", "shape": [n, zc, zh, zw]}],
+                kind="head",
+                extra={"batch": n, "split_layer": li,
+                       "latent_shape": [zc, zh, zw]}))
+            execs.append(_export(
+                outdir, f"tail_L{li}_{bs}", tail_fn, [("z", zb)], entries,
+                arrays, [{"name": "logits", "shape": [n, cfg.num_classes]}],
+                kind="tail",
+                extra={"batch": n, "split_layer": li,
+                       "latent_shape": [zc, zh, zw]}))
+
+    # Per-layer Grad-CAM CS reducers (L1 pallas saliency kernel inside).
+    y16 = jnp.zeros((16,), jnp.int32)
+    gradcam_layers = (range(2, M.NUM_FEATURE_LAYERS, 4) if fast
+                      else range(M.NUM_FEATURE_LAYERS))
+    for li in gradcam_layers:
+        fn = S.cs_layer_fn(cfg, li, use_kernel=True)
+
+        def gc_fn(x, y, *ws, _fn=fn):
+            p = {n: w for (n, _), w in zip(base_named, ws)}
+            return (_fn(p, x, y),)
+
+        execs.append(_export(
+            outdir, f"gradcam_L{li}_b16", gc_fn,
+            [("x", x16), ("y", y16)], base_entries, base_arrays,
+            [{"name": "cs", "shape": [16]}], kind="gradcam",
+            extra={"batch": 16, "layer": li,
+                   "layer_name": M.VGG16_LAYER_NAMES[li]}))
+    return execs
+
+
+def stage_fixtures(outdir, cfg, params, sets):
+    """Golden outputs for the Rust integration tests."""
+    fdir = os.path.join(outdir, "fixtures")
+    os.makedirs(fdir, exist_ok=True)
+    imgs, labels = sets["test"]
+    x = jnp.asarray(imgs[:16])
+    logits = np.asarray(M.forward(cfg, params, x))
+    D.save_tensor_f32(os.path.join(fdir, "test16_logits.bin"), logits)
+    return {
+        "test16_logits": {"file": "fixtures/test16_logits.bin",
+                          "shape": list(logits.shape)},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced steps/sizes (CI / pytest)")
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)  # legacy
+    args = ap.parse_args()
+    outdir = args.outdir
+    os.makedirs(outdir, exist_ok=True)
+    t0 = time.time()
+
+    cfg = M.ModelConfig(width_mult=0.125, num_classes=10, img_size=32,
+                        hidden=64)
+
+    lite_cfg = M.ModelConfig(width_mult=0.0625, num_classes=10, img_size=32,
+                             hidden=48)
+
+    sets, dataset_meta = stage_datasets(outdir, args.fast)
+    params, base_meta = stage_base_training(outdir, cfg, sets, args.fast)
+    lite_params, lite_meta = stage_lite_training(outdir, lite_cfg, sets,
+                                                 args.fast)
+    cs = stage_cs_curve(outdir, cfg, params, sets, args.fast)
+
+    candidates = cs["candidates"]
+    # Export head/tail for the union of our CS candidates and the paper's
+    # canonical Fig. 2 split set {5, 9, 11, 13, 15} (the Fig. 3 benches
+    # simulate splits at layers 11 and 15 exactly as the paper does).
+    paper_splits = [5, 9, 11, 13, 15]
+    export_splits = sorted(set(candidates) | set(paper_splits))
+    # Fig. 2 needs the split-accuracy trace for non-candidate layers too.
+    trace_layers = (sorted(set(candidates))[:2] if args.fast
+                    else list(range(1, M.NUM_FEATURE_LAYERS - 1)))
+    eval_layers = sorted(set(trace_layers) | set(export_splits))
+    split_rows, split_params = stage_split_eval(
+        outdir, cfg, params, sets, eval_layers, args.fast)
+
+    execs = stage_export(outdir, cfg, params, split_params, split_rows,
+                         export_splits if not args.fast else candidates,
+                         sets, args.fast, lite=(lite_cfg, lite_params))
+    fixtures = stage_fixtures(outdir, cfg, params, sets)
+
+    manifest = {
+        "version": 1,
+        "seed": SEED,
+        "fast": bool(args.fast),
+        "model": {
+            "arch": "vgg16-slim",
+            "width_mult": cfg.width_mult,
+            "num_classes": cfg.num_classes,
+            "img_size": cfg.img_size,
+            "hidden": cfg.hidden,
+            "layer_names": M.VGG16_LAYER_NAMES,
+            "feature_shapes": [list(cfg.feature_shape(i))
+                               for i in range(M.NUM_FEATURE_LAYERS)],
+            "total_params": int(M.total_params(cfg)),
+            "base_test_accuracy": base_meta["test_accuracy"],
+            "ice_accuracy": base_meta["ice_accuracy"],
+        },
+        "lite_model": {
+            "width_mult": lite_cfg.width_mult,
+            "hidden": lite_cfg.hidden,
+            "total_params": int(M.total_params(lite_cfg)),
+            "test_accuracy": lite_meta["test_accuracy"],
+        },
+        "dataset": dataset_meta,
+        "cs_curve": cs,
+        "split_eval": split_rows,
+        "executables": execs,
+        "fixtures": fixtures,
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done in {time.time() - t0:.0f}s -> {outdir}/manifest.json",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Synthetic "toys" dataset generator (build-time only).
+
+The paper evaluates on CIFAR10 ("a placeholder for bigger datasets") and on
+images of children's toys on a conveyor belt in the ICE Laboratory (Verona).
+Neither is available offline, so we substitute a deterministic, procedurally
+generated shape-classification dataset that preserves the properties the
+framework actually exercises:
+
+* a learnable 10-class image classification task (accuracy well above chance
+  after a short training run);
+* intermediate feature maps whose corruption (UDP packet loss) measurably
+  degrades accuracy;
+* an "ICE-Lab stream" variant — same classes rendered over a conveyor-belt
+  background texture with a different seed — standing in for the lab capture.
+
+Everything is seeded: `make artifacts` is hermetic.
+"""
+
+import numpy as np
+
+IMG_SIZE = 32
+NUM_CLASSES = 10
+CLASS_NAMES = [
+    "circle", "square", "triangle", "cross", "ring",
+    "hbar", "vbar", "diamond", "checker", "dotgrid",
+]
+
+
+def _coords(size):
+    y, x = np.mgrid[0:size, 0:size].astype(np.float32)
+    return x, y
+
+
+def _render_mask(cls, cx, cy, r, rng, size=IMG_SIZE):
+    """Binary mask for one shape instance. r is the characteristic radius."""
+    x, y = _coords(size)
+    dx, dy = x - cx, y - cy
+    if cls == 0:      # circle
+        return (dx * dx + dy * dy) <= r * r
+    if cls == 1:      # square
+        return (np.abs(dx) <= r) & (np.abs(dy) <= r)
+    if cls == 2:      # triangle (upward)
+        return (dy <= r) & (dy >= -r) & (np.abs(dx) <= (dy + r) * 0.6)
+    if cls == 3:      # cross
+        return ((np.abs(dx) <= r * 0.35) & (np.abs(dy) <= r)) | (
+            (np.abs(dy) <= r * 0.35) & (np.abs(dx) <= r))
+    if cls == 4:      # ring
+        d2 = dx * dx + dy * dy
+        return (d2 <= r * r) & (d2 >= (0.55 * r) ** 2)
+    if cls == 5:      # horizontal bar
+        return (np.abs(dy) <= r * 0.35) & (np.abs(dx) <= r * 1.2)
+    if cls == 6:      # vertical bar
+        return (np.abs(dx) <= r * 0.35) & (np.abs(dy) <= r * 1.2)
+    if cls == 7:      # diamond
+        return (np.abs(dx) + np.abs(dy)) <= r * 1.2
+    if cls == 8:      # checker 2x2
+        cell = np.maximum(r * 0.5, 1.0)
+        par = (np.floor(dx / cell) + np.floor(dy / cell)) % 2 == 0
+        return par & (np.abs(dx) <= r) & (np.abs(dy) <= r)
+    if cls == 9:      # dot grid 3x3
+        mask = np.zeros((size, size), dtype=bool)
+        for gy in (-1, 0, 1):
+            for gx in (-1, 0, 1):
+                ddx, ddy = dx - gx * r * 0.8, dy - gy * r * 0.8
+                mask |= (ddx * ddx + ddy * ddy) <= (r * 0.28) ** 2
+        return mask
+    raise ValueError(cls)
+
+
+def _conveyor_background(rng, size=IMG_SIZE):
+    """Dark conveyor-belt texture: horizontal slats + roller highlights."""
+    x, y = _coords(size)
+    phase = rng.uniform(0, 2 * np.pi)
+    slats = 0.12 + 0.05 * np.sin(2 * np.pi * y / 6.0 + phase)
+    img = np.stack([slats, slats, slats * 1.05], axis=0)
+    img += rng.normal(0, 0.02, img.shape).astype(np.float32)
+    return img.astype(np.float32)
+
+
+def _plain_background(rng, size=IMG_SIZE):
+    base = rng.uniform(0.0, 0.35, size=(3, 1, 1)).astype(np.float32)
+    img = np.broadcast_to(base, (3, size, size)).copy()
+    img += rng.normal(0, 0.02, img.shape).astype(np.float32)
+    return img.astype(np.float32)
+
+
+def make_dataset(n, seed, ice=False):
+    """Returns (images [n,3,32,32] float32 in [0,1], labels [n] int32).
+
+    Deliberately non-trivial: each image carries a smaller *distractor*
+    shape of a random other class, the target colour range overlaps the
+    background, and pixel noise is substantial. A slim VGG lands around
+    85-95% — enough headroom that split/bottleneck injection and UDP
+    corruption produce measurable accuracy deltas (the quantities the
+    paper's figures are about), and the softmax never saturates (Grad-CAM
+    needs live gradients).
+    """
+    rng = np.random.default_rng(seed)
+    images = np.empty((n, 3, IMG_SIZE, IMG_SIZE), dtype=np.float32)
+    labels = rng.integers(0, NUM_CLASSES, size=n).astype(np.int32)
+    for i in range(n):
+        cls = int(labels[i])
+        bg = _conveyor_background(rng) if ice else _plain_background(rng)
+        img = bg
+        # distractor: a smaller shape of a different class
+        dcls = int((cls + rng.integers(1, NUM_CLASSES)) % NUM_CLASSES)
+        dcx = rng.uniform(5, IMG_SIZE - 5)
+        dcy = rng.uniform(5, IMG_SIZE - 5)
+        dmask = _render_mask(dcls, dcx, dcy, rng.uniform(2.5, 4.0), rng)
+        dcolor = rng.uniform(0.35, 0.8, size=3).astype(np.float32)
+        for c in range(3):
+            img[c][dmask] = dcolor[c]
+        # target shape (drawn last, occludes the distractor)
+        cx = rng.uniform(10, IMG_SIZE - 10)
+        cy = rng.uniform(10, IMG_SIZE - 10)
+        r = rng.uniform(4.5, 8.0)
+        mask = _render_mask(cls, cx, cy, r, rng)
+        color = rng.uniform(0.4, 1.0, size=3).astype(np.float32)
+        for c in range(3):
+            img[c][mask] = color[c]
+        img += rng.normal(0, 0.08, img.shape).astype(np.float32)
+        images[i] = np.clip(img, 0.0, 1.0)
+    return images, labels
+
+
+def save_tensor_f32(path, arr):
+    """Raw little-endian f32, C order. Shape is recorded in the manifest."""
+    np.ascontiguousarray(arr, dtype="<f4").tofile(path)
+
+
+def save_tensor_i32(path, arr):
+    np.ascontiguousarray(arr, dtype="<i4").tofile(path)

@@ -1,0 +1,37 @@
+"""Lowering helper: jitted jax function -> HLO *text* artifact.
+
+HLO text (not `.serialize()`d HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+bundled xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the HLO text
+parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md and rust/src/runtime/.
+"""
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple=True;
+    the Rust side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_fn(fn, example_args, out_path):
+    """Lower `fn` at the shapes/dtypes of `example_args`, write HLO text."""
+    specs = [
+        jax.ShapeDtypeStruct(a.shape, a.dtype) for a in example_args
+    ]
+    # keep_unused=True: the Rust runtime feeds (input, *all_weights)
+    # positionally per the manifest; jit's default would silently drop
+    # weights a particular head/tail slice doesn't touch and desynchronize
+    # the calling convention ("supplied N buffers but expected M").
+    lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return len(text)

@@ -1,0 +1,1 @@
+from . import matmul, ref, saliency  # noqa: F401

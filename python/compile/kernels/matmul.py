@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: tiled matmul — the framework's compute hot-spot.
+
+Convolution dominates the mult-adds of every VGG variant (Table II of the
+paper: 247.74 G mult-adds, >95 % of which are the 13 conv layers). The L2
+model lowers convolution as im2col × weight matmul, and this kernel is that
+matmul.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid is
+(M/bm, N/bn, K/bk) with K innermost so the (bm, bn) accumulator tile stays
+resident in VMEM across the K loop — the TPU analogue of a CUDA
+threadblock's shared-memory K-loop. Default blocks 128×128×128 keep the
+working set at (bm·bk + bk·bn + bm·bn)·4 B = 192 KiB ≪ 16 MiB VMEM and feed
+the 128×128 MXU systolic array with full tiles.
+
+`interpret=True` is mandatory here: the CPU PJRT plugin cannot execute the
+Mosaic custom-call a real TPU lowering would emit. Numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, n_k):
+    """One (bm, bn) output tile; grid axis 2 walks the K dimension."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(v, m):
+    return (v + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, bm=128, bn=128, bk=128):
+    """Pallas tiled matmul with automatic padding to block multiples.
+
+    x: [M, K] f32, y: [K, N] f32 -> [M, N] f32.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    bk = min(bk, _ceil_to(k, 8))
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm=128, bn=128, bk=128):
+    """Analytic VMEM working set of one grid step (for DESIGN.md §Perf)."""
+    return 4 * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization(m, k, n, bm=128, bn=128, bk=128):
+    """Fraction of MXU issue slots doing useful work = useful MACs over
+    MACs issued for the padded problem. 1.0 when all dims are block
+    multiples; drops with padding waste."""
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    return (m * k * n) / float(mp * kp * np_)

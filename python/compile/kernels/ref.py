@@ -1,0 +1,17 @@
+"""Pure-jnp oracles for the Pallas kernels (pytest/hypothesis ground truth)."""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def matmul_ref(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def saliency_ref(f, alpha):
+    """f: [B, Z, H, W], alpha: [B, Z] -> [B]."""
+    cam = jnp.einsum("bzhw,bz->bhw", f, alpha)
+    cam = jnp.maximum(cam, 0.0)
+    return jnp.mean(cam, axis=(1, 2))

@@ -1,0 +1,231 @@
+"""L2: VGG16-slim forward/backward in pure JAX, calling the L1 kernels.
+
+Exact VGG16 topology (13 conv + 5 maxpool, Simonyan & Zisserman 2014) with a
+configurable width multiplier. The paper trains the PyTorch VGG16 on CIFAR10;
+we train the same topology at 32x32 with width 1/8 so `make artifacts` is a
+few minutes on CPU. The CS-curve structure (pooling discontinuities, block
+plateaus) depends on topology, not width — see DESIGN.md.
+
+Feature layers are indexed **0-based over the 18 conv/pool layers** (ReLU is
+folded into its conv). In this indexing the paper's candidate split points
+are: 5 = block2_pool, 9 = block3_pool, 11 = block4_conv2, 13 = block4_pool,
+15 = block5_conv2 — exactly the indices quoted in the paper's Fig. 2.
+
+Parameters are a flat `dict[str, jnp.ndarray]`; the AOT exporter flattens
+them in the deterministic order of `param_names()` so the Rust runtime can
+feed them positionally.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import matmul as pallas_matmul
+
+# VGG16 configuration: conv output channels, 'M' = 2x2 maxpool stride 2.
+VGG16_CFG = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+             512, 512, 512, "M", 512, 512, 512, "M"]
+
+# Keras-style layer names aligned with VGG16_CFG (and with the paper's Fig 2).
+VGG16_LAYER_NAMES = [
+    "block1_conv1", "block1_conv2", "block1_pool",
+    "block2_conv1", "block2_conv2", "block2_pool",
+    "block3_conv1", "block3_conv2", "block3_conv3", "block3_pool",
+    "block4_conv1", "block4_conv2", "block4_conv3", "block4_pool",
+    "block5_conv1", "block5_conv2", "block5_conv3", "block5_pool",
+]
+
+NUM_FEATURE_LAYERS = len(VGG16_CFG)  # 18
+
+
+class ModelConfig:
+    """Static model hyper-parameters."""
+
+    def __init__(self, width_mult=0.125, num_classes=10, img_size=32,
+                 hidden=64, use_pallas=False):
+        self.width_mult = width_mult
+        self.num_classes = num_classes
+        self.img_size = img_size
+        self.hidden = hidden          # classifier hidden width
+        self.use_pallas = use_pallas
+
+    def channels(self):
+        """Per-feature-layer output channels (pool repeats its input)."""
+        chans, cur = [], 3
+        for c in VGG16_CFG:
+            if c == "M":
+                chans.append(cur)
+            else:
+                cur = max(int(c * self.width_mult), 4)
+                chans.append(cur)
+        return chans
+
+    def conv_layers(self):
+        """[(feature_layer_idx, in_ch, out_ch), ...] for the 13 convs."""
+        out, cur = [], 3
+        for i, c in enumerate(VGG16_CFG):
+            if c == "M":
+                continue
+            oc = max(int(c * self.width_mult), 4)
+            out.append((i, cur, oc))
+            cur = oc
+        return out
+
+    def feature_shape(self, layer_idx):
+        """(C, H, W) of the output of feature layer `layer_idx` (0-based)."""
+        chans = self.channels()
+        size = self.img_size
+        for i, c in enumerate(VGG16_CFG[: layer_idx + 1]):
+            if c == "M":
+                size //= 2
+        return (chans[layer_idx], size, size)
+
+    def flat_feature_dim(self):
+        c, h, w = self.feature_shape(NUM_FEATURE_LAYERS - 1)
+        return c * h * w
+
+
+def param_names(cfg):
+    """Deterministic flat parameter order (the rust-side feeding order)."""
+    names = []
+    for i, _, _ in cfg.conv_layers():
+        names += [f"conv{i}_w", f"conv{i}_b"]
+    names += ["fc0_w", "fc0_b", "fc1_w", "fc1_b"]
+    return names
+
+
+def init_params(cfg, seed=0):
+    """He-init conv + classifier parameters."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for i, ic, oc in cfg.conv_layers():
+        fan_in = ic * 9
+        params[f"conv{i}_w"] = jnp.asarray(
+            rng.normal(0, np.sqrt(2.0 / fan_in), (oc, ic, 3, 3)), jnp.float32)
+        params[f"conv{i}_b"] = jnp.zeros((oc,), jnp.float32)
+    d = cfg.flat_feature_dim()
+    params["fc0_w"] = jnp.asarray(
+        rng.normal(0, np.sqrt(2.0 / d), (d, cfg.hidden)), jnp.float32)
+    params["fc0_b"] = jnp.zeros((cfg.hidden,), jnp.float32)
+    params["fc1_w"] = jnp.asarray(
+        rng.normal(0, np.sqrt(2.0 / cfg.hidden), (cfg.hidden, cfg.num_classes)),
+        jnp.float32)
+    params["fc1_b"] = jnp.zeros((cfg.num_classes,), jnp.float32)
+    return params
+
+
+def _conv2d_jnp(x, w, b):
+    """3x3 same conv, NCHW."""
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return y + b[None, :, None, None]
+
+
+def _conv2d_pallas(x, w, b):
+    """Same conv lowered as im2col x weight matmul through the L1 kernel."""
+    n, c, h, wd = x.shape
+    oc = w.shape[0]
+    patches = jax.lax.conv_general_dilated_patches(
+        x, filter_shape=(3, 3), window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))      # [N, C*9, H, W]
+    cols = patches.transpose(0, 2, 3, 1).reshape(n * h * wd, c * 9)
+    wmat = w.reshape(oc, c * 9).T                        # [C*9, OC]
+    y = pallas_matmul.matmul(cols, wmat)                 # L1 kernel
+    y = y.reshape(n, h, wd, oc).transpose(0, 3, 1, 2)
+    return y + b[None, :, None, None]
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+
+
+def feature_layer(cfg, params, x, layer_idx):
+    """Apply feature layer `layer_idx` to input x."""
+    c = VGG16_CFG[layer_idx]
+    if c == "M":
+        return _maxpool2(x)
+    conv = _conv2d_pallas if cfg.use_pallas else _conv2d_jnp
+    y = conv(x, params[f"conv{layer_idx}_w"], params[f"conv{layer_idx}_b"])
+    return jax.nn.relu(y)
+
+
+def forward_features(cfg, params, x, upto=None):
+    """Run feature layers 0..=upto (all 18 if upto is None)."""
+    last = NUM_FEATURE_LAYERS - 1 if upto is None else upto
+    for i in range(last + 1):
+        x = feature_layer(cfg, params, x, i)
+    return x
+
+
+def forward_from(cfg, params, feat, start):
+    """Run feature layers start..17 then the classifier head."""
+    x = feat
+    for i in range(start, NUM_FEATURE_LAYERS):
+        x = feature_layer(cfg, params, x, i)
+    return classifier(cfg, params, x)
+
+
+def classifier(cfg, params, feat):
+    x = feat.reshape(feat.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc0_w"] + params["fc0_b"])
+    return x @ params["fc1_w"] + params["fc1_b"]
+
+
+def forward(cfg, params, x):
+    """Full model: logits [B, num_classes]."""
+    return classifier(cfg, params, forward_features(cfg, params, x))
+
+
+def loss_ce(cfg, params, x, y):
+    """Cross-entropy training loss (base model training)."""
+    logits = forward(cfg, params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def loss_task_mse(cfg, params, x, y):
+    """Paper Eq. 4: MSE between model output and one-hot ground truth."""
+    logits = forward(cfg, params, x)
+    onehot = jax.nn.one_hot(y, cfg.num_classes, dtype=jnp.float32)
+    return jnp.mean(jnp.sum((logits - onehot) ** 2, axis=1))
+
+
+def accuracy(cfg, params, x, y):
+    return jnp.mean((jnp.argmax(forward(cfg, params, x), axis=1) == y)
+                    .astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Static statistics (mirrors rust/src/model/ — cross-checked in tests)
+# ---------------------------------------------------------------------------
+
+def layer_stats(cfg):
+    """[(name, out_shape(C,H,W), params, mult_adds_per_image), ...]."""
+    rows = []
+    size, cur = cfg.img_size, 3
+    for i, c in enumerate(VGG16_CFG):
+        name = VGG16_LAYER_NAMES[i]
+        if c == "M":
+            size //= 2
+            rows.append((name, (cur, size, size), 0, 0))
+        else:
+            oc = max(int(c * cfg.width_mult), 4)
+            p = oc * cur * 9 + oc
+            ma = oc * cur * 9 * size * size
+            rows.append((name, (oc, size, size), p, ma))
+            cur = oc
+    d = cur * size * size
+    rows.append(("fc0", (cfg.hidden,), d * cfg.hidden + cfg.hidden,
+                 d * cfg.hidden))
+    rows.append(("fc1", (cfg.num_classes,),
+                 cfg.hidden * cfg.num_classes + cfg.num_classes,
+                 cfg.hidden * cfg.num_classes))
+    return rows
+
+
+def total_params(cfg):
+    return sum(r[2] for r in layer_stats(cfg))

@@ -1,0 +1,110 @@
+"""Grad-CAM based Cumulative Saliency (CS) curve — paper Sec. III, Eqs. 1-2.
+
+For feature layer i and input j of class c:
+
+  Eq. 1:  alpha^c_{i,j} = spatial-pool of  d y^c / d F^{i,j}   (per channel)
+  Eq. 2:  L^i_{j,c}     = ReLU( sum_z alpha_z * F_z )
+  CS^i_{j,c}            = spatial mean of L^i_{j,c}
+  CS^i                  = mean over all inputs j of all classes c
+
+Note on Eq. 2 as printed: the paper writes a sum over layers k=i..I, which is
+dimensionally inconsistent (feature maps of different layers have different
+shapes) — the I-SPLIT paper this generalizes computes the per-layer map, and
+so do we. The per-layer map *does* depend on the whole downstream network
+through the gradient, which is what the k=i..I sum gestures at.
+
+The inner reduction (weighted sum -> ReLU -> mean) is the L1 Pallas kernel
+`kernels.saliency.saliency_reduce`; `cs_layer_fn` is what `aot.py` lowers to
+one HLO artifact per layer so the Rust coordinator can compute the CS curve
+on the request path without Python.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .kernels.saliency import saliency_reduce
+
+
+def cs_layer_fn(cfg, layer_idx, use_kernel=True):
+    """Returns f(params, x, y) -> CS values [B] for feature layer layer_idx.
+
+    y is the target class per input (the paper uses the correct class).
+    The gradient d y^c / d F^i is taken through the *downstream* network
+    (layers layer_idx+1 .. classifier), per Eq. 1.
+    """
+
+    def fn(params, x, y):
+        feat = M.forward_features(cfg, params, x, upto=layer_idx)
+
+        def downstream_score(f):
+            logits = M.forward_from(cfg, params, f, layer_idx + 1)
+            onehot = jax.nn.one_hot(y, cfg.num_classes, dtype=jnp.float32)
+            # sum of per-sample target logits: batch rows are independent,
+            # so grad w.r.t. feat gives per-sample gradients.
+            return jnp.sum(logits * onehot)
+
+        grad = jax.grad(downstream_score)(feat)          # [B, Z, H, W]
+        alpha = jnp.mean(grad, axis=(2, 3))              # Eq. 1 (GAP)
+        if use_kernel:
+            cs = saliency_reduce(feat, alpha)            # L1 kernel
+        else:
+            cam = jnp.einsum("bzhw,bz->bhw", feat, alpha)
+            cs = jnp.mean(jnp.maximum(cam, 0.0), axis=(1, 2))
+        # Per-layer scale normalization: raw CAM magnitude grows orders of
+        # magnitude with depth (activation * gradient scale), which would
+        # bury the early-layer structure the paper's Fig. 2 shows. Dividing
+        # by Z * rms(F) * rms(alpha) makes CS a correlation-like quantity
+        # comparable across layers (the generalization step over I-SPLIT
+        # this paper claims: any signal, any layer width).
+        z = feat.shape[1]
+        denom = (z
+                 * jnp.sqrt(jnp.mean(feat ** 2, axis=(1, 2, 3)))
+                 * jnp.sqrt(jnp.mean(alpha ** 2, axis=1)) + 1e-12)
+        return cs / denom
+
+    return fn
+
+
+def cs_curve(cfg, params, images, labels, batch=64, use_kernel=False,
+             layers=None):
+    """CS^i for every feature layer, averaged over the dataset.
+
+    Curve is min-max normalized to [0, 1] (the paper plots a normalized
+    saliency axis), making layers of different widths comparable.
+    """
+    layers = list(range(M.NUM_FEATURE_LAYERS)) if layers is None else layers
+    n = images.shape[0]
+    raw = []
+    for li in layers:
+        fn = jax.jit(cs_layer_fn(cfg, li, use_kernel=use_kernel))
+        acc = 0.0
+        for s in range(0, n, batch):
+            bx = jnp.asarray(images[s:s + batch])
+            by = jnp.asarray(labels[s:s + batch])
+            acc += float(jnp.sum(fn(params, bx, by)))
+        raw.append(acc / n)
+    raw = np.asarray(raw, dtype=np.float64)
+    lo, hi = raw.min(), raw.max()
+    norm = (raw - lo) / (hi - lo) if hi > lo else np.zeros_like(raw)
+    return norm, raw
+
+
+def local_maxima(curve, min_layer=2, max_layer=None):
+    """Candidate split points = indices of local maxima of the CS curve.
+
+    Endpoints are excluded (splitting at layer 0 is LC-with-extra-steps and
+    at the last layer is just RC of the classifier); plateaus take the first
+    index. `min_layer` skips the earliest layers where splitting is
+    pointless (head smaller than the input itself).
+    """
+    n = len(curve)
+    max_layer = n - 2 if max_layer is None else max_layer
+    out = []
+    for i in range(max(1, min_layer), min(n - 1, max_layer + 1)):
+        if curve[i] > curve[i - 1] and curve[i] >= curve[i + 1]:
+            out.append(i)
+    return out

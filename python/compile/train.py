@@ -1,0 +1,96 @@
+"""Hand-rolled Adam optimizer + training loops (build-time only; no optax
+in this offline image).
+
+Hyper-parameters follow the paper: base model Adam lr 5e-3 (paper: 20 epochs
+on CIFAR10); bottleneck/fine-tune Adam lr 5e-4 (paper: up to 50 epochs).
+Step counts are scaled to the slim model / synthetic data so that
+`make artifacts` completes in minutes on CPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def adam_init(params):
+    z = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8,
+                trainable=None):
+    """One Adam step. `trainable`: optional set of param names to update
+    (used to freeze the backbone while training the bottleneck, Eq. 3)."""
+    t = state["t"] + 1
+    m, v, out = {}, {}, {}
+    tf = jnp.asarray(t, jnp.float32)
+    for k in params:
+        g = grads[k]
+        mk = b1 * state["m"][k] + (1 - b1) * g
+        vk = b2 * state["v"][k] + (1 - b2) * g * g
+        m[k], v[k] = mk, vk
+        mhat = mk / (1 - b1 ** tf)
+        vhat = vk / (1 - b2 ** tf)
+        step = lr * mhat / (jnp.sqrt(vhat) + eps)
+        if trainable is not None and k not in trainable:
+            out[k] = params[k]
+        else:
+            out[k] = params[k] - step
+    return out, {"m": m, "v": v, "t": t}
+
+
+def make_train_step(loss_fn, lr, trainable=None):
+    """Returns a jitted (params, state, batch...) -> (params, state, loss)."""
+
+    @jax.jit
+    def step(params, state, *batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, *batch)
+        params2, state2 = adam_update(params, grads, state, lr,
+                                      trainable=trainable)
+        return params2, state2, loss
+
+    return step
+
+
+def iterate_minibatches(images, labels, batch, seed):
+    """Infinite shuffled minibatch generator over numpy arrays."""
+    rng = np.random.default_rng(seed)
+    n = images.shape[0]
+    while True:
+        order = rng.permutation(n)
+        for s in range(0, n - batch + 1, batch):
+            idx = order[s:s + batch]
+            yield images[idx], labels[idx]
+
+
+def train(loss_fn, params, images, labels, steps, batch, lr, seed=0,
+          trainable=None, log_every=0, tag=""):
+    """Generic training loop; returns (params, [losses])."""
+    step = make_train_step(loss_fn, lr, trainable=trainable)
+    state = adam_init(params)
+    it = iterate_minibatches(images, labels, batch, seed)
+    losses = []
+    for s in range(steps):
+        bx, by = next(it)
+        params, state, loss = step(params, state, jnp.asarray(bx),
+                                   jnp.asarray(by))
+        losses.append(float(loss))
+        if log_every and (s + 1) % log_every == 0:
+            print(f"  [{tag}] step {s + 1}/{steps} loss {float(loss):.4f}",
+                  flush=True)
+    return params, losses
+
+
+def eval_accuracy(acc_fn, params, images, labels, batch=128):
+    """Batched accuracy over a numpy test set."""
+    n = images.shape[0]
+    correct, total = 0.0, 0
+    for s in range(0, n, batch):
+        bx = jnp.asarray(images[s:s + batch])
+        by = jnp.asarray(labels[s:s + batch])
+        correct += float(acc_fn(params, bx, by)) * bx.shape[0]
+        total += bx.shape[0]
+    return correct / total

@@ -1,0 +1,101 @@
+"""Artifact/manifest schema contract with the Rust loader.
+
+These run against the real `artifacts/` directory when it exists (built by
+`make artifacts`); they are skipped otherwise so `pytest` works on a fresh
+checkout.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="artifacts not built")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_top_level(manifest):
+    for key in ("model", "dataset", "cs_curve", "split_eval",
+                "executables", "fixtures"):
+        assert key in manifest
+
+
+def test_every_hlo_file_exists_and_parses_header(manifest):
+    for ex in manifest["executables"]:
+        p = os.path.join(ART, ex["hlo"])
+        assert os.path.exists(p), ex["name"]
+        head = open(p).read(200)
+        assert "HloModule" in head, ex["name"]
+
+
+def test_every_weight_file_matches_shape(manifest):
+    seen = set()
+    for ex in manifest["executables"]:
+        for w in ex["weights"]:
+            if w["file"] in seen:
+                continue
+            seen.add(w["file"])
+            p = os.path.join(ART, w["file"])
+            n = os.path.getsize(p) // 4
+            assert n == int(np.prod(w["shape"])), w
+
+
+def test_dataset_files_match_counts(manifest):
+    for split in ("train", "test", "ice"):
+        d = manifest["dataset"][split]
+        ip = os.path.join(ART, d["images"])
+        n = d["count"]
+        c, h, w = d["image_shape"]
+        assert os.path.getsize(ip) == n * c * h * w * 4
+        lp = os.path.join(ART, d["labels"])
+        assert os.path.getsize(lp) == n * 4
+        labels = np.fromfile(lp, dtype="<i4")
+        assert labels.min() >= 0 and labels.max() < 10
+
+
+def test_cs_curve_well_formed(manifest):
+    cs = manifest["cs_curve"]
+    n = len(cs["norm"])
+    assert n == len(cs["layer_names"]) == 18
+    assert min(cs["norm"]) == 0.0 and max(cs["norm"]) == 1.0
+    for c in cs["candidates"]:
+        assert 0 < c < n - 1
+
+
+def test_candidates_are_local_maxima(manifest):
+    cs = manifest["cs_curve"]["norm"]
+    for c in manifest["cs_curve"]["candidates"]:
+        assert cs[c] > cs[c - 1] and cs[c] >= cs[c + 1]
+
+
+def test_split_eval_rows(manifest):
+    for r in manifest["split_eval"]:
+        assert 0.0 <= r["accuracy"] <= 1.0
+        assert r["latent_bytes_per_image"] * 2 == \
+            r["feature_bytes_per_image"]
+
+
+def test_executables_cover_candidates(manifest):
+    names = {e["name"] for e in manifest["executables"]}
+    assert "full_fwd_b1" in names and "full_fwd_b16" in names
+    for li in manifest["cs_curve"]["candidates"]:
+        for k in (f"head_L{li}_b1", f"tail_L{li}_b1",
+                  f"head_L{li}_b16", f"tail_L{li}_b16"):
+            assert k in names, k
+
+
+def test_fixture_logits_shape(manifest):
+    f = manifest["fixtures"]["test16_logits"]
+    p = os.path.join(ART, f["file"])
+    n = os.path.getsize(p) // 4
+    assert n == int(np.prod(f["shape"]))

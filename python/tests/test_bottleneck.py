@@ -1,0 +1,85 @@
+"""Bottleneck AE (Eqs. 3-4): shapes, compression rate, trainability."""
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import bottleneck as B
+from compile import model as M
+from compile import train as T
+
+CFG = M.ModelConfig(width_mult=0.125)
+PARAMS = M.init_params(CFG, seed=0)
+RNG = np.random.default_rng(2)
+X = jnp.asarray(RNG.uniform(0, 1, (4, 3, 32, 32)), jnp.float32)
+Y = jnp.asarray(RNG.integers(0, 10, 4), jnp.int32)
+LI = 9  # block3_pool
+
+
+def _full_params(li=LI):
+    p = dict(PARAMS)
+    p.update(B.init_ae_params(CFG, li, seed=0))
+    return p
+
+
+def test_latent_is_half_channels():
+    for li in (5, 9, 13, 15):
+        c, h, w = CFG.feature_shape(li)
+        zc, zh, zw = B.latent_shape(CFG, li)
+        assert (zc, zh, zw) == (c // 2, h, w)
+        # 50% compression rate on bytes
+        assert zc * zh * zw * 4 * 2 == c * h * w * 4
+
+
+def test_head_tail_shapes():
+    p = _full_params()
+    z = B.head_forward(CFG, p, X, LI)
+    assert z.shape == (4,) + B.latent_shape(CFG, LI)
+    logits = B.tail_forward(CFG, p, z, LI)
+    assert logits.shape == (4, 10)
+
+
+def test_split_forward_composes_head_tail():
+    p = _full_params()
+    via_split = B.split_forward(CFG, p, X, LI)
+    via_ht = B.tail_forward(CFG, p, B.head_forward(CFG, p, X, LI), LI)
+    np.testing.assert_allclose(via_split, via_ht, rtol=1e-6)
+
+
+def test_ae_loss_decreases_with_training():
+    p = _full_params()
+    loss_fn = functools.partial(B.loss_ae, CFG, LI)
+    l0 = float(loss_fn(p, X, Y))
+    step = T.make_train_step(loss_fn, 1e-3,
+                             trainable=set(B.ae_param_names(LI)))
+    st = T.adam_init(p)
+    for _ in range(30):
+        p, st, l = step(p, st, X, Y)
+    assert float(l) < l0
+
+
+def test_ae_training_freezes_backbone():
+    p = _full_params()
+    loss_fn = functools.partial(B.loss_ae, CFG, LI)
+    step = T.make_train_step(loss_fn, 1e-3,
+                             trainable=set(B.ae_param_names(LI)))
+    st = T.adam_init(p)
+    p2, st, _ = step(p, st, X, Y)
+    for k in M.param_names(CFG):
+        np.testing.assert_array_equal(p[k], p2[k], err_msg=k)
+    changed = any(
+        not np.array_equal(p[k], p2[k]) for k in B.ae_param_names(LI))
+    assert changed
+
+
+def test_finetune_loss_finite():
+    p = _full_params()
+    l = float(B.loss_finetune(CFG, LI, p, X, Y))
+    assert np.isfinite(l) and l > 0
+
+
+def test_split_accuracy_bounds():
+    p = _full_params()
+    acc = B.split_accuracy(CFG, p, LI, np.asarray(X), np.asarray(Y), batch=2)
+    assert 0.0 <= acc <= 1.0

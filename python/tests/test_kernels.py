@@ -1,0 +1,107 @@
+"""L1 Pallas kernels vs pure-jnp oracles (hypothesis shape/dtype sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as K
+from compile.kernels import ref as R
+from compile.kernels import saliency as SK
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+# ----------------------------------------------------------------- matmul --
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_random_shapes(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = rand(rng, m, k), rand(rng, k, n)
+    got = K.matmul(x, y, bm=32, bn=32, bk=32)
+    np.testing.assert_allclose(got, R.matmul_ref(x, y), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 128, 64),
+                                   (64, 256, 128)])
+def test_matmul_block_multiple_shapes(m, k, n):
+    rng = np.random.default_rng(0)
+    x, y = rand(rng, m, k), rand(rng, k, n)
+    np.testing.assert_allclose(K.matmul(x, y), R.matmul_ref(x, y),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 8), (64, 64, 64)])
+def test_matmul_block_shape_invariance(bm, bn, bk):
+    """Result must not depend on the tiling."""
+    rng = np.random.default_rng(1)
+    x, y = rand(rng, 50, 33, ), rand(rng, 33, 21)
+    got = K.matmul(x, y, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, R.matmul_ref(x, y), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_identity():
+    rng = np.random.default_rng(2)
+    x = rand(rng, 40, 40)
+    np.testing.assert_allclose(K.matmul(x, jnp.eye(40)), x,
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_matmul_zero():
+    x = jnp.zeros((17, 23), jnp.float32)
+    y = jnp.zeros((23, 9), jnp.float32)
+    assert float(jnp.abs(K.matmul(x, y)).max()) == 0.0
+
+
+def test_vmem_and_mxu_estimates():
+    assert K.vmem_bytes(128, 128, 128) == 4 * 3 * 128 * 128
+    assert K.vmem_bytes(128, 128, 128) < 16 * 1024 * 1024  # fits VMEM
+    assert K.mxu_utilization(128, 128, 128) == 1.0
+    assert 0.0 < K.mxu_utilization(129, 128, 128) < 1.0
+
+
+# --------------------------------------------------------------- saliency --
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    z=st.integers(1, 24),
+    h=st.sampled_from([1, 2, 4, 7, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_saliency_matches_ref(b, z, h, seed):
+    rng = np.random.default_rng(seed)
+    f = rand(rng, b, z, h, h)
+    a = rand(rng, b, z)
+    np.testing.assert_allclose(SK.saliency_reduce(f, a),
+                               R.saliency_ref(f, a), rtol=1e-5, atol=1e-6)
+
+
+def test_saliency_relu_clips_negative_cam():
+    f = jnp.ones((2, 3, 4, 4), jnp.float32)
+    a = -jnp.ones((2, 3), jnp.float32)
+    out = SK.saliency_reduce(f, a)
+    np.testing.assert_allclose(out, jnp.zeros(2), atol=0)
+
+
+def test_saliency_scale_equivariance():
+    rng = np.random.default_rng(3)
+    f = jnp.abs(rand(rng, 2, 4, 4, 4))
+    a = jnp.abs(rand(rng, 2, 4))
+    np.testing.assert_allclose(SK.saliency_reduce(f, 2.0 * a),
+                               2.0 * SK.saliency_reduce(f, a), rtol=1e-5)
+
+
+def test_saliency_nonneg():
+    rng = np.random.default_rng(4)
+    f, a = rand(rng, 4, 8, 4, 4), rand(rng, 4, 8)
+    assert float(SK.saliency_reduce(f, a).min()) >= 0.0

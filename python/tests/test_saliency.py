@@ -1,0 +1,58 @@
+"""Grad-CAM / CS curve: kernel-vs-jnp equivalence, curve properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile import saliency as S
+
+CFG = M.ModelConfig(width_mult=0.125)
+PARAMS = M.init_params(CFG, seed=0)
+RNG = np.random.default_rng(1)
+X = jnp.asarray(RNG.uniform(0, 1, (4, 3, 32, 32)), jnp.float32)
+Y = jnp.asarray(RNG.integers(0, 10, 4), jnp.int32)
+
+
+def test_cs_layer_kernel_matches_jnp():
+    for li in (0, 5, 11, 17):
+        a = S.cs_layer_fn(CFG, li, use_kernel=True)(PARAMS, X, Y)
+        b = S.cs_layer_fn(CFG, li, use_kernel=False)(PARAMS, X, Y)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6,
+                                   err_msg=f"layer {li}")
+
+
+def test_cs_values_nonnegative():
+    for li in (3, 9, 15):
+        v = S.cs_layer_fn(CFG, li, use_kernel=False)(PARAMS, X, Y)
+        assert float(jnp.min(v)) >= 0.0
+
+
+def test_cs_curve_shape_and_normalization():
+    imgs = np.asarray(X)
+    labels = np.asarray(Y)
+    norm, raw = S.cs_curve(CFG, PARAMS, imgs, labels, batch=4,
+                           layers=[0, 5, 9, 17])
+    assert len(norm) == 4 and len(raw) == 4
+    assert norm.min() == 0.0 and norm.max() == 1.0
+
+
+def test_local_maxima_simple():
+    curve = [0.0, 0.5, 0.2, 0.8, 0.3, 0.9, 0.1]
+    assert S.local_maxima(curve, min_layer=1) == [1, 3, 5]
+    assert S.local_maxima(curve, min_layer=2) == [3, 5]
+
+
+def test_local_maxima_excludes_endpoints():
+    curve = [1.0, 0.5, 0.2, 0.1, 0.9]
+    assert S.local_maxima(curve, min_layer=1) == []
+
+
+def test_local_maxima_plateau_takes_first():
+    curve = [0.0, 0.2, 0.8, 0.8, 0.1, 0.0]
+    assert S.local_maxima(curve, min_layer=1) == [2]
+
+
+def test_local_maxima_respects_min_layer():
+    curve = [0.0, 0.9, 0.1, 0.8, 0.1, 0.0]
+    assert S.local_maxima(curve, min_layer=3) == [3]

@@ -1,0 +1,117 @@
+//! Bench: regenerate the paper's Fig. 2 — the Cumulative Saliency curve
+//! overlaid with the per-layer split accuracy, with candidate split points
+//! at the CS local maxima.
+//!
+//! The CS curve is recomputed *in Rust* by executing the per-layer
+//! Grad-CAM artifacts on the PJRT CPU client; the split-accuracy trace
+//! comes from the build-time bottleneck+fine-tune evaluation recorded in
+//! the manifest. Writes reports/fig2.txt and reports/fig2.csv.
+
+use std::path::Path;
+
+use sei::coordinator::saliency::compute_cs_curve;
+use sei::report::csv::Csv;
+use sei::report::fig2_report;
+use sei::runtime::Engine;
+use sei::util::bench::Bencher;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("fig2_cs_curve: artifacts not built — run `make artifacts`");
+        return;
+    }
+    let engine = Engine::load(dir).expect("engine");
+    let test = engine.dataset("test").expect("test set");
+    let names = engine.manifest.model.layer_names.clone();
+
+    println!("=== Fig. 2: CS curve + split accuracy ===\n");
+    let n_images = if engine.manifest.fast { 32 } else { 128 };
+    let t0 = std::time::Instant::now();
+    let curve = compute_cs_curve(&engine, &test, n_images).expect("cs");
+    let cs_seconds = t0.elapsed().as_secs_f64();
+    let norm = curve.normalized();
+
+    let mut rows = Vec::new();
+    let mut csv = Csv::new(&["layer", "name", "is_pool", "cs_norm",
+                             "split_accuracy"]);
+    for (i, &li) in curve.layers.iter().enumerate() {
+        let name = names[li].clone();
+        let is_pool = name.ends_with("_pool");
+        let acc = engine
+            .manifest
+            .split_eval_for(li)
+            .map(|r| r.accuracy)
+            .unwrap_or(f64::NAN);
+        csv.row(vec![
+            li.to_string(),
+            name.clone(),
+            is_pool.to_string(),
+            format!("{:.6}", norm[i]),
+            if acc.is_nan() { String::new() } else { format!("{acc:.4}") },
+        ]);
+        rows.push((li, name, is_pool, norm[i], acc));
+    }
+    println!("{}", fig2_report(&rows));
+
+    let candidates = curve.candidates(2);
+    println!("candidate split points (CS local maxima): {candidates:?}");
+    println!(
+        "paper's VGG16 candidates for reference: [5, 9, 11, 13, 15] \
+         (block2_pool, block3_pool, block4_conv2, block4_pool, block5_conv2)"
+    );
+    // Shape acceptance: candidates must include pool layers and/or
+    // late-block convs — the paper's qualitative claim.
+    let pools = candidates
+        .iter()
+        .filter(|&&c| names[c].ends_with("_pool"))
+        .count();
+    println!(
+        "shape check: {pools}/{} candidates are pooling layers",
+        candidates.len()
+    );
+
+    // Correlation between CS and split accuracy (the curve's whole point).
+    let pairs: Vec<(f64, f64)> = rows
+        .iter()
+        .filter(|r| !r.4.is_nan())
+        .map(|r| (r.3, r.4))
+        .collect();
+    if pairs.len() > 2 {
+        let n = pairs.len() as f64;
+        let mx = pairs.iter().map(|p| p.0).sum::<f64>() / n;
+        let my = pairs.iter().map(|p| p.1).sum::<f64>() / n;
+        let cov: f64 =
+            pairs.iter().map(|p| (p.0 - mx) * (p.1 - my)).sum::<f64>();
+        let vx: f64 = pairs.iter().map(|p| (p.0 - mx).powi(2)).sum::<f64>();
+        let vy: f64 = pairs.iter().map(|p| (p.1 - my).powi(2)).sum::<f64>();
+        let r = cov / (vx.sqrt() * vy.sqrt() + 1e-12);
+        println!("pearson(CS, split accuracy) = {r:.3}");
+    }
+
+    csv.write(Path::new("reports/fig2.csv")).unwrap();
+    std::fs::create_dir_all("reports").unwrap();
+    std::fs::write("reports/fig2.txt", fig2_report(&rows)).unwrap();
+    println!("\nwrote reports/fig2.csv, reports/fig2.txt");
+    println!(
+        "CS computation: {} layers x {n_images} images in {cs_seconds:.1}s \
+         (pure Rust+PJRT)",
+        curve.layers.len()
+    );
+
+    // Timing: one gradcam artifact execution (the design-phase hot loop).
+    if let Some(&li) = curve.layers.first() {
+        let exec = engine
+            .executable(&format!("gradcam_L{li}_b16"))
+            .expect("gradcam exec");
+        let x = test.batch(0, 16).unwrap();
+        let y: Vec<i32> = test.batch_labels(0, 16).to_vec();
+        let b = Bencher::quick();
+        b.bench(&format!("gradcam_L{li}_b16 execute"), || {
+            use sei::runtime::RtInput;
+            std::hint::black_box(
+                exec.run(&[RtInput::F32(&x), RtInput::I32(&y)]).unwrap(),
+            );
+        });
+    }
+}

@@ -1,0 +1,128 @@
+//! Bench: regenerate the paper's Fig. 3 — SC frame latency vs packet loss
+//! rate for splits at layer 11 (block4_conv2) and layer 15 (block5_conv2),
+//! TCP over the 1 Gb/s full-duplex channel, against the ICE-Lab 0.05 s
+//! (20 FPS) constraint.
+//!
+//! Volumetrics and compute are paper-scale (VGG16 @ 224x224): the L11
+//! latent is 256x28x28 f32 ≈ 803 kB/frame, the L15 latent 256x14x14
+//! ≈ 201 kB/frame. Expected shape (paper Sec. V-B): L15 satisfies the
+//! constraint at every loss rate; L11 violates it beyond a few percent.
+//! Writes reports/fig3.txt and reports/fig3.csv.
+
+use std::path::Path;
+
+use sei::coordinator::{simulate_latency, ModelScale, ScenarioConfig,
+                       ScenarioKind};
+use sei::model::DeviceProfile;
+use sei::netsim::transfer::{NetworkConfig, Protocol};
+use sei::report::csv::Csv;
+use sei::report::fig3_report;
+use sei::runtime::Engine;
+
+const CONSTRAINT_S: f64 = 0.05; // 20 FPS conveyor belt
+const FRAMES: usize = 400;
+const SEEDS: u64 = 5;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("fig3: artifacts not built — run `make artifacts`");
+        return;
+    }
+    let engine = Engine::load(dir).expect("engine");
+    let loss_rates: Vec<f64> =
+        vec![0.0, 0.01, 0.02, 0.03, 0.04, 0.05, 0.06, 0.08, 0.10];
+    let splits = [11usize, 15];
+
+    println!("=== Fig. 3: split-point selection under packet loss ===");
+    println!(
+        "channel: 1 Gb/s full-duplex TCP, 100 µs; constraint {CONSTRAINT_S} s \
+         (20 FPS); {FRAMES} frames x {SEEDS} seeds per point\n"
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut series = Vec::new();
+    let mut csv = Csv::new(&["loss", "split", "mean_latency_s",
+                             "p95_latency_s", "violation_rate"]);
+    for &split in &splits {
+        let mut means = Vec::new();
+        for &loss in &loss_rates {
+            let mut all: Vec<u64> = Vec::new();
+            for seed in 0..SEEDS {
+                let cfg = ScenarioConfig {
+                    kind: ScenarioKind::Sc { split },
+                    net: NetworkConfig::gigabit(Protocol::Tcp, loss,
+                                                1000 + seed),
+                    edge: DeviceProfile::edge_gpu(),
+                    server: DeviceProfile::server_gpu(),
+                    scale: ModelScale::Vgg16Full,
+                    frame_period_ns: 50_000_000,
+                };
+                all.extend(
+                    simulate_latency(&engine, &cfg, FRAMES).expect("sim"),
+                );
+            }
+            let mean =
+                all.iter().map(|v| *v as f64).sum::<f64>() / all.len() as f64
+                    / 1e9;
+            let mut sorted = all.clone();
+            sorted.sort_unstable();
+            let p95 =
+                sorted[(sorted.len() as f64 * 0.95) as usize] as f64 / 1e9;
+            let viol = all
+                .iter()
+                .filter(|&&v| v as f64 / 1e9 > CONSTRAINT_S)
+                .count() as f64
+                / all.len() as f64;
+            csv.row(vec![
+                format!("{loss}"),
+                format!("L{split}"),
+                format!("{mean:.6}"),
+                format!("{p95:.6}"),
+                format!("{viol:.4}"),
+            ]);
+            means.push(mean);
+        }
+        series.push((format!("SC@L{split}"), means));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let report = fig3_report(&loss_rates, &series, CONSTRAINT_S);
+    println!("{report}");
+
+    // Shape acceptance (who wins, where the crossover falls).
+    let l11 = &series[0].1;
+    let l15 = &series[1].1;
+    let ok15 = l15.iter().all(|&v| v <= CONSTRAINT_S);
+    let crossover = loss_rates
+        .iter()
+        .zip(l11)
+        .find(|(_, &v)| v > CONSTRAINT_S)
+        .map(|(l, _)| *l);
+    println!("shape checks:");
+    println!(
+        "  L15 within constraint at every loss rate: {}",
+        if ok15 { "YES (paper: yes)" } else { "NO (paper: yes)" }
+    );
+    match crossover {
+        Some(l) => println!(
+            "  L11 first violates at loss = {:.0}% (paper: >3%)",
+            l * 100.0
+        ),
+        None => println!("  L11 never violates (paper: violates >3%)"),
+    }
+    println!(
+        "  L11 latency > L15 latency at max loss: {}",
+        l11.last().unwrap() > l15.last().unwrap()
+    );
+
+    csv.write(Path::new("reports/fig3.csv")).unwrap();
+    std::fs::write("reports/fig3.txt", &report).unwrap();
+    let points = loss_rates.len() * splits.len();
+    println!(
+        "\nwrote reports/fig3.csv, reports/fig3.txt — {points} points x \
+         {FRAMES} frames x {SEEDS} seeds in {wall:.1}s \
+         ({:.0} simulated frames/s)",
+        (points * FRAMES * SEEDS as usize) as f64 / wall
+    );
+}

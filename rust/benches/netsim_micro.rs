@@ -1,0 +1,95 @@
+//! Microbenchmarks of the discrete-event simulator — the L3 hot path
+//! (EXPERIMENTS.md §Perf tracks these before/after optimization).
+
+use sei::netsim::event::EventQueue;
+use sei::netsim::link::{Link, LinkConfig};
+use sei::netsim::tcp::{self, TcpConfig, TcpState};
+use sei::netsim::transfer::{Channel, NetworkConfig, Protocol};
+use sei::netsim::udp::{self, UdpConfig};
+use sei::netsim::Dir;
+use sei::util::bench::{black_box, Bencher};
+use sei::util::rng::Rng;
+
+fn links(loss: f64, seed: u64) -> (Link, Link) {
+    let cfg = LinkConfig::basic(100_000, 1e9, loss);
+    let mut rng = Rng::new(seed);
+    (Link::new(cfg.clone(), rng.fork()), Link::new(cfg, rng.fork()))
+}
+
+fn main() {
+    println!("=== netsim microbenchmarks ===\n");
+    let b = Bencher::default();
+
+    // Event queue throughput.
+    for n in [1_000usize, 100_000] {
+        let st = b.bench(&format!("event_queue_schedule_pop_{n}"), || {
+            let mut q = EventQueue::new();
+            let mut rng = Rng::new(7);
+            for _ in 0..n {
+                q.schedule(rng.below(1_000_000), 0u32);
+            }
+            while q.pop().is_some() {}
+        });
+        println!(
+            "      -> {:.1} M events/s",
+            n as f64 / (st.mean_ns / 1e9) / 1e6
+        );
+    }
+
+    // PRNG.
+    b.bench("rng_next_u64_x1000", || {
+        let mut r = Rng::new(1);
+        let mut acc = 0u64;
+        for _ in 0..1000 {
+            acc ^= r.next_u64();
+        }
+        black_box(acc);
+    });
+
+    // Raw link sends.
+    b.bench("link_send_x1000", || {
+        let (mut l, _) = links(0.02, 3);
+        for i in 0..1000u64 {
+            black_box(l.send(i * 10_000, 1500));
+        }
+    });
+
+    // TCP message transfers at several sizes and loss rates.
+    for (len, loss) in [(2_048u64, 0.0), (803_000, 0.0), (803_000, 0.03),
+                        (803_000, 0.10)] {
+        let name = format!("tcp_send_{}kB_loss{:.0}%", len / 1000,
+                           loss * 100.0);
+        let mut seed = 0u64;
+        let st = b.bench(&name, || {
+            seed += 1;
+            let (mut d, mut a) = links(loss, seed);
+            let cfg = TcpConfig::default();
+            let mut s = TcpState::new(&cfg);
+            black_box(
+                tcp::send_message(&cfg, &mut s, &mut d, &mut a, len, 0)
+                    .unwrap(),
+            );
+        });
+        let mbps = len as f64 / (st.mean_ns / 1e9) / 1e6;
+        println!("      -> {mbps:.0} MB/s of simulated payload");
+    }
+
+    // UDP burst.
+    let mut seed = 0u64;
+    b.bench("udp_send_803kB_loss10%", || {
+        seed += 1;
+        let (mut l, _) = links(0.10, seed);
+        black_box(udp::send_message(&UdpConfig::default(), &mut l,
+                                    803_000, 0));
+    });
+
+    // Whole-channel round trip (the scenario engine's inner loop).
+    let mut ch = Channel::new(NetworkConfig::gigabit(Protocol::Tcp, 0.02, 5));
+    let mut frame = 0u64;
+    b.bench("channel_frame_roundtrip_2kB", || {
+        frame += 1;
+        ch.advance_to(frame * 50_000_000);
+        black_box(ch.send(Dir::Up, 2048).unwrap());
+        black_box(ch.send(Dir::Down, 40).unwrap());
+    });
+}

@@ -1,0 +1,56 @@
+//! Bench: regenerate the paper's Table I and Table II (VGG16 statistics)
+//! and verify the aggregate numbers match the paper exactly.
+//!
+//! Paper reference values (Sec. V-D):
+//!   Total params               138.357.544
+//!   Total mult-adds (G)        247.74        (batch 16)
+//!   Forward/backward pass (MB) 1735.26
+//!   Estimated total size (MB)  2298.32
+
+use sei::model::{self, model_stats};
+use sei::util::bench::Bencher;
+
+fn main() {
+    println!("=== Table I / Table II regeneration ===\n");
+    let net = model::vgg16_full();
+    let table1 = model::render_table1(&net, 16);
+    println!("{table1}");
+    let table2 = model::render_table2(&net, 16);
+    println!("{table2}");
+
+    // Paper-vs-measured assertions (hard: these are pure arithmetic).
+    let s = model_stats(&net, 16);
+    let checks = [
+        ("total params", s.total_params as f64, 138_357_544.0, 0.0),
+        ("mult-adds (G)", s.mult_adds_g, 247.74, 0.005),
+        ("fwd/bwd (MB)", s.fwd_bwd_mb, 1735.26, 0.01),
+        ("total size (MB)", s.total_mb, 2298.32, 0.01),
+    ];
+    println!("paper-vs-measured:");
+    for (name, got, want, tol) in checks {
+        let ok = (got - want).abs() <= tol;
+        println!(
+            "  {name:<16} paper {want:>14.2}  measured {got:>14.2}  {}",
+            if ok { "MATCH" } else { "MISMATCH" }
+        );
+        assert!(ok, "{name}");
+    }
+
+    // Also print the slim (trained) model card for reference.
+    let slim = model::vgg16_slim(32, 0.125, 64, 10);
+    println!("\n(slim trained model: {} params, {:.3} G mult-adds @ b16)",
+             slim.total_params(),
+             model_stats(&slim, 16).mult_adds_g);
+
+    println!("\n--- generation speed ---");
+    let b = Bencher::default();
+    b.bench("table1_render", || {
+        std::hint::black_box(model::render_table1(&net, 16));
+    });
+    b.bench("table2_render", || {
+        std::hint::black_box(model::render_table2(&net, 16));
+    });
+    b.bench("model_stats", || {
+        std::hint::black_box(model_stats(&net, 16));
+    });
+}

@@ -1,0 +1,257 @@
+//! Server-side dynamic batcher.
+//!
+//! The paper's tail runs on a server shared by "one or more DNNs" /
+//! multiple sensing devices; a production deployment amortizes inference by
+//! batching concurrent requests (the b16 artifacts exist exactly for this).
+//! This module implements the classic size-or-deadline policy: a batch is
+//! released when it reaches `max_batch` requests or when the oldest queued
+//! request has waited `max_wait_ns`, whichever comes first.
+//!
+//! The batcher is a pure (simulated-time) policy object so it can be driven
+//! both by the discrete-event scenario engine and by the real-socket HIL
+//! worker; `ablation_batching` measures the throughput/latency trade-off.
+
+use crate::netsim::event::SimTime;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait_ns: SimTime,
+}
+
+impl BatchPolicy {
+    pub fn immediate() -> Self {
+        BatchPolicy { max_batch: 1, max_wait_ns: 0 }
+    }
+
+    pub fn new(max_batch: usize, max_wait_ns: SimTime) -> Self {
+        assert!(max_batch >= 1);
+        BatchPolicy { max_batch, max_wait_ns }
+    }
+}
+
+/// A queued inference request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub arrival_ns: SimTime,
+}
+
+/// A released batch.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+    pub released_ns: SimTime,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Mean queueing delay the batched requests paid.
+    pub fn mean_wait_ns(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        self.requests
+            .iter()
+            .map(|r| (self.released_ns - r.arrival_ns) as f64)
+            .sum::<f64>()
+            / self.requests.len() as f64
+    }
+}
+
+/// Size-or-deadline dynamic batcher over simulated time.
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: Vec<Request>,
+    next_id: u64,
+    pub batches_released: u64,
+    pub requests_seen: u64,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher {
+            policy,
+            queue: Vec::new(),
+            next_id: 0,
+            batches_released: 0,
+            requests_seen: 0,
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Offer a request at simulated time `now`; returns a batch if the
+    /// size trigger fires.
+    pub fn offer(&mut self, now: SimTime) -> Option<Batch> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.requests_seen += 1;
+        self.queue.push(Request { id, arrival_ns: now });
+        if self.queue.len() >= self.policy.max_batch {
+            return Some(self.release(now));
+        }
+        None
+    }
+
+    /// The absolute time at which the deadline trigger fires for the
+    /// currently queued requests (None when the queue is empty).
+    pub fn deadline(&self) -> Option<SimTime> {
+        self.queue
+            .first()
+            .map(|r| r.arrival_ns + self.policy.max_wait_ns)
+    }
+
+    /// Called when simulated time passes the deadline: release whatever is
+    /// queued.
+    pub fn poll(&mut self, now: SimTime) -> Option<Batch> {
+        match self.deadline() {
+            Some(d) if now >= d && !self.queue.is_empty() => {
+                Some(self.release(now))
+            }
+            _ => None,
+        }
+    }
+
+    /// Force-release the current queue (shutdown / drain).
+    pub fn flush(&mut self, now: SimTime) -> Option<Batch> {
+        if self.queue.is_empty() {
+            None
+        } else {
+            Some(self.release(now))
+        }
+    }
+
+    fn release(&mut self, now: SimTime) -> Batch {
+        self.batches_released += 1;
+        Batch {
+            requests: std::mem::take(&mut self.queue),
+            released_ns: now,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_trigger_releases_full_batch() {
+        let mut b = Batcher::new(BatchPolicy::new(4, 1_000_000));
+        assert!(b.offer(0).is_none());
+        assert!(b.offer(10).is_none());
+        assert!(b.offer(20).is_none());
+        let batch = b.offer(30).expect("size trigger");
+        assert_eq!(batch.len(), 4);
+        assert_eq!(b.pending(), 0);
+        assert_eq!(batch.released_ns, 30);
+    }
+
+    #[test]
+    fn deadline_trigger_releases_partial_batch() {
+        let mut b = Batcher::new(BatchPolicy::new(16, 1_000_000));
+        b.offer(0);
+        b.offer(500);
+        assert!(b.poll(999_999).is_none());
+        let batch = b.poll(1_000_000).expect("deadline trigger");
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn deadline_tracks_oldest_request() {
+        let mut b = Batcher::new(BatchPolicy::new(16, 100));
+        assert!(b.deadline().is_none());
+        b.offer(50);
+        b.offer(120);
+        assert_eq!(b.deadline(), Some(150));
+    }
+
+    #[test]
+    fn immediate_policy_is_batchless() {
+        let mut b = Batcher::new(BatchPolicy::immediate());
+        let batch = b.offer(7).expect("immediate");
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn mean_wait_accounts_queueing() {
+        let mut b = Batcher::new(BatchPolicy::new(2, 1_000));
+        b.offer(0);
+        let batch = b.offer(100).unwrap();
+        assert_eq!(batch.mean_wait_ns(), 50.0);
+    }
+
+    #[test]
+    fn flush_drains() {
+        let mut b = Batcher::new(BatchPolicy::new(8, 1_000));
+        b.offer(1);
+        b.offer(2);
+        let batch = b.flush(10).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(b.flush(11).is_none());
+    }
+
+    #[test]
+    fn counters() {
+        let mut b = Batcher::new(BatchPolicy::new(2, 1_000));
+        for t in 0..6 {
+            b.offer(t);
+        }
+        assert_eq!(b.requests_seen, 6);
+        assert_eq!(b.batches_released, 3);
+    }
+
+    /// Property: no released request ever waits longer than max_wait (when
+    /// poll is called at the deadline) and no batch exceeds max_batch.
+    #[test]
+    fn prop_batcher_invariants() {
+        use crate::util::propcheck::{check, Config};
+        check("batcher_invariants", Config::default(), |c| {
+            let max_batch = c.rng.range_u64(1, 16) as usize;
+            let max_wait = c.rng.range_u64(1, 10_000);
+            let mut b = Batcher::new(BatchPolicy::new(max_batch, max_wait));
+            let mut now = 0u64;
+            let mut released = 0u64;
+            for _ in 0..c.sized_range(1, 300) {
+                now += c.rng.below(max_wait);
+                // fire deadline first, as a real event loop would
+                if let Some(d) = b.deadline() {
+                    if d <= now {
+                        let batch = b.poll(d).ok_or("deadline missed")?;
+                        released += batch.len() as u64;
+                        for r in &batch.requests {
+                            if d - r.arrival_ns > max_wait {
+                                return Err("overwaited".into());
+                            }
+                        }
+                    }
+                }
+                if let Some(batch) = b.offer(now) {
+                    released += batch.len() as u64;
+                    if batch.len() > max_batch {
+                        return Err("oversized batch".into());
+                    }
+                }
+            }
+            if let Some(batch) = b.flush(now) {
+                released += batch.len() as u64;
+            }
+            if released != b.requests_seen {
+                return Err(format!(
+                    "lost requests: {released} of {}",
+                    b.requests_seen
+                ));
+            }
+            Ok(())
+        });
+    }
+}

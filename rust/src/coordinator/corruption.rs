@@ -1,0 +1,109 @@
+//! UDP-loss corruption model: map the byte ranges the netsim reports as
+//! lost onto the transmitted tensor (paper Fig. 4-left: accuracy vs loss
+//! rate under UDP, "no error checking and recovery services are provided").
+//!
+//! Lost bytes are zeroed — the receiver materialises the frame buffer
+//! zero-initialised and copies in the datagrams that did arrive.
+
+use crate::netsim::transfer::TransferResult;
+use crate::tensor::Tensor;
+
+/// Zero the byte ranges of row `row` of `batch` (shape [B, ...]) that were
+/// lost transferring that row's payload.
+pub fn corrupt_row(batch: &mut Tensor, row: usize, lost: &[(u64, u32)]) {
+    let rows = batch.shape()[0];
+    assert!(row < rows, "row {row} out of {rows}");
+    let row_bytes = batch.byte_len() / rows as u64;
+    for &(off, len) in lost {
+        let clipped = (off + len as u64).min(row_bytes);
+        if off >= row_bytes || clipped <= off {
+            continue;
+        }
+        batch.zero_byte_range(
+            row as u64 * row_bytes + off,
+            (clipped - off) as u32,
+        );
+    }
+}
+
+/// Corrupt a whole single-payload tensor (batch of 1 / latent transfer).
+pub fn corrupt(t: &mut Tensor, result: &TransferResult) {
+    for &(off, len) in result.lost_ranges() {
+        t.zero_byte_range(off, len);
+    }
+}
+
+/// When the simulated wire payload is larger than the actual tensor (the
+/// paper-scale VGG16@224 volumetrics vs our slim tensors), map lost ranges
+/// proportionally onto the tensor so the *fraction* of corrupted bytes is
+/// preserved.
+pub fn corrupt_scaled(t: &mut Tensor, lost: &[(u64, u32)], wire_len: u64) {
+    let t_len = t.byte_len();
+    if wire_len == 0 || t_len == 0 {
+        return;
+    }
+    let scale = t_len as f64 / wire_len as f64;
+    for &(off, len) in lost {
+        let s = (off as f64 * scale).floor() as u64;
+        let e = ((off + len as u64) as f64 * scale).ceil() as u64;
+        let e = e.min(t_len);
+        if e > s {
+            t.zero_byte_range(s, (e - s) as u32);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ones(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::new(shape, vec![1.0; n]).unwrap()
+    }
+
+    #[test]
+    fn corrupt_row_only_touches_that_row() {
+        let mut b = ones(vec![2, 4]); // rows of 16 bytes
+        corrupt_row(&mut b, 1, &[(0, 8)]);
+        assert_eq!(b.data(), &[1., 1., 1., 1., 0., 0., 1., 1.]);
+    }
+
+    #[test]
+    fn corrupt_row_clips_to_row() {
+        let mut b = ones(vec![2, 2]); // rows of 8 bytes
+        corrupt_row(&mut b, 0, &[(4, 1000)]);
+        assert_eq!(b.data(), &[1., 0., 1., 1.]);
+    }
+
+    #[test]
+    fn corrupt_row_ignores_ranges_past_row() {
+        let mut b = ones(vec![2, 2]);
+        corrupt_row(&mut b, 0, &[(8, 4)]);
+        assert_eq!(b.data(), &[1., 1., 1., 1.]);
+    }
+
+    #[test]
+    fn scaled_preserves_fraction() {
+        let mut t = ones(vec![1000]); // 4000 bytes
+        // wire is 40000 bytes; lose 10% of it in one range
+        corrupt_scaled(&mut t, &[(0, 4000)], 40_000);
+        let zeros = t.data().iter().filter(|v| **v == 0.0).count();
+        assert!((zeros as f64 / 1000.0 - 0.1).abs() < 0.01, "{zeros}");
+    }
+
+    #[test]
+    fn scaled_handles_tail_range() {
+        let mut t = ones(vec![10]);
+        corrupt_scaled(&mut t, &[(39_000, 1000)], 40_000);
+        assert_eq!(t.data()[9], 0.0);
+        assert_eq!(t.data()[0], 1.0);
+    }
+
+    #[test]
+    fn scaled_zero_wire_is_noop() {
+        let mut t = ones(vec![4]);
+        corrupt_scaled(&mut t, &[(0, 4)], 0);
+        assert_eq!(t.data(), &[1.0; 4]);
+    }
+}

@@ -1,0 +1,23 @@
+//! The Split-Et-Impera coordinator (paper Fig. 1): saliency-driven split
+//! search, communication-aware scenario simulation, QoS suggestion, and the
+//! serving driver. This is the L3 system contribution; it owns the event
+//! loop and drives the PJRT runtime and the netsim.
+
+pub mod batcher;
+pub mod corruption;
+pub mod hil;
+pub mod qos;
+pub mod saliency;
+pub mod scenario;
+pub mod serve;
+pub mod suggest;
+pub mod workload;
+
+pub use qos::QosRequirements;
+pub use saliency::CsCurve;
+pub use scenario::{
+    run_scenario, simulate_latency, ModelScale, ScenarioConfig, ScenarioKind,
+    ScenarioReport,
+};
+pub use serve::{serve, ServeReport};
+pub use suggest::{best, rank_configurations, suggest, Suggestion};

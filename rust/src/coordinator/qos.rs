@@ -1,0 +1,93 @@
+//! Application QoS requirements (paper Sec. I/V: e.g. "maximum frame
+//! latency of 0.05 s (20 FPS), given by the velocity of the conveyor belt").
+
+use crate::netsim::event::{from_secs, SimTime};
+
+#[derive(Clone, Copy, Debug)]
+pub struct QosRequirements {
+    /// Maximum acceptable per-frame latency.
+    pub max_latency_ns: Option<SimTime>,
+    /// Minimum acceptable classification accuracy in [0, 1].
+    pub min_accuracy: Option<f64>,
+}
+
+impl QosRequirements {
+    pub fn none() -> Self {
+        QosRequirements { max_latency_ns: None, min_accuracy: None }
+    }
+
+    /// The ICE-Lab conveyor-belt requirement from the paper: 20 FPS.
+    pub fn ice_lab() -> Self {
+        QosRequirements {
+            max_latency_ns: Some(from_secs(0.05)),
+            min_accuracy: None,
+        }
+    }
+
+    pub fn with_fps(fps: f64) -> Self {
+        QosRequirements {
+            max_latency_ns: Some(from_secs(1.0 / fps)),
+            min_accuracy: None,
+        }
+    }
+
+    pub fn and_accuracy(mut self, min: f64) -> Self {
+        self.min_accuracy = Some(min);
+        self
+    }
+
+    /// Does a measured (latency, accuracy) pair satisfy the requirements?
+    pub fn satisfied_by(&self, latency_ns: SimTime, accuracy: f64) -> bool {
+        self.max_latency_ns.map_or(true, |m| latency_ns <= m)
+            && self.min_accuracy.map_or(true, |m| accuracy >= m)
+    }
+
+    pub fn describe(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(l) = self.max_latency_ns {
+            parts.push(format!(
+                "latency <= {:.1} ms ({:.0} FPS)",
+                l as f64 / 1e6,
+                1e9 / l as f64
+            ));
+        }
+        if let Some(a) = self.min_accuracy {
+            parts.push(format!("accuracy >= {:.1}%", a * 100.0));
+        }
+        if parts.is_empty() {
+            "no constraints".to_string()
+        } else {
+            parts.join(", ")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ice_lab_is_20fps() {
+        let q = QosRequirements::ice_lab();
+        assert_eq!(q.max_latency_ns, Some(50_000_000));
+    }
+
+    #[test]
+    fn satisfaction_logic() {
+        let q = QosRequirements::with_fps(20.0).and_accuracy(0.9);
+        assert!(q.satisfied_by(49_000_000, 0.95));
+        assert!(!q.satisfied_by(51_000_000, 0.95));
+        assert!(!q.satisfied_by(49_000_000, 0.85));
+    }
+
+    #[test]
+    fn no_constraints_always_satisfied() {
+        assert!(QosRequirements::none().satisfied_by(u64::MAX, 0.0));
+    }
+
+    #[test]
+    fn describe_mentions_both() {
+        let d = QosRequirements::with_fps(20.0).and_accuracy(0.9).describe();
+        assert!(d.contains("50.0 ms") && d.contains("90.0%"), "{d}");
+    }
+}

@@ -1,0 +1,142 @@
+//! Saliency-driven split-point search (paper Sec. III, step i of Fig. 1).
+//!
+//! The CS curve can come from two places:
+//!   * the manifest (computed by python at build time), or
+//!   * [`compute_cs_curve`] — recomputed **in Rust** by running the
+//!     per-layer Grad-CAM artifacts (`gradcam_L{i}_b16.hlo.txt`, which
+//!     embed the forward pass, the backward pass to the target layer and
+//!     the Pallas saliency reduction) over a test batch stream. This is the
+//!     framework's "no python on the request path" claim applied to the
+//!     design phase as well.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::runtime::{Engine, RtInput};
+
+/// A cumulative-saliency curve over the 18 feature layers.
+#[derive(Clone, Debug)]
+pub struct CsCurve {
+    /// Raw CS^i values (layer-normalized, see python/compile/saliency.py).
+    pub raw: Vec<f64>,
+    /// Which feature layer each entry corresponds to.
+    pub layers: Vec<usize>,
+}
+
+impl CsCurve {
+    pub fn from_manifest(engine: &Engine) -> CsCurve {
+        let cs = &engine.manifest.cs_curve;
+        CsCurve {
+            raw: cs.raw.clone(),
+            layers: (0..cs.raw.len()).collect(),
+        }
+    }
+
+    /// Min-max normalized values (the paper plots normalized saliency).
+    pub fn normalized(&self) -> Vec<f64> {
+        let lo = self.raw.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = self.raw.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        if hi <= lo {
+            return vec![0.0; self.raw.len()];
+        }
+        self.raw.iter().map(|v| (v - lo) / (hi - lo)).collect()
+    }
+
+    /// Candidate split points: local maxima of the curve, excluding
+    /// endpoints and the earliest layers (paper Sec. III: "the candidate
+    /// split points can be identified by the layers that give local CS
+    /// maxima").
+    pub fn candidates(&self, min_layer: usize) -> Vec<usize> {
+        let v = self.normalized();
+        let n = v.len();
+        let mut out = Vec::new();
+        for i in 1..n.saturating_sub(1) {
+            if self.layers[i] < min_layer {
+                continue;
+            }
+            if v[i] > v[i - 1] && v[i] >= v[i + 1] {
+                out.push(self.layers[i]);
+            }
+        }
+        out
+    }
+}
+
+/// Recompute the CS curve by executing the Grad-CAM artifacts on `n_images`
+/// of `dataset` (must be a multiple of the artifact batch, 16).
+pub fn compute_cs_curve(
+    engine: &Engine,
+    dataset: &Dataset,
+    n_images: usize,
+) -> Result<CsCurve> {
+    let layers = engine.manifest.gradcam_layers();
+    let mut raw = Vec::with_capacity(layers.len());
+    for &li in &layers {
+        let exec = engine.executable(&format!("gradcam_L{li}_b16"))?;
+        let batch = exec.spec.batch;
+        let n = n_images.min(dataset.len()) / batch * batch;
+        let mut acc = 0.0f64;
+        let mut count = 0usize;
+        let mut start = 0;
+        while start + batch <= n {
+            let x = dataset.batch(start, batch)?;
+            let y = dataset.batch_labels(start, batch);
+            let out = exec.run(&[RtInput::F32(&x), RtInput::I32(y)])?;
+            acc += out.data().iter().map(|v| *v as f64).sum::<f64>();
+            count += batch;
+            start += batch;
+        }
+        raw.push(acc / count.max(1) as f64);
+    }
+    Ok(CsCurve { raw, layers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(vals: &[f64]) -> CsCurve {
+        CsCurve { raw: vals.to_vec(), layers: (0..vals.len()).collect() }
+    }
+
+    #[test]
+    fn normalization() {
+        let c = curve(&[1.0, 3.0, 2.0]);
+        assert_eq!(c.normalized(), vec![0.0, 1.0, 0.5]);
+    }
+
+    #[test]
+    fn flat_curve_normalizes_to_zero() {
+        let c = curve(&[2.0, 2.0]);
+        assert_eq!(c.normalized(), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn candidates_are_local_maxima() {
+        let c = curve(&[0.0, 0.5, 0.2, 0.8, 0.3, 0.9, 0.1]);
+        assert_eq!(c.candidates(0), vec![1, 3, 5]);
+        assert_eq!(c.candidates(2), vec![3, 5]);
+    }
+
+    #[test]
+    fn endpoints_excluded() {
+        let c = curve(&[1.0, 0.5, 0.9]);
+        assert!(c.candidates(0).is_empty());
+    }
+
+    #[test]
+    fn plateau_takes_first() {
+        let c = curve(&[0.0, 0.7, 0.7, 0.1]);
+        assert_eq!(c.candidates(0), vec![1]);
+    }
+
+    #[test]
+    fn sparse_layer_indices_respected() {
+        let c = CsCurve {
+            raw: vec![0.1, 0.9, 0.2],
+            layers: vec![2, 6, 10],
+        };
+        assert_eq!(c.candidates(0), vec![6]);
+        assert_eq!(c.candidates(7), Vec::<usize>::new());
+    }
+}

@@ -1,0 +1,222 @@
+//! QoS suggestion engine (paper Fig. 1, step iii and Sec. IV "output"):
+//! rank the candidate configurations by the accuracy the network is
+//! expected to achieve, simulate each, and report which designs satisfy the
+//! application's constraints — "the engineer may then decide to simulate
+//! all or only a subset of them".
+
+use anyhow::Result;
+
+use super::qos::QosRequirements;
+use super::saliency::CsCurve;
+use super::scenario::{
+    run_scenario, ModelScale, ScenarioConfig, ScenarioKind, ScenarioReport,
+};
+use crate::data::Dataset;
+use crate::model::DeviceProfile;
+use crate::netsim::transfer::NetworkConfig;
+use crate::runtime::Engine;
+
+/// One ranked configuration, pre-simulation.
+#[derive(Clone, Debug)]
+pub struct RankedConfig {
+    pub kind: ScenarioKind,
+    /// Accuracy predictor: measured split-eval accuracy from the manifest
+    /// for SC; base/lite accuracy for RC/LC.
+    pub predicted_accuracy: f64,
+    /// Uplink payload per frame, bytes (0 for LC).
+    pub up_bytes: u64,
+    pub cs_value: Option<f64>,
+}
+
+/// Final suggestion row after simulation.
+#[derive(Clone, Debug)]
+pub struct Suggestion {
+    pub rank: RankedConfig,
+    pub report: ScenarioReport,
+    pub satisfies: bool,
+}
+
+/// Step 1+2: candidate split points from the CS curve, ranked by predicted
+/// accuracy, plus the LC and RC baselines.
+pub fn rank_configurations(engine: &Engine, min_layer: usize)
+    -> Vec<RankedConfig>
+{
+    let m = &engine.manifest;
+    let curve = CsCurve::from_manifest(engine);
+    let norm = curve.normalized();
+    let available = m.available_splits();
+    let mut out = Vec::new();
+
+    // SC candidates: CS local maxima that have exported artifacts.
+    for cand in curve.candidates(min_layer) {
+        if !available.contains(&cand) {
+            continue;
+        }
+        let acc = m
+            .split_eval_for(cand)
+            .map(|r| r.accuracy)
+            .unwrap_or(m.model.base_test_accuracy);
+        let up = m
+            .split_eval_for(cand)
+            .map(|r| r.latent_bytes_per_image)
+            .unwrap_or(0);
+        out.push(RankedConfig {
+            kind: ScenarioKind::Sc { split: cand },
+            predicted_accuracy: acc,
+            up_bytes: up,
+            cs_value: norm.get(cand).copied(),
+        });
+    }
+    // Baselines.
+    out.push(RankedConfig {
+        kind: ScenarioKind::Rc,
+        predicted_accuracy: m.model.base_test_accuracy,
+        up_bytes: (3 * m.model.img_size * m.model.img_size * 4) as u64,
+        cs_value: None,
+    });
+    out.push(RankedConfig {
+        kind: ScenarioKind::Lc,
+        predicted_accuracy: lite_accuracy(engine),
+        up_bytes: 0,
+        cs_value: None,
+    });
+    out.sort_by(|a, b| {
+        b.predicted_accuracy
+            .partial_cmp(&a.predicted_accuracy)
+            .unwrap()
+            .then(a.up_bytes.cmp(&b.up_bytes))
+    });
+    out
+}
+
+fn lite_accuracy(engine: &Engine) -> f64 {
+    engine.manifest.lite_accuracy.unwrap_or(0.0)
+}
+
+/// Step 3: simulate each ranked configuration and check QoS.
+/// `n_frames` frames of `dataset` per configuration.
+#[allow(clippy::too_many_arguments)]
+pub fn suggest(
+    engine: &Engine,
+    net: &NetworkConfig,
+    edge: &DeviceProfile,
+    server: &DeviceProfile,
+    qos: &QosRequirements,
+    dataset: &Dataset,
+    n_frames: usize,
+    min_layer: usize,
+) -> Result<Vec<Suggestion>> {
+    let ranked = rank_configurations(engine, min_layer);
+    let mut out = Vec::with_capacity(ranked.len());
+    for rank in ranked {
+        let cfg = ScenarioConfig {
+            kind: rank.kind,
+            net: net.clone(),
+            edge: edge.clone(),
+            server: server.clone(),
+            scale: ModelScale::Slim,
+            frame_period_ns: qos.max_latency_ns.unwrap_or(0),
+        };
+        let report = run_scenario(engine, &cfg, dataset, n_frames, qos)?;
+        let satisfies = qos.satisfied_by(
+            report.mean_latency_ns as u64,
+            report.accuracy,
+        );
+        out.push(Suggestion { rank, report, satisfies });
+    }
+    Ok(out)
+}
+
+/// The best suggestion: satisfying configs first (highest accuracy, then
+/// lowest latency), otherwise the closest to satisfying.
+pub fn best(suggestions: &[Suggestion]) -> Option<&Suggestion> {
+    suggestions
+        .iter()
+        .filter(|s| s.satisfies)
+        .max_by(|a, b| {
+            a.report
+                .accuracy
+                .partial_cmp(&b.report.accuracy)
+                .unwrap()
+                .then(
+                    b.report
+                        .mean_latency_ns
+                        .partial_cmp(&a.report.mean_latency_ns)
+                        .unwrap(),
+                )
+        })
+        .or_else(|| {
+            suggestions.iter().max_by(|a, b| {
+                a.report.accuracy.partial_cmp(&b.report.accuracy).unwrap()
+            })
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::transfer::Protocol;
+
+    fn fake_report(kind: ScenarioKind, acc: f64, lat: f64) -> ScenarioReport {
+        ScenarioReport {
+            kind,
+            protocol: Protocol::Tcp,
+            loss_rate: 0.0,
+            frames: 1,
+            accuracy: acc,
+            mean_latency_ns: lat,
+            p95_latency_ns: lat as u64,
+            max_latency_ns: lat as u64,
+            mean_wire_bytes: 0.0,
+            total_retransmits: 0,
+            deadline_hit_rate: None,
+            qos_satisfied: None,
+            records: vec![],
+        }
+    }
+
+    fn fake_suggestion(acc: f64, lat: f64, ok: bool) -> Suggestion {
+        Suggestion {
+            rank: RankedConfig {
+                kind: ScenarioKind::Rc,
+                predicted_accuracy: acc,
+                up_bytes: 0,
+                cs_value: None,
+            },
+            report: fake_report(ScenarioKind::Rc, acc, lat),
+            satisfies: ok,
+        }
+    }
+
+    #[test]
+    fn best_prefers_satisfying() {
+        let s = vec![
+            fake_suggestion(0.99, 100.0, false),
+            fake_suggestion(0.90, 10.0, true),
+        ];
+        assert!((best(&s).unwrap().report.accuracy - 0.90).abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_among_satisfying_takes_highest_accuracy() {
+        let s = vec![
+            fake_suggestion(0.90, 10.0, true),
+            fake_suggestion(0.95, 20.0, true),
+        ];
+        assert!((best(&s).unwrap().report.accuracy - 0.95).abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_falls_back_to_highest_accuracy() {
+        let s = vec![
+            fake_suggestion(0.80, 10.0, false),
+            fake_suggestion(0.85, 20.0, false),
+        ];
+        assert!((best(&s).unwrap().report.accuracy - 0.85).abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_of_empty_is_none() {
+        assert!(best(&[]).is_none());
+    }
+}

@@ -1,0 +1,130 @@
+//! Workload generators: frame arrival processes for the scenario engine.
+//!
+//! The paper's ICE-Lab conveyor produces strictly periodic frames (belt
+//! speed -> 20 FPS); real sensing deployments also see Poisson arrivals
+//! (event cameras, motion triggers) and on/off bursts. The arrival process
+//! changes the queueing behaviour of the shared channel and the batcher's
+//! efficiency, so it is a first-class experiment axis.
+
+use crate::netsim::event::SimTime;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Strictly periodic (conveyor belt) at the given FPS.
+    Periodic { fps: f64 },
+    /// Poisson with the given mean rate.
+    Poisson { fps: f64 },
+    /// On/off bursts: `burst` back-to-back frames at `fps`, then idle for
+    /// `idle_s` seconds.
+    Bursty { fps: f64, burst: usize, idle_s: f64 },
+}
+
+impl ArrivalProcess {
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Periodic { fps } | ArrivalProcess::Poisson { fps } => {
+                fps
+            }
+            ArrivalProcess::Bursty { fps, burst, idle_s } => {
+                let burst_span = burst as f64 / fps;
+                burst as f64 / (burst_span + idle_s)
+            }
+        }
+    }
+}
+
+/// Iterator of frame arrival timestamps.
+pub struct Workload {
+    process: ArrivalProcess,
+    rng: Rng,
+    next: SimTime,
+    emitted: usize,
+}
+
+impl Workload {
+    pub fn new(process: ArrivalProcess, seed: u64) -> Workload {
+        Workload { process, rng: Rng::new(seed), next: 0, emitted: 0 }
+    }
+
+    /// Timestamp of the next frame arrival.
+    pub fn next_arrival(&mut self) -> SimTime {
+        let t = self.next;
+        self.emitted += 1;
+        let dt_s = match self.process {
+            ArrivalProcess::Periodic { fps } => 1.0 / fps,
+            ArrivalProcess::Poisson { fps } => self.rng.exp(1.0 / fps),
+            ArrivalProcess::Bursty { fps, burst, idle_s } => {
+                if self.emitted % burst == 0 {
+                    idle_s
+                } else {
+                    1.0 / fps
+                }
+            }
+        };
+        self.next = t + (dt_s * 1e9).round() as SimTime;
+        t
+    }
+
+    /// Materialize the first `n` arrivals.
+    pub fn take_arrivals(&mut self, n: usize) -> Vec<SimTime> {
+        (0..n).map(|_| self.next_arrival()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn periodic_is_exact() {
+        let mut w = Workload::new(ArrivalProcess::Periodic { fps: 20.0 }, 0);
+        let a = w.take_arrivals(4);
+        assert_eq!(a, vec![0, 50_000_000, 100_000_000, 150_000_000]);
+    }
+
+    #[test]
+    fn poisson_mean_rate_converges() {
+        let mut w = Workload::new(ArrivalProcess::Poisson { fps: 100.0 }, 7);
+        let a = w.take_arrivals(20_000);
+        let span_s = *a.last().unwrap() as f64 / 1e9;
+        let rate = a.len() as f64 / span_s;
+        assert!((rate - 100.0).abs() < 3.0, "{rate}");
+    }
+
+    #[test]
+    fn poisson_is_irregular() {
+        let mut w = Workload::new(ArrivalProcess::Poisson { fps: 20.0 }, 1);
+        let a = w.take_arrivals(10);
+        let gaps: Vec<u64> = a.windows(2).map(|p| p[1] - p[0]).collect();
+        assert!(gaps.iter().any(|&g| g != gaps[0]));
+    }
+
+    #[test]
+    fn bursty_has_gaps() {
+        let mut w = Workload::new(
+            ArrivalProcess::Bursty { fps: 100.0, burst: 3, idle_s: 1.0 },
+            0,
+        );
+        let a = w.take_arrivals(7);
+        // frames 0,1,2 back-to-back, then a 1 s gap
+        assert_eq!(a[1] - a[0], 10_000_000);
+        assert_eq!(a[3] - a[2], 1_000_000_000);
+    }
+
+    #[test]
+    fn mean_rates() {
+        assert_eq!(ArrivalProcess::Periodic { fps: 20.0 }.mean_rate(), 20.0);
+        let b = ArrivalProcess::Bursty { fps: 100.0, burst: 10, idle_s: 0.9 };
+        assert!((b.mean_rate() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Workload::new(ArrivalProcess::Poisson { fps: 20.0 }, 5)
+            .take_arrivals(10);
+        let b = Workload::new(ArrivalProcess::Poisson { fps: 20.0 }, 5)
+            .take_arrivals(10);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,173 @@
+//! Dataset loader for the raw-binary tensors written by
+//! `python/compile/dataset.py` (little-endian f32 images, i32 labels; shapes
+//! come from the manifest).
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+/// A labelled image set (test set, ICE-Lab stream, ...).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub images: Tensor,
+    pub labels: Vec<i32>,
+}
+
+pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
+    let bytes = fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: length {} not a multiple of 4", path.display(), bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+pub fn read_i32_file(path: &Path) -> Result<Vec<i32>> {
+    let bytes = fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: length {} not a multiple of 4", path.display(), bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+pub fn write_f32_file(path: &Path, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    fs::write(path, bytes)
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+impl Dataset {
+    /// Load a split recorded in the manifest's `dataset` section.
+    pub fn load(
+        artifacts_dir: &Path,
+        name: &str,
+        images_rel: &str,
+        labels_rel: &str,
+        count: usize,
+        image_shape: &[usize],
+    ) -> Result<Dataset> {
+        let data = read_f32_file(&artifacts_dir.join(images_rel))?;
+        let mut shape = vec![count];
+        shape.extend_from_slice(image_shape);
+        let images = Tensor::new(shape, data)
+            .with_context(|| format!("dataset '{name}' image tensor"))?;
+        let labels = read_i32_file(&artifacts_dir.join(labels_rel))?;
+        if labels.len() != count {
+            bail!("dataset '{name}': {} labels for {count} images",
+                  labels.len());
+        }
+        for &l in &labels {
+            if l < 0 {
+                bail!("dataset '{name}': negative label {l}");
+            }
+        }
+        Ok(Dataset { name: name.to_string(), images, labels })
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Image batch [count, C, H, W] starting at `start`.
+    pub fn batch(&self, start: usize, count: usize) -> Result<Tensor> {
+        self.images.slice_rows(start, count)
+    }
+
+    pub fn batch_labels(&self, start: usize, count: usize) -> &[i32] {
+        &self.labels[start..start + count]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "sei_data_test_{}",
+            std::process::id()
+        ));
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let d = tmpdir();
+        let p = d.join("x.bin");
+        let data = vec![1.5f32, -2.0, 0.0, 3.25];
+        write_f32_file(&p, &data).unwrap();
+        assert_eq!(read_f32_file(&p).unwrap(), data);
+    }
+
+    #[test]
+    fn i32_parsing() {
+        let d = tmpdir();
+        let p = d.join("y.bin");
+        fs::write(&p, 7i32.to_le_bytes()).unwrap();
+        assert_eq!(read_i32_file(&p).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn rejects_ragged_file() {
+        let d = tmpdir();
+        let p = d.join("bad.bin");
+        fs::write(&p, [0u8; 5]).unwrap();
+        assert!(read_f32_file(&p).is_err());
+    }
+
+    #[test]
+    fn dataset_load_and_batch() {
+        let d = tmpdir();
+        let n = 4usize;
+        let img: Vec<f32> = (0..n * 3 * 2 * 2).map(|v| v as f32).collect();
+        write_f32_file(&d.join("img.bin"), &img).unwrap();
+        let mut lb = Vec::new();
+        for i in 0..n as i32 {
+            lb.extend_from_slice(&i.to_le_bytes());
+        }
+        fs::write(d.join("lab.bin"), lb).unwrap();
+        let ds = Dataset::load(&d, "t", "img.bin", "lab.bin", n, &[3, 2, 2])
+            .unwrap();
+        assert_eq!(ds.len(), 4);
+        let b = ds.batch(1, 2).unwrap();
+        assert_eq!(b.shape(), &[2, 3, 2, 2]);
+        assert_eq!(ds.batch_labels(1, 2), &[1, 2]);
+    }
+
+    #[test]
+    fn dataset_rejects_label_mismatch() {
+        let d = tmpdir();
+        write_f32_file(&d.join("i2.bin"), &vec![0.0; 12]).unwrap();
+        let mut two = Vec::new();
+        two.extend_from_slice(&0i32.to_le_bytes());
+        two.extend_from_slice(&1i32.to_le_bytes());
+        fs::write(d.join("l2.bin"), two).unwrap();
+        // 12 floats = one [3,2,2] image, but two labels -> mismatch.
+        assert!(
+            Dataset::load(&d, "t", "i2.bin", "l2.bin", 1, &[3, 2, 2]).is_err()
+        );
+        // and an image-count mismatch is also rejected
+        assert!(
+            Dataset::load(&d, "t", "i2.bin", "l2.bin", 2, &[3, 2, 2]).is_err()
+        );
+    }
+}

@@ -1,0 +1,31 @@
+//! # Split-Et-Impera
+//!
+//! A framework for the design of distributed deep learning applications
+//! (reproduction of Capogrosso et al., 2023). The library answers the
+//! paper's design question — *where should a DNN be split between an edge
+//! device and a server, and under which transport, to meet the
+//! application's QoS constraints?* — with three cooperating subsystems:
+//!
+//! 1. **Saliency-driven split search** ([`coordinator::saliency`]): ingest
+//!    the Grad-CAM *Cumulative Saliency* curve (computed by AOT-compiled
+//!    XLA artifacts, see [`runtime`]) and propose candidate split points at
+//!    its local maxima.
+//! 2. **Communication-aware simulation** ([`netsim`],
+//!    [`coordinator::scenario`]): replay LC / RC / SC pipelines over a
+//!    discrete-event channel model (TCP/UDP, latency, capacity, interface
+//!    speed, saboteur) with real model inference on the PJRT CPU client.
+//! 3. **QoS suggestion** ([`coordinator::suggest`]): rank configurations by
+//!    accuracy, simulate the shortlist, and report which designs satisfy
+//!    the application's latency/accuracy requirements.
+//!
+//! Python/JAX/Pallas exist only in the build path (`python/compile/`);
+//! the serving path is pure Rust + AOT-compiled XLA artifacts.
+
+pub mod coordinator;
+pub mod data;
+pub mod model;
+pub mod netsim;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

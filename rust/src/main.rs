@@ -1,0 +1,364 @@
+//! `sei` — the Split-Et-Impera command-line launcher.
+//!
+//! Subcommands:
+//!   summary    Tables I/II for VGG16 (or the trained slim model)
+//!   cs-curve   compute the Grad-CAM CS curve in Rust via PJRT artifacts
+//!   suggest    rank + simulate configurations against QoS requirements
+//!   simulate   run one LC/RC/SC scenario over the simulated channel
+//!   serve      stream the ICE-Lab workload through a configuration
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use anyhow::{bail, Result};
+
+use sei::coordinator::{
+    self, ModelScale, QosRequirements, ScenarioConfig, ScenarioKind,
+};
+use sei::model::{self, DeviceProfile};
+use sei::netsim::transfer::{NetworkConfig, Protocol};
+use sei::runtime::Engine;
+use sei::util::cli::Command;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            eprintln!("{}", usage());
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd {
+        "summary" => cmd_summary(&rest),
+        "cs-curve" => cmd_cs_curve(&rest),
+        "suggest" => cmd_suggest(&rest),
+        "simulate" => cmd_simulate(&rest),
+        "serve" => cmd_serve(&rest),
+        "hil-worker" => cmd_hil_worker(&rest),
+        "hil-serve" => cmd_hil_serve(&rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{}", usage());
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("{e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() -> String {
+    "sei — Split-Et-Impera: design of distributed deep learning applications
+
+commands:
+  summary    print the neural network summary and statistics (Tables I/II)
+  cs-curve   compute the Cumulative Saliency curve via the PJRT artifacts
+  suggest    rank candidate configurations and simulate them against QoS
+  simulate   run one LC/RC/SC scenario over the simulated channel
+  serve      stream the ICE-Lab conveyor workload through a configuration
+  hil-worker hardware-in-the-loop: serve a tail/full artifact on a socket
+  hil-serve  run split serving against a real worker over localhost TCP
+
+run `sei <command> --help` for options"
+        .to_string()
+}
+
+fn network_from(m: &sei::util::cli::Matches) -> Result<NetworkConfig> {
+    let protocol = Protocol::parse(m.str("protocol"))?;
+    let mut net = match m.str("channel") {
+        "gigabit" => NetworkConfig::gigabit(protocol, 0.0, m.u64("seed")?),
+        "fast-ethernet" => {
+            NetworkConfig::fast_ethernet(protocol, 0.0, m.u64("seed")?)
+        }
+        "wifi" => NetworkConfig::wifi(protocol, 0.0, m.u64("seed")?),
+        other => bail!("unknown channel preset '{other}'"),
+    };
+    net.loss_rate = m.f64("loss")?;
+    if let Some(lat) = m.opt_str("latency-us") {
+        net.latency_ns = (lat.parse::<f64>()? * 1000.0) as u64;
+    }
+    Ok(net)
+}
+
+fn devices_from(m: &sei::util::cli::Matches)
+    -> Result<(DeviceProfile, DeviceProfile)>
+{
+    let edge = DeviceProfile::by_name(m.str("edge"))
+        .ok_or_else(|| anyhow::anyhow!("unknown edge profile"))?;
+    let server = DeviceProfile::by_name(m.str("server"))
+        .ok_or_else(|| anyhow::anyhow!("unknown server profile"))?;
+    Ok((edge, server))
+}
+
+fn cmd_summary(args: &[String]) -> Result<()> {
+    let m = Command::new("summary", "Tables I/II model statistics")
+        .opt("model", "vgg16", "vgg16 | slim")
+        .opt("batch", "16", "batch size for the summary")
+        .opt("artifacts", "artifacts", "artifacts directory (for slim)")
+        .parse(args)?;
+    let batch = m.usize("batch")?;
+    let net = match m.str("model") {
+        "vgg16" => model::vgg16_full(),
+        "slim" => {
+            let eng = Engine::load(Path::new(m.str("artifacts")))?;
+            let mi = &eng.manifest.model;
+            model::vgg16_slim(mi.img_size, mi.width_mult, mi.hidden,
+                              mi.num_classes)
+        }
+        other => bail!("unknown model '{other}'"),
+    };
+    println!("TABLE I — neural network summary ({})\n", net.name);
+    println!("{}", model::render_table1(&net, batch));
+    println!("TABLE II — neural network statistics\n");
+    println!("{}", model::render_table2(&net, batch));
+    Ok(())
+}
+
+fn cmd_cs_curve(args: &[String]) -> Result<()> {
+    let m = Command::new("cs-curve", "Grad-CAM CS curve via PJRT")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("images", "128", "number of test images")
+        .opt("min-layer", "2", "earliest admissible split layer")
+        .parse(args)?;
+    let engine = Engine::load(Path::new(m.str("artifacts")))?;
+    let test = engine.dataset("test")?;
+    let curve = coordinator::saliency::compute_cs_curve(
+        &engine, &test, m.usize("images")?,
+    )?;
+    let norm = curve.normalized();
+    let names = &engine.manifest.model.layer_names;
+    println!("Cumulative Saliency curve (computed in Rust via PJRT):\n");
+    for (i, &li) in curve.layers.iter().enumerate() {
+        let bar = "#".repeat((norm[i] * 50.0) as usize);
+        println!("L{li:>2} {:<14} {:>7.4} {bar}", names[li], norm[i]);
+    }
+    let cands = curve.candidates(m.usize("min-layer")?);
+    println!("\ncandidate split points (local CS maxima): {cands:?}");
+    println!(
+        "build-time candidates (manifest):         {:?}",
+        engine.manifest.cs_curve.candidates
+    );
+    Ok(())
+}
+
+fn cmd_suggest(args: &[String]) -> Result<()> {
+    let m = Command::new("suggest", "QoS-driven configuration suggestion")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("protocol", "tcp", "tcp | udp")
+        .opt("channel", "gigabit", "gigabit | fast-ethernet | wifi")
+        .opt("loss", "0.0", "packet loss rate")
+        .opt("latency-us", "100", "channel latency, µs")
+        .opt("fps", "20", "required frames per second")
+        .opt("min-accuracy", "0", "required accuracy in [0,1]")
+        .opt("frames", "128", "frames to simulate per configuration")
+        .opt("edge", "edge-gpu", "edge device profile")
+        .opt("server", "server-gpu", "server device profile")
+        .opt("min-layer", "2", "earliest admissible split layer")
+        .opt("seed", "42", "simulation seed")
+        .parse(args)?;
+    let engine = Engine::load(Path::new(m.str("artifacts")))?;
+    let net = network_from(&m)?;
+    let (edge, server) = devices_from(&m)?;
+    let mut qos = QosRequirements::with_fps(m.f64("fps")?);
+    let min_acc = m.f64("min-accuracy")?;
+    if min_acc > 0.0 {
+        qos = qos.and_accuracy(min_acc);
+    }
+    let test = engine.dataset("test")?;
+    println!("QoS: {}", qos.describe());
+    println!("network: {} {} loss {:.1}%\n", m.str("channel"),
+             net.protocol, net.loss_rate * 100.0);
+    let suggestions = coordinator::suggest(
+        &engine, &net, &edge, &server, &qos, &test, m.usize("frames")?,
+        m.usize("min-layer")?,
+    )?;
+    println!(
+        "{:<8} {:>9} {:>9} {:>12} {:>10} {:>8}",
+        "config", "pred.acc", "sim.acc", "mean lat", "p95 lat", "QoS"
+    );
+    for s in &suggestions {
+        println!(
+            "{:<8} {:>8.1}% {:>8.1}% {:>9.2} ms {:>7.2} ms {:>8}",
+            s.rank.kind.to_string(),
+            s.rank.predicted_accuracy * 100.0,
+            s.report.accuracy * 100.0,
+            s.report.mean_latency_ns / 1e6,
+            s.report.p95_latency_ns as f64 / 1e6,
+            if s.satisfies { "ok" } else { "violated" }
+        );
+    }
+    if let Some(b) = coordinator::best(&suggestions) {
+        println!("\nsuggested configuration: {}", b.rank.kind);
+    }
+    Ok(())
+}
+
+fn scenario_kind(s: &str) -> Result<ScenarioKind> {
+    match s {
+        "lc" => Ok(ScenarioKind::Lc),
+        "rc" => Ok(ScenarioKind::Rc),
+        other => {
+            if let Some(l) = other.strip_prefix("sc@") {
+                Ok(ScenarioKind::Sc { split: l.parse()? })
+            } else {
+                bail!("scenario must be lc | rc | sc@<layer>")
+            }
+        }
+    }
+}
+
+fn cmd_simulate(args: &[String]) -> Result<()> {
+    let m = Command::new("simulate", "run one scenario")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("scenario", "rc", "lc | rc | sc@<layer>")
+        .opt("protocol", "tcp", "tcp | udp")
+        .opt("channel", "gigabit", "gigabit | fast-ethernet | wifi")
+        .opt("loss", "0.0", "packet loss rate")
+        .opt("latency-us", "100", "channel latency, µs")
+        .opt("frames", "256", "number of frames")
+        .opt("fps", "20", "frame rate of the source (and QoS bound)")
+        .opt("edge", "edge-gpu", "edge device profile")
+        .opt("server", "server-gpu", "server device profile")
+        .opt("scale", "slim", "slim | vgg16 (paper-scale volumetrics)")
+        .opt("dataset", "test", "train | test | ice")
+        .opt("seed", "42", "simulation seed")
+        .parse(args)?;
+    let engine = Engine::load(Path::new(m.str("artifacts")))?;
+    let net = network_from(&m)?;
+    let (edge, server) = devices_from(&m)?;
+    let qos = QosRequirements::with_fps(m.f64("fps")?);
+    let cfg = ScenarioConfig {
+        kind: scenario_kind(m.str("scenario"))?,
+        net,
+        edge,
+        server,
+        scale: match m.str("scale") {
+            "slim" => ModelScale::Slim,
+            "vgg16" => ModelScale::Vgg16Full,
+            other => bail!("unknown scale '{other}'"),
+        },
+        frame_period_ns: (1e9 / m.f64("fps")?) as u64,
+    };
+    let ds = engine.dataset(m.str("dataset"))?;
+    let report = coordinator::serve(&engine, &cfg, &ds,
+                                    m.usize("frames")?, &qos)?;
+    print!("{}", report.render(&qos));
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let m = Command::new("serve", "stream the ICE-Lab conveyor workload")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("scenario", "rc", "lc | rc | sc@<layer>")
+        .opt("protocol", "tcp", "tcp | udp")
+        .opt("channel", "gigabit", "gigabit | fast-ethernet | wifi")
+        .opt("loss", "0.0", "packet loss rate")
+        .opt("latency-us", "100", "channel latency, µs")
+        .opt("frames", "512", "number of frames")
+        .opt("fps", "20", "conveyor frame rate (QoS bound)")
+        .opt("edge", "edge-gpu", "edge device profile")
+        .opt("server", "server-gpu", "server device profile")
+        .opt("seed", "42", "simulation seed")
+        .parse(args)?;
+    let engine = Engine::load(Path::new(m.str("artifacts")))?;
+    let net = network_from(&m)?;
+    let (edge, server) = devices_from(&m)?;
+    let qos = QosRequirements::with_fps(m.f64("fps")?);
+    let cfg = ScenarioConfig {
+        kind: scenario_kind(m.str("scenario"))?,
+        net,
+        edge,
+        server,
+        scale: ModelScale::Slim,
+        frame_period_ns: (1e9 / m.f64("fps")?) as u64,
+    };
+    let ice = engine.dataset("ice")?;
+    let report = coordinator::serve(&engine, &cfg, &ice,
+                                    m.usize("frames")?, &qos)?;
+    println!("ICE-Lab conveyor serving — platform {}", engine.platform());
+    print!("{}", report.render(&qos));
+    Ok(())
+}
+
+fn cmd_hil_worker(args: &[String]) -> Result<()> {
+    let m = Command::new("hil-worker", "serve one artifact over TCP")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("addr", "127.0.0.1:7117", "bind address")
+        .required("exec", "artifact name, e.g. tail_L13_b1")
+        .parse(args)?;
+    println!("hil-worker: serving {} on {}", m.str("exec"), m.str("addr"));
+    let served = sei::coordinator::hil::run_worker(
+        Path::new(m.str("artifacts")),
+        m.str("addr"),
+        m.str("exec"),
+    )?;
+    println!("hil-worker: served {served} requests, shutting down");
+    Ok(())
+}
+
+fn cmd_hil_serve(args: &[String]) -> Result<()> {
+    let m = Command::new(
+        "hil-serve",
+        "split serving against a real worker over localhost TCP \
+         (hardware-in-the-loop, paper Sec. IV)",
+    )
+    .opt("artifacts", "artifacts", "artifacts directory")
+    .opt("split", "13", "split layer (must have exported artifacts)")
+    .opt("frames", "128", "number of frames")
+    .opt("addr", "127.0.0.1:0", "worker address (0 = auto port)")
+    .parse(args)?;
+    let artifacts = m.str("artifacts").to_string();
+    let split = m.usize("split")?;
+    let frames = m.usize("frames")?;
+
+    // Pick a free port up front so leader and worker agree.
+    let addr = {
+        let probe = std::net::TcpListener::bind(m.str("addr"))?;
+        probe.local_addr()?.to_string()
+    };
+    let worker_addr = addr.clone();
+    let worker_artifacts = artifacts.clone();
+    let worker = std::thread::spawn(move || {
+        sei::coordinator::hil::run_worker(
+            Path::new(&worker_artifacts),
+            &worker_addr,
+            &format!("tail_L{split}_b1"),
+        )
+    });
+
+    let engine = Engine::load(Path::new(&artifacts))?;
+    let ice = engine.dataset("ice")?;
+    let head = engine.executable(&format!("head_L{split}_b1"))?;
+    let num_classes = engine.manifest.model.num_classes;
+    let mut client = sei::coordinator::hil::HilClient::connect(&addr)?;
+    let mut correct = 0usize;
+    let t0 = std::time::Instant::now();
+    for i in 0..frames {
+        let idx = i % ice.len();
+        let x = ice.batch(idx, 1)?;
+        let z = head.run(&[sei::runtime::RtInput::F32(&x)])?;
+        let logits = client.infer(&z, vec![1, num_classes])?;
+        if logits.argmax_last()[0] == ice.labels[idx] as usize {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let mean_rtt_ms = client.mean_rtt_ns() / 1e6;
+    client.shutdown()?;
+    let served = worker.join().expect("worker thread")?;
+    println!("=== HIL split serving (real localhost TCP) ===");
+    println!("split              L{split}");
+    println!("frames             {frames} (worker served {served})");
+    println!("accuracy           {:.2}%", correct as f64 / frames as f64 * 100.0);
+    println!("real tail RTT      mean {mean_rtt_ms:.3} ms (wire + PJRT)");
+    println!("end-to-end         {:.1} frames/s wall", frames as f64 / wall);
+    Ok(())
+}

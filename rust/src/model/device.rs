@@ -1,0 +1,111 @@
+//! Device profiles: the *computation platform* axis of the paper's
+//! three-dimensional design space (Sec. I). Compute time is modelled as
+//! mult-adds / effective-throughput, the same first-order model the paper's
+//! simulator uses for the timing of the computation phases.
+
+use crate::netsim::event::SimTime;
+
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Effective throughput in mult-adds per second (MACs/s), i.e. already
+    /// discounted for achievable utilization, not peak datasheet FLOPs.
+    pub macs_per_sec: f64,
+    /// Fixed per-inference overhead (kernel launch, DMA, runtime), ns.
+    pub overhead_ns: SimTime,
+}
+
+impl DeviceProfile {
+    /// Embedded CPU-class sensing device (Cortex-A with NEON).
+    pub fn edge_cpu() -> Self {
+        DeviceProfile {
+            name: "edge-cpu",
+            macs_per_sec: 4e9,
+            overhead_ns: 200_000,
+        }
+    }
+
+    /// Embedded GPU/NPU-class sensing device (Jetson-class, fp16).
+    /// 1e12 MACs/s ≈ a Xavier-class NX at realistic utilization — head@L11
+    /// of VGG16@224 (~11 GMAC) in ~11 ms, inside the ICE-Lab 50 ms budget.
+    pub fn edge_gpu() -> Self {
+        DeviceProfile {
+            name: "edge-gpu",
+            macs_per_sec: 1e12,
+            overhead_ns: 300_000,
+        }
+    }
+
+    /// Server-class accelerator.
+    pub fn server_gpu() -> Self {
+        DeviceProfile {
+            name: "server-gpu",
+            macs_per_sec: 1e13,
+            overhead_ns: 150_000,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<DeviceProfile> {
+        match name {
+            "edge-cpu" => Some(Self::edge_cpu()),
+            "edge-gpu" => Some(Self::edge_gpu()),
+            "server-gpu" => Some(Self::server_gpu()),
+            _ => None,
+        }
+    }
+
+    /// Simulated wall time to execute `mult_adds` MACs on this device.
+    pub fn compute_ns(&self, mult_adds: u64) -> SimTime {
+        self.overhead_ns
+            + ((mult_adds as f64 / self.macs_per_sec) * 1e9).round() as SimTime
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_time_scales_linearly() {
+        let d = DeviceProfile::edge_gpu();
+        let t1 = d.compute_ns(1_000_000_000) - d.overhead_ns;
+        let t2 = d.compute_ns(2_000_000_000) - d.overhead_ns;
+        assert_eq!(t2, 2 * t1);
+    }
+
+    #[test]
+    fn zero_work_costs_overhead_only() {
+        let d = DeviceProfile::server_gpu();
+        assert_eq!(d.compute_ns(0), d.overhead_ns);
+    }
+
+    #[test]
+    fn server_faster_than_edge() {
+        let ma = 15_470_264_320u64; // one VGG16 image
+        assert!(
+            DeviceProfile::server_gpu().compute_ns(ma)
+                < DeviceProfile::edge_gpu().compute_ns(ma)
+        );
+        assert!(
+            DeviceProfile::edge_gpu().compute_ns(ma)
+                < DeviceProfile::edge_cpu().compute_ns(ma)
+        );
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["edge-cpu", "edge-gpu", "server-gpu"] {
+            assert_eq!(DeviceProfile::by_name(n).unwrap().name, n);
+        }
+        assert!(DeviceProfile::by_name("tpu-v9").is_none());
+    }
+
+    #[test]
+    fn edge_gpu_runs_vgg16_head_in_tens_of_ms() {
+        // Sanity for the Fig. 3 scenario: head@L11 of VGG16@224 ≈ 11 GMAC
+        // on the edge GPU ≈ 22 ms — inside a 50 ms frame budget.
+        let d = DeviceProfile::edge_gpu();
+        let t = d.compute_ns(11_000_000_000);
+        assert!(t > 5_000_000 && t < 50_000_000, "{t}");
+    }
+}

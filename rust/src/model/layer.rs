@@ -1,0 +1,280 @@
+//! Layer graph metadata: shapes, parameter counts, mult-adds.
+//!
+//! This is the "neural network statistics" subsystem behind the paper's
+//! Tables I and II (torchinfo-style summaries), and the source of the
+//! per-layer activation/latent sizes and compute costs the scenario engine
+//! uses for transmission volumetrics and compute-time modelling.
+//!
+//! Conventions (matching the numbers printed in the paper):
+//!   * params include biases;
+//!   * mult-adds of a conv/linear = output_elements x fan_in + bias adds
+//!     (exactly reproduces Table II's 247.74 G for VGG16 @ batch 16);
+//!   * forward/backward pass size counts the outputs of *parameterized*
+//!     layers only, twice (activations + gradients), in f32.
+
+/// Activation shape flowing between layers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Shape {
+    /// Channels-first feature map.
+    Chw(usize, usize, usize),
+    /// Flattened vector.
+    Flat(usize),
+}
+
+impl Shape {
+    pub fn elements(&self) -> usize {
+        match *self {
+            Shape::Chw(c, h, w) => c * h * w,
+            Shape::Flat(n) => n,
+        }
+    }
+
+    pub fn bytes_f32(&self) -> usize {
+        self.elements() * 4
+    }
+
+    pub fn render(&self, batch: usize) -> String {
+        match *self {
+            Shape::Chw(c, h, w) => format!("[{batch}, {c}, {h}, {w}]"),
+            Shape::Flat(n) => format!("[{batch}, {n}]"),
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// 3x3 "same" convolution (the only conv VGG uses).
+    Conv2d { in_ch: usize, out_ch: usize, kernel: usize },
+    ReLU,
+    /// 2x2 max pooling, stride 2.
+    MaxPool2,
+    /// Adaptive average pool to a fixed spatial size.
+    AdaptiveAvgPool { out_hw: usize },
+    Flatten,
+    Linear { in_f: usize, out_f: usize },
+    Dropout,
+}
+
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub out: Shape,
+}
+
+impl Layer {
+    pub fn params(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv2d { in_ch, out_ch, kernel } => {
+                (out_ch * in_ch * kernel * kernel + out_ch) as u64
+            }
+            LayerKind::Linear { in_f, out_f } => (in_f * out_f + out_f) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Mult-adds per image (torchinfo convention: MACs + bias adds).
+    pub fn mult_adds(&self) -> u64 {
+        let out_el = self.out.elements() as u64;
+        match self.kind {
+            LayerKind::Conv2d { in_ch, kernel, .. } => {
+                out_el * (in_ch * kernel * kernel) as u64 + out_el
+            }
+            LayerKind::Linear { in_f, .. } => out_el * in_f as u64 + out_el,
+            _ => 0,
+        }
+    }
+
+    pub fn is_parameterized(&self) -> bool {
+        self.params() > 0
+    }
+
+    pub fn type_name(&self) -> &'static str {
+        match self.kind {
+            LayerKind::Conv2d { .. } => "Conv2d",
+            LayerKind::ReLU => "ReLU",
+            LayerKind::MaxPool2 => "MaxPool2d",
+            LayerKind::AdaptiveAvgPool { .. } => "AdaptiveAvgPool2d",
+            LayerKind::Flatten => "Flatten",
+            LayerKind::Linear { .. } => "Linear",
+            LayerKind::Dropout => "Dropout",
+        }
+    }
+}
+
+/// A full network: input shape + ordered layers with propagated shapes.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: String,
+    pub input: Shape,
+    pub layers: Vec<Layer>,
+}
+
+pub struct NetworkBuilder {
+    name: String,
+    input: Shape,
+    cur: Shape,
+    layers: Vec<Layer>,
+}
+
+impl NetworkBuilder {
+    pub fn new(name: &str, input: Shape) -> Self {
+        NetworkBuilder {
+            name: name.to_string(),
+            input,
+            cur: input,
+            layers: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, name: String, kind: LayerKind, out: Shape) {
+        self.layers.push(Layer { name, kind, out });
+        self.cur = out;
+    }
+
+    pub fn conv3x3(mut self, name: &str, out_ch: usize) -> Self {
+        let Shape::Chw(c, h, w) = self.cur else {
+            panic!("conv on flat input")
+        };
+        self.push(
+            name.into(),
+            LayerKind::Conv2d { in_ch: c, out_ch, kernel: 3 },
+            Shape::Chw(out_ch, h, w),
+        );
+        self
+    }
+
+    pub fn relu(mut self, name: &str) -> Self {
+        let out = self.cur;
+        self.push(name.into(), LayerKind::ReLU, out);
+        self
+    }
+
+    pub fn maxpool2(mut self, name: &str) -> Self {
+        let Shape::Chw(c, h, w) = self.cur else {
+            panic!("pool on flat input")
+        };
+        self.push(name.into(), LayerKind::MaxPool2, Shape::Chw(c, h / 2, w / 2));
+        self
+    }
+
+    pub fn adaptive_avgpool(mut self, name: &str, out_hw: usize) -> Self {
+        let Shape::Chw(c, _, _) = self.cur else {
+            panic!("pool on flat input")
+        };
+        self.push(
+            name.into(),
+            LayerKind::AdaptiveAvgPool { out_hw },
+            Shape::Chw(c, out_hw, out_hw),
+        );
+        self
+    }
+
+    pub fn flatten(mut self, name: &str) -> Self {
+        let n = self.cur.elements();
+        self.push(name.into(), LayerKind::Flatten, Shape::Flat(n));
+        self
+    }
+
+    pub fn linear(mut self, name: &str, out_f: usize) -> Self {
+        let in_f = self.cur.elements();
+        self.push(
+            name.into(),
+            LayerKind::Linear { in_f, out_f },
+            Shape::Flat(out_f),
+        );
+        self
+    }
+
+    pub fn dropout(mut self, name: &str) -> Self {
+        let out = self.cur;
+        self.push(name.into(), LayerKind::Dropout, out);
+        self
+    }
+
+    pub fn build(self) -> Network {
+        Network { name: self.name, input: self.input, layers: self.layers }
+    }
+}
+
+impl Network {
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    /// Mult-adds per image.
+    pub fn mult_adds(&self) -> u64 {
+        self.layers.iter().map(|l| l.mult_adds()).sum()
+    }
+
+    /// Sum of output elements of parameterized layers (per image).
+    pub fn param_layer_out_elements(&self) -> u64 {
+        self.layers
+            .iter()
+            .filter(|l| l.is_parameterized())
+            .map(|l| l.out.elements() as u64)
+            .sum()
+    }
+
+    pub fn output(&self) -> Shape {
+        self.layers.last().map(|l| l.out).unwrap_or(self.input)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Network {
+        NetworkBuilder::new("t", Shape::Chw(3, 8, 8))
+            .conv3x3("c1", 4)
+            .relu("r1")
+            .maxpool2("p1")
+            .flatten("f")
+            .linear("fc", 10)
+            .build()
+    }
+
+    #[test]
+    fn shape_propagation() {
+        let n = tiny();
+        assert_eq!(n.layers[0].out, Shape::Chw(4, 8, 8));
+        assert_eq!(n.layers[2].out, Shape::Chw(4, 4, 4));
+        assert_eq!(n.layers[3].out, Shape::Flat(64));
+        assert_eq!(n.output(), Shape::Flat(10));
+    }
+
+    #[test]
+    fn param_counts() {
+        let n = tiny();
+        assert_eq!(n.layers[0].params(), 4 * 3 * 9 + 4);
+        assert_eq!(n.layers[4].params(), 64 * 10 + 10);
+        assert_eq!(n.total_params(), 112 + 650);
+    }
+
+    #[test]
+    fn mult_adds_include_bias() {
+        let n = tiny();
+        // conv: 256 out el x 27 + 256; linear: 10 x 64 + 10
+        assert_eq!(n.layers[0].mult_adds(), 256 * 27 + 256);
+        assert_eq!(n.layers[4].mult_adds(), 650);
+    }
+
+    #[test]
+    fn relu_and_pool_are_free() {
+        let n = tiny();
+        assert_eq!(n.layers[1].params() + n.layers[2].params(), 0);
+        assert_eq!(n.layers[1].mult_adds() + n.layers[2].mult_adds(), 0);
+    }
+
+    #[test]
+    fn shape_render() {
+        assert_eq!(Shape::Chw(64, 224, 224).render(16), "[16, 64, 224, 224]");
+        assert_eq!(Shape::Flat(1000).render(16), "[16, 1000]");
+    }
+
+    #[test]
+    fn bytes_f32() {
+        assert_eq!(Shape::Chw(2, 3, 4).bytes_f32(), 96);
+    }
+}

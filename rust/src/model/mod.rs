@@ -1,0 +1,16 @@
+//! Model metadata subsystem: layer graphs, shapes, parameter/mult-add
+//! accounting (Tables I/II), per-layer activation/latent volumetrics, and
+//! device compute-time profiles.
+
+pub mod device;
+pub mod layer;
+pub mod stats;
+pub mod vgg;
+
+pub use device::DeviceProfile;
+pub use layer::{Layer, LayerKind, Network, Shape};
+pub use stats::{model_stats, render_table1, render_table2, ModelStats};
+pub use vgg::{
+    feature_layers, split_compute, vgg16_full, vgg16_slim, FeatureLayer,
+    NUM_FEATURE_LAYERS,
+};

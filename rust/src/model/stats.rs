@@ -1,0 +1,165 @@
+//! Table I / Table II generators: torchinfo-style per-layer summary and
+//! aggregate statistics (paper Sec. V-D).
+
+use super::layer::Network;
+use crate::util::table;
+
+/// One row of the Table-I style summary.
+#[derive(Clone, Debug)]
+pub struct SummaryRow {
+    pub name: String,
+    pub type_name: &'static str,
+    pub depth_idx: String,
+    pub output_shape: String,
+    pub params: Option<u64>,
+}
+
+pub fn summary_rows(net: &Network, batch: usize) -> Vec<SummaryRow> {
+    net.layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| SummaryRow {
+            name: l.name.clone(),
+            type_name: l.type_name(),
+            depth_idx: format!("2-{}", i + 1),
+            output_shape: l.out.render(batch),
+            params: if l.is_parameterized() {
+                Some(l.params())
+            } else {
+                None
+            },
+        })
+        .collect()
+}
+
+/// Render Table I ("The neural network summary provided for the VGG16").
+pub fn render_table1(net: &Network, batch: usize) -> String {
+    let rows: Vec<Vec<String>> = summary_rows(net, batch)
+        .into_iter()
+        .map(|r| {
+            vec![
+                format!("{}: {}", r.type_name, r.depth_idx),
+                r.output_shape,
+                r.params
+                    .map(|p| table::group_digits(p))
+                    .unwrap_or_else(|| "—".to_string()),
+            ]
+        })
+        .collect();
+    table::render(&["Layer (type:depth-idx)", "Output Shape", "Param (#)"],
+                  &rows)
+}
+
+/// Aggregate statistics (Table II), torchinfo conventions — see
+/// `model::layer` module docs. Sizes in decimal MB as the paper prints.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelStats {
+    pub total_params: u64,
+    pub trainable_params: u64,
+    pub mult_adds_g: f64,
+    pub input_mb: f64,
+    pub fwd_bwd_mb: f64,
+    pub params_mb: f64,
+    pub total_mb: f64,
+}
+
+pub fn model_stats(net: &Network, batch: usize) -> ModelStats {
+    let p = net.total_params();
+    let input_mb = (batch * net.input.bytes_f32()) as f64 / 1e6;
+    let fwd_bwd_mb =
+        (2 * 4 * batch as u64 * net.param_layer_out_elements()) as f64 / 1e6;
+    let params_mb = (p * 4) as f64 / 1e6;
+    ModelStats {
+        total_params: p,
+        trainable_params: p,
+        mult_adds_g: (net.mult_adds() * batch as u64) as f64 / 1e9,
+        input_mb,
+        fwd_bwd_mb,
+        params_mb,
+        total_mb: input_mb + fwd_bwd_mb + params_mb,
+    }
+}
+
+/// Render Table II ("The neural network statistics provided for the VGG16").
+pub fn render_table2(net: &Network, batch: usize) -> String {
+    let s = model_stats(net, batch);
+    let rows = vec![
+        vec!["Total params".to_string(), table::group_digits(s.total_params)],
+        vec![
+            "Trainable params".to_string(),
+            table::group_digits(s.trainable_params),
+        ],
+        vec![
+            "Total mult-adds (G)".to_string(),
+            format!("{:.2}", s.mult_adds_g),
+        ],
+        vec![
+            "Input size (MB)".to_string(),
+            format!("{:.2}", s.input_mb),
+        ],
+        vec![
+            "Forward/backward pass size (MB)".to_string(),
+            format!("{:.2}", s.fwd_bwd_mb),
+        ],
+        vec![
+            "Params size (MB)".to_string(),
+            format!("{:.2}", s.params_mb),
+        ],
+        vec![
+            "Estimated Total Size (MB)".to_string(),
+            format!("{:.2}", s.total_mb),
+        ],
+    ];
+    table::render(&["Statistic", "Value"], &rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::vgg::vgg16_full;
+
+    #[test]
+    fn table2_reproduces_paper_exactly() {
+        let s = model_stats(&vgg16_full(), 16);
+        assert_eq!(s.total_params, 138_357_544);
+        assert_eq!(s.trainable_params, 138_357_544);
+        assert!((s.mult_adds_g - 247.74).abs() < 0.005, "{}", s.mult_adds_g);
+        assert!((s.fwd_bwd_mb - 1735.26).abs() < 0.01, "{}", s.fwd_bwd_mb);
+        assert!((s.total_mb - 2298.32).abs() < 0.01, "{}", s.total_mb);
+    }
+
+    #[test]
+    fn table1_contains_paper_rows() {
+        let t = render_table1(&vgg16_full(), 16);
+        assert!(t.contains("[16, 64, 224, 224]"));
+        assert!(t.contains("1.792"));
+        assert!(t.contains("102.764.544"));
+        assert!(t.contains("4.097.000"));
+        assert!(t.contains("[16, 1000]"));
+    }
+
+    #[test]
+    fn table2_renders_all_rows() {
+        let t = render_table2(&vgg16_full(), 16);
+        assert!(t.contains("138.357.544"));
+        assert!(t.contains("247.74"));
+        assert!(t.contains("1735.26"));
+        assert!(t.contains("2298.32"));
+    }
+
+    #[test]
+    fn unparameterized_rows_have_no_params() {
+        let rows = summary_rows(&vgg16_full(), 16);
+        let relu = rows.iter().find(|r| r.type_name == "ReLU").unwrap();
+        assert!(relu.params.is_none());
+    }
+
+    #[test]
+    fn stats_scale_with_batch() {
+        let net = vgg16_full();
+        let s1 = model_stats(&net, 1);
+        let s16 = model_stats(&net, 16);
+        assert!((s16.mult_adds_g / s1.mult_adds_g - 16.0).abs() < 1e-9);
+        assert_eq!(s1.total_params, s16.total_params);
+    }
+}

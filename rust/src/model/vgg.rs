@@ -1,0 +1,255 @@
+//! VGG16 model definitions: the paper's full torchvision VGG16 (Tables I/II,
+//! Fig. 3/4 transmission volumetrics at 224x224) and the slim variant that
+//! matches the trained JAX model in `python/compile/model.py`.
+
+use super::layer::{Network, NetworkBuilder, Shape};
+
+/// VGG16 conv plan: (block, convs, out channels).
+pub const VGG16_BLOCKS: [(usize, usize, usize); 5] =
+    [(1, 2, 64), (2, 2, 128), (3, 3, 256), (4, 3, 512), (5, 3, 512)];
+
+/// Keras-style names of the 18 feature layers (13 conv + 5 pool), matching
+/// `python/compile/model.py::VGG16_LAYER_NAMES` and the paper's Fig. 2.
+pub fn feature_layer_names() -> Vec<String> {
+    let mut names = Vec::with_capacity(18);
+    for (b, convs, _) in VGG16_BLOCKS {
+        for c in 1..=convs {
+            names.push(format!("block{b}_conv{c}"));
+        }
+        names.push(format!("block{b}_pool"));
+    }
+    names
+}
+
+pub const NUM_FEATURE_LAYERS: usize = 18;
+
+fn scaled(ch: usize, width_mult: f64) -> usize {
+    ((ch as f64 * width_mult) as usize).max(4)
+}
+
+/// Torchvision VGG16 exactly as summarized in the paper's Table I:
+/// 224x224x3 input, avgpool to 7x7, classifier 4096/4096/1000 with ReLU and
+/// Dropout rows.
+pub fn vgg16_full() -> Network {
+    let mut b = NetworkBuilder::new("VGG16", Shape::Chw(3, 224, 224));
+    for (blk, convs, ch) in VGG16_BLOCKS {
+        for c in 1..=convs {
+            b = b
+                .conv3x3(&format!("block{blk}_conv{c}"), ch)
+                .relu(&format!("block{blk}_relu{c}"));
+        }
+        b = b.maxpool2(&format!("block{blk}_pool"));
+    }
+    b.adaptive_avgpool("avgpool", 7)
+        .flatten("flatten")
+        .linear("fc1", 4096)
+        .relu("fc1_relu")
+        .dropout("fc1_drop")
+        .linear("fc2", 4096)
+        .relu("fc2_relu")
+        .dropout("fc2_drop")
+        .linear("fc3", 1000)
+        .build()
+}
+
+/// The slim trained model: VGG16 topology at `img_size` with channel widths
+/// scaled by `width_mult`, flatten straight into a small classifier. Must
+/// stay in lockstep with `python/compile/model.py`.
+pub fn vgg16_slim(img_size: usize, width_mult: f64, hidden: usize,
+                  num_classes: usize) -> Network {
+    let mut b = NetworkBuilder::new(
+        "VGG16-slim",
+        Shape::Chw(3, img_size, img_size),
+    );
+    for (blk, convs, ch) in VGG16_BLOCKS {
+        let oc = scaled(ch, width_mult);
+        for c in 1..=convs {
+            b = b
+                .conv3x3(&format!("block{blk}_conv{c}"), oc)
+                .relu(&format!("block{blk}_relu{c}"));
+        }
+        b = b.maxpool2(&format!("block{blk}_pool"));
+    }
+    b.flatten("flatten")
+        .linear("fc0", hidden)
+        .relu("fc0_relu")
+        .linear("fc1", num_classes)
+        .build()
+}
+
+/// Metadata of one of the 18 feature layers (ReLU folded into its conv),
+/// indexed 0..17 as in the paper's Fig. 2 and the python model.
+#[derive(Clone, Debug)]
+pub struct FeatureLayer {
+    pub index: usize,
+    pub name: String,
+    pub is_pool: bool,
+    pub out: Shape,
+    pub params: u64,
+    /// Mult-adds per image for this layer alone.
+    pub mult_adds: u64,
+}
+
+impl FeatureLayer {
+    /// Bytes of the raw activation at this layer (f32, per image).
+    pub fn activation_bytes(&self) -> u64 {
+        self.out.bytes_f32() as u64
+    }
+
+    /// Bytes of the 50%-compressed bottleneck latent transmitted when
+    /// splitting here (channel dimension halved, per the paper's AEs).
+    pub fn latent_bytes(&self) -> u64 {
+        let Shape::Chw(c, h, w) = self.out else { unreachable!() };
+        ((c / 2).max(1) * h * w * 4) as u64
+    }
+}
+
+/// Extract the 18 feature layers of a (full or slim) VGG16 network built by
+/// this module, with cumulative-friendly per-layer costs.
+pub fn feature_layers(net: &Network) -> Vec<FeatureLayer> {
+    let mut out = Vec::with_capacity(NUM_FEATURE_LAYERS);
+    for l in &net.layers {
+        match l.kind {
+            super::layer::LayerKind::Conv2d { .. }
+                if l.name.starts_with("block") =>
+            {
+                out.push(FeatureLayer {
+                    index: out.len(),
+                    name: l.name.clone(),
+                    is_pool: false,
+                    out: l.out,
+                    params: l.params(),
+                    mult_adds: l.mult_adds(),
+                });
+            }
+            super::layer::LayerKind::MaxPool2 => {
+                out.push(FeatureLayer {
+                    index: out.len(),
+                    name: l.name.clone(),
+                    is_pool: true,
+                    out: l.out,
+                    params: 0,
+                    mult_adds: 0,
+                });
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(out.len(), NUM_FEATURE_LAYERS);
+    out
+}
+
+/// Mult-adds per image of the head (feature layers 0..=split, plus the
+/// bottleneck encoder conv) and of the tail (decoder conv + remaining
+/// feature layers + classifier).
+pub fn split_compute(net: &Network, split: usize) -> (u64, u64) {
+    let feats = feature_layers(net);
+    assert!(split < NUM_FEATURE_LAYERS - 1, "split {split} out of range");
+    let head_feat: u64 = feats[..=split].iter().map(|f| f.mult_adds).sum();
+    let tail_feat: u64 = feats[split + 1..].iter().map(|f| f.mult_adds).sum();
+    let classifier: u64 = net
+        .layers
+        .iter()
+        .filter(|l| matches!(l.kind, super::layer::LayerKind::Linear { .. }))
+        .map(|l| l.mult_adds())
+        .sum();
+    // Bottleneck convs: encoder C->C/2 3x3 at the split's spatial size,
+    // decoder C/2->C (mirrors python/compile/bottleneck.py).
+    let Shape::Chw(c, h, w) = feats[split].out else { unreachable!() };
+    let zc = (c / 2).max(1);
+    let enc = (zc * h * w) as u64 * (c * 9) as u64 + (zc * h * w) as u64;
+    let dec = (c * h * w) as u64 * (zc * 9) as u64 + (c * h * w) as u64;
+    (head_feat + enc, dec + tail_feat + classifier)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_paper_total_params() {
+        // Paper Table II: 138,357,544.
+        assert_eq!(vgg16_full().total_params(), 138_357_544);
+    }
+
+    #[test]
+    fn vgg16_paper_mult_adds_batch16() {
+        // Paper Table II: 247.74 G mult-adds at batch 16.
+        let g = vgg16_full().mult_adds() as f64 * 16.0 / 1e9;
+        assert!((g - 247.74).abs() < 0.005, "{g}");
+    }
+
+    #[test]
+    fn vgg16_table1_spot_rows() {
+        let net = vgg16_full();
+        let c1 = net.layers.iter().find(|l| l.name == "block1_conv1").unwrap();
+        assert_eq!(c1.params(), 1_792);
+        assert_eq!(c1.out, Shape::Chw(64, 224, 224));
+        let fc1 = net.layers.iter().find(|l| l.name == "fc1").unwrap();
+        assert_eq!(fc1.params(), 102_764_544);
+        let fc3 = net.layers.iter().find(|l| l.name == "fc3").unwrap();
+        assert_eq!(fc3.params(), 4_097_000);
+    }
+
+    #[test]
+    fn feature_layer_names_match_paper_candidates() {
+        let names = feature_layer_names();
+        assert_eq!(names.len(), 18);
+        // Paper Fig. 2 (0-based feature indexing):
+        assert_eq!(names[5], "block2_pool");
+        assert_eq!(names[9], "block3_pool");
+        assert_eq!(names[11], "block4_conv2");
+        assert_eq!(names[13], "block4_pool");
+        assert_eq!(names[15], "block5_conv2");
+    }
+
+    #[test]
+    fn feature_layers_of_full_vgg16() {
+        let f = feature_layers(&vgg16_full());
+        assert_eq!(f.len(), 18);
+        assert_eq!(f[11].name, "block4_conv2");
+        assert_eq!(f[11].out, Shape::Chw(512, 28, 28));
+        // latent at 50% compression: 256x28x28 f32
+        assert_eq!(f[11].latent_bytes(), 256 * 28 * 28 * 4);
+        assert_eq!(f[15].out, Shape::Chw(512, 14, 14));
+        assert_eq!(f[15].latent_bytes(), 256 * 14 * 14 * 4);
+    }
+
+    #[test]
+    fn slim_matches_python_total_params() {
+        // python: compile.model.total_params(ModelConfig(0.125)) == 235378
+        let net = vgg16_slim(32, 0.125, 64, 10);
+        assert_eq!(net.total_params(), 235_378);
+    }
+
+    #[test]
+    fn slim_feature_shapes() {
+        let f = feature_layers(&vgg16_slim(32, 0.125, 64, 10));
+        assert_eq!(f[0].out, Shape::Chw(8, 32, 32));
+        assert_eq!(f[17].out, Shape::Chw(64, 1, 1));
+        assert_eq!(f[11].out, Shape::Chw(64, 4, 4));
+    }
+
+    #[test]
+    fn split_compute_sums_to_more_than_full() {
+        // head+tail >= full (bottleneck adds compute)
+        let net = vgg16_full();
+        let full = net.mult_adds();
+        for s in [5usize, 9, 11, 13, 15] {
+            let (h, t) = split_compute(&net, s);
+            assert!(h + t > full, "split {s}");
+            assert!(h < h + t);
+        }
+    }
+
+    #[test]
+    fn split_head_grows_with_split_point() {
+        let net = vgg16_full();
+        let mut prev = 0;
+        for s in [5usize, 9, 11, 13, 15] {
+            let (h, _) = split_compute(&net, s);
+            assert!(h > prev);
+            prev = h;
+        }
+    }
+}

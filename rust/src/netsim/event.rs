@@ -1,0 +1,204 @@
+//! Discrete-event simulation kernel: virtual clock + time-ordered event
+//! queue. The SCNSL library the paper builds on is a SystemC discrete-event
+//! network simulator; this module is the equivalent kernel, generic over the
+//! event payload so the transport models and the scenario engine reuse it.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulated time in nanoseconds.
+pub type SimTime = u64;
+
+pub const NS_PER_SEC: f64 = 1e9;
+
+pub fn secs(t: SimTime) -> f64 {
+    t as f64 / NS_PER_SEC
+}
+
+pub fn from_secs(s: f64) -> SimTime {
+    (s * NS_PER_SEC).round() as SimTime
+}
+
+struct Entry<E> {
+    /// (time << 64 | seq) packed so ordering is a single u128 compare —
+    /// the heap's sift loops are the simulator's hottest comparisons
+    /// (EXPERIMENTS.md §Perf). Ties broken by insertion sequence => stable
+    /// FIFO at equal times.
+    key: u128,
+    event: E,
+}
+
+impl<E> Entry<E> {
+    #[inline]
+    fn time(&self) -> SimTime {
+        (self.key >> 64) as SimTime
+    }
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+
+impl<E> Eq for Entry<E> {}
+
+impl<E> Ord for Entry<E> {
+    #[inline]
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest first.
+        other.key.cmp(&self.key)
+    }
+}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Time-ordered event queue with a monotonic virtual clock.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    now: SimTime,
+    next_seq: u64,
+    processed: u64,
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::with_capacity(64),
+            now: 0,
+            next_seq: 0,
+            processed: 0,
+        }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of events popped so far (perf metric: events/second).
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule an event at absolute time `t`. Scheduling in the past is a
+    /// logic error in every model built on this kernel.
+    pub fn schedule(&mut self, t: SimTime, event: E) {
+        debug_assert!(
+            t >= self.now,
+            "event scheduled in the past ({t} < {})",
+            self.now
+        );
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let t = t.max(self.now);
+        self.heap.push(Entry {
+            key: ((t as u128) << 64) | seq as u128,
+            event,
+        });
+    }
+
+    pub fn schedule_in(&mut self, dt: SimTime, event: E) {
+        self.schedule(self.now + dt, event);
+    }
+
+    /// Pop the earliest event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        self.heap.pop().map(|e| {
+            let t = e.time();
+            debug_assert!(t >= self.now, "time went backwards");
+            self.now = t;
+            self.processed += 1;
+            (t, e.event)
+        })
+    }
+
+    /// Advance the clock without an event (compute phases).
+    pub fn advance_to(&mut self, t: SimTime) {
+        assert!(t >= self.now, "advance_to into the past");
+        self.now = t;
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(30, "c");
+        q.schedule(10, "a");
+        q.schedule(20, "b");
+        assert_eq!(q.pop(), Some((10, "a")));
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn ties_are_fifo() {
+        let mut q = EventQueue::new();
+        q.schedule(5, 1);
+        q.schedule(5, 2);
+        q.schedule(5, 3);
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+        assert_eq!(q.pop().unwrap().1, 3);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule(100, ());
+        q.schedule(50, ());
+        let mut last = 0;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last);
+            last = t;
+        }
+        assert_eq!(q.now(), 100);
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut q = EventQueue::new();
+        q.schedule(10, "x");
+        q.pop();
+        q.schedule_in(5, "y");
+        assert_eq!(q.pop(), Some((15, "y")));
+    }
+
+    #[test]
+    fn conversions_roundtrip() {
+        assert_eq!(from_secs(1.5), 1_500_000_000);
+        assert!((secs(2_000_000_000) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn processed_counter() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.schedule(i, i);
+        }
+        while q.pop().is_some() {}
+        assert_eq!(q.processed(), 10);
+    }
+}

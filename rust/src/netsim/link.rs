@@ -1,0 +1,319 @@
+//! Channel model: one direction of the full-duplex link.
+//!
+//! Models the four physical knobs the paper's simulator exposes
+//! (Sec. IV "communication network modeling"):
+//!   * channel latency  — propagation delay per packet;
+//!   * channel capacity — available link bandwidth;
+//!   * interface speed  — NIC serialization rate (1000 Mb/s GbE, 100 Mb/s
+//!     Fast-Ethernet, 160 Mb/s Wi-Fi, ...);
+//!   * saboteur         — i.i.d. packet loss rate.
+//!
+//! Serialization is FIFO: a packet starts on the wire only when the
+//! previous one finished (`busy_until`), at rate min(interface, capacity).
+
+use super::event::{SimTime, NS_PER_SEC};
+use crate::util::rng::Rng;
+
+/// Saboteur model: how packet losses are distributed in time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LossModel {
+    /// Independent per-packet Bernoulli loss (the paper's saboteur).
+    Iid,
+    /// Gilbert-Elliott two-state burst model: the channel alternates
+    /// between a Good state (lossless) and a Bad state (loss with
+    /// probability `bad_loss`); `p_gb` / `p_bg` are the per-packet
+    /// transition probabilities. The *stationary* loss rate is
+    /// `bad_loss * p_gb / (p_gb + p_bg)`. Bursty loss is what real
+    /// wireless links exhibit, and is an ablation of the paper's i.i.d.
+    /// assumption (see the ablation_loss_model bench).
+    GilbertElliott { p_gb: f64, p_bg: f64, bad_loss: f64 },
+}
+
+impl LossModel {
+    /// A Gilbert-Elliott parameterization with the given stationary loss
+    /// rate and a mean bad-burst length of `burst_len` packets.
+    pub fn bursty(stationary_loss: f64, burst_len: f64) -> LossModel {
+        let bad_loss = 1.0;
+        let p_bg = 1.0 / burst_len.max(1.0);
+        // pi_bad = p_gb / (p_gb + p_bg) = stationary_loss / bad_loss
+        let pi_bad = (stationary_loss / bad_loss).min(0.999);
+        let p_gb = p_bg * pi_bad / (1.0 - pi_bad);
+        LossModel::GilbertElliott { p_gb, p_bg, bad_loss }
+    }
+
+    pub fn stationary_loss(&self, iid_rate: f64) -> f64 {
+        match *self {
+            LossModel::Iid => iid_rate,
+            LossModel::GilbertElliott { p_gb, p_bg, bad_loss } => {
+                bad_loss * p_gb / (p_gb + p_bg)
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LinkConfig {
+    /// Propagation delay (channel latency), ns.
+    pub latency_ns: SimTime,
+    /// Channel capacity, bits/s.
+    pub capacity_bps: f64,
+    /// Interface (NIC) speed, bits/s.
+    pub interface_bps: f64,
+    /// Saboteur: probability each packet is lost (under `Iid`).
+    pub loss_rate: f64,
+    /// Loss distribution in time.
+    pub loss_model: LossModel,
+    /// Random per-packet propagation jitter, ns (uniform in [0, jitter]).
+    pub jitter_ns: SimTime,
+}
+
+impl LinkConfig {
+    pub fn basic(latency_ns: SimTime, rate_bps: f64, loss_rate: f64)
+        -> LinkConfig
+    {
+        LinkConfig {
+            latency_ns,
+            capacity_bps: rate_bps,
+            interface_bps: rate_bps,
+            loss_rate,
+            loss_model: LossModel::Iid,
+            jitter_ns: 0,
+        }
+    }
+
+    /// Effective serialization rate.
+    pub fn rate_bps(&self) -> f64 {
+        self.capacity_bps.min(self.interface_bps)
+    }
+
+    pub fn serialization_ns(&self, bytes: u32) -> SimTime {
+        ((bytes as f64 * 8.0 / self.rate_bps()) * NS_PER_SEC).round() as SimTime
+    }
+}
+
+/// Outcome of handing a packet to the link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SendOutcome {
+    /// When the packet fully arrives at the far end (even if dropped, for
+    /// accounting: drops are decided at the receiving end of the wire).
+    pub arrival: SimTime,
+    /// When the sender's interface is free again.
+    pub tx_done: SimTime,
+    /// Saboteur verdict.
+    pub dropped: bool,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LinkStats {
+    pub packets_sent: u64,
+    pub packets_dropped: u64,
+    pub bytes_sent: u64,
+    /// Total time the interface spent serializing, ns (utilization).
+    pub busy_ns: u64,
+}
+
+/// One direction of the channel.
+pub struct Link {
+    pub cfg: LinkConfig,
+    busy_until: SimTime,
+    rng: Rng,
+    /// Gilbert-Elliott state: true = Bad.
+    ge_bad: bool,
+    pub stats: LinkStats,
+}
+
+impl Link {
+    pub fn new(cfg: LinkConfig, rng: Rng) -> Self {
+        Link {
+            cfg,
+            busy_until: 0,
+            rng,
+            ge_bad: false,
+            stats: LinkStats::default(),
+        }
+    }
+
+    fn saboteur(&mut self) -> bool {
+        match self.cfg.loss_model {
+            LossModel::Iid => self.rng.chance(self.cfg.loss_rate),
+            LossModel::GilbertElliott { p_gb, p_bg, bad_loss } => {
+                // Transition first, then sample in the new state.
+                if self.ge_bad {
+                    if self.rng.chance(p_bg) {
+                        self.ge_bad = false;
+                    }
+                } else if self.rng.chance(p_gb) {
+                    self.ge_bad = true;
+                }
+                self.ge_bad && self.rng.chance(bad_loss)
+            }
+        }
+    }
+
+    /// Enqueue `bytes` at `now`; returns serialization/arrival times and the
+    /// saboteur's verdict. Deterministic given the link's RNG stream.
+    pub fn send(&mut self, now: SimTime, bytes: u32) -> SendOutcome {
+        let start = now.max(self.busy_until);
+        let ser = self.cfg.serialization_ns(bytes);
+        let tx_done = start + ser;
+        self.busy_until = tx_done;
+        let jitter = if self.cfg.jitter_ns > 0 {
+            self.rng.range_u64(0, self.cfg.jitter_ns)
+        } else {
+            0
+        };
+        let arrival = tx_done + self.cfg.latency_ns + jitter;
+        let dropped = self.saboteur();
+        self.stats.packets_sent += 1;
+        self.stats.bytes_sent += bytes as u64;
+        self.stats.busy_ns += ser;
+        if dropped {
+            self.stats.packets_dropped += 1;
+        }
+        SendOutcome { arrival, tx_done, dropped }
+    }
+
+    /// Sender-side queueing + serialization delay if a packet were sent now.
+    pub fn backlog_ns(&self, now: SimTime) -> SimTime {
+        self.busy_until.saturating_sub(now)
+    }
+
+    pub fn reset_clock(&mut self) {
+        self.busy_until = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gbe() -> LinkConfig {
+        LinkConfig::basic(100_000, 1e9, 0.0)
+    }
+
+    #[test]
+    fn serialization_time_math() {
+        // 1500 B at 1 Gb/s = 12 µs.
+        assert_eq!(gbe().serialization_ns(1500), 12_000);
+    }
+
+    #[test]
+    fn rate_is_min_of_interface_and_capacity() {
+        let mut c = gbe();
+        c.interface_bps = 1e8;
+        assert_eq!(c.rate_bps(), 1e8);
+        c.interface_bps = 1e9;
+        c.capacity_bps = 16e7;
+        assert_eq!(c.rate_bps(), 16e7);
+    }
+
+    #[test]
+    fn arrival_includes_propagation() {
+        let mut l = Link::new(gbe(), Rng::new(0));
+        let o = l.send(0, 1500);
+        assert_eq!(o.tx_done, 12_000);
+        assert_eq!(o.arrival, 112_000);
+        assert!(!o.dropped);
+    }
+
+    #[test]
+    fn fifo_serialization() {
+        let mut l = Link::new(gbe(), Rng::new(0));
+        let a = l.send(0, 1500);
+        let b = l.send(0, 1500); // queued behind a
+        assert_eq!(b.tx_done, a.tx_done + 12_000);
+        assert_eq!(l.backlog_ns(0), 24_000);
+    }
+
+    #[test]
+    fn idle_gap_no_queueing() {
+        let mut l = Link::new(gbe(), Rng::new(0));
+        l.send(0, 1500);
+        let b = l.send(1_000_000, 1500);
+        assert_eq!(b.tx_done, 1_012_000);
+    }
+
+    #[test]
+    fn saboteur_rate() {
+        let mut cfg = gbe();
+        cfg.loss_rate = 0.1;
+        let mut l = Link::new(cfg, Rng::new(7));
+        let drops = (0..20_000).filter(|_| l.send(u64::MAX / 2, 100).dropped)
+            .count();
+        let rate = drops as f64 / 20_000.0;
+        assert!((rate - 0.1).abs() < 0.01, "{rate}");
+    }
+
+    #[test]
+    fn zero_loss_never_drops() {
+        let mut l = Link::new(gbe(), Rng::new(1));
+        assert!((0..1000).all(|i| !l.send(i * 100_000, 1500).dropped));
+    }
+
+    #[test]
+    fn gilbert_elliott_matches_stationary_loss() {
+        let mut cfg = gbe();
+        cfg.loss_model = LossModel::bursty(0.1, 8.0);
+        assert!((cfg.loss_model.stationary_loss(0.0) - 0.1).abs() < 1e-9);
+        let mut l = Link::new(cfg, Rng::new(3));
+        let n = 200_000;
+        let drops = (0..n).filter(|_| l.send(u64::MAX / 2, 100).dropped)
+            .count();
+        let rate = drops as f64 / n as f64;
+        assert!((rate - 0.1).abs() < 0.01, "{rate}");
+    }
+
+    #[test]
+    fn gilbert_elliott_losses_are_bursty() {
+        // Mean run length of consecutive drops must exceed the i.i.d. one
+        // at the same stationary rate.
+        let run_len = |model: LossModel| -> f64 {
+            let mut cfg = gbe();
+            cfg.loss_rate = 0.1;
+            cfg.loss_model = model;
+            let mut l = Link::new(cfg, Rng::new(5));
+            let (mut runs, mut drops, mut in_run) = (0u64, 0u64, false);
+            for _ in 0..100_000 {
+                let d = l.send(u64::MAX / 2, 100).dropped;
+                if d {
+                    drops += 1;
+                    if !in_run {
+                        runs += 1;
+                        in_run = true;
+                    }
+                } else {
+                    in_run = false;
+                }
+            }
+            drops as f64 / runs.max(1) as f64
+        };
+        let iid = run_len(LossModel::Iid);
+        let ge = run_len(LossModel::bursty(0.1, 8.0));
+        assert!(ge > 2.0 * iid, "iid {iid:.2} vs GE {ge:.2}");
+    }
+
+    #[test]
+    fn jitter_spreads_arrivals() {
+        let mut cfg = gbe();
+        cfg.jitter_ns = 50_000;
+        let mut l = Link::new(cfg, Rng::new(1));
+        let arrivals: Vec<u64> = (0..200)
+            .map(|i| l.send(i * 1_000_000, 100).arrival
+                 - (i * 1_000_000))
+            .collect();
+        let min = *arrivals.iter().min().unwrap();
+        let max = *arrivals.iter().max().unwrap();
+        assert!(max - min > 20_000, "jitter not applied: {min}..{max}");
+        assert!(max <= 100_000 + 800 + 50_000);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut l = Link::new(gbe(), Rng::new(0));
+        l.send(0, 1000);
+        l.send(0, 500);
+        assert_eq!(l.stats.packets_sent, 2);
+        assert_eq!(l.stats.bytes_sent, 1500);
+        assert_eq!(l.stats.busy_ns, 12_000);
+    }
+}

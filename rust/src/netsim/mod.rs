@@ -1,0 +1,23 @@
+//! Communication-aware discrete-event network simulator (the paper's
+//! *netsim* layer; an SCNSL-analogue built from scratch in Rust).
+//!
+//! Layering:
+//!   [`event`]    — virtual clock + time-ordered event queue;
+//!   [`packet`]   — MTU/header/segmentation;
+//!   [`link`]     — one direction: serialization, propagation, saboteur;
+//!   [`tcp`]      — reliable transport (Reno: slow start, AIMD, fast
+//!                  retransmit, RTO + backoff);
+//!   [`udp`]      — unreliable datagrams with loss reporting;
+//!   [`transfer`] — [`transfer::Channel`]: the full-duplex message API the
+//!                  scenario engine drives.
+
+pub mod event;
+pub mod link;
+pub mod packet;
+pub mod tcp;
+pub mod transfer;
+pub mod udp;
+
+pub use event::{from_secs, secs, SimTime};
+pub use packet::Dir;
+pub use transfer::{Channel, NetworkConfig, Protocol, TransferResult};

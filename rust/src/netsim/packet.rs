@@ -1,0 +1,158 @@
+//! Packetization: MTU, protocol header overheads, packet descriptors.
+
+/// Standard Ethernet MTU (bytes of IP payload).
+pub const MTU: u32 = 1500;
+/// IPv4 (20) + TCP (20) header bytes.
+pub const TCP_HEADER: u32 = 40;
+/// IPv4 (20) + UDP (8) header bytes.
+pub const UDP_HEADER: u32 = 28;
+/// TCP maximum segment size under the default MTU.
+pub const TCP_MSS: u32 = MTU - TCP_HEADER;
+/// UDP maximum datagram payload under the default MTU.
+pub const UDP_MAX_PAYLOAD: u32 = MTU - UDP_HEADER;
+
+/// Direction over the full-duplex channel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    /// Edge device -> server (uplink).
+    Up,
+    /// Server -> edge device (downlink).
+    Down,
+}
+
+impl Dir {
+    pub fn flip(self) -> Dir {
+        match self {
+            Dir::Up => Dir::Down,
+            Dir::Down => Dir::Up,
+        }
+    }
+}
+
+/// One simulated packet (data segment, datagram or ACK).
+#[derive(Clone, Debug)]
+pub struct Packet {
+    /// First payload byte offset within the application message.
+    pub offset: u64,
+    /// Payload bytes (0 for a pure ACK).
+    pub payload: u32,
+    /// Header bytes on the wire.
+    pub header: u32,
+    /// Cumulative acknowledgement number (TCP ACKs).
+    pub ack_no: u64,
+    /// True when this is a retransmission (Karn: no RTT sample).
+    pub retransmit: bool,
+    /// Send timestamp for RTT sampling.
+    pub sent_at: super::event::SimTime,
+}
+
+impl Packet {
+    pub fn wire_bytes(&self) -> u32 {
+        self.payload + self.header
+    }
+
+    pub fn data(offset: u64, payload: u32, now: super::event::SimTime) -> Self {
+        Packet {
+            offset,
+            payload,
+            header: TCP_HEADER,
+            ack_no: 0,
+            retransmit: false,
+            sent_at: now,
+        }
+    }
+
+    pub fn ack(ack_no: u64, now: super::event::SimTime) -> Self {
+        Packet {
+            offset: 0,
+            payload: 0,
+            header: TCP_HEADER,
+            ack_no,
+            retransmit: false,
+            sent_at: now,
+        }
+    }
+
+    pub fn datagram(offset: u64, payload: u32,
+                    now: super::event::SimTime) -> Self {
+        Packet {
+            offset,
+            payload,
+            header: UDP_HEADER,
+            ack_no: 0,
+            retransmit: false,
+            sent_at: now,
+        }
+    }
+}
+
+/// Split a message of `len` bytes into (offset, payload) segments of at
+/// most `max_payload` each.
+pub fn segment(len: u64, max_payload: u32) -> Vec<(u64, u32)> {
+    assert!(max_payload > 0);
+    let mut out = Vec::with_capacity(len.div_ceil(max_payload as u64) as usize);
+    let mut off = 0u64;
+    while off < len {
+        let p = (len - off).min(max_payload as u64) as u32;
+        out.push((off, p));
+        off += p as u64;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_sizes() {
+        assert_eq!(TCP_MSS, 1460);
+        assert_eq!(UDP_MAX_PAYLOAD, 1472);
+    }
+
+    #[test]
+    fn segment_exact_multiple() {
+        let segs = segment(2920, TCP_MSS);
+        assert_eq!(segs, vec![(0, 1460), (1460, 1460)]);
+    }
+
+    #[test]
+    fn segment_remainder() {
+        let segs = segment(3000, TCP_MSS);
+        assert_eq!(segs, vec![(0, 1460), (1460, 1460), (2920, 80)]);
+    }
+
+    #[test]
+    fn segment_small_message() {
+        assert_eq!(segment(1, TCP_MSS), vec![(0, 1)]);
+        assert_eq!(segment(0, TCP_MSS), vec![]);
+    }
+
+    #[test]
+    fn segment_covers_every_byte_once() {
+        for len in [1u64, 7, 1460, 1461, 99_999] {
+            let segs = segment(len, TCP_MSS);
+            let total: u64 = segs.iter().map(|(_, p)| *p as u64).sum();
+            assert_eq!(total, len);
+            let mut expect = 0u64;
+            for (off, p) in segs {
+                assert_eq!(off, expect);
+                expect += p as u64;
+            }
+        }
+    }
+
+    #[test]
+    fn dir_flip() {
+        assert_eq!(Dir::Up.flip(), Dir::Down);
+        assert_eq!(Dir::Down.flip(), Dir::Up);
+    }
+
+    #[test]
+    fn wire_bytes() {
+        let p = Packet::data(0, 100, 0);
+        assert_eq!(p.wire_bytes(), 140);
+        let a = Packet::ack(5, 0);
+        assert_eq!(a.wire_bytes(), 40);
+    }
+}

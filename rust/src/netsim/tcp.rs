@@ -1,0 +1,543 @@
+//! TCP transport model (Reno-style) over the simulated full-duplex channel.
+//!
+//! Models the mechanisms that produce the paper's Fig. 3/4 latency
+//! behaviour under loss: cumulative ACKs, slow start + congestion
+//! avoidance, fast retransmit on three duplicate ACKs, retransmission
+//! timeout with exponential backoff and Karn's rule for RTT sampling.
+//! Reliability is exact: every payload byte is delivered exactly once, in
+//! order, for any saboteur rate < 1 (verified by property tests).
+//!
+//! Connection state (cwnd, ssthresh, sRTT, RTO) persists across messages of
+//! a persistent connection, matching a streaming frame-by-frame workload.
+
+use super::event::{EventQueue, SimTime};
+use super::link::Link;
+use super::packet::{segment, Packet};
+
+#[derive(Clone, Debug)]
+pub struct TcpConfig {
+    pub mss: u32,
+    /// Initial congestion window in segments (RFC 6928 default 10).
+    pub init_cwnd_segments: u32,
+    pub init_rto_ns: SimTime,
+    pub min_rto_ns: SimTime,
+    pub max_rto_ns: SimTime,
+    /// Duplicate-ACK threshold for fast retransmit.
+    pub dupack_threshold: u32,
+    /// Safety cap on simulator events per message (loss < 1 terminates
+    /// with probability 1; the cap converts a modelling bug into an error).
+    pub max_events: u64,
+}
+
+impl Default for TcpConfig {
+    fn default() -> Self {
+        TcpConfig {
+            mss: super::packet::TCP_MSS,
+            init_cwnd_segments: 10,
+            init_rto_ns: 50_000_000, // 50 ms before the first RTT sample
+            // 2 ms: LAN/datacenter-tuned minimum RTO, consistent with the
+            // simulated 100 µs-latency channel (srtt + 4·rttvar ≈ 1-2 ms).
+            // The Linux WAN default of 200 ms would make any single timeout
+            // blow a 50 ms frame budget and mask Fig. 3's gradual
+            // degradation.
+            min_rto_ns: 2_000_000,
+            // Backoff cap: 200 ms. On a LAN a multi-second RTO (the RFC
+            // 6298 60 s-class cap) is a pathological tail that would
+            // dominate every mean latency plot.
+            max_rto_ns: 200_000_000,
+            dupack_threshold: 3,
+            max_events: 50_000_000,
+        }
+    }
+}
+
+/// Congestion/RTT state that survives across messages on one connection.
+#[derive(Clone, Debug)]
+pub struct TcpState {
+    pub cwnd: f64,
+    pub ssthresh: f64,
+    pub srtt_ns: Option<f64>,
+    pub rttvar_ns: f64,
+    pub rto_ns: SimTime,
+}
+
+impl TcpState {
+    pub fn new(cfg: &TcpConfig) -> Self {
+        TcpState {
+            cwnd: (cfg.init_cwnd_segments * cfg.mss) as f64,
+            ssthresh: 1e18,
+            srtt_ns: None,
+            rttvar_ns: 0.0,
+            rto_ns: cfg.init_rto_ns,
+        }
+    }
+
+    /// Recompute RTO from the current estimator state (clears exponential
+    /// backoff once the connection is making forward progress again —
+    /// modern stacks do this via timestamps even when Karn's rule blocks
+    /// the RTT sample itself).
+    fn refresh_rto(&mut self, cfg: &TcpConfig) {
+        if let Some(srtt) = self.srtt_ns {
+            let rto = srtt + (4.0 * self.rttvar_ns).max(1e6);
+            self.rto_ns =
+                (rto as SimTime).clamp(cfg.min_rto_ns, cfg.max_rto_ns);
+        }
+    }
+
+    fn sample_rtt(&mut self, cfg: &TcpConfig, rtt_ns: f64) {
+        match self.srtt_ns {
+            None => {
+                self.srtt_ns = Some(rtt_ns);
+                self.rttvar_ns = rtt_ns / 2.0;
+            }
+            Some(srtt) => {
+                self.rttvar_ns =
+                    0.75 * self.rttvar_ns + 0.25 * (srtt - rtt_ns).abs();
+                self.srtt_ns = Some(0.875 * srtt + 0.125 * rtt_ns);
+            }
+        }
+        let rto = self.srtt_ns.unwrap() + (4.0 * self.rttvar_ns).max(1e6);
+        self.rto_ns =
+            (rto as SimTime).clamp(cfg.min_rto_ns, cfg.max_rto_ns);
+    }
+}
+
+/// Per-message statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TcpMessageStats {
+    pub segments: u64,
+    pub data_packets_sent: u64,
+    pub data_packets_lost: u64,
+    pub retransmits: u64,
+    pub fast_retransmits: u64,
+    pub timeouts: u64,
+    pub acks_sent: u64,
+    pub acks_lost: u64,
+    pub wire_bytes: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct TcpMessageResult {
+    /// Message handed to the stack -> receiver holds every byte.
+    pub delivery_latency_ns: SimTime,
+    /// Message handed to the stack -> sender saw everything acked.
+    pub ack_latency_ns: SimTime,
+    pub stats: TcpMessageStats,
+}
+
+enum Ev {
+    /// Data segment arrives at the receiver (seg index).
+    Data { seg: usize },
+    /// Cumulative ACK arrives back at the sender.
+    Ack { ack_no: u64 },
+    /// Retransmission timer (stale if epoch mismatches).
+    Rto { epoch: u64 },
+}
+
+struct SegInfo {
+    offset: u64,
+    payload: u32,
+    sent_at: SimTime,
+    retransmitted: bool,
+}
+
+/// Sends one application message reliably over (data_link, ack_link).
+/// `start` is the absolute simulated time the message is handed to TCP.
+pub fn send_message(
+    cfg: &TcpConfig,
+    state: &mut TcpState,
+    data_link: &mut Link,
+    ack_link: &mut Link,
+    len: u64,
+    start: SimTime,
+) -> Result<TcpMessageResult, String> {
+    assert!(len > 0, "empty message");
+    let segs: Vec<SegInfo> = segment(len, cfg.mss)
+        .into_iter()
+        .map(|(offset, payload)| SegInfo {
+            offset,
+            payload,
+            sent_at: 0,
+            retransmitted: false,
+        })
+        .collect();
+    let mut segs = segs;
+    let nseg = segs.len();
+
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    q.advance_to(start);
+
+    let mut st = TcpMessageStats { segments: nseg as u64, ..Default::default() };
+
+    // Sender state.
+    let mut snd_una: usize = 0; // first unacked segment index
+    let mut snd_nxt: usize = 0; // next never-sent segment index
+    let mut dup_acks: u32 = 0;
+    let mut recover: usize = 0; // fast-recovery high-water segment index
+    let mut in_recovery = false;
+    let mut rto_epoch: u64 = 0;
+
+    // Receiver state.
+    let mut received = vec![false; nseg];
+    let mut rcv_next: usize = 0; // first not-yet-in-order segment
+    let mut delivered_at: Option<SimTime> = None;
+
+    // Bytes in flight (snd_una..snd_nxt), maintained incrementally: the
+    // windowed sum was the simulator's hottest loop (O(window) per try_send
+    // step, O(window^2) per window) — see EXPERIMENTS.md §Perf.
+    let mut flight: u64 = 0;
+    let flight_bytes = |una: usize, nxt: usize, segs: &[SegInfo]| -> u64 {
+        segs[una..nxt].iter().map(|s| s.payload as u64).sum()
+    };
+
+    macro_rules! transmit {
+        ($q:expr, $seg:expr, $retx:expr) => {{
+            let now = $q.now();
+            let s = &mut segs[$seg];
+            s.sent_at = now;
+            if $retx {
+                s.retransmitted = true;
+                st.retransmits += 1;
+            }
+            let pkt = Packet::data(s.offset, s.payload, now);
+            let out = data_link.send(now, pkt.wire_bytes());
+            st.data_packets_sent += 1;
+            st.wire_bytes += pkt.wire_bytes() as u64;
+            if out.dropped {
+                st.data_packets_lost += 1;
+            } else {
+                $q.schedule(out.arrival, Ev::Data { seg: $seg });
+            }
+        }};
+    }
+
+    macro_rules! arm_rto {
+        ($q:expr) => {{
+            rto_epoch += 1;
+            $q.schedule_in(state.rto_ns, Ev::Rto { epoch: rto_epoch });
+        }};
+    }
+
+    macro_rules! try_send {
+        ($q:expr) => {{
+            while snd_nxt < nseg {
+                let payload = segs[snd_nxt].payload as u64;
+                if flight + payload > state.cwnd as u64 {
+                    break;
+                }
+                transmit!($q, snd_nxt, false);
+                snd_nxt += 1;
+                flight += payload;
+            }
+        }};
+    }
+
+    try_send!(q);
+    arm_rto!(q);
+
+    let mut events: u64 = 0;
+    while snd_una < nseg {
+        let Some((_, ev)) = q.pop() else {
+            return Err(format!(
+                "tcp deadlock: una={snd_una}/{nseg} nxt={snd_nxt} \
+                 cwnd={:.0}",
+                state.cwnd
+            ));
+        };
+        events += 1;
+        if events > cfg.max_events {
+            return Err("tcp event cap exceeded".into());
+        }
+        match ev {
+            Ev::Data { seg } => {
+                if !received[seg] {
+                    received[seg] = true;
+                    while rcv_next < nseg && received[rcv_next] {
+                        rcv_next += 1;
+                    }
+                    if rcv_next == nseg && delivered_at.is_none() {
+                        delivered_at = Some(q.now());
+                    }
+                }
+                // Cumulative ACK (ack number = bytes in order).
+                let ack_no = if rcv_next == nseg {
+                    len
+                } else {
+                    segs[rcv_next].offset
+                };
+                let ack = Packet::ack(ack_no, q.now());
+                let out = ack_link.send(q.now(), ack.wire_bytes());
+                st.acks_sent += 1;
+                st.wire_bytes += ack.wire_bytes() as u64;
+                if out.dropped {
+                    st.acks_lost += 1;
+                } else {
+                    q.schedule(out.arrival, Ev::Ack { ack_no });
+                }
+            }
+            Ev::Ack { ack_no } => {
+                let acked_to = segs
+                    .partition_point(|s| s.offset + s.payload as u64 <= ack_no);
+                if acked_to > snd_una {
+                    // New data acknowledged.
+                    let newest = &segs[acked_to - 1];
+                    if !newest.retransmitted {
+                        // Karn: sample only segments sent exactly once.
+                        state.sample_rtt(
+                            cfg,
+                            (q.now() - newest.sent_at) as f64,
+                        );
+                    }
+                    let newly: u64 =
+                        flight_bytes(snd_una, acked_to, &segs);
+                    debug_assert_eq!(
+                        flight,
+                        flight_bytes(snd_una, snd_nxt, &segs)
+                    );
+                    flight -= newly.min(flight);
+                    snd_una = acked_to;
+                    snd_nxt = snd_nxt.max(snd_una);
+                    dup_acks = 0;
+                    state.refresh_rto(cfg); // forward progress: clear backoff
+                    if in_recovery {
+                        if snd_una > recover || snd_una >= nseg {
+                            in_recovery = false;
+                            state.cwnd = state.ssthresh;
+                        } else {
+                            // NewReno partial ACK (RFC 6582): the segment
+                            // right after the ACK is also missing —
+                            // retransmit it now instead of waiting for an
+                            // RTO. Without this, every extra loss in a
+                            // window costs a full backed-off timeout and
+                            // latency explodes at percent-level loss.
+                            transmit!(q, snd_una, true);
+                            arm_rto!(q);
+                        }
+                    }
+                    if !in_recovery {
+                        if state.cwnd < state.ssthresh {
+                            state.cwnd += newly as f64; // slow start
+                        } else {
+                            state.cwnd += (cfg.mss as f64)
+                                * (cfg.mss as f64)
+                                / state.cwnd; // congestion avoidance
+                        }
+                    }
+                    if snd_una < nseg {
+                        arm_rto!(q);
+                    }
+                    try_send!(q);
+                } else if snd_una < nseg {
+                    dup_acks += 1;
+                    if in_recovery {
+                        // NewReno-ish: inflate to keep the pipe full.
+                        state.cwnd += cfg.mss as f64;
+                        // If the recovery retransmission itself was lost,
+                        // dup ACKs keep arriving with no partial ACK to
+                        // repair it; re-retransmit every threshold dupACKs
+                        // (RACK-style robustness) instead of stalling into
+                        // a backed-off RTO.
+                        if dup_acks % (2 * cfg.dupack_threshold) == 0 {
+                            transmit!(q, snd_una, true);
+                            arm_rto!(q);
+                        }
+                        try_send!(q);
+                    } else if {
+                        // Early retransmit (RFC 5827): with fewer than 4
+                        // segments in flight there can never be 3 dupACKs;
+                        // lower the threshold so small-window losses are
+                        // repaired without a timeout. Essential once heavy
+                        // loss has collapsed cwnd to a couple of segments.
+                        let flight_segs = snd_nxt - snd_una;
+                        let thr = if flight_segs < 4 {
+                            (flight_segs.saturating_sub(1)).max(1) as u32
+                        } else {
+                            cfg.dupack_threshold
+                        };
+                        dup_acks == thr
+                    } {
+                        // Fast retransmit + fast recovery.
+                        state.ssthresh = (flight as f64 / 2.0)
+                            .max((2 * cfg.mss) as f64);
+                        state.cwnd = state.ssthresh
+                            + (cfg.dupack_threshold * cfg.mss) as f64;
+                        in_recovery = true;
+                        recover = snd_nxt;
+                        st.fast_retransmits += 1;
+                        transmit!(q, snd_una, true);
+                        arm_rto!(q);
+                    }
+                }
+            }
+            Ev::Rto { epoch } => {
+                if epoch != rto_epoch || snd_una >= nseg {
+                    continue; // stale timer
+                }
+                st.timeouts += 1;
+                state.ssthresh =
+                    (flight as f64 / 2.0).max((2 * cfg.mss) as f64);
+                state.cwnd = cfg.mss as f64;
+                state.rto_ns = (state.rto_ns * 2).min(cfg.max_rto_ns);
+                // Enter NewReno-style recovery for the whole outstanding
+                // flight so the remaining holes are repaired one-per-RTT by
+                // partial ACKs rather than by a chain of backed-off RTOs.
+                in_recovery = true;
+                recover = snd_nxt;
+                dup_acks = 0;
+                transmit!(q, snd_una, true);
+                arm_rto!(q);
+            }
+        }
+    }
+
+    let delivered = delivered_at.ok_or("acked before delivered?")?;
+    Ok(TcpMessageResult {
+        delivery_latency_ns: delivered - start,
+        ack_latency_ns: q.now() - start,
+        stats: st,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::link::LinkConfig;
+    use crate::util::rng::Rng;
+
+    fn links(loss: f64, seed: u64) -> (Link, Link) {
+        let cfg = LinkConfig::basic(100_000, 1e9, loss);
+        let mut rng = Rng::new(seed);
+        (
+            Link::new(cfg.clone(), rng.fork()),
+            Link::new(cfg, rng.fork()),
+        )
+    }
+
+    fn send(len: u64, loss: f64, seed: u64) -> TcpMessageResult {
+        let cfg = TcpConfig::default();
+        let mut state = TcpState::new(&cfg);
+        let (mut d, mut a) = links(loss, seed);
+        send_message(&cfg, &mut state, &mut d, &mut a, len, 0).unwrap()
+    }
+
+    #[test]
+    fn lossless_single_segment() {
+        let r = send(1000, 0.0, 0);
+        assert_eq!(r.stats.data_packets_sent, 1);
+        assert_eq!(r.stats.retransmits, 0);
+        // serialization (1040 B @1Gb/s = 8.32 µs) + 100 µs propagation
+        assert_eq!(r.delivery_latency_ns, 108_320);
+        // + ACK: 0.32 µs serialization + 100 µs back
+        assert_eq!(r.ack_latency_ns, 208_640);
+    }
+
+    #[test]
+    fn lossless_large_message_no_retx() {
+        let r = send(800_000, 0.0, 1);
+        assert_eq!(r.stats.retransmits, 0);
+        assert_eq!(r.stats.timeouts, 0);
+        assert_eq!(r.stats.segments, 548);
+        // Must beat naive one-packet-per-RTT by far (pipelining works).
+        assert!(r.delivery_latency_ns < 20_000_000, "{r:?}");
+        // And cannot beat pure serialization of all wire bytes.
+        let min_ns = (800_000.0 * 8.0 / 1e9 * 1e9) as u64;
+        assert!(r.delivery_latency_ns > min_ns);
+    }
+
+    #[test]
+    fn slow_start_grows_cwnd() {
+        let cfg = TcpConfig::default();
+        let mut state = TcpState::new(&cfg);
+        let (mut d, mut a) = links(0.0, 2);
+        let before = state.cwnd;
+        send_message(&cfg, &mut state, &mut d, &mut a, 500_000, 0).unwrap();
+        assert!(state.cwnd > before);
+        assert!(state.srtt_ns.is_some());
+    }
+
+    #[test]
+    fn lossy_delivery_is_reliable() {
+        for seed in 0..20 {
+            let r = send(100_000, 0.05, seed);
+            assert!(r.stats.data_packets_lost > 0 || seed > 15);
+            assert!(r.delivery_latency_ns > 0);
+        }
+    }
+
+    #[test]
+    fn loss_increases_latency_on_average() {
+        let avg = |loss: f64| -> f64 {
+            (0..24)
+                .map(|s| send(200_000, loss, 100 + s).delivery_latency_ns as f64)
+                .sum::<f64>()
+                / 24.0
+        };
+        let l0 = avg(0.0);
+        let l5 = avg(0.05);
+        assert!(l5 > l0 * 1.2, "l0={l0} l5={l5}");
+    }
+
+    #[test]
+    fn retransmissions_recover_losses() {
+        let r = send(300_000, 0.08, 3);
+        assert!(r.stats.retransmits >= r.stats.data_packets_lost.min(1));
+        assert!(
+            r.stats.fast_retransmits + r.stats.timeouts > 0,
+            "{:?}",
+            r.stats
+        );
+    }
+
+    #[test]
+    fn rto_backoff_caps() {
+        let cfg = TcpConfig::default();
+        let mut s = TcpState::new(&cfg);
+        s.rto_ns = cfg.max_rto_ns;
+        s.sample_rtt(&cfg, 1e14);
+        assert!(s.rto_ns <= cfg.max_rto_ns);
+    }
+
+    #[test]
+    fn rtt_estimator_converges() {
+        let cfg = TcpConfig::default();
+        let mut s = TcpState::new(&cfg);
+        for _ in 0..50 {
+            s.sample_rtt(&cfg, 2_000_000.0); // 2 ms RTT
+        }
+        assert!((s.srtt_ns.unwrap() - 2e6).abs() < 1e4);
+        // rto -> srtt + max(4*var, 1ms) ~ 3 ms once variance decays
+        assert!(s.rto_ns >= cfg.min_rto_ns && s.rto_ns < 3_200_000,
+                "{}", s.rto_ns);
+        // and a tiny-RTT link clamps at the floor
+        let mut s2 = TcpState::new(&cfg);
+        for _ in 0..50 {
+            s2.sample_rtt(&cfg, 200_000.0); // 0.2 ms RTT
+        }
+        assert_eq!(s2.rto_ns, cfg.min_rto_ns);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = send(123_456, 0.03, 9);
+        let b = send(123_456, 0.03, 9);
+        assert_eq!(a.delivery_latency_ns, b.delivery_latency_ns);
+        assert_eq!(a.stats.retransmits, b.stats.retransmits);
+    }
+
+    #[test]
+    fn persistent_state_speeds_up_second_message() {
+        let cfg = TcpConfig::default();
+        let mut state = TcpState::new(&cfg);
+        let (mut d, mut a) = links(0.0, 4);
+        let first =
+            send_message(&cfg, &mut state, &mut d, &mut a, 400_000, 0)
+                .unwrap();
+        let t1 = first.ack_latency_ns;
+        let second = send_message(
+            &cfg, &mut state, &mut d, &mut a, 400_000, t1,
+        )
+        .unwrap();
+        // cwnd is warm: the second message needs fewer RTT rounds.
+        assert!(second.delivery_latency_ns <= first.delivery_latency_ns);
+    }
+}

@@ -1,0 +1,287 @@
+//! Channel: the full-duplex link pair + persistent transport state, with a
+//! message-level API the scenario engine drives (XMTR/RCVR in the paper's
+//! architecture).
+
+use anyhow::{anyhow, Result};
+
+use super::event::SimTime;
+use super::link::{Link, LinkConfig, LinkStats, LossModel};
+use super::packet::Dir;
+use super::tcp::{self, TcpConfig, TcpMessageResult, TcpState};
+use super::udp::{self, UdpConfig, UdpMessageResult};
+use crate::util::rng::Rng;
+
+/// Transport layer protocol (paper Sec. IV, input 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Protocol {
+    Tcp,
+    Udp,
+}
+
+impl Protocol {
+    pub fn parse(s: &str) -> Result<Protocol> {
+        match s.to_ascii_lowercase().as_str() {
+            "tcp" => Ok(Protocol::Tcp),
+            "udp" => Ok(Protocol::Udp),
+            _ => Err(anyhow!("unknown protocol '{s}' (tcp|udp)")),
+        }
+    }
+}
+
+impl std::fmt::Display for Protocol {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Protocol::Tcp => "TCP",
+            Protocol::Udp => "UDP",
+        })
+    }
+}
+
+/// The five network-modeling inputs of the paper's simulator (Sec. IV).
+#[derive(Clone, Debug)]
+pub struct NetworkConfig {
+    pub protocol: Protocol,
+    /// Channel latency (propagation), ns. Paper example: 100 µs.
+    pub latency_ns: SimTime,
+    /// Channel capacity, bits/s.
+    pub capacity_bps: f64,
+    /// Interface speed, bits/s (1000 Mb/s GbE, 100 Mb/s FE, 160 Mb/s Wi-Fi).
+    pub interface_bps: f64,
+    /// Saboteur loss rate in [0, 1).
+    pub loss_rate: f64,
+    /// Loss distribution (i.i.d. saboteur or Gilbert-Elliott bursts).
+    pub loss_model: LossModel,
+    /// Per-packet propagation jitter bound, ns.
+    pub jitter_ns: SimTime,
+    pub tcp: TcpConfig,
+    pub udp: UdpConfig,
+    pub seed: u64,
+}
+
+impl NetworkConfig {
+    /// The paper's evaluation channel: 1 Gigabit full-duplex, 100 µs.
+    pub fn gigabit(protocol: Protocol, loss_rate: f64, seed: u64) -> Self {
+        NetworkConfig {
+            protocol,
+            latency_ns: 100_000,
+            capacity_bps: 1e9,
+            interface_bps: 1e9,
+            loss_rate,
+            loss_model: LossModel::Iid,
+            jitter_ns: 0,
+            tcp: TcpConfig::default(),
+            udp: UdpConfig::default(),
+            seed,
+        }
+    }
+
+    pub fn fast_ethernet(protocol: Protocol, loss_rate: f64, seed: u64) -> Self {
+        let mut c = Self::gigabit(protocol, loss_rate, seed);
+        c.capacity_bps = 1e8;
+        c.interface_bps = 1e8;
+        c
+    }
+
+    pub fn wifi(protocol: Protocol, loss_rate: f64, seed: u64) -> Self {
+        let mut c = Self::gigabit(protocol, loss_rate, seed);
+        c.capacity_bps = 16e7;
+        c.interface_bps = 16e7;
+        c.latency_ns = 2_000_000; // 2 ms
+        c
+    }
+
+    fn link_config(&self) -> LinkConfig {
+        LinkConfig {
+            latency_ns: self.latency_ns,
+            capacity_bps: self.capacity_bps,
+            interface_bps: self.interface_bps,
+            loss_rate: self.loss_rate,
+            loss_model: self.loss_model,
+            jitter_ns: self.jitter_ns,
+        }
+    }
+}
+
+/// Result of one application-message transfer.
+#[derive(Clone, Debug)]
+pub enum TransferResult {
+    Tcp(TcpMessageResult),
+    Udp(UdpMessageResult),
+}
+
+impl TransferResult {
+    /// Latency until the receiver considers the message complete.
+    pub fn latency_ns(&self) -> SimTime {
+        match self {
+            TransferResult::Tcp(r) => r.delivery_latency_ns,
+            TransferResult::Udp(r) => r.latency_ns,
+        }
+    }
+
+    /// Byte ranges lost in flight (empty for TCP — reliable delivery).
+    pub fn lost_ranges(&self) -> &[(u64, u32)] {
+        match self {
+            TransferResult::Tcp(_) => &[],
+            TransferResult::Udp(r) => &r.lost_ranges,
+        }
+    }
+
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            TransferResult::Tcp(r) => r.stats.wire_bytes,
+            TransferResult::Udp(r) => r.stats.wire_bytes,
+        }
+    }
+
+    pub fn retransmits(&self) -> u64 {
+        match self {
+            TransferResult::Tcp(r) => r.stats.retransmits,
+            TransferResult::Udp(_) => 0,
+        }
+    }
+}
+
+/// Full-duplex channel with persistent per-direction transport state.
+pub struct Channel {
+    pub cfg: NetworkConfig,
+    up: Link,
+    down: Link,
+    tcp_up: TcpState,
+    tcp_down: TcpState,
+    now: SimTime,
+    transfers: u64,
+}
+
+impl Channel {
+    pub fn new(cfg: NetworkConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let lcfg = cfg.link_config();
+        Channel {
+            tcp_up: TcpState::new(&cfg.tcp),
+            tcp_down: TcpState::new(&cfg.tcp),
+            cfg,
+            up: Link::new(lcfg.clone(), rng.fork()),
+            down: Link::new(lcfg, rng.fork()),
+            now: 0,
+            transfers: 0,
+        }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn transfers(&self) -> u64 {
+        self.transfers
+    }
+
+    /// Advance the channel clock to absolute time `t` (inter-frame gaps).
+    pub fn advance_to(&mut self, t: SimTime) {
+        self.now = self.now.max(t);
+    }
+
+    /// Send `len` bytes in `dir` starting no earlier than the channel's
+    /// current time; advances the channel clock past the transfer.
+    pub fn send(&mut self, dir: Dir, len: u64) -> Result<TransferResult> {
+        let start = self.now;
+        self.transfers += 1;
+        let r = match self.cfg.protocol {
+            Protocol::Tcp => {
+                let (data, ack, state) = match dir {
+                    Dir::Up => {
+                        (&mut self.up, &mut self.down, &mut self.tcp_up)
+                    }
+                    Dir::Down => {
+                        (&mut self.down, &mut self.up, &mut self.tcp_down)
+                    }
+                };
+                let res = tcp::send_message(
+                    &self.cfg.tcp, state, data, ack, len, start,
+                )
+                .map_err(|e| anyhow!(e))?;
+                self.now = start + res.ack_latency_ns;
+                TransferResult::Tcp(res)
+            }
+            Protocol::Udp => {
+                let link = match dir {
+                    Dir::Up => &mut self.up,
+                    Dir::Down => &mut self.down,
+                };
+                let res = udp::send_message(&self.cfg.udp, link, len, start);
+                self.now = start + res.latency_ns;
+                TransferResult::Udp(res)
+            }
+        };
+        Ok(r)
+    }
+
+    pub fn link_stats(&self, dir: Dir) -> LinkStats {
+        match dir {
+            Dir::Up => self.up.stats,
+            Dir::Down => self.down.stats,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn protocol_parse() {
+        assert_eq!(Protocol::parse("tcp").unwrap(), Protocol::Tcp);
+        assert_eq!(Protocol::parse("UDP").unwrap(), Protocol::Udp);
+        assert!(Protocol::parse("sctp").is_err());
+    }
+
+    #[test]
+    fn tcp_channel_sends_reliably() {
+        let mut ch = Channel::new(NetworkConfig::gigabit(
+            Protocol::Tcp, 0.05, 42,
+        ));
+        let r = ch.send(Dir::Up, 100_000).unwrap();
+        assert!(r.lost_ranges().is_empty());
+        assert!(r.latency_ns() > 0);
+        assert!(ch.now() > 0);
+    }
+
+    #[test]
+    fn udp_channel_reports_losses() {
+        let mut ch = Channel::new(NetworkConfig::gigabit(
+            Protocol::Udp, 0.3, 42,
+        ));
+        let r = ch.send(Dir::Up, 1_000_000).unwrap();
+        assert!(!r.lost_ranges().is_empty());
+    }
+
+    #[test]
+    fn directions_have_independent_streams() {
+        let mut ch = Channel::new(NetworkConfig::gigabit(
+            Protocol::Udp, 0.2, 7,
+        ));
+        let up = ch.send(Dir::Up, 500_000).unwrap();
+        let down = ch.send(Dir::Down, 500_000).unwrap();
+        assert_ne!(up.lost_ranges(), down.lost_ranges());
+    }
+
+    #[test]
+    fn clock_advances_across_transfers() {
+        let mut ch = Channel::new(NetworkConfig::gigabit(
+            Protocol::Tcp, 0.0, 1,
+        ));
+        ch.send(Dir::Up, 10_000).unwrap();
+        let t1 = ch.now();
+        ch.advance_to(t1 + 1_000_000);
+        ch.send(Dir::Up, 10_000).unwrap();
+        assert!(ch.now() >= t1 + 1_000_000);
+    }
+
+    #[test]
+    fn presets_differ() {
+        let g = NetworkConfig::gigabit(Protocol::Tcp, 0.0, 0);
+        let f = NetworkConfig::fast_ethernet(Protocol::Tcp, 0.0, 0);
+        let w = NetworkConfig::wifi(Protocol::Tcp, 0.0, 0);
+        assert!(g.capacity_bps > f.capacity_bps);
+        assert!(w.latency_ns > g.latency_ns);
+    }
+}

@@ -1,0 +1,149 @@
+//! UDP transport model: fire-and-forget datagrams.
+//!
+//! No error checking or recovery (paper Sec. V-C): latency is loss-rate
+//! independent, but lost datagrams leave holes in the received message —
+//! the coordinator maps those holes onto tensor corruption and measures the
+//! accuracy impact (Fig. 4-left).
+
+use super::event::SimTime;
+use super::link::Link;
+use super::packet::{segment, Packet, UDP_MAX_PAYLOAD};
+
+#[derive(Clone, Debug)]
+pub struct UdpConfig {
+    pub max_payload: u32,
+}
+
+impl Default for UdpConfig {
+    fn default() -> Self {
+        UdpConfig { max_payload: UDP_MAX_PAYLOAD }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UdpMessageStats {
+    pub datagrams_sent: u64,
+    pub datagrams_lost: u64,
+    pub wire_bytes: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct UdpMessageResult {
+    /// Time from hand-off until the last datagram's nominal arrival slot:
+    /// the receiver's frame deadline. Independent of the saboteur.
+    pub latency_ns: SimTime,
+    /// Byte ranges (offset, len) of the message that never arrived.
+    pub lost_ranges: Vec<(u64, u32)>,
+    pub stats: UdpMessageStats,
+}
+
+impl UdpMessageResult {
+    pub fn lost_bytes(&self) -> u64 {
+        self.lost_ranges.iter().map(|(_, l)| *l as u64).sum()
+    }
+
+    pub fn delivered_fraction(&self, len: u64) -> f64 {
+        1.0 - self.lost_bytes() as f64 / len as f64
+    }
+}
+
+/// Send one message as a burst of datagrams at absolute time `start`.
+pub fn send_message(
+    cfg: &UdpConfig,
+    link: &mut Link,
+    len: u64,
+    start: SimTime,
+) -> UdpMessageResult {
+    assert!(len > 0, "empty message");
+    let mut stats = UdpMessageStats::default();
+    let mut lost = Vec::new();
+    let mut last_arrival = start;
+    for (offset, payload) in segment(len, cfg.max_payload) {
+        let pkt = Packet::datagram(offset, payload, start);
+        let out = link.send(start, pkt.wire_bytes());
+        stats.datagrams_sent += 1;
+        stats.wire_bytes += pkt.wire_bytes() as u64;
+        last_arrival = last_arrival.max(out.arrival);
+        if out.dropped {
+            stats.datagrams_lost += 1;
+            lost.push((offset, payload));
+        }
+    }
+    UdpMessageResult {
+        latency_ns: last_arrival - start,
+        lost_ranges: lost,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::link::LinkConfig;
+    use crate::util::rng::Rng;
+
+    fn link(loss: f64, seed: u64) -> Link {
+        Link::new(
+            LinkConfig::basic(100_000, 1e9, loss),
+            Rng::new(seed),
+        )
+    }
+
+    #[test]
+    fn lossless_delivers_everything() {
+        let r = send_message(&UdpConfig::default(), &mut link(0.0, 0),
+                             50_000, 0);
+        assert!(r.lost_ranges.is_empty());
+        assert_eq!(r.delivered_fraction(50_000), 1.0);
+        assert_eq!(r.stats.datagrams_sent, 34);
+    }
+
+    #[test]
+    fn latency_is_serialization_plus_propagation() {
+        // one datagram: 1028 B wire @ 1 Gb/s = 8.224 µs + 100 µs
+        let r = send_message(&UdpConfig::default(), &mut link(0.0, 0),
+                             1000, 0);
+        assert_eq!(r.latency_ns, 108_224);
+    }
+
+    #[test]
+    fn latency_independent_of_loss() {
+        let l0 = send_message(&UdpConfig::default(), &mut link(0.0, 1),
+                              100_000, 0).latency_ns;
+        let l30 = send_message(&UdpConfig::default(), &mut link(0.3, 1),
+                               100_000, 0).latency_ns;
+        assert_eq!(l0, l30);
+    }
+
+    #[test]
+    fn loss_fraction_tracks_saboteur() {
+        let len = 2_000_000u64;
+        let r = send_message(&UdpConfig::default(), &mut link(0.1, 2),
+                             len, 0);
+        let f = r.delivered_fraction(len);
+        assert!((f - 0.9).abs() < 0.03, "{f}");
+    }
+
+    #[test]
+    fn lost_ranges_are_within_message() {
+        let len = 500_000u64;
+        let r = send_message(&UdpConfig::default(), &mut link(0.5, 3),
+                             len, 0);
+        for (off, l) in &r.lost_ranges {
+            assert!(off + *l as u64 <= len);
+        }
+        assert_eq!(
+            r.lost_bytes(),
+            r.lost_ranges.iter().map(|(_, l)| *l as u64).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = send_message(&UdpConfig::default(), &mut link(0.2, 4),
+                             300_000, 0);
+        let b = send_message(&UdpConfig::default(), &mut link(0.2, 4),
+                             300_000, 0);
+        assert_eq!(a.lost_ranges, b.lost_ranges);
+    }
+}

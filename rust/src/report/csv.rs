@@ -1,0 +1,80 @@
+//! Tiny CSV writer for the bench outputs (plot-ready series).
+
+use std::fmt::Write as _;
+
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Csv {
+        Csv {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "csv row width");
+        self.rows.push(cells);
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let esc = |c: &str| -> String {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(
+            out,
+            "{}",
+            self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    pub fn write(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_rows() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(vec!["1".into(), "2".into()]);
+        assert_eq!(c.to_string(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn escapes_commas_and_quotes() {
+        let mut c = Csv::new(&["x"]);
+        c.row(vec!["a,b\"c".into()]);
+        assert_eq!(c.to_string(), "x\n\"a,b\"\"c\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_ragged() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(vec!["1".into()]);
+    }
+}

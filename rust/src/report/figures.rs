@@ -1,0 +1,182 @@
+//! Renderers for the paper's three figures. The benches compute the data
+//! series; these functions format them the way the paper presents them
+//! (plus CSV for external plotting).
+
+use crate::util::table::{ascii_plot, render};
+
+/// Fig. 2: CS curve vs per-layer split accuracy.
+/// `rows`: (layer index, name, is_pool, cs_norm, split_accuracy or NaN).
+pub fn fig2_report(rows: &[(usize, String, bool, f64, f64)]) -> String {
+    let xs: Vec<f64> = rows.iter().map(|r| r.0 as f64).collect();
+    let cs: Vec<f64> = rows.iter().map(|r| r.3).collect();
+    let acc: Vec<f64> = rows
+        .iter()
+        .map(|r| if r.4.is_nan() { 0.0 } else { r.4 })
+        .collect();
+    let mut out = String::from(
+        "Fig. 2 — Cumulative Saliency vs split accuracy per layer\n\n",
+    );
+    out.push_str(&ascii_plot(
+        "normalized CS (*) and split accuracy (o) vs feature layer",
+        "feature layer index (0..17)",
+        &xs,
+        &[("CS (normalized)", cs), ("split accuracy", acc)],
+        12,
+    ));
+    out.push('\n');
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(i, name, pool, cs, acc)| {
+            vec![
+                format!("{i}{}", if *pool { " (*)" } else { "" }),
+                name.clone(),
+                format!("{cs:.4}"),
+                if acc.is_nan() {
+                    "—".to_string()
+                } else {
+                    format!("{:.3}", acc)
+                },
+            ]
+        })
+        .collect();
+    out.push_str(&render(
+        &["layer", "name", "CS (norm)", "split accuracy"],
+        &table_rows,
+    ));
+    out
+}
+
+/// Fig. 3: SC latency vs loss rate for two split points + constraint line.
+pub fn fig3_report(
+    loss_rates: &[f64],
+    series: &[(String, Vec<f64>)],
+    constraint_s: f64,
+) -> String {
+    let mut out = String::from(
+        "Fig. 3 — split-point selection under packet loss (TCP, 1 Gb/s FD)\n\n",
+    );
+    let mut plot_series: Vec<(&str, Vec<f64>)> = series
+        .iter()
+        .map(|(n, v)| (n.as_str(), v.clone()))
+        .collect();
+    let constraint = vec![constraint_s; loss_rates.len()];
+    plot_series.push(("constraint", constraint));
+    out.push_str(&ascii_plot(
+        "mean frame latency [s] vs packet loss rate",
+        "packet loss rate",
+        loss_rates,
+        &plot_series,
+        14,
+    ));
+    out.push('\n');
+    let mut header = vec!["loss".to_string()];
+    header.extend(series.iter().map(|(n, _)| n.clone()));
+    header.push(format!("constraint {constraint_s:.3} s"));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let rows: Vec<Vec<String>> = loss_rates
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let mut r = vec![format!("{:.0}%", l * 100.0)];
+            for (_, v) in series {
+                r.push(format!("{:.4} s", v[i]));
+            }
+            let worst = series
+                .iter()
+                .map(|(_, v)| v[i])
+                .fold(f64::NEG_INFINITY, f64::max);
+            r.push(if worst <= constraint_s { "ok" } else { "VIOLATED" }
+                .to_string());
+            r
+        })
+        .collect();
+    out.push_str(&render(&header_refs, &rows));
+    out
+}
+
+/// Fig. 4: RC accuracy (left) and latency (right) vs loss, TCP vs UDP.
+pub fn fig4_report(
+    loss_rates: &[f64],
+    tcp_acc: &[f64],
+    udp_acc: &[f64],
+    tcp_lat: &[f64],
+    udp_lat: &[f64],
+) -> String {
+    let mut out = String::from(
+        "Fig. 4 — protocol selection in the RC scenario (1 Gb/s FD)\n\n",
+    );
+    out.push_str(&ascii_plot(
+        "LEFT: accuracy vs loss rate",
+        "packet loss rate",
+        loss_rates,
+        &[("TCP", tcp_acc.to_vec()), ("UDP", udp_acc.to_vec())],
+        10,
+    ));
+    out.push('\n');
+    out.push_str(&ascii_plot(
+        "RIGHT: mean latency [s] vs loss rate",
+        "packet loss rate",
+        loss_rates,
+        &[("TCP", tcp_lat.to_vec()), ("UDP", udp_lat.to_vec())],
+        10,
+    ));
+    out.push('\n');
+    let rows: Vec<Vec<String>> = loss_rates
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            vec![
+                format!("{:.0}%", l * 100.0),
+                format!("{:.3}", tcp_acc[i]),
+                format!("{:.3}", udp_acc[i]),
+                format!("{:.5} s", tcp_lat[i]),
+                format!("{:.5} s", udp_lat[i]),
+            ]
+        })
+        .collect();
+    out.push_str(&render(
+        &["loss", "TCP acc", "UDP acc", "TCP latency", "UDP latency"],
+        &rows,
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_renders() {
+        let rows = vec![
+            (0, "block1_conv1".to_string(), false, 0.1, 0.5),
+            (2, "block1_pool".to_string(), true, 0.4, f64::NAN),
+        ];
+        let r = fig2_report(&rows);
+        assert!(r.contains("block1_pool") && r.contains("(*)"));
+        assert!(r.contains("—"));
+    }
+
+    #[test]
+    fn fig3_flags_violations() {
+        let r = fig3_report(
+            &[0.0, 0.05],
+            &[("SC@L11".to_string(), vec![0.01, 0.09])],
+            0.05,
+        );
+        assert!(r.contains("ok"));
+        assert!(r.contains("VIOLATED"));
+    }
+
+    #[test]
+    fn fig4_renders_both_panels() {
+        let r = fig4_report(
+            &[0.0, 0.1],
+            &[0.97, 0.97],
+            &[0.97, 0.5],
+            &[0.001, 0.01],
+            &[0.001, 0.001],
+        );
+        assert!(r.contains("LEFT") && r.contains("RIGHT"));
+        assert!(r.contains("TCP acc"));
+    }
+}

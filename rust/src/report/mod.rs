@@ -1,0 +1,7 @@
+//! Report generators: render the paper's figures/tables as aligned text +
+//! ASCII plots, and emit machine-readable CSV/JSON next to them.
+
+pub mod csv;
+pub mod figures;
+
+pub use figures::{fig2_report, fig3_report, fig4_report};

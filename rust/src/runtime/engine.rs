@@ -1,0 +1,274 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them on the
+//! CPU PJRT client, pre-builds weight literals, and runs them from the L3
+//! hot path. Python never executes here.
+//!
+//! Performance notes (see EXPERIMENTS.md §Perf):
+//!   * executables are compiled once and cached by name;
+//!   * weight literals are built once per executable at load time, and the
+//!     per-call argument vector borrows them (`execute` takes
+//!     `Borrow<Literal>`), so a hot-path inference allocates only the input
+//!     literal;
+//!   * wall-clock execution time is tracked per executable for profiling.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ExecSpec, Manifest};
+use crate::tensor::Tensor;
+
+/// A runtime input value (model input or Grad-CAM label vector).
+pub enum RtInput<'a> {
+    F32(&'a Tensor),
+    I32(&'a [i32]),
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecCounters {
+    pub calls: u64,
+    pub total_exec_ns: u64,
+    pub compile_ns: u64,
+}
+
+/// One compiled artifact with its pre-built weight literals.
+pub struct LoadedExec {
+    pub spec: ExecSpec,
+    exe: xla::PjRtLoadedExecutable,
+    weights: Vec<xla::Literal>,
+    counters: RefCell<ExecCounters>,
+}
+
+fn f32_literal(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("literal shape {shape:?} wants {n} values, got {}", data.len());
+    }
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )
+    .map_err(|e| anyhow!("building f32 literal: {e:?}"))
+}
+
+fn i32_literal(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("literal shape {shape:?} wants {n} values, got {}", data.len());
+    }
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        shape,
+        bytes,
+    )
+    .map_err(|e| anyhow!("building i32 literal: {e:?}"))
+}
+
+impl LoadedExec {
+    /// Execute with the given inputs (weights appended automatically).
+    /// Returns the single output tensor (all our artifacts are lowered with
+    /// `return_tuple=True` and one result).
+    pub fn run(&self, inputs: &[RtInput]) -> Result<Tensor> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut args: Vec<xla::Literal> =
+            Vec::with_capacity(inputs.len());
+        for (spec, input) in self.spec.inputs.iter().zip(inputs) {
+            let lit = match (input, spec.dtype.as_str()) {
+                (RtInput::F32(t), "float32") => {
+                    if t.shape() != spec.shape.as_slice() {
+                        bail!(
+                            "{}: input '{}' shape {:?} != expected {:?}",
+                            self.spec.name, spec.name, t.shape(), spec.shape
+                        );
+                    }
+                    f32_literal(t.shape(), t.data())?
+                }
+                (RtInput::I32(v), "int32") => i32_literal(&spec.shape, v)?,
+                (_, dt) => bail!(
+                    "{}: input '{}' dtype mismatch (artifact wants {dt})",
+                    self.spec.name, spec.name
+                ),
+            };
+            args.push(lit);
+        }
+        // Borrowed arg vector: inputs by value, weights by reference.
+        let mut borrowed: Vec<&xla::Literal> =
+            Vec::with_capacity(args.len() + self.weights.len());
+        borrowed.extend(args.iter());
+        borrowed.extend(self.weights.iter());
+
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&borrowed)
+            .map_err(|e| anyhow!("{}: execute: {e:?}", self.spec.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: readback: {e:?}", self.spec.name))?;
+        let elapsed = t0.elapsed().as_nanos() as u64;
+        {
+            let mut c = self.counters.borrow_mut();
+            c.calls += 1;
+            c.total_exec_ns += elapsed;
+        }
+        let out = out
+            .to_tuple1()
+            .map_err(|e| anyhow!("{}: untuple: {e:?}", self.spec.name))?;
+        let values = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{}: to_vec: {e:?}", self.spec.name))?;
+        let shape = self.spec.outputs[0].shape.clone();
+        Tensor::new(shape, values)
+    }
+
+    pub fn counters(&self) -> ExecCounters {
+        *self.counters.borrow()
+    }
+
+    /// Mean wall time per call, ns.
+    pub fn mean_exec_ns(&self) -> f64 {
+        let c = self.counters.borrow();
+        if c.calls == 0 {
+            0.0
+        } else {
+            c.total_exec_ns as f64 / c.calls as f64
+        }
+    }
+}
+
+/// Artifact registry + PJRT client + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<LoadedExec>>>,
+    /// Weight files are shared between executables of the same weight set;
+    /// cache the raw vectors to avoid re-reading.
+    weight_files: RefCell<HashMap<String, Rc<Vec<f32>>>>,
+}
+
+impl Engine {
+    /// Load the manifest and start the PJRT CPU client.
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("starting PJRT CPU client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            dir: artifacts_dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+            weight_files: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn weight_data(&self, file: &str) -> Result<Rc<Vec<f32>>> {
+        if let Some(w) = self.weight_files.borrow().get(file) {
+            return Ok(w.clone());
+        }
+        let data = crate::data::read_f32_file(&self.dir.join(file))?;
+        let rc = Rc::new(data);
+        self.weight_files
+            .borrow_mut()
+            .insert(file.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Get (compiling and caching on first use) an executable by name.
+    pub fn executable(&self, name: &str) -> Result<Rc<LoadedExec>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.executable(name)?.clone();
+        let hlo_path = self.dir.join(&spec.hlo);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .map_err(|e| {
+                anyhow!("parsing {}: {e:?}", hlo_path.display())
+            })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let mut weights = Vec::with_capacity(spec.weights.len());
+        for w in &spec.weights {
+            let data = self.weight_data(&w.file)?;
+            weights.push(
+                f32_literal(&w.shape, &data)
+                    .with_context(|| format!("weight {}", w.name))?,
+            );
+        }
+        let loaded = Rc::new(LoadedExec {
+            spec,
+            exe,
+            weights,
+            counters: RefCell::new(ExecCounters {
+                compile_ns: t0.elapsed().as_nanos() as u64,
+                ..Default::default()
+            }),
+        });
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Load a dataset split by manifest name ("train" | "test" | "ice").
+    pub fn dataset(&self, split: &str) -> Result<crate::data::Dataset> {
+        let spec = self
+            .manifest
+            .datasets
+            .get(split)
+            .ok_or_else(|| anyhow!("no dataset split '{split}'"))?;
+        crate::data::Dataset::load(
+            &self.dir,
+            split,
+            &spec.images,
+            &spec.labels,
+            spec.count,
+            &spec.image_shape,
+        )
+    }
+
+    /// Read a fixture tensor (golden outputs from python).
+    pub fn fixture(&self, name: &str) -> Result<Tensor> {
+        let (file, shape) = self
+            .manifest
+            .fixtures
+            .get(name)
+            .ok_or_else(|| anyhow!("no fixture '{name}'"))?
+            .clone();
+        let data = crate::data::read_f32_file(&self.dir.join(file))?;
+        Tensor::new(shape, data)
+    }
+
+    /// Names of currently cached (compiled) executables.
+    pub fn cached(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            self.cache.borrow().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}

@@ -1,0 +1,392 @@
+//! Typed view of `artifacts/manifest.json` — the contract between the
+//! python AOT pipeline (`python/compile/aot.py`) and the Rust serving path.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub arch: String,
+    pub width_mult: f64,
+    pub num_classes: usize,
+    pub img_size: usize,
+    pub hidden: usize,
+    pub layer_names: Vec<String>,
+    /// (C, H, W) of each of the 18 feature layers.
+    pub feature_shapes: Vec<[usize; 3]>,
+    pub total_params: u64,
+    pub base_test_accuracy: f64,
+    pub ice_accuracy: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub images: String,
+    pub labels: String,
+    pub count: usize,
+    pub image_shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct CsCurveSpec {
+    /// Min-max normalized CS value per feature layer.
+    pub norm: Vec<f64>,
+    pub raw: Vec<f64>,
+    /// Candidate split points (local maxima), as computed at build time.
+    pub candidates: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct SplitEvalRow {
+    pub layer: usize,
+    pub layer_name: String,
+    /// Test accuracy of the fine-tuned split model (Fig. 2's second curve).
+    pub accuracy: f64,
+    pub latent_shape: [usize; 3],
+    pub latent_bytes_per_image: u64,
+    pub feature_bytes_per_image: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct WeightSpec {
+    pub name: String,
+    pub file: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExecSpec {
+    pub name: String,
+    pub hlo: String,
+    pub kind: String,
+    pub batch: usize,
+    pub split_layer: Option<usize>,
+    pub gradcam_layer: Option<usize>,
+    pub latent_shape: Option<[usize; 3]>,
+    pub inputs: Vec<ArgSpec>,
+    pub weights: Vec<WeightSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub fast: bool,
+    pub model: ModelInfo,
+    /// Test accuracy of the lightweight LC model, when exported.
+    pub lite_accuracy: Option<f64>,
+    pub datasets: BTreeMap<String, DatasetSpec>,
+    pub class_names: Vec<String>,
+    pub cs_curve: CsCurveSpec,
+    pub split_eval: Vec<SplitEvalRow>,
+    pub executables: BTreeMap<String, ExecSpec>,
+    pub fixtures: BTreeMap<String, (String, Vec<usize>)>,
+}
+
+fn shape3(j: &Json) -> Result<[usize; 3]> {
+    let v = j.usize_vec()?;
+    if v.len() != 3 {
+        bail!("expected a 3-dim shape, got {v:?}");
+    }
+    Ok([v[0], v[1], v[2]])
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+
+        let m = j.get("model")?;
+        let model = ModelInfo {
+            arch: m.get("arch")?.str()?.to_string(),
+            width_mult: m.get("width_mult")?.f64()?,
+            num_classes: m.get("num_classes")?.usize()?,
+            img_size: m.get("img_size")?.usize()?,
+            hidden: m.get("hidden")?.usize()?,
+            layer_names: m
+                .get("layer_names")?
+                .arr()?
+                .iter()
+                .map(|v| Ok(v.str()?.to_string()))
+                .collect::<Result<_>>()?,
+            feature_shapes: m
+                .get("feature_shapes")?
+                .arr()?
+                .iter()
+                .map(shape3)
+                .collect::<Result<_>>()?,
+            total_params: m.get("total_params")?.f64()? as u64,
+            base_test_accuracy: m.get("base_test_accuracy")?.f64()?,
+            ice_accuracy: m.get("ice_accuracy")?.f64()?,
+        };
+
+        let d = j.get("dataset")?;
+        let mut datasets = BTreeMap::new();
+        for name in ["train", "test", "ice"] {
+            let s = d.get(name)?;
+            datasets.insert(
+                name.to_string(),
+                DatasetSpec {
+                    images: s.get("images")?.str()?.to_string(),
+                    labels: s.get("labels")?.str()?.to_string(),
+                    count: s.get("count")?.usize()?,
+                    image_shape: s.get("image_shape")?.usize_vec()?,
+                },
+            );
+        }
+        let class_names = d
+            .get("class_names")?
+            .arr()?
+            .iter()
+            .map(|v| Ok(v.str()?.to_string()))
+            .collect::<Result<_>>()?;
+
+        let c = j.get("cs_curve")?;
+        let cs_curve = CsCurveSpec {
+            norm: c.get("norm")?.f64_vec()?,
+            raw: c.get("raw")?.f64_vec()?,
+            candidates: c.get("candidates")?.usize_vec()?,
+        };
+
+        let split_eval = j
+            .get("split_eval")?
+            .arr()?
+            .iter()
+            .map(|r| {
+                Ok(SplitEvalRow {
+                    layer: r.get("layer")?.usize()?,
+                    layer_name: r.get("layer_name")?.str()?.to_string(),
+                    accuracy: r.get("accuracy")?.f64()?,
+                    latent_shape: shape3(r.get("latent_shape")?)?,
+                    latent_bytes_per_image: r
+                        .get("latent_bytes_per_image")?
+                        .f64()? as u64,
+                    feature_bytes_per_image: r
+                        .get("feature_bytes_per_image")?
+                        .f64()? as u64,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut executables = BTreeMap::new();
+        for e in j.get("executables")?.arr()? {
+            let parse_args = |key: &str| -> Result<Vec<ArgSpec>> {
+                e.get(key)?
+                    .arr()?
+                    .iter()
+                    .map(|a| {
+                        Ok(ArgSpec {
+                            name: a.get("name")?.str()?.to_string(),
+                            shape: a.get("shape")?.usize_vec()?,
+                            dtype: a
+                                .opt("dtype")
+                                .map(|d| d.str().map(str::to_string))
+                                .transpose()?
+                                .unwrap_or_else(|| "float32".to_string()),
+                        })
+                    })
+                    .collect()
+            };
+            let weights = e
+                .get("weights")?
+                .arr()?
+                .iter()
+                .map(|w| {
+                    Ok(WeightSpec {
+                        name: w.get("name")?.str()?.to_string(),
+                        file: w.get("file")?.str()?.to_string(),
+                        shape: w.get("shape")?.usize_vec()?,
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let spec = ExecSpec {
+                name: e.get("name")?.str()?.to_string(),
+                hlo: e.get("hlo")?.str()?.to_string(),
+                kind: e.get("kind")?.str()?.to_string(),
+                batch: e.opt("batch").map(|b| b.usize()).transpose()?
+                    .unwrap_or(1),
+                split_layer: e
+                    .opt("split_layer")
+                    .map(|v| v.usize())
+                    .transpose()?,
+                gradcam_layer: e.opt("layer").map(|v| v.usize()).transpose()?,
+                latent_shape: e
+                    .opt("latent_shape")
+                    .map(shape3)
+                    .transpose()?,
+                inputs: parse_args("inputs")?,
+                weights,
+                outputs: parse_args("outputs")?,
+            };
+            executables.insert(spec.name.clone(), spec);
+        }
+
+        let mut fixtures = BTreeMap::new();
+        if let Some(fx) = j.opt("fixtures") {
+            if let Json::Obj(m) = fx {
+                for (k, v) in m {
+                    fixtures.insert(
+                        k.clone(),
+                        (
+                            v.get("file")?.str()?.to_string(),
+                            v.get("shape")?.usize_vec()?,
+                        ),
+                    );
+                }
+            }
+        }
+
+        let lite_accuracy = j
+            .opt("lite_model")
+            .and_then(|l| l.opt("test_accuracy"))
+            .map(|v| v.f64())
+            .transpose()?;
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            fast: j.opt("fast").map(|f| f.bool()).transpose()?.unwrap_or(false),
+            model,
+            lite_accuracy,
+            datasets,
+            class_names,
+            cs_curve,
+            split_eval,
+            executables,
+            fixtures,
+        })
+    }
+
+    pub fn executable(&self, name: &str) -> Result<&ExecSpec> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no executable '{name}' in manifest"))
+    }
+
+    /// Split layers that have exported head/tail artifacts.
+    pub fn available_splits(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .executables
+            .values()
+            .filter(|e| e.kind == "head")
+            .filter_map(|e| e.split_layer)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Feature layers with an exported Grad-CAM CS artifact.
+    pub fn gradcam_layers(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .executables
+            .values()
+            .filter(|e| e.kind == "gradcam")
+            .filter_map(|e| e.gradcam_layer)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    pub fn split_eval_for(&self, layer: usize) -> Option<&SplitEvalRow> {
+        self.split_eval.iter().find(|r| r.layer == layer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "fast": true,
+      "model": {"arch": "vgg16-slim", "width_mult": 0.125,
+        "num_classes": 10, "img_size": 32, "hidden": 64,
+        "layer_names": ["block1_conv1"], "feature_shapes": [[8, 32, 32]],
+        "total_params": 235378, "base_test_accuracy": 0.97,
+        "ice_accuracy": 0.96},
+      "dataset": {
+        "train": {"images": "dataset/train_images.bin",
+          "labels": "dataset/train_labels.bin", "count": 4,
+          "image_shape": [3, 32, 32]},
+        "test": {"images": "t.bin", "labels": "tl.bin", "count": 2,
+          "image_shape": [3, 32, 32]},
+        "ice": {"images": "i.bin", "labels": "il.bin", "count": 2,
+          "image_shape": [3, 32, 32]},
+        "class_names": ["circle", "square"]},
+      "cs_curve": {"norm": [0.0, 1.0, 0.5], "raw": [1, 2, 1.5],
+        "candidates": [1]},
+      "split_eval": [{"layer": 1, "layer_name": "block1_conv2",
+        "accuracy": 0.9, "latent_shape": [4, 32, 32],
+        "latent_bytes_per_image": 16384,
+        "feature_bytes_per_image": 32768, "seconds": 1.0}],
+      "executables": [
+        {"name": "head_L1_b1", "hlo": "head_L1_b1.hlo.txt", "kind": "head",
+         "batch": 1, "split_layer": 1, "latent_shape": [4, 32, 32],
+         "inputs": [{"name": "x", "shape": [1, 3, 32, 32],
+                     "dtype": "float32"}],
+         "weights": [{"name": "conv0_w", "file": "weights/base/conv0_w.bin",
+                      "shape": [8, 3, 3, 3]}],
+         "outputs": [{"name": "latent", "shape": [1, 4, 32, 32]}],
+         "hlo_chars": 10}],
+      "fixtures": {"test16_logits": {"file": "fixtures/test16_logits.bin",
+        "shape": [16, 10]}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.model.num_classes, 10);
+        assert_eq!(m.model.feature_shapes[0], [8, 32, 32]);
+        assert_eq!(m.datasets["train"].count, 4);
+        assert_eq!(m.cs_curve.candidates, vec![1]);
+        assert_eq!(m.split_eval[0].latent_shape, [4, 32, 32]);
+        assert!(m.fast);
+    }
+
+    #[test]
+    fn executable_lookup() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let e = m.executable("head_L1_b1").unwrap();
+        assert_eq!(e.kind, "head");
+        assert_eq!(e.split_layer, Some(1));
+        assert_eq!(e.weights[0].shape, vec![8, 3, 3, 3]);
+        assert!(m.executable("nope").is_err());
+    }
+
+    #[test]
+    fn available_splits_and_fixtures() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.available_splits(), vec![1]);
+        assert!(m.gradcam_layers().is_empty());
+        assert_eq!(m.fixtures["test16_logits"].1, vec![16, 10]);
+        assert_eq!(m.split_eval_for(1).unwrap().accuracy, 0.9);
+        assert!(m.split_eval_for(2).is_none());
+    }
+
+    #[test]
+    fn missing_key_is_error() {
+        assert!(Manifest::parse(Path::new("/tmp"), "{}").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: the AOT bridge between the python build path and the Rust
+//! serving path. `HLO text -> HloModuleProto -> XlaComputation -> compile ->
+//! execute` on the CPU PJRT client (see /opt/xla-example/README.md for why
+//! text, not serialized protos, is the interchange format).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, LoadedExec, RtInput};
+pub use manifest::{ExecSpec, Manifest};

@@ -1,0 +1,163 @@
+//! Host-side f32 tensor: the interchange type between the dataset loader,
+//! the corruption model and the PJRT runtime.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {n} elements, got {}", shape, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn byte_len(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+
+    /// Leading-axis slice: rows [start, start+count) of axis 0.
+    pub fn slice_rows(&self, start: usize, count: usize) -> Result<Tensor> {
+        if self.shape.is_empty() {
+            bail!("cannot row-slice a scalar");
+        }
+        let rows = self.shape[0];
+        if start + count > rows {
+            bail!("slice {start}+{count} out of {rows} rows");
+        }
+        let stride: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = count;
+        Ok(Tensor {
+            shape,
+            data: self.data[start * stride..(start + count) * stride].to_vec(),
+        })
+    }
+
+    /// Row-major argmax over the last axis; returns one index per row of
+    /// the flattened leading axes (logits -> class predictions).
+    pub fn argmax_last(&self) -> Vec<usize> {
+        let last = *self.shape.last().expect("scalar");
+        self.data
+            .chunks_exact(last)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    /// Zero the byte range [off, off+len) of this tensor's raw f32 buffer
+    /// (UDP loss corruption: a lost datagram blanks the bytes it carried).
+    /// Partially covered f32 values are zeroed whole — a partially
+    /// transmitted float is garbage either way; zero is the deterministic
+    /// choice.
+    pub fn zero_byte_range(&mut self, off: u64, len: u32) {
+        let total = self.byte_len();
+        if off >= total || len == 0 {
+            return;
+        }
+        let end = (off + len as u64).min(total);
+        let first = (off / 4) as usize;
+        let last = (end.div_ceil(4) as usize).min(self.data.len());
+        for v in &mut self.data[first..last] {
+            *v = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn slice_rows_basic() {
+        let t = Tensor::new(vec![3, 2], (0..6).map(|v| v as f32).collect())
+            .unwrap();
+        let s = t.slice_rows(1, 2).unwrap();
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[2.0, 3.0, 4.0, 5.0]);
+        assert!(t.slice_rows(2, 2).is_err());
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.3, 2.0, -1.0, 0.0])
+            .unwrap();
+        assert_eq!(t.argmax_last(), vec![1, 0]);
+    }
+
+    #[test]
+    fn zero_byte_range_aligned() {
+        let mut t = Tensor::new(vec![4], vec![1.0; 4]).unwrap();
+        t.zero_byte_range(4, 8); // floats 1..3
+        assert_eq!(t.data(), &[1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn zero_byte_range_unaligned_rounds_outward() {
+        let mut t = Tensor::new(vec![4], vec![1.0; 4]).unwrap();
+        t.zero_byte_range(5, 4); // touches floats 1 and 2
+        assert_eq!(t.data(), &[1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn zero_byte_range_clamps_to_buffer() {
+        let mut t = Tensor::new(vec![2], vec![1.0; 2]).unwrap();
+        t.zero_byte_range(4, 1000);
+        assert_eq!(t.data(), &[1.0, 0.0]);
+        t.zero_byte_range(100, 4); // past the end: no-op
+        assert_eq!(t.data(), &[1.0, 0.0]);
+    }
+
+    #[test]
+    fn zero_len_is_noop() {
+        let mut t = Tensor::new(vec![2], vec![1.0; 2]).unwrap();
+        t.zero_byte_range(0, 0);
+        assert_eq!(t.data(), &[1.0, 1.0]);
+    }
+}

@@ -1,0 +1,172 @@
+//! Criterion-style measurement harness (no criterion in the offline image).
+//!
+//! Used by the `cargo bench` targets (`harness = false`): warmup, repeated
+//! timed iterations, mean / median / p99 / std-dev, throughput, and a
+//! stable one-line report format the bench binaries print.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut ns: Vec<f64>) -> Stats {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let mean = ns.iter().sum::<f64>() / n as f64;
+        let var =
+            ns.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
+        Stats {
+            iters: n,
+            mean_ns: mean,
+            median_ns: ns[n / 2],
+            p99_ns: ns[((n as f64) * 0.99) as usize % n.max(1)],
+            min_ns: ns[0],
+            max_ns: ns[n - 1],
+            stddev_ns: var.sqrt(),
+        }
+    }
+
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+}
+
+/// Human-friendly time formatting (ns/µs/ms/s).
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bencher {
+    /// Minimum wall time to spend measuring each benchmark.
+    pub measure_time: Duration,
+    pub warmup_time: Duration,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            measure_time: Duration::from_millis(800),
+            warmup_time: Duration::from_millis(200),
+            max_iters: 100_000,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            measure_time: Duration::from_millis(200),
+            warmup_time: Duration::from_millis(50),
+            max_iters: 10_000,
+        }
+    }
+
+    /// Measure `f`, printing a criterion-like line. Returns the stats.
+    pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        // Warmup.
+        let wstart = Instant::now();
+        let mut warm_iters = 0usize;
+        while wstart.elapsed() < self.warmup_time && warm_iters < 1000 {
+            f();
+            warm_iters += 1;
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let mstart = Instant::now();
+        while mstart.elapsed() < self.measure_time
+            && samples.len() < self.max_iters
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        let st = Stats::from_samples(samples);
+        println!(
+            "bench {name:<44} mean {:>12}  median {:>12}  p99 {:>12}  ({} iters)",
+            fmt_ns(st.mean_ns),
+            fmt_ns(st.median_ns),
+            fmt_ns(st.p99_ns),
+            st.iters
+        );
+        st
+    }
+
+    /// Like `bench` but also reports items/second throughput.
+    pub fn bench_throughput<F: FnMut()>(
+        &self,
+        name: &str,
+        items_per_iter: f64,
+        f: F,
+    ) -> Stats {
+        let st = self.bench(name, f);
+        let per_sec = items_per_iter / (st.mean_ns / 1e9);
+        println!("      {name:<44} throughput {:.0} items/s", per_sec);
+        st
+    }
+}
+
+/// Prevent the optimizer from eliding a computation (std::hint based).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant_samples() {
+        let s = Stats::from_samples(vec![100.0; 50]);
+        assert_eq!(s.mean_ns, 100.0);
+        assert_eq!(s.median_ns, 100.0);
+        assert_eq!(s.stddev_ns, 0.0);
+    }
+
+    #[test]
+    fn stats_ordering() {
+        let s = Stats::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.max_ns, 3.0);
+        assert_eq!(s.median_ns, 2.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).ends_with("s"));
+    }
+
+    #[test]
+    fn bench_runs_function() {
+        let mut count = 0usize;
+        let b = Bencher {
+            measure_time: Duration::from_millis(5),
+            warmup_time: Duration::from_millis(1),
+            max_iters: 100,
+        };
+        b.bench("noop", || count += 1);
+        assert!(count > 0);
+    }
+}

@@ -1,0 +1,251 @@
+//! Declarative command-line parser (no clap in the offline image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands, defaults, and generated `--help`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+    pub required: bool,
+}
+
+/// One (sub)command: a list of argument specs and the parsed values.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    specs: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, specs: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &str,
+               help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+            required: false,
+        });
+        self
+    }
+
+    pub fn required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+            required: true,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+            required: false,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for a in &self.specs {
+            let d = match (&a.default, a.is_flag) {
+                (_, true) => String::from("(flag)"),
+                (Some(d), _) => format!("(default: {d})"),
+                (None, _) => String::from("(required)"),
+            };
+            s.push_str(&format!("  --{:<22} {} {}\n", a.name, a.help, d));
+        }
+        s
+    }
+
+    /// Parse `args` (without argv[0] / subcommand name).
+    pub fn parse(&self, args: &[String]) -> Result<Matches> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage());
+            }
+            let Some(stripped) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument '{a}'\n{}", self.usage());
+            };
+            let (key, inline) = match stripped.split_once('=') {
+                Some((k, v)) => (k, Some(v.to_string())),
+                None => (stripped, None),
+            };
+            let spec = self
+                .specs
+                .iter()
+                .find(|s| s.name == key)
+                .ok_or_else(|| anyhow!("unknown option '--{key}'\n{}",
+                                       self.usage()))?;
+            let val = if spec.is_flag {
+                if inline.is_some() {
+                    bail!("flag '--{key}' takes no value");
+                }
+                "true".to_string()
+            } else if let Some(v) = inline {
+                v
+            } else {
+                i += 1;
+                args.get(i)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("option '--{key}' needs a value"))?
+            };
+            values.insert(key.to_string(), val);
+            i += 1;
+        }
+        for spec in &self.specs {
+            if !values.contains_key(spec.name) {
+                if spec.required {
+                    bail!("missing required option '--{}'\n{}",
+                          spec.name, self.usage());
+                }
+                if let Some(d) = &spec.default {
+                    values.insert(spec.name.to_string(), d.clone());
+                }
+            }
+        }
+        Ok(Matches { values })
+    }
+}
+
+#[derive(Debug)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+}
+
+impl Matches {
+    pub fn str(&self, key: &str) -> &str {
+        self.values
+            .get(key)
+            .map(|s| s.as_str())
+            .unwrap_or_else(|| panic!("option '{key}' not declared"))
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64> {
+        self.str(key)
+            .parse()
+            .map_err(|e| anyhow!("--{key}: bad float: {e}"))
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize> {
+        self.str(key)
+            .parse()
+            .map_err(|e| anyhow!("--{key}: bad integer: {e}"))
+    }
+
+    pub fn u64(&self, key: &str) -> Result<u64> {
+        self.str(key)
+            .parse()
+            .map_err(|e| anyhow!("--{key}: bad integer: {e}"))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.values.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+
+    /// Comma-separated list of floats, e.g. `--loss 0,0.01,0.03`.
+    pub fn f64_list(&self, key: &str) -> Result<Vec<f64>> {
+        self.str(key)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().map_err(|e| anyhow!("--{key}: {e}")))
+            .collect()
+    }
+
+    pub fn usize_list(&self, key: &str) -> Result<Vec<usize>> {
+        self.str(key)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().map_err(|e| anyhow!("--{key}: {e}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("test", "a test command")
+            .opt("alpha", "1.5", "alpha value")
+            .required("name", "the name")
+            .flag("verbose", "print more")
+            .opt("list", "1,2", "a list")
+    }
+
+    fn parse(args: &[&str]) -> Result<Matches> {
+        cmd().parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let m = parse(&["--name", "x"]).unwrap();
+        assert_eq!(m.f64("alpha").unwrap(), 1.5);
+        assert_eq!(m.str("name"), "x");
+        assert!(!m.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let m = parse(&["--name=y", "--alpha=2"]).unwrap();
+        assert_eq!(m.str("name"), "y");
+        assert_eq!(m.f64("alpha").unwrap(), 2.0);
+    }
+
+    #[test]
+    fn flags() {
+        let m = parse(&["--name", "x", "--verbose"]).unwrap();
+        assert!(m.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(parse(&[]).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(parse(&["--name", "x", "--bogus", "1"]).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let m = parse(&["--name", "x", "--list", "0,0.5,1"]).unwrap();
+        assert_eq!(m.f64_list("list").unwrap(), vec![0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(&["--name"]).is_err());
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let err = parse(&["--help"]).unwrap_err().to_string();
+        assert!(err.contains("--alpha"));
+    }
+}

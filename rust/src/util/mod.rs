@@ -1,0 +1,9 @@
+//! Infrastructure substrates built in-repo (the offline image vendors only
+//! the `xla` crate's closure — no clap/serde/rand/criterion/proptest).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,157 @@
+//! Property-based testing mini-framework (no proptest in the offline image).
+//!
+//! A property is a function over a seeded case generator; the runner drives
+//! many random cases and, on failure, retries with "shrunken" variants of
+//! the failing case's scale parameter to report the smallest failure it can
+//! find. Used heavily for the netsim invariants (see
+//! rust/tests/netsim_properties.rs).
+
+use crate::util::rng::Rng;
+
+/// Budget for one property run.
+#[derive(Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, base_seed: 0x5E1_5E1 }
+    }
+}
+
+/// A generated case: an RNG stream plus a size hint in [0, 1] that
+/// generators should use to scale structures (bigger later cases).
+pub struct Case<'a> {
+    pub rng: &'a mut Rng,
+    pub size: f64,
+}
+
+impl<'a> Case<'a> {
+    /// Integer in [lo, hi] biased by the case size (ramps up coverage).
+    pub fn sized_range(&mut self, lo: u64, hi: u64) -> u64 {
+        let span = ((hi - lo) as f64 * self.size).ceil() as u64;
+        self.rng.range_u64(lo, lo + span.min(hi - lo))
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn choice<'b, T>(&mut self, items: &'b [T]) -> &'b T {
+        &items[self.rng.below(items.len() as u64) as usize]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases. `prop` returns Err(msg) on
+/// violation. Panics with a reproduction seed on failure.
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Case) -> Result<(), String>,
+{
+    for i in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(i as u64);
+        let mut rng = Rng::new(seed);
+        let size = (i + 1) as f64 / cfg.cases as f64;
+        let mut case = Case { rng: &mut rng, size };
+        if let Err(msg) = prop(&mut case) {
+            // Shrink: retry with progressively smaller size at same seed to
+            // find a smaller counterexample for the report.
+            let mut smallest: Option<(f64, String)> = None;
+            for k in 1..=8 {
+                let s = size * (1.0 - k as f64 / 10.0);
+                if s <= 0.0 {
+                    break;
+                }
+                let mut rng2 = Rng::new(seed);
+                let mut c2 = Case { rng: &mut rng2, size: s };
+                if let Err(m) = prop(&mut c2) {
+                    smallest = Some((s, m));
+                }
+            }
+            let detail = match smallest {
+                Some((s, m)) => format!(
+                    "{msg}\n  shrunk: size={s:.2} still fails: {m}"
+                ),
+                None => msg,
+            };
+            panic!(
+                "property '{name}' failed (seed={seed}, case {i}, \
+                 size={size:.2}):\n  {detail}"
+            );
+        }
+    }
+}
+
+/// Like `check`, but the property itself is passed the seed (for cases
+/// where internals need to derive several independent streams).
+pub fn check_seeded<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(u64, f64) -> Result<(), String>,
+{
+    for i in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add((i as u64) << 8);
+        let size = (i + 1) as f64 / cfg.cases as f64;
+        if let Err(msg) = prop(seed, size) {
+            panic!(
+                "property '{name}' failed (seed={seed}, size={size:.2}):\n  {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", Config::default(), |c| {
+            let v = c.rng.below(10);
+            if v < 10 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'falsum' failed")]
+    fn failing_property_panics_with_seed() {
+        check("falsum", Config { cases: 8, base_seed: 1 }, |c| {
+            if c.rng.below(4) == 0 {
+                Err("hit zero".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn sized_range_within_bounds() {
+        check("sized_range", Config::default(), |c| {
+            let v = c.sized_range(3, 10);
+            if (3..=10).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("{v} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    fn seeded_variant_runs_all_cases() {
+        let mut n = 0;
+        check_seeded("count", Config { cases: 5, base_seed: 0 }, |_, _| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 5);
+    }
+}

@@ -1,0 +1,159 @@
+//! Aligned text tables for the report generators (Tables I/II, bench rows).
+
+/// Build an aligned, boxed text table from a header row and data rows.
+pub fn render(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), ncols, "row width mismatch");
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.chars().count());
+        }
+    }
+    let sep: String = {
+        let mut s = String::from("+");
+        for w in &widths {
+            s.push_str(&"-".repeat(w + 2));
+            s.push('+');
+        }
+        s.push('\n');
+        s
+    };
+    let fmt_row = |cells: &[String]| -> String {
+        let mut s = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            let pad = widths[i] - c.chars().count();
+            s.push(' ');
+            s.push_str(c);
+            s.push_str(&" ".repeat(pad + 1));
+            s.push('|');
+        }
+        s.push('\n');
+        s
+    };
+    let mut out = String::new();
+    out.push_str(&sep);
+    out.push_str(&fmt_row(
+        &headers.iter().map(|h| h.to_string()).collect::<Vec<_>>(),
+    ));
+    out.push_str(&sep);
+    for r in rows {
+        out.push_str(&fmt_row(r));
+    }
+    out.push_str(&sep);
+    out
+}
+
+/// Thousands separators in the paper's European style: 138.357.544.
+pub fn group_digits(n: u64) -> String {
+    let s = n.to_string();
+    let bytes = s.as_bytes();
+    let mut out = String::new();
+    for (i, b) in bytes.iter().enumerate() {
+        if i > 0 && (bytes.len() - i) % 3 == 0 {
+            out.push('.');
+        }
+        out.push(*b as char);
+    }
+    out
+}
+
+/// Simple ASCII line plot: one series per label, y normalized per chart.
+pub fn ascii_plot(
+    title: &str,
+    xlabel: &str,
+    xs: &[f64],
+    series: &[(&str, Vec<f64>)],
+    height: usize,
+) -> String {
+    let glyphs = ['*', 'o', '+', 'x', '#', '@'];
+    let mut ymin = f64::INFINITY;
+    let mut ymax = f64::NEG_INFINITY;
+    for (_, ys) in series {
+        for &y in ys {
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+    }
+    if !ymin.is_finite() || ymax <= ymin {
+        ymax = ymin + 1.0;
+    }
+    let width = xs.len().max(2);
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (xi, &y) in ys.iter().enumerate() {
+            let fy = (y - ymin) / (ymax - ymin);
+            let row = ((1.0 - fy) * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][xi] = glyphs[si % glyphs.len()];
+        }
+    }
+    let mut out = format!("{title}\n");
+    for (ri, row) in grid.iter().enumerate() {
+        let yv = ymax - (ri as f64 / (height - 1) as f64) * (ymax - ymin);
+        out.push_str(&format!("{yv:>10.4} | "));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>10} +-{}\n", "", "-".repeat(width)));
+    out.push_str(&format!("{:>13}{xlabel}\n", ""));
+    for (si, (label, _)) in series.iter().enumerate() {
+        out.push_str(&format!(
+            "{:>13}{} = {label}\n",
+            "",
+            glyphs[si % glyphs.len()]
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_is_aligned() {
+        let t = render(
+            &["a", "long header"],
+            &[
+                vec!["1".into(), "2".into()],
+                vec!["333".into(), "4".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w), "{t}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        render(&["a", "b"], &[vec!["1".into()]]);
+    }
+
+    #[test]
+    fn digit_grouping_paper_style() {
+        assert_eq!(group_digits(138_357_544), "138.357.544");
+        assert_eq!(group_digits(1_792), "1.792");
+        assert_eq!(group_digits(999), "999");
+        assert_eq!(group_digits(0), "0");
+    }
+
+    #[test]
+    fn plot_contains_series_glyphs_and_labels() {
+        let p = ascii_plot(
+            "t",
+            "x",
+            &[0.0, 1.0, 2.0],
+            &[("up", vec![0.0, 1.0, 2.0]), ("down", vec![2.0, 1.0, 0.0])],
+            8,
+        );
+        assert!(p.contains('*') && p.contains('o'));
+        assert!(p.contains("up") && p.contains("down"));
+    }
+
+    #[test]
+    fn plot_handles_flat_series() {
+        let p = ascii_plot("t", "x", &[0.0, 1.0], &[("f", vec![1.0, 1.0])], 4);
+        assert!(p.contains('*'));
+    }
+}

@@ -1,0 +1,337 @@
+//! End-to-end framework tests: scenario engine + netsim + PJRT + QoS.
+//! Skipped when `artifacts/` has not been built.
+
+use std::path::Path;
+
+use sei::coordinator::{
+    self, CsCurve, ModelScale, QosRequirements, ScenarioConfig, ScenarioKind,
+};
+use sei::model::DeviceProfile;
+use sei::netsim::transfer::{NetworkConfig, Protocol};
+use sei::runtime::Engine;
+
+fn engine() -> Option<Engine> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — skipping");
+        return None;
+    }
+    Some(Engine::load(dir).expect("engine"))
+}
+
+fn cfg(kind: ScenarioKind, proto: Protocol, loss: f64) -> ScenarioConfig {
+    ScenarioConfig {
+        kind,
+        net: NetworkConfig::gigabit(proto, loss, 42),
+        edge: DeviceProfile::edge_gpu(),
+        server: DeviceProfile::server_gpu(),
+        scale: ModelScale::Slim,
+        frame_period_ns: 50_000_000,
+    }
+}
+
+#[test]
+fn rc_tcp_accuracy_immune_to_loss() {
+    let Some(engine) = engine() else { return };
+    let test = engine.dataset("test").unwrap();
+    let q = QosRequirements::none();
+    let clean = coordinator::run_scenario(
+        &engine, &cfg(ScenarioKind::Rc, Protocol::Tcp, 0.0), &test, 64, &q,
+    )
+    .unwrap();
+    let lossy = coordinator::run_scenario(
+        &engine, &cfg(ScenarioKind::Rc, Protocol::Tcp, 0.08), &test, 64, &q,
+    )
+    .unwrap();
+    assert_eq!(clean.accuracy, lossy.accuracy, "TCP must protect accuracy");
+    assert!(
+        lossy.mean_latency_ns > clean.mean_latency_ns,
+        "TCP must pay latency for loss"
+    );
+    assert!(lossy.total_retransmits > 0);
+}
+
+#[test]
+fn rc_udp_accuracy_decays_latency_flat() {
+    let Some(engine) = engine() else { return };
+    let test = engine.dataset("test").unwrap();
+    let q = QosRequirements::none();
+    let clean = coordinator::run_scenario(
+        &engine, &cfg(ScenarioKind::Rc, Protocol::Udp, 0.0), &test, 96, &q,
+    )
+    .unwrap();
+    let lossy = coordinator::run_scenario(
+        &engine, &cfg(ScenarioKind::Rc, Protocol::Udp, 0.35), &test, 96, &q,
+    )
+    .unwrap();
+    assert!(
+        lossy.accuracy < clean.accuracy,
+        "UDP corruption must cost accuracy: {} vs {}",
+        lossy.accuracy,
+        clean.accuracy
+    );
+    // Latency is identical (same seed, loss-independent schedule).
+    assert!(
+        (lossy.mean_latency_ns - clean.mean_latency_ns).abs()
+            < 0.01 * clean.mean_latency_ns,
+        "UDP latency should not depend on loss"
+    );
+}
+
+#[test]
+fn sc_beats_rc_on_wire_bytes_at_deep_split() {
+    let Some(engine) = engine() else { return };
+    let splits = engine.manifest.available_splits();
+    let split = *splits.last().unwrap();
+    let test = engine.dataset("test").unwrap();
+    let q = QosRequirements::none();
+    let rc = coordinator::run_scenario(
+        &engine, &cfg(ScenarioKind::Rc, Protocol::Tcp, 0.0), &test, 32, &q,
+    )
+    .unwrap();
+    let sc = coordinator::run_scenario(
+        &engine,
+        &cfg(ScenarioKind::Sc { split }, Protocol::Tcp, 0.0),
+        &test,
+        32,
+        &q,
+    )
+    .unwrap();
+    assert!(
+        sc.mean_wire_bytes < rc.mean_wire_bytes,
+        "deep split must compress the wire: SC {} vs RC {}",
+        sc.mean_wire_bytes,
+        rc.mean_wire_bytes
+    );
+    // And keeps most of the accuracy.
+    assert!(sc.accuracy > rc.accuracy - 0.1);
+}
+
+#[test]
+fn lc_runs_without_network() {
+    let Some(engine) = engine() else { return };
+    let test = engine.dataset("test").unwrap();
+    let q = QosRequirements::ice_lab();
+    let lc = coordinator::run_scenario(
+        &engine, &cfg(ScenarioKind::Lc, Protocol::Tcp, 0.5), &test, 48, &q,
+    )
+    .unwrap();
+    assert_eq!(lc.mean_wire_bytes, 0.0);
+    assert_eq!(lc.total_retransmits, 0);
+    assert!(lc.accuracy > 0.5, "lite model should beat chance by far");
+}
+
+#[test]
+fn suggestion_engine_ranks_and_simulates() {
+    let Some(engine) = engine() else { return };
+    let test = engine.dataset("test").unwrap();
+    let qos = QosRequirements::ice_lab();
+    let suggestions = coordinator::suggest(
+        &engine,
+        &NetworkConfig::gigabit(Protocol::Tcp, 0.02, 7),
+        &DeviceProfile::edge_gpu(),
+        &DeviceProfile::server_gpu(),
+        &qos,
+        &test,
+        48,
+        2,
+    )
+    .unwrap();
+    // Must include the LC and RC baselines plus >= 1 SC candidate.
+    assert!(suggestions.len() >= 3);
+    let kinds: Vec<String> =
+        suggestions.iter().map(|s| s.rank.kind.to_string()).collect();
+    assert!(kinds.iter().any(|k| k == "LC"));
+    assert!(kinds.iter().any(|k| k == "RC"));
+    assert!(kinds.iter().any(|k| k.starts_with("SC@")));
+    // Ranking is by predicted accuracy, descending.
+    for w in suggestions.windows(2) {
+        assert!(
+            w[0].rank.predicted_accuracy >= w[1].rank.predicted_accuracy
+        );
+    }
+    let best = coordinator::best(&suggestions).unwrap();
+    assert!(best.report.frames == 48);
+}
+
+#[test]
+fn rust_cs_curve_agrees_with_python_on_shape() {
+    let Some(engine) = engine() else { return };
+    if engine.manifest.gradcam_layers().len() < 6 {
+        return; // fast artifacts
+    }
+    let test = engine.dataset("test").unwrap();
+    let rust_curve =
+        coordinator::saliency::compute_cs_curve(&engine, &test, 64).unwrap();
+    let python_curve = CsCurve::from_manifest(&engine);
+    let r = rust_curve.normalized();
+    let p = python_curve.normalized();
+    assert_eq!(r.len(), p.len());
+    // Same subset of images differs from python's 512, so compare shape:
+    // rank correlation between the two curves must be strongly positive.
+    let n = r.len() as f64;
+    let rank = |v: &[f64]| -> Vec<f64> {
+        let mut idx: Vec<usize> = (0..v.len()).collect();
+        idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap());
+        let mut out = vec![0.0; v.len()];
+        for (rank, &i) in idx.iter().enumerate() {
+            out[i] = rank as f64;
+        }
+        out
+    };
+    let (ra, rb) = (rank(&r), rank(&p));
+    let d2: f64 = ra.iter().zip(&rb).map(|(a, b)| (a - b) * (a - b)).sum();
+    let spearman = 1.0 - 6.0 * d2 / (n * (n * n - 1.0));
+    assert!(
+        spearman > 0.7,
+        "rust vs python CS curves disagree: spearman {spearman:.3}\n\
+         rust:   {r:?}\npython: {p:?}"
+    );
+}
+
+#[test]
+fn serve_reports_wall_and_sim_throughput() {
+    let Some(engine) = engine() else { return };
+    let ice = engine.dataset("ice").unwrap();
+    let qos = QosRequirements::ice_lab();
+    let splits = engine.manifest.available_splits();
+    let c = cfg(
+        ScenarioKind::Sc { split: *splits.last().unwrap() },
+        Protocol::Tcp,
+        0.01,
+    );
+    let r = coordinator::serve(&engine, &c, &ice, 40, &qos).unwrap();
+    assert_eq!(r.frames, 40);
+    assert!(r.wall_seconds > 0.0);
+    assert!(r.sim_fps > 0.0);
+    let txt = r.render(&qos);
+    assert!(txt.contains("VERDICT"));
+}
+
+#[test]
+fn paper_scale_fig3_shape_holds() {
+    // Fig. 3 end-to-end at paper scale: SC@L15 meets 20 FPS across loss
+    // rates; SC@L11 violates beyond a few percent.
+    let Some(engine) = engine() else { return };
+    let splits = engine.manifest.available_splits();
+    if !splits.contains(&11) || !splits.contains(&15) {
+        return;
+    }
+    let mean = |split: usize, loss: f64| -> f64 {
+        let c = ScenarioConfig {
+            kind: ScenarioKind::Sc { split },
+            net: NetworkConfig::gigabit(Protocol::Tcp, loss, 11),
+            edge: DeviceProfile::edge_gpu(),
+            server: DeviceProfile::server_gpu(),
+            scale: ModelScale::Vgg16Full,
+            frame_period_ns: 50_000_000,
+        };
+        let lats = coordinator::simulate_latency(&engine, &c, 200).unwrap();
+        lats.iter().map(|v| *v as f64).sum::<f64>() / lats.len() as f64
+    };
+    let budget = 50e6;
+    assert!(mean(11, 0.0) < budget);
+    assert!(mean(15, 0.0) < budget);
+    // Paper shape: L15 robust well past the loss rate where L11 breaks.
+    assert!(mean(15, 0.06) < budget, "L15 must hold at 6% loss");
+    assert!(mean(11, 0.08) > budget, "L11 must violate by 8% loss");
+    assert!(
+        mean(11, 0.08) > mean(15, 0.08),
+        "L11 must degrade faster than L15"
+    );
+}
+
+#[test]
+fn hil_worker_round_trip_with_real_artifacts() {
+    // The hardware-in-the-loop path: a worker thread serves the tail over
+    // a real localhost TCP socket; the leader runs the head locally.
+    let Some(engine) = engine() else { return };
+    let splits = engine.manifest.available_splits();
+    let split = *splits.first().unwrap();
+    let addr = {
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        probe.local_addr().unwrap().to_string()
+    };
+    let worker_addr = addr.clone();
+    let worker = std::thread::spawn(move || {
+        sei::coordinator::hil::run_worker(
+            Path::new("artifacts"),
+            &worker_addr,
+            &format!("tail_L{split}_b1"),
+        )
+    });
+    let test = engine.dataset("test").unwrap();
+    let head = engine.executable(&format!("head_L{split}_b1")).unwrap();
+    let mut client =
+        sei::coordinator::hil::HilClient::connect(&addr).unwrap();
+    let n = 24usize;
+    let mut correct = 0;
+    for i in 0..n {
+        let x = test.batch(i, 1).unwrap();
+        let z = head.run(&[sei::runtime::RtInput::F32(&x)]).unwrap();
+        let logits = client
+            .infer(&z, vec![1, engine.manifest.model.num_classes])
+            .unwrap();
+        if logits.argmax_last()[0] == test.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    assert_eq!(client.rtts_ns.len(), n);
+    assert!(client.mean_rtt_ns() > 0.0);
+    client.shutdown().unwrap();
+    assert_eq!(worker.join().unwrap().unwrap(), n as u64);
+    // Accuracy over the real socket must match the in-process path.
+    let expected = engine
+        .manifest
+        .split_eval_for(split)
+        .map(|r| r.accuracy)
+        .unwrap_or(0.9);
+    assert!(
+        (correct as f64 / n as f64 - expected).abs() < 0.2,
+        "HIL accuracy {correct}/{n} vs expected {expected:.2}"
+    );
+}
+
+#[test]
+fn batched_tail_pipeline_matches_unbatched() {
+    // Workload -> batcher -> b16 tail must classify identically to the
+    // one-by-one b1 tail.
+    use sei::coordinator::batcher::{BatchPolicy, Batcher};
+    use sei::coordinator::workload::{ArrivalProcess, Workload};
+    let Some(engine) = engine() else { return };
+    let splits = engine.manifest.available_splits();
+    let split = *splits.last().unwrap();
+    let test = engine.dataset("test").unwrap();
+    let head16 =
+        engine.executable(&format!("head_L{split}_b16")).unwrap();
+    let tail1 = engine.executable(&format!("tail_L{split}_b1")).unwrap();
+    let tail16 = engine.executable(&format!("tail_L{split}_b16")).unwrap();
+
+    let x = test.batch(0, 16).unwrap();
+    let z = head16.run(&[sei::runtime::RtInput::F32(&x)]).unwrap();
+
+    // Unbatched predictions.
+    let mut unbatched = Vec::new();
+    for i in 0..16 {
+        let zi = z.slice_rows(i, 1).unwrap();
+        let logits = tail1.run(&[sei::runtime::RtInput::F32(&zi)]).unwrap();
+        unbatched.push(logits.argmax_last()[0]);
+    }
+
+    // Batched: drive the batcher with a Poisson workload until the size
+    // trigger fires, then run the b16 artifact once.
+    let mut batcher = Batcher::new(BatchPolicy::new(16, 50_000_000));
+    let mut wl = Workload::new(ArrivalProcess::Poisson { fps: 500.0 }, 3);
+    let mut released = None;
+    for _ in 0..16 {
+        let t = wl.next_arrival();
+        if let Some(b) = batcher.offer(t) {
+            released = Some(b);
+        }
+    }
+    let batch = released.expect("size trigger at 16");
+    assert_eq!(batch.len(), 16);
+    let logits = tail16.run(&[sei::runtime::RtInput::F32(&z)]).unwrap();
+    let batched = logits.argmax_last();
+    assert_eq!(batched, unbatched, "batched vs unbatched predictions");
+}

@@ -1,0 +1,171 @@
+//! Cross-module integration tests that do not require built artifacts:
+//! netsim x model metadata x report generators x suggestion logic.
+
+use sei::model::{self, DeviceProfile, Shape};
+use sei::netsim::transfer::{Channel, NetworkConfig, Protocol};
+use sei::netsim::Dir;
+use sei::report::{fig3_report, fig4_report};
+use sei::util::json::Json;
+
+/// The Fig. 3 mechanism, end to end on the netsim with paper-scale
+/// volumetrics: at 1 Gb/s TCP, the L11 latent (256x28x28 f32 ≈ 803 kB)
+/// suffers more from loss than the L15 latent (256x14x14 ≈ 201 kB), and
+/// the gap grows with the loss rate.
+#[test]
+fn fig3_mechanism_l11_vs_l15() {
+    let feats = model::feature_layers(&model::vgg16_full());
+    let l11 = feats[11].latent_bytes();
+    let l15 = feats[15].latent_bytes();
+    assert_eq!(l11, 4 * l15); // 28^2 vs 14^2
+
+    let mean_latency = |bytes: u64, loss: f64| -> f64 {
+        let mut total = 0.0;
+        let frames = 40;
+        for seed in 0..6u64 {
+            let mut ch = Channel::new(NetworkConfig::gigabit(
+                Protocol::Tcp, loss, seed,
+            ));
+            for f in 0..frames {
+                ch.advance_to(f * 50_000_000);
+                let r = ch.send(Dir::Up, bytes).unwrap();
+                total += r.latency_ns() as f64;
+            }
+        }
+        total / (6.0 * frames as f64)
+    };
+
+    let base11 = mean_latency(l11, 0.0);
+    let base15 = mean_latency(l15, 0.0);
+    assert!(base11 > base15, "more bytes must take longer");
+
+    let lossy11 = mean_latency(l11, 0.06);
+    let lossy15 = mean_latency(l15, 0.06);
+    assert!(lossy11 > 2.0 * base11, "loss should inflate L11 latency");
+    // The penalty for the bigger transfer must exceed the smaller one's.
+    assert!(
+        lossy11 - base11 > lossy15 - base15,
+        "L11 penalty {:.0} <= L15 penalty {:.0}",
+        lossy11 - base11,
+        lossy15 - base15
+    );
+}
+
+/// The Fig. 4 mechanism: same payload, TCP latency grows with loss while
+/// UDP latency does not.
+#[test]
+fn fig4_mechanism_tcp_vs_udp_latency() {
+    let payload = (3 * 224 * 224 * 4) as u64; // RC input at paper scale
+    let mean = |proto: Protocol, loss: f64| -> f64 {
+        let mut total = 0.0;
+        for seed in 0..6u64 {
+            let mut ch =
+                Channel::new(NetworkConfig::gigabit(proto, loss, seed));
+            for f in 0..30u64 {
+                ch.advance_to(f * 50_000_000);
+                total += ch.send(Dir::Up, payload).unwrap().latency_ns()
+                    as f64;
+            }
+        }
+        total / 180.0
+    };
+    let tcp0 = mean(Protocol::Tcp, 0.0);
+    let tcp8 = mean(Protocol::Tcp, 0.08);
+    let udp0 = mean(Protocol::Udp, 0.0);
+    let udp8 = mean(Protocol::Udp, 0.08);
+    assert!(tcp8 > 1.5 * tcp0, "TCP latency must grow: {tcp0} -> {tcp8}");
+    assert_eq!(udp0, udp8, "UDP latency must be loss-independent");
+}
+
+#[test]
+fn split_compute_of_paper_splits_fits_edge_budget() {
+    // Device-profile sanity for the ICE-Lab scenario: the head at L11/L15
+    // of the full VGG16 on the edge GPU stays under the 50 ms frame budget
+    // while the full model on the edge CPU does not.
+    let net = model::vgg16_full();
+    let edge = DeviceProfile::edge_gpu();
+    for split in [11usize, 15] {
+        let (head, _) = model::split_compute(&net, split);
+        let t = edge.compute_ns(head);
+        assert!(t < 50_000_000, "head@L{split} = {t} ns on edge GPU");
+    }
+    let cpu = DeviceProfile::edge_cpu();
+    assert!(cpu.compute_ns(net.mult_adds()) > 50_000_000);
+}
+
+#[test]
+fn feature_shapes_consistent_between_slim_and_full() {
+    let full = model::feature_layers(&model::vgg16_full());
+    let slim = model::feature_layers(&model::vgg16_slim(32, 0.125, 64, 10));
+    assert_eq!(full.len(), slim.len());
+    for (f, s) in full.iter().zip(&slim) {
+        assert_eq!(f.name, s.name);
+        assert_eq!(f.is_pool, s.is_pool);
+        let (Shape::Chw(_, fh, _), Shape::Chw(_, sh, _)) = (f.out, s.out)
+        else {
+            panic!("non-CHW feature");
+        };
+        // Same topology: spatial sizes scale by the same 224/32 factor.
+        assert_eq!(fh * 32, sh * 224, "layer {}", f.name);
+    }
+}
+
+#[test]
+fn report_generators_accept_real_series() {
+    let loss = vec![0.0, 0.03, 0.06];
+    let fig3 = fig3_report(
+        &loss,
+        &[
+            ("SC@L11".to_string(), vec![0.02, 0.04, 0.08]),
+            ("SC@L15".to_string(), vec![0.01, 0.015, 0.02]),
+        ],
+        0.05,
+    );
+    assert!(fig3.contains("VIOLATED") && fig3.contains("SC@L15"));
+    let fig4 = fig4_report(
+        &loss,
+        &[0.97, 0.97, 0.97],
+        &[0.97, 0.9, 0.8],
+        &[0.001, 0.002, 0.004],
+        &[0.001, 0.001, 0.001],
+    );
+    assert!(fig4.contains("TCP acc"));
+}
+
+#[test]
+fn json_handles_manifest_scale_documents() {
+    // Round-trip a manifest-shaped document through our JSON substrate.
+    let doc = r#"{"executables": [{"name": "x", "weights": [], "shape":
+        [1, 2, 3]}], "value": 1e-3, "t": true}"#;
+    let j = Json::parse(doc).unwrap();
+    let again = Json::parse(&j.to_string()).unwrap();
+    assert_eq!(j, again);
+}
+
+#[test]
+fn channel_presets_order_latency_physically() {
+    // Same transfer across presets: gigabit < fast-ethernet; wifi pays
+    // both lower rate and higher propagation latency.
+    let bytes = 500_000u64;
+    let lat = |net: NetworkConfig| -> u64 {
+        Channel::new(net).send(Dir::Up, bytes).unwrap().latency_ns()
+    };
+    let g = lat(NetworkConfig::gigabit(Protocol::Tcp, 0.0, 1));
+    let f = lat(NetworkConfig::fast_ethernet(Protocol::Tcp, 0.0, 1));
+    let w = lat(NetworkConfig::wifi(Protocol::Tcp, 0.0, 1));
+    assert!(g < f, "gigabit {g} vs fast-ethernet {f}");
+    assert!(g < w, "gigabit {g} vs wifi {w}");
+}
+
+#[test]
+fn rc_vs_sc_wire_volume_tradeoff() {
+    // SC's raison d'être (paper Sec. II): the latent at a deep split is
+    // far smaller than the raw input RC must ship.
+    let feats = model::feature_layers(&model::vgg16_full());
+    let rc_bytes = (3 * 224 * 224 * 4) as u64;
+    for split in [13usize, 15] {
+        assert!(feats[split].latent_bytes() * 2 < rc_bytes, "L{split}");
+    }
+    // ...but an early split would ship MORE than the input (dense data!),
+    // which is exactly why saliency-guided selection matters.
+    assert!(feats[1].latent_bytes() > rc_bytes);
+}

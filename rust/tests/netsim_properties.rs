@@ -1,0 +1,282 @@
+//! Property-based tests of the netsim invariants (util::propcheck).
+
+use sei::netsim::event::EventQueue;
+use sei::netsim::link::{Link, LinkConfig};
+use sei::netsim::packet::{segment, TCP_MSS, UDP_MAX_PAYLOAD};
+use sei::netsim::tcp::{self, TcpConfig, TcpState};
+use sei::netsim::udp::{self, UdpConfig};
+use sei::util::propcheck::{check, check_seeded, Config};
+use sei::util::rng::Rng;
+
+fn make_links(loss: f64, latency_ns: u64, rate: f64, seed: u64)
+    -> (Link, Link)
+{
+    let cfg = LinkConfig::basic(latency_ns, rate, loss);
+    let mut rng = Rng::new(seed);
+    (Link::new(cfg.clone(), rng.fork()), Link::new(cfg, rng.fork()))
+}
+
+#[test]
+fn prop_event_queue_total_order() {
+    check("event_total_order", Config::default(), |c| {
+        let n = c.sized_range(1, 200) as usize;
+        let mut q = EventQueue::new();
+        for i in 0..n {
+            q.schedule(c.rng.below(10_000), i);
+        }
+        let mut last = 0u64;
+        let mut popped = 0;
+        while let Some((t, _)) = q.pop() {
+            if t < last {
+                return Err(format!("time went backwards: {t} < {last}"));
+            }
+            last = t;
+            popped += 1;
+        }
+        if popped != n {
+            return Err(format!("popped {popped} of {n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_segmentation_partitions_message() {
+    check("segmentation_partition", Config::default(), |c| {
+        let len = c.sized_range(1, 5_000_000);
+        let mss = *c.choice(&[64u32, 536, TCP_MSS, UDP_MAX_PAYLOAD]);
+        let segs = segment(len, mss);
+        let mut expect = 0u64;
+        for (off, p) in &segs {
+            if *off != expect {
+                return Err(format!("gap at {off} (expected {expect})"));
+            }
+            if *p == 0 || *p > mss {
+                return Err(format!("bad payload {p}"));
+            }
+            expect += *p as u64;
+        }
+        if expect != len {
+            return Err(format!("covered {expect} of {len}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_link_conserves_packets() {
+    check("link_conservation", Config::default(), |c| {
+        let loss = c.f64(0.0, 0.9);
+        let n = c.sized_range(1, 500);
+        let mut link = Link::new(
+            LinkConfig::basic(1000, 1e9, loss),
+            Rng::new(c.rng.next_u64()),
+        );
+        let mut delivered = 0u64;
+        for i in 0..n {
+            if !link.send(i * 10, 100).dropped {
+                delivered += 1;
+            }
+        }
+        let s = link.stats;
+        if s.packets_sent != n {
+            return Err("sent count mismatch".into());
+        }
+        if delivered + s.packets_dropped != s.packets_sent {
+            return Err(format!(
+                "conservation violated: {delivered} + {} != {}",
+                s.packets_dropped, s.packets_sent
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_link_fifo_and_monotone_arrivals() {
+    check("link_fifo", Config::default(), |c| {
+        let mut link = Link::new(
+            {
+                let mut lc = LinkConfig::basic(
+                    c.rng.range_u64(0, 1_000_000), 1e8, 0.0);
+                lc.interface_bps = 1e9;
+                lc
+            },
+            Rng::new(1),
+        );
+        let mut last_arrival = 0;
+        let mut t = 0u64;
+        for _ in 0..c.sized_range(2, 100) {
+            t += c.rng.below(10_000);
+            let out = link.send(t, 100 + c.rng.below(1400) as u32);
+            if out.arrival < last_arrival {
+                return Err("arrivals reordered on FIFO link".into());
+            }
+            if out.tx_done < t {
+                return Err("tx finished before send".into());
+            }
+            last_arrival = out.arrival;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tcp_always_delivers_everything() {
+    // The core reliability invariant: for any loss < 1, every byte is
+    // delivered and acknowledged in bounded (simulated) time.
+    check_seeded("tcp_reliability", Config { cases: 48, base_seed: 11 },
+                 |seed, size| {
+        let mut rng = Rng::new(seed);
+        let len = 1 + (rng.below(400_000) as f64 * size) as u64;
+        let loss = rng.range_f64(0.0, 0.35);
+        let (mut d, mut a) = make_links(loss, 100_000, 1e9, seed ^ 0xabc);
+        let cfg = TcpConfig::default();
+        let mut st = TcpState::new(&cfg);
+        let r = tcp::send_message(&cfg, &mut st, &mut d, &mut a, len, 0)?;
+        if r.delivery_latency_ns == 0
+            || r.ack_latency_ns < r.delivery_latency_ns
+        {
+            return Err(format!("inconsistent latencies: {r:?}"));
+        }
+        // Conservation: sent = segments + retransmits.
+        if r.stats.data_packets_sent != r.stats.segments + r.stats.retransmits
+        {
+            return Err(format!("packet accounting broken: {:?}", r.stats));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tcp_latency_monotone_in_loss_on_average() {
+    // Averaged over seeds, mean delivery latency is non-decreasing in the
+    // loss rate (TCP pays for loss with retransmissions — Fig. 3).
+    let losses = [0.0, 0.05, 0.15];
+    let mut means = Vec::new();
+    for &loss in &losses {
+        let mut total = 0.0;
+        for seed in 0..30u64 {
+            let (mut d, mut a) = make_links(loss, 100_000, 1e9, 500 + seed);
+            let cfg = TcpConfig::default();
+            let mut st = TcpState::new(&cfg);
+            let r = tcp::send_message(&cfg, &mut st, &mut d, &mut a,
+                                      150_000, 0)
+                .unwrap();
+            total += r.delivery_latency_ns as f64;
+        }
+        means.push(total / 30.0);
+    }
+    assert!(
+        means[1] > means[0] && means[2] > means[1],
+        "latency not monotone in loss: {means:?}"
+    );
+}
+
+#[test]
+fn prop_tcp_zero_loss_deterministic_and_no_retx() {
+    check("tcp_lossless", Config { cases: 32, base_seed: 77 }, |c| {
+        let len = c.sized_range(1, 2_000_000);
+        let rate = *c.choice(&[1e8, 1e9]);
+        let (mut d, mut a) = make_links(0.0, 50_000, rate, 3);
+        let cfg = TcpConfig::default();
+        let mut st = TcpState::new(&cfg);
+        let r = tcp::send_message(&cfg, &mut st, &mut d, &mut a, len, 0)?;
+        if r.stats.retransmits != 0 || r.stats.timeouts != 0 {
+            return Err(format!("phantom loss: {:?}", r.stats));
+        }
+        // Latency is bounded below by serialization + propagation.
+        let min = (len as f64 * 8.0 / rate * 1e9) as u64 + 50_000;
+        if r.delivery_latency_ns < min {
+            return Err(format!(
+                "latency {} beats physics {min}",
+                r.delivery_latency_ns
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_udp_delivered_subset_and_latency_loss_free() {
+    check_seeded("udp_subset", Config { cases: 48, base_seed: 21 },
+                 |seed, size| {
+        let mut rng = Rng::new(seed);
+        let len = 1 + (rng.below(2_000_000) as f64 * size) as u64;
+        let loss = rng.range_f64(0.0, 0.8);
+        let cfg = UdpConfig::default();
+
+        let (mut link, _) = make_links(loss, 100_000, 1e9, seed);
+        let r = udp::send_message(&cfg, &mut link, len, 0);
+
+        // Lost ranges are disjoint, sorted, in-bounds.
+        let mut prev_end = 0u64;
+        for (off, l) in &r.lost_ranges {
+            if *off < prev_end {
+                return Err("lost ranges overlap or unsorted".into());
+            }
+            if off + *l as u64 > len {
+                return Err("lost range out of message".into());
+            }
+            prev_end = off + *l as u64;
+        }
+        if r.lost_bytes() > len {
+            return Err("lost more than sent".into());
+        }
+
+        // Latency must match the loss-free run exactly (UDP never waits).
+        let (mut link0, _) = make_links(0.0, 100_000, 1e9, seed);
+        let r0 = udp::send_message(&cfg, &mut link0, len, 0);
+        if r.latency_ns != r0.latency_ns {
+            return Err(format!(
+                "UDP latency depends on loss: {} vs {}",
+                r.latency_ns, r0.latency_ns
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_udp_loss_fraction_tracks_saboteur() {
+    // With many packets, the delivered fraction concentrates around 1-p.
+    for (seed, p) in [(1u64, 0.1f64), (2, 0.3), (3, 0.5)] {
+        let (mut link, _) = make_links(p, 100_000, 1e9, seed);
+        let len = 4_000_000u64;
+        let r = udp::send_message(&UdpConfig::default(), &mut link, len, 0);
+        let f = r.delivered_fraction(len);
+        assert!(
+            (f - (1.0 - p)).abs() < 0.04,
+            "loss {p}: delivered fraction {f}"
+        );
+    }
+}
+
+#[test]
+fn prop_channel_clock_monotone() {
+    use sei::netsim::transfer::{Channel, NetworkConfig, Protocol};
+    use sei::netsim::Dir;
+    check_seeded("channel_clock", Config { cases: 24, base_seed: 5 },
+                 |seed, size| {
+        let mut rng = Rng::new(seed);
+        let proto =
+            if rng.chance(0.5) { Protocol::Tcp } else { Protocol::Udp };
+        let mut ch = Channel::new(NetworkConfig::gigabit(
+            proto,
+            rng.range_f64(0.0, 0.2),
+            seed,
+        ));
+        use sei::netsim::Dir::{Down, Up};
+        let mut last = 0;
+        for i in 0..(3 + (10.0 * size) as usize) {
+            let dir: Dir = if i % 2 == 0 { Up } else { Down };
+            let len = 1 + rng.below(100_000);
+            ch.send(dir, len).map_err(|e| e.to_string())?;
+            if ch.now() < last {
+                return Err("channel clock went backwards".into());
+            }
+            last = ch.now();
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,196 @@
+//! Integration tests over the real AOT artifacts (PJRT execution).
+//! Skipped when `artifacts/` has not been built (fresh checkout).
+
+use std::path::Path;
+
+use sei::runtime::{Engine, RtInput};
+
+fn engine() -> Option<Engine> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — skipping");
+        return None;
+    }
+    Some(Engine::load(dir).expect("engine"))
+}
+
+#[test]
+fn full_forward_matches_python_fixture() {
+    let Some(engine) = engine() else { return };
+    let test = engine.dataset("test").unwrap();
+    let exec = engine.executable("full_fwd_b16").unwrap();
+    let x = test.batch(0, 16).unwrap();
+    let got = exec.run(&[RtInput::F32(&x)]).unwrap();
+    let want = engine.fixture("test16_logits").unwrap();
+    assert_eq!(got.shape(), want.shape());
+    for (g, w) in got.data().iter().zip(want.data()) {
+        assert!(
+            (g - w).abs() <= 1e-4 * (1.0 + w.abs()),
+            "logit mismatch: {g} vs {w}"
+        );
+    }
+}
+
+#[test]
+fn pallas_artifact_matches_jnp_artifact() {
+    // The L1 Pallas conv path and the jnp conv path must agree when run
+    // by the Rust PJRT client (not just under pytest).
+    let Some(engine) = engine() else { return };
+    let test = engine.dataset("test").unwrap();
+    let jnp = engine.executable("full_fwd_b16").unwrap();
+    let pallas = engine.executable("full_fwd_pallas_b4").unwrap();
+    let x16 = test.batch(0, 16).unwrap();
+    let x4 = test.batch(0, 4).unwrap();
+    let a = jnp.run(&[RtInput::F32(&x16)]).unwrap();
+    let b = pallas.run(&[RtInput::F32(&x4)]).unwrap();
+    for row in 0..4 {
+        for c in 0..10 {
+            let va = a.data()[row * 10 + c];
+            let vb = b.data()[row * 10 + c];
+            assert!(
+                (va - vb).abs() <= 2e-3 * (1.0 + va.abs()),
+                "pallas/jnp divergence at [{row},{c}]: {va} vs {vb}"
+            );
+        }
+    }
+}
+
+#[test]
+fn head_tail_compose_to_sane_accuracy() {
+    // Run head -> tail at each exported split over a test slice; accuracy
+    // must be close to the python-recorded split accuracy.
+    let Some(engine) = engine() else { return };
+    let test = engine.dataset("test").unwrap();
+    let n = 96usize;
+    for split in engine.manifest.available_splits() {
+        let head = engine
+            .executable(&format!("head_L{split}_b16"))
+            .unwrap();
+        let tail = engine
+            .executable(&format!("tail_L{split}_b16"))
+            .unwrap();
+        let mut correct = 0usize;
+        let mut start = 0;
+        while start + 16 <= n {
+            let x = test.batch(start, 16).unwrap();
+            let z = head.run(&[RtInput::F32(&x)]).unwrap();
+            let logits = tail.run(&[RtInput::F32(&z)]).unwrap();
+            for (p, l) in logits
+                .argmax_last()
+                .iter()
+                .zip(test.batch_labels(start, 16))
+            {
+                if *p == *l as usize {
+                    correct += 1;
+                }
+            }
+            start += 16;
+        }
+        let acc = correct as f64 / n as f64;
+        let expected = engine
+            .manifest
+            .split_eval_for(split)
+            .map(|r| r.accuracy)
+            .unwrap_or(0.9);
+        assert!(
+            (acc - expected).abs() < 0.12,
+            "split L{split}: rust acc {acc:.3} vs python {expected:.3}"
+        );
+    }
+}
+
+#[test]
+fn head_output_matches_declared_latent_shape() {
+    let Some(engine) = engine() else { return };
+    let test = engine.dataset("test").unwrap();
+    let splits = engine.manifest.available_splits();
+    let split = *splits.first().unwrap();
+    let head = engine.executable(&format!("head_L{split}_b1")).unwrap();
+    let x = test.batch(0, 1).unwrap();
+    let z = head.run(&[RtInput::F32(&x)]).unwrap();
+    let want = engine.manifest.split_eval_for(split).unwrap().latent_shape;
+    assert_eq!(z.shape(), &[1, want[0], want[1], want[2]]);
+    // 50% compression vs the raw feature map.
+    let feat = engine.manifest.model.feature_shapes[split];
+    assert_eq!(want[0] * 2, feat[0]);
+}
+
+#[test]
+fn gradcam_artifact_runs_and_is_nonnegative() {
+    let Some(engine) = engine() else { return };
+    let layers = engine.manifest.gradcam_layers();
+    if layers.is_empty() {
+        return;
+    }
+    let test = engine.dataset("test").unwrap();
+    let li = layers[layers.len() / 2];
+    let exec = engine.executable(&format!("gradcam_L{li}_b16")).unwrap();
+    let x = test.batch(0, 16).unwrap();
+    let y = test.batch_labels(0, 16);
+    let cs = exec.run(&[RtInput::F32(&x), RtInput::I32(y)]).unwrap();
+    assert_eq!(cs.shape(), &[16]);
+    for v in cs.data() {
+        assert!(*v >= 0.0 && v.is_finite(), "CS value {v}");
+    }
+}
+
+#[test]
+fn executions_are_deterministic() {
+    let Some(engine) = engine() else { return };
+    let test = engine.dataset("test").unwrap();
+    let exec = engine.executable("full_fwd_b1").unwrap();
+    let x = test.batch(3, 1).unwrap();
+    let a = exec.run(&[RtInput::F32(&x)]).unwrap();
+    let b = exec.run(&[RtInput::F32(&x)]).unwrap();
+    assert_eq!(a.data(), b.data());
+}
+
+#[test]
+fn wrong_input_shape_is_rejected() {
+    let Some(engine) = engine() else { return };
+    let test = engine.dataset("test").unwrap();
+    let exec = engine.executable("full_fwd_b16").unwrap();
+    let x = test.batch(0, 1).unwrap(); // batch 1 into a b16 artifact
+    assert!(exec.run(&[RtInput::F32(&x)]).is_err());
+}
+
+#[test]
+fn engine_caches_compiled_executables() {
+    let Some(engine) = engine() else { return };
+    let a = engine.executable("full_fwd_b1").unwrap();
+    let b = engine.executable("full_fwd_b1").unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+    assert!(engine.cached().contains(&"full_fwd_b1".to_string()));
+}
+
+#[test]
+fn lite_model_loses_accuracy_vs_base() {
+    let Some(engine) = engine() else { return };
+    if !engine.manifest.executables.contains_key("full_fwd_lite_b16") {
+        return;
+    }
+    let test = engine.dataset("test").unwrap();
+    let base = engine.executable("full_fwd_b16").unwrap();
+    let lite = engine.executable("full_fwd_lite_b16").unwrap();
+    let mut base_ok = 0;
+    let mut lite_ok = 0;
+    let n = 128;
+    let mut start = 0;
+    while start + 16 <= n {
+        let x = test.batch(start, 16).unwrap();
+        let labels = test.batch_labels(start, 16);
+        for (exec, ok) in [(&base, &mut base_ok), (&lite, &mut lite_ok)] {
+            let logits = exec.run(&[RtInput::F32(&x)]).unwrap();
+            for (p, l) in logits.argmax_last().iter().zip(labels) {
+                if *p == *l as usize {
+                    *ok += 1;
+                }
+            }
+        }
+        start += 16;
+    }
+    assert!(
+        base_ok > lite_ok,
+        "lite ({lite_ok}/{n}) should underperform base ({base_ok}/{n})"
+    );
+}
