@@ -4,7 +4,8 @@
 //! Streams the ICE-Lab image stream at 20 FPS through the full split-
 //! computing pipeline — head inference on the (simulated) edge device,
 //! latent transfer over the simulated TCP channel, tail inference on the
-//! server — with *real* PJRT execution of both model halves, and reports
+//! server — with actual backend execution of both model halves (PJRT
+//! under the `xla` feature, the analytic reference otherwise), and reports
 //! accuracy, latency and the QoS verdict for several loss rates.
 //!
 //!     cargo run --release --example ice_lab_conveyor [artifacts] [frames]
@@ -16,7 +17,7 @@ use sei::coordinator::{
 };
 use sei::model::DeviceProfile;
 use sei::netsim::transfer::{NetworkConfig, Protocol};
-use sei::runtime::Engine;
+use sei::runtime::{load_backend, InferenceBackend};
 
 fn main() -> anyhow::Result<()> {
     let artifacts = std::env::args()
@@ -27,12 +28,12 @@ fn main() -> anyhow::Result<()> {
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(480);
-    let engine = Engine::load(Path::new(&artifacts))?;
+    let engine = load_backend(Path::new(&artifacts))?;
     let ice = engine.dataset("ice")?;
     let qos = QosRequirements::ice_lab(); // 0.05 s / 20 FPS conveyor
 
     // Pick the deepest exported split (smallest latent on the wire).
-    let splits = engine.manifest.available_splits();
+    let splits = engine.manifest().available_splits();
     let split = *splits.last().expect("no split artifacts");
     println!("=== ICE-Lab conveyor, split computing at L{split} ===");
     println!(
@@ -50,7 +51,8 @@ fn main() -> anyhow::Result<()> {
             scale: ModelScale::Slim,
             frame_period_ns: 50_000_000,
         };
-        let report = coordinator::serve(&engine, &cfg, &ice, frames, &qos)?;
+        let report = coordinator::serve(&*engine, &cfg, &ice, frames,
+                                        &qos)?;
         println!("--- loss rate {:.0}% ---", loss * 100.0);
         print!("{}", report.render(&qos));
         println!();

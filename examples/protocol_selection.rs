@@ -11,13 +11,13 @@ use sei::coordinator::{
 };
 use sei::model::DeviceProfile;
 use sei::netsim::transfer::{NetworkConfig, Protocol};
-use sei::runtime::Engine;
+use sei::runtime::{load_backend, InferenceBackend};
 
 fn main() -> anyhow::Result<()> {
     let artifacts = std::env::args()
         .nth(1)
         .unwrap_or_else(|| "artifacts".to_string());
-    let engine = Engine::load(Path::new(&artifacts))?;
+    let engine = load_backend(Path::new(&artifacts))?;
     let test = engine.dataset("test")?;
     let qos = QosRequirements::none();
 
@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
                 scale: ModelScale::Slim,
                 frame_period_ns: 50_000_000,
             };
-            let r = coordinator::run_scenario(&engine, &cfg, &test, 128,
+            let r = coordinator::run_scenario(&*engine, &cfg, &test, 128,
                                               &qos)?;
             match protocol {
                 Protocol::Tcp => {

@@ -12,13 +12,13 @@ use sei::coordinator::{
 };
 use sei::model::DeviceProfile;
 use sei::netsim::transfer::{NetworkConfig, Protocol};
-use sei::runtime::Engine;
+use sei::runtime::{load_backend, InferenceBackend};
 
 fn main() -> anyhow::Result<()> {
     let artifacts = std::env::args()
         .nth(1)
         .unwrap_or_else(|| "artifacts".to_string());
-    let engine = Engine::load(Path::new(&artifacts))?;
+    let engine = load_backend(Path::new(&artifacts))?;
     let test = engine.dataset("test")?;
     let qos = QosRequirements::with_fps(20.0).and_accuracy(0.85);
     println!("=== QoS explorer: {} ===\n", qos.describe());
@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
         ("wifi", NetworkConfig::wifi),
     ];
     let mut kinds = vec![ScenarioKind::Lc, ScenarioKind::Rc];
-    for s in engine.manifest.available_splits() {
+    for s in engine.manifest().available_splits() {
         kinds.push(ScenarioKind::Sc { split: s });
     }
 
@@ -49,8 +49,8 @@ fn main() -> anyhow::Result<()> {
                     scale: ModelScale::Slim,
                     frame_period_ns: 50_000_000,
                 };
-                let r = coordinator::run_scenario(&engine, &cfg, &test, 64,
-                                                  &qos)?;
+                let r = coordinator::run_scenario(&*engine, &cfg, &test,
+                                                  64, &qos)?;
                 let ok = qos
                     .satisfied_by(r.mean_latency_ns as u64, r.accuracy);
                 println!(

@@ -1,8 +1,9 @@
-//! Quickstart: load the artifacts, print the model card, compare LC / RC /
+//! Quickstart: load a backend, print the model card, compare LC / RC /
 //! SC on a short workload, and ask the framework for a suggestion.
 //!
-//! Run after `make artifacts && cargo build --release`:
+//! Runs hermetically on the analytic backend — no artifacts or XLA needed:
 //!     cargo run --release --example quickstart
+//! With the `xla` feature and built artifacts it serves the real model.
 
 use std::path::Path;
 
@@ -11,14 +12,14 @@ use sei::coordinator::{
 };
 use sei::model::DeviceProfile;
 use sei::netsim::transfer::{NetworkConfig, Protocol};
-use sei::runtime::Engine;
+use sei::runtime::{load_backend, InferenceBackend};
 
 fn main() -> anyhow::Result<()> {
     let artifacts = std::env::args()
         .nth(1)
         .unwrap_or_else(|| "artifacts".to_string());
-    let engine = Engine::load(Path::new(&artifacts))?;
-    let m = &engine.manifest.model;
+    let engine = load_backend(Path::new(&artifacts))?;
+    let m = &engine.manifest().model;
     println!("=== Split-Et-Impera quickstart ===");
     println!(
         "model: {} ({} params), trained test accuracy {:.1}%",
@@ -26,14 +27,14 @@ fn main() -> anyhow::Result<()> {
         m.total_params,
         m.base_test_accuracy * 100.0
     );
-    println!("PJRT platform: {}\n", engine.platform());
+    println!("backend: {} ({})\n", engine.name(), engine.platform());
 
     // 1. Saliency-based split-point candidates (paper Fig. 1, step i).
-    let curve = CsCurve::from_manifest(&engine);
+    let curve = CsCurve::from_manifest(engine.manifest());
     let candidates = curve.candidates(2);
     println!("CS candidate split points: {candidates:?}");
     for &c in &candidates {
-        if let Some(row) = engine.manifest.split_eval_for(c) {
+        if let Some(row) = engine.manifest().split_eval_for(c) {
             println!(
                 "  L{c:<2} {:<14} split accuracy {:.1}%, latent {} B/frame",
                 row.layer_name,
@@ -60,7 +61,8 @@ fn main() -> anyhow::Result<()> {
             scale: ModelScale::Slim,
             frame_period_ns: 50_000_000,
         };
-        let r = coordinator::run_scenario(&engine, &cfg, &test, 96, &qos)?;
+        let r = coordinator::run_scenario(&*engine, &cfg, &test, 96,
+                                          &qos)?;
         println!(
             "  {:<8} accuracy {:>5.1}%  mean latency {:>8.3} ms  {}",
             kind.to_string(),
@@ -76,7 +78,7 @@ fn main() -> anyhow::Result<()> {
 
     // 3. Ask the suggestion engine (paper Fig. 1, step iii).
     let suggestions = coordinator::suggest(
-        &engine,
+        &*engine,
         &NetworkConfig::gigabit(Protocol::Tcp, 0.02, 7),
         &DeviceProfile::edge_gpu(),
         &DeviceProfile::server_gpu(),

@@ -1,7 +1,7 @@
 //! Ablation: server-side dynamic batching (batch 1 vs 16) on the tail.
 //!
-//! Uses the real b1 and b16 tail artifacts: measures PJRT wall time per
-//! frame with and without batching, plus the queueing delay the batcher's
+//! Uses the b1 and b16 tail executables of the active backend: measures
+//! wall time per frame with and without batching, plus the queueing delay the batcher's
 //! deadline policy adds under a Poisson arrival stream — the classic
 //! throughput-vs-latency trade-off a deployment must tune.
 
@@ -9,18 +9,14 @@ use std::path::Path;
 
 use sei::coordinator::batcher::{BatchPolicy, Batcher};
 use sei::coordinator::workload::{ArrivalProcess, Workload};
-use sei::runtime::{Engine, RtInput};
+use sei::runtime::{load_backend, Executable, InferenceBackend, RtInput};
 use sei::util::bench::Bencher;
 
 fn main() {
-    let dir = Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("ablation_batching: artifacts not built");
-        return;
-    }
-    let engine = Engine::load(dir).expect("engine");
+    let engine =
+        load_backend(Path::new("artifacts")).expect("backend");
     let test = engine.dataset("test").expect("test");
-    let splits = engine.manifest.available_splits();
+    let splits = engine.manifest().available_splits();
     let split = *splits.last().expect("splits");
 
     println!("=== ablation: dynamic batching on the tail (SC@L{split}) ===\n");
@@ -86,7 +82,7 @@ fn main() {
                  mean_wait, sizes.len());
     }
     println!(
-        "\ntakeaway: batching pays {:.2}x PJRT throughput for a bounded \
+        "\ntakeaway: batching pays {:.2}x backend throughput for a bounded \
          (max_wait) queueing delay — worth it once arrival rate saturates \
          the b1 path.",
         per_frame_b1 / per_frame_b16

@@ -17,7 +17,7 @@ use sei::netsim::link::LossModel;
 use sei::netsim::transfer::{Channel, NetworkConfig, Protocol};
 use sei::netsim::Dir;
 use sei::report::csv::Csv;
-use sei::runtime::Engine;
+use sei::runtime::{load_backend, InferenceBackend};
 
 const FRAMES: usize = 160;
 
@@ -56,10 +56,10 @@ fn main() {
                      format!("{ge:.4}"), String::new()]);
     }
 
-    // UDP accuracy side needs the real model.
-    let dir = Path::new("artifacts");
-    if dir.join("manifest.json").exists() {
-        let engine = Engine::load(dir).expect("engine");
+    // UDP accuracy side needs a model backend.
+    {
+        let engine =
+            load_backend(Path::new("artifacts")).expect("backend");
         let test = engine.dataset("test").expect("test");
         println!("\nUDP accuracy under corruption (RC scenario, slim):");
         println!("{:<8} {:>10} {:>12}", "loss", "iid", "bursty(8)");
@@ -77,7 +77,7 @@ fn main() {
                     scale: ModelScale::Slim,
                     frame_period_ns: 50_000_000,
                 };
-                let r = run_scenario(&engine, &cfg, &test, FRAMES,
+                let r = run_scenario(&*engine, &cfg, &test, FRAMES,
                                      &QosRequirements::none())
                     .expect("scenario");
                 accs.push(r.accuracy);
@@ -90,8 +90,6 @@ fn main() {
             csv.row(vec![loss.to_string(), "bursty-udp".into(),
                          String::new(), format!("{:.4}", accs[1])]);
         }
-    } else {
-        eprintln!("(artifacts not built — skipping UDP accuracy half)");
     }
     csv.write(Path::new("reports/ablation_loss_model.csv")).unwrap();
     println!("\nwrote reports/ablation_loss_model.csv");

@@ -3,32 +3,29 @@
 //! at the CS local maxima.
 //!
 //! The CS curve is recomputed *in Rust* by executing the per-layer
-//! Grad-CAM artifacts on the PJRT CPU client; the split-accuracy trace
-//! comes from the build-time bottleneck+fine-tune evaluation recorded in
-//! the manifest. Writes reports/fig2.txt and reports/fig2.csv.
+//! Grad-CAM executables on the active inference backend (PJRT artifacts
+//! under the `xla` feature, the hermetic analytic backend otherwise); the
+//! split-accuracy trace comes from the manifest. Writes reports/fig2.txt
+//! and reports/fig2.csv.
 
 use std::path::Path;
 
 use sei::coordinator::saliency::compute_cs_curve;
 use sei::report::csv::Csv;
 use sei::report::fig2_report;
-use sei::runtime::Engine;
+use sei::runtime::{load_backend, Executable, InferenceBackend};
 use sei::util::bench::Bencher;
 
 fn main() {
-    let dir = Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("fig2_cs_curve: artifacts not built — run `make artifacts`");
-        return;
-    }
-    let engine = Engine::load(dir).expect("engine");
+    let engine =
+        load_backend(Path::new("artifacts")).expect("backend");
     let test = engine.dataset("test").expect("test set");
-    let names = engine.manifest.model.layer_names.clone();
+    let names = engine.manifest().model.layer_names.clone();
 
     println!("=== Fig. 2: CS curve + split accuracy ===\n");
-    let n_images = if engine.manifest.fast { 32 } else { 128 };
+    let n_images = if engine.manifest().fast { 32 } else { 128 };
     let t0 = std::time::Instant::now();
-    let curve = compute_cs_curve(&engine, &test, n_images).expect("cs");
+    let curve = compute_cs_curve(&*engine, &test, n_images).expect("cs");
     let cs_seconds = t0.elapsed().as_secs_f64();
     let norm = curve.normalized();
 
@@ -39,7 +36,7 @@ fn main() {
         let name = names[li].clone();
         let is_pool = name.ends_with("_pool");
         let acc = engine
-            .manifest
+            .manifest()
             .split_eval_for(li)
             .map(|r| r.accuracy)
             .unwrap_or(f64::NAN);
@@ -95,8 +92,9 @@ fn main() {
     println!("\nwrote reports/fig2.csv, reports/fig2.txt");
     println!(
         "CS computation: {} layers x {n_images} images in {cs_seconds:.1}s \
-         (pure Rust+PJRT)",
-        curve.layers.len()
+         (pure Rust, {} backend)",
+        curve.layers.len(),
+        engine.name()
     );
 
     // Timing: one gradcam artifact execution (the design-phase hot loop).

@@ -17,19 +17,15 @@ use sei::model::DeviceProfile;
 use sei::netsim::transfer::{NetworkConfig, Protocol};
 use sei::report::csv::Csv;
 use sei::report::fig3_report;
-use sei::runtime::Engine;
+use sei::runtime::load_backend;
 
 const CONSTRAINT_S: f64 = 0.05; // 20 FPS conveyor belt
 const FRAMES: usize = 400;
 const SEEDS: u64 = 5;
 
 fn main() {
-    let dir = Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("fig3: artifacts not built — run `make artifacts`");
-        return;
-    }
-    let engine = Engine::load(dir).expect("engine");
+    let engine =
+        load_backend(Path::new("artifacts")).expect("backend");
     let loss_rates: Vec<f64> =
         vec![0.0, 0.01, 0.02, 0.03, 0.04, 0.05, 0.06, 0.08, 0.10];
     let splits = [11usize, 15];
@@ -59,7 +55,7 @@ fn main() {
                     frame_period_ns: 50_000_000,
                 };
                 all.extend(
-                    simulate_latency(&engine, &cfg, FRAMES).expect("sim"),
+                    simulate_latency(&*engine, &cfg, FRAMES).expect("sim"),
                 );
             }
             let mean =

@@ -3,7 +3,7 @@
 //!
 //! Accuracy is *measured*: every frame's input tensor is transferred
 //! through the simulated channel and — under UDP — corrupted exactly where
-//! datagrams were lost, then classified by the real PJRT model.
+//! datagrams were lost, then classified by the active backend's model.
 //! Latency uses paper-scale volumetrics (224x224x3 f32 input ≈ 602 kB).
 //! Expected shape: TCP accuracy flat / latency rising; UDP latency flat /
 //! accuracy falling. Writes reports/fig4.txt and reports/fig4.csv.
@@ -16,18 +16,14 @@ use sei::model::DeviceProfile;
 use sei::netsim::transfer::{NetworkConfig, Protocol};
 use sei::report::csv::Csv;
 use sei::report::fig4_report;
-use sei::runtime::Engine;
+use sei::runtime::{load_backend, InferenceBackend};
 
 const ACC_FRAMES: usize = 192;
 const LAT_FRAMES: usize = 300;
 
 fn main() {
-    let dir = Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("fig4: artifacts not built — run `make artifacts`");
-        return;
-    }
-    let engine = Engine::load(dir).expect("engine");
+    let engine =
+        load_backend(Path::new("artifacts")).expect("backend");
     let test = engine.dataset("test").expect("test");
     let loss_rates = vec![0.0, 0.01, 0.02, 0.04, 0.06, 0.08, 0.10];
     let qos = QosRequirements::none();
@@ -52,7 +48,8 @@ fn main() {
                 scale: ModelScale::Slim,
                 frame_period_ns: 50_000_000,
             };
-            let r = run_scenario(&engine, &cfg_acc, &test, ACC_FRAMES, &qos)
+            let r = run_scenario(&*engine, &cfg_acc, &test, ACC_FRAMES,
+                                 &qos)
                 .expect("scenario");
             acc[pi].push(r.accuracy);
             // Latency at paper scale (VGG16@224 input volume).
@@ -61,7 +58,7 @@ fn main() {
                 net: NetworkConfig::gigabit(*proto, loss, 777),
                 ..cfg_acc
             };
-            let lats = simulate_latency(&engine, &cfg_lat, LAT_FRAMES)
+            let lats = simulate_latency(&*engine, &cfg_lat, LAT_FRAMES)
                 .expect("lat");
             lat[pi].push(
                 lats.iter().map(|v| *v as f64).sum::<f64>()

@@ -1,5 +1,10 @@
 //! Microbenchmarks of the discrete-event simulator — the L3 hot path
 //! (EXPERIMENTS.md §Perf tracks these before/after optimization).
+//!
+//! Environment knobs (used by the CI bench-smoke step):
+//!   SEI_BENCH_QUICK=1      reduced warmup/measure budget per benchmark
+//!   SEI_BENCH_JSON=<path>  also write the stats as machine-readable JSON
+//!                          (the `BENCH_netsim.json` perf trajectory)
 
 use sei::netsim::event::EventQueue;
 use sei::netsim::link::{Link, LinkConfig};
@@ -7,7 +12,8 @@ use sei::netsim::tcp::{self, TcpConfig, TcpState};
 use sei::netsim::transfer::{Channel, NetworkConfig, Protocol};
 use sei::netsim::udp::{self, UdpConfig};
 use sei::netsim::Dir;
-use sei::util::bench::{black_box, Bencher};
+use sei::util::bench::{black_box, Bencher, Stats};
+use sei::util::json::{self, Json};
 use sei::util::rng::Rng;
 
 fn links(loss: f64, seed: u64) -> (Link, Link) {
@@ -17,12 +23,18 @@ fn links(loss: f64, seed: u64) -> (Link, Link) {
 }
 
 fn main() {
-    println!("=== netsim microbenchmarks ===\n");
-    let b = Bencher::default();
+    let quick = std::env::var("SEI_BENCH_QUICK").is_ok();
+    println!(
+        "=== netsim microbenchmarks{} ===\n",
+        if quick { " (quick)" } else { "" }
+    );
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+    let mut results: Vec<(String, Stats)> = Vec::new();
 
     // Event queue throughput.
     for n in [1_000usize, 100_000] {
-        let st = b.bench(&format!("event_queue_schedule_pop_{n}"), || {
+        let name = format!("event_queue_schedule_pop_{n}");
+        let st = b.bench(&name, || {
             let mut q = EventQueue::new();
             let mut rng = Rng::new(7);
             for _ in 0..n {
@@ -34,10 +46,11 @@ fn main() {
             "      -> {:.1} M events/s",
             n as f64 / (st.mean_ns / 1e9) / 1e6
         );
+        results.push((name, st));
     }
 
     // PRNG.
-    b.bench("rng_next_u64_x1000", || {
+    let st = b.bench("rng_next_u64_x1000", || {
         let mut r = Rng::new(1);
         let mut acc = 0u64;
         for _ in 0..1000 {
@@ -45,14 +58,16 @@ fn main() {
         }
         black_box(acc);
     });
+    results.push(("rng_next_u64_x1000".to_string(), st));
 
     // Raw link sends.
-    b.bench("link_send_x1000", || {
+    let st = b.bench("link_send_x1000", || {
         let (mut l, _) = links(0.02, 3);
         for i in 0..1000u64 {
             black_box(l.send(i * 10_000, 1500));
         }
     });
+    results.push(("link_send_x1000".to_string(), st));
 
     // TCP message transfers at several sizes and loss rates.
     for (len, loss) in [(2_048u64, 0.0), (803_000, 0.0), (803_000, 0.03),
@@ -72,24 +87,51 @@ fn main() {
         });
         let mbps = len as f64 / (st.mean_ns / 1e9) / 1e6;
         println!("      -> {mbps:.0} MB/s of simulated payload");
+        results.push((name, st));
     }
 
     // UDP burst.
     let mut seed = 0u64;
-    b.bench("udp_send_803kB_loss10%", || {
+    let st = b.bench("udp_send_803kB_loss10%", || {
         seed += 1;
         let (mut l, _) = links(0.10, seed);
         black_box(udp::send_message(&UdpConfig::default(), &mut l,
                                     803_000, 0));
     });
+    results.push(("udp_send_803kB_loss10%".to_string(), st));
 
     // Whole-channel round trip (the scenario engine's inner loop).
     let mut ch = Channel::new(NetworkConfig::gigabit(Protocol::Tcp, 0.02, 5));
     let mut frame = 0u64;
-    b.bench("channel_frame_roundtrip_2kB", || {
+    let st = b.bench("channel_frame_roundtrip_2kB", || {
         frame += 1;
         ch.advance_to(frame * 50_000_000);
         black_box(ch.send(Dir::Up, 2048).unwrap());
         black_box(ch.send(Dir::Down, 40).unwrap());
     });
+    results.push(("channel_frame_roundtrip_2kB".to_string(), st));
+
+    if let Ok(path) = std::env::var("SEI_BENCH_JSON") {
+        let entries: Vec<Json> = results
+            .iter()
+            .map(|(name, st)| {
+                json::obj(vec![
+                    ("name", json::s(name)),
+                    ("mean_ns", json::num(st.mean_ns)),
+                    ("median_ns", json::num(st.median_ns)),
+                    ("p99_ns", json::num(st.p99_ns)),
+                    ("min_ns", json::num(st.min_ns)),
+                    ("max_ns", json::num(st.max_ns)),
+                    ("iters", json::num(st.iters as f64)),
+                ])
+            })
+            .collect();
+        let doc = json::obj(vec![
+            ("bench", json::s("netsim_micro")),
+            ("quick", Json::Bool(quick)),
+            ("results", json::arr(entries)),
+        ]);
+        std::fs::write(&path, doc.to_string()).expect("write bench json");
+        println!("\nwrote {path}");
+    }
 }

@@ -5,9 +5,10 @@
 //! This module replaces the *simulated* server with a real worker process
 //! (or thread) reached over an actual TCP socket: the leader runs the head
 //! locally, ships the latent over the wire with a small length-prefixed
-//! frame protocol, and the worker runs the tail on its own PJRT client and
-//! returns the logits. Round-trip wall time is measured, giving a real
-//! (not simulated) latency sample to calibrate the netsim against.
+//! frame protocol, and the worker runs the tail on its own inference
+//! backend (PJRT under the `xla` feature, analytic otherwise) and returns
+//! the logits. Round-trip wall time is measured, giving a real (not
+//! simulated) latency sample to calibrate the netsim against.
 //!
 //! Frame protocol (little-endian):
 //!   request:  [magic u32 = 0x5E1F00D] [n_bytes u32] [payload f32 bytes]
@@ -21,7 +22,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::{Engine, RtInput};
+use crate::runtime::{load_backend, Executable, InferenceBackend, RtInput};
 use crate::tensor::Tensor;
 
 const MAGIC: u32 = 0x05E1_F00D;
@@ -60,9 +61,9 @@ fn read_frame(stream: &mut TcpStream) -> Result<Vec<f32>> {
 pub fn run_worker(artifacts: &Path, addr: &str, exec_name: &str)
     -> Result<u64>
 {
-    let engine = Engine::load(artifacts)?;
+    let engine = load_backend(artifacts)?;
     let exec = engine.executable(exec_name)?;
-    let input_shape = exec.spec.inputs[0].shape.clone();
+    let input_shape = exec.spec().inputs[0].shape.clone();
     let n_in: usize = input_shape.iter().product();
     let listener = TcpListener::bind(addr)
         .with_context(|| format!("binding {addr}"))?;

@@ -1,7 +1,8 @@
 //! The Split-Et-Impera coordinator (paper Fig. 1): saliency-driven split
 //! search, communication-aware scenario simulation, QoS suggestion, and the
 //! serving driver. This is the L3 system contribution; it owns the event
-//! loop and drives the PJRT runtime and the netsim.
+//! loop and drives the netsim plus whichever [`crate::runtime`] inference
+//! backend is loaded (PJRT artifacts or the hermetic analytic reference).
 
 pub mod batcher;
 pub mod corruption;

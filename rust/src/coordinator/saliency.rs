@@ -1,18 +1,19 @@
 //! Saliency-driven split-point search (paper Sec. III, step i of Fig. 1).
 //!
 //! The CS curve can come from two places:
-//!   * the manifest (computed by python at build time), or
+//!   * the manifest (computed by python at build time, or synthesised by
+//!     the analytic backend), or
 //!   * [`compute_cs_curve`] — recomputed **in Rust** by running the
-//!     per-layer Grad-CAM artifacts (`gradcam_L{i}_b16.hlo.txt`, which
-//!     embed the forward pass, the backward pass to the target layer and
-//!     the Pallas saliency reduction) over a test batch stream. This is the
-//!     framework's "no python on the request path" claim applied to the
-//!     design phase as well.
+//!     per-layer Grad-CAM executables (`gradcam_L{i}_b16`; under the `xla`
+//!     feature these embed the forward pass, the backward pass to the
+//!     target layer and the Pallas saliency reduction) over a test batch
+//!     stream. This is the framework's "no python on the request path"
+//!     claim applied to the design phase as well.
 
 use anyhow::Result;
 
 use crate::data::Dataset;
-use crate::runtime::{Engine, RtInput};
+use crate::runtime::{Executable, InferenceBackend, Manifest, RtInput};
 
 /// A cumulative-saliency curve over the 18 feature layers.
 #[derive(Clone, Debug)]
@@ -24,8 +25,8 @@ pub struct CsCurve {
 }
 
 impl CsCurve {
-    pub fn from_manifest(engine: &Engine) -> CsCurve {
-        let cs = &engine.manifest.cs_curve;
+    pub fn from_manifest(manifest: &Manifest) -> CsCurve {
+        let cs = &manifest.cs_curve;
         CsCurve {
             raw: cs.raw.clone(),
             layers: (0..cs.raw.len()).collect(),
@@ -62,18 +63,18 @@ impl CsCurve {
     }
 }
 
-/// Recompute the CS curve by executing the Grad-CAM artifacts on `n_images`
-/// of `dataset` (must be a multiple of the artifact batch, 16).
+/// Recompute the CS curve by executing the Grad-CAM executables on
+/// `n_images` of `dataset` (must be a multiple of the artifact batch, 16).
 pub fn compute_cs_curve(
-    engine: &Engine,
+    engine: &dyn InferenceBackend,
     dataset: &Dataset,
     n_images: usize,
 ) -> Result<CsCurve> {
-    let layers = engine.manifest.gradcam_layers();
+    let layers = engine.manifest().gradcam_layers();
     let mut raw = Vec::with_capacity(layers.len());
     for &li in &layers {
         let exec = engine.executable(&format!("gradcam_L{li}_b16"))?;
-        let batch = exec.spec.batch;
+        let batch = exec.spec().batch;
         let n = n_images.min(dataset.len()) / batch * batch;
         let mut acc = 0.0f64;
         let mut count = 0usize;

@@ -11,9 +11,11 @@
 //!       [server: AE decoder + tail] -> XMTR(result) -> netsim -> prediction
 //!
 //! *Latency* is simulated time: device-profile compute + discrete-event
-//! transfer. *Accuracy* is real: the PJRT artifacts execute on the (loss-
-//! corrupted, for UDP) tensors. Volumetrics can be taken from the slim
-//! trained model or from the paper's full VGG16 @ 224x224 ([`ModelScale`]).
+//! transfer. *Accuracy* is measured: the backend's executables run on the
+//! (loss-corrupted, for UDP) tensors — real PJRT artifacts under the `xla`
+//! feature, the hermetic analytic reference backend otherwise. Volumetrics
+//! can be taken from the slim trained model or from the paper's full VGG16
+//! @ 224x224 ([`ModelScale`]).
 
 use anyhow::{bail, Result};
 
@@ -24,7 +26,7 @@ use crate::model::{self, DeviceProfile, Network};
 use crate::netsim::event::SimTime;
 use crate::netsim::transfer::{Channel, NetworkConfig, Protocol};
 use crate::netsim::Dir;
-use crate::runtime::{Engine, RtInput};
+use crate::runtime::{Executable, InferenceBackend, RtInput};
 use crate::tensor::Tensor;
 
 /// Architecture under test (paper Sec. II-A).
@@ -153,13 +155,15 @@ struct Costs {
     server_mult_adds: u64,
 }
 
-fn slim_network(engine: &Engine) -> Network {
-    let m = &engine.manifest.model;
+fn slim_network(engine: &dyn InferenceBackend) -> Network {
+    let m = &engine.manifest().model;
     model::vgg16_slim(m.img_size, m.width_mult, m.hidden, m.num_classes)
 }
 
-fn costs(engine: &Engine, cfg: &ScenarioConfig) -> Result<Costs> {
-    let m = &engine.manifest.model;
+fn costs(engine: &dyn InferenceBackend, cfg: &ScenarioConfig)
+    -> Result<Costs>
+{
+    let m = &engine.manifest().model;
     let down_bytes = (m.num_classes * 4) as u64;
     let (net, input_bytes): (Network, u64) = match cfg.scale {
         ModelScale::Slim => (
@@ -215,7 +219,7 @@ fn costs(engine: &Engine, cfg: &ScenarioConfig) -> Result<Costs> {
 
 /// Run `n_frames` frames of `dataset` through the configured scenario.
 pub fn run_scenario(
-    engine: &Engine,
+    engine: &dyn InferenceBackend,
     cfg: &ScenarioConfig,
     dataset: &Dataset,
     n_frames: usize,
@@ -223,12 +227,12 @@ pub fn run_scenario(
 ) -> Result<ScenarioReport> {
     let costs = costs(engine, cfg)?;
     let mut channel = Channel::new(cfg.net.clone());
-    let num_classes = engine.manifest.model.num_classes;
+    let num_classes = engine.manifest().model.num_classes;
 
     // Pre-load the executables used by this scenario.
     let (full_exec, head_exec, tail_exec) = match cfg.kind {
         ScenarioKind::Lc => {
-            let name = if engine.manifest.executables
+            let name = if engine.manifest().executables
                 .contains_key("full_fwd_lite_b1")
             {
                 "full_fwd_lite_b1"
@@ -347,10 +351,10 @@ pub fn run_scenario(
     Ok(ScenarioReport::from_records(cfg, records, qos))
 }
 
-/// Latency-only variant: no PJRT execution, pure simulation (used by the
+/// Latency-only variant: no model execution, pure simulation (used by the
 /// paper-scale Fig. 3 sweeps where accuracy is not measured per point).
 pub fn simulate_latency(
-    engine: &Engine,
+    engine: &dyn InferenceBackend,
     cfg: &ScenarioConfig,
     n_frames: usize,
 ) -> Result<Vec<SimTime>> {

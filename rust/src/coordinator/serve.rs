@@ -1,9 +1,9 @@
 //! Serving driver: streams frames (the ICE-Lab conveyor belt) through a
-//! configured scenario in real time, with actual PJRT inference per frame,
-//! and reports accuracy / latency / throughput / deadline behaviour.
+//! configured scenario in real time, with actual backend inference per
+//! frame, and reports accuracy / latency / throughput / deadline behaviour.
 //!
 //! This is the end-to-end validation path: every layer composes — dataset
-//! loader -> scenario engine -> netsim -> PJRT artifacts -> QoS verdict.
+//! loader -> scenario engine -> netsim -> inference backend -> QoS verdict.
 
 use std::time::Instant;
 
@@ -13,12 +13,12 @@ use super::qos::QosRequirements;
 use super::scenario::{run_scenario, ScenarioConfig, ScenarioReport};
 use crate::data::Dataset;
 use crate::netsim::event::secs;
-use crate::runtime::Engine;
+use crate::runtime::InferenceBackend;
 
 #[derive(Clone, Debug)]
 pub struct ServeReport {
     pub scenario: ScenarioReport,
-    /// Real wall-clock seconds spent serving (PJRT + coordinator).
+    /// Real wall-clock seconds spent serving (backend + coordinator).
     pub wall_seconds: f64,
     /// Real frames per second achieved by the serving path.
     pub wall_fps: f64,
@@ -81,7 +81,7 @@ impl ServeReport {
 
 /// Serve `n_frames` frames from `dataset` through `cfg`.
 pub fn serve(
-    engine: &Engine,
+    engine: &dyn InferenceBackend,
     cfg: &ScenarioConfig,
     dataset: &Dataset,
     n_frames: usize,

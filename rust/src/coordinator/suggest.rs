@@ -14,7 +14,7 @@ use super::scenario::{
 use crate::data::Dataset;
 use crate::model::DeviceProfile;
 use crate::netsim::transfer::NetworkConfig;
-use crate::runtime::Engine;
+use crate::runtime::InferenceBackend;
 
 /// One ranked configuration, pre-simulation.
 #[derive(Clone, Debug)]
@@ -38,11 +38,11 @@ pub struct Suggestion {
 
 /// Step 1+2: candidate split points from the CS curve, ranked by predicted
 /// accuracy, plus the LC and RC baselines.
-pub fn rank_configurations(engine: &Engine, min_layer: usize)
+pub fn rank_configurations(engine: &dyn InferenceBackend, min_layer: usize)
     -> Vec<RankedConfig>
 {
-    let m = &engine.manifest;
-    let curve = CsCurve::from_manifest(engine);
+    let m = engine.manifest();
+    let curve = CsCurve::from_manifest(m);
     let norm = curve.normalized();
     let available = m.available_splits();
     let mut out = Vec::new();
@@ -89,15 +89,15 @@ pub fn rank_configurations(engine: &Engine, min_layer: usize)
     out
 }
 
-fn lite_accuracy(engine: &Engine) -> f64 {
-    engine.manifest.lite_accuracy.unwrap_or(0.0)
+fn lite_accuracy(engine: &dyn InferenceBackend) -> f64 {
+    engine.manifest().lite_accuracy.unwrap_or(0.0)
 }
 
 /// Step 3: simulate each ranked configuration and check QoS.
 /// `n_frames` frames of `dataset` per configuration.
 #[allow(clippy::too_many_arguments)]
 pub fn suggest(
-    engine: &Engine,
+    engine: &dyn InferenceBackend,
     net: &NetworkConfig,
     edge: &DeviceProfile,
     server: &DeviceProfile,

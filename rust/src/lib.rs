@@ -7,19 +7,23 @@
 //! application's QoS constraints?* — with three cooperating subsystems:
 //!
 //! 1. **Saliency-driven split search** ([`coordinator::saliency`]): ingest
-//!    the Grad-CAM *Cumulative Saliency* curve (computed by AOT-compiled
-//!    XLA artifacts, see [`runtime`]) and propose candidate split points at
-//!    its local maxima.
+//!    the Grad-CAM *Cumulative Saliency* curve (computed by per-layer
+//!    model executables, see [`runtime`]) and propose candidate split
+//!    points at its local maxima.
 //! 2. **Communication-aware simulation** ([`netsim`],
 //!    [`coordinator::scenario`]): replay LC / RC / SC pipelines over a
 //!    discrete-event channel model (TCP/UDP, latency, capacity, interface
-//!    speed, saboteur) with real model inference on the PJRT CPU client.
+//!    speed, saboteur) with per-frame model inference.
 //! 3. **QoS suggestion** ([`coordinator::suggest`]): rank configurations by
 //!    accuracy, simulate the shortlist, and report which designs satisfy
 //!    the application's latency/accuracy requirements.
 //!
-//! Python/JAX/Pallas exist only in the build path (`python/compile/`);
-//! the serving path is pure Rust + AOT-compiled XLA artifacts.
+//! Inference is pluggable ([`runtime::InferenceBackend`]): the default
+//! build runs every entry point hermetically on the pure-Rust analytic
+//! reference backend ([`runtime::analytic`]) — no artifacts, no Python, no
+//! native libraries — while the `xla` cargo feature swaps in the PJRT
+//! engine ([`runtime::engine`]) that executes the real AOT-compiled XLA
+//! artifacts produced by the python build path (`python/compile/`).
 
 pub mod coordinator;
 pub mod data;

@@ -2,10 +2,14 @@
 //!
 //! Subcommands:
 //!   summary    Tables I/II for VGG16 (or the trained slim model)
-//!   cs-curve   compute the Grad-CAM CS curve in Rust via PJRT artifacts
+//!   cs-curve   compute the Grad-CAM CS curve in Rust via the backend
 //!   suggest    rank + simulate configurations against QoS requirements
 //!   simulate   run one LC/RC/SC scenario over the simulated channel
 //!   serve      stream the ICE-Lab workload through a configuration
+//!
+//! Every command works without built artifacts or XLA: the default build
+//! loads the hermetic analytic backend (see `runtime::analytic`), while
+//! the `xla` cargo feature serves the real AOT artifacts when present.
 
 use std::path::Path;
 use std::process::ExitCode;
@@ -17,7 +21,7 @@ use sei::coordinator::{
 };
 use sei::model::{self, DeviceProfile};
 use sei::netsim::transfer::{NetworkConfig, Protocol};
-use sei::runtime::Engine;
+use sei::runtime::{load_backend, Executable, InferenceBackend};
 use sei::util::cli::Command;
 
 fn main() -> ExitCode {
@@ -60,7 +64,7 @@ fn usage() -> String {
 
 commands:
   summary    print the neural network summary and statistics (Tables I/II)
-  cs-curve   compute the Cumulative Saliency curve via the PJRT artifacts
+  cs-curve   compute the Cumulative Saliency curve via the backend
   suggest    rank candidate configurations and simulate them against QoS
   simulate   run one LC/RC/SC scenario over the simulated channel
   serve      stream the ICE-Lab conveyor workload through a configuration
@@ -108,8 +112,8 @@ fn cmd_summary(args: &[String]) -> Result<()> {
     let net = match m.str("model") {
         "vgg16" => model::vgg16_full(),
         "slim" => {
-            let eng = Engine::load(Path::new(m.str("artifacts")))?;
-            let mi = &eng.manifest.model;
+            let eng = load_backend(Path::new(m.str("artifacts")))?;
+            let mi = &eng.manifest().model;
             model::vgg16_slim(mi.img_size, mi.width_mult, mi.hidden,
                               mi.num_classes)
         }
@@ -128,14 +132,17 @@ fn cmd_cs_curve(args: &[String]) -> Result<()> {
         .opt("images", "128", "number of test images")
         .opt("min-layer", "2", "earliest admissible split layer")
         .parse(args)?;
-    let engine = Engine::load(Path::new(m.str("artifacts")))?;
+    let engine = load_backend(Path::new(m.str("artifacts")))?;
     let test = engine.dataset("test")?;
     let curve = coordinator::saliency::compute_cs_curve(
-        &engine, &test, m.usize("images")?,
+        &*engine, &test, m.usize("images")?,
     )?;
     let norm = curve.normalized();
-    let names = &engine.manifest.model.layer_names;
-    println!("Cumulative Saliency curve (computed in Rust via PJRT):\n");
+    let names = &engine.manifest().model.layer_names;
+    println!(
+        "Cumulative Saliency curve (computed in Rust, {} backend):\n",
+        engine.name()
+    );
     for (i, &li) in curve.layers.iter().enumerate() {
         let bar = "#".repeat((norm[i] * 50.0) as usize);
         println!("L{li:>2} {:<14} {:>7.4} {bar}", names[li], norm[i]);
@@ -144,7 +151,7 @@ fn cmd_cs_curve(args: &[String]) -> Result<()> {
     println!("\ncandidate split points (local CS maxima): {cands:?}");
     println!(
         "build-time candidates (manifest):         {:?}",
-        engine.manifest.cs_curve.candidates
+        engine.manifest().cs_curve.candidates
     );
     Ok(())
 }
@@ -164,7 +171,7 @@ fn cmd_suggest(args: &[String]) -> Result<()> {
         .opt("min-layer", "2", "earliest admissible split layer")
         .opt("seed", "42", "simulation seed")
         .parse(args)?;
-    let engine = Engine::load(Path::new(m.str("artifacts")))?;
+    let engine = load_backend(Path::new(m.str("artifacts")))?;
     let net = network_from(&m)?;
     let (edge, server) = devices_from(&m)?;
     let mut qos = QosRequirements::with_fps(m.f64("fps")?);
@@ -177,7 +184,7 @@ fn cmd_suggest(args: &[String]) -> Result<()> {
     println!("network: {} {} loss {:.1}%\n", m.str("channel"),
              net.protocol, net.loss_rate * 100.0);
     let suggestions = coordinator::suggest(
-        &engine, &net, &edge, &server, &qos, &test, m.usize("frames")?,
+        &*engine, &net, &edge, &server, &qos, &test, m.usize("frames")?,
         m.usize("min-layer")?,
     )?;
     println!(
@@ -231,7 +238,7 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
         .opt("dataset", "test", "train | test | ice")
         .opt("seed", "42", "simulation seed")
         .parse(args)?;
-    let engine = Engine::load(Path::new(m.str("artifacts")))?;
+    let engine = load_backend(Path::new(m.str("artifacts")))?;
     let net = network_from(&m)?;
     let (edge, server) = devices_from(&m)?;
     let qos = QosRequirements::with_fps(m.f64("fps")?);
@@ -248,7 +255,7 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
         frame_period_ns: (1e9 / m.f64("fps")?) as u64,
     };
     let ds = engine.dataset(m.str("dataset"))?;
-    let report = coordinator::serve(&engine, &cfg, &ds,
+    let report = coordinator::serve(&*engine, &cfg, &ds,
                                     m.usize("frames")?, &qos)?;
     print!("{}", report.render(&qos));
     Ok(())
@@ -268,7 +275,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("server", "server-gpu", "server device profile")
         .opt("seed", "42", "simulation seed")
         .parse(args)?;
-    let engine = Engine::load(Path::new(m.str("artifacts")))?;
+    let engine = load_backend(Path::new(m.str("artifacts")))?;
     let net = network_from(&m)?;
     let (edge, server) = devices_from(&m)?;
     let qos = QosRequirements::with_fps(m.f64("fps")?);
@@ -281,7 +288,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         frame_period_ns: (1e9 / m.f64("fps")?) as u64,
     };
     let ice = engine.dataset("ice")?;
-    let report = coordinator::serve(&engine, &cfg, &ice,
+    let report = coordinator::serve(&*engine, &cfg, &ice,
                                     m.usize("frames")?, &qos)?;
     println!("ICE-Lab conveyor serving — platform {}", engine.platform());
     print!("{}", report.render(&qos));
@@ -334,10 +341,10 @@ fn cmd_hil_serve(args: &[String]) -> Result<()> {
         )
     });
 
-    let engine = Engine::load(Path::new(&artifacts))?;
+    let engine = load_backend(Path::new(&artifacts))?;
     let ice = engine.dataset("ice")?;
     let head = engine.executable(&format!("head_L{split}_b1"))?;
-    let num_classes = engine.manifest.model.num_classes;
+    let num_classes = engine.manifest().model.num_classes;
     let mut client = sei::coordinator::hil::HilClient::connect(&addr)?;
     let mut correct = 0usize;
     let t0 = std::time::Instant::now();
@@ -358,7 +365,7 @@ fn cmd_hil_serve(args: &[String]) -> Result<()> {
     println!("split              L{split}");
     println!("frames             {frames} (worker served {served})");
     println!("accuracy           {:.2}%", correct as f64 / frames as f64 * 100.0);
-    println!("real tail RTT      mean {mean_rtt_ms:.3} ms (wire + PJRT)");
+    println!("real tail RTT      mean {mean_rtt_ms:.3} ms (wire + backend)");
     println!("end-to-end         {:.1} frames/s wall", frames as f64 / wall);
     Ok(())
 }

@@ -1,0 +1,980 @@
+//! Hermetic analytic reference backend: a pure-Rust [`InferenceBackend`]
+//! that needs no artifacts, no Python and no native libraries.
+//!
+//! It synthesises everything the framework consumes — manifest metadata,
+//! labelled datasets, per-layer volumetrics and deterministic "inference"
+//! — from `model` statistics and the seedable `util::rng` stream, so the
+//! whole design loop (saliency candidates -> scenario simulation -> QoS
+//! suggestion -> serving) runs end-to-end on any machine, CI runner or
+//! embedded target, with bit-identical results for a given seed.
+//!
+//! The synthetic model is a prototype-correlation classifier over the
+//! slim VGG16 geometry:
+//!
+//!   * each class `c` has a fixed ±1 prototype `p_c` of input length;
+//!   * an image of class `c` is `1.0 + 0.25 p_c + 0.05 eta` (eta a ±1
+//!     per-pixel noise stream), so clean inputs classify by correlation
+//!     with an enormous margin; a small seeded fraction of images is
+//!     generated from the *wrong* prototype, which fixes the backend's
+//!     accuracy at the manifest's recorded values;
+//!   * `head_L*` projects the centered input through a seeded ±1 block
+//!     code into the split's latent shape (a linear bottleneck); `tail_L*`
+//!     correlates the latent against the projected prototypes, so
+//!     head->tail composes to the full model's predictions;
+//!   * UDP loss corruption (zeroed byte ranges — input pixels are never
+//!     0.0 by construction) is detected per row; the damage probability
+//!     `1 - (1-q)^4` of a corrupted fraction `q` deterministically
+//!     (via a content hash) collapses the row to a pseudo-random class,
+//!     reproducing the paper's Fig. 4 accuracy-vs-loss behaviour;
+//!   * per-executable latency counters are simulated from the model's
+//!     mult-add counts instead of wall time, so perf accounting is
+//!     deterministic too.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::backend::{ExecCounters, Executable, InferenceBackend, RtInput};
+use super::manifest::{
+    ArgSpec, CsCurveSpec, DatasetSpec, ExecSpec, Manifest, ModelInfo,
+    SplitEvalRow,
+};
+use crate::data::Dataset;
+use crate::model::{self, Shape};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Base seed of every synthetic stream (prototypes, datasets, codes).
+const BASE_SEED: u64 = 0x5E1A_B001;
+/// Simulated throughput behind the analytic latency counters, MACs/s.
+const ANALYTIC_MACS_PER_SEC: f64 = 1e11;
+/// Fraction of images generated from a wrong prototype per split.
+const GEN_ERR_TEST: f64 = 0.03;
+const GEN_ERR_ICE: f64 = 0.04;
+/// Extra deterministic misclassification rate of the lite model.
+const LITE_FLIP_RATE: f64 = 0.10;
+
+/// Exported split points (the paper's Fig. 2 candidates) and the split
+/// accuracies the synthetic manifest records for them.
+const SPLITS: [usize; 5] = [5, 9, 11, 13, 15];
+const SPLIT_ACC: [f64; 5] = [0.952, 0.958, 0.961, 0.965, 0.968];
+
+/// Synthetic raw CS curve: local maxima exactly at the exported splits
+/// (plus layer 1, below the default `min_layer`).
+const CS_RAW: [f64; 18] = [
+    0.05, 0.10, 0.08, 0.12, 0.20, 0.35, 0.18, 0.22, 0.30, 0.46, 0.38, 0.55,
+    0.44, 0.66, 0.58, 0.83, 0.70, 0.92,
+];
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn hash_f32s(mut h: u64, vals: &[f32]) -> u64 {
+    for v in vals {
+        h = fnv1a(h, &v.to_le_bytes());
+    }
+    h
+}
+
+/// Map a hash to a uniform fraction in [0, 1).
+fn hash_frac(h: u64) -> f64 {
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+fn sign_stream(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| if rng.chance(0.5) { 1.0 } else { -1.0 }).collect()
+}
+
+fn one_hot(class: usize, num_classes: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; num_classes];
+    v[class] = 1.0;
+    v
+}
+
+fn argmax(scores: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, s) in scores.iter().enumerate() {
+        if *s > scores[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Detect zeroed (corruption) bytes in a row and decide — via a content
+/// hash, deterministically — whether the damage flips the row to a
+/// pseudo-random class. Returns the row hash for downstream draws.
+fn damage_check(
+    row: &[f32],
+    family_hash: u64,
+    num_classes: usize,
+) -> (u64, Option<usize>) {
+    let h = hash_f32s(family_hash, row);
+    let zeros = row.iter().filter(|v| **v == 0.0).count();
+    if zeros > 0 {
+        let q = zeros as f64 / row.len() as f64;
+        let p = 1.0 - (1.0 - q).powi(4);
+        if hash_frac(h) < p {
+            return (h, Some((h % num_classes as u64) as usize));
+        }
+    }
+    (h, None)
+}
+
+/// What an analytic executable computes per input row.
+enum Body {
+    /// Prototype-correlation classifier (full / lite / Pallas variants).
+    Classifier { flip_rate: f64 },
+    /// Bottleneck encoder into the split's latent shape.
+    Head { signs: Rc<Vec<f32>> },
+    /// Latent-space classifier over the projected prototypes.
+    Tail { w_protos: Vec<Vec<f64>> },
+    /// Per-image cumulative-saliency value of one feature layer.
+    GradCam { cs_raw: f64 },
+}
+
+struct AnalyticExec {
+    spec: ExecSpec,
+    body: Body,
+    protos: Rc<Vec<Vec<f32>>>,
+    /// Input-image element count (score normalisation constant).
+    n_input: usize,
+    num_classes: usize,
+    /// Hash domain shared across batch sizes of the same model family, so
+    /// `*_b1` and `*_b16` decide flips/damage identically per image.
+    family_hash: u64,
+    /// Simulated cost of one call, ns (mult-adds / analytic throughput).
+    sim_exec_ns: u64,
+    counters: RefCell<ExecCounters>,
+}
+
+impl AnalyticExec {
+    fn correlate(&self, row: &[f32]) -> Vec<f64> {
+        let mut scores = Vec::with_capacity(self.num_classes);
+        for proto in self.protos.iter() {
+            let mut acc = 0.0f64;
+            for (&p, &x) in proto.iter().zip(row) {
+                acc += p as f64 * (x as f64 - 1.0);
+            }
+            scores.push(acc / self.n_input as f64);
+        }
+        scores
+    }
+
+    fn classifier_row(&self, row: &[f32], flip_rate: f64) -> Vec<f32> {
+        let nc = self.num_classes;
+        let (h, damaged) = damage_check(row, self.family_hash, nc);
+        if let Some(c) = damaged {
+            return one_hot(c, nc);
+        }
+        let scores = self.correlate(row);
+        if flip_rate > 0.0 {
+            let h2 = h.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            if hash_frac(h2) < flip_rate {
+                let top = argmax(&scores);
+                let wrong = (top + 1 + (h % (nc as u64 - 1)) as usize) % nc;
+                return one_hot(wrong, nc);
+            }
+        }
+        scores.iter().map(|s| *s as f32).collect()
+    }
+
+    fn head_row(&self, row: &[f32], signs: &[f32], latent_len: usize)
+        -> Vec<f32>
+    {
+        let mut sums = vec![0.0f64; latent_len];
+        for (j, (&s, &x)) in signs.iter().zip(row).enumerate() {
+            sums[j % latent_len] += s as f64 * (x as f64 - 1.0);
+        }
+        sums.iter()
+            .map(|v| {
+                let lat = (1.0 + 0.5 * v) as f32;
+                // The encoder never emits exact 0.0 — zeros mark corruption.
+                if lat == 0.0 {
+                    1e-30
+                } else {
+                    lat
+                }
+            })
+            .collect()
+    }
+
+    fn tail_row(&self, row: &[f32], w_protos: &[Vec<f64>]) -> Vec<f32> {
+        let nc = self.num_classes;
+        let (_, damaged) = damage_check(row, self.family_hash, nc);
+        if let Some(c) = damaged {
+            return one_hot(c, nc);
+        }
+        let mut scores = Vec::with_capacity(nc);
+        for w in w_protos {
+            let mut acc = 0.0f64;
+            for (&wj, &x) in w.iter().zip(row) {
+                acc += wj * ((x as f64 - 1.0) / 0.5);
+            }
+            scores.push(acc / self.n_input as f64);
+        }
+        scores.iter().map(|s| *s as f32).collect()
+    }
+
+    fn gradcam_row(&self, row: &[f32], cs_raw: f64) -> f32 {
+        let h = hash_f32s(self.family_hash, row);
+        (cs_raw * (1.0 + 0.1 * (hash_frac(h) - 0.5))) as f32
+    }
+}
+
+impl Executable for AnalyticExec {
+    fn spec(&self) -> &ExecSpec {
+        &self.spec
+    }
+
+    fn run(&self, inputs: &[RtInput<'_>]) -> Result<Tensor> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (arg, input) in self.spec.inputs.iter().zip(inputs) {
+            match (input, arg.dtype.as_str()) {
+                (RtInput::F32(t), "float32") => {
+                    if t.shape() != arg.shape.as_slice() {
+                        bail!(
+                            "{}: input '{}' shape {:?} != expected {:?}",
+                            self.spec.name,
+                            arg.name,
+                            t.shape(),
+                            arg.shape
+                        );
+                    }
+                }
+                (RtInput::I32(v), "int32") => {
+                    let want: usize = arg.shape.iter().product();
+                    if v.len() != want {
+                        bail!(
+                            "{}: input '{}' wants {want} i32 values, got {}",
+                            self.spec.name,
+                            arg.name,
+                            v.len()
+                        );
+                    }
+                }
+                (_, dt) => bail!(
+                    "{}: input '{}' dtype mismatch (artifact wants {dt})",
+                    self.spec.name,
+                    arg.name
+                ),
+            }
+        }
+        let RtInput::F32(x) = &inputs[0] else {
+            bail!("{}: first input must be float32", self.spec.name);
+        };
+        let batch = self.spec.batch;
+        let row_len = x.len() / batch.max(1);
+        let out_shape = self.spec.outputs[0].shape.clone();
+        let out_elems: usize = out_shape.iter().product();
+        let mut out = Vec::with_capacity(out_elems);
+        for b in 0..batch {
+            let row = &x.data()[b * row_len..(b + 1) * row_len];
+            match &self.body {
+                Body::Classifier { flip_rate } => {
+                    out.extend(self.classifier_row(row, *flip_rate));
+                }
+                Body::Head { signs } => {
+                    let latent_len = out_elems / batch;
+                    out.extend(self.head_row(row, signs, latent_len));
+                }
+                Body::Tail { w_protos } => {
+                    out.extend(self.tail_row(row, w_protos));
+                }
+                Body::GradCam { cs_raw } => {
+                    out.push(self.gradcam_row(row, *cs_raw));
+                }
+            }
+        }
+        {
+            let mut c = self.counters.borrow_mut();
+            c.calls += 1;
+            c.total_exec_ns += self.sim_exec_ns;
+        }
+        Tensor::new(out_shape, out)
+    }
+
+    fn counters(&self) -> ExecCounters {
+        *self.counters.borrow()
+    }
+}
+
+/// Configuration of the analytic backend.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AnalyticConfig {
+    /// Extra seed folded into every synthetic stream; 0 is the canonical
+    /// deterministic default used by tests and CI.
+    pub seed: u64,
+}
+
+/// The hermetic analytic backend (see module docs).
+pub struct AnalyticBackend {
+    seed_mix: u64,
+    manifest: Manifest,
+    protos: Rc<Vec<Vec<f32>>>,
+    n_input: usize,
+    full_ma: u64,
+    lite_ma: u64,
+    /// (split, (head mult-adds, tail mult-adds)) per exported split.
+    split_ma: Vec<(usize, (u64, u64))>,
+    cache: RefCell<HashMap<String, Rc<AnalyticExec>>>,
+    datasets: RefCell<HashMap<String, Dataset>>,
+}
+
+impl AnalyticBackend {
+    pub fn new(cfg: AnalyticConfig) -> AnalyticBackend {
+        let seed_mix = cfg.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let slim = model::vgg16_slim(32, 0.125, 64, 10);
+        let manifest = synth_manifest(&slim);
+        let m = &manifest.model;
+        let n_input = 3 * m.img_size * m.img_size;
+        let protos: Vec<Vec<f32>> = (0..m.num_classes)
+            .map(|c| {
+                let mut rng = Rng::new(
+                    BASE_SEED
+                        .wrapping_add(0x100 + c as u64)
+                        .wrapping_add(seed_mix),
+                );
+                sign_stream(&mut rng, n_input)
+            })
+            .collect();
+        let lite_ma =
+            model::vgg16_slim(32, 0.0625, 48, m.num_classes).mult_adds();
+        let split_ma = SPLITS
+            .iter()
+            .map(|&s| (s, model::split_compute(&slim, s)))
+            .collect();
+        AnalyticBackend {
+            seed_mix,
+            full_ma: slim.mult_adds(),
+            lite_ma,
+            split_ma,
+            manifest,
+            protos: Rc::new(protos),
+            n_input,
+            cache: RefCell::new(HashMap::new()),
+            datasets: RefCell::new(HashMap::new()),
+        }
+    }
+
+    fn head_signs(&self, split: usize) -> Vec<f32> {
+        let mut rng = Rng::new(
+            BASE_SEED
+                .wrapping_add(0x5EAD + split as u64 * 0x101)
+                .wrapping_add(self.seed_mix),
+        );
+        sign_stream(&mut rng, self.n_input)
+    }
+
+    /// Per-image mult-adds behind the simulated latency of one exec kind.
+    fn cost_per_image(&self, spec: &ExecSpec) -> u64 {
+        match spec.kind.as_str() {
+            "lite" => self.lite_ma,
+            "gradcam" => 3 * self.full_ma,
+            "head" | "tail" => {
+                let split = spec.split_layer.unwrap_or(SPLITS[0]);
+                let (head, tail) = self
+                    .split_ma
+                    .iter()
+                    .find(|(s, _)| *s == split)
+                    .map(|(_, ma)| *ma)
+                    .unwrap_or((self.full_ma, self.full_ma));
+                if spec.kind == "head" {
+                    head
+                } else {
+                    tail
+                }
+            }
+            _ => self.full_ma,
+        }
+    }
+
+    fn build_exec(&self, spec: ExecSpec) -> Result<AnalyticExec> {
+        let nc = self.manifest.model.num_classes;
+        let family_hash = {
+            let h = fnv1a(FNV_OFFSET, spec.kind.as_bytes());
+            let tag = spec
+                .split_layer
+                .or(spec.gradcam_layer)
+                .unwrap_or(usize::MAX) as u64;
+            fnv1a(h, &tag.to_le_bytes()).wrapping_add(self.seed_mix)
+        };
+        let body = match spec.kind.as_str() {
+            "full" => Body::Classifier { flip_rate: 0.0 },
+            "lite" => Body::Classifier { flip_rate: LITE_FLIP_RATE },
+            "head" => {
+                let split = spec
+                    .split_layer
+                    .ok_or_else(|| anyhow!("{}: head without split", spec.name))?;
+                Body::Head { signs: Rc::new(self.head_signs(split)) }
+            }
+            "tail" => {
+                let split = spec
+                    .split_layer
+                    .ok_or_else(|| anyhow!("{}: tail without split", spec.name))?;
+                let latent_len: usize = spec.inputs[0].shape[1..]
+                    .iter()
+                    .product();
+                let signs = self.head_signs(split);
+                let w_protos = self
+                    .protos
+                    .iter()
+                    .map(|proto| {
+                        let mut w = vec![0.0f64; latent_len];
+                        for (j, (&s, &p)) in
+                            signs.iter().zip(proto).enumerate()
+                        {
+                            w[j % latent_len] += s as f64 * p as f64;
+                        }
+                        w
+                    })
+                    .collect();
+                Body::Tail { w_protos }
+            }
+            "gradcam" => {
+                let layer = spec.gradcam_layer.ok_or_else(|| {
+                    anyhow!("{}: gradcam without layer", spec.name)
+                })?;
+                Body::GradCam { cs_raw: CS_RAW[layer] }
+            }
+            other => bail!("{}: unknown analytic kind '{other}'", spec.name),
+        };
+        let ma = self.cost_per_image(&spec);
+        let sim_exec_ns = (spec.batch as f64 * ma as f64
+            / ANALYTIC_MACS_PER_SEC
+            * 1e9) as u64;
+        Ok(AnalyticExec {
+            body,
+            protos: self.protos.clone(),
+            n_input: self.n_input,
+            num_classes: nc,
+            family_hash,
+            sim_exec_ns,
+            counters: RefCell::new(ExecCounters::default()),
+            spec,
+        })
+    }
+
+    fn gen_dataset(&self, name: &str) -> Result<Dataset> {
+        let spec = self
+            .manifest
+            .datasets
+            .get(name)
+            .ok_or_else(|| anyhow!("no dataset split '{name}'"))?;
+        let err = if name == "ice" { GEN_ERR_ICE } else { GEN_ERR_TEST };
+        let nc = self.manifest.model.num_classes;
+        let n = self.n_input;
+        let mut rng = Rng::new(
+            (BASE_SEED ^ fnv1a(FNV_OFFSET, name.as_bytes()))
+                .wrapping_add(self.seed_mix),
+        );
+        let mut data = Vec::with_capacity(spec.count * n);
+        let mut labels = Vec::with_capacity(spec.count);
+        for _ in 0..spec.count {
+            let label = rng.below(nc as u64) as usize;
+            let mut realized = label;
+            if rng.chance(err) {
+                realized =
+                    (label + 1 + rng.below(nc as u64 - 1) as usize) % nc;
+            }
+            let proto = &self.protos[realized];
+            for &p in proto.iter() {
+                let e: f32 = if rng.chance(0.5) { 1.0 } else { -1.0 };
+                data.push(1.0f32 + 0.25f32 * p + 0.05f32 * e);
+            }
+            labels.push(label as i32);
+        }
+        let mut shape = vec![spec.count];
+        shape.extend_from_slice(&spec.image_shape);
+        Ok(Dataset {
+            name: name.to_string(),
+            images: Tensor::new(shape, data)?,
+            labels,
+        })
+    }
+}
+
+impl InferenceBackend for AnalyticBackend {
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+
+    fn platform(&self) -> String {
+        "analytic (hermetic pure-Rust reference backend)".to_string()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn executable(&self, name: &str) -> Result<Rc<dyn Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.executable(name)?.clone();
+        let exec = Rc::new(self.build_exec(spec)?);
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    fn dataset(&self, split: &str) -> Result<Dataset> {
+        if let Some(d) = self.datasets.borrow().get(split) {
+            return Ok(d.clone());
+        }
+        let d = self.gen_dataset(split)?;
+        self.datasets
+            .borrow_mut()
+            .insert(split.to_string(), d.clone());
+        Ok(d)
+    }
+
+    fn fixture(&self, name: &str) -> Result<Tensor> {
+        let (_, shape) = self
+            .manifest
+            .fixtures
+            .get(name)
+            .ok_or_else(|| anyhow!("no fixture '{name}'"))?
+            .clone();
+        match name {
+            "test16_logits" => {
+                let test = self.dataset("test")?;
+                let exec = self.executable("full_fwd_b16")?;
+                let out = exec.run(&[RtInput::F32(&test.batch(0, 16)?)])?;
+                debug_assert_eq!(out.shape(), shape.as_slice());
+                Ok(out)
+            }
+            other => bail!("analytic backend has no fixture '{other}'"),
+        }
+    }
+
+    fn cached(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            self.cache.borrow().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+fn arg(name: &str, shape: Vec<usize>, dtype: &str) -> ArgSpec {
+    ArgSpec {
+        name: name.to_string(),
+        shape,
+        dtype: dtype.to_string(),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn mk_exec(
+    name: String,
+    kind: &str,
+    batch: usize,
+    split_layer: Option<usize>,
+    gradcam_layer: Option<usize>,
+    latent_shape: Option<[usize; 3]>,
+    inputs: Vec<ArgSpec>,
+    outputs: Vec<ArgSpec>,
+) -> ExecSpec {
+    ExecSpec {
+        hlo: format!("analytic://{name}"),
+        name,
+        kind: kind.to_string(),
+        batch,
+        split_layer,
+        gradcam_layer,
+        latent_shape,
+        inputs,
+        weights: Vec::new(),
+        outputs,
+    }
+}
+
+/// Build the synthetic manifest for the slim model geometry.
+fn synth_manifest(slim: &model::Network) -> Manifest {
+    let num_classes = 10usize;
+    let img = 32usize;
+    let feats = model::feature_layers(slim);
+    let feature_shapes: Vec<[usize; 3]> = feats
+        .iter()
+        .map(|f| {
+            let Shape::Chw(c, h, w) = f.out else {
+                unreachable!("feature layers are CHW")
+            };
+            [c, h, w]
+        })
+        .collect();
+    let model_info = ModelInfo {
+        arch: "vgg16-slim-analytic".to_string(),
+        width_mult: 0.125,
+        num_classes,
+        img_size: img,
+        hidden: 64,
+        layer_names: model::vgg::feature_layer_names(),
+        feature_shapes: feature_shapes.clone(),
+        total_params: slim.total_params(),
+        base_test_accuracy: 0.97,
+        ice_accuracy: 0.96,
+    };
+
+    let mut datasets = BTreeMap::new();
+    for (name, count) in [("train", 64usize), ("test", 256), ("ice", 256)] {
+        datasets.insert(
+            name.to_string(),
+            DatasetSpec {
+                images: format!("analytic://{name}/images"),
+                labels: format!("analytic://{name}/labels"),
+                count,
+                image_shape: vec![3, img, img],
+            },
+        );
+    }
+
+    let lo = CS_RAW.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = CS_RAW.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let cs_curve = CsCurveSpec {
+        norm: CS_RAW.iter().map(|v| (v - lo) / (hi - lo)).collect(),
+        raw: CS_RAW.to_vec(),
+        candidates: SPLITS.to_vec(),
+    };
+
+    let latent_of = |s: usize| -> [usize; 3] {
+        let [c, h, w] = feature_shapes[s];
+        [(c / 2).max(1), h, w]
+    };
+    let split_eval: Vec<SplitEvalRow> = SPLITS
+        .iter()
+        .zip(SPLIT_ACC.iter())
+        .map(|(&s, &acc)| {
+            let [c, h, w] = feature_shapes[s];
+            let [zc, zh, zw] = latent_of(s);
+            SplitEvalRow {
+                layer: s,
+                layer_name: model_info.layer_names[s].clone(),
+                accuracy: acc,
+                latent_shape: latent_of(s),
+                latent_bytes_per_image: (zc * zh * zw * 4) as u64,
+                feature_bytes_per_image: (c * h * w * 4) as u64,
+            }
+        })
+        .collect();
+
+    let img_shape = |b: usize| vec![b, 3, img, img];
+    let logit_shape = |b: usize| vec![b, num_classes];
+    let mut executables = BTreeMap::new();
+    let mut add = |spec: ExecSpec| {
+        executables.insert(spec.name.clone(), spec);
+    };
+    for b in [1usize, 4, 16] {
+        add(mk_exec(
+            format!("full_fwd_b{b}"),
+            "full",
+            b,
+            None,
+            None,
+            None,
+            vec![arg("x", img_shape(b), "float32")],
+            vec![arg("logits", logit_shape(b), "float32")],
+        ));
+    }
+    add(mk_exec(
+        "full_fwd_pallas_b4".to_string(),
+        "full",
+        4,
+        None,
+        None,
+        None,
+        vec![arg("x", img_shape(4), "float32")],
+        vec![arg("logits", logit_shape(4), "float32")],
+    ));
+    for b in [1usize, 16] {
+        add(mk_exec(
+            format!("full_fwd_lite_b{b}"),
+            "lite",
+            b,
+            None,
+            None,
+            None,
+            vec![arg("x", img_shape(b), "float32")],
+            vec![arg("logits", logit_shape(b), "float32")],
+        ));
+    }
+    for &s in &SPLITS {
+        let [zc, zh, zw] = latent_of(s);
+        for b in [1usize, 16] {
+            add(mk_exec(
+                format!("head_L{s}_b{b}"),
+                "head",
+                b,
+                Some(s),
+                None,
+                Some(latent_of(s)),
+                vec![arg("x", img_shape(b), "float32")],
+                vec![arg("latent", vec![b, zc, zh, zw], "float32")],
+            ));
+            add(mk_exec(
+                format!("tail_L{s}_b{b}"),
+                "tail",
+                b,
+                Some(s),
+                None,
+                Some(latent_of(s)),
+                vec![arg("latent", vec![b, zc, zh, zw], "float32")],
+                vec![arg("logits", logit_shape(b), "float32")],
+            ));
+        }
+    }
+    for l in 0..model::NUM_FEATURE_LAYERS {
+        add(mk_exec(
+            format!("gradcam_L{l}_b16"),
+            "gradcam",
+            16,
+            None,
+            Some(l),
+            None,
+            vec![
+                arg("x", img_shape(16), "float32"),
+                arg("y", vec![16], "int32"),
+            ],
+            vec![arg("cs", vec![16], "float32")],
+        ));
+    }
+
+    let mut fixtures = BTreeMap::new();
+    fixtures.insert(
+        "test16_logits".to_string(),
+        (
+            "analytic://fixtures/test16_logits".to_string(),
+            vec![16, num_classes],
+        ),
+    );
+
+    Manifest {
+        dir: PathBuf::from("analytic://"),
+        fast: false,
+        model: model_info,
+        lite_accuracy: Some(0.88),
+        datasets,
+        class_names: (0..num_classes).map(|c| format!("class_{c}")).collect(),
+        cs_curve,
+        split_eval,
+        executables,
+        fixtures,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> AnalyticBackend {
+        AnalyticBackend::new(AnalyticConfig::default())
+    }
+
+    fn accuracy(b: &AnalyticBackend, exec_name: &str, n: usize) -> f64 {
+        let test = b.dataset("test").unwrap();
+        let exec = b.executable(exec_name).unwrap();
+        let batch = exec.spec().batch;
+        let mut correct = 0usize;
+        let mut start = 0;
+        while start + batch <= n {
+            let x = test.batch(start, batch).unwrap();
+            let logits = exec.run(&[RtInput::F32(&x)]).unwrap();
+            for (p, l) in logits
+                .argmax_last()
+                .iter()
+                .zip(test.batch_labels(start, batch))
+            {
+                if *p == *l as usize {
+                    correct += 1;
+                }
+            }
+            start += batch;
+        }
+        correct as f64 / n as f64
+    }
+
+    #[test]
+    fn manifest_is_well_formed() {
+        let b = backend();
+        let m = b.manifest();
+        assert_eq!(m.model.num_classes, 10);
+        assert_eq!(m.model.feature_shapes.len(), 18);
+        assert_eq!(m.available_splits(), SPLITS.to_vec());
+        assert_eq!(m.gradcam_layers().len(), 18);
+        assert!(m.executables.contains_key("full_fwd_lite_b1"));
+        assert!(m.fixtures.contains_key("test16_logits"));
+    }
+
+    #[test]
+    fn cs_candidates_are_the_exported_splits() {
+        let b = backend();
+        let curve = crate::coordinator::CsCurve::from_manifest(b.manifest());
+        assert_eq!(curve.candidates(2), SPLITS.to_vec());
+    }
+
+    #[test]
+    fn datasets_are_deterministic_and_nonzero() {
+        let (a, b) = (backend(), backend());
+        let da = a.dataset("test").unwrap();
+        let db = b.dataset("test").unwrap();
+        assert_eq!(da.images.data(), db.images.data());
+        assert_eq!(da.labels, db.labels);
+        assert_eq!(da.len(), 256);
+        assert!(da.images.data().iter().all(|v| *v != 0.0));
+    }
+
+    #[test]
+    fn full_model_reaches_manifest_accuracy() {
+        let b = backend();
+        let acc = accuracy(&b, "full_fwd_b16", 256);
+        assert!(
+            (acc - b.manifest().model.base_test_accuracy).abs() < 0.05,
+            "full accuracy {acc}"
+        );
+    }
+
+    #[test]
+    fn lite_model_is_worse_than_full() {
+        let b = backend();
+        let full = accuracy(&b, "full_fwd_b16", 128);
+        let lite = accuracy(&b, "full_fwd_lite_b16", 128);
+        assert!(lite < full, "lite {lite} vs full {full}");
+        assert!(lite > 0.5, "lite {lite} must beat chance");
+    }
+
+    #[test]
+    fn head_tail_compose_to_full_predictions() {
+        let b = backend();
+        let test = b.dataset("test").unwrap();
+        let full = b.executable("full_fwd_b16").unwrap();
+        let x = test.batch(0, 16).unwrap();
+        let want = full.run(&[RtInput::F32(&x)]).unwrap().argmax_last();
+        for &s in &SPLITS {
+            let head = b.executable(&format!("head_L{s}_b16")).unwrap();
+            let tail = b.executable(&format!("tail_L{s}_b16")).unwrap();
+            let z = head.run(&[RtInput::F32(&x)]).unwrap();
+            let got = tail.run(&[RtInput::F32(&z)]).unwrap().argmax_last();
+            assert_eq!(got, want, "split L{s} diverges from full model");
+        }
+    }
+
+    #[test]
+    fn corruption_decays_accuracy() {
+        let b = backend();
+        let test = b.dataset("test").unwrap();
+        let exec = b.executable("full_fwd_b1").unwrap();
+        let n = 64usize;
+        let mut clean_ok = 0;
+        let mut corrupt_ok = 0;
+        for i in 0..n {
+            let x = test.batch(i, 1).unwrap();
+            let mut bad = x.clone();
+            bad.zero_byte_range(0, (bad.byte_len() / 2) as u32);
+            let label = test.labels[i] as usize;
+            if exec.run(&[RtInput::F32(&x)]).unwrap().argmax_last()[0]
+                == label
+            {
+                clean_ok += 1;
+            }
+            if exec.run(&[RtInput::F32(&bad)]).unwrap().argmax_last()[0]
+                == label
+            {
+                corrupt_ok += 1;
+            }
+        }
+        assert!(
+            corrupt_ok + 8 < clean_ok,
+            "corruption barely matters: {corrupt_ok} vs {clean_ok}"
+        );
+    }
+
+    #[test]
+    fn executions_are_deterministic_and_cached() {
+        let b = backend();
+        let test = b.dataset("test").unwrap();
+        let x = test.batch(0, 1).unwrap();
+        let e1 = b.executable("full_fwd_b1").unwrap();
+        let e2 = b.executable("full_fwd_b1").unwrap();
+        assert!(Rc::ptr_eq(&e1, &e2));
+        let a = e1.run(&[RtInput::F32(&x)]).unwrap();
+        let bb = e1.run(&[RtInput::F32(&x)]).unwrap();
+        assert_eq!(a.data(), bb.data());
+        assert!(b.cached().contains(&"full_fwd_b1".to_string()));
+        assert_eq!(e1.counters().calls, 2);
+        assert!(e1.mean_exec_ns() > 0.0);
+    }
+
+    #[test]
+    fn wrong_shapes_and_names_are_rejected() {
+        let b = backend();
+        let test = b.dataset("test").unwrap();
+        let exec = b.executable("full_fwd_b16").unwrap();
+        let x = test.batch(0, 1).unwrap();
+        assert!(exec.run(&[RtInput::F32(&x)]).is_err());
+        assert!(b.executable("nope").is_err());
+        assert!(b.dataset("nope").is_err());
+        assert!(b.fixture("nope").is_err());
+    }
+
+    #[test]
+    fn fixture_matches_full_forward() {
+        let b = backend();
+        let test = b.dataset("test").unwrap();
+        let exec = b.executable("full_fwd_b16").unwrap();
+        let x = test.batch(0, 16).unwrap();
+        let got = exec.run(&[RtInput::F32(&x)]).unwrap();
+        let want = b.fixture("test16_logits").unwrap();
+        assert_eq!(got.shape(), want.shape());
+        assert_eq!(got.data(), want.data());
+    }
+
+    #[test]
+    fn gradcam_values_track_the_cs_curve() {
+        let b = backend();
+        let test = b.dataset("test").unwrap();
+        let x = test.batch(0, 16).unwrap();
+        let y = test.batch_labels(0, 16);
+        for l in [0usize, 9, 17] {
+            let exec = b.executable(&format!("gradcam_L{l}_b16")).unwrap();
+            let cs = exec
+                .run(&[RtInput::F32(&x), RtInput::I32(y)])
+                .unwrap();
+            assert_eq!(cs.shape(), &[16]);
+            let mean = cs.data().iter().map(|v| *v as f64).sum::<f64>()
+                / 16.0;
+            assert!(
+                (mean - CS_RAW[l]).abs() < 0.1 * CS_RAW[l] + 0.02,
+                "layer {l}: mean {mean} vs raw {}",
+                CS_RAW[l]
+            );
+            assert!(cs.data().iter().all(|v| *v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn seeds_change_the_streams() {
+        let a = AnalyticBackend::new(AnalyticConfig { seed: 1 });
+        let b = backend();
+        let da = a.dataset("test").unwrap();
+        let db = b.dataset("test").unwrap();
+        assert_ne!(da.images.data(), db.images.data());
+    }
+}

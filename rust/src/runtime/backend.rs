@@ -1,0 +1,107 @@
+//! The pluggable inference-backend contract.
+//!
+//! Everything above the runtime (coordinator, CLI, examples, benches,
+//! tests) drives model execution through [`InferenceBackend`] +
+//! [`Executable`] trait objects, so the same scenario/QoS/serving code runs
+//! against either implementation:
+//!
+//!   * [`crate::runtime::engine::Engine`] (cargo feature `xla`, off by
+//!     default): the real PJRT CPU client executing AOT-compiled HLO
+//!     artifacts built by `python/compile/`;
+//!   * [`crate::runtime::analytic::AnalyticBackend`] (always available):
+//!     a hermetic, pure-Rust reference backend that synthesises its
+//!     manifest, datasets and per-layer costs from `model::stats` +
+//!     `util::rng` — no artifacts, no native libraries, fully
+//!     deterministic for a given seed.
+//!
+//! [`load_backend`] picks the implementation: real artifacts when they
+//! exist and the `xla` feature is enabled, the analytic backend otherwise.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::manifest::{ExecSpec, Manifest};
+use crate::data::Dataset;
+use crate::tensor::Tensor;
+
+/// A runtime input value (model input or Grad-CAM label vector).
+pub enum RtInput<'a> {
+    F32(&'a Tensor),
+    I32(&'a [i32]),
+}
+
+/// Per-executable call/latency accounting. For the PJRT engine these are
+/// measured wall times; for the analytic backend they are deterministic
+/// simulated costs derived from the model's mult-add counts.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecCounters {
+    pub calls: u64,
+    pub total_exec_ns: u64,
+    pub compile_ns: u64,
+}
+
+/// One loaded model executable (full model, head, tail, Grad-CAM, ...).
+pub trait Executable {
+    fn spec(&self) -> &ExecSpec;
+
+    /// Execute with the given inputs; returns the single output tensor.
+    fn run(&self, inputs: &[RtInput<'_>]) -> Result<Tensor>;
+
+    fn counters(&self) -> ExecCounters;
+
+    /// Mean execution time per call, ns.
+    fn mean_exec_ns(&self) -> f64 {
+        let c = self.counters();
+        if c.calls == 0 {
+            0.0
+        } else {
+            c.total_exec_ns as f64 / c.calls as f64
+        }
+    }
+}
+
+/// A model-serving runtime: manifest metadata, datasets, fixtures and
+/// named executables.
+pub trait InferenceBackend {
+    /// Short implementation name ("xla" | "analytic").
+    fn name(&self) -> &'static str;
+
+    /// Execution platform description (PJRT platform name or "analytic").
+    fn platform(&self) -> String;
+
+    fn manifest(&self) -> &Manifest;
+
+    /// Get (loading and caching on first use) an executable by name.
+    fn executable(&self, name: &str) -> Result<Rc<dyn Executable>>;
+
+    /// Load a dataset split by manifest name ("train" | "test" | "ice").
+    fn dataset(&self, split: &str) -> Result<Dataset>;
+
+    /// Read a golden-output fixture tensor.
+    fn fixture(&self, name: &str) -> Result<Tensor>;
+
+    /// Names of currently cached (loaded) executables, sorted.
+    fn cached(&self) -> Vec<String>;
+}
+
+/// Open the best available backend for `dir`:
+///
+/// * with the `xla` feature and a built `dir/manifest.json`, the real
+///   PJRT engine over the AOT artifacts;
+/// * otherwise the hermetic analytic backend (ignores `dir`; synthesises
+///   everything in memory).
+pub fn load_backend(dir: &Path) -> Result<Box<dyn InferenceBackend>> {
+    #[cfg(feature = "xla")]
+    {
+        if dir.join("manifest.json").exists() {
+            return Ok(Box::new(super::engine::Engine::load(dir)?));
+        }
+    }
+    #[cfg(not(feature = "xla"))]
+    let _ = dir;
+    Ok(Box::new(super::analytic::AnalyticBackend::new(
+        super::analytic::AnalyticConfig::default(),
+    )))
+}

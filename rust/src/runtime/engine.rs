@@ -1,6 +1,8 @@
-//! PJRT execution engine: loads HLO-text artifacts, compiles them on the
-//! CPU PJRT client, pre-builds weight literals, and runs them from the L3
-//! hot path. Python never executes here.
+//! PJRT execution engine (cargo feature `xla`): loads HLO-text artifacts,
+//! compiles them on the CPU PJRT client, pre-builds weight literals, and
+//! runs them from the L3 hot path. Python never executes here. This is the
+//! real-artifact implementation of [`crate::runtime::InferenceBackend`];
+//! the default build uses [`crate::runtime::analytic`] instead.
 //!
 //! Performance notes (see EXPERIMENTS.md §Perf):
 //!   * executables are compiled once and cached by name;
@@ -18,21 +20,9 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::backend::{ExecCounters, Executable, InferenceBackend, RtInput};
 use super::manifest::{ExecSpec, Manifest};
 use crate::tensor::Tensor;
-
-/// A runtime input value (model input or Grad-CAM label vector).
-pub enum RtInput<'a> {
-    F32(&'a Tensor),
-    I32(&'a [i32]),
-}
-
-#[derive(Clone, Copy, Debug, Default)]
-pub struct ExecCounters {
-    pub calls: u64,
-    pub total_exec_ns: u64,
-    pub compile_ns: u64,
-}
 
 /// One compiled artifact with its pre-built weight literals.
 pub struct LoadedExec {
@@ -270,5 +260,54 @@ impl Engine {
             self.cache.borrow().keys().cloned().collect();
         v.sort();
         v
+    }
+}
+
+impl Executable for LoadedExec {
+    fn spec(&self) -> &ExecSpec {
+        &self.spec
+    }
+
+    fn run(&self, inputs: &[RtInput<'_>]) -> Result<Tensor> {
+        LoadedExec::run(self, inputs)
+    }
+
+    fn counters(&self) -> ExecCounters {
+        LoadedExec::counters(self)
+    }
+
+    fn mean_exec_ns(&self) -> f64 {
+        LoadedExec::mean_exec_ns(self)
+    }
+}
+
+impl InferenceBackend for Engine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn platform(&self) -> String {
+        Engine::platform(self)
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn executable(&self, name: &str) -> Result<Rc<dyn Executable>> {
+        let e: Rc<dyn Executable> = Engine::executable(self, name)?;
+        Ok(e)
+    }
+
+    fn dataset(&self, split: &str) -> Result<crate::data::Dataset> {
+        Engine::dataset(self, split)
+    }
+
+    fn fixture(&self, name: &str) -> Result<Tensor> {
+        Engine::fixture(self, name)
+    }
+
+    fn cached(&self) -> Vec<String> {
+        Engine::cached(self)
     }
 }

@@ -1,10 +1,33 @@
-//! PJRT runtime: the AOT bridge between the python build path and the Rust
-//! serving path. `HLO text -> HloModuleProto -> XlaComputation -> compile ->
-//! execute` on the CPU PJRT client (see /opt/xla-example/README.md for why
-//! text, not serialized protos, is the interchange format).
+//! Model-serving runtime with pluggable inference backends.
+//!
+//! The [`InferenceBackend`] / [`Executable`] traits ([`backend`]) are the
+//! contract every layer above the runtime programs against. Two
+//! implementations exist:
+//!
+//!   * [`analytic`] — the default, hermetic pure-Rust reference backend:
+//!     synthesises manifest, datasets and deterministic inference from
+//!     `model::stats` + `util::rng`; builds and runs everywhere (CI,
+//!     laptops, embedded targets) with no artifacts or native libraries;
+//!   * [`engine`] (cargo feature `xla`) — the PJRT/XLA AOT bridge from the
+//!     python build path: `HLO text -> HloModuleProto -> XlaComputation ->
+//!     compile -> execute` on the CPU PJRT client (see
+//!     /opt/xla-example/README.md for why text, not serialized protos, is
+//!     the interchange format). Requires built `artifacts/` and the
+//!     vendored `xla` crate.
+//!
+//! [`load_backend`] selects the implementation for a given artifacts
+//! directory; [`manifest`] is the shared typed artifact contract.
 
+pub mod analytic;
+pub mod backend;
+#[cfg(feature = "xla")]
 pub mod engine;
 pub mod manifest;
 
-pub use engine::{Engine, LoadedExec, RtInput};
+pub use analytic::{AnalyticBackend, AnalyticConfig};
+pub use backend::{
+    load_backend, ExecCounters, Executable, InferenceBackend, RtInput,
+};
+#[cfg(feature = "xla")]
+pub use engine::{Engine, LoadedExec};
 pub use manifest::{ExecSpec, Manifest};

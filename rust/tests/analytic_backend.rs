@@ -1,0 +1,110 @@
+//! Hermetic end-to-end determinism tests for the analytic backend: the
+//! acceptance contract behind `sei suggest` / `sei simulate` running on a
+//! fresh checkout with no artifacts and no XLA — results must be
+//! bit-stable across backend instances for a given seed.
+
+use std::path::Path;
+
+use sei::coordinator::{
+    self, ModelScale, QosRequirements, ScenarioConfig, ScenarioKind,
+};
+use sei::model::DeviceProfile;
+use sei::netsim::transfer::{NetworkConfig, Protocol};
+use sei::runtime::{load_backend, InferenceBackend};
+
+fn backend() -> Box<dyn InferenceBackend> {
+    load_backend(Path::new("artifacts")).expect("backend")
+}
+
+fn cfg(kind: ScenarioKind, seed: u64) -> ScenarioConfig {
+    ScenarioConfig {
+        kind,
+        net: NetworkConfig::gigabit(Protocol::Tcp, 0.02, seed),
+        edge: DeviceProfile::edge_gpu(),
+        server: DeviceProfile::server_gpu(),
+        scale: ModelScale::Slim,
+        frame_period_ns: 50_000_000,
+    }
+}
+
+#[test]
+fn scenario_reports_are_reproducible_across_backends() {
+    let qos = QosRequirements::ice_lab();
+    let mut runs = Vec::new();
+    for _ in 0..2 {
+        let engine = backend();
+        let test = engine.dataset("test").unwrap();
+        let r = coordinator::run_scenario(
+            &*engine,
+            &cfg(ScenarioKind::Rc, 7),
+            &test,
+            64,
+            &qos,
+        )
+        .unwrap();
+        runs.push((r.accuracy, r.mean_latency_ns, r.mean_wire_bytes,
+                   r.total_retransmits));
+    }
+    assert_eq!(runs[0], runs[1], "same seed must reproduce exactly");
+}
+
+#[test]
+fn suggestion_table_is_reproducible() {
+    let qos = QosRequirements::with_fps(20.0);
+    let table = |_: usize| -> Vec<(String, f64, f64, bool)> {
+        let engine = backend();
+        let test = engine.dataset("test").unwrap();
+        coordinator::suggest(
+            &*engine,
+            &NetworkConfig::gigabit(Protocol::Tcp, 0.02, 7),
+            &DeviceProfile::edge_gpu(),
+            &DeviceProfile::server_gpu(),
+            &qos,
+            &test,
+            32,
+            2,
+        )
+        .unwrap()
+        .iter()
+        .map(|s| {
+            (
+                s.rank.kind.to_string(),
+                s.report.accuracy,
+                s.report.mean_latency_ns,
+                s.satisfies,
+            )
+        })
+        .collect()
+    };
+    assert_eq!(table(0), table(1));
+}
+
+#[test]
+fn different_channel_seeds_change_lossy_latency() {
+    let engine = backend();
+    let test = engine.dataset("test").unwrap();
+    let qos = QosRequirements::none();
+    let lat = |seed: u64| {
+        coordinator::run_scenario(
+            &*engine,
+            &cfg(ScenarioKind::Rc, seed),
+            &test,
+            64,
+            &qos,
+        )
+        .unwrap()
+        .mean_latency_ns
+    };
+    assert_ne!(lat(1), lat(2), "channel seed must drive the saboteur");
+}
+
+#[test]
+fn default_backend_is_hermetic_without_artifacts() {
+    // On a fresh checkout (no artifacts/) the default feature set must
+    // yield a fully usable backend.
+    let engine = backend();
+    if engine.name() == "analytic" {
+        assert!(!engine.manifest().available_splits().is_empty());
+        assert_eq!(engine.dataset("ice").unwrap().name, "ice");
+    }
+}

@@ -1,5 +1,8 @@
-//! End-to-end framework tests: scenario engine + netsim + PJRT + QoS.
-//! Skipped when `artifacts/` has not been built.
+//! End-to-end framework tests: scenario engine + netsim + inference
+//! backend + QoS. Hermetic: they run on whatever `load_backend` resolves —
+//! the real PJRT artifacts when built (feature `xla`), the analytic
+//! reference backend otherwise — so they exercise the full pipeline on a
+//! fresh checkout and in CI.
 
 use std::path::Path;
 
@@ -8,15 +11,10 @@ use sei::coordinator::{
 };
 use sei::model::DeviceProfile;
 use sei::netsim::transfer::{NetworkConfig, Protocol};
-use sei::runtime::Engine;
+use sei::runtime::{load_backend, Executable, InferenceBackend};
 
-fn engine() -> Option<Engine> {
-    let dir = Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts not built — skipping");
-        return None;
-    }
-    Some(Engine::load(dir).expect("engine"))
+fn engine() -> Box<dyn InferenceBackend> {
+    load_backend(Path::new("artifacts")).expect("backend")
 }
 
 fn cfg(kind: ScenarioKind, proto: Protocol, loss: f64) -> ScenarioConfig {
@@ -32,15 +30,15 @@ fn cfg(kind: ScenarioKind, proto: Protocol, loss: f64) -> ScenarioConfig {
 
 #[test]
 fn rc_tcp_accuracy_immune_to_loss() {
-    let Some(engine) = engine() else { return };
+    let engine = engine();
     let test = engine.dataset("test").unwrap();
     let q = QosRequirements::none();
     let clean = coordinator::run_scenario(
-        &engine, &cfg(ScenarioKind::Rc, Protocol::Tcp, 0.0), &test, 64, &q,
+        &*engine, &cfg(ScenarioKind::Rc, Protocol::Tcp, 0.0), &test, 64, &q,
     )
     .unwrap();
     let lossy = coordinator::run_scenario(
-        &engine, &cfg(ScenarioKind::Rc, Protocol::Tcp, 0.08), &test, 64, &q,
+        &*engine, &cfg(ScenarioKind::Rc, Protocol::Tcp, 0.08), &test, 64, &q,
     )
     .unwrap();
     assert_eq!(clean.accuracy, lossy.accuracy, "TCP must protect accuracy");
@@ -53,15 +51,15 @@ fn rc_tcp_accuracy_immune_to_loss() {
 
 #[test]
 fn rc_udp_accuracy_decays_latency_flat() {
-    let Some(engine) = engine() else { return };
+    let engine = engine();
     let test = engine.dataset("test").unwrap();
     let q = QosRequirements::none();
     let clean = coordinator::run_scenario(
-        &engine, &cfg(ScenarioKind::Rc, Protocol::Udp, 0.0), &test, 96, &q,
+        &*engine, &cfg(ScenarioKind::Rc, Protocol::Udp, 0.0), &test, 96, &q,
     )
     .unwrap();
     let lossy = coordinator::run_scenario(
-        &engine, &cfg(ScenarioKind::Rc, Protocol::Udp, 0.35), &test, 96, &q,
+        &*engine, &cfg(ScenarioKind::Rc, Protocol::Udp, 0.35), &test, 96, &q,
     )
     .unwrap();
     assert!(
@@ -80,17 +78,17 @@ fn rc_udp_accuracy_decays_latency_flat() {
 
 #[test]
 fn sc_beats_rc_on_wire_bytes_at_deep_split() {
-    let Some(engine) = engine() else { return };
-    let splits = engine.manifest.available_splits();
+    let engine = engine();
+    let splits = engine.manifest().available_splits();
     let split = *splits.last().unwrap();
     let test = engine.dataset("test").unwrap();
     let q = QosRequirements::none();
     let rc = coordinator::run_scenario(
-        &engine, &cfg(ScenarioKind::Rc, Protocol::Tcp, 0.0), &test, 32, &q,
+        &*engine, &cfg(ScenarioKind::Rc, Protocol::Tcp, 0.0), &test, 32, &q,
     )
     .unwrap();
     let sc = coordinator::run_scenario(
-        &engine,
+        &*engine,
         &cfg(ScenarioKind::Sc { split }, Protocol::Tcp, 0.0),
         &test,
         32,
@@ -109,11 +107,11 @@ fn sc_beats_rc_on_wire_bytes_at_deep_split() {
 
 #[test]
 fn lc_runs_without_network() {
-    let Some(engine) = engine() else { return };
+    let engine = engine();
     let test = engine.dataset("test").unwrap();
     let q = QosRequirements::ice_lab();
     let lc = coordinator::run_scenario(
-        &engine, &cfg(ScenarioKind::Lc, Protocol::Tcp, 0.5), &test, 48, &q,
+        &*engine, &cfg(ScenarioKind::Lc, Protocol::Tcp, 0.5), &test, 48, &q,
     )
     .unwrap();
     assert_eq!(lc.mean_wire_bytes, 0.0);
@@ -123,11 +121,11 @@ fn lc_runs_without_network() {
 
 #[test]
 fn suggestion_engine_ranks_and_simulates() {
-    let Some(engine) = engine() else { return };
+    let engine = engine();
     let test = engine.dataset("test").unwrap();
     let qos = QosRequirements::ice_lab();
     let suggestions = coordinator::suggest(
-        &engine,
+        &*engine,
         &NetworkConfig::gigabit(Protocol::Tcp, 0.02, 7),
         &DeviceProfile::edge_gpu(),
         &DeviceProfile::server_gpu(),
@@ -155,15 +153,16 @@ fn suggestion_engine_ranks_and_simulates() {
 }
 
 #[test]
-fn rust_cs_curve_agrees_with_python_on_shape() {
-    let Some(engine) = engine() else { return };
-    if engine.manifest.gradcam_layers().len() < 6 {
+fn rust_cs_curve_agrees_with_manifest_on_shape() {
+    let engine = engine();
+    if engine.manifest().gradcam_layers().len() < 6 {
         return; // fast artifacts
     }
     let test = engine.dataset("test").unwrap();
     let rust_curve =
-        coordinator::saliency::compute_cs_curve(&engine, &test, 64).unwrap();
-    let python_curve = CsCurve::from_manifest(&engine);
+        coordinator::saliency::compute_cs_curve(&*engine, &test, 64)
+            .unwrap();
+    let python_curve = CsCurve::from_manifest(engine.manifest());
     let r = rust_curve.normalized();
     let p = python_curve.normalized();
     assert_eq!(r.len(), p.len());
@@ -191,16 +190,16 @@ fn rust_cs_curve_agrees_with_python_on_shape() {
 
 #[test]
 fn serve_reports_wall_and_sim_throughput() {
-    let Some(engine) = engine() else { return };
+    let engine = engine();
     let ice = engine.dataset("ice").unwrap();
     let qos = QosRequirements::ice_lab();
-    let splits = engine.manifest.available_splits();
+    let splits = engine.manifest().available_splits();
     let c = cfg(
         ScenarioKind::Sc { split: *splits.last().unwrap() },
         Protocol::Tcp,
         0.01,
     );
-    let r = coordinator::serve(&engine, &c, &ice, 40, &qos).unwrap();
+    let r = coordinator::serve(&*engine, &c, &ice, 40, &qos).unwrap();
     assert_eq!(r.frames, 40);
     assert!(r.wall_seconds > 0.0);
     assert!(r.sim_fps > 0.0);
@@ -212,8 +211,8 @@ fn serve_reports_wall_and_sim_throughput() {
 fn paper_scale_fig3_shape_holds() {
     // Fig. 3 end-to-end at paper scale: SC@L15 meets 20 FPS across loss
     // rates; SC@L11 violates beyond a few percent.
-    let Some(engine) = engine() else { return };
-    let splits = engine.manifest.available_splits();
+    let engine = engine();
+    let splits = engine.manifest().available_splits();
     if !splits.contains(&11) || !splits.contains(&15) {
         return;
     }
@@ -226,7 +225,8 @@ fn paper_scale_fig3_shape_holds() {
             scale: ModelScale::Vgg16Full,
             frame_period_ns: 50_000_000,
         };
-        let lats = coordinator::simulate_latency(&engine, &c, 200).unwrap();
+        let lats = coordinator::simulate_latency(&*engine, &c, 200)
+            .unwrap();
         lats.iter().map(|v| *v as f64).sum::<f64>() / lats.len() as f64
     };
     let budget = 50e6;
@@ -245,8 +245,8 @@ fn paper_scale_fig3_shape_holds() {
 fn hil_worker_round_trip_with_real_artifacts() {
     // The hardware-in-the-loop path: a worker thread serves the tail over
     // a real localhost TCP socket; the leader runs the head locally.
-    let Some(engine) = engine() else { return };
-    let splits = engine.manifest.available_splits();
+    let engine = engine();
+    let splits = engine.manifest().available_splits();
     let split = *splits.first().unwrap();
     let addr = {
         let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
@@ -270,7 +270,7 @@ fn hil_worker_round_trip_with_real_artifacts() {
         let x = test.batch(i, 1).unwrap();
         let z = head.run(&[sei::runtime::RtInput::F32(&x)]).unwrap();
         let logits = client
-            .infer(&z, vec![1, engine.manifest.model.num_classes])
+            .infer(&z, vec![1, engine.manifest().model.num_classes])
             .unwrap();
         if logits.argmax_last()[0] == test.labels[i] as usize {
             correct += 1;
@@ -282,7 +282,7 @@ fn hil_worker_round_trip_with_real_artifacts() {
     assert_eq!(worker.join().unwrap().unwrap(), n as u64);
     // Accuracy over the real socket must match the in-process path.
     let expected = engine
-        .manifest
+        .manifest()
         .split_eval_for(split)
         .map(|r| r.accuracy)
         .unwrap_or(0.9);
@@ -298,8 +298,8 @@ fn batched_tail_pipeline_matches_unbatched() {
     // one-by-one b1 tail.
     use sei::coordinator::batcher::{BatchPolicy, Batcher};
     use sei::coordinator::workload::{ArrivalProcess, Workload};
-    let Some(engine) = engine() else { return };
-    let splits = engine.manifest.available_splits();
+    let engine = engine();
+    let splits = engine.manifest().available_splits();
     let split = *splits.last().unwrap();
     let test = engine.dataset("test").unwrap();
     let head16 =
