@@ -1,0 +1,54 @@
+//! Design-space sweep example: load a declarative `SweepSpec` grid from
+//! JSON, evaluate every condition × placement point on the parallel sweep
+//! engine, and print the accuracy-vs-latency Pareto frontier.
+//!
+//! cargo run --release --example sweep_grid [spec.json] [threads]
+//!
+//! Works hermetically on the analytic backend (no artifacts needed); with
+//! the `xla` feature and built artifacts it sweeps the real model.
+
+use std::path::Path;
+
+use sei::coordinator::{run_sweep, SweepSpec};
+use sei::runtime::load_backend;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // `cargo run` keeps the caller's cwd, `cargo bench`/package-relative
+    // runs start in rust/ — probe both locations for the default spec.
+    let spec_path = match args.first() {
+        Some(p) => p.clone(),
+        None => ["examples/specs/grid.json", "../examples/specs/grid.json"]
+            .iter()
+            .find(|p| Path::new(p).exists())
+            .unwrap_or(&"examples/specs/grid.json")
+            .to_string(),
+    };
+    let threads = match args.get(1) {
+        Some(t) => t.parse()?,
+        None => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+    };
+
+    let text = std::fs::read_to_string(&spec_path)?;
+    let spec = SweepSpec::from_json(&text)?;
+    let jobs = spec.expand()?.len();
+    println!(
+        "sweep '{}' from {spec_path}: {jobs} grid points on {threads} \
+         thread(s)\n",
+        spec.name
+    );
+
+    let t0 = std::time::Instant::now();
+    let report =
+        run_sweep(&spec, threads, &|| load_backend(Path::new("artifacts")))?;
+    print!("{}", report.render());
+    println!("\nswept {jobs} points in {:.2}s", t0.elapsed().as_secs_f64());
+
+    std::fs::create_dir_all("reports")?;
+    std::fs::write("reports/sweep_grid.json", report.to_json().to_string())?;
+    report.to_csv().write(Path::new("reports/sweep_grid.csv"))?;
+    println!("wrote reports/sweep_grid.json, reports/sweep_grid.csv");
+    Ok(())
+}

@@ -3,6 +3,10 @@
 //! TCP over the 1 Gb/s full-duplex channel, against the ICE-Lab 0.05 s
 //! (20 FPS) constraint.
 //!
+//! The grid (2 splits × 9 loss rates × 5 seeds) runs on the design-space
+//! sweep engine (`coordinator::sweep`) across all available cores; results
+//! are keyed by grid index, so the output is identical at any thread count.
+//!
 //! Volumetrics and compute are paper-scale (VGG16 @ 224x224): the L11
 //! latent is 256x28x28 f32 ≈ 803 kB/frame, the L15 latent 256x14x14
 //! ≈ 201 kB/frame. Expected shape (paper Sec. V-B): L15 satisfies the
@@ -11,65 +15,69 @@
 
 use std::path::Path;
 
-use sei::coordinator::{simulate_latency, ModelScale, ScenarioConfig,
-                       ScenarioKind};
-use sei::model::DeviceProfile;
-use sei::netsim::transfer::{NetworkConfig, Protocol};
+use sei::coordinator::{
+    run_sweep, ModelScale, ScenarioKind, SweepMode, SweepSpec,
+};
+use sei::netsim::transfer::Protocol;
 use sei::report::csv::Csv;
 use sei::report::fig3_report;
 use sei::runtime::load_backend;
 
 const CONSTRAINT_S: f64 = 0.05; // 20 FPS conveyor belt
 const FRAMES: usize = 400;
-const SEEDS: u64 = 5;
+const SEEDS: usize = 5;
 
 fn main() {
-    let engine =
-        load_backend(Path::new("artifacts")).expect("backend");
     let loss_rates: Vec<f64> =
         vec![0.0, 0.01, 0.02, 0.03, 0.04, 0.05, 0.06, 0.08, 0.10];
     let splits = [11usize, 15];
 
+    let mut spec = SweepSpec::new("fig3_split_selection");
+    spec.mode = SweepMode::LatencyOnly;
+    spec.scenarios = splits
+        .iter()
+        .map(|&split| ScenarioKind::Sc { split })
+        .collect();
+    spec.protocols = vec![Protocol::Tcp];
+    spec.loss_rates = loss_rates.clone();
+    spec.scales = vec![ModelScale::Vgg16Full];
+    spec.frames = FRAMES;
+    spec.seeds_per_point = SEEDS;
+    spec.seed = 1000;
+    spec.frame_period_ns = 50_000_000;
+    spec.max_latency_ms = CONSTRAINT_S * 1e3;
+
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
     println!("=== Fig. 3: split-point selection under packet loss ===");
     println!(
         "channel: 1 Gb/s full-duplex TCP, 100 µs; constraint {CONSTRAINT_S} s \
-         (20 FPS); {FRAMES} frames x {SEEDS} seeds per point\n"
+         (20 FPS); {FRAMES} frames x {SEEDS} seeds per point; \
+         sweep engine on {threads} thread(s)\n"
     );
 
     let t0 = std::time::Instant::now();
+    let sweep = run_sweep(&spec, threads, &|| {
+        load_backend(Path::new("artifacts"))
+    })
+    .expect("sweep");
+    let wall = t0.elapsed().as_secs_f64();
+
+    let n_loss = loss_rates.len();
     let mut series = Vec::new();
     let mut csv = Csv::new(&["loss", "split", "mean_latency_s",
                              "p95_latency_s", "violation_rate"]);
-    for &split in &splits {
+    for (si, &split) in splits.iter().enumerate() {
         let mut means = Vec::new();
-        for &loss in &loss_rates {
-            let mut all: Vec<u64> = Vec::new();
-            for seed in 0..SEEDS {
-                let cfg = ScenarioConfig {
-                    kind: ScenarioKind::Sc { split },
-                    net: NetworkConfig::gigabit(Protocol::Tcp, loss,
-                                                1000 + seed),
-                    edge: DeviceProfile::edge_gpu(),
-                    server: DeviceProfile::server_gpu(),
-                    scale: ModelScale::Vgg16Full,
-                    frame_period_ns: 50_000_000,
-                };
-                all.extend(
-                    simulate_latency(&*engine, &cfg, FRAMES).expect("sim"),
-                );
-            }
-            let mean =
-                all.iter().map(|v| *v as f64).sum::<f64>() / all.len() as f64
-                    / 1e9;
-            let mut sorted = all.clone();
-            sorted.sort_unstable();
-            let p95 =
-                sorted[(sorted.len() as f64 * 0.95) as usize] as f64 / 1e9;
-            let viol = all
-                .iter()
-                .filter(|&&v| v as f64 / 1e9 > CONSTRAINT_S)
-                .count() as f64
-                / all.len() as f64;
+        for (li, &loss) in loss_rates.iter().enumerate() {
+            let p = &sweep.points[si * n_loss + li];
+            assert_eq!(p.kind, ScenarioKind::Sc { split });
+            assert!((p.loss - loss).abs() < 1e-12);
+            let mean = p.mean_latency_ns / 1e9;
+            let p95 = p.p95_latency_ns as f64 / 1e9;
+            let viol = 1.0 - p.deadline_hit_rate.unwrap_or(1.0);
             csv.row(vec![
                 format!("{loss}"),
                 format!("L{split}"),
@@ -81,7 +89,6 @@ fn main() {
         }
         series.push((format!("SC@L{split}"), means));
     }
-    let wall = t0.elapsed().as_secs_f64();
 
     let report = fig3_report(&loss_rates, &series, CONSTRAINT_S);
     println!("{report}");
@@ -117,8 +124,8 @@ fn main() {
     let points = loss_rates.len() * splits.len();
     println!(
         "\nwrote reports/fig3.csv, reports/fig3.txt — {points} points x \
-         {FRAMES} frames x {SEEDS} seeds in {wall:.1}s \
-         ({:.0} simulated frames/s)",
-        (points * FRAMES * SEEDS as usize) as f64 / wall
+         {FRAMES} frames x {SEEDS} seeds in {wall:.1}s on {threads} \
+         thread(s) ({:.0} simulated frames/s)",
+        (points * FRAMES * SEEDS) as f64 / wall
     );
 }

@@ -1,73 +1,81 @@
 //! Bench: regenerate the paper's Fig. 4 — RC-scenario accuracy (left) and
 //! latency (right) vs packet loss rate under TCP and UDP, 1 Gb/s FD.
 //!
-//! Accuracy is *measured*: every frame's input tensor is transferred
-//! through the simulated channel and — under UDP — corrupted exactly where
-//! datagrams were lost, then classified by the active backend's model.
-//! Latency uses paper-scale volumetrics (224x224x3 f32 input ≈ 602 kB).
-//! Expected shape: TCP accuracy flat / latency rising; UDP latency flat /
-//! accuracy falling. Writes reports/fig4.txt and reports/fig4.csv.
+//! Both panels run on the design-space sweep engine (`coordinator::sweep`)
+//! as two grids over protocol × loss: a full-mode grid measuring accuracy
+//! (every frame's input tensor is transferred through the simulated
+//! channel and — under UDP — corrupted exactly where datagrams were lost,
+//! then classified by the active backend's model) and a latency-only grid
+//! at paper-scale volumetrics (224x224x3 f32 input ≈ 602 kB). Expected
+//! shape: TCP accuracy flat / latency rising; UDP latency flat / accuracy
+//! falling. Writes reports/fig4.txt and reports/fig4.csv.
 
 use std::path::Path;
 
-use sei::coordinator::{run_scenario, simulate_latency, ModelScale,
-                       QosRequirements, ScenarioConfig, ScenarioKind};
-use sei::model::DeviceProfile;
-use sei::netsim::transfer::{NetworkConfig, Protocol};
+use sei::coordinator::{
+    run_sweep, ModelScale, ScenarioKind, SweepMode, SweepSpec,
+};
+use sei::netsim::transfer::Protocol;
 use sei::report::csv::Csv;
 use sei::report::fig4_report;
-use sei::runtime::{load_backend, InferenceBackend};
+use sei::runtime::load_backend;
 
 const ACC_FRAMES: usize = 192;
 const LAT_FRAMES: usize = 300;
 
 fn main() {
-    let engine =
-        load_backend(Path::new("artifacts")).expect("backend");
-    let test = engine.dataset("test").expect("test");
     let loss_rates = vec![0.0, 0.01, 0.02, 0.04, 0.06, 0.08, 0.10];
-    let qos = QosRequirements::none();
+
+    // Accuracy at slim scale with real inference + corruption.
+    let mut acc_spec = SweepSpec::new("fig4_accuracy");
+    acc_spec.scenarios = vec![ScenarioKind::Rc];
+    acc_spec.protocols = vec![Protocol::Tcp, Protocol::Udp];
+    acc_spec.loss_rates = loss_rates.clone();
+    acc_spec.scales = vec![ModelScale::Slim];
+    acc_spec.frames = ACC_FRAMES;
+    acc_spec.seed = 4242;
+    acc_spec.frame_period_ns = 50_000_000;
+
+    // Latency at paper scale (VGG16@224 input volume), no model execution.
+    let mut lat_spec = acc_spec.clone();
+    lat_spec.name = "fig4_latency".to_string();
+    lat_spec.mode = SweepMode::LatencyOnly;
+    lat_spec.scales = vec![ModelScale::Vgg16Full];
+    lat_spec.frames = LAT_FRAMES;
+    lat_spec.seed = 777;
+
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
 
     println!("=== Fig. 4: protocol selection (RC, 1 Gb/s FD) ===");
     println!(
         "accuracy: {ACC_FRAMES} real inferences/point; latency: paper-scale \
-         volumetrics, {LAT_FRAMES} frames/point\n"
+         volumetrics, {LAT_FRAMES} frames/point; sweep engine on {threads} \
+         thread(s)\n"
     );
 
+    let factory = || load_backend(Path::new("artifacts"));
     let t0 = std::time::Instant::now();
+    let acc_sweep = run_sweep(&acc_spec, threads, &factory).expect("sweep");
+    let lat_sweep = run_sweep(&lat_spec, threads, &factory).expect("sweep");
+    let wall = t0.elapsed().as_secs_f64();
+
+    let n_loss = loss_rates.len();
     let mut acc = vec![Vec::new(), Vec::new()]; // [tcp, udp]
     let mut lat = vec![Vec::new(), Vec::new()];
     for (pi, proto) in [Protocol::Tcp, Protocol::Udp].iter().enumerate() {
-        for &loss in &loss_rates {
-            // Accuracy at slim scale with real inference + corruption.
-            let cfg_acc = ScenarioConfig {
-                kind: ScenarioKind::Rc,
-                net: NetworkConfig::gigabit(*proto, loss, 4242),
-                edge: DeviceProfile::edge_gpu(),
-                server: DeviceProfile::server_gpu(),
-                scale: ModelScale::Slim,
-                frame_period_ns: 50_000_000,
-            };
-            let r = run_scenario(&*engine, &cfg_acc, &test, ACC_FRAMES,
-                                 &qos)
-                .expect("scenario");
-            acc[pi].push(r.accuracy);
-            // Latency at paper scale (VGG16@224 input volume).
-            let cfg_lat = ScenarioConfig {
-                scale: ModelScale::Vgg16Full,
-                net: NetworkConfig::gigabit(*proto, loss, 777),
-                ..cfg_acc
-            };
-            let lats = simulate_latency(&*engine, &cfg_lat, LAT_FRAMES)
-                .expect("lat");
-            lat[pi].push(
-                lats.iter().map(|v| *v as f64).sum::<f64>()
-                    / lats.len() as f64
-                    / 1e9,
-            );
+        for (li, &loss) in loss_rates.iter().enumerate() {
+            let pa = &acc_sweep.points[pi * n_loss + li];
+            assert_eq!(pa.protocol, *proto);
+            assert!((pa.loss - loss).abs() < 1e-12);
+            acc[pi].push(pa.accuracy.expect("full-mode point"));
+            let pl = &lat_sweep.points[pi * n_loss + li];
+            assert_eq!(pl.protocol, *proto);
+            assert!((pl.loss - loss).abs() < 1e-12);
+            lat[pi].push(pl.mean_latency_ns / 1e9);
         }
     }
-    let wall = t0.elapsed().as_secs_f64();
 
     let report =
         fig4_report(&loss_rates, &acc[0], &acc[1], &lat[0], &lat[1]);

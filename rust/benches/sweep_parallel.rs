@@ -1,0 +1,119 @@
+//! Bench: wall-clock speedup of the design-space sweep engine's worker
+//! pool over sequential execution of the same grid — and a determinism
+//! check that every thread count produces a byte-identical report.
+//!
+//! Environment knobs (same contract as `netsim_micro`):
+//!   SEI_BENCH_QUICK=1      smaller grid / fewer frames
+//!   SEI_BENCH_JSON=<path>  also write the stats as machine-readable JSON
+
+use std::path::Path;
+use std::time::Instant;
+
+use sei::coordinator::{
+    run_sweep, ScenarioKind, SweepMode, SweepSpec,
+};
+use sei::netsim::transfer::Protocol;
+use sei::runtime::load_backend;
+use sei::util::json::{self, Json};
+
+fn main() {
+    let quick = std::env::var("SEI_BENCH_QUICK").is_ok();
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    let mut spec = SweepSpec::new("sweep_parallel");
+    spec.mode = SweepMode::Full;
+    spec.scenarios = vec![
+        ScenarioKind::Lc,
+        ScenarioKind::Rc,
+        ScenarioKind::Sc { split: 5 },
+        ScenarioKind::Sc { split: 9 },
+        ScenarioKind::Sc { split: 11 },
+        ScenarioKind::Sc { split: 13 },
+        ScenarioKind::Sc { split: 15 },
+    ];
+    spec.protocols = vec![Protocol::Tcp, Protocol::Udp];
+    spec.loss_rates = if quick {
+        vec![0.0, 0.05]
+    } else {
+        vec![0.0, 0.02, 0.05, 0.08]
+    };
+    spec.frames = if quick { 48 } else { 192 };
+    spec.seeds_per_point = if quick { 1 } else { 2 };
+    spec.frame_period_ns = 50_000_000;
+    spec.max_latency_ms = 50.0;
+    spec.min_accuracy = 0.9;
+
+    let jobs = spec.expand().expect("spec").len();
+    println!(
+        "=== sweep_parallel: {} grid points x {} frames x {} seed(s), \
+         {cores} core(s) available{} ===\n",
+        jobs,
+        spec.frames,
+        spec.seeds_per_point,
+        if quick { " (quick)" } else { "" }
+    );
+
+    let factory = || load_backend(Path::new("artifacts"));
+    let mut results: Vec<(usize, f64, f64)> = Vec::new(); // (threads, s, x)
+    let mut baseline_json = String::new();
+    let mut baseline_s = 0.0f64;
+    for &threads in &[1usize, 2, 4, 8] {
+        let t0 = Instant::now();
+        let report = run_sweep(&spec, threads, &factory).expect("sweep");
+        let wall = t0.elapsed().as_secs_f64();
+        let j = report.to_json().to_string();
+        if threads == 1 {
+            baseline_json = j.clone();
+            baseline_s = wall;
+        } else {
+            assert_eq!(
+                j, baseline_json,
+                "sweep report must be identical at every thread count"
+            );
+        }
+        let speedup = baseline_s / wall;
+        println!(
+            "threads {threads:>2}   wall {wall:>7.3} s   speedup {speedup:>5.2}x\
+             {}",
+            if threads == 1 { "   (baseline)" } else { "" }
+        );
+        results.push((threads, wall, speedup));
+    }
+    println!(
+        "\ndeterminism: all reports byte-identical ({} points, {} bytes of \
+         JSON)",
+        jobs,
+        baseline_json.len()
+    );
+    let best = results
+        .iter()
+        .map(|&(_, _, s)| s)
+        .fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "best speedup {best:.2}x over sequential on {cores} core(s)"
+    );
+
+    if let Ok(path) = std::env::var("SEI_BENCH_JSON") {
+        let entries: Vec<Json> = results
+            .iter()
+            .map(|&(threads, wall, speedup)| {
+                json::obj(vec![
+                    ("threads", json::num(threads as f64)),
+                    ("wall_s", json::num(wall)),
+                    ("speedup", json::num(speedup)),
+                ])
+            })
+            .collect();
+        let doc = json::obj(vec![
+            ("bench", json::s("sweep_parallel")),
+            ("quick", Json::Bool(quick)),
+            ("cores", json::num(cores as f64)),
+            ("grid_points", json::num(jobs as f64)),
+            ("results", json::arr(entries)),
+        ]);
+        std::fs::write(&path, doc.to_string()).expect("write bench json");
+        println!("\nwrote {path}");
+    }
+}

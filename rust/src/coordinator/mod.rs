@@ -12,6 +12,7 @@ pub mod saliency;
 pub mod scenario;
 pub mod serve;
 pub mod suggest;
+pub mod sweep;
 pub mod workload;
 
 pub use qos::QosRequirements;
@@ -22,3 +23,7 @@ pub use scenario::{
 };
 pub use serve::{serve, ServeReport};
 pub use suggest::{best, rank_configurations, suggest, Suggestion};
+pub use sweep::{
+    pooled_scenario, run_sweep, SweepJob, SweepMode, SweepPoint, SweepReport,
+    SweepSpec,
+};

@@ -40,6 +40,26 @@ pub enum ScenarioKind {
     Sc { split: usize },
 }
 
+impl ScenarioKind {
+    /// Parse `"lc" | "rc" | "sc@<layer>"` (case-insensitive; `sc@L13` and
+    /// `sc@13` are both accepted, so [`std::fmt::Display`] round-trips).
+    pub fn parse(s: &str) -> Result<ScenarioKind> {
+        let t = s.to_ascii_lowercase();
+        match t.as_str() {
+            "lc" => Ok(ScenarioKind::Lc),
+            "rc" => Ok(ScenarioKind::Rc),
+            other => {
+                if let Some(rest) = other.strip_prefix("sc@") {
+                    let rest = rest.strip_prefix('l').unwrap_or(rest);
+                    Ok(ScenarioKind::Sc { split: rest.parse()? })
+                } else {
+                    bail!("scenario must be lc | rc | sc@<layer>, got '{s}'")
+                }
+            }
+        }
+    }
+}
+
 impl std::fmt::Display for ScenarioKind {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
@@ -59,6 +79,24 @@ pub enum ModelScale {
     /// accuracy is still measured on the slim artifacts with the same
     /// loss fraction (corruption is scaled proportionally).
     Vgg16Full,
+}
+
+impl ModelScale {
+    /// Parse `"slim" | "vgg16"` (case-insensitive).
+    pub fn parse(s: &str) -> Result<ModelScale> {
+        match s.to_ascii_lowercase().as_str() {
+            "slim" => Ok(ModelScale::Slim),
+            "vgg16" | "vgg16-full" => Ok(ModelScale::Vgg16Full),
+            other => bail!("unknown model scale '{other}' (slim | vgg16)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelScale::Slim => "slim",
+            ModelScale::Vgg16Full => "vgg16",
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -100,7 +138,7 @@ pub struct ScenarioReport {
 }
 
 impl ScenarioReport {
-    fn from_records(
+    pub(crate) fn from_records(
         cfg: &ScenarioConfig,
         records: Vec<FrameRecord>,
         qos: &QosRequirements,
@@ -166,9 +204,11 @@ fn costs(engine: &dyn InferenceBackend, cfg: &ScenarioConfig)
     let m = &engine.manifest().model;
     let down_bytes = (m.num_classes * 4) as u64;
     let (net, input_bytes): (Network, u64) = match cfg.scale {
+        // Slim-scale input volume comes from the manifest's input tensor
+        // description, not a hard-coded dense-RGB-f32 assumption.
         ModelScale::Slim => (
             slim_network(engine),
-            (3 * m.img_size * m.img_size * 4) as u64,
+            engine.manifest().input_bytes_per_frame(),
         ),
         ModelScale::Vgg16Full => {
             (model::vgg16_full(), (3 * 224 * 224 * 4) as u64)
@@ -390,6 +430,28 @@ mod tests {
     fn kind_display() {
         assert_eq!(ScenarioKind::Lc.to_string(), "LC");
         assert_eq!(ScenarioKind::Sc { split: 11 }.to_string(), "SC@L11");
+    }
+
+    #[test]
+    fn kind_parse_roundtrips_display() {
+        for kind in [ScenarioKind::Lc, ScenarioKind::Rc,
+                     ScenarioKind::Sc { split: 13 }] {
+            assert_eq!(ScenarioKind::parse(&kind.to_string()).unwrap(), kind);
+        }
+        assert_eq!(
+            ScenarioKind::parse("sc@11").unwrap(),
+            ScenarioKind::Sc { split: 11 }
+        );
+        assert!(ScenarioKind::parse("mc").is_err());
+        assert!(ScenarioKind::parse("sc@x").is_err());
+    }
+
+    #[test]
+    fn scale_parse_roundtrips_as_str() {
+        for scale in [ModelScale::Slim, ModelScale::Vgg16Full] {
+            assert_eq!(ModelScale::parse(scale.as_str()).unwrap(), scale);
+        }
+        assert!(ModelScale::parse("resnet").is_err());
     }
 
     #[test]

@@ -9,8 +9,9 @@ use anyhow::Result;
 use super::qos::QosRequirements;
 use super::saliency::CsCurve;
 use super::scenario::{
-    run_scenario, ModelScale, ScenarioConfig, ScenarioKind, ScenarioReport,
+    ModelScale, ScenarioConfig, ScenarioKind, ScenarioReport,
 };
+use super::sweep;
 use crate::data::Dataset;
 use crate::model::DeviceProfile;
 use crate::netsim::transfer::NetworkConfig;
@@ -67,11 +68,12 @@ pub fn rank_configurations(engine: &dyn InferenceBackend, min_layer: usize)
             cs_value: norm.get(cand).copied(),
         });
     }
-    // Baselines.
+    // Baselines. The RC uplink volume is the manifest's input tensor
+    // description (shape × dtype), not a dense-RGB-f32 assumption.
     out.push(RankedConfig {
         kind: ScenarioKind::Rc,
         predicted_accuracy: m.model.base_test_accuracy,
-        up_bytes: (3 * m.model.img_size * m.model.img_size * 4) as u64,
+        up_bytes: m.input_bytes_per_frame(),
         cs_value: None,
     });
     out.push(RankedConfig {
@@ -95,6 +97,10 @@ fn lite_accuracy(engine: &dyn InferenceBackend) -> f64 {
 
 /// Step 3: simulate each ranked configuration and check QoS.
 /// `n_frames` frames of `dataset` per configuration.
+///
+/// Each configuration is one point of the design space; execution rides the
+/// sweep engine's point runner ([`sweep::pooled_scenario`]) so the suggest
+/// loop and batch sweeps share a single scenario-execution path.
 #[allow(clippy::too_many_arguments)]
 pub fn suggest(
     engine: &dyn InferenceBackend,
@@ -117,7 +123,9 @@ pub fn suggest(
             scale: ModelScale::Slim,
             frame_period_ns: qos.max_latency_ns.unwrap_or(0),
         };
-        let report = run_scenario(engine, &cfg, dataset, n_frames, qos)?;
+        let report = sweep::pooled_scenario(
+            engine, &cfg, dataset, n_frames, &[net.seed], qos,
+        )?;
         let satisfies = qos.satisfied_by(
             report.mean_latency_ns as u64,
             report.accuracy,

@@ -1,0 +1,1073 @@
+//! Design-space sweep engine (paper Sec. IV: "rapid evaluation of different
+//! neural network rearrangements" under QoS constraints).
+//!
+//! A [`SweepSpec`] declares a cartesian grid over the paper's design axes —
+//! network condition (channel preset, propagation latency, loss rate),
+//! transport protocol (TCP/UDP), scenario kind (LC / RC / SC×split) and
+//! model scale — plus the fixed evaluation parameters (frames, seeds,
+//! device profiles, QoS bounds). [`SweepSpec::expand`] turns the grid into
+//! an ordered job list and [`run_sweep`] executes it on a deterministic
+//! worker pool: jobs are pulled from a shared counter, every job derives
+//! its simulation seeds from the spec alone, and results are keyed by job
+//! index — so the resulting [`SweepReport`] is **byte-identical regardless
+//! of thread count**. The reduction computes the accuracy-vs-latency Pareto
+//! frontier ([`crate::report::pareto`]) and per-constraint satisfaction
+//! counts, and serializes to JSON/CSV via [`crate::util::json`] and
+//! [`crate::report::csv`].
+//!
+//! Inference backends are not `Send` (executables are `Rc`-cached), so each
+//! worker thread opens its own backend through the caller's factory; the
+//! hermetic analytic backend makes that cheap and bit-reproducible.
+//!
+//! # Example: declare and expand a grid
+//!
+//! ```
+//! use sei::coordinator::sweep::SweepSpec;
+//!
+//! let spec = SweepSpec::from_json(r#"{
+//!     "name": "doc-grid",
+//!     "scenarios": ["rc", "sc@13"],
+//!     "protocols": ["tcp", "udp"],
+//!     "loss_rates": [0.0, 0.05],
+//!     "frames": 8,
+//!     "fps": 20
+//! }"#).unwrap();
+//! let jobs = spec.expand().unwrap();
+//! // 2 scenarios x 2 protocols x 2 loss rates on the default gigabit
+//! // channel at slim scale:
+//! assert_eq!(jobs.len(), 8);
+//! assert_eq!(jobs[0].index, 0);
+//! ```
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::qos::QosRequirements;
+use super::scenario::{
+    run_scenario, simulate_latency, ModelScale, ScenarioConfig, ScenarioKind,
+    ScenarioReport,
+};
+use crate::data::Dataset;
+use crate::model::DeviceProfile;
+use crate::netsim::event::SimTime;
+use crate::netsim::transfer::{NetworkConfig, Protocol};
+use crate::report::csv::Csv;
+use crate::report::pareto::pareto_frontier;
+use crate::runtime::InferenceBackend;
+use crate::util::json::{self, Json};
+use crate::util::table;
+
+/// What each grid point measures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SweepMode {
+    /// Full pipeline per frame: real inference + channel simulation, so
+    /// every point reports measured accuracy *and* latency.
+    Full,
+    /// Pure channel + compute-time simulation (no model execution) — the
+    /// paper-scale Fig. 3 style sweep where accuracy is not re-measured.
+    LatencyOnly,
+}
+
+impl SweepMode {
+    pub fn parse(s: &str) -> Result<SweepMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "full" => Ok(SweepMode::Full),
+            "latency" | "latency-only" => Ok(SweepMode::LatencyOnly),
+            other => bail!("unknown sweep mode '{other}' (full | latency)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SweepMode::Full => "full",
+            SweepMode::LatencyOnly => "latency",
+        }
+    }
+}
+
+/// Declarative description of a design-space sweep: the cartesian grid
+/// axes plus the fixed evaluation parameters shared by every point.
+///
+/// The JSON schema accepted by [`SweepSpec::from_json`] (and emitted by
+/// [`SweepSpec::to_json`]) mirrors the field names; only `scenarios`,
+/// `protocols` and `loss_rates` are required, everything else defaults as
+/// in [`SweepSpec::new`]. A `fps` key is accepted as sugar that sets both
+/// `frame_period_ns` and `max_latency_ms` from the frame rate.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub name: String,
+    pub mode: SweepMode,
+    // -- grid axes --------------------------------------------------------
+    pub scenarios: Vec<ScenarioKind>,
+    pub protocols: Vec<Protocol>,
+    /// Channel presets: `"gigabit" | "fast-ethernet" | "wifi"`.
+    pub channels: Vec<String>,
+    /// Propagation-latency overrides, µs; empty = each preset's default.
+    pub latencies_us: Vec<f64>,
+    pub loss_rates: Vec<f64>,
+    pub scales: Vec<ModelScale>,
+    // -- fixed parameters -------------------------------------------------
+    pub edge: String,
+    pub server: String,
+    /// Dataset split driving full-mode points (`"train" | "test" | "ice"`).
+    pub dataset: String,
+    /// Frames simulated per (point, seed).
+    pub frames: usize,
+    /// Independent simulation repetitions pooled into each point.
+    pub seeds_per_point: usize,
+    /// Base seed; repetition `s` of every point runs at `seed + s`.
+    pub seed: u64,
+    /// Frame inter-arrival time (conveyor speed); 0 = back-to-back.
+    pub frame_period_ns: SimTime,
+    /// QoS latency bound, ms (0 = unconstrained).
+    pub max_latency_ms: f64,
+    /// QoS accuracy bound in [0, 1] (0 = unconstrained).
+    pub min_accuracy: f64,
+}
+
+/// One expanded grid point, in deterministic expansion order.
+#[derive(Clone, Debug)]
+pub struct SweepJob {
+    pub index: usize,
+    pub kind: ScenarioKind,
+    pub protocol: Protocol,
+    pub channel: String,
+    pub latency_us: Option<f64>,
+    pub loss: f64,
+    pub scale: ModelScale,
+}
+
+/// Resolve a channel-preset name into its [`NetworkConfig`].
+pub fn channel_preset(
+    name: &str,
+    protocol: Protocol,
+    loss: f64,
+    seed: u64,
+) -> Result<NetworkConfig> {
+    Ok(match name {
+        "gigabit" => NetworkConfig::gigabit(protocol, loss, seed),
+        "fast-ethernet" => NetworkConfig::fast_ethernet(protocol, loss, seed),
+        "wifi" => NetworkConfig::wifi(protocol, loss, seed),
+        other => bail!(
+            "unknown channel preset '{other}' (gigabit | fast-ethernet | wifi)"
+        ),
+    })
+}
+
+impl SweepSpec {
+    /// A single-point RC/TCP/gigabit spec with the default evaluation
+    /// parameters; callers widen the axes they want to explore.
+    pub fn new(name: &str) -> SweepSpec {
+        SweepSpec {
+            name: name.to_string(),
+            mode: SweepMode::Full,
+            scenarios: vec![ScenarioKind::Rc],
+            protocols: vec![Protocol::Tcp],
+            channels: vec!["gigabit".to_string()],
+            latencies_us: Vec::new(),
+            loss_rates: vec![0.0],
+            scales: vec![ModelScale::Slim],
+            edge: "edge-gpu".to_string(),
+            server: "server-gpu".to_string(),
+            dataset: "test".to_string(),
+            frames: 64,
+            seeds_per_point: 1,
+            seed: 42,
+            frame_period_ns: 0,
+            max_latency_ms: 0.0,
+            min_accuracy: 0.0,
+        }
+    }
+
+    /// The QoS requirements every point is checked against.
+    pub fn qos(&self) -> QosRequirements {
+        let mut q = QosRequirements::none();
+        if self.max_latency_ms > 0.0 {
+            q.max_latency_ns = Some((self.max_latency_ms * 1e6) as SimTime);
+        }
+        if self.min_accuracy > 0.0 {
+            q = q.and_accuracy(self.min_accuracy);
+        }
+        q
+    }
+
+    /// Expand the grid into its ordered job list. Axis order (outermost
+    /// first): scenario, protocol, channel, latency, loss, scale — so a
+    /// caller can index `jobs` arithmetically.
+    pub fn expand(&self) -> Result<Vec<SweepJob>> {
+        if self.scenarios.is_empty() {
+            bail!("sweep spec '{}' has no scenarios", self.name);
+        }
+        if self.protocols.is_empty() {
+            bail!("sweep spec '{}' has no protocols", self.name);
+        }
+        if self.channels.is_empty() {
+            bail!("sweep spec '{}' has no channels", self.name);
+        }
+        if self.loss_rates.is_empty() {
+            bail!("sweep spec '{}' has no loss_rates", self.name);
+        }
+        if self.scales.is_empty() {
+            bail!("sweep spec '{}' has no scales", self.name);
+        }
+        if self.frames == 0 {
+            bail!("sweep spec '{}' needs frames >= 1", self.name);
+        }
+        if self.seeds_per_point == 0 {
+            bail!("sweep spec '{}' needs seeds_per_point >= 1", self.name);
+        }
+        for &l in &self.loss_rates {
+            if !(0.0..1.0).contains(&l) {
+                bail!(
+                    "sweep spec '{}': loss rate {l} outside [0, 1)",
+                    self.name
+                );
+            }
+        }
+        for &us in &self.latencies_us {
+            if !us.is_finite() || us < 0.0 {
+                bail!(
+                    "sweep spec '{}': latency {us} µs must be a \
+                     non-negative number",
+                    self.name
+                );
+            }
+        }
+        for c in &self.channels {
+            channel_preset(c, Protocol::Tcp, 0.0, 0)?;
+        }
+        for name in [&self.edge, &self.server] {
+            if DeviceProfile::by_name(name).is_none() {
+                bail!("unknown device profile '{name}'");
+            }
+        }
+        let lats: Vec<Option<f64>> = if self.latencies_us.is_empty() {
+            vec![None]
+        } else {
+            self.latencies_us.iter().map(|&l| Some(l)).collect()
+        };
+        let mut jobs = Vec::new();
+        for &kind in &self.scenarios {
+            for &protocol in &self.protocols {
+                for channel in &self.channels {
+                    for &latency_us in &lats {
+                        for &loss in &self.loss_rates {
+                            for &scale in &self.scales {
+                                jobs.push(SweepJob {
+                                    index: jobs.len(),
+                                    kind,
+                                    protocol,
+                                    channel: channel.clone(),
+                                    latency_us,
+                                    loss,
+                                    scale,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(jobs)
+    }
+
+    /// Parse a spec from its JSON document (see the type-level docs for
+    /// the schema). The grid is validated eagerly, so an invalid spec
+    /// fails here rather than inside a worker thread.
+    pub fn from_json(text: &str) -> Result<SweepSpec> {
+        const KEYS: [&str; 18] = [
+            "name", "mode", "scenarios", "protocols", "channels",
+            "latencies_us", "loss_rates", "scales", "edge", "server",
+            "dataset", "frames", "seeds_per_point", "seed", "fps",
+            "frame_period_ns", "max_latency_ms", "min_accuracy",
+        ];
+        let j = Json::parse(text).context("parsing sweep spec")?;
+        // A misspelled optional key must not silently fall back to its
+        // default (e.g. "max_latency" running the sweep unconstrained).
+        if let Json::Obj(map) = &j {
+            for k in map.keys() {
+                if !KEYS.contains(&k.as_str()) {
+                    bail!("unknown sweep spec key '{k}'");
+                }
+            }
+        }
+        let mut spec = SweepSpec::new(
+            j.opt("name").map(|v| v.str()).transpose()?.unwrap_or("sweep"),
+        );
+        spec.scenarios = j
+            .get("scenarios")?
+            .str_vec()?
+            .iter()
+            .map(|s| ScenarioKind::parse(s))
+            .collect::<Result<_>>()?;
+        spec.protocols = j
+            .get("protocols")?
+            .str_vec()?
+            .iter()
+            .map(|s| Protocol::parse(s))
+            .collect::<Result<_>>()?;
+        spec.loss_rates = j.get("loss_rates")?.f64_vec()?;
+        if let Some(v) = j.opt("channels") {
+            spec.channels = v.str_vec()?;
+        }
+        if let Some(v) = j.opt("latencies_us") {
+            spec.latencies_us = v.f64_vec()?;
+        }
+        if let Some(v) = j.opt("scales") {
+            spec.scales = v
+                .str_vec()?
+                .iter()
+                .map(|s| ModelScale::parse(s))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = j.opt("edge") {
+            spec.edge = v.str()?.to_string();
+        }
+        if let Some(v) = j.opt("server") {
+            spec.server = v.str()?.to_string();
+        }
+        if let Some(v) = j.opt("dataset") {
+            spec.dataset = v.str()?.to_string();
+        }
+        if let Some(v) = j.opt("frames") {
+            spec.frames = v.u64()? as usize;
+        }
+        if let Some(v) = j.opt("seeds_per_point") {
+            spec.seeds_per_point = v.u64()? as usize;
+        }
+        if let Some(v) = j.opt("seed") {
+            spec.seed = v.u64()?;
+        }
+        if let Some(v) = j.opt("fps") {
+            let fps = v.f64()?;
+            if !fps.is_finite() || fps <= 0.0 {
+                bail!("sweep spec 'fps' must be a positive number, got {fps}");
+            }
+            spec.frame_period_ns = (1e9 / fps) as SimTime;
+            spec.max_latency_ms = 1e3 / fps;
+        }
+        if let Some(v) = j.opt("frame_period_ns") {
+            spec.frame_period_ns = v.u64()?;
+        }
+        if let Some(v) = j.opt("max_latency_ms") {
+            let ms = v.f64()?;
+            if !ms.is_finite() || ms < 0.0 {
+                bail!(
+                    "sweep spec 'max_latency_ms' must be a non-negative \
+                     number, got {ms}"
+                );
+            }
+            spec.max_latency_ms = ms;
+        }
+        if let Some(v) = j.opt("min_accuracy") {
+            let acc = v.f64()?;
+            if !acc.is_finite() || !(0.0..=1.0).contains(&acc) {
+                bail!(
+                    "sweep spec 'min_accuracy' must be in [0, 1], got {acc}"
+                );
+            }
+            spec.min_accuracy = acc;
+        }
+        if let Some(v) = j.opt("mode") {
+            spec.mode = SweepMode::parse(v.str()?)?;
+        }
+        spec.expand()?;
+        Ok(spec)
+    }
+
+    /// Serialize back to the JSON schema [`SweepSpec::from_json`] accepts.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("mode", json::s(self.mode.as_str())),
+            (
+                "scenarios",
+                json::arr(
+                    self.scenarios
+                        .iter()
+                        .map(|k| json::s(&k.to_string()))
+                        .collect(),
+                ),
+            ),
+            (
+                "protocols",
+                json::arr(
+                    self.protocols
+                        .iter()
+                        .map(|p| json::s(&p.to_string()))
+                        .collect(),
+                ),
+            ),
+            (
+                "channels",
+                json::arr(self.channels.iter().map(|c| json::s(c)).collect()),
+            ),
+            (
+                "latencies_us",
+                json::arr(
+                    self.latencies_us.iter().map(|&l| json::num(l)).collect(),
+                ),
+            ),
+            (
+                "loss_rates",
+                json::arr(
+                    self.loss_rates.iter().map(|&l| json::num(l)).collect(),
+                ),
+            ),
+            (
+                "scales",
+                json::arr(
+                    self.scales.iter().map(|s| json::s(s.as_str())).collect(),
+                ),
+            ),
+            ("edge", json::s(&self.edge)),
+            ("server", json::s(&self.server)),
+            ("dataset", json::s(&self.dataset)),
+            ("frames", json::num(self.frames as f64)),
+            ("seeds_per_point", json::num(self.seeds_per_point as f64)),
+            ("seed", json::num(self.seed as f64)),
+            ("frame_period_ns", json::num(self.frame_period_ns as f64)),
+            ("max_latency_ms", json::num(self.max_latency_ms)),
+            ("min_accuracy", json::num(self.min_accuracy)),
+        ])
+    }
+}
+
+/// Aggregated metrics of one grid point (pooled over its seeds).
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub index: usize,
+    pub kind: ScenarioKind,
+    pub protocol: Protocol,
+    pub channel: String,
+    pub latency_us: Option<f64>,
+    pub loss: f64,
+    pub scale: ModelScale,
+    /// Total frames pooled into this point (frames × seeds).
+    pub frames: usize,
+    /// Measured accuracy; `None` in latency-only sweeps.
+    pub accuracy: Option<f64>,
+    pub mean_latency_ns: f64,
+    pub p95_latency_ns: SimTime,
+    pub max_latency_ns: SimTime,
+    pub mean_wire_bytes: f64,
+    pub total_retransmits: u64,
+    /// Fraction of frames meeting the latency bound (if one is set).
+    pub deadline_hit_rate: Option<f64>,
+    /// QoS verdict; `None` when the spec sets no checkable constraint.
+    pub satisfies: Option<bool>,
+}
+
+/// Run `cfg` once per seed and pool the frame records into one report —
+/// the single scenario-execution path shared by the sweep worker pool and
+/// the [`crate::coordinator::suggest`] engine.
+pub fn pooled_scenario(
+    engine: &dyn InferenceBackend,
+    cfg: &ScenarioConfig,
+    dataset: &Dataset,
+    frames: usize,
+    seeds: &[u64],
+    qos: &QosRequirements,
+) -> Result<ScenarioReport> {
+    if seeds.is_empty() || frames == 0 {
+        bail!("pooled_scenario needs at least one seed and one frame");
+    }
+    let mut records = Vec::with_capacity(frames * seeds.len());
+    for &seed in seeds {
+        let mut c = cfg.clone();
+        c.net.seed = seed;
+        records.extend(run_scenario(engine, &c, dataset, frames, qos)?.records);
+    }
+    Ok(ScenarioReport::from_records(cfg, records, qos))
+}
+
+/// Execute one expanded job on `engine`. Deterministic in `(spec, job)`
+/// alone: the channel seeds are `spec.seed + s`, never thread state.
+fn run_job(
+    engine: &dyn InferenceBackend,
+    dataset: Option<&Dataset>,
+    spec: &SweepSpec,
+    job: &SweepJob,
+) -> Result<SweepPoint> {
+    let qos = spec.qos();
+    let mut net =
+        channel_preset(&job.channel, job.protocol, job.loss, spec.seed)?;
+    if let Some(us) = job.latency_us {
+        net.latency_ns = (us * 1000.0) as SimTime;
+    }
+    let edge = DeviceProfile::by_name(&spec.edge)
+        .ok_or_else(|| anyhow!("unknown edge profile '{}'", spec.edge))?;
+    let server = DeviceProfile::by_name(&spec.server)
+        .ok_or_else(|| anyhow!("unknown server profile '{}'", spec.server))?;
+    let cfg = ScenarioConfig {
+        kind: job.kind,
+        net,
+        edge,
+        server,
+        scale: job.scale,
+        frame_period_ns: spec.frame_period_ns,
+    };
+    let seeds: Vec<u64> = (0..spec.seeds_per_point as u64)
+        .map(|s| spec.seed.wrapping_add(s))
+        .collect();
+    match spec.mode {
+        SweepMode::Full => {
+            let ds = dataset
+                .ok_or_else(|| anyhow!("full-mode sweep needs a dataset"))?;
+            let r =
+                pooled_scenario(engine, &cfg, ds, spec.frames, &seeds, &qos)?;
+            Ok(SweepPoint {
+                index: job.index,
+                kind: job.kind,
+                protocol: job.protocol,
+                channel: job.channel.clone(),
+                latency_us: job.latency_us,
+                loss: job.loss,
+                scale: job.scale,
+                frames: r.frames,
+                accuracy: Some(r.accuracy),
+                mean_latency_ns: r.mean_latency_ns,
+                p95_latency_ns: r.p95_latency_ns,
+                max_latency_ns: r.max_latency_ns,
+                mean_wire_bytes: r.mean_wire_bytes,
+                total_retransmits: r.total_retransmits,
+                deadline_hit_rate: r.deadline_hit_rate,
+                satisfies: r.qos_satisfied,
+            })
+        }
+        SweepMode::LatencyOnly => {
+            let mut lats: Vec<SimTime> =
+                Vec::with_capacity(spec.frames * seeds.len());
+            for &seed in &seeds {
+                let mut c = cfg.clone();
+                c.net.seed = seed;
+                lats.extend(simulate_latency(engine, &c, spec.frames)?);
+            }
+            let n = lats.len().max(1);
+            let mean =
+                lats.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+            let mut sorted = lats.clone();
+            sorted.sort_unstable();
+            // (len * 0.95) truncated is always < len, so no modulo needed;
+            // mirrors ScenarioReport::from_records' percentile convention.
+            let p95 = sorted
+                .get((sorted.len() as f64 * 0.95) as usize)
+                .copied()
+                .unwrap_or(0);
+            let max = sorted.last().copied().unwrap_or(0);
+            let deadline_hit_rate = qos.max_latency_ns.map(|m| {
+                lats.iter().filter(|&&v| v <= m).count() as f64 / n as f64
+            });
+            // An accuracy bound is uncheckable without inference: leave
+            // the per-point verdict open rather than claiming "ok" while
+            // the report-level counts say otherwise.
+            let satisfies = if spec.min_accuracy > 0.0 {
+                None
+            } else {
+                qos.max_latency_ns.map(|m| (mean as SimTime) <= m)
+            };
+            Ok(SweepPoint {
+                index: job.index,
+                kind: job.kind,
+                protocol: job.protocol,
+                channel: job.channel.clone(),
+                latency_us: job.latency_us,
+                loss: job.loss,
+                scale: job.scale,
+                frames: lats.len(),
+                accuracy: None,
+                mean_latency_ns: mean,
+                p95_latency_ns: p95,
+                max_latency_ns: max,
+                mean_wire_bytes: 0.0,
+                total_retransmits: 0,
+                deadline_hit_rate,
+                satisfies,
+            })
+        }
+    }
+}
+
+/// The reduced result of a sweep: every point plus the Pareto frontier
+/// and per-constraint satisfaction counts.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub spec: SweepSpec,
+    /// One entry per grid point, in expansion (index) order.
+    pub points: Vec<SweepPoint>,
+    /// Indices into `points` of the accuracy-vs-mean-latency Pareto
+    /// frontier, latency ascending (empty for latency-only sweeps).
+    pub pareto: Vec<usize>,
+    /// Points meeting the latency bound (all, when unconstrained).
+    pub satisfied_latency: usize,
+    /// Points meeting the accuracy bound (all, when unconstrained).
+    pub satisfied_accuracy: usize,
+    /// Points meeting every stated constraint.
+    pub satisfied_both: usize,
+}
+
+impl SweepReport {
+    pub fn from_points(
+        spec: &SweepSpec,
+        points: Vec<SweepPoint>,
+    ) -> SweepReport {
+        let qos = spec.qos();
+        let coords: Vec<(f64, f64)> = points
+            .iter()
+            .map(|p| (p.accuracy.unwrap_or(f64::NAN), p.mean_latency_ns))
+            .collect();
+        let lat_ok = |p: &SweepPoint| {
+            qos.max_latency_ns
+                .map_or(true, |m| p.mean_latency_ns as SimTime <= m)
+        };
+        let acc_ok = |p: &SweepPoint| match (qos.min_accuracy, p.accuracy) {
+            (None, _) => true,
+            (Some(m), Some(a)) => a >= m,
+            (Some(_), None) => false,
+        };
+        SweepReport {
+            pareto: pareto_frontier(&coords),
+            satisfied_latency: points.iter().filter(|p| lat_ok(p)).count(),
+            satisfied_accuracy: points.iter().filter(|p| acc_ok(p)).count(),
+            satisfied_both: points
+                .iter()
+                .filter(|p| lat_ok(p) && acc_ok(p))
+                .count(),
+            spec: spec.clone(),
+            points,
+        }
+    }
+
+    /// Machine-readable report (deterministic key order and formatting).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("spec", self.spec.to_json()),
+            (
+                "points",
+                json::arr(self.points.iter().map(point_json).collect()),
+            ),
+            (
+                "pareto",
+                json::arr(
+                    self.pareto.iter().map(|&i| json::num(i as f64)).collect(),
+                ),
+            ),
+            ("satisfied_latency", json::num(self.satisfied_latency as f64)),
+            (
+                "satisfied_accuracy",
+                json::num(self.satisfied_accuracy as f64),
+            ),
+            ("satisfied_both", json::num(self.satisfied_both as f64)),
+            ("total_points", json::num(self.points.len() as f64)),
+        ])
+    }
+
+    /// Plot-ready CSV, one row per grid point.
+    pub fn to_csv(&self) -> Csv {
+        let mut csv = Csv::new(&[
+            "index",
+            "scenario",
+            "protocol",
+            "channel",
+            "latency_us",
+            "loss",
+            "scale",
+            "frames",
+            "accuracy",
+            "mean_latency_ms",
+            "p95_latency_ms",
+            "max_latency_ms",
+            "deadline_hit_rate",
+            "qos_satisfied",
+            "pareto",
+        ]);
+        for (pos, p) in self.points.iter().enumerate() {
+            csv.row(vec![
+                p.index.to_string(),
+                p.kind.to_string(),
+                p.protocol.to_string(),
+                p.channel.clone(),
+                p.latency_us.map(|v| format!("{v}")).unwrap_or_default(),
+                format!("{}", p.loss),
+                p.scale.as_str().to_string(),
+                p.frames.to_string(),
+                p.accuracy.map(|a| format!("{a:.4}")).unwrap_or_default(),
+                format!("{:.4}", p.mean_latency_ns / 1e6),
+                format!("{:.4}", p.p95_latency_ns as f64 / 1e6),
+                format!("{:.4}", p.max_latency_ns as f64 / 1e6),
+                p.deadline_hit_rate
+                    .map(|r| format!("{r:.4}"))
+                    .unwrap_or_default(),
+                p.satisfies.map(|s| s.to_string()).unwrap_or_default(),
+                // The frontier holds *positions* into `points` (== index
+                // for reports built by run_sweep, but not necessarily for
+                // caller-assembled ones).
+                self.pareto.contains(&pos).to_string(),
+            ]);
+        }
+        csv
+    }
+
+    /// Human-readable table + frontier + satisfaction summary.
+    pub fn render(&self) -> String {
+        let qos = self.spec.qos();
+        let n = self.points.len();
+        let mut out = format!(
+            "Sweep '{}' — {} points ({} mode), QoS: {}\n\n",
+            self.spec.name,
+            n,
+            self.spec.mode.as_str(),
+            qos.describe()
+        );
+        let rows: Vec<Vec<String>> = self
+            .points
+            .iter()
+            .enumerate()
+            .map(|(pos, p)| {
+                vec![
+                    p.index.to_string(),
+                    p.kind.to_string(),
+                    format!("{} {}", p.protocol, p.channel),
+                    format!("{:.1}%", p.loss * 100.0),
+                    p.scale.as_str().to_string(),
+                    p.accuracy
+                        .map(|a| format!("{:.1}%", a * 100.0))
+                        .unwrap_or_else(|| "—".to_string()),
+                    format!("{:.2} ms", p.mean_latency_ns / 1e6),
+                    format!("{:.2} ms", p.p95_latency_ns as f64 / 1e6),
+                    match p.satisfies {
+                        Some(true) => "ok",
+                        Some(false) => "violated",
+                        None => "—",
+                    }
+                    .to_string(),
+                    if self.pareto.contains(&pos) { "*" } else { "" }
+                        .to_string(),
+                ]
+            })
+            .collect();
+        out.push_str(&table::render(
+            &[
+                "#", "scenario", "transport", "loss", "scale", "accuracy",
+                "mean lat", "p95 lat", "QoS", "Pareto",
+            ],
+            &rows,
+        ));
+        if !self.pareto.is_empty() {
+            out.push_str(
+                "\naccuracy-vs-latency Pareto frontier (latency ascending):\n",
+            );
+            for &i in &self.pareto {
+                let p = &self.points[i];
+                out.push_str(&format!(
+                    "  #{:<3} {:<8} {:<4} loss {:>4.1}%  acc {:>5.1}%  \
+                     mean {:>8.2} ms\n",
+                    p.index,
+                    p.kind.to_string(),
+                    p.protocol.to_string(),
+                    p.loss * 100.0,
+                    p.accuracy.unwrap_or(f64::NAN) * 100.0,
+                    p.mean_latency_ns / 1e6,
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "\nconstraint satisfaction: latency {}/{n} · accuracy {}/{n} · \
+             both {}/{n}\n",
+            self.satisfied_latency, self.satisfied_accuracy,
+            self.satisfied_both,
+        ));
+        out
+    }
+}
+
+fn point_json(p: &SweepPoint) -> Json {
+    json::obj(vec![
+        ("index", json::num(p.index as f64)),
+        ("scenario", json::s(&p.kind.to_string())),
+        ("protocol", json::s(&p.protocol.to_string())),
+        ("channel", json::s(&p.channel)),
+        (
+            "latency_us",
+            p.latency_us.map(json::num).unwrap_or(Json::Null),
+        ),
+        ("loss", json::num(p.loss)),
+        ("scale", json::s(p.scale.as_str())),
+        ("frames", json::num(p.frames as f64)),
+        ("accuracy", p.accuracy.map(json::num).unwrap_or(Json::Null)),
+        ("mean_latency_ns", json::num(p.mean_latency_ns)),
+        ("p95_latency_ns", json::num(p.p95_latency_ns as f64)),
+        ("max_latency_ns", json::num(p.max_latency_ns as f64)),
+        ("mean_wire_bytes", json::num(p.mean_wire_bytes)),
+        ("total_retransmits", json::num(p.total_retransmits as f64)),
+        (
+            "deadline_hit_rate",
+            p.deadline_hit_rate.map(json::num).unwrap_or(Json::Null),
+        ),
+        (
+            "qos_satisfied",
+            p.satisfies.map(Json::Bool).unwrap_or(Json::Null),
+        ),
+    ])
+}
+
+/// A thread-safe constructor for per-worker inference backends. Backends
+/// themselves are deliberately *not* shared across threads (their caches
+/// are `Rc`-based); each worker opens its own.
+pub type BackendFactory<'a> =
+    dyn Fn() -> Result<Box<dyn InferenceBackend>> + Sync + 'a;
+
+fn load_dataset(
+    engine: &dyn InferenceBackend,
+    spec: &SweepSpec,
+) -> Result<Option<Dataset>> {
+    match spec.mode {
+        SweepMode::Full => Ok(Some(engine.dataset(&spec.dataset)?)),
+        SweepMode::LatencyOnly => Ok(None),
+    }
+}
+
+fn record_failure(
+    flag: &AtomicBool,
+    slot: &Mutex<Option<anyhow::Error>>,
+    e: anyhow::Error,
+) {
+    flag.store(true, Ordering::Relaxed);
+    let mut s = slot.lock().unwrap();
+    if s.is_none() {
+        *s = Some(e);
+    }
+}
+
+/// Expand `spec` and execute every grid point on a pool of `threads`
+/// workers (clamped to the job count; `<= 1` runs inline). Workers pull
+/// jobs from a shared counter and store results by job index, so the
+/// returned [`SweepReport`] is identical — byte-for-byte in its JSON/CSV
+/// forms — for every thread count.
+///
+/// ```
+/// use std::path::Path;
+/// use sei::coordinator::sweep::{run_sweep, SweepSpec};
+/// use sei::runtime::load_backend;
+///
+/// let mut spec = SweepSpec::new("doc-run");
+/// spec.loss_rates = vec![0.0, 0.08];
+/// spec.frames = 4;
+/// let factory = || load_backend(Path::new("artifacts"));
+/// let one = run_sweep(&spec, 1, &factory).unwrap();
+/// let many = run_sweep(&spec, 2, &factory).unwrap();
+/// assert_eq!(one.to_json().to_string(), many.to_json().to_string());
+/// ```
+pub fn run_sweep(
+    spec: &SweepSpec,
+    threads: usize,
+    factory: &BackendFactory<'_>,
+) -> Result<SweepReport> {
+    let jobs = spec.expand()?;
+    let threads = threads.clamp(1, jobs.len().max(1));
+    if threads <= 1 {
+        let engine = factory()?;
+        let dataset = load_dataset(&*engine, spec)?;
+        let mut points = Vec::with_capacity(jobs.len());
+        for job in &jobs {
+            points.push(run_job(&*engine, dataset.as_ref(), spec, job)?);
+        }
+        return Ok(SweepReport::from_points(spec, points));
+    }
+
+    // The dataset is plain shareable data — load it once and hand every
+    // worker a reference; only the backends are per-worker (`Rc`-cached).
+    // Latency-only sweeps need no dataset, so skip the throwaway backend.
+    let dataset = match spec.mode {
+        SweepMode::Full => {
+            let engine = factory()?;
+            load_dataset(&*engine, spec)?
+        }
+        SweepMode::LatencyOnly => None,
+    };
+    let results: Mutex<Vec<Option<SweepPoint>>> =
+        Mutex::new(vec![None; jobs.len()]);
+    let next = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+    let error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                let engine = match factory() {
+                    Ok(e) => e,
+                    Err(e) => return record_failure(&failed, &error, e),
+                };
+                loop {
+                    if failed.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        return;
+                    }
+                    match run_job(&*engine, dataset.as_ref(), spec, &jobs[i])
+                    {
+                        Ok(p) => results.lock().unwrap()[i] = Some(p),
+                        Err(e) => {
+                            return record_failure(&failed, &error, e)
+                        }
+                    }
+                }
+            });
+        }
+    });
+    if let Some(e) = error.into_inner().unwrap() {
+        return Err(e);
+    }
+    let points = results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| p.ok_or_else(|| anyhow!("sweep point {i} missing")))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(SweepReport::from_points(spec, points))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::load_backend;
+    use std::path::Path;
+
+    fn factory() -> Result<Box<dyn InferenceBackend>> {
+        // No artifacts directory in tests: loads the analytic backend.
+        load_backend(Path::new("artifacts"))
+    }
+
+    fn small_spec() -> SweepSpec {
+        let mut spec = SweepSpec::new("unit");
+        spec.scenarios =
+            vec![ScenarioKind::Lc, ScenarioKind::Sc { split: 13 }];
+        spec.protocols = vec![Protocol::Tcp, Protocol::Udp];
+        spec.loss_rates = vec![0.0, 0.08];
+        spec.frames = 8;
+        spec.max_latency_ms = 50.0;
+        spec.min_accuracy = 0.5;
+        spec
+    }
+
+    #[test]
+    fn expand_is_cartesian_and_ordered() {
+        let spec = small_spec();
+        let jobs = spec.expand().unwrap();
+        assert_eq!(jobs.len(), 2 * 2 * 2);
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.index, i);
+        }
+        // Scenario-major, then protocol, then loss.
+        assert_eq!(jobs[0].kind, ScenarioKind::Lc);
+        assert_eq!(jobs[0].protocol, Protocol::Tcp);
+        assert_eq!(jobs[0].loss, 0.0);
+        assert_eq!(jobs[1].loss, 0.08);
+        assert_eq!(jobs[2].protocol, Protocol::Udp);
+        assert_eq!(jobs[4].kind, ScenarioKind::Sc { split: 13 });
+    }
+
+    #[test]
+    fn expand_rejects_bad_specs() {
+        let mut spec = small_spec();
+        spec.scenarios.clear();
+        assert!(spec.expand().is_err());
+        let mut spec = small_spec();
+        spec.channels = vec!["carrier-pigeon".to_string()];
+        assert!(spec.expand().is_err());
+        let mut spec = small_spec();
+        spec.edge = "tpu-v9".to_string();
+        assert!(spec.expand().is_err());
+        let mut spec = small_spec();
+        spec.frames = 0;
+        assert!(spec.expand().is_err());
+        let mut spec = small_spec();
+        spec.loss_rates = vec![1.0];
+        assert!(spec.expand().is_err());
+        let mut spec = small_spec();
+        spec.loss_rates = vec![-0.1];
+        assert!(spec.expand().is_err());
+        let mut spec = small_spec();
+        spec.latencies_us = vec![-100.0];
+        assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn from_json_applies_defaults_and_fps_sugar() {
+        let spec = SweepSpec::from_json(
+            r#"{"scenarios": ["rc"], "protocols": ["tcp"],
+                "loss_rates": [0.0], "fps": 20}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.channels, vec!["gigabit".to_string()]);
+        assert_eq!(spec.scales, vec![ModelScale::Slim]);
+        assert_eq!(spec.frame_period_ns, 50_000_000);
+        assert!((spec.max_latency_ms - 50.0).abs() < 1e-9);
+        assert_eq!(spec.qos().max_latency_ns, Some(50_000_000));
+        assert!(SweepSpec::from_json(r#"{"protocols": ["tcp"]}"#).is_err());
+        // Misspelled keys are rejected, not silently defaulted.
+        assert!(SweepSpec::from_json(
+            r#"{"scenarios": ["rc"], "protocols": ["tcp"],
+                "loss_rates": [0.0], "max_latency": 50}"#,
+        )
+        .is_err());
+        // Fractional counts are rejected, not truncated.
+        assert!(SweepSpec::from_json(
+            r#"{"scenarios": ["rc"], "protocols": ["tcp"],
+                "loss_rates": [0.0], "frames": 96.5}"#,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn spec_json_roundtrip_preserves_the_grid() {
+        let spec = small_spec();
+        let back = SweepSpec::from_json(&spec.to_json().to_string()).unwrap();
+        assert_eq!(back.expand().unwrap().len(), spec.expand().unwrap().len());
+        assert_eq!(back.name, spec.name);
+        assert_eq!(back.scenarios, spec.scenarios);
+        assert_eq!(back.protocols, spec.protocols);
+        assert_eq!(back.seed, spec.seed);
+        assert_eq!(back.mode, spec.mode);
+        assert_eq!(back.to_json().to_string(), spec.to_json().to_string());
+    }
+
+    #[test]
+    fn sequential_sweep_reports_every_point() {
+        let spec = small_spec();
+        let report = run_sweep(&spec, 1, &factory).unwrap();
+        assert_eq!(report.points.len(), 8);
+        for (i, p) in report.points.iter().enumerate() {
+            assert_eq!(p.index, i);
+            assert!(p.accuracy.is_some());
+            assert!(p.mean_latency_ns > 0.0);
+            assert!(p.satisfies.is_some());
+        }
+        assert!(!report.pareto.is_empty());
+        assert!(report.satisfied_both <= report.satisfied_latency);
+        // The report serializes to valid JSON.
+        let j = Json::parse(&report.to_json().to_string()).unwrap();
+        assert_eq!(j.get("total_points").unwrap().usize().unwrap(), 8);
+    }
+
+    #[test]
+    fn latency_only_mode_skips_inference() {
+        let mut spec = small_spec();
+        spec.mode = SweepMode::LatencyOnly;
+        spec.seeds_per_point = 2;
+        let report = run_sweep(&spec, 1, &factory).unwrap();
+        for p in &report.points {
+            assert!(p.accuracy.is_none());
+            assert_eq!(p.frames, spec.frames * 2);
+            assert!(p.mean_latency_ns > 0.0);
+        }
+        // No measurable accuracy: the Pareto frontier is empty and the
+        // accuracy constraint cannot be met.
+        assert!(report.pareto.is_empty());
+        assert_eq!(report.satisfied_accuracy, 0);
+    }
+}

@@ -4,7 +4,7 @@
 //! (reproduction of Capogrosso et al., 2023). The library answers the
 //! paper's design question — *where should a DNN be split between an edge
 //! device and a server, and under which transport, to meet the
-//! application's QoS constraints?* — with three cooperating subsystems:
+//! application's QoS constraints?* — with four cooperating subsystems:
 //!
 //! 1. **Saliency-driven split search** ([`coordinator::saliency`]): ingest
 //!    the Grad-CAM *Cumulative Saliency* curve (computed by per-layer
@@ -17,13 +17,24 @@
 //! 3. **QoS suggestion** ([`coordinator::suggest`]): rank configurations by
 //!    accuracy, simulate the shortlist, and report which designs satisfy
 //!    the application's latency/accuracy requirements.
+//! 4. **Design-space sweeps** ([`coordinator::sweep`]): expand a
+//!    declarative [`coordinator::sweep::SweepSpec`] — a cartesian grid over
+//!    network condition, protocol, scenario kind and model scale — into
+//!    jobs, execute them on a deterministic worker pool (byte-identical
+//!    reports at any thread count), and reduce them to an
+//!    accuracy-vs-latency Pareto frontier ([`report::pareto`]) with
+//!    per-constraint satisfaction counts.
 //!
 //! Inference is pluggable ([`runtime::InferenceBackend`]): the default
 //! build runs every entry point hermetically on the pure-Rust analytic
 //! reference backend ([`runtime::analytic`]) — no artifacts, no Python, no
 //! native libraries — while the `xla` cargo feature swaps in the PJRT
-//! engine ([`runtime::engine`]) that executes the real AOT-compiled XLA
-//! artifacts produced by the python build path (`python/compile/`).
+//! engine (`runtime::engine`, compiled only under that feature) that
+//! executes the real AOT-compiled XLA artifacts produced by the python
+//! build path (`python/compile/`).
+//!
+//! A guided tour of the layer structure and the paper-section → module map
+//! lives in `docs/ARCHITECTURE.md` at the repository root.
 
 pub mod coordinator;
 pub mod data;

@@ -5,19 +5,21 @@
 //!   cs-curve   compute the Grad-CAM CS curve in Rust via the backend
 //!   suggest    rank + simulate configurations against QoS requirements
 //!   simulate   run one LC/RC/SC scenario over the simulated channel
+//!   sweep      run a declarative design-space grid on a worker pool
 //!   serve      stream the ICE-Lab workload through a configuration
 //!
 //! Every command works without built artifacts or XLA: the default build
 //! loads the hermetic analytic backend (see `runtime::analytic`), while
 //! the `xla` cargo feature serves the real AOT artifacts when present.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use sei::coordinator::{
     self, ModelScale, QosRequirements, ScenarioConfig, ScenarioKind,
+    SweepSpec,
 };
 use sei::model::{self, DeviceProfile};
 use sei::netsim::transfer::{NetworkConfig, Protocol};
@@ -38,6 +40,7 @@ fn main() -> ExitCode {
         "cs-curve" => cmd_cs_curve(&rest),
         "suggest" => cmd_suggest(&rest),
         "simulate" => cmd_simulate(&rest),
+        "sweep" => cmd_sweep(&rest),
         "serve" => cmd_serve(&rest),
         "hil-worker" => cmd_hil_worker(&rest),
         "hil-serve" => cmd_hil_serve(&rest),
@@ -67,6 +70,7 @@ commands:
   cs-curve   compute the Cumulative Saliency curve via the backend
   suggest    rank candidate configurations and simulate them against QoS
   simulate   run one LC/RC/SC scenario over the simulated channel
+  sweep      run a design-space grid in parallel, with a Pareto report
   serve      stream the ICE-Lab conveyor workload through a configuration
   hil-worker hardware-in-the-loop: serve a tail/full artifact on a socket
   hil-serve  run split serving against a real worker over localhost TCP
@@ -208,18 +212,62 @@ fn cmd_suggest(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn scenario_kind(s: &str) -> Result<ScenarioKind> {
-    match s {
-        "lc" => Ok(ScenarioKind::Lc),
-        "rc" => Ok(ScenarioKind::Rc),
-        other => {
-            if let Some(l) = other.strip_prefix("sc@") {
-                Ok(ScenarioKind::Sc { split: l.parse()? })
-            } else {
-                bail!("scenario must be lc | rc | sc@<layer>")
-            }
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let m = Command::new(
+        "sweep",
+        "parallel design-space sweep with Pareto reporting",
+    )
+    .opt("artifacts", "artifacts", "artifacts directory")
+    .required("spec", "SweepSpec JSON file (schema: README / sweep docs)")
+    .opt("threads", "0", "worker threads (0 = all available cores)")
+    .opt("out", "", "comma-separated report paths (.json and/or .csv)")
+    .parse(args)?;
+    let spec_path = m.str("spec");
+    let text = std::fs::read_to_string(spec_path)
+        .with_context(|| format!("reading sweep spec '{spec_path}'"))?;
+    let spec = SweepSpec::from_json(&text)?;
+    let threads = match m.usize("threads")? {
+        0 => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        n => n,
+    };
+    // Validate every output path up front — a bad suffix must not cost a
+    // full sweep run.
+    let out_paths: Vec<&str> =
+        m.str("out").split(',').filter(|s| !s.is_empty()).collect();
+    for path in &out_paths {
+        if !path.ends_with(".json") && !path.ends_with(".csv") {
+            bail!("--out path '{path}' must end in .json or .csv");
         }
     }
+    let dir = PathBuf::from(m.str("artifacts"));
+    let factory = move || load_backend(&dir);
+    let jobs = spec.expand()?.len();
+    println!(
+        "sweep '{}': {jobs} grid points x {} frames x {} seed(s) on \
+         {threads} thread(s)\n",
+        spec.name, spec.frames, spec.seeds_per_point
+    );
+    let t0 = std::time::Instant::now();
+    let report = coordinator::run_sweep(&spec, threads, &factory)?;
+    print!("{}", report.render());
+    println!("\nswept {jobs} points in {:.2}s", t0.elapsed().as_secs_f64());
+    for path in &out_paths {
+        let p = Path::new(path);
+        if let Some(parent) = p.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        if path.ends_with(".json") {
+            std::fs::write(p, report.to_json().to_string())?;
+        } else {
+            report.to_csv().write(p)?;
+        }
+        println!("wrote {path}");
+    }
+    Ok(())
 }
 
 fn cmd_simulate(args: &[String]) -> Result<()> {
@@ -243,15 +291,11 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     let (edge, server) = devices_from(&m)?;
     let qos = QosRequirements::with_fps(m.f64("fps")?);
     let cfg = ScenarioConfig {
-        kind: scenario_kind(m.str("scenario"))?,
+        kind: ScenarioKind::parse(m.str("scenario"))?,
         net,
         edge,
         server,
-        scale: match m.str("scale") {
-            "slim" => ModelScale::Slim,
-            "vgg16" => ModelScale::Vgg16Full,
-            other => bail!("unknown scale '{other}'"),
-        },
+        scale: ModelScale::parse(m.str("scale"))?,
         frame_period_ns: (1e9 / m.f64("fps")?) as u64,
     };
     let ds = engine.dataset(m.str("dataset"))?;
@@ -280,7 +324,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let (edge, server) = devices_from(&m)?;
     let qos = QosRequirements::with_fps(m.f64("fps")?);
     let cfg = ScenarioConfig {
-        kind: scenario_kind(m.str("scenario"))?,
+        kind: ScenarioKind::parse(m.str("scenario"))?,
         net,
         edge,
         server,

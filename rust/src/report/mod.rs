@@ -1,7 +1,11 @@
 //! Report generators: render the paper's figures/tables as aligned text +
-//! ASCII plots, and emit machine-readable CSV/JSON next to them.
+//! ASCII plots, emit machine-readable CSV/JSON next to them, and reduce
+//! design-space sweeps to their accuracy-vs-latency Pareto frontier
+//! ([`pareto`]).
 
 pub mod csv;
 pub mod figures;
+pub mod pareto;
 
 pub use figures::{fig2_report, fig3_report, fig4_report};
+pub use pareto::pareto_frontier;

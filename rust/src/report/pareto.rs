@@ -1,0 +1,169 @@
+//! Accuracy-vs-latency Pareto frontier extraction for design-space sweeps.
+//!
+//! The sweep engine ([`crate::coordinator::sweep`]) evaluates every point of
+//! a condition × placement grid; this module reduces those points to the set
+//! an engineer actually has to choose from — the configurations for which no
+//! other configuration is at least as accurate *and* at least as fast. The
+//! frontier is returned as indices into the caller's slice so it composes
+//! with any point representation (sweep points, suggestions, raw tuples).
+//!
+//! # Example
+//!
+//! Extract the frontier of three designs — the slow-but-accurate and the
+//! fast-but-weaker design survive, the dominated middle one does not:
+//!
+//! ```
+//! use sei::report::pareto::pareto_frontier;
+//!
+//! // (accuracy, latency): higher accuracy is better, lower latency is better.
+//! let points = [
+//!     (0.90, 10.0), // fast, decent            -> on the frontier
+//!     (0.89, 25.0), // slower AND less accurate -> dominated
+//!     (0.97, 40.0), // slowest but most accurate -> on the frontier
+//! ];
+//! let frontier = pareto_frontier(&points);
+//! assert_eq!(frontier, vec![0, 2]);
+//! ```
+
+/// Indices of the non-dominated points of `points`, where each point is
+/// `(accuracy, latency)` with accuracy maximized and latency minimized.
+///
+/// A point *dominates* another when it is at least as good on both axes and
+/// strictly better on at least one. The result is sorted by latency
+/// ascending (ties broken by index), accuracy is strictly increasing along
+/// it, and exact duplicates keep only the lowest index — so the frontier of
+/// a given point set is unique and deterministic regardless of input order.
+///
+/// Points with a NaN coordinate are never part of the frontier.
+pub fn pareto_frontier(points: &[(f64, f64)]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..points.len())
+        .filter(|&i| !points[i].0.is_nan() && !points[i].1.is_nan())
+        .collect();
+    // Latency ascending; at equal latency highest accuracy first, so the
+    // sweep below keeps exactly one representative per latency value.
+    order.sort_by(|&a, &b| {
+        points[a]
+            .1
+            .partial_cmp(&points[b].1)
+            .unwrap()
+            .then(points[b].0.partial_cmp(&points[a].0).unwrap())
+            .then(a.cmp(&b))
+    });
+    let mut frontier = Vec::new();
+    let mut best_acc = f64::NEG_INFINITY;
+    for &i in &order {
+        if points[i].0 > best_acc {
+            best_acc = points[i].0;
+            frontier.push(i);
+        }
+    }
+    frontier
+}
+
+/// True when `a` dominates `b`: at least as accurate and at least as fast,
+/// strictly better on one axis. Used by the frontier property tests.
+pub fn dominates(a: (f64, f64), b: (f64, f64)) -> bool {
+    a.0 >= b.0 && a.1 <= b.1 && (a.0 > b.0 || a.1 < b.1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Config};
+
+    #[test]
+    fn empty_input_empty_frontier() {
+        assert!(pareto_frontier(&[]).is_empty());
+    }
+
+    #[test]
+    fn single_point_is_frontier() {
+        assert_eq!(pareto_frontier(&[(0.5, 1.0)]), vec![0]);
+    }
+
+    #[test]
+    fn dominated_point_is_dropped() {
+        let pts = [(0.9, 10.0), (0.8, 20.0), (0.95, 30.0)];
+        assert_eq!(pareto_frontier(&pts), vec![0, 2]);
+    }
+
+    #[test]
+    fn equal_latency_keeps_most_accurate() {
+        let pts = [(0.8, 10.0), (0.9, 10.0)];
+        assert_eq!(pareto_frontier(&pts), vec![1]);
+    }
+
+    #[test]
+    fn exact_duplicates_keep_first_index() {
+        let pts = [(0.9, 10.0), (0.9, 10.0)];
+        assert_eq!(pareto_frontier(&pts), vec![0]);
+    }
+
+    #[test]
+    fn nan_points_are_excluded() {
+        let pts = [(f64::NAN, 1.0), (0.9, f64::NAN), (0.5, 2.0)];
+        assert_eq!(pareto_frontier(&pts), vec![2]);
+    }
+
+    #[test]
+    fn order_independence() {
+        let a = [(0.9, 10.0), (0.8, 20.0), (0.95, 30.0), (0.99, 5.0)];
+        let b = [(0.99, 5.0), (0.95, 30.0), (0.8, 20.0), (0.9, 10.0)];
+        let fa: Vec<(f64, f64)> =
+            pareto_frontier(&a).iter().map(|&i| a[i]).collect();
+        let fb: Vec<(f64, f64)> =
+            pareto_frontier(&b).iter().map(|&i| b[i]).collect();
+        assert_eq!(fa, fb);
+    }
+
+    #[test]
+    fn property_frontier_is_nondominated_and_sorted() {
+        check("pareto_frontier", Config::default(), |case| {
+            let n = case.sized_range(1, 40) as usize;
+            let pts: Vec<(f64, f64)> = (0..n)
+                .map(|_| (case.f64(0.0, 1.0), case.f64(0.0, 1e9)))
+                .collect();
+            let frontier = pareto_frontier(&pts);
+            if frontier.is_empty() {
+                return Err("nonempty input must yield a frontier".into());
+            }
+            // Sorted by latency, strictly increasing accuracy.
+            for w in frontier.windows(2) {
+                let (a, b) = (pts[w[0]], pts[w[1]]);
+                if b.1 < a.1 {
+                    return Err(format!("not sorted by latency: {a:?} {b:?}"));
+                }
+                if b.0 <= a.0 {
+                    return Err(format!(
+                        "accuracy not strictly increasing: {a:?} {b:?}"
+                    ));
+                }
+            }
+            // No frontier point dominated by any point.
+            for &f in &frontier {
+                for (j, &p) in pts.iter().enumerate() {
+                    if j != f && dominates(p, pts[f]) {
+                        return Err(format!(
+                            "frontier point {f} {:?} dominated by {j} {p:?}",
+                            pts[f]
+                        ));
+                    }
+                }
+            }
+            // Every dropped point is dominated by (or duplicates) a
+            // frontier point.
+            for (j, &p) in pts.iter().enumerate() {
+                if frontier.contains(&j) {
+                    continue;
+                }
+                let covered = frontier
+                    .iter()
+                    .any(|&f| dominates(pts[f], p) || pts[f] == p);
+                if !covered {
+                    return Err(format!("dropped point {j} {p:?} uncovered"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

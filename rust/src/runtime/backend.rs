@@ -5,9 +5,9 @@
 //! [`Executable`] trait objects, so the same scenario/QoS/serving code runs
 //! against either implementation:
 //!
-//!   * [`crate::runtime::engine::Engine`] (cargo feature `xla`, off by
-//!     default): the real PJRT CPU client executing AOT-compiled HLO
-//!     artifacts built by `python/compile/`;
+//!   * `engine::Engine` (cargo feature `xla`, off by default): the real
+//!     PJRT CPU client executing AOT-compiled HLO artifacts built by
+//!     `python/compile/`;
 //!   * [`crate::runtime::analytic::AnalyticBackend`] (always available):
 //!     a hermetic, pure-Rust reference backend that synthesises its
 //!     manifest, datasets and per-layer costs from `model::stats` +

@@ -313,6 +313,39 @@ impl Manifest {
     pub fn split_eval_for(&self, layer: usize) -> Option<&SplitEvalRow> {
         self.split_eval.iter().find(|r| r.layer == layer)
     }
+
+    /// Bytes of one input frame on the wire for the RC scenario, derived
+    /// from the full-model executable's input tensor description (shape
+    /// beyond the batch dimension × dtype size). Falls back to the dense
+    /// `3 × img² × f32` assumption only when the manifest describes no
+    /// full-model executable.
+    pub fn input_bytes_per_frame(&self) -> u64 {
+        let input = self
+            .executables
+            .values()
+            .filter(|e| e.kind == "full")
+            .min_by_key(|e| e.batch)
+            .and_then(|e| e.inputs.first());
+        match input {
+            Some(a) if a.shape.len() > 1 => {
+                let elems: u64 =
+                    a.shape[1..].iter().map(|d| *d as u64).product();
+                elems * dtype_bytes(&a.dtype)
+            }
+            _ => (3 * self.model.img_size * self.model.img_size * 4) as u64,
+        }
+    }
+}
+
+/// Size in bytes of one element of a manifest dtype (f32 when unknown).
+fn dtype_bytes(dtype: &str) -> u64 {
+    match dtype {
+        "float64" | "int64" | "uint64" => 8,
+        "float32" | "int32" | "uint32" => 4,
+        "float16" | "bfloat16" | "int16" | "uint16" => 2,
+        "int8" | "uint8" | "bool" => 1,
+        _ => 4,
+    }
 }
 
 #[cfg(test)]
@@ -388,5 +421,30 @@ mod tests {
     #[test]
     fn missing_key_is_error() {
         assert!(Manifest::parse(Path::new("/tmp"), "{}").is_err());
+    }
+
+    #[test]
+    fn input_bytes_prefer_full_exec_then_fall_back() {
+        // SAMPLE has no full-model executable: dense f32 fallback.
+        let mut m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.input_bytes_per_frame(), (3 * 32 * 32 * 4) as u64);
+        // With a full executable described, the input tensor wins — here a
+        // uint8-quantized 3x32x32 input (batch dim excluded).
+        let head = m.executable("head_L1_b1").unwrap().clone();
+        let mut full = head.clone();
+        full.name = "full_fwd_b1".to_string();
+        full.kind = "full".to_string();
+        full.inputs[0].shape = vec![1, 3, 32, 32];
+        full.inputs[0].dtype = "uint8".to_string();
+        m.executables.insert(full.name.clone(), full);
+        assert_eq!(m.input_bytes_per_frame(), (3 * 32 * 32) as u64);
+        // The smallest-batch full executable is the reference.
+        let mut full16 = head.clone();
+        full16.name = "full_fwd_b16".to_string();
+        full16.kind = "full".to_string();
+        full16.batch = 16;
+        full16.inputs[0].shape = vec![16, 3, 64, 64];
+        m.executables.insert(full16.name.clone(), full16);
+        assert_eq!(m.input_bytes_per_frame(), (3 * 32 * 32) as u64);
     }
 }

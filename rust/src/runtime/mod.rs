@@ -8,7 +8,7 @@
 //!     synthesises manifest, datasets and deterministic inference from
 //!     `model::stats` + `util::rng`; builds and runs everywhere (CI,
 //!     laptops, embedded targets) with no artifacts or native libraries;
-//!   * [`engine`] (cargo feature `xla`) — the PJRT/XLA AOT bridge from the
+//!   * `engine` (cargo feature `xla`) — the PJRT/XLA AOT bridge from the
 //!     python build path: `HLO text -> HloModuleProto -> XlaComputation ->
 //!     compile -> execute` on the CPU PJRT client (see
 //!     /opt/xla-example/README.md for why text, not serialized protos, is

@@ -73,11 +73,27 @@ impl Json {
     }
 
     pub fn usize(&self) -> Result<usize> {
-        Ok(self.f64()? as usize)
+        Ok(self.u64()? as usize)
     }
 
     pub fn i64(&self) -> Result<i64> {
-        Ok(self.f64()? as i64)
+        let n = self.f64()?;
+        if !n.is_finite() || n.fract() != 0.0 {
+            bail!("expected an integer, got {n}");
+        }
+        Ok(n as i64)
+    }
+
+    /// Non-negative integer accessor. All numbers flow through the `f64`
+    /// representation, so integers above 2^53 lose precision upstream of
+    /// this call; fractional and negative values are rejected rather than
+    /// silently truncated.
+    pub fn u64(&self) -> Result<u64> {
+        let n = self.f64()?;
+        if !n.is_finite() || n < 0.0 || n.fract() != 0.0 {
+            bail!("expected a non-negative integer, got {n}");
+        }
+        Ok(n as u64)
     }
 
     pub fn bool(&self) -> Result<bool> {
@@ -94,6 +110,14 @@ impl Json {
 
     pub fn f64_vec(&self) -> Result<Vec<f64>> {
         self.arr()?.iter().map(|v| v.f64()).collect()
+    }
+
+    /// `["a", "b"]` -> Vec<String> (used by the sweep-spec deserializer).
+    pub fn str_vec(&self) -> Result<Vec<String>> {
+        self.arr()?
+            .iter()
+            .map(|v| Ok(v.str()?.to_string()))
+            .collect()
     }
 
     // -- writer ------------------------------------------------------------
@@ -420,6 +444,21 @@ mod tests {
         assert_eq!(j.get("f").unwrap().f64().unwrap(), 1.5);
         assert!(j.get("missing").is_err());
         assert!(j.opt("missing").is_none());
+    }
+
+    #[test]
+    fn string_and_u64_accessors() {
+        let j = Json::parse(r#"{"s": ["tcp", "udp"], "n": 42}"#).unwrap();
+        assert_eq!(
+            j.get("s").unwrap().str_vec().unwrap(),
+            vec!["tcp".to_string(), "udp".to_string()]
+        );
+        assert_eq!(j.get("n").unwrap().u64().unwrap(), 42);
+        assert!(j.get("n").unwrap().str_vec().is_err());
+        assert!(j.get("s").unwrap().arr().unwrap()[0].u64().is_err());
+        assert!(Json::Num(-1.0).u64().is_err());
+        assert!(Json::Num(1.9).u64().is_err());
+        assert!(Json::Num(f64::NAN).u64().is_err());
     }
 
     #[test]

@@ -1,0 +1,113 @@
+//! The sweep engine's headline guarantee: the same `SweepSpec` produces a
+//! byte-identical `SweepReport` at every worker-thread count, and the
+//! reduced Pareto frontier is well-formed.
+
+use std::path::Path;
+
+use sei::coordinator::{
+    run_sweep, ScenarioKind, SweepMode, SweepSpec,
+};
+use sei::netsim::transfer::Protocol;
+use sei::report::pareto::dominates;
+use sei::runtime::{load_backend, InferenceBackend};
+
+fn factory() -> anyhow::Result<Box<dyn InferenceBackend>> {
+    // No artifacts directory in the test environment: this loads the
+    // hermetic analytic backend, which is bit-reproducible per seed.
+    load_backend(Path::new("artifacts"))
+}
+
+fn grid_spec() -> SweepSpec {
+    let mut spec = SweepSpec::new("determinism");
+    spec.scenarios = vec![
+        ScenarioKind::Lc,
+        ScenarioKind::Rc,
+        ScenarioKind::Sc { split: 11 },
+        ScenarioKind::Sc { split: 15 },
+    ];
+    spec.protocols = vec![Protocol::Tcp, Protocol::Udp];
+    spec.loss_rates = vec![0.0, 0.05];
+    spec.frames = 24;
+    spec.seeds_per_point = 2;
+    spec.frame_period_ns = 50_000_000;
+    spec.max_latency_ms = 50.0;
+    spec.min_accuracy = 0.9;
+    spec
+}
+
+#[test]
+fn report_is_identical_at_one_and_eight_threads() {
+    let spec = grid_spec();
+    let sequential = run_sweep(&spec, 1, &factory).unwrap();
+    let parallel = run_sweep(&spec, 8, &factory).unwrap();
+    assert_eq!(
+        sequential.to_json().to_string(),
+        parallel.to_json().to_string(),
+        "sweep JSON must not depend on the thread count"
+    );
+    assert_eq!(
+        sequential.to_csv().to_string(),
+        parallel.to_csv().to_string(),
+        "sweep CSV must not depend on the thread count"
+    );
+    assert_eq!(sequential.pareto, parallel.pareto);
+}
+
+#[test]
+fn points_come_back_in_expansion_order() {
+    let spec = grid_spec();
+    let jobs = spec.expand().unwrap();
+    let report = run_sweep(&spec, 3, &factory).unwrap();
+    assert_eq!(report.points.len(), jobs.len());
+    for (job, point) in jobs.iter().zip(&report.points) {
+        assert_eq!(job.index, point.index);
+        assert_eq!(job.kind, point.kind);
+        assert_eq!(job.protocol, point.protocol);
+        assert!((job.loss - point.loss).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn frontier_is_nondominated_and_sorted_over_real_points() {
+    let report = run_sweep(&grid_spec(), 4, &factory).unwrap();
+    assert!(!report.pareto.is_empty());
+    let coord = |i: usize| {
+        let p = &report.points[i];
+        (p.accuracy.unwrap(), p.mean_latency_ns)
+    };
+    for w in report.pareto.windows(2) {
+        let (a, b) = (coord(w[0]), coord(w[1]));
+        assert!(b.1 >= a.1, "frontier not sorted by latency: {a:?} {b:?}");
+        assert!(b.0 > a.0, "frontier accuracy not increasing: {a:?} {b:?}");
+    }
+    for &f in &report.pareto {
+        for i in 0..report.points.len() {
+            if i != f {
+                assert!(
+                    !dominates(coord(i), coord(f)),
+                    "frontier point {f} dominated by {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn latency_only_sweep_is_thread_count_invariant_too() {
+    let mut spec = grid_spec();
+    spec.mode = SweepMode::LatencyOnly;
+    spec.min_accuracy = 0.0;
+    let one = run_sweep(&spec, 1, &factory).unwrap();
+    let six = run_sweep(&spec, 6, &factory).unwrap();
+    assert_eq!(one.to_json().to_string(), six.to_json().to_string());
+    assert!(one.points.iter().all(|p| p.accuracy.is_none()));
+}
+
+#[test]
+fn spec_roundtrips_through_json_with_identical_results() {
+    let spec = grid_spec();
+    let reparsed = SweepSpec::from_json(&spec.to_json().to_string()).unwrap();
+    let a = run_sweep(&spec, 2, &factory).unwrap();
+    let b = run_sweep(&reparsed, 2, &factory).unwrap();
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+}
