@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or_else(|| "artifacts".to_string());
     let engine = load_backend(Path::new(&artifacts))?;
     let test = engine.dataset("test")?;
-    let qos = QosRequirements::with_fps(20.0).and_accuracy(0.85);
+    let qos = QosRequirements::with_fps(20.0)?.and_accuracy(0.85);
     println!("=== QoS explorer: {} ===\n", qos.describe());
 
     let channels: [(&str, fn(Protocol, f64, u64) -> NetworkConfig); 3] = [
@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
                 let r = coordinator::run_scenario(&*engine, &cfg, &test,
                                                   64, &qos)?;
                 let ok = qos
-                    .satisfied_by(r.mean_latency_ns as u64, r.accuracy);
+                    .satisfied_by(r.deadline_hit_rate, r.accuracy);
                 println!(
                     "{:<14} {:<5} {:<8} {:>8.1}% {:>9.3} ms {:>8}",
                     cname,

@@ -1,0 +1,103 @@
+//! Streaming load curve: drive the closed-loop serving simulator past its
+//! saturation point and watch queueing appear.
+//!
+//! Sweeps the new `clients` × `offered_fps` axes of the design-space
+//! sweep engine over a paper-scale SC@L11 deployment (VGG16 @ 224×224,
+//! ~803 kB latent per frame, TCP over 1 Gb/s) and prints the classic
+//! load-latency curve: below the bottleneck capacity, latency is flat and
+//! throughput tracks the offered rate; past it, throughput plateaus at
+//! the bottleneck while mean/p99 latency and queue depth take off — the
+//! behaviour the old open-loop engine could not show at all.
+//!
+//!     cargo run --release --example streaming_load [threads]
+
+use std::path::Path;
+
+use sei::coordinator::{
+    run_sweep, ModelScale, ScenarioKind, SweepMode, SweepSpec,
+};
+use sei::netsim::transfer::Protocol;
+use sei::runtime::load_backend;
+
+fn main() -> anyhow::Result<()> {
+    let threads = match std::env::args().nth(1) {
+        Some(t) => t.parse()?,
+        None => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+    };
+
+    let mut spec = SweepSpec::new("streaming_load");
+    spec.mode = SweepMode::LatencyOnly;
+    spec.scenarios = vec![ScenarioKind::Sc { split: 11 }];
+    spec.protocols = vec![Protocol::Tcp];
+    spec.loss_rates = vec![0.0];
+    spec.scales = vec![ModelScale::Vgg16Full];
+    spec.clients = vec![1, 4];
+    spec.offered_fps = vec![10.0, 20.0, 40.0, 80.0, 160.0];
+    spec.frames = 120;
+    spec.max_latency_ms = 50.0; // the ICE-Lab 20 FPS deadline
+    spec.seed = 2024;
+
+    let n_rates = spec.offered_fps.len();
+    println!(
+        "=== streaming load curve: SC@L11, VGG16 volumetrics, TCP 1 Gb/s ===",
+    );
+    println!(
+        "edge head ≈ 11 GMAC (~11 ms/frame/client), L11 latent ≈ 803 kB \
+         (~6.5 ms on the shared uplink)\n{} grid points x {} frames/client \
+         on {threads} thread(s)\n",
+        spec.expand()?.len(),
+        spec.frames
+    );
+
+    let report = run_sweep(&spec, threads, &|| {
+        load_backend(Path::new("artifacts"))
+    })?;
+
+    for (ci, &clients) in spec.clients.iter().enumerate() {
+        println!(
+            "-- {clients} client(s), per-client offered rate sweep --"
+        );
+        println!(
+            "{:>12} {:>12} {:>12} {:>12} {:>12} {:>10} {:>10}",
+            "offered FPS", "achieved", "mean lat", "p99 lat",
+            "queue depth", "hit-rate", "verdict"
+        );
+        for (ri, _) in spec.offered_fps.iter().enumerate() {
+            let p = &report.points[ci * n_rates + ri];
+            println!(
+                "{:>12.0} {:>12.1} {:>9.2} ms {:>9.2} ms {:>12.1} {:>9.1}% \
+                 {:>10}",
+                p.offered_fps.unwrap_or(0.0) * p.clients as f64,
+                p.throughput_fps,
+                p.mean_latency_ns / 1e6,
+                p.p99_latency_ns as f64 / 1e6,
+                p.mean_queue_depth,
+                p.deadline_hit_rate.unwrap_or(0.0) * 100.0,
+                match p.satisfies {
+                    Some(true) => "ok",
+                    Some(false) => "violated",
+                    None => "—",
+                },
+            );
+        }
+        let last = &report.points[ci * n_rates + n_rates - 1];
+        let prev = &report.points[ci * n_rates + n_rates - 2];
+        println!(
+            "   -> saturation: offered {:.0} vs {:.0} FPS both achieve \
+             ~{:.0} FPS (bottleneck), latency x{:.1}\n",
+            prev.offered_fps.unwrap_or(0.0) * prev.clients as f64,
+            last.offered_fps.unwrap_or(0.0) * last.clients as f64,
+            last.throughput_fps,
+            last.mean_latency_ns
+                / report.points[ci * n_rates].mean_latency_ns.max(1.0),
+        );
+    }
+    println!(
+        "note: with 1 client the per-client edge device (~88 FPS) is the \
+         bottleneck; with 4 clients the shared channel saturates first — \
+         exactly the placement trade-off the paper's framework explores."
+    );
+    Ok(())
+}

@@ -1,0 +1,131 @@
+//! Bench: saturation behaviour + engine speed of the closed-loop
+//! streaming simulator.
+//!
+//! Drives a 4-client paper-scale RC deployment through an offered-load
+//! ladder, records the achieved throughput / latency / queue depth at
+//! each point, and checks the closed-loop contract: past the bottleneck
+//! the throughput plateaus while mean and p99 latency grow. Also reports
+//! the simulator's own speed (simulated frames per wall-second).
+//!
+//! Environment knobs (same contract as `netsim_micro`):
+//!   SEI_BENCH_QUICK=1      fewer frames per point
+//!   SEI_BENCH_JSON=<path>  also write the curve as machine-readable JSON
+//!     (CI uploads it as BENCH_streaming.json)
+
+use std::path::Path;
+use std::time::Instant;
+
+use sei::coordinator::batcher::BatchPolicy;
+use sei::coordinator::{
+    run_stream, ModelScale, QosRequirements, ScenarioConfig, ScenarioKind,
+    StreamConfig,
+};
+use sei::model::DeviceProfile;
+use sei::netsim::transfer::{NetworkConfig, Protocol};
+use sei::runtime::load_backend;
+use sei::util::json::{self, Json};
+
+fn main() {
+    let quick = std::env::var("SEI_BENCH_QUICK").is_ok();
+    let frames = if quick { 96 } else { 384 };
+    let clients = 4usize;
+    // Per-client offered rates; aggregate = 4x. The shared 1 Gb/s uplink
+    // carries ~602 kB per RC frame (~4.9 ms), so the bottleneck sits
+    // around 200 aggregate FPS.
+    let ladder: &[f64] = &[10.0, 25.0, 50.0, 100.0, 200.0];
+
+    let engine = load_backend(Path::new("artifacts")).expect("backend");
+    let qos = QosRequirements::ice_lab();
+
+    println!(
+        "=== streaming_saturation: RC @ VGG16 volumetrics, UDP 1 Gb/s, \
+         {clients} clients x {frames} frames{} ===\n",
+        if quick { " (quick)" } else { "" }
+    );
+    println!(
+        "{:>14} {:>12} {:>12} {:>12} {:>12} {:>14}",
+        "offered (agg)", "achieved", "mean lat", "p99 lat", "max depth",
+        "sim frames/s"
+    );
+
+    let mut rows: Vec<(f64, f64, f64, f64, usize, f64)> = Vec::new();
+    for &fps in ladder {
+        let cfg = StreamConfig {
+            scenario: ScenarioConfig {
+                kind: ScenarioKind::Rc,
+                net: NetworkConfig::gigabit(Protocol::Udp, 0.0, 7),
+                edge: DeviceProfile::edge_gpu(),
+                server: DeviceProfile::server_gpu(),
+                scale: ModelScale::Vgg16Full,
+                frame_period_ns: (1e9 / fps) as u64,
+            },
+            clients,
+            frames_per_client: frames,
+            batch: BatchPolicy::immediate(),
+        };
+        let t0 = Instant::now();
+        let r = run_stream(&*engine, &cfg, None, &qos).expect("stream");
+        let wall = t0.elapsed().as_secs_f64();
+        let offered = fps * clients as f64;
+        let sim_rate = r.frames as f64 / wall.max(1e-9);
+        println!(
+            "{:>14.0} {:>12.1} {:>9.2} ms {:>9.2} ms {:>12} {:>14.0}",
+            offered,
+            r.stats.throughput_fps,
+            r.mean_latency_ns / 1e6,
+            r.p99_latency_ns as f64 / 1e6,
+            r.stats.max_queue_depth,
+            sim_rate,
+        );
+        rows.push((
+            offered,
+            r.stats.throughput_fps,
+            r.mean_latency_ns,
+            r.p99_latency_ns as f64,
+            r.stats.max_queue_depth,
+            wall,
+        ));
+    }
+
+    // Closed-loop contract: the last two (overloaded) points achieve the
+    // same bottleneck throughput, and latency keeps growing with offered
+    // load while throughput does not.
+    let n = rows.len();
+    let (thr_prev, thr_last) = (rows[n - 2].1, rows[n - 1].1);
+    let plateau = (thr_last - thr_prev).abs() / thr_prev.max(1e-9) < 0.10;
+    let latency_grows = rows[n - 1].2 > 3.0 * rows[0].2
+        && rows[n - 1].3 > 3.0 * rows[0].3;
+    let thr_capped = thr_last < rows[n - 1].0 * 0.9;
+    println!("\nsaturation checks:");
+    println!("  throughput plateaus past the bottleneck: {plateau}");
+    println!("  mean/p99 latency grow under overload:    {latency_grows}");
+    println!("  achieved stays below offered (overload): {thr_capped}");
+    assert!(plateau, "throughput must plateau: {thr_prev} vs {thr_last}");
+    assert!(latency_grows, "latency must grow under overload");
+    assert!(thr_capped, "overloaded throughput must cap at the bottleneck");
+
+    if let Ok(path) = std::env::var("SEI_BENCH_JSON") {
+        let entries: Vec<Json> = rows
+            .iter()
+            .map(|&(offered, thr, mean, p99, depth, wall)| {
+                json::obj(vec![
+                    ("offered_fps", json::num(offered)),
+                    ("throughput_fps", json::num(thr)),
+                    ("mean_latency_ns", json::num(mean)),
+                    ("p99_latency_ns", json::num(p99)),
+                    ("max_queue_depth", json::num(depth as f64)),
+                    ("wall_s", json::num(wall)),
+                ])
+            })
+            .collect();
+        let doc = json::obj(vec![
+            ("bench", json::s("streaming_saturation")),
+            ("quick", Json::Bool(quick)),
+            ("clients", json::num(clients as f64)),
+            ("frames_per_client", json::num(frames as f64)),
+            ("curve", json::arr(entries)),
+        ]);
+        std::fs::write(&path, doc.to_string()).expect("write bench json");
+        println!("\nwrote {path}");
+    }
+}

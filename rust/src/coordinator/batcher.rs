@@ -11,6 +11,8 @@
 //! both by the discrete-event scenario engine and by the real-socket HIL
 //! worker; `ablation_batching` measures the throughput/latency trade-off.
 
+use anyhow::{bail, Result};
+
 use crate::netsim::event::SimTime;
 
 #[derive(Clone, Copy, Debug)]
@@ -27,6 +29,23 @@ impl BatchPolicy {
     pub fn new(max_batch: usize, max_wait_ns: SimTime) -> Self {
         assert!(max_batch >= 1);
         BatchPolicy { max_batch, max_wait_ns }
+    }
+
+    /// Build a policy from user-facing units (CLI flags, sweep specs): a
+    /// maximum batch size and a partial-batch deadline in microseconds.
+    /// The single validating µs→ns conversion shared by `sei serve` and
+    /// [`crate::coordinator::sweep::SweepSpec`].
+    pub fn from_micros(max_batch: usize, wait_us: f64) -> Result<Self> {
+        if max_batch == 0 {
+            bail!("max batch size must be >= 1");
+        }
+        if !wait_us.is_finite() || wait_us < 0.0 {
+            bail!(
+                "batch wait must be a non-negative number of µs, \
+                 got {wait_us}"
+            );
+        }
+        Ok(BatchPolicy::new(max_batch, (wait_us * 1000.0) as SimTime))
     }
 }
 
@@ -173,6 +192,16 @@ mod tests {
         b.offer(50);
         b.offer(120);
         assert_eq!(b.deadline(), Some(150));
+    }
+
+    #[test]
+    fn from_micros_validates_and_converts() {
+        let p = BatchPolicy::from_micros(8, 500.0).unwrap();
+        assert_eq!(p.max_batch, 8);
+        assert_eq!(p.max_wait_ns, 500_000);
+        assert!(BatchPolicy::from_micros(0, 1.0).is_err());
+        assert!(BatchPolicy::from_micros(1, -1.0).is_err());
+        assert!(BatchPolicy::from_micros(1, f64::NAN).is_err());
     }
 
     #[test]

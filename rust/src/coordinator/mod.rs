@@ -1,5 +1,6 @@
 //! The Split-Et-Impera coordinator (paper Fig. 1): saliency-driven split
-//! search, communication-aware scenario simulation, QoS suggestion, and the
+//! search, communication-aware scenario simulation, QoS suggestion, the
+//! closed-loop multi-client streaming engine ([`streaming`]) and the
 //! serving driver. This is the L3 system contribution; it owns the event
 //! loop and drives the netsim plus whichever [`crate::runtime`] inference
 //! backend is loaded (PJRT artifacts or the hermetic analytic reference).
@@ -11,6 +12,7 @@ pub mod qos;
 pub mod saliency;
 pub mod scenario;
 pub mod serve;
+pub mod streaming;
 pub mod suggest;
 pub mod sweep;
 pub mod workload;
@@ -22,6 +24,9 @@ pub use scenario::{
     ScenarioReport,
 };
 pub use serve::{serve, ServeReport};
+pub use streaming::{
+    pooled_stream, run_stream, StreamConfig, StreamReport,
+};
 pub use suggest::{best, rank_configurations, suggest, Suggestion};
 pub use sweep::{
     pooled_scenario, run_sweep, SweepJob, SweepMode, SweepPoint, SweepReport,

@@ -1,5 +1,14 @@
 //! Application QoS requirements (paper Sec. I/V: e.g. "maximum frame
 //! latency of 0.05 s (20 FPS), given by the velocity of the conveyor belt").
+//!
+//! The paper's latency bound is *per frame*: a conveyor item that misses
+//! its deadline is a miss even if the stream's mean latency looks fine.
+//! The verdict therefore checks the **deadline hit-rate** — the fraction
+//! of frames with latency within `max_latency_ns` — against an explicit
+//! [`QosRequirements::min_hit_rate`] threshold (1.0 by default: every
+//! frame must make it).
+
+use anyhow::{bail, Result};
 
 use crate::netsim::event::{from_secs, SimTime};
 
@@ -9,11 +18,20 @@ pub struct QosRequirements {
     pub max_latency_ns: Option<SimTime>,
     /// Minimum acceptable classification accuracy in [0, 1].
     pub min_accuracy: Option<f64>,
+    /// Minimum fraction of frames that must meet `max_latency_ns`, in
+    /// (0, 1]. Defaults to 1.0 (the paper's hard per-frame deadline);
+    /// loosen via [`QosRequirements::and_hit_rate`] for soft-real-time
+    /// applications that tolerate occasional misses.
+    pub min_hit_rate: f64,
 }
 
 impl QosRequirements {
     pub fn none() -> Self {
-        QosRequirements { max_latency_ns: None, min_accuracy: None }
+        QosRequirements {
+            max_latency_ns: None,
+            min_accuracy: None,
+            min_hit_rate: 1.0,
+        }
     }
 
     /// The ICE-Lab conveyor-belt requirement from the paper: 20 FPS.
@@ -21,14 +39,26 @@ impl QosRequirements {
         QosRequirements {
             max_latency_ns: Some(from_secs(0.05)),
             min_accuracy: None,
+            min_hit_rate: 1.0,
         }
     }
 
-    pub fn with_fps(fps: f64) -> Self {
-        QosRequirements {
+    /// A per-frame latency bound of one frame period at `fps`.
+    /// Rejects non-positive or non-finite rates (a zero or negative FPS
+    /// would silently turn into an infinite/garbage bound) and rates
+    /// beyond 1 GHz (a sub-nanosecond frame period is not representable
+    /// in [`SimTime`] and would silently collapse to 0).
+    pub fn with_fps(fps: f64) -> Result<Self> {
+        if !fps.is_finite() || fps <= 0.0 || fps > 1e9 {
+            bail!(
+                "QoS frame rate must be a positive number <= 1e9, got {fps}"
+            );
+        }
+        Ok(QosRequirements {
             max_latency_ns: Some(from_secs(1.0 / fps)),
             min_accuracy: None,
-        }
+            min_hit_rate: 1.0,
+        })
     }
 
     pub fn and_accuracy(mut self, min: f64) -> Self {
@@ -36,17 +66,53 @@ impl QosRequirements {
         self
     }
 
-    /// Does a measured (latency, accuracy) pair satisfy the requirements?
-    pub fn satisfied_by(&self, latency_ns: SimTime, accuracy: f64) -> bool {
-        self.max_latency_ns.map_or(true, |m| latency_ns <= m)
+    /// Require only `rate` of the frames to meet the latency bound
+    /// (soft-real-time). `rate` must be in (0, 1].
+    pub fn and_hit_rate(mut self, rate: f64) -> Self {
+        assert!(
+            rate > 0.0 && rate <= 1.0,
+            "hit-rate threshold must be in (0, 1], got {rate}"
+        );
+        self.min_hit_rate = rate;
+        self
+    }
+
+    /// Does a measured deadline hit-rate satisfy the latency constraint?
+    /// (`None` = unmeasured, which fails a latency-constrained QoS
+    /// rather than silently passing it.) The single source of truth for
+    /// the per-frame latency verdict — the scenario, streaming and sweep
+    /// reductions all route through here.
+    pub fn latency_ok(&self, deadline_hit_rate: Option<f64>) -> bool {
+        match (self.max_latency_ns, deadline_hit_rate) {
+            (None, _) => true,
+            (Some(_), Some(hit)) => hit >= self.min_hit_rate,
+            (Some(_), None) => false,
+        }
+    }
+
+    /// Does a measured stream satisfy the requirements?
+    ///
+    /// `deadline_hit_rate` is the fraction of frames whose latency was
+    /// within `max_latency_ns` (see [`QosRequirements::latency_ok`]).
+    pub fn satisfied_by(
+        &self,
+        deadline_hit_rate: Option<f64>,
+        accuracy: f64,
+    ) -> bool {
+        self.latency_ok(deadline_hit_rate)
             && self.min_accuracy.map_or(true, |m| accuracy >= m)
     }
 
     pub fn describe(&self) -> String {
         let mut parts = Vec::new();
         if let Some(l) = self.max_latency_ns {
+            let frames = if self.min_hit_rate >= 1.0 {
+                "every frame".to_string()
+            } else {
+                format!(">= {:.1}% of frames", self.min_hit_rate * 100.0)
+            };
             parts.push(format!(
-                "latency <= {:.1} ms ({:.0} FPS)",
+                "latency <= {:.1} ms ({:.0} FPS) for {frames}",
                 l as f64 / 1e6,
                 1e9 / l as f64
             ));
@@ -70,24 +136,66 @@ mod tests {
     fn ice_lab_is_20fps() {
         let q = QosRequirements::ice_lab();
         assert_eq!(q.max_latency_ns, Some(50_000_000));
+        assert_eq!(q.min_hit_rate, 1.0);
+    }
+
+    #[test]
+    fn with_fps_rejects_non_positive() {
+        assert!(QosRequirements::with_fps(0.0).is_err());
+        assert!(QosRequirements::with_fps(-20.0).is_err());
+        assert!(QosRequirements::with_fps(f64::NAN).is_err());
+        assert!(QosRequirements::with_fps(f64::INFINITY).is_err());
+        // Sub-nanosecond frame periods are not representable.
+        assert!(QosRequirements::with_fps(2e9).is_err());
+        let q = QosRequirements::with_fps(20.0).unwrap();
+        assert_eq!(q.max_latency_ns, Some(50_000_000));
+    }
+
+    #[test]
+    fn verdict_is_per_frame_not_mean() {
+        // One 10 ms frame and one 90 ms frame have a 50 ms mean, but only
+        // half the frames hit a 50 ms deadline: the default (strict)
+        // verdict must be "violated".
+        let q = QosRequirements::with_fps(20.0).unwrap();
+        assert!(!q.satisfied_by(Some(0.5), 1.0));
+        assert!(q.satisfied_by(Some(1.0), 1.0));
+        // A soft-real-time application that tolerates 50% misses passes.
+        assert!(q.and_hit_rate(0.5).satisfied_by(Some(0.5), 1.0));
     }
 
     #[test]
     fn satisfaction_logic() {
-        let q = QosRequirements::with_fps(20.0).and_accuracy(0.9);
-        assert!(q.satisfied_by(49_000_000, 0.95));
-        assert!(!q.satisfied_by(51_000_000, 0.95));
-        assert!(!q.satisfied_by(49_000_000, 0.85));
+        let q = QosRequirements::with_fps(20.0).unwrap().and_accuracy(0.9);
+        assert!(q.satisfied_by(Some(1.0), 0.95));
+        assert!(!q.satisfied_by(Some(0.99), 0.95));
+        assert!(!q.satisfied_by(Some(1.0), 0.85));
+        // Unmeasured hit-rate cannot satisfy a latency constraint.
+        assert!(!q.satisfied_by(None, 0.95));
     }
 
     #[test]
     fn no_constraints_always_satisfied() {
-        assert!(QosRequirements::none().satisfied_by(u64::MAX, 0.0));
+        assert!(QosRequirements::none().satisfied_by(None, 0.0));
+        assert!(QosRequirements::none().satisfied_by(Some(0.0), 0.0));
     }
 
     #[test]
     fn describe_mentions_both() {
-        let d = QosRequirements::with_fps(20.0).and_accuracy(0.9).describe();
+        let d = QosRequirements::with_fps(20.0)
+            .unwrap()
+            .and_accuracy(0.9)
+            .describe();
         assert!(d.contains("50.0 ms") && d.contains("90.0%"), "{d}");
+        let soft = QosRequirements::with_fps(20.0)
+            .unwrap()
+            .and_hit_rate(0.95)
+            .describe();
+        assert!(soft.contains("95.0% of frames"), "{soft}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn hit_rate_threshold_validated() {
+        let _ = QosRequirements::ice_lab().and_hit_rate(0.0);
     }
 }

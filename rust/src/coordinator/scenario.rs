@@ -16,6 +16,17 @@
 //! feature, the hermetic analytic reference backend otherwise. Volumetrics
 //! can be taken from the slim trained model or from the paper's full VGG16
 //! @ 224x224 ([`ModelScale`]).
+//!
+//! Since the closed-loop rework, [`run_scenario`] and [`simulate_latency`]
+//! ride the queueing streaming engine ([`super::streaming`]) with a single
+//! client and batch size 1: a frame that arrives while the edge, channel
+//! or server is still busy with its predecessor now *waits*, and that wait
+//! is part of its latency. The old open-loop timing model (frame `i`
+//! unconditionally starts at `i * frame_period_ns`) is retained as
+//! [`run_scenario_open_loop`] / [`simulate_latency_open_loop`] — a
+//! reference implementation used by regression tests to pin the low-load
+//! equivalence of the two engines and to demonstrate their divergence
+//! under overload.
 
 use anyhow::{bail, Result};
 
@@ -106,13 +117,20 @@ pub struct ScenarioConfig {
     pub edge: DeviceProfile,
     pub server: DeviceProfile,
     pub scale: ModelScale,
-    /// Frame inter-arrival time (conveyor speed); 0 = back-to-back.
+    /// Frame inter-arrival time (conveyor speed); 0 = closed-loop
+    /// back-to-back (the source emits the next frame the moment the
+    /// previous one completes).
     pub frame_period_ns: SimTime,
 }
 
 #[derive(Clone, Copy, Debug)]
 pub struct FrameRecord {
+    /// End-to-end latency, including time queued behind earlier frames.
     pub latency_ns: SimTime,
+    /// Absolute simulated time the frame's result was delivered (the
+    /// stream starts at t = 0), so stream duration and throughput derive
+    /// from completions, not from per-frame latencies.
+    pub completed_ns: SimTime,
     pub correct: bool,
     pub wire_bytes: u64,
     pub retransmits: u64,
@@ -128,11 +146,16 @@ pub struct ScenarioReport {
     pub accuracy: f64,
     pub mean_latency_ns: f64,
     pub p95_latency_ns: SimTime,
+    pub p99_latency_ns: SimTime,
     pub max_latency_ns: SimTime,
     pub mean_wire_bytes: f64,
     pub total_retransmits: u64,
     /// Fraction of frames meeting the latency bound (if any).
     pub deadline_hit_rate: Option<f64>,
+    /// Per-frame verdict: the deadline hit-rate must reach
+    /// [`QosRequirements::min_hit_rate`] (not the *mean* latency — a
+    /// stream whose mean fits the budget can still miss it on half its
+    /// frames).
     pub qos_satisfied: Option<bool>,
     pub records: Vec<FrameRecord>,
 }
@@ -151,7 +174,6 @@ impl ScenarioReport {
         let mut lat: Vec<SimTime> =
             records.iter().map(|r| r.latency_ns).collect();
         lat.sort_unstable();
-        let p95 = lat[(lat.len() as f64 * 0.95) as usize % lat.len()];
         let max = *lat.last().unwrap_or(&0);
         let deadline_hit_rate = qos.max_latency_ns.map(|m| {
             records.iter().filter(|r| r.latency_ns <= m).count() as f64
@@ -160,7 +182,7 @@ impl ScenarioReport {
         let qos_satisfied = if qos.max_latency_ns.is_some()
             || qos.min_accuracy.is_some()
         {
-            Some(qos.satisfied_by(mean_latency_ns as SimTime, accuracy))
+            Some(qos.satisfied_by(deadline_hit_rate, accuracy))
         } else {
             None
         };
@@ -171,7 +193,8 @@ impl ScenarioReport {
             frames: records.len(),
             accuracy,
             mean_latency_ns,
-            p95_latency_ns: p95,
+            p95_latency_ns: crate::report::stats::percentile(&lat, 0.95),
+            p99_latency_ns: crate::report::stats::percentile(&lat, 0.99),
             max_latency_ns: max,
             mean_wire_bytes: records.iter().map(|r| r.wire_bytes as f64)
                 .sum::<f64>() / n as f64,
@@ -184,13 +207,13 @@ impl ScenarioReport {
 }
 
 /// Volumetrics + compute costs resolved for a (kind, scale) pair.
-struct Costs {
+pub(crate) struct Costs {
     /// Bytes on the wire for the uplink payload (input or latent).
-    up_bytes: u64,
+    pub(crate) up_bytes: u64,
     /// Result payload (class scores).
-    down_bytes: u64,
-    edge_mult_adds: u64,
-    server_mult_adds: u64,
+    pub(crate) down_bytes: u64,
+    pub(crate) edge_mult_adds: u64,
+    pub(crate) server_mult_adds: u64,
 }
 
 fn slim_network(engine: &dyn InferenceBackend) -> Network {
@@ -198,7 +221,7 @@ fn slim_network(engine: &dyn InferenceBackend) -> Network {
     model::vgg16_slim(m.img_size, m.width_mult, m.hidden, m.num_classes)
 }
 
-fn costs(engine: &dyn InferenceBackend, cfg: &ScenarioConfig)
+pub(crate) fn costs(engine: &dyn InferenceBackend, cfg: &ScenarioConfig)
     -> Result<Costs>
 {
     let m = &engine.manifest().model;
@@ -258,7 +281,58 @@ fn costs(engine: &dyn InferenceBackend, cfg: &ScenarioConfig)
 }
 
 /// Run `n_frames` frames of `dataset` through the configured scenario.
+///
+/// Rides the closed-loop streaming engine ([`super::streaming`]) with a
+/// single client and batch size 1: per-frame latency *includes* the time
+/// spent queued behind earlier frames on the edge device, the channel and
+/// the server. At low load (frame period longer than the pipeline
+/// latency) this reproduces the open-loop reference
+/// ([`run_scenario_open_loop`]) exactly for UDP and lossless TCP — and is
+/// per-frame `>=` it under lossy TCP, where the legacy accounting dropped
+/// the wait for the channel's ACK tail; under overload, latency grows
+/// with queue depth instead of staying silently flat.
 pub fn run_scenario(
+    engine: &dyn InferenceBackend,
+    cfg: &ScenarioConfig,
+    dataset: &Dataset,
+    n_frames: usize,
+    qos: &QosRequirements,
+) -> Result<ScenarioReport> {
+    let stream = super::streaming::run_stream(
+        engine,
+        &super::streaming::StreamConfig::single(cfg, n_frames),
+        Some(dataset),
+        qos,
+    )?;
+    Ok(ScenarioReport::from_records(cfg, stream.to_frame_records(), qos))
+}
+
+/// Latency-only variant: no model execution, pure simulation (used by the
+/// paper-scale Fig. 3 sweeps where accuracy is not measured per point).
+/// Shares the closed-loop event loop with [`run_scenario`], so full-mode
+/// and latency-only timings can no longer drift apart.
+pub fn simulate_latency(
+    engine: &dyn InferenceBackend,
+    cfg: &ScenarioConfig,
+    n_frames: usize,
+) -> Result<Vec<SimTime>> {
+    let stream = super::streaming::run_stream(
+        engine,
+        &super::streaming::StreamConfig::single(cfg, n_frames),
+        None,
+        &QosRequirements::none(),
+    )?;
+    Ok(stream.records.iter().map(|r| r.latency_ns).collect())
+}
+
+/// The **legacy open-loop** scenario runner, retained as a reference: it
+/// starts frame `i` at `i * frame_period_ns` even when the previous frame
+/// is still in flight, so waiting time never shows up in latency — the
+/// timing bug the closed-loop engine fixes. Used only by regression tests
+/// that (a) pin `run_scenario == run_scenario_open_loop` at low load and
+/// (b) demonstrate the divergence under overload. Do not build new
+/// functionality on this path.
+pub fn run_scenario_open_loop(
     engine: &dyn InferenceBackend,
     cfg: &ScenarioConfig,
     dataset: &Dataset,
@@ -382,6 +456,7 @@ pub fn run_scenario(
         let pred = logits.argmax_last()[0];
         records.push(FrameRecord {
             latency_ns: latency,
+            completed_ns: frame_start + latency,
             correct: pred == label,
             wire_bytes: wire,
             retransmits: retx,
@@ -391,9 +466,11 @@ pub fn run_scenario(
     Ok(ScenarioReport::from_records(cfg, records, qos))
 }
 
-/// Latency-only variant: no model execution, pure simulation (used by the
-/// paper-scale Fig. 3 sweeps where accuracy is not measured per point).
-pub fn simulate_latency(
+/// The legacy open-loop latency-only runner (see
+/// [`run_scenario_open_loop`]): pure simulation, frame `i` pinned to
+/// `i * frame_period_ns` regardless of resource state. Reference for
+/// regression tests only.
+pub fn simulate_latency_open_loop(
     engine: &dyn InferenceBackend,
     cfg: &ScenarioConfig,
     n_frames: usize,
@@ -465,18 +542,53 @@ mod tests {
             frame_period_ns: 0,
         };
         let records = vec![
-            FrameRecord { latency_ns: 10, correct: true, wire_bytes: 4,
-                          retransmits: 0, corrupted: false },
-            FrameRecord { latency_ns: 30, correct: false, wire_bytes: 6,
-                          retransmits: 2, corrupted: true },
+            FrameRecord { latency_ns: 10, completed_ns: 10, correct: true,
+                          wire_bytes: 4, retransmits: 0, corrupted: false },
+            FrameRecord { latency_ns: 30, completed_ns: 60, correct: false,
+                          wire_bytes: 6, retransmits: 2, corrupted: true },
         ];
-        let q = QosRequirements::with_fps(1e9 / 20.0);
+        let q = QosRequirements::with_fps(1e9 / 20.0).unwrap();
         let r = ScenarioReport::from_records(&cfg, records, &q);
         assert_eq!(r.frames, 2);
         assert!((r.accuracy - 0.5).abs() < 1e-9);
         assert!((r.mean_latency_ns - 20.0).abs() < 1e-9);
         assert_eq!(r.max_latency_ns, 30);
+        assert_eq!(r.p95_latency_ns, 30);
+        assert_eq!(r.p99_latency_ns, 30);
         assert_eq!(r.total_retransmits, 2);
         assert_eq!(r.deadline_hit_rate, Some(0.5));
+        // Per-frame verdict: half the frames missed the 20 ns deadline,
+        // so the (strict) QoS is violated even though the mean fits.
+        assert_eq!(r.qos_satisfied, Some(false));
+    }
+
+    #[test]
+    fn p95_is_nearest_rank_not_max() {
+        // 20 equal-spaced latencies: p95 must be the 19th value, not the
+        // max — the old `(n * 0.95) as usize % n` indexed the maximum.
+        let cfg = ScenarioConfig {
+            kind: ScenarioKind::Lc,
+            net: NetworkConfig::gigabit(Protocol::Tcp, 0.0, 0),
+            edge: DeviceProfile::edge_gpu(),
+            server: DeviceProfile::server_gpu(),
+            scale: ModelScale::Slim,
+            frame_period_ns: 0,
+        };
+        let records: Vec<FrameRecord> = (1..=20)
+            .map(|i| FrameRecord {
+                latency_ns: i * 100,
+                completed_ns: i * 100,
+                correct: true,
+                wire_bytes: 0,
+                retransmits: 0,
+                corrupted: false,
+            })
+            .collect();
+        let r = ScenarioReport::from_records(
+            &cfg, records, &QosRequirements::none(),
+        );
+        assert_eq!(r.p95_latency_ns, 1900);
+        assert_eq!(r.p99_latency_ns, 2000);
+        assert_eq!(r.max_latency_ns, 2000);
     }
 }

@@ -22,7 +22,10 @@ pub struct ServeReport {
     pub wall_seconds: f64,
     /// Real frames per second achieved by the serving path.
     pub wall_fps: f64,
-    /// Simulated frames per second (1 / mean simulated latency).
+    /// Simulated throughput: frames delivered per simulated second
+    /// (frames / stream completion time, *not* 1 / mean latency — with a
+    /// non-zero frame period the stream lasts much longer than any single
+    /// frame's latency).
     pub sim_fps: f64,
     pub frames: usize,
 }
@@ -90,8 +93,9 @@ pub fn serve(
     let t0 = Instant::now();
     let scenario = run_scenario(engine, cfg, dataset, n_frames, qos)?;
     let wall = t0.elapsed().as_secs_f64();
-    let sim_fps = if scenario.mean_latency_ns > 0.0 {
-        1e9 / scenario.mean_latency_ns
+    let sim_secs = simulated_duration_secs(&scenario);
+    let sim_fps = if sim_secs > 0.0 {
+        scenario.frames as f64 / sim_secs
     } else {
         f64::INFINITY
     };
@@ -104,12 +108,16 @@ pub fn serve(
     })
 }
 
-/// Total simulated duration of a report's frame stream.
+/// Total simulated duration of a report's frame stream: the completion
+/// time of the last frame (streams start at t = 0). The old
+/// implementation returned the maximum per-frame *latency*, which
+/// understates the duration by a factor of ~`frames` whenever
+/// `frame_period_ns > 0`.
 pub fn simulated_duration_secs(report: &ScenarioReport) -> f64 {
     report
         .records
         .iter()
-        .map(|r| r.latency_ns)
+        .map(|r| r.completed_ns)
         .max()
         .map(secs)
         .unwrap_or(0.0)
@@ -132,6 +140,7 @@ mod tests {
                 accuracy: 1.0,
                 mean_latency_ns: 1e6,
                 p95_latency_ns: 1_000_000,
+                p99_latency_ns: 1_000_000,
                 max_latency_ns: 1_000_000,
                 mean_wire_bytes: 0.0,
                 total_retransmits: 0,
@@ -147,5 +156,35 @@ mod tests {
         let txt = report.render(&QosRequirements::ice_lab());
         assert!(txt.contains("SATISFIED"));
         assert!(txt.contains("accuracy"));
+    }
+
+    #[test]
+    fn duration_comes_from_completions_not_latencies() {
+        use crate::coordinator::scenario::FrameRecord;
+        use crate::model::DeviceProfile;
+        use crate::netsim::transfer::NetworkConfig;
+        let cfg = crate::coordinator::scenario::ScenarioConfig {
+            kind: ScenarioKind::Lc,
+            net: NetworkConfig::gigabit(Protocol::Tcp, 0.0, 0),
+            edge: DeviceProfile::edge_gpu(),
+            server: DeviceProfile::server_gpu(),
+            scale: crate::coordinator::scenario::ModelScale::Slim,
+            frame_period_ns: 1_000_000_000,
+        };
+        // Two frames, 1 s apart, 2 ms latency each: the stream lasts
+        // ~1.002 s — the old max-latency implementation would have said
+        // 2 ms.
+        let records = vec![
+            FrameRecord { latency_ns: 2_000_000, completed_ns: 2_000_000,
+                          correct: true, wire_bytes: 0, retransmits: 0,
+                          corrupted: false },
+            FrameRecord { latency_ns: 2_000_000,
+                          completed_ns: 1_002_000_000, correct: true,
+                          wire_bytes: 0, retransmits: 0, corrupted: false },
+        ];
+        let report = crate::coordinator::scenario::ScenarioReport::
+            from_records(&cfg, records, &QosRequirements::none());
+        let d = simulated_duration_secs(&report);
+        assert!((d - 1.002).abs() < 1e-9, "{d}");
     }
 }

@@ -1,0 +1,1153 @@
+//! Closed-loop, queueing, multi-client streaming simulator — the serving
+//! path of the framework (paper Sec. IV-V, scaled to many sensing devices).
+//!
+//! The original scenario engine was *open-loop*: frame `i` started at
+//! `i * frame_period_ns` even when the edge device, the channel or the
+//! server was still busy with frame `i-1`, so overload never showed up as
+//! queueing delay and the latency judged against the QoS bound was wrong
+//! exactly in the regime the framework exists to detect. This module is
+//! the fix: a discrete-event, closed-loop simulator in which `N` client
+//! streams emit frames into per-resource FIFO queues —
+//!
+//! ```text
+//!   client c ──► [edge compute c] ──► [shared uplink] ──► [batcher]
+//!                                                            │
+//!   client c ◄── [shared downlink] ◄── [server compute] ◄────┘
+//! ```
+//!
+//! — so a frame's latency includes the time spent waiting behind earlier
+//! frames and behind *other clients* on the shared resources, and
+//! throughput saturates at the bottleneck resource instead of latency
+//! staying flat under overload.
+//!
+//! Semantics:
+//!
+//! * **Sources.** Each client emits `frames_per_client` frames at a fixed
+//!   period (`ScenarioConfig::frame_period_ns`). A period of 0 selects a
+//!   *closed-loop source*: the next frame is emitted the instant the
+//!   previous one completes (the "back-to-back" mode of the old engine,
+//!   now with well-defined queueing semantics).
+//! * **Edge.** Each client owns its edge device; LC and SC frames pay the
+//!   edge compute there (FIFO per client). RC frames skip the stage, as in
+//!   the per-frame pipeline.
+//! * **Uplink / downlink.** All clients share one channel. Messages queue
+//!   at message level ([`Channel::send_no_earlier`]): under UDP the two
+//!   directions are independent FIFO resources (true full duplex, no
+//!   reverse traffic); under TCP every message's ACK stream rides the
+//!   opposite link, so TCP messages serialize across the whole channel —
+//!   the same coupling the legacy engine expressed through its single
+//!   clock.
+//! * **Server.** Requests arriving off the uplink are fronted by the
+//!   size-or-deadline [`Batcher`]; a released batch of `n` requests costs
+//!   `server.compute_ns(n × server_mult_adds)`, amortizing the per-call
+//!   overhead — with [`BatchPolicy::immediate`] this degenerates to the
+//!   old per-frame cost exactly.
+//! * **Inference.** In full mode the per-frame tensors flow through the
+//!   same executables and UDP corruption path as `run_scenario` always
+//!   used (batching affects *timing* only; accuracy is measured with the
+//!   per-frame `b1` executables).
+//!
+//! With one client, batch size 1 and a period longer than the pipeline
+//! latency, the closed-loop engine reproduces the open-loop per-frame
+//! latencies *exactly* for UDP (any loss rate) and lossless TCP, and
+//! drives byte-identical transfers in every case (asserted by
+//! `rust/tests/streaming_properties.rs` against the retained
+//! [`super::scenario::run_scenario_open_loop`] reference). Under lossy
+//! TCP the closed loop additionally counts the time a result waits for
+//! the channel to drain the upstream ACK tail — time the open-loop
+//! accounting silently dropped — so those latencies are `>=` the legacy
+//! ones frame-by-frame. Under overload the two engines deliberately
+//! diverge; that divergence is the bug this engine fixes.
+
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::batcher::{Batch, BatchPolicy, Batcher};
+use super::corruption;
+use super::qos::QosRequirements;
+use super::scenario::{costs, Costs, FrameRecord, ScenarioConfig, ScenarioKind};
+use crate::data::Dataset;
+use crate::netsim::event::{secs, EventQueue, SimTime};
+use crate::netsim::transfer::{Channel, Protocol};
+use crate::netsim::Dir;
+use crate::report::stats::percentile;
+use crate::runtime::{Executable, InferenceBackend, RtInput};
+use crate::tensor::Tensor;
+
+/// Configuration of one streaming run.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// Scenario under test. `scenario.frame_period_ns` is the per-client
+    /// source period (0 = closed-loop back-to-back).
+    pub scenario: ScenarioConfig,
+    /// Number of concurrent client streams sharing the channel + server.
+    pub clients: usize,
+    /// Frames each client emits.
+    pub frames_per_client: usize,
+    /// Server-side dynamic batching policy ([`BatchPolicy::immediate`]
+    /// reproduces unbatched per-frame serving).
+    pub batch: BatchPolicy,
+}
+
+impl StreamConfig {
+    /// The single-client, unbatched configuration `run_scenario` rides.
+    pub fn single(scenario: &ScenarioConfig, n_frames: usize) -> StreamConfig {
+        StreamConfig {
+            scenario: scenario.clone(),
+            clients: 1,
+            frames_per_client: n_frames,
+            batch: BatchPolicy::immediate(),
+        }
+    }
+
+    /// Aggregate offered load over all clients, frames/s (0 when the
+    /// sources are closed-loop).
+    pub fn offered_fps(&self) -> f64 {
+        if self.scenario.frame_period_ns == 0 {
+            0.0
+        } else {
+            self.clients as f64 * 1e9 / self.scenario.frame_period_ns as f64
+        }
+    }
+}
+
+/// One served frame.
+#[derive(Clone, Debug)]
+pub struct StreamFrameRecord {
+    pub client: usize,
+    /// Per-client frame number.
+    pub frame: usize,
+    pub emitted_ns: SimTime,
+    pub completed_ns: SimTime,
+    /// End-to-end latency including all queue waits.
+    pub latency_ns: SimTime,
+    /// Time spent waiting in queues (edge, uplink, batcher+server,
+    /// downlink), i.e. the part of `latency_ns` the open-loop model lost.
+    pub queue_wait_ns: SimTime,
+    /// `None` in latency-only runs.
+    pub correct: Option<bool>,
+    pub wire_bytes: u64,
+    pub retransmits: u64,
+    pub corrupted: bool,
+}
+
+/// Resource-level aggregates of one run (or the merge of several seeds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResourceStats {
+    /// Simulated time from the first emission (t = 0) to the last
+    /// completion.
+    pub duration_ns: SimTime,
+    /// Achieved throughput: completed frames / duration.
+    pub throughput_fps: f64,
+    /// Time-averaged number of frames waiting in queues.
+    pub mean_queue_depth: f64,
+    /// Peak number of frames waiting in queues.
+    pub max_queue_depth: usize,
+    pub batches_released: u64,
+    /// Requests that went through the batcher (frames with an uplink leg).
+    pub batched_requests: u64,
+}
+
+impl ResourceStats {
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches_released == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches_released as f64
+        }
+    }
+}
+
+/// The reduced result of a streaming run.
+#[derive(Clone, Debug)]
+pub struct StreamReport {
+    pub clients: usize,
+    /// Aggregate offered load, frames/s (0 = closed-loop sources).
+    pub offered_fps: f64,
+    pub frames: usize,
+    /// `None` in latency-only runs.
+    pub accuracy: Option<f64>,
+    pub mean_latency_ns: f64,
+    pub p50_latency_ns: SimTime,
+    pub p95_latency_ns: SimTime,
+    pub p99_latency_ns: SimTime,
+    pub max_latency_ns: SimTime,
+    pub mean_queue_wait_ns: f64,
+    pub mean_wire_bytes: f64,
+    pub total_retransmits: u64,
+    /// Fraction of frames meeting the latency bound (if one is set).
+    pub deadline_hit_rate: Option<f64>,
+    /// Hit-rate-based QoS verdict; `None` without checkable constraints.
+    pub qos_satisfied: Option<bool>,
+    pub stats: ResourceStats,
+    pub records: Vec<StreamFrameRecord>,
+}
+
+impl StreamReport {
+    fn from_parts(
+        clients: usize,
+        offered_fps: f64,
+        records: Vec<StreamFrameRecord>,
+        stats: ResourceStats,
+        qos: &QosRequirements,
+    ) -> StreamReport {
+        let n = records.len().max(1);
+        let mut lat: Vec<SimTime> =
+            records.iter().map(|r| r.latency_ns).collect();
+        lat.sort_unstable();
+        let mean_latency_ns =
+            lat.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+        let measured = records.iter().all(|r| r.correct.is_some())
+            && !records.is_empty();
+        let accuracy = if measured {
+            Some(
+                records.iter().filter(|r| r.correct == Some(true)).count()
+                    as f64
+                    / n as f64,
+            )
+        } else {
+            None
+        };
+        let deadline_hit_rate = qos.max_latency_ns.map(|m| {
+            records.iter().filter(|r| r.latency_ns <= m).count() as f64
+                / n as f64
+        });
+        // A measured latency violation is a definite verdict even when an
+        // accuracy bound exists but accuracy was not measured; only a
+        // *passing* latency check with an uncheckable accuracy bound
+        // leaves the verdict open.
+        let latency_ok = qos.latency_ok(deadline_hit_rate);
+        let qos_satisfied =
+            match (qos.max_latency_ns, qos.min_accuracy, accuracy) {
+                (None, None, _) => None,
+                _ if !latency_ok => Some(false),
+                // Latency passes; an accuracy bound is uncheckable
+                // without inference, so leave the verdict open rather
+                // than claiming "ok".
+                (_, Some(_), None) => None,
+                (_, _, acc) => Some(
+                    qos.satisfied_by(deadline_hit_rate, acc.unwrap_or(1.0)),
+                ),
+            };
+        StreamReport {
+            clients,
+            offered_fps,
+            frames: records.len(),
+            accuracy,
+            mean_latency_ns,
+            p50_latency_ns: percentile(&lat, 0.50),
+            p95_latency_ns: percentile(&lat, 0.95),
+            p99_latency_ns: percentile(&lat, 0.99),
+            max_latency_ns: lat.last().copied().unwrap_or(0),
+            mean_queue_wait_ns: records
+                .iter()
+                .map(|r| r.queue_wait_ns as f64)
+                .sum::<f64>()
+                / n as f64,
+            mean_wire_bytes: records
+                .iter()
+                .map(|r| r.wire_bytes as f64)
+                .sum::<f64>()
+                / n as f64,
+            total_retransmits: records.iter().map(|r| r.retransmits).sum(),
+            deadline_hit_rate,
+            qos_satisfied,
+            stats,
+            records,
+        }
+    }
+
+    /// View the per-frame records as scenario-engine [`FrameRecord`]s (in
+    /// deterministic (client, frame) order).
+    pub fn to_frame_records(&self) -> Vec<FrameRecord> {
+        self.records
+            .iter()
+            .map(|r| FrameRecord {
+                latency_ns: r.latency_ns,
+                completed_ns: r.completed_ns,
+                correct: r.correct.unwrap_or(false),
+                wire_bytes: r.wire_bytes,
+                retransmits: r.retransmits,
+                corrupted: r.corrupted,
+            })
+            .collect()
+    }
+
+    /// Human-readable serving summary.
+    pub fn render(&self, qos: &QosRequirements) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "clients            {} ({} frames total)",
+            self.clients, self.frames
+        ));
+        if self.offered_fps > 0.0 {
+            out.push_str(&format!(
+                " @ {:.1} FPS offered (aggregate)",
+                self.offered_fps
+            ));
+        } else {
+            out.push_str(" (closed-loop sources)");
+        }
+        out.push('\n');
+        out.push_str(&format!(
+            "throughput         {:.1} FPS over {:.2} s simulated\n",
+            self.stats.throughput_fps,
+            secs(self.stats.duration_ns)
+        ));
+        if let Some(acc) = self.accuracy {
+            out.push_str(&format!(
+                "accuracy           {:.2}%\n",
+                acc * 100.0
+            ));
+        }
+        out.push_str(&format!(
+            "latency            mean {:.2} ms | p50 {:.2} ms | p95 {:.2} ms \
+             | p99 {:.2} ms | max {:.2} ms\n",
+            self.mean_latency_ns / 1e6,
+            self.p50_latency_ns as f64 / 1e6,
+            self.p95_latency_ns as f64 / 1e6,
+            self.p99_latency_ns as f64 / 1e6,
+            self.max_latency_ns as f64 / 1e6,
+        ));
+        out.push_str(&format!(
+            "queueing           mean wait {:.2} ms/frame | depth mean \
+             {:.1} / max {}\n",
+            self.mean_queue_wait_ns / 1e6,
+            self.stats.mean_queue_depth,
+            self.stats.max_queue_depth,
+        ));
+        if self.stats.batches_released > 0 {
+            out.push_str(&format!(
+                "batching           {} batches, mean size {:.2}\n",
+                self.stats.batches_released,
+                self.stats.mean_batch_size(),
+            ));
+        }
+        out.push_str(&format!(
+            "wire traffic       {:.0} B/frame, {} retransmits total\n",
+            self.mean_wire_bytes, self.total_retransmits
+        ));
+        if let Some(hit) = self.deadline_hit_rate {
+            out.push_str(&format!(
+                "deadline hit-rate  {:.1}% of frames\n",
+                hit * 100.0
+            ));
+        }
+        out.push_str(&format!("QoS ({})\n", qos.describe()));
+        let has_constraints =
+            qos.max_latency_ns.is_some() || qos.min_accuracy.is_some();
+        out.push_str(&format!(
+            "VERDICT            {}\n",
+            match self.qos_satisfied {
+                Some(true) => "SATISFIED",
+                Some(false) => "VIOLATED",
+                // Constraints exist but the accuracy bound was not
+                // measurable in this run (latency-only): the verdict is
+                // deliberately open, not absent.
+                None if has_constraints => "OPEN (accuracy not measured)",
+                None => "no constraints",
+            }
+        ));
+        out
+    }
+}
+
+/// Run `cfg` once per seed (`cfg.scenario.net.seed = seed`) and merge the
+/// results into one pooled report — the streaming analogue of
+/// [`super::sweep::pooled_scenario`].
+pub fn pooled_stream(
+    engine: &dyn InferenceBackend,
+    cfg: &StreamConfig,
+    dataset: Option<&Dataset>,
+    seeds: &[u64],
+    qos: &QosRequirements,
+) -> Result<StreamReport> {
+    if seeds.is_empty() {
+        bail!("pooled_stream needs at least one seed");
+    }
+    let mut reports = Vec::with_capacity(seeds.len());
+    for &seed in seeds {
+        let mut c = cfg.clone();
+        c.scenario.net.seed = seed;
+        reports.push(run_stream(engine, &c, dataset, qos)?);
+    }
+    let k = reports.len();
+    let stats = ResourceStats {
+        duration_ns: reports
+            .iter()
+            .map(|r| r.stats.duration_ns)
+            .max()
+            .unwrap_or(0),
+        throughput_fps: reports
+            .iter()
+            .map(|r| r.stats.throughput_fps)
+            .sum::<f64>()
+            / k as f64,
+        mean_queue_depth: reports
+            .iter()
+            .map(|r| r.stats.mean_queue_depth)
+            .sum::<f64>()
+            / k as f64,
+        max_queue_depth: reports
+            .iter()
+            .map(|r| r.stats.max_queue_depth)
+            .max()
+            .unwrap_or(0),
+        batches_released: reports
+            .iter()
+            .map(|r| r.stats.batches_released)
+            .sum(),
+        batched_requests: reports
+            .iter()
+            .map(|r| r.stats.batched_requests)
+            .sum(),
+    };
+    let clients = cfg.clients;
+    let offered = cfg.offered_fps();
+    let records: Vec<StreamFrameRecord> =
+        reports.into_iter().flat_map(|r| r.records).collect();
+    Ok(StreamReport::from_parts(clients, offered, records, stats, qos))
+}
+
+// ---------------------------------------------------------------------------
+// The discrete-event simulator.
+// ---------------------------------------------------------------------------
+
+enum Ev {
+    /// Client `c` emits its next frame.
+    Emit { c: usize },
+    /// Client `c`'s edge device finished its current frame.
+    EdgeDone { c: usize },
+    /// Channel lane `lane` is free for the next message.
+    NetFree { lane: usize },
+    /// Frame `g`'s uplink payload fully arrived at the server.
+    UpDelivered { g: usize },
+    /// Size-or-deadline batcher poll point.
+    BatchTimer,
+    /// The server finished computing `batch`.
+    ServerDone { batch: Batch },
+    /// Frame `g`'s result arrived back at its client.
+    DownDelivered { g: usize },
+}
+
+#[derive(Clone, Debug, Default)]
+struct Frame {
+    emitted_ns: SimTime,
+    completed_ns: SimTime,
+    queue_wait_ns: SimTime,
+    /// When the frame entered its current queue (reused per stage).
+    ready_at: SimTime,
+    wire_bytes: u64,
+    retransmits: u64,
+    corrupted: bool,
+    /// In-flight tensor (input for RC, latent for SC) in full mode.
+    payload: Option<Tensor>,
+    pred: Option<usize>,
+    label: usize,
+}
+
+struct Sim<'a> {
+    cfg: &'a StreamConfig,
+    costs: Costs,
+    dataset: Option<&'a Dataset>,
+    full_exec: Option<Rc<dyn Executable>>,
+    head_exec: Option<Rc<dyn Executable>>,
+    tail_exec: Option<Rc<dyn Executable>>,
+    /// `argmax` of an all-zero logits tensor — the prediction a frame is
+    /// left with when its UDP result datagram is fully lost.
+    zero_pred: usize,
+    channel: Channel,
+    q: EventQueue<Ev>,
+    frames: Vec<Frame>,
+    /// Per-client next frame index to emit.
+    next_frame: Vec<usize>,
+    edge_q: Vec<VecDeque<usize>>,
+    edge_busy: Vec<bool>,
+    edge_cur: Vec<usize>,
+    /// Channel transfer lanes: one shared lane for TCP (the ACK stream
+    /// couples the directions), one per direction for UDP (full duplex).
+    lane_q: [VecDeque<(Dir, usize)>; 2],
+    lane_busy: [bool; 2],
+    batcher: Batcher,
+    /// Batcher request id -> global frame index (ids are sequential).
+    offered: Vec<usize>,
+    srv_q: VecDeque<Batch>,
+    srv_busy: bool,
+    // Queue-depth accounting (time-weighted over the event timeline).
+    queued: usize,
+    max_queued: usize,
+    depth_area: f64,
+    last_t: SimTime,
+    completed: usize,
+}
+
+impl<'a> Sim<'a> {
+    fn full_mode(&self) -> bool {
+        self.dataset.is_some()
+    }
+
+    fn period(&self) -> SimTime {
+        self.cfg.scenario.frame_period_ns
+    }
+
+    fn fpc(&self) -> usize {
+        self.cfg.frames_per_client
+    }
+
+    fn client_of(&self, g: usize) -> usize {
+        g / self.fpc()
+    }
+
+    fn input(&self, g: usize) -> Result<Tensor> {
+        let ds = self.dataset.ok_or_else(|| anyhow!("no dataset"))?;
+        let f = g % self.fpc();
+        ds.batch(f % ds.len(), 1)
+    }
+
+    // -- queue-depth bookkeeping -------------------------------------------
+
+    fn inc_queued(&mut self, by: usize) {
+        self.queued += by;
+        self.max_queued = self.max_queued.max(self.queued);
+    }
+
+    fn dec_queued(&mut self, by: usize) {
+        debug_assert!(self.queued >= by);
+        self.queued -= by;
+    }
+
+    // -- sources -----------------------------------------------------------
+
+    fn emit(&mut self, c: usize, t: SimTime) -> Result<()> {
+        let f = self.next_frame[c];
+        debug_assert!(f < self.fpc());
+        self.next_frame[c] = f + 1;
+        let g = c * self.fpc() + f;
+        self.frames[g].emitted_ns = t;
+        let period = self.period();
+        if period > 0 && f + 1 < self.fpc() {
+            self.q.schedule(t + period, Ev::Emit { c });
+        }
+        if self.full_mode() {
+            let ds = self.dataset.unwrap();
+            self.frames[g].label = ds.labels[f % ds.len()] as usize;
+            if self.cfg.scenario.kind == ScenarioKind::Rc {
+                // The RC uplink payload is the raw input frame.
+                let x = self.input(g)?;
+                self.frames[g].payload = Some(x);
+            }
+        }
+        match self.cfg.scenario.kind {
+            ScenarioKind::Rc => self.enqueue_xfer(Dir::Up, g, t),
+            ScenarioKind::Lc | ScenarioKind::Sc { .. } => {
+                self.enqueue_edge(c, g, t)
+            }
+        }
+    }
+
+    // -- edge compute (one device per client) ------------------------------
+
+    fn enqueue_edge(&mut self, c: usize, g: usize, t: SimTime) -> Result<()> {
+        self.frames[g].ready_at = t;
+        if self.edge_busy[c] {
+            self.edge_q[c].push_back(g);
+            self.inc_queued(1);
+            Ok(())
+        } else {
+            self.start_edge(c, g, t)
+        }
+    }
+
+    fn start_edge(&mut self, c: usize, g: usize, t: SimTime) -> Result<()> {
+        self.edge_busy[c] = true;
+        self.edge_cur[c] = g;
+        let wait = t - self.frames[g].ready_at;
+        self.frames[g].queue_wait_ns += wait;
+        let dur =
+            self.cfg.scenario.edge.compute_ns(self.costs.edge_mult_adds);
+        self.q.schedule(t + dur, Ev::EdgeDone { c });
+        Ok(())
+    }
+
+    fn edge_done(&mut self, c: usize, t: SimTime) -> Result<()> {
+        let g = self.edge_cur[c];
+        self.edge_busy[c] = false;
+        if self.full_mode() {
+            match self.cfg.scenario.kind {
+                ScenarioKind::Lc => {
+                    let x = self.input(g)?;
+                    let logits = self
+                        .full_exec
+                        .as_ref()
+                        .unwrap()
+                        .run(&[RtInput::F32(&x)])?;
+                    self.frames[g].pred = Some(logits.argmax_last()[0]);
+                }
+                ScenarioKind::Sc { .. } => {
+                    let x = self.input(g)?;
+                    let latent = self
+                        .head_exec
+                        .as_ref()
+                        .unwrap()
+                        .run(&[RtInput::F32(&x)])?;
+                    self.frames[g].payload = Some(latent);
+                }
+                ScenarioKind::Rc => unreachable!("RC has no edge stage"),
+            }
+        }
+        if self.costs.up_bytes == 0 {
+            self.complete(g, t); // LC: done at the edge
+        } else {
+            self.enqueue_xfer(Dir::Up, g, t)?;
+        }
+        if let Some(g2) = self.edge_q[c].pop_front() {
+            self.dec_queued(1);
+            self.start_edge(c, g2, t)?;
+        }
+        Ok(())
+    }
+
+    // -- shared channel lanes ----------------------------------------------
+
+    /// Which transfer lane a direction uses: TCP shares lane 0 (ACK
+    /// entanglement serializes the channel), UDP gets one lane per
+    /// direction (full duplex).
+    fn lane_of(&self, dir: Dir) -> usize {
+        match (self.cfg.scenario.net.protocol, dir) {
+            (Protocol::Tcp, _) => 0,
+            (Protocol::Udp, Dir::Up) => 0,
+            (Protocol::Udp, Dir::Down) => 1,
+        }
+    }
+
+    fn enqueue_xfer(&mut self, dir: Dir, g: usize, t: SimTime) -> Result<()> {
+        self.frames[g].ready_at = t;
+        let lane = self.lane_of(dir);
+        if self.lane_busy[lane] {
+            self.lane_q[lane].push_back((dir, g));
+            self.inc_queued(1);
+            Ok(())
+        } else {
+            self.start_xfer(lane, dir, g, t)
+        }
+    }
+
+    fn start_xfer(
+        &mut self,
+        lane: usize,
+        dir: Dir,
+        g: usize,
+        t: SimTime,
+    ) -> Result<()> {
+        self.lane_busy[lane] = true;
+        let wait = t - self.frames[g].ready_at;
+        self.frames[g].queue_wait_ns += wait;
+        let bytes = match dir {
+            Dir::Up => self.costs.up_bytes,
+            Dir::Down => self.costs.down_bytes,
+        };
+        let (start, res) = self.channel.send_no_earlier(dir, bytes, t)?;
+        debug_assert_eq!(start, t, "channel lane discipline violated");
+        self.frames[g].wire_bytes += res.wire_bytes();
+        self.frames[g].retransmits += res.retransmits();
+        match dir {
+            Dir::Up => {
+                if self.cfg.scenario.net.protocol == Protocol::Udp
+                    && !res.lost_ranges().is_empty()
+                {
+                    self.frames[g].corrupted = true;
+                    if let Some(p) = self.frames[g].payload.as_mut() {
+                        corruption::corrupt_scaled(
+                            p,
+                            res.lost_ranges(),
+                            self.costs.up_bytes,
+                        );
+                    }
+                }
+                self.q
+                    .schedule(start + res.latency_ns(), Ev::UpDelivered { g });
+            }
+            Dir::Down => {
+                let lost: u64 =
+                    res.lost_ranges().iter().map(|(_, l)| *l as u64).sum();
+                if lost >= self.costs.down_bytes {
+                    // A fully lost UDP result datagram voids the frame.
+                    self.frames[g].corrupted = true;
+                    if self.full_mode() {
+                        self.frames[g].pred = Some(self.zero_pred);
+                    }
+                }
+                self.q.schedule(
+                    start + res.latency_ns(),
+                    Ev::DownDelivered { g },
+                );
+            }
+        }
+        self.q.schedule(start + res.sender_busy_ns(), Ev::NetFree { lane });
+        Ok(())
+    }
+
+    fn net_free(&mut self, lane: usize, t: SimTime) -> Result<()> {
+        self.lane_busy[lane] = false;
+        if let Some((dir, g)) = self.lane_q[lane].pop_front() {
+            self.dec_queued(1);
+            self.start_xfer(lane, dir, g, t)?;
+        }
+        Ok(())
+    }
+
+    // -- server (batcher + compute) ----------------------------------------
+
+    fn up_delivered(&mut self, g: usize, t: SimTime) -> Result<()> {
+        self.frames[g].ready_at = t;
+        self.offered.push(g);
+        if let Some(batch) = self.batcher.offer(t) {
+            // The size trigger fired: the batch holds batch.len()-1
+            // previously queued requests plus this one, which was served
+            // immediately and never counted as waiting.
+            self.dec_queued(batch.len() - 1);
+            self.enqueue_srv(batch, t)?;
+        } else {
+            self.inc_queued(1);
+            if self.batcher.pending() == 1 {
+                // The deadline is set by the oldest pending request; only
+                // the request that *opens* a batch needs to arm the timer.
+                if let Some(d) = self.batcher.deadline() {
+                    self.q.schedule(d, Ev::BatchTimer);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn batch_timer(&mut self, t: SimTime) -> Result<()> {
+        if let Some(batch) = self.batcher.poll(t) {
+            self.dec_queued(batch.len());
+            self.enqueue_srv(batch, t)?;
+        }
+        Ok(())
+    }
+
+    fn enqueue_srv(&mut self, batch: Batch, t: SimTime) -> Result<()> {
+        if self.srv_busy {
+            self.inc_queued(batch.len());
+            self.srv_q.push_back(batch);
+            Ok(())
+        } else {
+            self.start_srv(batch, t)
+        }
+    }
+
+    fn start_srv(&mut self, batch: Batch, t: SimTime) -> Result<()> {
+        self.srv_busy = true;
+        for req in &batch.requests {
+            let g = self.offered[req.id as usize];
+            let wait = t - self.frames[g].ready_at;
+            self.frames[g].queue_wait_ns += wait;
+        }
+        let dur = self.cfg.scenario.server.compute_ns(
+            batch.len() as u64 * self.costs.server_mult_adds,
+        );
+        self.q.schedule(t + dur, Ev::ServerDone { batch });
+        Ok(())
+    }
+
+    fn server_done(&mut self, batch: Batch, t: SimTime) -> Result<()> {
+        self.srv_busy = false;
+        for req in &batch.requests {
+            let g = self.offered[req.id as usize];
+            if self.full_mode() {
+                let payload = self.frames[g]
+                    .payload
+                    .take()
+                    .ok_or_else(|| anyhow!("frame {g} lost its payload"))?;
+                let exec = match self.cfg.scenario.kind {
+                    ScenarioKind::Rc => self.full_exec.as_ref().unwrap(),
+                    ScenarioKind::Sc { .. } => {
+                        self.tail_exec.as_ref().unwrap()
+                    }
+                    ScenarioKind::Lc => {
+                        unreachable!("LC never reaches the server")
+                    }
+                };
+                let logits = exec.run(&[RtInput::F32(&payload)])?;
+                self.frames[g].pred = Some(logits.argmax_last()[0]);
+            }
+            self.enqueue_xfer(Dir::Down, g, t)?;
+        }
+        if let Some(next) = self.srv_q.pop_front() {
+            self.dec_queued(next.len());
+            self.start_srv(next, t)?;
+        }
+        Ok(())
+    }
+
+    // -- completion --------------------------------------------------------
+
+    fn complete(&mut self, g: usize, t: SimTime) {
+        let fr = &mut self.frames[g];
+        fr.completed_ns = t;
+        fr.payload = None;
+        self.completed += 1;
+        let c = self.client_of(g);
+        // Closed-loop source: emit the next frame on completion.
+        if self.period() == 0 && self.next_frame[c] < self.fpc() {
+            self.q.schedule(t, Ev::Emit { c });
+        }
+    }
+
+    fn handle(&mut self, ev: Ev, t: SimTime) -> Result<()> {
+        match ev {
+            Ev::Emit { c } => self.emit(c, t),
+            Ev::EdgeDone { c } => self.edge_done(c, t),
+            Ev::NetFree { lane } => self.net_free(lane, t),
+            Ev::UpDelivered { g } => self.up_delivered(g, t),
+            Ev::BatchTimer => self.batch_timer(t),
+            Ev::ServerDone { batch } => self.server_done(batch, t),
+            Ev::DownDelivered { g } => {
+                self.complete(g, t);
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Run the closed-loop streaming simulation.
+///
+/// `dataset: Some(_)` selects *full* mode (per-frame inference and
+/// accuracy, the `run_scenario` path); `None` selects *latency-only* mode
+/// (pure timing, the `simulate_latency` / Fig. 3 path). Deterministic in
+/// `(cfg, engine seed)` alone.
+pub fn run_stream(
+    engine: &dyn InferenceBackend,
+    cfg: &StreamConfig,
+    dataset: Option<&Dataset>,
+    qos: &QosRequirements,
+) -> Result<StreamReport> {
+    if cfg.clients == 0 {
+        bail!("streaming needs at least one client");
+    }
+    if cfg.frames_per_client == 0 {
+        bail!("streaming needs at least one frame per client");
+    }
+    if let Some(ds) = dataset {
+        if ds.len() == 0 {
+            bail!("streaming needs a non-empty dataset in full mode");
+        }
+    }
+    let costs = costs(engine, &cfg.scenario)?;
+    let num_classes = engine.manifest().model.num_classes;
+
+    // Pre-load the executables used by this scenario (full mode only).
+    let (full_exec, head_exec, tail_exec) = if dataset.is_some() {
+        match cfg.scenario.kind {
+            ScenarioKind::Lc => {
+                let name = if engine
+                    .manifest()
+                    .executables
+                    .contains_key("full_fwd_lite_b1")
+                {
+                    "full_fwd_lite_b1"
+                } else {
+                    "full_fwd_b1"
+                };
+                (Some(engine.executable(name)?), None, None)
+            }
+            ScenarioKind::Rc => {
+                (Some(engine.executable("full_fwd_b1")?), None, None)
+            }
+            ScenarioKind::Sc { split } => (
+                None,
+                Some(engine.executable(&format!("head_L{split}_b1"))?),
+                Some(engine.executable(&format!("tail_L{split}_b1"))?),
+            ),
+        }
+    } else {
+        (None, None, None)
+    };
+
+    let total = cfg.clients * cfg.frames_per_client;
+    let mut sim = Sim {
+        cfg,
+        costs,
+        dataset,
+        full_exec,
+        head_exec,
+        tail_exec,
+        zero_pred: Tensor::zeros(vec![1, num_classes]).argmax_last()[0],
+        channel: Channel::new(cfg.scenario.net.clone()),
+        q: EventQueue::new(),
+        frames: vec![Frame::default(); total],
+        next_frame: vec![0; cfg.clients],
+        edge_q: vec![VecDeque::new(); cfg.clients],
+        edge_busy: vec![false; cfg.clients],
+        edge_cur: vec![0; cfg.clients],
+        lane_q: [VecDeque::new(), VecDeque::new()],
+        lane_busy: [false, false],
+        batcher: Batcher::new(cfg.batch),
+        offered: Vec::new(),
+        srv_q: VecDeque::new(),
+        srv_busy: false,
+        queued: 0,
+        max_queued: 0,
+        depth_area: 0.0,
+        last_t: 0,
+        completed: 0,
+    };
+
+    for c in 0..cfg.clients {
+        sim.q.schedule(0, Ev::Emit { c });
+    }
+    while sim.completed < total {
+        let Some((t, ev)) = sim.q.pop() else {
+            bail!(
+                "streaming deadlock: {}/{} frames completed",
+                sim.completed,
+                total
+            );
+        };
+        sim.depth_area += sim.queued as f64 * (t - sim.last_t) as f64;
+        sim.last_t = t;
+        sim.handle(ev, t)?;
+    }
+
+    let duration_ns = sim
+        .frames
+        .iter()
+        .map(|f| f.completed_ns)
+        .max()
+        .unwrap_or(0);
+    let stats = ResourceStats {
+        duration_ns,
+        throughput_fps: if duration_ns > 0 {
+            total as f64 / secs(duration_ns)
+        } else {
+            0.0
+        },
+        mean_queue_depth: if duration_ns > 0 {
+            sim.depth_area / duration_ns as f64
+        } else {
+            0.0
+        },
+        max_queue_depth: sim.max_queued,
+        batches_released: sim.batcher.batches_released,
+        batched_requests: sim.batcher.requests_seen,
+    };
+    let fpc = cfg.frames_per_client;
+    let records: Vec<StreamFrameRecord> = sim
+        .frames
+        .iter()
+        .enumerate()
+        .map(|(g, f)| StreamFrameRecord {
+            client: g / fpc.max(1),
+            frame: g % fpc.max(1),
+            emitted_ns: f.emitted_ns,
+            completed_ns: f.completed_ns,
+            latency_ns: f.completed_ns - f.emitted_ns,
+            queue_wait_ns: f.queue_wait_ns,
+            correct: if dataset.is_some() {
+                Some(f.pred == Some(f.label))
+            } else {
+                None
+            },
+            wire_bytes: f.wire_bytes,
+            retransmits: f.retransmits,
+            corrupted: f.corrupted,
+        })
+        .collect();
+    Ok(StreamReport::from_parts(
+        cfg.clients,
+        cfg.offered_fps(),
+        records,
+        stats,
+        qos,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::DeviceProfile;
+    use crate::netsim::transfer::NetworkConfig;
+    use crate::runtime::load_backend;
+    use std::path::Path;
+
+    fn engine() -> Box<dyn InferenceBackend> {
+        load_backend(Path::new("artifacts")).expect("backend")
+    }
+
+    fn scenario(period_ns: SimTime) -> ScenarioConfig {
+        ScenarioConfig {
+            kind: ScenarioKind::Rc,
+            net: NetworkConfig::gigabit(Protocol::Udp, 0.0, 9),
+            edge: DeviceProfile::edge_gpu(),
+            server: DeviceProfile::server_gpu(),
+            scale: crate::coordinator::scenario::ModelScale::Slim,
+            frame_period_ns: period_ns,
+        }
+    }
+
+    #[test]
+    fn conserves_frames_across_clients() {
+        let eng = engine();
+        let cfg = StreamConfig {
+            scenario: scenario(1_000_000),
+            clients: 3,
+            frames_per_client: 8,
+            batch: BatchPolicy::new(4, 2_000_000),
+        };
+        let r = run_stream(&*eng, &cfg, None, &QosRequirements::none())
+            .unwrap();
+        assert_eq!(r.frames, 24);
+        assert_eq!(r.stats.batched_requests, 24);
+        assert!(r.records.iter().all(|f| f.completed_ns >= f.emitted_ns));
+        // Every client stream is complete and ordered.
+        for c in 0..3 {
+            let mine: Vec<_> =
+                r.records.iter().filter(|f| f.client == c).collect();
+            assert_eq!(mine.len(), 8);
+            for w in mine.windows(2) {
+                assert!(w[1].frame == w[0].frame + 1);
+                assert!(w[1].emitted_ns >= w[0].emitted_ns);
+            }
+        }
+    }
+
+    #[test]
+    fn closed_loop_source_emits_on_completion() {
+        let eng = engine();
+        let cfg = StreamConfig {
+            scenario: scenario(0),
+            clients: 1,
+            frames_per_client: 6,
+            batch: BatchPolicy::immediate(),
+        };
+        let r = run_stream(&*eng, &cfg, None, &QosRequirements::none())
+            .unwrap();
+        assert_eq!(r.offered_fps, 0.0);
+        for w in r.records.windows(2) {
+            assert_eq!(
+                w[1].emitted_ns, w[0].completed_ns,
+                "closed-loop emission must follow completion"
+            );
+        }
+        // No queueing in a closed loop with one client.
+        assert!(r.records.iter().all(|f| f.queue_wait_ns == 0));
+    }
+
+    #[test]
+    fn overload_builds_queues_low_load_does_not() {
+        let eng = engine();
+        // Service time per frame is bounded below by the server overhead
+        // (150 µs) -> a 10 µs period is far past saturation.
+        let slow = run_stream(
+            &*eng,
+            &StreamConfig {
+                scenario: scenario(50_000_000),
+                clients: 1,
+                frames_per_client: 16,
+                batch: BatchPolicy::immediate(),
+            },
+            None,
+            &QosRequirements::none(),
+        )
+        .unwrap();
+        let fast = run_stream(
+            &*eng,
+            &StreamConfig {
+                scenario: scenario(10_000),
+                clients: 1,
+                frames_per_client: 16,
+                batch: BatchPolicy::immediate(),
+            },
+            None,
+            &QosRequirements::none(),
+        )
+        .unwrap();
+        assert!(slow.records.iter().all(|f| f.queue_wait_ns == 0));
+        // A contention-free run must report an empty peak queue.
+        assert_eq!(slow.stats.max_queue_depth, 0);
+        assert!(fast.mean_queue_wait_ns > 0.0);
+        assert!(fast.mean_latency_ns > slow.mean_latency_ns);
+        assert!(fast.stats.max_queue_depth > 0);
+        // Throughput saturates below the offered rate.
+        assert!(fast.stats.throughput_fps < 1e9 / 10_000.0);
+    }
+
+    #[test]
+    fn latency_violation_is_definite_even_without_accuracy() {
+        let eng = engine();
+        // A 1 ns deadline nobody can meet plus an accuracy bound a
+        // latency-only run cannot measure: the verdict must still be a
+        // definite violation, not an open "no constraints".
+        let qos = QosRequirements {
+            max_latency_ns: Some(1),
+            min_accuracy: Some(0.9),
+            min_hit_rate: 1.0,
+        };
+        let cfg = StreamConfig {
+            scenario: scenario(50_000_000),
+            clients: 1,
+            frames_per_client: 4,
+            batch: BatchPolicy::immediate(),
+        };
+        let r = run_stream(&*eng, &cfg, None, &qos).unwrap();
+        assert_eq!(r.deadline_hit_rate, Some(0.0));
+        assert_eq!(r.qos_satisfied, Some(false));
+        // With an achievable deadline the accuracy bound stays open.
+        let loose = QosRequirements {
+            max_latency_ns: Some(10_000_000_000),
+            min_accuracy: Some(0.9),
+            min_hit_rate: 1.0,
+        };
+        let r = run_stream(&*eng, &cfg, None, &loose).unwrap();
+        assert_eq!(r.qos_satisfied, None);
+    }
+
+    #[test]
+    fn zero_sized_runs_are_rejected() {
+        let eng = engine();
+        let mut cfg = StreamConfig {
+            scenario: scenario(0),
+            clients: 0,
+            frames_per_client: 4,
+            batch: BatchPolicy::immediate(),
+        };
+        assert!(run_stream(&*eng, &cfg, None, &QosRequirements::none())
+            .is_err());
+        cfg.clients = 1;
+        cfg.frames_per_client = 0;
+        assert!(run_stream(&*eng, &cfg, None, &QosRequirements::none())
+            .is_err());
+    }
+
+    #[test]
+    fn batching_amortizes_server_overhead() {
+        let eng = engine();
+        let mk = |batch: BatchPolicy| StreamConfig {
+            scenario: scenario(200_000), // 5000 FPS offered
+            clients: 4,
+            frames_per_client: 12,
+            batch,
+        };
+        let unbatched = run_stream(
+            &*eng,
+            &mk(BatchPolicy::immediate()),
+            None,
+            &QosRequirements::none(),
+        )
+        .unwrap();
+        let batched = run_stream(
+            &*eng,
+            &mk(BatchPolicy::new(8, 1_000_000)),
+            None,
+            &QosRequirements::none(),
+        )
+        .unwrap();
+        assert_eq!(unbatched.stats.mean_batch_size(), 1.0);
+        assert!(batched.stats.mean_batch_size() > 1.0);
+        assert_eq!(batched.frames, unbatched.frames);
+    }
+}

@@ -126,10 +126,9 @@ pub fn suggest(
         let report = sweep::pooled_scenario(
             engine, &cfg, dataset, n_frames, &[net.seed], qos,
         )?;
-        let satisfies = qos.satisfied_by(
-            report.mean_latency_ns as u64,
-            report.accuracy,
-        );
+        // Per-frame verdict: the deadline hit-rate (not the mean) decides.
+        let satisfies =
+            qos.satisfied_by(report.deadline_hit_rate, report.accuracy);
         out.push(Suggestion { rank, report, satisfies });
     }
     Ok(out)
@@ -174,6 +173,7 @@ mod tests {
             accuracy: acc,
             mean_latency_ns: lat,
             p95_latency_ns: lat as u64,
+            p99_latency_ns: lat as u64,
             max_latency_ns: lat as u64,
             mean_wire_bytes: 0.0,
             total_retransmits: 0,

@@ -3,9 +3,14 @@
 //!
 //! A [`SweepSpec`] declares a cartesian grid over the paper's design axes —
 //! network condition (channel preset, propagation latency, loss rate),
-//! transport protocol (TCP/UDP), scenario kind (LC / RC / SC×split) and
-//! model scale — plus the fixed evaluation parameters (frames, seeds,
-//! device profiles, QoS bounds). [`SweepSpec::expand`] turns the grid into
+//! transport protocol (TCP/UDP), scenario kind (LC / RC / SC×split),
+//! model scale, and the serving-load axes (concurrent `clients`,
+//! per-client `offered_fps`) — plus the fixed evaluation parameters
+//! (frames, seeds, device profiles, batching policy, QoS bounds).
+//! Every grid point executes on the closed-loop streaming engine
+//! ([`super::streaming`]), so overloaded points report queueing latency
+//! and saturated throughput instead of an open-loop fiction.
+//! [`SweepSpec::expand`] turns the grid into
 //! an ordered job list and [`run_sweep`] executes it on a deterministic
 //! worker pool: jobs are pulled from a shared counter, every job derives
 //! its simulation seeds from the spec alone, and results are keyed by job
@@ -44,11 +49,12 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::batcher::BatchPolicy;
 use super::qos::QosRequirements;
 use super::scenario::{
-    run_scenario, simulate_latency, ModelScale, ScenarioConfig, ScenarioKind,
-    ScenarioReport,
+    run_scenario, ModelScale, ScenarioConfig, ScenarioKind, ScenarioReport,
 };
+use super::streaming::{pooled_stream, StreamConfig};
 use crate::data::Dataset;
 use crate::model::DeviceProfile;
 use crate::netsim::event::SimTime;
@@ -108,6 +114,11 @@ pub struct SweepSpec {
     pub latencies_us: Vec<f64>,
     pub loss_rates: Vec<f64>,
     pub scales: Vec<ModelScale>,
+    /// Concurrent client streams sharing channel + server per point.
+    pub clients: Vec<usize>,
+    /// Per-client offered frame rates; empty = one point driven by
+    /// `frame_period_ns` instead. Rates must be finite and > 0.
+    pub offered_fps: Vec<f64>,
     // -- fixed parameters -------------------------------------------------
     pub edge: String,
     pub server: String,
@@ -125,6 +136,12 @@ pub struct SweepSpec {
     pub max_latency_ms: f64,
     /// QoS accuracy bound in [0, 1] (0 = unconstrained).
     pub min_accuracy: f64,
+    /// Fraction of frames that must meet the latency bound, in (0, 1].
+    pub min_hit_rate: f64,
+    /// Server-side dynamic batching: maximum batch size (1 = unbatched).
+    pub max_batch: usize,
+    /// Server-side dynamic batching: deadline for a partial batch, µs.
+    pub batch_wait_us: f64,
 }
 
 /// One expanded grid point, in deterministic expansion order.
@@ -137,6 +154,9 @@ pub struct SweepJob {
     pub latency_us: Option<f64>,
     pub loss: f64,
     pub scale: ModelScale,
+    pub clients: usize,
+    /// Per-client offered rate; `None` = use the spec's `frame_period_ns`.
+    pub offered_fps: Option<f64>,
 }
 
 /// Resolve a channel-preset name into its [`NetworkConfig`].
@@ -169,6 +189,8 @@ impl SweepSpec {
             latencies_us: Vec::new(),
             loss_rates: vec![0.0],
             scales: vec![ModelScale::Slim],
+            clients: vec![1],
+            offered_fps: Vec::new(),
             edge: "edge-gpu".to_string(),
             server: "server-gpu".to_string(),
             dataset: "test".to_string(),
@@ -178,6 +200,9 @@ impl SweepSpec {
             frame_period_ns: 0,
             max_latency_ms: 0.0,
             min_accuracy: 0.0,
+            min_hit_rate: 1.0,
+            max_batch: 1,
+            batch_wait_us: 0.0,
         }
     }
 
@@ -190,12 +215,21 @@ impl SweepSpec {
         if self.min_accuracy > 0.0 {
             q = q.and_accuracy(self.min_accuracy);
         }
+        q.min_hit_rate = self.min_hit_rate;
         q
     }
 
+    /// The server-side batching policy every point serves under.
+    pub fn batch_policy(&self) -> BatchPolicy {
+        BatchPolicy::from_micros(self.max_batch, self.batch_wait_us)
+            .expect("batching parameters validated by SweepSpec::expand")
+    }
+
     /// Expand the grid into its ordered job list. Axis order (outermost
-    /// first): scenario, protocol, channel, latency, loss, scale — so a
-    /// caller can index `jobs` arithmetically.
+    /// first): scenario, protocol, channel, latency, loss, scale, clients,
+    /// offered_fps — so a caller can index `jobs` arithmetically; the new
+    /// innermost load axes default to a single value, preserving the
+    /// stride of older specs.
     pub fn expand(&self) -> Result<Vec<SweepJob>> {
         if self.scenarios.is_empty() {
             bail!("sweep spec '{}' has no scenarios", self.name);
@@ -235,6 +269,47 @@ impl SweepSpec {
                 );
             }
         }
+        if self.clients.is_empty() {
+            bail!("sweep spec '{}' has no clients", self.name);
+        }
+        for &c in &self.clients {
+            if c == 0 {
+                bail!("sweep spec '{}': clients must be >= 1", self.name);
+            }
+        }
+        for &fps in &self.offered_fps {
+            // The 1e9 cap matches QosRequirements::with_fps: a rate above
+            // 1 GHz truncates to a 0 ns frame period, silently flipping
+            // the point to closed-loop source semantics.
+            if !fps.is_finite() || fps <= 0.0 || fps > 1e9 {
+                bail!(
+                    "sweep spec '{}': offered_fps must be a positive \
+                     number <= 1e9, got {fps}",
+                    self.name
+                );
+            }
+        }
+        if self.max_batch == 0 {
+            bail!("sweep spec '{}': max_batch must be >= 1", self.name);
+        }
+        if !self.batch_wait_us.is_finite() || self.batch_wait_us < 0.0 {
+            bail!(
+                "sweep spec '{}': batch_wait_us must be a non-negative \
+                 number, got {}",
+                self.name,
+                self.batch_wait_us
+            );
+        }
+        if !self.min_hit_rate.is_finite()
+            || self.min_hit_rate <= 0.0
+            || self.min_hit_rate > 1.0
+        {
+            bail!(
+                "sweep spec '{}': min_hit_rate must be in (0, 1], got {}",
+                self.name,
+                self.min_hit_rate
+            );
+        }
         for c in &self.channels {
             channel_preset(c, Protocol::Tcp, 0.0, 0)?;
         }
@@ -248,6 +323,11 @@ impl SweepSpec {
         } else {
             self.latencies_us.iter().map(|&l| Some(l)).collect()
         };
+        let rates: Vec<Option<f64>> = if self.offered_fps.is_empty() {
+            vec![None]
+        } else {
+            self.offered_fps.iter().map(|&f| Some(f)).collect()
+        };
         let mut jobs = Vec::new();
         for &kind in &self.scenarios {
             for &protocol in &self.protocols {
@@ -255,15 +335,21 @@ impl SweepSpec {
                     for &latency_us in &lats {
                         for &loss in &self.loss_rates {
                             for &scale in &self.scales {
-                                jobs.push(SweepJob {
-                                    index: jobs.len(),
-                                    kind,
-                                    protocol,
-                                    channel: channel.clone(),
-                                    latency_us,
-                                    loss,
-                                    scale,
-                                });
+                                for &clients in &self.clients {
+                                    for &offered_fps in &rates {
+                                        jobs.push(SweepJob {
+                                            index: jobs.len(),
+                                            kind,
+                                            protocol,
+                                            channel: channel.clone(),
+                                            latency_us,
+                                            loss,
+                                            scale,
+                                            clients,
+                                            offered_fps,
+                                        });
+                                    }
+                                }
                             }
                         }
                     }
@@ -277,11 +363,13 @@ impl SweepSpec {
     /// the schema). The grid is validated eagerly, so an invalid spec
     /// fails here rather than inside a worker thread.
     pub fn from_json(text: &str) -> Result<SweepSpec> {
-        const KEYS: [&str; 18] = [
+        const KEYS: [&str; 23] = [
             "name", "mode", "scenarios", "protocols", "channels",
-            "latencies_us", "loss_rates", "scales", "edge", "server",
-            "dataset", "frames", "seeds_per_point", "seed", "fps",
-            "frame_period_ns", "max_latency_ms", "min_accuracy",
+            "latencies_us", "loss_rates", "scales", "clients",
+            "offered_fps", "edge", "server", "dataset", "frames",
+            "seeds_per_point", "seed", "fps", "frame_period_ns",
+            "max_latency_ms", "min_accuracy", "min_hit_rate", "max_batch",
+            "batch_wait_us",
         ];
         let j = Json::parse(text).context("parsing sweep spec")?;
         // A misspelled optional key must not silently fall back to its
@@ -322,6 +410,21 @@ impl SweepSpec {
                 .map(|s| ModelScale::parse(s))
                 .collect::<Result<_>>()?;
         }
+        if let Some(v) = j.opt("clients") {
+            spec.clients = v.usize_vec()?;
+        }
+        if let Some(v) = j.opt("offered_fps") {
+            spec.offered_fps = v.f64_vec()?;
+        }
+        if let Some(v) = j.opt("max_batch") {
+            spec.max_batch = v.u64()? as usize;
+        }
+        if let Some(v) = j.opt("batch_wait_us") {
+            spec.batch_wait_us = v.f64()?;
+        }
+        if let Some(v) = j.opt("min_hit_rate") {
+            spec.min_hit_rate = v.f64()?;
+        }
         if let Some(v) = j.opt("edge") {
             spec.edge = v.str()?.to_string();
         }
@@ -342,8 +445,11 @@ impl SweepSpec {
         }
         if let Some(v) = j.opt("fps") {
             let fps = v.f64()?;
-            if !fps.is_finite() || fps <= 0.0 {
-                bail!("sweep spec 'fps' must be a positive number, got {fps}");
+            if !fps.is_finite() || fps <= 0.0 || fps > 1e9 {
+                bail!(
+                    "sweep spec 'fps' must be a positive number <= 1e9, \
+                     got {fps}"
+                );
             }
             spec.frame_period_ns = (1e9 / fps) as SimTime;
             spec.max_latency_ms = 1e3 / fps;
@@ -422,6 +528,21 @@ impl SweepSpec {
                     self.scales.iter().map(|s| json::s(s.as_str())).collect(),
                 ),
             ),
+            (
+                "clients",
+                json::arr(
+                    self.clients
+                        .iter()
+                        .map(|&c| json::num(c as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "offered_fps",
+                json::arr(
+                    self.offered_fps.iter().map(|&f| json::num(f)).collect(),
+                ),
+            ),
             ("edge", json::s(&self.edge)),
             ("server", json::s(&self.server)),
             ("dataset", json::s(&self.dataset)),
@@ -431,6 +552,9 @@ impl SweepSpec {
             ("frame_period_ns", json::num(self.frame_period_ns as f64)),
             ("max_latency_ms", json::num(self.max_latency_ms)),
             ("min_accuracy", json::num(self.min_accuracy)),
+            ("min_hit_rate", json::num(self.min_hit_rate)),
+            ("max_batch", json::num(self.max_batch as f64)),
+            ("batch_wait_us", json::num(self.batch_wait_us)),
         ])
     }
 }
@@ -445,13 +569,24 @@ pub struct SweepPoint {
     pub latency_us: Option<f64>,
     pub loss: f64,
     pub scale: ModelScale,
-    /// Total frames pooled into this point (frames × seeds).
+    /// Concurrent client streams at this point.
+    pub clients: usize,
+    /// Per-client offered rate; `None` = spec `frame_period_ns` drove it.
+    pub offered_fps: Option<f64>,
+    /// Total frames pooled into this point (clients × frames × seeds).
     pub frames: usize,
     /// Measured accuracy; `None` in latency-only sweeps.
     pub accuracy: Option<f64>,
     pub mean_latency_ns: f64,
     pub p95_latency_ns: SimTime,
+    pub p99_latency_ns: SimTime,
     pub max_latency_ns: SimTime,
+    /// Achieved throughput (frames/s, averaged over seeds) — plateaus at
+    /// the bottleneck resource under overload.
+    pub throughput_fps: f64,
+    /// Time-averaged / peak number of frames waiting in queues.
+    pub mean_queue_depth: f64,
+    pub max_queue_depth: usize,
     pub mean_wire_bytes: f64,
     pub total_retransmits: u64,
     /// Fraction of frames meeting the latency bound (if one is set).
@@ -485,6 +620,8 @@ pub fn pooled_scenario(
 
 /// Execute one expanded job on `engine`. Deterministic in `(spec, job)`
 /// alone: the channel seeds are `spec.seed + s`, never thread state.
+/// Both modes ride the closed-loop streaming engine; latency-only mode
+/// simply skips model execution (`dataset: None`).
 fn run_job(
     engine: &dyn InferenceBackend,
     dataset: Option<&Dataset>,
@@ -501,93 +638,58 @@ fn run_job(
         .ok_or_else(|| anyhow!("unknown edge profile '{}'", spec.edge))?;
     let server = DeviceProfile::by_name(&spec.server)
         .ok_or_else(|| anyhow!("unknown server profile '{}'", spec.server))?;
-    let cfg = ScenarioConfig {
-        kind: job.kind,
-        net,
-        edge,
-        server,
-        scale: job.scale,
-        frame_period_ns: spec.frame_period_ns,
+    let frame_period_ns = match job.offered_fps {
+        Some(fps) => (1e9 / fps) as SimTime,
+        None => spec.frame_period_ns,
+    };
+    let cfg = StreamConfig {
+        scenario: ScenarioConfig {
+            kind: job.kind,
+            net,
+            edge,
+            server,
+            scale: job.scale,
+            frame_period_ns,
+        },
+        clients: job.clients,
+        frames_per_client: spec.frames,
+        batch: spec.batch_policy(),
     };
     let seeds: Vec<u64> = (0..spec.seeds_per_point as u64)
         .map(|s| spec.seed.wrapping_add(s))
         .collect();
-    match spec.mode {
-        SweepMode::Full => {
-            let ds = dataset
-                .ok_or_else(|| anyhow!("full-mode sweep needs a dataset"))?;
-            let r =
-                pooled_scenario(engine, &cfg, ds, spec.frames, &seeds, &qos)?;
-            Ok(SweepPoint {
-                index: job.index,
-                kind: job.kind,
-                protocol: job.protocol,
-                channel: job.channel.clone(),
-                latency_us: job.latency_us,
-                loss: job.loss,
-                scale: job.scale,
-                frames: r.frames,
-                accuracy: Some(r.accuracy),
-                mean_latency_ns: r.mean_latency_ns,
-                p95_latency_ns: r.p95_latency_ns,
-                max_latency_ns: r.max_latency_ns,
-                mean_wire_bytes: r.mean_wire_bytes,
-                total_retransmits: r.total_retransmits,
-                deadline_hit_rate: r.deadline_hit_rate,
-                satisfies: r.qos_satisfied,
-            })
-        }
-        SweepMode::LatencyOnly => {
-            let mut lats: Vec<SimTime> =
-                Vec::with_capacity(spec.frames * seeds.len());
-            for &seed in &seeds {
-                let mut c = cfg.clone();
-                c.net.seed = seed;
-                lats.extend(simulate_latency(engine, &c, spec.frames)?);
-            }
-            let n = lats.len().max(1);
-            let mean =
-                lats.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
-            let mut sorted = lats.clone();
-            sorted.sort_unstable();
-            // (len * 0.95) truncated is always < len, so no modulo needed;
-            // mirrors ScenarioReport::from_records' percentile convention.
-            let p95 = sorted
-                .get((sorted.len() as f64 * 0.95) as usize)
-                .copied()
-                .unwrap_or(0);
-            let max = sorted.last().copied().unwrap_or(0);
-            let deadline_hit_rate = qos.max_latency_ns.map(|m| {
-                lats.iter().filter(|&&v| v <= m).count() as f64 / n as f64
-            });
-            // An accuracy bound is uncheckable without inference: leave
-            // the per-point verdict open rather than claiming "ok" while
-            // the report-level counts say otherwise.
-            let satisfies = if spec.min_accuracy > 0.0 {
-                None
-            } else {
-                qos.max_latency_ns.map(|m| (mean as SimTime) <= m)
-            };
-            Ok(SweepPoint {
-                index: job.index,
-                kind: job.kind,
-                protocol: job.protocol,
-                channel: job.channel.clone(),
-                latency_us: job.latency_us,
-                loss: job.loss,
-                scale: job.scale,
-                frames: lats.len(),
-                accuracy: None,
-                mean_latency_ns: mean,
-                p95_latency_ns: p95,
-                max_latency_ns: max,
-                mean_wire_bytes: 0.0,
-                total_retransmits: 0,
-                deadline_hit_rate,
-                satisfies,
-            })
-        }
-    }
+    let ds = match spec.mode {
+        SweepMode::Full => Some(
+            dataset
+                .ok_or_else(|| anyhow!("full-mode sweep needs a dataset"))?,
+        ),
+        SweepMode::LatencyOnly => None,
+    };
+    let r = pooled_stream(engine, &cfg, ds, &seeds, &qos)?;
+    Ok(SweepPoint {
+        index: job.index,
+        kind: job.kind,
+        protocol: job.protocol,
+        channel: job.channel.clone(),
+        latency_us: job.latency_us,
+        loss: job.loss,
+        scale: job.scale,
+        clients: job.clients,
+        offered_fps: job.offered_fps,
+        frames: r.frames,
+        accuracy: r.accuracy,
+        mean_latency_ns: r.mean_latency_ns,
+        p95_latency_ns: r.p95_latency_ns,
+        p99_latency_ns: r.p99_latency_ns,
+        max_latency_ns: r.max_latency_ns,
+        throughput_fps: r.stats.throughput_fps,
+        mean_queue_depth: r.stats.mean_queue_depth,
+        max_queue_depth: r.stats.max_queue_depth,
+        mean_wire_bytes: r.mean_wire_bytes,
+        total_retransmits: r.total_retransmits,
+        deadline_hit_rate: r.deadline_hit_rate,
+        satisfies: r.qos_satisfied,
+    })
 }
 
 /// The reduced result of a sweep: every point plus the Pareto frontier
@@ -618,10 +720,10 @@ impl SweepReport {
             .iter()
             .map(|p| (p.accuracy.unwrap_or(f64::NAN), p.mean_latency_ns))
             .collect();
-        let lat_ok = |p: &SweepPoint| {
-            qos.max_latency_ns
-                .map_or(true, |m| p.mean_latency_ns as SimTime <= m)
-        };
+        // Per-frame semantics: a point meets the latency constraint when
+        // its deadline hit-rate reaches the threshold, not when its mean
+        // sneaks under the bound.
+        let lat_ok = |p: &SweepPoint| qos.latency_ok(p.deadline_hit_rate);
         let acc_ok = |p: &SweepPoint| match (qos.min_accuracy, p.accuracy) {
             (None, _) => true,
             (Some(m), Some(a)) => a >= m,
@@ -674,11 +776,17 @@ impl SweepReport {
             "latency_us",
             "loss",
             "scale",
+            "clients",
+            "offered_fps",
             "frames",
             "accuracy",
             "mean_latency_ms",
             "p95_latency_ms",
+            "p99_latency_ms",
             "max_latency_ms",
+            "throughput_fps",
+            "mean_queue_depth",
+            "max_queue_depth",
             "deadline_hit_rate",
             "qos_satisfied",
             "pareto",
@@ -692,11 +800,17 @@ impl SweepReport {
                 p.latency_us.map(|v| format!("{v}")).unwrap_or_default(),
                 format!("{}", p.loss),
                 p.scale.as_str().to_string(),
+                p.clients.to_string(),
+                p.offered_fps.map(|v| format!("{v}")).unwrap_or_default(),
                 p.frames.to_string(),
                 p.accuracy.map(|a| format!("{a:.4}")).unwrap_or_default(),
                 format!("{:.4}", p.mean_latency_ns / 1e6),
                 format!("{:.4}", p.p95_latency_ns as f64 / 1e6),
+                format!("{:.4}", p.p99_latency_ns as f64 / 1e6),
                 format!("{:.4}", p.max_latency_ns as f64 / 1e6),
+                format!("{:.2}", p.throughput_fps),
+                format!("{:.2}", p.mean_queue_depth),
+                p.max_queue_depth.to_string(),
                 p.deadline_hit_rate
                     .map(|r| format!("{r:.4}"))
                     .unwrap_or_default(),
@@ -732,11 +846,16 @@ impl SweepReport {
                     format!("{} {}", p.protocol, p.channel),
                     format!("{:.1}%", p.loss * 100.0),
                     p.scale.as_str().to_string(),
+                    match p.offered_fps {
+                        Some(f) => format!("{}x{:.0}", p.clients, f),
+                        None => format!("{}x—", p.clients),
+                    },
                     p.accuracy
                         .map(|a| format!("{:.1}%", a * 100.0))
                         .unwrap_or_else(|| "—".to_string()),
                     format!("{:.2} ms", p.mean_latency_ns / 1e6),
-                    format!("{:.2} ms", p.p95_latency_ns as f64 / 1e6),
+                    format!("{:.2} ms", p.p99_latency_ns as f64 / 1e6),
+                    format!("{:.1}", p.throughput_fps),
                     match p.satisfies {
                         Some(true) => "ok",
                         Some(false) => "violated",
@@ -750,8 +869,8 @@ impl SweepReport {
             .collect();
         out.push_str(&table::render(
             &[
-                "#", "scenario", "transport", "loss", "scale", "accuracy",
-                "mean lat", "p95 lat", "QoS", "Pareto",
+                "#", "scenario", "transport", "loss", "scale", "load",
+                "accuracy", "mean lat", "p99 lat", "thru", "QoS", "Pareto",
             ],
             &rows,
         ));
@@ -795,11 +914,20 @@ fn point_json(p: &SweepPoint) -> Json {
         ),
         ("loss", json::num(p.loss)),
         ("scale", json::s(p.scale.as_str())),
+        ("clients", json::num(p.clients as f64)),
+        (
+            "offered_fps",
+            p.offered_fps.map(json::num).unwrap_or(Json::Null),
+        ),
         ("frames", json::num(p.frames as f64)),
         ("accuracy", p.accuracy.map(json::num).unwrap_or(Json::Null)),
         ("mean_latency_ns", json::num(p.mean_latency_ns)),
         ("p95_latency_ns", json::num(p.p95_latency_ns as f64)),
+        ("p99_latency_ns", json::num(p.p99_latency_ns as f64)),
         ("max_latency_ns", json::num(p.max_latency_ns as f64)),
+        ("throughput_fps", json::num(p.throughput_fps)),
+        ("mean_queue_depth", json::num(p.mean_queue_depth)),
+        ("max_queue_depth", json::num(p.max_queue_depth as f64)),
         ("mean_wire_bytes", json::num(p.mean_wire_bytes)),
         ("total_retransmits", json::num(p.total_retransmits as f64)),
         (
@@ -994,6 +1122,60 @@ mod tests {
         let mut spec = small_spec();
         spec.latencies_us = vec![-100.0];
         assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn load_axes_expand_and_validate() {
+        let mut spec = small_spec();
+        spec.scenarios = vec![ScenarioKind::Rc];
+        spec.protocols = vec![Protocol::Udp];
+        spec.loss_rates = vec![0.0];
+        spec.clients = vec![1, 4];
+        spec.offered_fps = vec![100.0, 1000.0];
+        let jobs = spec.expand().unwrap();
+        assert_eq!(jobs.len(), 4);
+        assert_eq!(jobs[0].clients, 1);
+        assert_eq!(jobs[0].offered_fps, Some(100.0));
+        assert_eq!(jobs[1].offered_fps, Some(1000.0));
+        assert_eq!(jobs[2].clients, 4);
+        // offered_fps <= 0 is rejected the same way as a QoS fps of 0,
+        // and rates past 1 GHz (0 ns period) are rejected too.
+        spec.offered_fps = vec![0.0];
+        assert!(spec.expand().is_err());
+        spec.offered_fps = vec![-5.0];
+        assert!(spec.expand().is_err());
+        spec.offered_fps = vec![2e9];
+        assert!(spec.expand().is_err());
+        let mut spec = small_spec();
+        spec.clients = vec![0];
+        assert!(spec.expand().is_err());
+        let mut spec = small_spec();
+        spec.max_batch = 0;
+        assert!(spec.expand().is_err());
+        let mut spec = small_spec();
+        spec.min_hit_rate = 0.0;
+        assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn from_json_parses_load_axes() {
+        let spec = SweepSpec::from_json(
+            r#"{"scenarios": ["rc"], "protocols": ["udp"],
+                "loss_rates": [0.0], "clients": [1, 8],
+                "offered_fps": [50, 400], "max_batch": 8,
+                "batch_wait_us": 500, "min_hit_rate": 0.95}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.clients, vec![1, 8]);
+        assert_eq!(spec.offered_fps, vec![50.0, 400.0]);
+        assert_eq!(spec.max_batch, 8);
+        assert!((spec.qos().min_hit_rate - 0.95).abs() < 1e-12);
+        assert_eq!(spec.expand().unwrap().len(), 4);
+        assert!(SweepSpec::from_json(
+            r#"{"scenarios": ["rc"], "protocols": ["udp"],
+                "loss_rates": [0.0], "offered_fps": [0]}"#,
+        )
+        .is_err());
     }
 
     #[test]

@@ -14,16 +14,23 @@
 //!    [`coordinator::scenario`]): replay LC / RC / SC pipelines over a
 //!    discrete-event channel model (TCP/UDP, latency, capacity, interface
 //!    speed, saboteur) with per-frame model inference.
-//! 3. **QoS suggestion** ([`coordinator::suggest`]): rank configurations by
+//! 3. **Closed-loop streaming** ([`coordinator::streaming`]): a queueing,
+//!    multi-client serving simulator — client streams feed per-resource
+//!    FIFO queues (per-client edge compute, shared uplink/downlink, a
+//!    size-or-deadline batched server), so per-frame latency includes
+//!    waiting time and throughput saturates at the bottleneck resource
+//!    under overload. `run_scenario` rides this engine.
+//! 4. **QoS suggestion** ([`coordinator::suggest`]): rank configurations by
 //!    accuracy, simulate the shortlist, and report which designs satisfy
-//!    the application's latency/accuracy requirements.
-//! 4. **Design-space sweeps** ([`coordinator::sweep`]): expand a
+//!    the application's latency/accuracy requirements (per-frame deadline
+//!    hit-rate, [`coordinator::qos::QosRequirements::min_hit_rate`]).
+//! 5. **Design-space sweeps** ([`coordinator::sweep`]): expand a
 //!    declarative [`coordinator::sweep::SweepSpec`] — a cartesian grid over
-//!    network condition, protocol, scenario kind and model scale — into
-//!    jobs, execute them on a deterministic worker pool (byte-identical
-//!    reports at any thread count), and reduce them to an
-//!    accuracy-vs-latency Pareto frontier ([`report::pareto`]) with
-//!    per-constraint satisfaction counts.
+//!    network condition, protocol, scenario kind, model scale and serving
+//!    load (clients × offered FPS) — into jobs, execute them on a
+//!    deterministic worker pool (byte-identical reports at any thread
+//!    count), and reduce them to an accuracy-vs-latency Pareto frontier
+//!    ([`report::pareto`]) with per-constraint satisfaction counts.
 //!
 //! Inference is pluggable ([`runtime::InferenceBackend`]): the default
 //! build runs every entry point hermetically on the pure-Rust analytic

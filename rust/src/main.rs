@@ -178,7 +178,7 @@ fn cmd_suggest(args: &[String]) -> Result<()> {
     let engine = load_backend(Path::new(m.str("artifacts")))?;
     let net = network_from(&m)?;
     let (edge, server) = devices_from(&m)?;
-    let mut qos = QosRequirements::with_fps(m.f64("fps")?);
+    let mut qos = QosRequirements::with_fps(m.f64("fps")?)?;
     let min_acc = m.f64("min-accuracy")?;
     if min_acc > 0.0 {
         qos = qos.and_accuracy(min_acc);
@@ -289,7 +289,7 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     let engine = load_backend(Path::new(m.str("artifacts")))?;
     let net = network_from(&m)?;
     let (edge, server) = devices_from(&m)?;
-    let qos = QosRequirements::with_fps(m.f64("fps")?);
+    let qos = QosRequirements::with_fps(m.f64("fps")?)?;
     let cfg = ScenarioConfig {
         kind: ScenarioKind::parse(m.str("scenario"))?,
         net,
@@ -306,15 +306,23 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
-    let m = Command::new("serve", "stream the ICE-Lab conveyor workload")
+    let m = Command::new(
+        "serve",
+        "stream the ICE-Lab conveyor workload (closed-loop, queueing, \
+         optionally multi-client)",
+    )
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("scenario", "rc", "lc | rc | sc@<layer>")
         .opt("protocol", "tcp", "tcp | udp")
         .opt("channel", "gigabit", "gigabit | fast-ethernet | wifi")
         .opt("loss", "0.0", "packet loss rate")
         .opt("latency-us", "100", "channel latency, µs")
-        .opt("frames", "512", "number of frames")
-        .opt("fps", "20", "conveyor frame rate (QoS bound)")
+        .opt("frames", "512", "frames per client")
+        .opt("fps", "20", "per-client offered frame rate (and QoS bound)")
+        .opt("clients", "1", "concurrent client streams")
+        .opt("max-batch", "1", "server dynamic batching: max batch size")
+        .opt("batch-wait-us", "0",
+             "server dynamic batching: partial-batch deadline, µs")
         .opt("edge", "edge-gpu", "edge device profile")
         .opt("server", "server-gpu", "server device profile")
         .opt("seed", "42", "simulation seed")
@@ -322,7 +330,15 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let engine = load_backend(Path::new(m.str("artifacts")))?;
     let net = network_from(&m)?;
     let (edge, server) = devices_from(&m)?;
-    let qos = QosRequirements::with_fps(m.f64("fps")?);
+    let qos = QosRequirements::with_fps(m.f64("fps")?)?;
+    let clients = m.usize("clients")?;
+    if clients == 0 {
+        bail!("--clients must be >= 1");
+    }
+    let batch = sei::coordinator::batcher::BatchPolicy::from_micros(
+        m.usize("max-batch")?,
+        m.f64("batch-wait-us")?,
+    )?;
     let cfg = ScenarioConfig {
         kind: ScenarioKind::parse(m.str("scenario"))?,
         net,
@@ -332,10 +348,30 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         frame_period_ns: (1e9 / m.f64("fps")?) as u64,
     };
     let ice = engine.dataset("ice")?;
-    let report = coordinator::serve(&*engine, &cfg, &ice,
-                                    m.usize("frames")?, &qos)?;
     println!("ICE-Lab conveyor serving — platform {}", engine.platform());
-    print!("{}", report.render(&qos));
+    if clients > 1 || batch.max_batch > 1 {
+        // Multi-client / batched serving: the closed-loop streaming
+        // simulator with per-resource queues and a batched server.
+        let stream_cfg = sei::coordinator::StreamConfig {
+            scenario: cfg,
+            clients,
+            frames_per_client: m.usize("frames")?,
+            batch,
+        };
+        let t0 = std::time::Instant::now();
+        let report = sei::coordinator::run_stream(
+            &*engine, &stream_cfg, Some(&ice), &qos,
+        )?;
+        print!("{}", report.render(&qos));
+        println!(
+            "serving wall time  {:.2} s",
+            t0.elapsed().as_secs_f64()
+        );
+    } else {
+        let report = coordinator::serve(&*engine, &cfg, &ice,
+                                        m.usize("frames")?, &qos)?;
+        print!("{}", report.render(&qos));
+    }
     Ok(())
 }
 

@@ -139,6 +139,30 @@ impl TransferResult {
             TransferResult::Udp(_) => 0,
         }
     }
+
+    /// The legacy clock convention of [`Channel::send`]: until the last
+    /// byte is acknowledged for TCP, until the last datagram's arrival
+    /// slot for UDP.
+    pub fn busy_ns(&self) -> SimTime {
+        match self {
+            TransferResult::Tcp(r) => r.ack_latency_ns,
+            TransferResult::Udp(r) => r.latency_ns,
+        }
+    }
+
+    /// Sender-side occupancy: how long this message ties up its sending
+    /// endpoint — until the last byte is acknowledged for TCP (the stream
+    /// cannot pipeline a second application message into an unacked one
+    /// in this model), but only until the last datagram clears the
+    /// interface for UDP (fire-and-forget datagrams of the next message
+    /// pipeline over this one's propagation delay). This is the queueing
+    /// discipline [`Channel::send_no_earlier`] gates on.
+    pub fn sender_busy_ns(&self) -> SimTime {
+        match self {
+            TransferResult::Tcp(r) => r.ack_latency_ns,
+            TransferResult::Udp(r) => r.tx_end_ns,
+        }
+    }
 }
 
 /// Full-duplex channel with persistent per-direction transport state.
@@ -149,6 +173,13 @@ pub struct Channel {
     tcp_up: TcpState,
     tcp_down: TcpState,
     now: SimTime,
+    /// Per-direction message-level occupancy, maintained by
+    /// [`Channel::send_no_earlier`]: a direction carries one application
+    /// message at a time, so a new message queues behind the previous
+    /// one's completion in *its* direction only (full-duplex: an uplink
+    /// transfer does not block a concurrent downlink one).
+    busy_up: SimTime,
+    busy_down: SimTime,
     transfers: u64,
 }
 
@@ -163,6 +194,8 @@ impl Channel {
             up: Link::new(lcfg.clone(), rng.fork()),
             down: Link::new(lcfg, rng.fork()),
             now: 0,
+            busy_up: 0,
+            busy_down: 0,
             transfers: 0,
         }
     }
@@ -184,6 +217,61 @@ impl Channel {
     /// current time; advances the channel clock past the transfer.
     pub fn send(&mut self, dir: Dir, len: u64) -> Result<TransferResult> {
         let start = self.now;
+        let r = self.transfer_at(dir, len, start)?;
+        self.now = start + r.busy_ns();
+        Ok(r)
+    }
+
+    /// Send `len` bytes in `dir` starting at `earliest` — or as soon as
+    /// the channel can take the message, whichever is later: the
+    /// message-level FIFO queueing discipline the closed-loop streaming
+    /// engine models. Returns the actual start time with the transfer
+    /// result.
+    ///
+    /// **UDP** is fire-and-forget with no reverse traffic, so the two
+    /// directions are fully independent (true full duplex): an uplink
+    /// message never delays a downlink one. **TCP** messages, by
+    /// contrast, serialize across the *whole* channel: a TCP message's
+    /// ACK stream rides the opposite-direction link, entangling the two
+    /// directions — starting a downlink message while an uplink one is
+    /// still collecting ACKs would interleave with wire traffic this
+    /// message-level model computes atomically (and the legacy engine
+    /// serialized through its single clock in exactly the same way).
+    pub fn send_no_earlier(
+        &mut self,
+        dir: Dir,
+        len: u64,
+        earliest: SimTime,
+    ) -> Result<(SimTime, TransferResult)> {
+        let gate = match self.cfg.protocol {
+            Protocol::Tcp => self.busy_up.max(self.busy_down),
+            Protocol::Udp => match dir {
+                Dir::Up => self.busy_up,
+                Dir::Down => self.busy_down,
+            },
+        };
+        let start = earliest.max(gate);
+        let r = self.transfer_at(dir, len, start)?;
+        self.now = self.now.max(start + r.sender_busy_ns());
+        Ok((start, r))
+    }
+
+    /// When `dir` is free for the next message (message-level occupancy;
+    /// for TCP both directions advance together, see
+    /// [`Channel::send_no_earlier`]).
+    pub fn busy_until(&self, dir: Dir) -> SimTime {
+        match dir {
+            Dir::Up => self.busy_up,
+            Dir::Down => self.busy_down,
+        }
+    }
+
+    fn transfer_at(
+        &mut self,
+        dir: Dir,
+        len: u64,
+        start: SimTime,
+    ) -> Result<TransferResult> {
         self.transfers += 1;
         let r = match self.cfg.protocol {
             Protocol::Tcp => {
@@ -199,7 +287,6 @@ impl Channel {
                     &self.cfg.tcp, state, data, ack, len, start,
                 )
                 .map_err(|e| anyhow!(e))?;
-                self.now = start + res.ack_latency_ns;
                 TransferResult::Tcp(res)
             }
             Protocol::Udp => {
@@ -208,10 +295,22 @@ impl Channel {
                     Dir::Down => &mut self.down,
                 };
                 let res = udp::send_message(&self.cfg.udp, link, len, start);
-                self.now = start + res.latency_ns;
                 TransferResult::Udp(res)
             }
         };
+        let busy = start + r.sender_busy_ns();
+        match self.cfg.protocol {
+            // TCP: the ACK stream occupied both links — the channel frees
+            // as a whole.
+            Protocol::Tcp => {
+                self.busy_up = self.busy_up.max(busy);
+                self.busy_down = self.busy_down.max(busy);
+            }
+            Protocol::Udp => match dir {
+                Dir::Up => self.busy_up = self.busy_up.max(busy),
+                Dir::Down => self.busy_down = self.busy_down.max(busy),
+            },
+        }
         Ok(r)
     }
 
@@ -274,6 +373,49 @@ mod tests {
         ch.advance_to(t1 + 1_000_000);
         ch.send(Dir::Up, 10_000).unwrap();
         assert!(ch.now() >= t1 + 1_000_000);
+    }
+
+    #[test]
+    fn send_no_earlier_udp_directions_are_independent() {
+        let mut ch = Channel::new(NetworkConfig::gigabit(
+            Protocol::Udp, 0.0, 1,
+        ));
+        let (s1, r1) = ch.send_no_earlier(Dir::Up, 10_000, 0).unwrap();
+        assert_eq!(s1, 0);
+        // A second uplink message requested at t=0 queues behind the
+        // first message's last datagram clearing the interface (not its
+        // arrival: UDP pipelines over the propagation delay)…
+        let (s2, _) = ch.send_no_earlier(Dir::Up, 10_000, 0).unwrap();
+        assert_eq!(s2, r1.sender_busy_ns());
+        assert!(r1.sender_busy_ns() < r1.busy_ns(), "tx ends before arrival");
+        assert!(ch.busy_until(Dir::Up) > s2);
+        // …and the downlink direction is independent (full duplex: UDP
+        // has no reverse traffic).
+        let (s3, _) = ch.send_no_earlier(Dir::Down, 10_000, 0).unwrap();
+        assert_eq!(s3, 0);
+    }
+
+    #[test]
+    fn send_no_earlier_tcp_serializes_the_channel() {
+        // A TCP message's ACKs ride the opposite link, so messages
+        // serialize across the whole channel regardless of direction.
+        let mut ch = Channel::new(NetworkConfig::gigabit(
+            Protocol::Tcp, 0.0, 1,
+        ));
+        let (s1, r1) = ch.send_no_earlier(Dir::Up, 10_000, 0).unwrap();
+        assert_eq!(s1, 0);
+        let (s2, _) = ch.send_no_earlier(Dir::Down, 10_000, 0).unwrap();
+        assert_eq!(s2, r1.sender_busy_ns());
+    }
+
+    #[test]
+    fn send_no_earlier_respects_idle_gaps() {
+        let mut ch = Channel::new(NetworkConfig::gigabit(
+            Protocol::Udp, 0.0, 2,
+        ));
+        ch.send_no_earlier(Dir::Up, 10_000, 0).unwrap();
+        let (s, _) = ch.send_no_earlier(Dir::Up, 10_000, 5_000_000).unwrap();
+        assert_eq!(s, 5_000_000, "idle direction starts at the request");
     }
 
     #[test]

@@ -32,6 +32,10 @@ pub struct UdpMessageResult {
     /// Time from hand-off until the last datagram's nominal arrival slot:
     /// the receiver's frame deadline. Independent of the saboteur.
     pub latency_ns: SimTime,
+    /// Sender-side occupancy: time from hand-off until the last datagram
+    /// clears the interface (serialization only — datagrams of the next
+    /// message can pipeline over this one's propagation delay).
+    pub tx_end_ns: SimTime,
     /// Byte ranges (offset, len) of the message that never arrived.
     pub lost_ranges: Vec<(u64, u32)>,
     pub stats: UdpMessageStats,
@@ -58,12 +62,14 @@ pub fn send_message(
     let mut stats = UdpMessageStats::default();
     let mut lost = Vec::new();
     let mut last_arrival = start;
+    let mut last_tx = start;
     for (offset, payload) in segment(len, cfg.max_payload) {
         let pkt = Packet::datagram(offset, payload, start);
         let out = link.send(start, pkt.wire_bytes());
         stats.datagrams_sent += 1;
         stats.wire_bytes += pkt.wire_bytes() as u64;
         last_arrival = last_arrival.max(out.arrival);
+        last_tx = last_tx.max(out.tx_done);
         if out.dropped {
             stats.datagrams_lost += 1;
             lost.push((offset, payload));
@@ -71,6 +77,7 @@ pub fn send_message(
     }
     UdpMessageResult {
         latency_ns: last_arrival - start,
+        tx_end_ns: last_tx - start,
         lost_ranges: lost,
         stats,
     }

@@ -6,6 +6,8 @@
 pub mod csv;
 pub mod figures;
 pub mod pareto;
+pub mod stats;
 
 pub use figures::{fig2_report, fig3_report, fig4_report};
 pub use pareto::pareto_frontier;
+pub use stats::percentile;

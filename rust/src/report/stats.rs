@@ -1,0 +1,82 @@
+//! Shared order statistics for report reduction.
+//!
+//! The single source of truth for percentile computation: every report
+//! (scenario, streaming, sweep) quotes the same *nearest-rank* percentile
+//! so p95/p99 columns are comparable across subsystems.
+
+/// Nearest-rank percentile of an **ascending-sorted** slice.
+///
+/// Returns the smallest element such that at least `q·n` of the values
+/// are `<=` it (rank `⌈q·n⌉`, 1-based), i.e. the classic nearest-rank
+/// definition. `q` is clamped to (0, 1]; an empty slice yields 0.
+///
+/// Note the subtle indexing: the naive `sorted[(n as f64 * q) as usize]`
+/// is *not* nearest-rank — for n = 20, q = 0.95 it indexes element 19
+/// (the maximum) instead of element 18 (the 19th value, below which 95%
+/// of the sample lies).
+pub fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let n = sorted.len();
+    let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+    sorted[rank - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(percentile(&[], 0.95), 0);
+    }
+
+    #[test]
+    fn nearest_rank_for_twenty_samples() {
+        // 1..=20: p95 is the 19th value (ceil(0.95*20) = 19), not the max.
+        let v: Vec<u64> = (1..=20).collect();
+        assert_eq!(percentile(&v, 0.95), 19);
+        assert_eq!(percentile(&v, 0.99), 20);
+        assert_eq!(percentile(&v, 0.50), 10);
+        assert_eq!(percentile(&v, 1.0), 20);
+    }
+
+    #[test]
+    fn single_sample() {
+        assert_eq!(percentile(&[7], 0.5), 7);
+        assert_eq!(percentile(&[7], 0.99), 7);
+    }
+
+    #[test]
+    fn rank_bounds_are_clamped() {
+        let v = [1, 2, 3];
+        assert_eq!(percentile(&v, 0.0), 1); // clamped to rank 1
+        assert_eq!(percentile(&v, 1.0), 3);
+    }
+
+    /// Property: the fraction of samples <= percentile(q) is >= q, and
+    /// the result is always an element of the input.
+    #[test]
+    fn prop_nearest_rank_contract() {
+        use crate::util::propcheck::{check, Config};
+        check("percentile_contract", Config::default(), |c| {
+            let n = c.sized_range(1, 200);
+            let mut v: Vec<u64> =
+                (0..n).map(|_| c.rng.below(1_000_000)).collect();
+            v.sort_unstable();
+            for &q in &[0.5, 0.9, 0.95, 0.99] {
+                let p = percentile(&v, q);
+                if !v.contains(&p) {
+                    return Err("not an element".into());
+                }
+                let frac = v.iter().filter(|&&x| x <= p).count() as f64
+                    / n as f64;
+                if frac + 1e-12 < q {
+                    return Err(format!("coverage {frac} < {q}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -50,7 +50,7 @@ fn scenario_reports_are_reproducible_across_backends() {
 
 #[test]
 fn suggestion_table_is_reproducible() {
-    let qos = QosRequirements::with_fps(20.0);
+    let qos = QosRequirements::with_fps(20.0).unwrap();
     let table = |_: usize| -> Vec<(String, f64, f64, bool)> {
         let engine = backend();
         let test = engine.dataset("test").unwrap();

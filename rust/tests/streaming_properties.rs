@@ -1,0 +1,338 @@
+//! Properties of the closed-loop streaming engine:
+//!
+//! 1. **Low-load equivalence** — with one client, batch size 1 and a
+//!    frame period longer than the pipeline latency, the closed-loop
+//!    engine reproduces the legacy open-loop per-frame latencies exactly
+//!    for UDP (any loss) and lossless TCP (the retained
+//!    `run_scenario_open_loop` / `simulate_latency_open_loop` reference),
+//!    so Fig. 3/4-style results at low load are unchanged. Under *lossy*
+//!    TCP the transfers themselves are still identical, but the closed
+//!    loop additionally counts the time a result waits for the channel to
+//!    drain the upstream ACK tail — time the open-loop accounting
+//!    silently dropped — so its per-frame latency is `>=` the legacy
+//!    value, with most frames exactly equal.
+//! 2. **Divergence under overload** — past the bottleneck the closed-loop
+//!    latency grows with queue depth while the open-loop model stays
+//!    flat: the timing bug this engine fixes is observable.
+//! 3. **Monotonicity** — per-frame latency is non-decreasing in offered
+//!    load at fixed capacity.
+//! 4. **Conservation** — frames in == frames out across random
+//!    configurations (no request lost in queues or batches).
+//! 5. **Saturation** — throughput plateaus at the bottleneck while
+//!    mean/p99 latency grow.
+
+use std::path::Path;
+
+use sei::coordinator::batcher::BatchPolicy;
+use sei::coordinator::scenario::{
+    run_scenario_open_loop, simulate_latency_open_loop,
+};
+use sei::coordinator::{
+    self, run_stream, ModelScale, QosRequirements, ScenarioConfig,
+    ScenarioKind, StreamConfig,
+};
+use sei::model::DeviceProfile;
+use sei::netsim::transfer::{NetworkConfig, Protocol};
+use sei::runtime::{load_backend, InferenceBackend};
+
+fn engine() -> Box<dyn InferenceBackend> {
+    load_backend(Path::new("artifacts")).expect("backend")
+}
+
+fn cfg(
+    kind: ScenarioKind,
+    proto: Protocol,
+    loss: f64,
+    scale: ModelScale,
+    period_ns: u64,
+) -> ScenarioConfig {
+    ScenarioConfig {
+        kind,
+        net: NetworkConfig::gigabit(proto, loss, 42),
+        edge: DeviceProfile::edge_gpu(),
+        server: DeviceProfile::server_gpu(),
+        scale,
+        frame_period_ns: period_ns,
+    }
+}
+
+#[test]
+fn closed_loop_matches_open_loop_at_low_load() {
+    let engine = engine();
+    let test = engine.dataset("test").unwrap();
+    let qos = QosRequirements::ice_lab();
+    let split = *engine.manifest().available_splits().last().unwrap();
+    for kind in [ScenarioKind::Lc, ScenarioKind::Rc,
+                 ScenarioKind::Sc { split }] {
+        for proto in [Protocol::Tcp, Protocol::Udp] {
+            for loss in [0.0, 0.05] {
+                let c = cfg(kind, proto, loss, ModelScale::Slim,
+                            50_000_000);
+                let closed = coordinator::run_scenario(
+                    &*engine, &c, &test, 32, &qos,
+                )
+                .unwrap();
+                let open = run_scenario_open_loop(
+                    &*engine, &c, &test, 32, &qos,
+                )
+                .unwrap();
+                assert_eq!(closed.frames, open.frames);
+                // The transfers themselves are identical in every case:
+                // accuracy, corruption, wire bytes and retransmits match
+                // frame by frame.
+                let mut equal_latency = 0usize;
+                for (i, (a, b)) in
+                    closed.records.iter().zip(&open.records).enumerate()
+                {
+                    assert_eq!(a.correct, b.correct);
+                    assert_eq!(a.wire_bytes, b.wire_bytes);
+                    assert_eq!(a.retransmits, b.retransmits);
+                    assert_eq!(a.corrupted, b.corrupted);
+                    if proto == Protocol::Udp || loss == 0.0 {
+                        // No ACK tail (UDP) or a fully predictable one
+                        // (lossless TCP): latencies must be *identical*.
+                        assert_eq!(
+                            a.latency_ns, b.latency_ns,
+                            "{kind} {proto} loss {loss} frame {i}"
+                        );
+                    } else {
+                        // Lossy TCP: the closed loop also counts the wait
+                        // for the channel to drain the upstream ACK tail,
+                        // which the open-loop accounting dropped.
+                        assert!(
+                            a.latency_ns >= b.latency_ns,
+                            "{kind} {proto} loss {loss} frame {i}: closed \
+                             {} < open {}",
+                            a.latency_ns, b.latency_ns
+                        );
+                    }
+                    if a.latency_ns == b.latency_ns {
+                        equal_latency += 1;
+                    }
+                }
+                assert!(
+                    equal_latency * 2 >= closed.frames,
+                    "{kind} {proto} loss {loss}: only {equal_latency}/{} \
+                     frames latency-identical",
+                    closed.frames
+                );
+                assert_eq!(closed.accuracy, open.accuracy);
+                assert_eq!(closed.total_retransmits, open.total_retransmits);
+            }
+        }
+    }
+}
+
+#[test]
+fn latency_only_matches_open_loop_at_low_load() {
+    let engine = engine();
+    let split = *engine.manifest().available_splits().last().unwrap();
+    for (kind, proto, loss) in [
+        (ScenarioKind::Lc, Protocol::Tcp, 0.0),
+        (ScenarioKind::Sc { split }, Protocol::Tcp, 0.0),
+        (ScenarioKind::Sc { split }, Protocol::Udp, 0.10),
+    ] {
+        let c = cfg(kind, proto, loss, ModelScale::Slim, 50_000_000);
+        let closed =
+            coordinator::simulate_latency(&*engine, &c, 48).unwrap();
+        let open = simulate_latency_open_loop(&*engine, &c, 48).unwrap();
+        assert_eq!(closed, open, "{kind} {proto} loss {loss}");
+    }
+    // Lossy TCP: identical transfers, but the closed loop also bills the
+    // ACK-tail wait the open loop dropped — per-frame >=, mostly equal.
+    let c = cfg(ScenarioKind::Sc { split }, Protocol::Tcp, 0.03,
+                ModelScale::Slim, 50_000_000);
+    let closed = coordinator::simulate_latency(&*engine, &c, 48).unwrap();
+    let open = simulate_latency_open_loop(&*engine, &c, 48).unwrap();
+    let mut equal = 0usize;
+    for (i, (a, b)) in closed.iter().zip(&open).enumerate() {
+        assert!(a >= b, "frame {i}: closed {a} < open {b}");
+        if a == b {
+            equal += 1;
+        }
+    }
+    assert!(equal * 2 >= closed.len(), "only {equal}/48 frames identical");
+    // The open-loop latency-only path charged RC frames a phantom edge
+    // pass (compute_ns(0) = the edge overhead); the unified closed-loop
+    // path does not. The difference is exactly that constant.
+    let c = cfg(ScenarioKind::Rc, Protocol::Udp, 0.0, ModelScale::Slim,
+                50_000_000);
+    let closed = coordinator::simulate_latency(&*engine, &c, 16).unwrap();
+    let open = simulate_latency_open_loop(&*engine, &c, 16).unwrap();
+    let overhead = DeviceProfile::edge_gpu().overhead_ns;
+    for (a, b) in closed.iter().zip(&open) {
+        assert_eq!(a + overhead, *b);
+    }
+}
+
+#[test]
+fn overload_diverges_from_open_loop() {
+    let engine = engine();
+    // Paper-scale RC input (~602 kB -> ~4.9 ms on the uplink) offered at
+    // 1000 FPS: far past the channel's capacity.
+    let c = cfg(ScenarioKind::Rc, Protocol::Udp, 0.0,
+                ModelScale::Vgg16Full, 1_000_000);
+    let closed = coordinator::simulate_latency(&*engine, &c, 64).unwrap();
+    let open = simulate_latency_open_loop(&*engine, &c, 64).unwrap();
+    let mean = |v: &[u64]| {
+        v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64
+    };
+    assert!(
+        mean(&closed) > 3.0 * mean(&open),
+        "queueing must show up in closed-loop latency: closed {} vs open {}",
+        mean(&closed),
+        mean(&open)
+    );
+    // The queue (and with it the latency) builds monotonically.
+    assert!(closed.last().unwrap() > closed.first().unwrap());
+    // The open-loop model is the bug: its latency stays flat regardless.
+    let spread = (*open.iter().max().unwrap() - *open.iter().min().unwrap())
+        as f64;
+    assert!(spread < 0.1 * mean(&open), "open loop stays flat: {open:?}");
+}
+
+#[test]
+fn per_frame_latency_monotone_in_offered_load() {
+    let engine = engine();
+    let qos = QosRequirements::none();
+    let ladder = [50.0f64, 100.0, 200.0, 400.0];
+    let mut prev: Option<Vec<u64>> = None;
+    let mut prev_mean = 0.0;
+    let mut prev_p99 = 0u64;
+    for &fps in &ladder {
+        let sc = StreamConfig {
+            scenario: cfg(ScenarioKind::Rc, Protocol::Udp, 0.0,
+                          ModelScale::Vgg16Full, (1e9 / fps) as u64),
+            clients: 1,
+            frames_per_client: 48,
+            batch: BatchPolicy::immediate(),
+        };
+        let r = run_stream(&*engine, &sc, None, &qos).unwrap();
+        let lats: Vec<u64> =
+            r.records.iter().map(|f| f.latency_ns).collect();
+        if let Some(lo) = &prev {
+            for (i, (&hi, &lo)) in lats.iter().zip(lo).enumerate() {
+                assert!(
+                    hi >= lo,
+                    "frame {i} latency decreased under higher load: \
+                     {hi} < {lo} at {fps} FPS"
+                );
+            }
+            assert!(r.mean_latency_ns >= prev_mean);
+            assert!(r.p99_latency_ns >= prev_p99);
+        }
+        prev_mean = r.mean_latency_ns;
+        prev_p99 = r.p99_latency_ns;
+        prev = Some(lats);
+    }
+}
+
+#[test]
+fn prop_no_frame_lost_across_queues_and_batches() {
+    use sei::util::propcheck::{check, Config};
+    let engine = engine();
+    let split = *engine.manifest().available_splits().last().unwrap();
+    check("stream_conservation", Config::default(), |c| {
+        let kind = *c.choice(&[
+            ScenarioKind::Lc,
+            ScenarioKind::Rc,
+            ScenarioKind::Sc { split },
+        ]);
+        let proto =
+            if c.bool() { Protocol::Tcp } else { Protocol::Udp };
+        let loss = c.f64(0.0, 0.2);
+        let clients = c.sized_range(1, 4) as usize;
+        let frames = c.sized_range(1, 16) as usize;
+        let period = if c.bool() {
+            0
+        } else {
+            c.rng.range_u64(10_000, 5_000_000)
+        };
+        let max_batch = c.sized_range(1, 8) as usize;
+        let wait = c.rng.range_u64(1, 2_000_000);
+        let sc = StreamConfig {
+            scenario: ScenarioConfig {
+                kind,
+                net: NetworkConfig::gigabit(
+                    proto, loss, c.rng.next_u64(),
+                ),
+                edge: DeviceProfile::edge_gpu(),
+                server: DeviceProfile::server_gpu(),
+                scale: ModelScale::Slim,
+                frame_period_ns: period,
+            },
+            clients,
+            frames_per_client: frames,
+            batch: BatchPolicy::new(max_batch, wait),
+        };
+        let r = run_stream(&*engine, &sc, None, &QosRequirements::none())
+            .map_err(|e| e.to_string())?;
+        if r.frames != clients * frames {
+            return Err(format!(
+                "lost frames: {} of {}",
+                r.frames,
+                clients * frames
+            ));
+        }
+        for f in &r.records {
+            if f.completed_ns < f.emitted_ns {
+                return Err("completed before emitted".into());
+            }
+            if f.latency_ns != f.completed_ns - f.emitted_ns {
+                return Err("latency bookkeeping broken".into());
+            }
+        }
+        let expects_uplink = kind != ScenarioKind::Lc;
+        let expected =
+            if expects_uplink { (clients * frames) as u64 } else { 0 };
+        if r.stats.batched_requests != expected {
+            return Err(format!(
+                "batcher saw {} requests, expected {expected}",
+                r.stats.batched_requests
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn throughput_plateaus_past_bottleneck() {
+    let engine = engine();
+    let qos = QosRequirements::ice_lab();
+    let run = |fps: f64| {
+        let sc = StreamConfig {
+            scenario: cfg(ScenarioKind::Rc, Protocol::Udp, 0.0,
+                          ModelScale::Vgg16Full, (1e9 / fps) as u64),
+            clients: 1,
+            frames_per_client: 64,
+            batch: BatchPolicy::immediate(),
+        };
+        run_stream(&*engine, &sc, None, &qos).unwrap()
+    };
+    let lo = run(50.0);
+    let mid = run(400.0);
+    let hi = run(800.0);
+    // Below capacity the system keeps up with the offered rate…
+    assert!(
+        (lo.stats.throughput_fps - 50.0).abs() < 5.0,
+        "under low load throughput tracks offered: {}",
+        lo.stats.throughput_fps
+    );
+    assert!(lo.deadline_hit_rate.unwrap() > 0.99);
+    // …past the bottleneck, throughput plateaus…
+    let rel = (hi.stats.throughput_fps - mid.stats.throughput_fps).abs()
+        / mid.stats.throughput_fps;
+    assert!(
+        rel < 0.05,
+        "throughput must plateau: {} vs {}",
+        mid.stats.throughput_fps,
+        hi.stats.throughput_fps
+    );
+    assert!(hi.stats.throughput_fps < 0.5 * 800.0);
+    // …and latency + queue depth grow instead.
+    assert!(hi.mean_latency_ns > 3.0 * lo.mean_latency_ns);
+    assert!(hi.p99_latency_ns > 3 * lo.p99_latency_ns);
+    assert!(hi.stats.mean_queue_depth > lo.stats.mean_queue_depth);
+    assert!(hi.deadline_hit_rate.unwrap() < lo.deadline_hit_rate.unwrap());
+    assert_eq!(hi.qos_satisfied, Some(false));
+}

@@ -104,6 +104,51 @@ fn latency_only_sweep_is_thread_count_invariant_too() {
 }
 
 #[test]
+fn streaming_axes_are_thread_count_invariant() {
+    // The new clients × offered_fps load axes (and the batched server
+    // behind them) must preserve the headline guarantee: byte-identical
+    // reports at every worker-thread count.
+    let mut spec = SweepSpec::new("streaming-determinism");
+    spec.scenarios = vec![ScenarioKind::Rc, ScenarioKind::Sc { split: 13 }];
+    spec.protocols = vec![Protocol::Tcp, Protocol::Udp];
+    spec.loss_rates = vec![0.0, 0.05];
+    spec.frames = 10;
+    spec.clients = vec![1, 3];
+    spec.offered_fps = vec![60.0, 240.0];
+    spec.max_batch = 4;
+    spec.batch_wait_us = 500.0;
+    spec.max_latency_ms = 50.0;
+    spec.min_hit_rate = 0.9;
+    let one = run_sweep(&spec, 1, &factory).unwrap();
+    let eight = run_sweep(&spec, 8, &factory).unwrap();
+    assert_eq!(one.points.len(), 2 * 2 * 2 * 2 * 2);
+    assert_eq!(
+        one.to_json().to_string(),
+        eight.to_json().to_string(),
+        "streaming sweep JSON must not depend on the thread count"
+    );
+    assert_eq!(one.to_csv().to_string(), eight.to_csv().to_string());
+    for p in &one.points {
+        assert!(p.throughput_fps > 0.0);
+        assert!(p.frames > 0);
+        assert!(p.deadline_hit_rate.is_some());
+    }
+    // Sanity on the load axes: achieved throughput can never meaningfully
+    // exceed the aggregate offered rate. (The stream duration spans
+    // frames-1 inter-arrival gaps, so the ratio is bounded by
+    // frames/(frames-1); use a safely larger margin.)
+    for p in &one.points {
+        let offered_agg = p.offered_fps.unwrap() * p.clients as f64;
+        assert!(
+            p.throughput_fps <= offered_agg * 1.25,
+            "throughput {} cannot exceed offered {}",
+            p.throughput_fps,
+            offered_agg
+        );
+    }
+}
+
+#[test]
 fn spec_roundtrips_through_json_with_identical_results() {
     let spec = grid_spec();
     let reparsed = SweepSpec::from_json(&spec.to_json().to_string()).unwrap();
