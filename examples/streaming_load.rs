@@ -17,7 +17,7 @@ use sei::coordinator::{
     run_sweep, ModelScale, ScenarioKind, SweepMode, SweepSpec,
 };
 use sei::netsim::transfer::Protocol;
-use sei::runtime::load_backend;
+use sei::runtime::load_backend_for;
 
 fn main() -> anyhow::Result<()> {
     let threads = match std::env::args().nth(1) {
@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     spec.scenarios = vec![ScenarioKind::Sc { split: 11 }];
     spec.protocols = vec![Protocol::Tcp];
     spec.loss_rates = vec![0.0];
-    spec.scales = vec![ModelScale::Vgg16Full];
+    spec.scales = vec![ModelScale::Full];
     spec.clients = vec![1, 4];
     spec.offered_fps = vec![10.0, 20.0, 40.0, 80.0, 160.0];
     spec.frames = 120;
@@ -51,8 +51,8 @@ fn main() -> anyhow::Result<()> {
         spec.frames
     );
 
-    let report = run_sweep(&spec, threads, &|| {
-        load_backend(Path::new("artifacts"))
+    let report = run_sweep(&spec, threads, &|arch| {
+        load_backend_for(Path::new("artifacts"), arch)
     })?;
 
     for (ci, &clients) in spec.clients.iter().enumerate() {

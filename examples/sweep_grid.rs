@@ -10,7 +10,7 @@
 use std::path::Path;
 
 use sei::coordinator::{run_sweep, SweepSpec};
-use sei::runtime::load_backend;
+use sei::runtime::load_backend_for;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -41,8 +41,9 @@ fn main() -> anyhow::Result<()> {
     );
 
     let t0 = std::time::Instant::now();
-    let report =
-        run_sweep(&spec, threads, &|| load_backend(Path::new("artifacts")))?;
+    let report = run_sweep(&spec, threads, &|arch| {
+        load_backend_for(Path::new("artifacts"), arch)
+    })?;
     print!("{}", report.render());
     println!("\nswept {jobs} points in {:.2}s", t0.elapsed().as_secs_f64());
 

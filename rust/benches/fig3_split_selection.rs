@@ -12,24 +12,37 @@
 //! ≈ 201 kB/frame. Expected shape (paper Sec. V-B): L15 satisfies the
 //! constraint at every loss rate; L11 violates it beyond a few percent.
 //! Writes reports/fig3.txt and reports/fig3.csv.
+//!
+//! A second, smaller grid sweeps the **architecture axis** (VGG16,
+//! ResNet-18, MobileNetV2 at the shared cut id 5, paper scale) and — when
+//! `SEI_BENCH_JSON` is set — merges the per-arch rows into that file
+//! (e.g. CI's `BENCH_netsim.json`) under the `fig3_arch` key, so the perf
+//! trajectory tracks all three architectures. `SEI_BENCH_QUICK=1` shrinks
+//! frames/seeds for the CI smoke.
 
 use std::path::Path;
 
 use sei::coordinator::{
     run_sweep, ModelScale, ScenarioKind, SweepMode, SweepSpec,
 };
+use sei::model::Arch;
 use sei::netsim::transfer::Protocol;
 use sei::report::csv::Csv;
 use sei::report::fig3_report;
-use sei::runtime::load_backend;
+use sei::runtime::load_backend_for;
+use sei::util::json::{self, Json};
 
 const CONSTRAINT_S: f64 = 0.05; // 20 FPS conveyor belt
-const FRAMES: usize = 400;
-const SEEDS: usize = 5;
 
 fn main() {
-    let loss_rates: Vec<f64> =
-        vec![0.0, 0.01, 0.02, 0.03, 0.04, 0.05, 0.06, 0.08, 0.10];
+    let quick = std::env::var("SEI_BENCH_QUICK").is_ok();
+    let frames: usize = if quick { 60 } else { 400 };
+    let seeds: usize = if quick { 2 } else { 5 };
+    let loss_rates: Vec<f64> = if quick {
+        vec![0.0, 0.02, 0.05, 0.10]
+    } else {
+        vec![0.0, 0.01, 0.02, 0.03, 0.04, 0.05, 0.06, 0.08, 0.10]
+    };
     let splits = [11usize, 15];
 
     let mut spec = SweepSpec::new("fig3_split_selection");
@@ -40,9 +53,9 @@ fn main() {
         .collect();
     spec.protocols = vec![Protocol::Tcp];
     spec.loss_rates = loss_rates.clone();
-    spec.scales = vec![ModelScale::Vgg16Full];
-    spec.frames = FRAMES;
-    spec.seeds_per_point = SEEDS;
+    spec.scales = vec![ModelScale::Full];
+    spec.frames = frames;
+    spec.seeds_per_point = seeds;
     spec.seed = 1000;
     spec.frame_period_ns = 50_000_000;
     spec.max_latency_ms = CONSTRAINT_S * 1e3;
@@ -54,13 +67,13 @@ fn main() {
     println!("=== Fig. 3: split-point selection under packet loss ===");
     println!(
         "channel: 1 Gb/s full-duplex TCP, 100 µs; constraint {CONSTRAINT_S} s \
-         (20 FPS); {FRAMES} frames x {SEEDS} seeds per point; \
+         (20 FPS); {frames} frames x {seeds} seeds per point; \
          sweep engine on {threads} thread(s)\n"
     );
 
     let t0 = std::time::Instant::now();
-    let sweep = run_sweep(&spec, threads, &|| {
-        load_backend(Path::new("artifacts"))
+    let sweep = run_sweep(&spec, threads, &|arch| {
+        load_backend_for(Path::new("artifacts"), arch)
     })
     .expect("sweep");
     let wall = t0.elapsed().as_secs_f64();
@@ -124,8 +137,80 @@ fn main() {
     let points = loss_rates.len() * splits.len();
     println!(
         "\nwrote reports/fig3.csv, reports/fig3.txt — {points} points x \
-         {FRAMES} frames x {SEEDS} seeds in {wall:.1}s on {threads} \
+         {frames} frames x {seeds} seeds in {wall:.1}s on {threads} \
          thread(s) ({:.0} simulated frames/s)",
-        (points * FRAMES * SEEDS) as f64 / wall
+        (points * frames * seeds) as f64 / wall
     );
+
+    // -- architecture axis: the same split-selection question across the
+    //    zoo, at the shared cut id 5, paper-scale volumetrics. ------------
+    let mut arch_spec = SweepSpec::new("fig3_arch_axis");
+    arch_spec.mode = SweepMode::LatencyOnly;
+    arch_spec.scenarios = vec![ScenarioKind::Sc { split: 5 }];
+    arch_spec.protocols = vec![Protocol::Tcp];
+    arch_spec.loss_rates = vec![0.0, 0.05];
+    arch_spec.scales = vec![ModelScale::Full];
+    arch_spec.archs =
+        vec![Arch::Vgg16, Arch::ResNet18, Arch::MobileNetV2];
+    arch_spec.frames = frames.min(120);
+    arch_spec.seeds_per_point = seeds.min(2);
+    arch_spec.seed = 1000;
+    arch_spec.frame_period_ns = 50_000_000;
+    arch_spec.max_latency_ms = CONSTRAINT_S * 1e3;
+    let arch_sweep = run_sweep(&arch_spec, threads, &|arch| {
+        load_backend_for(Path::new("artifacts"), arch)
+    })
+    .expect("arch sweep");
+    println!("\nper-arch SC@5 latency (paper scale, TCP):");
+    let mut arch_rows = Vec::new();
+    for p in &arch_sweep.points {
+        println!(
+            "  {:<12} loss {:>4.1}%  mean {:>8.2} ms  p95 {:>8.2} ms",
+            p.arch.as_str(),
+            p.loss * 100.0,
+            p.mean_latency_ns / 1e6,
+            p.p95_latency_ns as f64 / 1e6,
+        );
+        arch_rows.push(json::obj(vec![
+            ("arch", json::s(p.arch.as_str())),
+            ("split", json::num(5.0)),
+            ("loss", json::num(p.loss)),
+            ("mean_latency_ms", json::num(p.mean_latency_ns / 1e6)),
+            (
+                "p95_latency_ms",
+                json::num(p.p95_latency_ns as f64 / 1e6),
+            ),
+            (
+                "deadline_hit_rate",
+                p.deadline_hit_rate.map(json::num).unwrap_or(Json::Null),
+            ),
+        ]));
+    }
+
+    // Merge the per-arch rows into the shared perf-trajectory file (CI
+    // points SEI_BENCH_JSON at BENCH_netsim.json, which netsim_micro has
+    // already written — read-modify-write keeps its sections). A file
+    // that exists but does not parse as a JSON object is left untouched:
+    // clobbering the whole trajectory on a parse error would silently
+    // lose every other bench's sections.
+    if let Ok(path) = std::env::var("SEI_BENCH_JSON") {
+        let mut doc = match std::fs::read_to_string(&path) {
+            Ok(text) => match Json::parse(&text) {
+                Ok(doc @ Json::Obj(_)) => doc,
+                _ => {
+                    eprintln!(
+                        "SEI_BENCH_JSON {path}: not a JSON object — \
+                         leaving the file untouched"
+                    );
+                    return;
+                }
+            },
+            Err(_) => json::obj(vec![]), // no file yet: start fresh
+        };
+        if let Json::Obj(map) = &mut doc {
+            map.insert("fig3_arch".to_string(), json::arr(arch_rows));
+        }
+        std::fs::write(&path, doc.to_string()).unwrap();
+        println!("\nmerged per-arch rows into {path} (key: fig3_arch)");
+    }
 }

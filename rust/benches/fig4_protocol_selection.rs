@@ -18,7 +18,7 @@ use sei::coordinator::{
 use sei::netsim::transfer::Protocol;
 use sei::report::csv::Csv;
 use sei::report::fig4_report;
-use sei::runtime::load_backend;
+use sei::runtime::load_backend_for;
 
 const ACC_FRAMES: usize = 192;
 const LAT_FRAMES: usize = 300;
@@ -40,7 +40,7 @@ fn main() {
     let mut lat_spec = acc_spec.clone();
     lat_spec.name = "fig4_latency".to_string();
     lat_spec.mode = SweepMode::LatencyOnly;
-    lat_spec.scales = vec![ModelScale::Vgg16Full];
+    lat_spec.scales = vec![ModelScale::Full];
     lat_spec.frames = LAT_FRAMES;
     lat_spec.seed = 777;
 
@@ -55,7 +55,8 @@ fn main() {
          thread(s)\n"
     );
 
-    let factory = || load_backend(Path::new("artifacts"));
+    let factory =
+        |arch| load_backend_for(Path::new("artifacts"), arch);
     let t0 = std::time::Instant::now();
     let acc_sweep = run_sweep(&acc_spec, threads, &factory).expect("sweep");
     let lat_sweep = run_sweep(&lat_spec, threads, &factory).expect("sweep");

@@ -56,7 +56,7 @@ fn main() {
                 net: NetworkConfig::gigabit(Protocol::Udp, 0.0, 7),
                 edge: DeviceProfile::edge_gpu(),
                 server: DeviceProfile::server_gpu(),
-                scale: ModelScale::Vgg16Full,
+                scale: ModelScale::Full,
                 frame_period_ns: (1e9 / fps) as u64,
             },
             clients,

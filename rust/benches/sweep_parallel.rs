@@ -13,7 +13,7 @@ use sei::coordinator::{
     run_sweep, ScenarioKind, SweepMode, SweepSpec,
 };
 use sei::netsim::transfer::Protocol;
-use sei::runtime::load_backend;
+use sei::runtime::load_backend_for;
 use sei::util::json::{self, Json};
 
 fn main() {
@@ -55,7 +55,8 @@ fn main() {
         if quick { " (quick)" } else { "" }
     );
 
-    let factory = || load_backend(Path::new("artifacts"));
+    let factory =
+        |arch| load_backend_for(Path::new("artifacts"), arch);
     let mut results: Vec<(usize, f64, f64)> = Vec::new(); // (threads, s, x)
     let mut baseline_json = String::new();
     let mut baseline_s = 0.0f64;

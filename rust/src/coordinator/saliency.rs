@@ -15,12 +15,14 @@ use anyhow::Result;
 use crate::data::Dataset;
 use crate::runtime::{Executable, InferenceBackend, Manifest, RtInput};
 
-/// A cumulative-saliency curve over the 18 feature layers.
+/// A cumulative-saliency curve over an architecture's split-point
+/// candidates (the 18 VGG feature layers of the paper's Fig. 2, block
+/// boundaries for ResNet/MobileNet — see `model::cut::split_points`).
 #[derive(Clone, Debug)]
 pub struct CsCurve {
     /// Raw CS^i values (layer-normalized, see python/compile/saliency.py).
     pub raw: Vec<f64>,
-    /// Which feature layer each entry corresponds to.
+    /// Which split-point (cut id) each entry corresponds to.
     pub layers: Vec<usize>,
 }
 

@@ -81,31 +81,36 @@ impl std::fmt::Display for ScenarioKind {
     }
 }
 
-/// Which model's volumetrics/compute drive the simulation.
+/// Which model scale's volumetrics/compute drive the simulation. The
+/// *architecture* is a separate axis, taken from the backend manifest
+/// ([`crate::runtime::Manifest::arch`]); the scale picks between that
+/// arch's trained slim geometry and its paper-scale (224x224, 1000-class)
+/// network.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ModelScale {
     /// The actual trained slim model (end-to-end serving).
     Slim,
-    /// The paper's VGG16 at 224x224 (Fig. 3/4 transfer sizes and compute);
-    /// accuracy is still measured on the slim artifacts with the same
-    /// loss fraction (corruption is scaled proportionally).
-    Vgg16Full,
+    /// The arch's paper-scale network at 224x224 (Fig. 3/4 transfer sizes
+    /// and compute); accuracy is still measured on the slim artifacts with
+    /// the same loss fraction (corruption is scaled proportionally).
+    Full,
 }
 
 impl ModelScale {
-    /// Parse `"slim" | "vgg16"` (case-insensitive).
+    /// Parse `"slim" | "full"` (case-insensitive; the historical
+    /// `"vgg16"` spelling is accepted as an alias for `full`).
     pub fn parse(s: &str) -> Result<ModelScale> {
         match s.to_ascii_lowercase().as_str() {
             "slim" => Ok(ModelScale::Slim),
-            "vgg16" | "vgg16-full" => Ok(ModelScale::Vgg16Full),
-            other => bail!("unknown model scale '{other}' (slim | vgg16)"),
+            "full" | "vgg16" | "vgg16-full" => Ok(ModelScale::Full),
+            other => bail!("unknown model scale '{other}' (slim | full)"),
         }
     }
 
     pub fn as_str(&self) -> &'static str {
         match self {
             ModelScale::Slim => "slim",
-            ModelScale::Vgg16Full => "vgg16",
+            ModelScale::Full => "full",
         }
     }
 }
@@ -216,9 +221,23 @@ pub(crate) struct Costs {
     pub(crate) server_mult_adds: u64,
 }
 
-fn slim_network(engine: &dyn InferenceBackend) -> Network {
+/// The network whose volumetrics/compute drive a scenario: the backend
+/// manifest names the architecture, the config picks the scale.
+pub(crate) fn scenario_network(
+    engine: &dyn InferenceBackend,
+    scale: ModelScale,
+) -> Network {
     let m = &engine.manifest().model;
-    model::vgg16_slim(m.img_size, m.width_mult, m.hidden, m.num_classes)
+    let arch = engine.manifest().arch();
+    match scale {
+        ModelScale::Slim => arch.slim_network(
+            m.img_size,
+            m.width_mult,
+            m.hidden,
+            m.num_classes,
+        ),
+        ModelScale::Full => arch.full_network(),
+    }
 }
 
 pub(crate) fn costs(engine: &dyn InferenceBackend, cfg: &ScenarioConfig)
@@ -226,28 +245,25 @@ pub(crate) fn costs(engine: &dyn InferenceBackend, cfg: &ScenarioConfig)
 {
     let m = &engine.manifest().model;
     let down_bytes = (m.num_classes * 4) as u64;
-    let (net, input_bytes): (Network, u64) = match cfg.scale {
+    let net = scenario_network(engine, cfg.scale);
+    let input_bytes: u64 = match cfg.scale {
         // Slim-scale input volume comes from the manifest's input tensor
         // description, not a hard-coded dense-RGB-f32 assumption.
-        ModelScale::Slim => (
-            slim_network(engine),
-            engine.manifest().input_bytes_per_frame(),
-        ),
-        ModelScale::Vgg16Full => {
-            (model::vgg16_full(), (3 * 224 * 224 * 4) as u64)
-        }
+        ModelScale::Slim => engine.manifest().input_bytes_per_frame(),
+        ModelScale::Full => net.input.bytes_f32() as u64,
     };
     Ok(match cfg.kind {
         ScenarioKind::Lc => {
             // Lightweight local model: measured lite model at slim scale;
             // at paper scale, assume a quarter-width VGG16 (MobileNet-class
-            // MACs).
+            // MACs). The lite model is arch-independent — it is the same
+            // tiny CNN whatever the server-side architecture.
             let lite_ma = match cfg.scale {
                 ModelScale::Slim => {
                     model::vgg16_slim(m.img_size, 0.0625, 48, m.num_classes)
                         .mult_adds()
                 }
-                ModelScale::Vgg16Full => {
+                ModelScale::Full => {
                     model::vgg16_slim(224, 0.25, 4096, 1000).mult_adds()
                 }
             };
@@ -265,13 +281,24 @@ pub(crate) fn costs(engine: &dyn InferenceBackend, cfg: &ScenarioConfig)
             server_mult_adds: net.mult_adds(),
         },
         ScenarioKind::Sc { split } => {
-            if split >= model::NUM_FEATURE_LAYERS - 1 {
-                bail!("split layer {split} out of range");
+            // DAG cut semantics: the split id indexes the arch's marked
+            // split points; every one is a valid single-tensor frontier
+            // (residual interiors never appear), and the crossing
+            // tensor's bottleneck latent is what the netsim transfers.
+            let cuts = model::split_points(&net);
+            if split >= cuts.len() - 1 {
+                bail!(
+                    "split {split} out of range: {} has {} cut points \
+                     (valid: 0..={})",
+                    net.name,
+                    cuts.len(),
+                    cuts.len() - 2
+                );
             }
-            let feats = model::feature_layers(&net);
-            let (head_ma, tail_ma) = model::split_compute(&net, split);
+            let cut = &cuts[split];
+            let (head_ma, tail_ma) = cut.split_compute();
             Costs {
-                up_bytes: feats[split].latent_bytes(),
+                up_bytes: cut.latent_bytes(),
                 down_bytes,
                 edge_mult_adds: head_ma,
                 server_mult_adds: tail_ma,
@@ -525,10 +552,12 @@ mod tests {
 
     #[test]
     fn scale_parse_roundtrips_as_str() {
-        for scale in [ModelScale::Slim, ModelScale::Vgg16Full] {
+        for scale in [ModelScale::Slim, ModelScale::Full] {
             assert_eq!(ModelScale::parse(scale.as_str()).unwrap(), scale);
         }
-        assert!(ModelScale::parse("resnet").is_err());
+        // Historical alias still accepted; arch names are not scales.
+        assert_eq!(ModelScale::parse("vgg16").unwrap(), ModelScale::Full);
+        assert!(ModelScale::parse("resnet18").is_err());
     }
 
     #[test]

@@ -21,6 +21,10 @@ use crate::runtime::InferenceBackend;
 #[derive(Clone, Debug)]
 pub struct RankedConfig {
     pub kind: ScenarioKind,
+    /// For SC candidates: the name of the graph cut the split id denotes
+    /// (e.g. `block4_conv2` for VGG16, `layer2.1` for ResNet-18) — split
+    /// ids are arch-relative, the name is what the engineer reads.
+    pub cut_name: Option<String>,
     /// Accuracy predictor: measured split-eval accuracy from the manifest
     /// for SC; base/lite accuracy for RC/LC.
     pub predicted_accuracy: f64,
@@ -48,7 +52,8 @@ pub fn rank_configurations(engine: &dyn InferenceBackend, min_layer: usize)
     let available = m.available_splits();
     let mut out = Vec::new();
 
-    // SC candidates: CS local maxima that have exported artifacts.
+    // SC candidates: CS local maxima (cut ids of the manifest's arch)
+    // that have exported artifacts.
     for cand in curve.candidates(min_layer) {
         if !available.contains(&cand) {
             continue;
@@ -63,6 +68,7 @@ pub fn rank_configurations(engine: &dyn InferenceBackend, min_layer: usize)
             .unwrap_or(0);
         out.push(RankedConfig {
             kind: ScenarioKind::Sc { split: cand },
+            cut_name: m.model.layer_names.get(cand).cloned(),
             predicted_accuracy: acc,
             up_bytes: up,
             cs_value: norm.get(cand).copied(),
@@ -72,12 +78,14 @@ pub fn rank_configurations(engine: &dyn InferenceBackend, min_layer: usize)
     // description (shape × dtype), not a dense-RGB-f32 assumption.
     out.push(RankedConfig {
         kind: ScenarioKind::Rc,
+        cut_name: None,
         predicted_accuracy: m.model.base_test_accuracy,
         up_bytes: m.input_bytes_per_frame(),
         cs_value: None,
     });
     out.push(RankedConfig {
         kind: ScenarioKind::Lc,
+        cut_name: None,
         predicted_accuracy: lite_accuracy(engine),
         up_bytes: 0,
         cs_value: None,
@@ -187,6 +195,7 @@ mod tests {
         Suggestion {
             rank: RankedConfig {
                 kind: ScenarioKind::Rc,
+                cut_name: None,
                 predicted_accuracy: acc,
                 up_bytes: 0,
                 cs_value: None,

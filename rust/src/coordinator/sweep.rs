@@ -44,6 +44,7 @@
 //! assert_eq!(jobs[0].index, 0);
 //! ```
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -56,7 +57,7 @@ use super::scenario::{
 };
 use super::streaming::{pooled_stream, StreamConfig};
 use crate::data::Dataset;
-use crate::model::DeviceProfile;
+use crate::model::{Arch, DeviceProfile};
 use crate::netsim::event::SimTime;
 use crate::netsim::transfer::{NetworkConfig, Protocol};
 use crate::report::csv::Csv;
@@ -114,6 +115,9 @@ pub struct SweepSpec {
     pub latencies_us: Vec<f64>,
     pub loss_rates: Vec<f64>,
     pub scales: Vec<ModelScale>,
+    /// Architectures under test; each grid point runs against a backend
+    /// serving that arch (split ids are arch-relative cut indices).
+    pub archs: Vec<Arch>,
     /// Concurrent client streams sharing channel + server per point.
     pub clients: Vec<usize>,
     /// Per-client offered frame rates; empty = one point driven by
@@ -154,6 +158,7 @@ pub struct SweepJob {
     pub latency_us: Option<f64>,
     pub loss: f64,
     pub scale: ModelScale,
+    pub arch: Arch,
     pub clients: usize,
     /// Per-client offered rate; `None` = use the spec's `frame_period_ns`.
     pub offered_fps: Option<f64>,
@@ -189,6 +194,7 @@ impl SweepSpec {
             latencies_us: Vec::new(),
             loss_rates: vec![0.0],
             scales: vec![ModelScale::Slim],
+            archs: vec![Arch::Vgg16],
             clients: vec![1],
             offered_fps: Vec::new(),
             edge: "edge-gpu".to_string(),
@@ -226,10 +232,10 @@ impl SweepSpec {
     }
 
     /// Expand the grid into its ordered job list. Axis order (outermost
-    /// first): scenario, protocol, channel, latency, loss, scale, clients,
-    /// offered_fps — so a caller can index `jobs` arithmetically; the new
-    /// innermost load axes default to a single value, preserving the
-    /// stride of older specs.
+    /// first): scenario, protocol, channel, latency, loss, scale, arch,
+    /// clients, offered_fps — so a caller can index `jobs` arithmetically;
+    /// newer inner axes (arch, load) default to a single value, preserving
+    /// the stride of older specs.
     pub fn expand(&self) -> Result<Vec<SweepJob>> {
         if self.scenarios.is_empty() {
             bail!("sweep spec '{}' has no scenarios", self.name);
@@ -245,6 +251,9 @@ impl SweepSpec {
         }
         if self.scales.is_empty() {
             bail!("sweep spec '{}' has no scales", self.name);
+        }
+        if self.archs.is_empty() {
+            bail!("sweep spec '{}' has no archs", self.name);
         }
         if self.frames == 0 {
             bail!("sweep spec '{}' needs frames >= 1", self.name);
@@ -335,19 +344,22 @@ impl SweepSpec {
                     for &latency_us in &lats {
                         for &loss in &self.loss_rates {
                             for &scale in &self.scales {
-                                for &clients in &self.clients {
-                                    for &offered_fps in &rates {
-                                        jobs.push(SweepJob {
-                                            index: jobs.len(),
-                                            kind,
-                                            protocol,
-                                            channel: channel.clone(),
-                                            latency_us,
-                                            loss,
-                                            scale,
-                                            clients,
-                                            offered_fps,
-                                        });
+                                for &arch in &self.archs {
+                                    for &clients in &self.clients {
+                                        for &offered_fps in &rates {
+                                            jobs.push(SweepJob {
+                                                index: jobs.len(),
+                                                kind,
+                                                protocol,
+                                                channel: channel.clone(),
+                                                latency_us,
+                                                loss,
+                                                scale,
+                                                arch,
+                                                clients,
+                                                offered_fps,
+                                            });
+                                        }
                                     }
                                 }
                             }
@@ -363,9 +375,9 @@ impl SweepSpec {
     /// the schema). The grid is validated eagerly, so an invalid spec
     /// fails here rather than inside a worker thread.
     pub fn from_json(text: &str) -> Result<SweepSpec> {
-        const KEYS: [&str; 23] = [
+        const KEYS: [&str; 24] = [
             "name", "mode", "scenarios", "protocols", "channels",
-            "latencies_us", "loss_rates", "scales", "clients",
+            "latencies_us", "loss_rates", "scales", "archs", "clients",
             "offered_fps", "edge", "server", "dataset", "frames",
             "seeds_per_point", "seed", "fps", "frame_period_ns",
             "max_latency_ms", "min_accuracy", "min_hit_rate", "max_batch",
@@ -408,6 +420,13 @@ impl SweepSpec {
                 .str_vec()?
                 .iter()
                 .map(|s| ModelScale::parse(s))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = j.opt("archs") {
+            spec.archs = v
+                .str_vec()?
+                .iter()
+                .map(|s| Arch::parse(s))
                 .collect::<Result<_>>()?;
         }
         if let Some(v) = j.opt("clients") {
@@ -529,6 +548,12 @@ impl SweepSpec {
                 ),
             ),
             (
+                "archs",
+                json::arr(
+                    self.archs.iter().map(|a| json::s(a.as_str())).collect(),
+                ),
+            ),
+            (
                 "clients",
                 json::arr(
                     self.clients
@@ -569,6 +594,8 @@ pub struct SweepPoint {
     pub latency_us: Option<f64>,
     pub loss: f64,
     pub scale: ModelScale,
+    /// Architecture under test at this point.
+    pub arch: Arch,
     /// Concurrent client streams at this point.
     pub clients: usize,
     /// Per-client offered rate; `None` = spec `frame_period_ns` drove it.
@@ -618,10 +645,11 @@ pub fn pooled_scenario(
     Ok(ScenarioReport::from_records(cfg, records, qos))
 }
 
-/// Execute one expanded job on `engine`. Deterministic in `(spec, job)`
-/// alone: the channel seeds are `spec.seed + s`, never thread state.
-/// Both modes ride the closed-loop streaming engine; latency-only mode
-/// simply skips model execution (`dataset: None`).
+/// Execute one expanded job on `engine` — which must serve `job.arch`
+/// (the caller's per-arch backend cache guarantees it). Deterministic in
+/// `(spec, job)` alone: the channel seeds are `spec.seed + s`, never
+/// thread state. Both modes ride the closed-loop streaming engine;
+/// latency-only mode simply skips model execution (`dataset: None`).
 fn run_job(
     engine: &dyn InferenceBackend,
     dataset: Option<&Dataset>,
@@ -674,6 +702,7 @@ fn run_job(
         latency_us: job.latency_us,
         loss: job.loss,
         scale: job.scale,
+        arch: job.arch,
         clients: job.clients,
         offered_fps: job.offered_fps,
         frames: r.frames,
@@ -776,6 +805,7 @@ impl SweepReport {
             "latency_us",
             "loss",
             "scale",
+            "arch",
             "clients",
             "offered_fps",
             "frames",
@@ -800,6 +830,7 @@ impl SweepReport {
                 p.latency_us.map(|v| format!("{v}")).unwrap_or_default(),
                 format!("{}", p.loss),
                 p.scale.as_str().to_string(),
+                p.arch.as_str().to_string(),
                 p.clients.to_string(),
                 p.offered_fps.map(|v| format!("{v}")).unwrap_or_default(),
                 p.frames.to_string(),
@@ -846,6 +877,7 @@ impl SweepReport {
                     format!("{} {}", p.protocol, p.channel),
                     format!("{:.1}%", p.loss * 100.0),
                     p.scale.as_str().to_string(),
+                    p.arch.as_str().to_string(),
                     match p.offered_fps {
                         Some(f) => format!("{}x{:.0}", p.clients, f),
                         None => format!("{}x—", p.clients),
@@ -869,8 +901,9 @@ impl SweepReport {
             .collect();
         out.push_str(&table::render(
             &[
-                "#", "scenario", "transport", "loss", "scale", "load",
-                "accuracy", "mean lat", "p99 lat", "thru", "QoS", "Pareto",
+                "#", "scenario", "transport", "loss", "scale", "arch",
+                "load", "accuracy", "mean lat", "p99 lat", "thru", "QoS",
+                "Pareto",
             ],
             &rows,
         ));
@@ -881,10 +914,11 @@ impl SweepReport {
             for &i in &self.pareto {
                 let p = &self.points[i];
                 out.push_str(&format!(
-                    "  #{:<3} {:<8} {:<4} loss {:>4.1}%  acc {:>5.1}%  \
-                     mean {:>8.2} ms\n",
+                    "  #{:<3} {:<8} {:<11} {:<4} loss {:>4.1}%  \
+                     acc {:>5.1}%  mean {:>8.2} ms\n",
                     p.index,
                     p.kind.to_string(),
+                    p.arch.as_str(),
                     p.protocol.to_string(),
                     p.loss * 100.0,
                     p.accuracy.unwrap_or(f64::NAN) * 100.0,
@@ -914,6 +948,7 @@ fn point_json(p: &SweepPoint) -> Json {
         ),
         ("loss", json::num(p.loss)),
         ("scale", json::s(p.scale.as_str())),
+        ("arch", json::s(p.arch.as_str())),
         ("clients", json::num(p.clients as f64)),
         (
             "offered_fps",
@@ -941,11 +976,13 @@ fn point_json(p: &SweepPoint) -> Json {
     ])
 }
 
-/// A thread-safe constructor for per-worker inference backends. Backends
-/// themselves are deliberately *not* shared across threads (their caches
-/// are `Rc`-based); each worker opens its own.
+/// A thread-safe constructor for per-worker, per-architecture inference
+/// backends. Backends themselves are deliberately *not* shared across
+/// threads (their caches are `Rc`-based); each worker opens its own, one
+/// per architecture its jobs touch (workers cache them, so a factory is
+/// called at most `archs × workers` times per sweep).
 pub type BackendFactory<'a> =
-    dyn Fn() -> Result<Box<dyn InferenceBackend>> + Sync + 'a;
+    dyn Fn(Arch) -> Result<Box<dyn InferenceBackend>> + Sync + 'a;
 
 fn load_dataset(
     engine: &dyn InferenceBackend,
@@ -971,19 +1008,21 @@ fn record_failure(
 
 /// Expand `spec` and execute every grid point on a pool of `threads`
 /// workers (clamped to the job count; `<= 1` runs inline). Workers pull
-/// jobs from a shared counter and store results by job index, so the
-/// returned [`SweepReport`] is identical — byte-for-byte in its JSON/CSV
-/// forms — for every thread count.
+/// jobs from a shared counter, open one backend per architecture they
+/// encounter, and store results by job index — so the returned
+/// [`SweepReport`] is identical — byte-for-byte in its JSON/CSV forms —
+/// for every thread count.
 ///
 /// ```
 /// use std::path::Path;
 /// use sei::coordinator::sweep::{run_sweep, SweepSpec};
-/// use sei::runtime::load_backend;
+/// use sei::runtime::load_backend_for;
 ///
 /// let mut spec = SweepSpec::new("doc-run");
 /// spec.loss_rates = vec![0.0, 0.08];
 /// spec.frames = 4;
-/// let factory = || load_backend(Path::new("artifacts"));
+/// let factory =
+///     |arch| load_backend_for(Path::new("artifacts"), arch);
 /// let one = run_sweep(&spec, 1, &factory).unwrap();
 /// let many = run_sweep(&spec, 2, &factory).unwrap();
 /// assert_eq!(one.to_json().to_string(), many.to_json().to_string());
@@ -996,11 +1035,22 @@ pub fn run_sweep(
     let jobs = spec.expand()?;
     let threads = threads.clamp(1, jobs.len().max(1));
     if threads <= 1 {
-        let engine = factory()?;
-        let dataset = load_dataset(&*engine, spec)?;
+        let mut engines: HashMap<Arch, Box<dyn InferenceBackend>> =
+            HashMap::new();
+        // The synthetic datasets are arch-independent (asserted by the
+        // analytic backend's tests), so the first engine's dataset serves
+        // every grid point.
+        let mut dataset: Option<Dataset> = None;
         let mut points = Vec::with_capacity(jobs.len());
         for job in &jobs {
-            points.push(run_job(&*engine, dataset.as_ref(), spec, job)?);
+            if !engines.contains_key(&job.arch) {
+                engines.insert(job.arch, factory(job.arch)?);
+            }
+            let engine = engines.get(&job.arch).unwrap();
+            if dataset.is_none() && spec.mode == SweepMode::Full {
+                dataset = load_dataset(&**engine, spec)?;
+            }
+            points.push(run_job(&**engine, dataset.as_ref(), spec, job)?);
         }
         return Ok(SweepReport::from_points(spec, points));
     }
@@ -1010,7 +1060,7 @@ pub fn run_sweep(
     // Latency-only sweeps need no dataset, so skip the throwaway backend.
     let dataset = match spec.mode {
         SweepMode::Full => {
-            let engine = factory()?;
+            let engine = factory(spec.archs[0])?;
             load_dataset(&*engine, spec)?
         }
         SweepMode::LatencyOnly => None,
@@ -1023,10 +1073,8 @@ pub fn run_sweep(
     std::thread::scope(|s| {
         for _ in 0..threads {
             s.spawn(|| {
-                let engine = match factory() {
-                    Ok(e) => e,
-                    Err(e) => return record_failure(&failed, &error, e),
-                };
+                let mut engines: HashMap<Arch, Box<dyn InferenceBackend>> =
+                    HashMap::new();
                 loop {
                     if failed.load(Ordering::Relaxed) {
                         return;
@@ -1035,7 +1083,19 @@ pub fn run_sweep(
                     if i >= jobs.len() {
                         return;
                     }
-                    match run_job(&*engine, dataset.as_ref(), spec, &jobs[i])
+                    let arch = jobs[i].arch;
+                    if !engines.contains_key(&arch) {
+                        match factory(arch) {
+                            Ok(e) => {
+                                engines.insert(arch, e);
+                            }
+                            Err(e) => {
+                                return record_failure(&failed, &error, e)
+                            }
+                        }
+                    }
+                    let engine = engines.get(&arch).unwrap();
+                    match run_job(&**engine, dataset.as_ref(), spec, &jobs[i])
                     {
                         Ok(p) => results.lock().unwrap()[i] = Some(p),
                         Err(e) => {
@@ -1062,12 +1122,12 @@ pub fn run_sweep(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::load_backend;
+    use crate::runtime::load_backend_for;
     use std::path::Path;
 
-    fn factory() -> Result<Box<dyn InferenceBackend>> {
+    fn factory(arch: Arch) -> Result<Box<dyn InferenceBackend>> {
         // No artifacts directory in tests: loads the analytic backend.
-        load_backend(Path::new("artifacts"))
+        load_backend_for(Path::new("artifacts"), arch)
     }
 
     fn small_spec() -> SweepSpec {
@@ -1155,6 +1215,52 @@ mod tests {
         let mut spec = small_spec();
         spec.min_hit_rate = 0.0;
         assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn arch_axis_expands_validates_and_runs() {
+        let mut spec = small_spec();
+        spec.scenarios = vec![ScenarioKind::Rc, ScenarioKind::Sc { split: 5 }];
+        spec.protocols = vec![Protocol::Tcp];
+        spec.loss_rates = vec![0.0];
+        spec.archs = vec![Arch::Vgg16, Arch::ResNet18, Arch::MobileNetV2];
+        spec.frames = 6;
+        let jobs = spec.expand().unwrap();
+        assert_eq!(jobs.len(), 2 * 3);
+        assert_eq!(jobs[0].arch, Arch::Vgg16);
+        assert_eq!(jobs[1].arch, Arch::ResNet18);
+        assert_eq!(jobs[2].arch, Arch::MobileNetV2);
+        // Split 5 is exported by every arch's analytic backend, so the
+        // full-mode sweep runs end-to-end across the zoo.
+        let report = run_sweep(&spec, 2, &factory).unwrap();
+        assert_eq!(report.points.len(), 6);
+        for p in &report.points {
+            assert!(p.accuracy.is_some());
+            assert!(p.mean_latency_ns > 0.0);
+        }
+        // An empty arch axis is rejected eagerly.
+        spec.archs.clear();
+        assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn from_json_parses_archs() {
+        let spec = SweepSpec::from_json(
+            r#"{"scenarios": ["rc"], "protocols": ["tcp"],
+                "loss_rates": [0.0],
+                "archs": ["vgg16", "resnet18", "mobilenetv2"]}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            spec.archs,
+            vec![Arch::Vgg16, Arch::ResNet18, Arch::MobileNetV2]
+        );
+        assert_eq!(spec.expand().unwrap().len(), 3);
+        assert!(SweepSpec::from_json(
+            r#"{"scenarios": ["rc"], "protocols": ["tcp"],
+                "loss_rates": [0.0], "archs": ["alexnet"]}"#,
+        )
+        .is_err());
     }
 
     #[test]

@@ -26,11 +26,19 @@
 //!    hit-rate, [`coordinator::qos::QosRequirements::min_hit_rate`]).
 //! 5. **Design-space sweeps** ([`coordinator::sweep`]): expand a
 //!    declarative [`coordinator::sweep::SweepSpec`] — a cartesian grid over
-//!    network condition, protocol, scenario kind, model scale and serving
-//!    load (clients × offered FPS) — into jobs, execute them on a
-//!    deterministic worker pool (byte-identical reports at any thread
-//!    count), and reduce them to an accuracy-vs-latency Pareto frontier
-//!    ([`report::pareto`]) with per-constraint satisfaction counts.
+//!    network condition, protocol, scenario kind, model scale,
+//!    architecture ([`model::Arch`]) and serving load (clients × offered
+//!    FPS) — into jobs, execute them on a deterministic worker pool
+//!    (byte-identical reports at any thread count), and reduce them to an
+//!    accuracy-vs-latency Pareto frontier ([`report::pareto`]) with
+//!    per-constraint satisfaction counts.
+//!
+//! Models are described in an explicit **DAG layer-graph IR**
+//! ([`model::layer`]): split points are *graph cuts* — single-tensor
+//! frontiers of the topological order ([`model::cut`]) — which keeps
+//! split selection meaningful for the whole zoo (VGG16, ResNet-18 with
+//! residual skips, MobileNetV2 with inverted residuals) and structurally
+//! excludes cuts a skip connection would cross.
 //!
 //! Inference is pluggable ([`runtime::InferenceBackend`]): the default
 //! build runs every entry point hermetically on the pure-Rust analytic

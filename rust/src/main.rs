@@ -21,10 +21,19 @@ use sei::coordinator::{
     self, ModelScale, QosRequirements, ScenarioConfig, ScenarioKind,
     SweepSpec,
 };
-use sei::model::{self, DeviceProfile};
+use sei::model::{Arch, DeviceProfile};
 use sei::netsim::transfer::{NetworkConfig, Protocol};
-use sei::runtime::{load_backend, Executable, InferenceBackend};
+use sei::runtime::{load_backend_for, Executable, InferenceBackend};
 use sei::util::cli::Command;
+
+/// Open the backend for the parsed `--arch` value (every command routes
+/// model-name strings through the one [`Arch::parse`]).
+fn backend_from(m: &sei::util::cli::Matches)
+    -> anyhow::Result<Box<dyn InferenceBackend>>
+{
+    let arch = Arch::parse(m.str("arch"))?;
+    load_backend_for(Path::new(m.str("artifacts")), arch)
+}
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -75,6 +84,9 @@ commands:
   hil-worker hardware-in-the-loop: serve a tail/full artifact on a socket
   hil-serve  run split serving against a real worker over localhost TCP
 
+most commands accept --arch vgg16 | resnet18 | mobilenetv2 to pick the
+model architecture (split ids are per-arch graph-cut indices)
+
 run `sei <command> --help` for options"
         .to_string()
 }
@@ -108,35 +120,57 @@ fn devices_from(m: &sei::util::cli::Matches)
 
 fn cmd_summary(args: &[String]) -> Result<()> {
     let m = Command::new("summary", "Tables I/II model statistics")
-        .opt("model", "vgg16", "vgg16 | slim")
+        .opt("arch", "vgg16", "vgg16 | resnet18 | mobilenetv2")
+        .opt("scale", "full",
+             "full | slim (the arch's trained slim geometry)")
+        .opt("model", "",
+             "deprecated alias: an arch name, or 'slim' for the trained \
+              VGG slim model")
         .opt("batch", "16", "batch size for the summary")
         .opt("artifacts", "artifacts", "artifacts directory (for slim)")
         .parse(args)?;
     let batch = m.usize("batch")?;
-    let net = match m.str("model") {
-        "vgg16" => model::vgg16_full(),
-        "slim" => {
-            let eng = load_backend(Path::new(m.str("artifacts")))?;
+    let sel = if m.str("model").is_empty() {
+        m.str("arch")
+    } else {
+        m.str("model")
+    };
+    let mut scale = ModelScale::parse(m.str("scale"))?;
+    // Legacy spelling: `--model slim` means the trained VGG slim model.
+    let arch = if sel == "slim" {
+        scale = ModelScale::Slim;
+        Arch::Vgg16
+    } else {
+        Arch::parse(sel)?
+    };
+    let net = match scale {
+        ModelScale::Full => arch.full_network(),
+        ModelScale::Slim => {
+            // Slim knobs (image size, width, classes) come from the
+            // arch's backend manifest, exactly as the scenario engine
+            // resolves them.
+            let eng =
+                load_backend_for(Path::new(m.str("artifacts")), arch)?;
             let mi = &eng.manifest().model;
-            model::vgg16_slim(mi.img_size, mi.width_mult, mi.hidden,
+            arch.slim_network(mi.img_size, mi.width_mult, mi.hidden,
                               mi.num_classes)
         }
-        other => bail!("unknown model '{other}'"),
     };
     println!("TABLE I — neural network summary ({})\n", net.name);
-    println!("{}", model::render_table1(&net, batch));
+    println!("{}", sei::model::render_table1(&net, batch));
     println!("TABLE II — neural network statistics\n");
-    println!("{}", model::render_table2(&net, batch));
+    println!("{}", sei::model::render_table2(&net, batch));
     Ok(())
 }
 
 fn cmd_cs_curve(args: &[String]) -> Result<()> {
-    let m = Command::new("cs-curve", "Grad-CAM CS curve via PJRT")
+    let m = Command::new("cs-curve", "Grad-CAM CS curve via the backend")
         .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("arch", "vgg16", "vgg16 | resnet18 | mobilenetv2")
         .opt("images", "128", "number of test images")
         .opt("min-layer", "2", "earliest admissible split layer")
         .parse(args)?;
-    let engine = load_backend(Path::new(m.str("artifacts")))?;
+    let engine = backend_from(&m)?;
     let test = engine.dataset("test")?;
     let curve = coordinator::saliency::compute_cs_curve(
         &*engine, &test, m.usize("images")?,
@@ -163,6 +197,7 @@ fn cmd_cs_curve(args: &[String]) -> Result<()> {
 fn cmd_suggest(args: &[String]) -> Result<()> {
     let m = Command::new("suggest", "QoS-driven configuration suggestion")
         .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("arch", "vgg16", "vgg16 | resnet18 | mobilenetv2")
         .opt("protocol", "tcp", "tcp | udp")
         .opt("channel", "gigabit", "gigabit | fast-ethernet | wifi")
         .opt("loss", "0.0", "packet loss rate")
@@ -175,7 +210,7 @@ fn cmd_suggest(args: &[String]) -> Result<()> {
         .opt("min-layer", "2", "earliest admissible split layer")
         .opt("seed", "42", "simulation seed")
         .parse(args)?;
-    let engine = load_backend(Path::new(m.str("artifacts")))?;
+    let engine = backend_from(&m)?;
     let net = network_from(&m)?;
     let (edge, server) = devices_from(&m)?;
     let mut qos = QosRequirements::with_fps(m.f64("fps")?)?;
@@ -184,6 +219,7 @@ fn cmd_suggest(args: &[String]) -> Result<()> {
         qos = qos.and_accuracy(min_acc);
     }
     let test = engine.dataset("test")?;
+    println!("arch: {}", engine.manifest().model.arch);
     println!("QoS: {}", qos.describe());
     println!("network: {} {} loss {:.1}%\n", m.str("channel"),
              net.protocol, net.loss_rate * 100.0);
@@ -192,13 +228,15 @@ fn cmd_suggest(args: &[String]) -> Result<()> {
         m.usize("min-layer")?,
     )?;
     println!(
-        "{:<8} {:>9} {:>9} {:>12} {:>10} {:>8}",
-        "config", "pred.acc", "sim.acc", "mean lat", "p95 lat", "QoS"
+        "{:<8} {:<16} {:>9} {:>9} {:>12} {:>10} {:>8}",
+        "config", "cut", "pred.acc", "sim.acc", "mean lat", "p95 lat",
+        "QoS"
     );
     for s in &suggestions {
         println!(
-            "{:<8} {:>8.1}% {:>8.1}% {:>9.2} ms {:>7.2} ms {:>8}",
+            "{:<8} {:<16} {:>8.1}% {:>8.1}% {:>9.2} ms {:>7.2} ms {:>8}",
             s.rank.kind.to_string(),
+            s.rank.cut_name.as_deref().unwrap_or("—"),
             s.rank.predicted_accuracy * 100.0,
             s.report.accuracy * 100.0,
             s.report.mean_latency_ns / 1e6,
@@ -219,13 +257,18 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     )
     .opt("artifacts", "artifacts", "artifacts directory")
     .required("spec", "SweepSpec JSON file (schema: README / sweep docs)")
+    .opt("arch", "",
+         "override the spec's arch axis with one architecture")
     .opt("threads", "0", "worker threads (0 = all available cores)")
     .opt("out", "", "comma-separated report paths (.json and/or .csv)")
     .parse(args)?;
     let spec_path = m.str("spec");
     let text = std::fs::read_to_string(spec_path)
         .with_context(|| format!("reading sweep spec '{spec_path}'"))?;
-    let spec = SweepSpec::from_json(&text)?;
+    let mut spec = SweepSpec::from_json(&text)?;
+    if !m.str("arch").is_empty() {
+        spec.archs = vec![Arch::parse(m.str("arch"))?];
+    }
     let threads = match m.usize("threads")? {
         0 => std::thread::available_parallelism()
             .map(|n| n.get())
@@ -242,7 +285,7 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         }
     }
     let dir = PathBuf::from(m.str("artifacts"));
-    let factory = move || load_backend(&dir);
+    let factory = move |arch| load_backend_for(&dir, arch);
     let jobs = spec.expand()?.len();
     println!(
         "sweep '{}': {jobs} grid points x {} frames x {} seed(s) on \
@@ -273,7 +316,8 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
 fn cmd_simulate(args: &[String]) -> Result<()> {
     let m = Command::new("simulate", "run one scenario")
         .opt("artifacts", "artifacts", "artifacts directory")
-        .opt("scenario", "rc", "lc | rc | sc@<layer>")
+        .opt("arch", "vgg16", "vgg16 | resnet18 | mobilenetv2")
+        .opt("scenario", "rc", "lc | rc | sc@<cut>")
         .opt("protocol", "tcp", "tcp | udp")
         .opt("channel", "gigabit", "gigabit | fast-ethernet | wifi")
         .opt("loss", "0.0", "packet loss rate")
@@ -282,11 +326,11 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
         .opt("fps", "20", "frame rate of the source (and QoS bound)")
         .opt("edge", "edge-gpu", "edge device profile")
         .opt("server", "server-gpu", "server device profile")
-        .opt("scale", "slim", "slim | vgg16 (paper-scale volumetrics)")
+        .opt("scale", "slim", "slim | full (paper-scale volumetrics)")
         .opt("dataset", "test", "train | test | ice")
         .opt("seed", "42", "simulation seed")
         .parse(args)?;
-    let engine = load_backend(Path::new(m.str("artifacts")))?;
+    let engine = backend_from(&m)?;
     let net = network_from(&m)?;
     let (edge, server) = devices_from(&m)?;
     let qos = QosRequirements::with_fps(m.f64("fps")?)?;
@@ -312,7 +356,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
          optionally multi-client)",
     )
         .opt("artifacts", "artifacts", "artifacts directory")
-        .opt("scenario", "rc", "lc | rc | sc@<layer>")
+        .opt("arch", "vgg16", "vgg16 | resnet18 | mobilenetv2")
+        .opt("scenario", "rc", "lc | rc | sc@<cut>")
         .opt("protocol", "tcp", "tcp | udp")
         .opt("channel", "gigabit", "gigabit | fast-ethernet | wifi")
         .opt("loss", "0.0", "packet loss rate")
@@ -327,7 +372,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("server", "server-gpu", "server device profile")
         .opt("seed", "42", "simulation seed")
         .parse(args)?;
-    let engine = load_backend(Path::new(m.str("artifacts")))?;
+    let engine = backend_from(&m)?;
     let net = network_from(&m)?;
     let (edge, server) = devices_from(&m)?;
     let qos = QosRequirements::with_fps(m.f64("fps")?)?;
@@ -421,7 +466,7 @@ fn cmd_hil_serve(args: &[String]) -> Result<()> {
         )
     });
 
-    let engine = load_backend(Path::new(&artifacts))?;
+    let engine = load_backend_for(Path::new(&artifacts), Arch::Vgg16)?;
     let ice = engine.dataset("ice")?;
     let head = engine.executable(&format!("head_L{split}_b1"))?;
     let num_classes = engine.manifest().model.num_classes;

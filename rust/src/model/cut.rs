@@ -1,0 +1,315 @@
+//! Graph cuts of a [`Network`] DAG — the generalization of "split after
+//! layer i" that stays meaningful for architectures with skip connections.
+//!
+//! A *cut* partitions the topological node order into a head `[0..=pos]`
+//! and a tail `[pos+1..]`. The cut is **valid** when every edge crossing
+//! the frontier originates from one single node: exactly one tensor then
+//! crosses the network boundary, which is the quantity the netsim
+//! transfers. Cutting inside a residual block is invalid — the skip edge
+//! and the main-path edge cross from *different* sources, so the frontier
+//! would have to ship two tensors ([`valid_cuts`] excludes it).
+//!
+//! [`split_points`] narrows the valid cuts down to the positions each
+//! architecture marks via [`super::layer::NetworkBuilder::cut_here`] —
+//! the paper-style candidates (conv+ReLU boundaries and pools for VGG,
+//! block boundaries for ResNet/MobileNet), indexed `0..n` per arch. For
+//! VGG16 these coincide exactly with the 18 feature layers of Fig. 2.
+
+use super::layer::{Network, Shape};
+
+/// One valid cut: the head/tail partition after topological position
+/// `pos`, with the single crossing tensor and cumulative compute costs.
+#[derive(Clone, Debug)]
+pub struct Cut {
+    /// Index of this cut within its enumeration (`split_points` ids are
+    /// the arch's stable split indices).
+    pub index: usize,
+    /// Candidate name (mark name for split points; source-node name for
+    /// raw valid cuts).
+    pub name: String,
+    /// Topological position: head = nodes `[0..=pos]`.
+    pub pos: usize,
+    /// Node whose output is the single crossing tensor.
+    pub source: usize,
+    /// The crossing tensor's shape.
+    pub out: Shape,
+    /// Mult-adds per image of the head nodes (no bottleneck).
+    pub head_mult_adds: u64,
+    /// Mult-adds per image of the tail nodes (no bottleneck).
+    pub tail_mult_adds: u64,
+}
+
+impl Cut {
+    /// Bytes of the raw crossing activation (f32, per image).
+    pub fn crossing_bytes(&self) -> u64 {
+        self.out.bytes_f32() as u64
+    }
+
+    /// Bytes of the 50%-compressed bottleneck latent transmitted when
+    /// splitting here (channel/feature dimension halved, per the paper's
+    /// AEs).
+    pub fn latent_bytes(&self) -> u64 {
+        match self.out {
+            Shape::Chw(c, h, w) => ((c / 2).max(1) * h * w * 4) as u64,
+            Shape::Flat(n) => ((n / 2).max(1) * 4) as u64,
+        }
+    }
+
+    /// Mult-adds of the bottleneck (encoder, decoder) convs wrapped
+    /// around this cut: encoder C -> C/2 3x3 at the crossing spatial
+    /// size, decoder C/2 -> C (mirrors `python/compile/bottleneck.py`);
+    /// for flat crossings a linear N -> N/2 -> N pair.
+    pub fn bottleneck_mult_adds(&self) -> (u64, u64) {
+        match self.out {
+            Shape::Chw(c, h, w) => {
+                let zc = (c / 2).max(1);
+                let enc = (zc * h * w) as u64 * (c * 9) as u64
+                    + (zc * h * w) as u64;
+                let dec = (c * h * w) as u64 * (zc * 9) as u64
+                    + (c * h * w) as u64;
+                (enc, dec)
+            }
+            Shape::Flat(n) => {
+                let z = (n / 2).max(1);
+                let enc = (z * n + z) as u64;
+                let dec = (n * z + n) as u64;
+                (enc, dec)
+            }
+        }
+    }
+
+    /// Mult-adds per image of the head (plus bottleneck encoder) and of
+    /// the tail (plus bottleneck decoder) when splitting here.
+    pub fn split_compute(&self) -> (u64, u64) {
+        let (enc, dec) = self.bottleneck_mult_adds();
+        (self.head_mult_adds + enc, dec + self.tail_mult_adds)
+    }
+}
+
+/// The single crossing source of the frontier after position `pos`, or
+/// `None` when the cut is invalid (multiple sources, or a tail node reads
+/// the raw network input).
+fn crossing_source(net: &Network, pos: usize) -> Option<usize> {
+    let mut source: Option<usize> = None;
+    for (v, node) in net.nodes.iter().enumerate().skip(pos + 1) {
+        if node.inputs.is_empty() {
+            // Reads the raw network input from inside the tail: the input
+            // would have to cross alongside the activation.
+            return None;
+        }
+        for &u in &node.inputs {
+            if u <= pos {
+                match source {
+                    None => source = Some(u),
+                    Some(s) if s == u => {}
+                    Some(_) => return None,
+                }
+            }
+        }
+    }
+    source
+}
+
+/// Enumerate every structurally valid cut of `net`, in topological order.
+/// Head and tail are both non-empty (`pos` ranges over `0..len-1`).
+pub fn valid_cuts(net: &Network) -> Vec<Cut> {
+    let total: u64 = net.mult_adds();
+    let mut head = 0u64;
+    let mut out = Vec::new();
+    for pos in 0..net.len().saturating_sub(1) {
+        head += net.layer(pos).mult_adds();
+        if let Some(source) = crossing_source(net, pos) {
+            out.push(Cut {
+                index: out.len(),
+                name: net.layer(source).name.clone(),
+                pos,
+                source,
+                out: net.layer(source).out,
+                head_mult_adds: head,
+                tail_mult_adds: total - head,
+            });
+        }
+    }
+    out
+}
+
+/// The architecture's canonical split-point candidates: the cuts at the
+/// positions marked with `cut_here`, indexed `0..n` in topological order.
+/// Panics if a mark sits at an invalid position (a residual interior) —
+/// that is a zoo-authoring bug, not a runtime condition.
+pub fn split_points(net: &Network) -> Vec<Cut> {
+    let total: u64 = net.mult_adds();
+    let mut cum = vec![0u64; net.len()];
+    let mut acc = 0u64;
+    for (i, c) in cum.iter_mut().enumerate() {
+        acc += net.layer(i).mult_adds();
+        *c = acc;
+    }
+    net.cut_marks
+        .iter()
+        .enumerate()
+        .map(|(index, (pos, name))| {
+            let source = crossing_source(net, *pos).unwrap_or_else(|| {
+                panic!(
+                    "{}: cut mark '{name}' at node {pos} is not a valid \
+                     single-tensor frontier (residual interior?)",
+                    net.name
+                )
+            });
+            Cut {
+                index,
+                name: name.clone(),
+                pos: *pos,
+                source,
+                out: net.layer(source).out,
+                head_mult_adds: cum[*pos],
+                tail_mult_adds: total - cum[*pos],
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::NetworkBuilder;
+
+    fn chain() -> Network {
+        NetworkBuilder::new("chain", Shape::Chw(3, 8, 8))
+            .conv3x3("c1", 4)
+            .relu("r1")
+            .cut_here("c1")
+            .maxpool2("p1")
+            .cut_here("p1")
+            .flatten("f")
+            .linear("fc", 10)
+            .build()
+    }
+
+    fn residual() -> Network {
+        let mut b = NetworkBuilder::new("res", Shape::Chw(3, 8, 8))
+            .conv3x3("pre", 4)
+            .relu("pre_relu")
+            .cut_here("pre");
+        let skip = b.branch();
+        b = b
+            .conv3x3("c1", 4)
+            .relu("r1")
+            .conv3x3("c2", 4)
+            .merge_add("add", skip)
+            .relu("r2")
+            .cut_here("block");
+        b.flatten("f").linear("fc", 10).build()
+    }
+
+    #[test]
+    fn every_chain_position_is_a_valid_cut() {
+        let net = chain();
+        let cuts = valid_cuts(&net);
+        // A pure chain: every non-final position is a valid cut.
+        assert_eq!(cuts.len(), net.len() - 1);
+        for (i, c) in cuts.iter().enumerate() {
+            assert_eq!(c.pos, i);
+            assert_eq!(c.source, i);
+            assert_eq!(
+                c.head_mult_adds + c.tail_mult_adds,
+                net.mult_adds()
+            );
+        }
+    }
+
+    #[test]
+    fn residual_interior_cuts_are_excluded() {
+        let net = residual();
+        let cuts = valid_cuts(&net);
+        let add =
+            net.nodes.iter().position(|n| n.layer.name == "add").unwrap();
+        // The pre_relu node both paths read.
+        let skip_src = net
+            .nodes
+            .iter()
+            .position(|n| n.layer.name == "pre_relu")
+            .unwrap();
+        // No valid cut strictly inside the block: positions between the
+        // fork source and the merge have two crossing sources.
+        for c in &cuts {
+            assert!(
+                c.pos < skip_src + 1 || c.pos >= add,
+                "cut at {} is inside the residual block",
+                c.pos
+            );
+        }
+        // The frontier right at the fork is valid (single source: the
+        // forked tensor feeds both paths).
+        assert!(cuts.iter().any(|c| c.pos == skip_src));
+        // And so is the frontier after the merge.
+        assert!(cuts.iter().any(|c| c.pos == add));
+    }
+
+    #[test]
+    fn split_points_follow_marks() {
+        let net = chain();
+        let pts = split_points(&net);
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].name, "c1");
+        assert_eq!(pts[0].index, 0);
+        assert_eq!(pts[0].out, Shape::Chw(4, 8, 8));
+        assert_eq!(pts[1].name, "p1");
+        assert_eq!(pts[1].out, Shape::Chw(4, 4, 4));
+        // Conservation at every split point.
+        for p in &pts {
+            assert_eq!(p.head_mult_adds + p.tail_mult_adds, net.mult_adds());
+        }
+    }
+
+    #[test]
+    fn residual_marks_resolve_to_single_tensors() {
+        let net = residual();
+        let pts = split_points(&net);
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[1].name, "block");
+        assert_eq!(pts[1].out, Shape::Chw(4, 8, 8));
+        assert_eq!(
+            pts[1].head_mult_adds + pts[1].tail_mult_adds,
+            net.mult_adds()
+        );
+    }
+
+    #[test]
+    fn latent_and_bottleneck_math() {
+        let c = Cut {
+            index: 0,
+            name: "x".into(),
+            pos: 0,
+            source: 0,
+            out: Shape::Chw(512, 28, 28),
+            head_mult_adds: 10,
+            tail_mult_adds: 20,
+        };
+        assert_eq!(c.crossing_bytes(), 512 * 28 * 28 * 4);
+        assert_eq!(c.latent_bytes(), 256 * 28 * 28 * 4);
+        let (enc, dec) = c.bottleneck_mult_adds();
+        assert_eq!(enc, (256 * 28 * 28) as u64 * (512 * 9) as u64
+                        + (256 * 28 * 28) as u64);
+        assert_eq!(dec, (512 * 28 * 28) as u64 * (256 * 9) as u64
+                        + (512 * 28 * 28) as u64);
+        let (h, t) = c.split_compute();
+        assert_eq!(h, 10 + enc);
+        assert_eq!(t, dec + 20);
+    }
+
+    #[test]
+    fn flat_crossing_uses_linear_bottleneck() {
+        let c = Cut {
+            index: 0,
+            name: "x".into(),
+            pos: 0,
+            source: 0,
+            out: Shape::Flat(64),
+            head_mult_adds: 0,
+            tail_mult_adds: 0,
+        };
+        assert_eq!(c.latent_bytes(), 32 * 4);
+        assert_eq!(c.bottleneck_mult_adds(), (32 * 64 + 32, 64 * 32 + 64));
+    }
+}

@@ -1,18 +1,33 @@
-//! Layer graph metadata: shapes, parameter counts, mult-adds.
+//! Layer-graph IR: shapes, parameter counts, mult-adds — now over an
+//! explicit DAG instead of an implicit linear chain.
 //!
 //! This is the "neural network statistics" subsystem behind the paper's
 //! Tables I and II (torchinfo-style summaries), and the source of the
 //! per-layer activation/latent sizes and compute costs the scenario engine
 //! uses for transmission volumetrics and compute-time modelling.
 //!
+//! A [`Network`] is a list of [`Node`]s in topological order; every node
+//! carries a [`Layer`] (name + kind + output shape) plus the indices of
+//! its predecessor nodes. A node with no predecessors reads the network
+//! input. Chains (VGG) are the degenerate single-predecessor case; skip
+//! connections (ResNet's residual `Add`, concat merges) are nodes with two
+//! predecessors. The [`NetworkBuilder`] keeps the fluent chain API as
+//! sugar and adds [`NetworkBuilder::branch`] / [`NetworkBuilder::rewind`] /
+//! [`NetworkBuilder::merge_add`] for residual blocks, plus
+//! [`NetworkBuilder::cut_here`] to mark the paper-style split-point
+//! candidates consumed by [`super::cut`].
+//!
 //! Conventions (matching the numbers printed in the paper):
-//!   * params include biases;
+//!   * params include biases (convs may opt out — ResNet/MobileNet convs
+//!     carry `bias: false` because BatchNorm follows);
 //!   * mult-adds of a conv/linear = output_elements x fan_in + bias adds
 //!     (exactly reproduces Table II's 247.74 G for VGG16 @ batch 16);
+//!   * BatchNorm contributes 2·C trainable params and no mult-adds
+//!     (torchinfo convention); merges (`Add`/`Concat`) are free;
 //!   * forward/backward pass size counts the outputs of *parameterized*
 //!     layers only, twice (activations + gradients), in f32.
 
-/// Activation shape flowing between layers.
+/// Activation shape flowing along a graph edge.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Shape {
     /// Channels-first feature map.
@@ -43,16 +58,38 @@ impl Shape {
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum LayerKind {
-    /// 3x3 "same" convolution (the only conv VGG uses).
-    Conv2d { in_ch: usize, out_ch: usize, kernel: usize },
+    /// 2-D convolution. `groups == in_ch` models a depthwise conv;
+    /// `bias: false` models the conv+BatchNorm idiom. The VGG builder's
+    /// 3x3 "same" convs are the `stride 1, padding k/2, groups 1, bias`
+    /// special case.
+    Conv2d {
+        in_ch: usize,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+        groups: usize,
+        bias: bool,
+    },
+    /// Batch normalization over `ch` channels (2·ch trainable params,
+    /// no mult-adds under the torchinfo convention).
+    BatchNorm { ch: usize },
     ReLU,
-    /// 2x2 max pooling, stride 2.
+    /// Clipped ReLU (MobileNet family).
+    ReLU6,
+    /// 2x2 max pooling, stride 2 (the only pool VGG uses).
     MaxPool2,
+    /// General max pooling (ResNet stem: 3x3, stride 2, padding 1).
+    MaxPool { kernel: usize, stride: usize, padding: usize },
     /// Adaptive average pool to a fixed spatial size.
     AdaptiveAvgPool { out_hw: usize },
     Flatten,
     Linear { in_f: usize, out_f: usize },
     Dropout,
+    /// Elementwise sum of two equal-shape inputs (residual merge).
+    Add,
+    /// Channel concatenation of two feature maps.
+    Concat,
 }
 
 #[derive(Clone, Debug)]
@@ -65,9 +102,11 @@ pub struct Layer {
 impl Layer {
     pub fn params(&self) -> u64 {
         match self.kind {
-            LayerKind::Conv2d { in_ch, out_ch, kernel } => {
-                (out_ch * in_ch * kernel * kernel + out_ch) as u64
+            LayerKind::Conv2d { in_ch, out_ch, kernel, groups, bias, .. } => {
+                (out_ch * (in_ch / groups) * kernel * kernel
+                    + if bias { out_ch } else { 0 }) as u64
             }
+            LayerKind::BatchNorm { ch } => (2 * ch) as u64,
             LayerKind::Linear { in_f, out_f } => (in_f * out_f + out_f) as u64,
             _ => 0,
         }
@@ -77,8 +116,9 @@ impl Layer {
     pub fn mult_adds(&self) -> u64 {
         let out_el = self.out.elements() as u64;
         match self.kind {
-            LayerKind::Conv2d { in_ch, kernel, .. } => {
-                out_el * (in_ch * kernel * kernel) as u64 + out_el
+            LayerKind::Conv2d { in_ch, kernel, groups, bias, .. } => {
+                out_el * ((in_ch / groups) * kernel * kernel) as u64
+                    + if bias { out_el } else { 0 }
             }
             LayerKind::Linear { in_f, .. } => out_el * in_f as u64 + out_el,
             _ => 0,
@@ -92,29 +132,62 @@ impl Layer {
     pub fn type_name(&self) -> &'static str {
         match self.kind {
             LayerKind::Conv2d { .. } => "Conv2d",
+            LayerKind::BatchNorm { .. } => "BatchNorm2d",
             LayerKind::ReLU => "ReLU",
-            LayerKind::MaxPool2 => "MaxPool2d",
+            LayerKind::ReLU6 => "ReLU6",
+            LayerKind::MaxPool2 | LayerKind::MaxPool { .. } => "MaxPool2d",
             LayerKind::AdaptiveAvgPool { .. } => "AdaptiveAvgPool2d",
             LayerKind::Flatten => "Flatten",
             LayerKind::Linear { .. } => "Linear",
             LayerKind::Dropout => "Dropout",
+            LayerKind::Add => "Add",
+            LayerKind::Concat => "Concat",
         }
     }
 }
 
-/// A full network: input shape + ordered layers with propagated shapes.
+/// One node of the network DAG: a layer plus its predecessor node
+/// indices. `inputs` is empty for nodes reading the network input and
+/// holds two indices for merges (`Add`/`Concat`).
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub layer: Layer,
+    pub inputs: Vec<usize>,
+}
+
+/// A full network: input shape + DAG nodes in topological order (every
+/// node's inputs have smaller indices — guaranteed by the builder).
 #[derive(Clone, Debug)]
 pub struct Network {
     pub name: String,
     pub input: Shape,
-    pub layers: Vec<Layer>,
+    pub nodes: Vec<Node>,
+    /// Marked split-point candidates: `(node index, candidate name)` in
+    /// topological order — the paper-style cut positions enumerated by
+    /// [`super::cut::split_points`].
+    pub cut_marks: Vec<(usize, String)>,
 }
+
+/// Opaque handle to a node, returned by [`NetworkBuilder::branch`]: the
+/// point a skip connection forks from (and can be merged back into).
+#[derive(Clone, Copy, Debug)]
+pub struct BranchPoint(usize);
 
 pub struct NetworkBuilder {
     name: String,
     input: Shape,
     cur: Shape,
-    layers: Vec<Layer>,
+    /// Index of the node whose output is the current chain tip; `None`
+    /// before the first node (the network input).
+    tip: Option<usize>,
+    nodes: Vec<Node>,
+    cut_marks: Vec<(usize, String)>,
+}
+
+fn conv_out_hw(hw: usize, kernel: usize, stride: usize, padding: usize)
+    -> usize
+{
+    (hw + 2 * padding - kernel) / stride + 1
 }
 
 impl NetworkBuilder {
@@ -123,24 +196,92 @@ impl NetworkBuilder {
             name: name.to_string(),
             input,
             cur: input,
-            layers: Vec::new(),
+            tip: None,
+            nodes: Vec::new(),
+            cut_marks: Vec::new(),
         }
     }
 
     fn push(&mut self, name: String, kind: LayerKind, out: Shape) {
-        self.layers.push(Layer { name, kind, out });
+        let inputs = self.tip.map(|t| vec![t]).unwrap_or_default();
+        self.push_node(name, kind, out, inputs);
+    }
+
+    fn push_node(
+        &mut self,
+        name: String,
+        kind: LayerKind,
+        out: Shape,
+        inputs: Vec<usize>,
+    ) {
+        self.nodes.push(Node { layer: Layer { name, kind, out }, inputs });
+        self.tip = Some(self.nodes.len() - 1);
         self.cur = out;
     }
 
-    pub fn conv3x3(mut self, name: &str, out_ch: usize) -> Self {
+    /// General 2-D conv (see [`LayerKind::Conv2d`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        mut self,
+        name: &str,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+        groups: usize,
+        bias: bool,
+    ) -> Self {
         let Shape::Chw(c, h, w) = self.cur else {
             panic!("conv on flat input")
         };
+        assert!(groups >= 1 && c % groups == 0 && out_ch % groups == 0,
+                "conv '{name}': groups {groups} must divide {c} and {out_ch}");
         self.push(
             name.into(),
-            LayerKind::Conv2d { in_ch: c, out_ch, kernel: 3 },
-            Shape::Chw(out_ch, h, w),
+            LayerKind::Conv2d {
+                in_ch: c,
+                out_ch,
+                kernel,
+                stride,
+                padding,
+                groups,
+                bias,
+            },
+            Shape::Chw(
+                out_ch,
+                conv_out_hw(h, kernel, stride, padding),
+                conv_out_hw(w, kernel, stride, padding),
+            ),
         );
+        self
+    }
+
+    /// 3x3 "same" conv with bias (the only conv VGG uses).
+    pub fn conv3x3(self, name: &str, out_ch: usize) -> Self {
+        self.conv(name, out_ch, 3, 1, 1, 1, true)
+    }
+
+    /// 1x1 pointwise conv without bias (projection shortcuts, MobileNet
+    /// expand/project convs).
+    pub fn conv1x1(self, name: &str, out_ch: usize, stride: usize) -> Self {
+        self.conv(name, out_ch, 1, stride, 0, 1, false)
+    }
+
+    /// 3x3 depthwise conv without bias (`groups == channels`).
+    pub fn dwconv3x3(mut self, name: &str, stride: usize) -> Self {
+        let Shape::Chw(c, _, _) = self.cur else {
+            panic!("dwconv on flat input")
+        };
+        self = self.conv(name, c, 3, stride, 1, c, false);
+        self
+    }
+
+    pub fn bn(mut self, name: &str) -> Self {
+        let Shape::Chw(c, _, _) = self.cur else {
+            panic!("batchnorm on flat input")
+        };
+        let out = self.cur;
+        self.push(name.into(), LayerKind::BatchNorm { ch: c }, out);
         self
     }
 
@@ -150,11 +291,40 @@ impl NetworkBuilder {
         self
     }
 
+    pub fn relu6(mut self, name: &str) -> Self {
+        let out = self.cur;
+        self.push(name.into(), LayerKind::ReLU6, out);
+        self
+    }
+
     pub fn maxpool2(mut self, name: &str) -> Self {
         let Shape::Chw(c, h, w) = self.cur else {
             panic!("pool on flat input")
         };
         self.push(name.into(), LayerKind::MaxPool2, Shape::Chw(c, h / 2, w / 2));
+        self
+    }
+
+    /// General max pool (ResNet stem: `maxpool(name, 3, 2, 1)`).
+    pub fn maxpool(
+        mut self,
+        name: &str,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+    ) -> Self {
+        let Shape::Chw(c, h, w) = self.cur else {
+            panic!("pool on flat input")
+        };
+        self.push(
+            name.into(),
+            LayerKind::MaxPool { kernel, stride, padding },
+            Shape::Chw(
+                c,
+                conv_out_hw(h, kernel, stride, padding),
+                conv_out_hw(w, kernel, stride, padding),
+            ),
+        );
         self
     }
 
@@ -192,32 +362,109 @@ impl NetworkBuilder {
         self
     }
 
+    // -- DAG construction ---------------------------------------------------
+
+    /// Handle to the current chain tip: the point a skip connection forks
+    /// from. Panics before the first layer (branching from the raw network
+    /// input is not needed by any zoo architecture).
+    pub fn branch(&self) -> BranchPoint {
+        BranchPoint(self.tip.expect("branch() before any layer"))
+    }
+
+    /// Rewind the chain tip to a previous [`branch`](Self::branch) point,
+    /// so subsequent fluent calls build a side path (e.g. a projection
+    /// shortcut) off that node.
+    pub fn rewind(mut self, at: BranchPoint) -> Self {
+        self.tip = Some(at.0);
+        self.cur = self.nodes[at.0].layer.out;
+        self
+    }
+
+    /// Merge the current tip with `other` by elementwise addition (the
+    /// residual merge). Shapes must match.
+    pub fn merge_add(mut self, name: &str, other: BranchPoint) -> Self {
+        let tip = self.tip.expect("merge_add() before any layer");
+        let a = self.nodes[tip].layer.out;
+        let b = self.nodes[other.0].layer.out;
+        assert_eq!(a, b, "merge_add '{name}': shape mismatch {a:?} vs {b:?}");
+        self.push_node(name.into(), LayerKind::Add, a, vec![tip, other.0]);
+        self
+    }
+
+    /// Merge the current tip with `other` by channel concatenation.
+    pub fn merge_concat(mut self, name: &str, other: BranchPoint) -> Self {
+        let tip = self.tip.expect("merge_concat() before any layer");
+        let (Shape::Chw(ca, h, w), Shape::Chw(cb, hb, wb)) =
+            (self.nodes[tip].layer.out, self.nodes[other.0].layer.out)
+        else {
+            panic!("merge_concat '{name}': both inputs must be CHW")
+        };
+        assert_eq!((h, w), (hb, wb),
+                   "merge_concat '{name}': spatial mismatch");
+        self.push_node(
+            name.into(),
+            LayerKind::Concat,
+            Shape::Chw(ca + cb, h, w),
+            vec![tip, other.0],
+        );
+        self
+    }
+
+    /// Mark the current tip as a split-point candidate named `name` (the
+    /// paper's "cut after layer i" positions — see [`super::cut`]).
+    pub fn cut_here(mut self, name: &str) -> Self {
+        let tip = self.tip.expect("cut_here() before any layer");
+        self.cut_marks.push((tip, name.to_string()));
+        self
+    }
+
     pub fn build(self) -> Network {
-        Network { name: self.name, input: self.input, layers: self.layers }
+        Network {
+            name: self.name,
+            input: self.input,
+            nodes: self.nodes,
+            cut_marks: self.cut_marks,
+        }
     }
 }
 
 impl Network {
+    /// The layers in topological order (DAG-agnostic view for summaries).
+    pub fn layers(&self) -> impl Iterator<Item = &Layer> + '_ {
+        self.nodes.iter().map(|n| &n.layer)
+    }
+
+    pub fn layer(&self, i: usize) -> &Layer {
+        &self.nodes[i].layer
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
     pub fn total_params(&self) -> u64 {
-        self.layers.iter().map(|l| l.params()).sum()
+        self.layers().map(|l| l.params()).sum()
     }
 
     /// Mult-adds per image.
     pub fn mult_adds(&self) -> u64 {
-        self.layers.iter().map(|l| l.mult_adds()).sum()
+        self.layers().map(|l| l.mult_adds()).sum()
     }
 
     /// Sum of output elements of parameterized layers (per image).
     pub fn param_layer_out_elements(&self) -> u64 {
-        self.layers
-            .iter()
+        self.layers()
             .filter(|l| l.is_parameterized())
             .map(|l| l.out.elements() as u64)
             .sum()
     }
 
     pub fn output(&self) -> Shape {
-        self.layers.last().map(|l| l.out).unwrap_or(self.input)
+        self.nodes.last().map(|n| n.layer.out).unwrap_or(self.input)
     }
 }
 
@@ -238,17 +485,17 @@ mod tests {
     #[test]
     fn shape_propagation() {
         let n = tiny();
-        assert_eq!(n.layers[0].out, Shape::Chw(4, 8, 8));
-        assert_eq!(n.layers[2].out, Shape::Chw(4, 4, 4));
-        assert_eq!(n.layers[3].out, Shape::Flat(64));
+        assert_eq!(n.layer(0).out, Shape::Chw(4, 8, 8));
+        assert_eq!(n.layer(2).out, Shape::Chw(4, 4, 4));
+        assert_eq!(n.layer(3).out, Shape::Flat(64));
         assert_eq!(n.output(), Shape::Flat(10));
     }
 
     #[test]
     fn param_counts() {
         let n = tiny();
-        assert_eq!(n.layers[0].params(), 4 * 3 * 9 + 4);
-        assert_eq!(n.layers[4].params(), 64 * 10 + 10);
+        assert_eq!(n.layer(0).params(), 4 * 3 * 9 + 4);
+        assert_eq!(n.layer(4).params(), 64 * 10 + 10);
         assert_eq!(n.total_params(), 112 + 650);
     }
 
@@ -256,15 +503,15 @@ mod tests {
     fn mult_adds_include_bias() {
         let n = tiny();
         // conv: 256 out el x 27 + 256; linear: 10 x 64 + 10
-        assert_eq!(n.layers[0].mult_adds(), 256 * 27 + 256);
-        assert_eq!(n.layers[4].mult_adds(), 650);
+        assert_eq!(n.layer(0).mult_adds(), 256 * 27 + 256);
+        assert_eq!(n.layer(4).mult_adds(), 650);
     }
 
     #[test]
     fn relu_and_pool_are_free() {
         let n = tiny();
-        assert_eq!(n.layers[1].params() + n.layers[2].params(), 0);
-        assert_eq!(n.layers[1].mult_adds() + n.layers[2].mult_adds(), 0);
+        assert_eq!(n.layer(1).params() + n.layer(2).params(), 0);
+        assert_eq!(n.layer(1).mult_adds() + n.layer(2).mult_adds(), 0);
     }
 
     #[test]
@@ -276,5 +523,127 @@ mod tests {
     #[test]
     fn bytes_f32() {
         assert_eq!(Shape::Chw(2, 3, 4).bytes_f32(), 96);
+    }
+
+    #[test]
+    fn chain_edges_are_sequential() {
+        let n = tiny();
+        assert!(n.nodes[0].inputs.is_empty());
+        for i in 1..n.len() {
+            assert_eq!(n.nodes[i].inputs, vec![i - 1]);
+        }
+    }
+
+    #[test]
+    fn strided_and_padded_conv_shapes() {
+        // ResNet stem: 7x7 s2 p3 on 224 -> 112; maxpool 3x3 s2 p1 -> 56.
+        let n = NetworkBuilder::new("s", Shape::Chw(3, 224, 224))
+            .conv("conv1", 64, 7, 2, 3, 1, false)
+            .maxpool("pool", 3, 2, 1)
+            .build();
+        assert_eq!(n.layer(0).out, Shape::Chw(64, 112, 112));
+        assert_eq!(n.layer(1).out, Shape::Chw(64, 56, 56));
+        // bias=false: no bias params, no bias adds.
+        assert_eq!(n.layer(0).params(), 64 * 3 * 49);
+        assert_eq!(
+            n.layer(0).mult_adds(),
+            (64 * 112 * 112) as u64 * (3 * 49) as u64
+        );
+    }
+
+    #[test]
+    fn depthwise_conv_divides_fan_in_by_groups() {
+        let n = NetworkBuilder::new("d", Shape::Chw(8, 4, 4))
+            .dwconv3x3("dw", 1)
+            .build();
+        // groups == in_ch == 8: params 8 * 1 * 9, macs 128 out el * 9.
+        assert_eq!(n.layer(0).params(), 72);
+        assert_eq!(n.layer(0).mult_adds(), 128 * 9);
+    }
+
+    #[test]
+    fn batchnorm_params_no_macs() {
+        let n = NetworkBuilder::new("b", Shape::Chw(8, 4, 4))
+            .bn("bn")
+            .build();
+        assert_eq!(n.layer(0).params(), 16);
+        assert_eq!(n.layer(0).mult_adds(), 0);
+        assert!(n.layer(0).is_parameterized());
+    }
+
+    #[test]
+    fn residual_block_merges_and_records_edges() {
+        let mut b = NetworkBuilder::new("r", Shape::Chw(4, 8, 8))
+            .conv3x3("pre", 4);
+        let skip = b.branch();
+        b = b
+            .conv3x3("c1", 4)
+            .relu("r1")
+            .conv3x3("c2", 4)
+            .merge_add("add", skip)
+            .relu("r2");
+        let n = b.build();
+        let add = n.nodes.iter().position(|x| x.layer.name == "add").unwrap();
+        assert_eq!(n.nodes[add].inputs, vec![add - 1, 0]);
+        assert_eq!(n.layer(add).out, Shape::Chw(4, 8, 8));
+        assert_eq!(n.layer(add).mult_adds(), 0);
+    }
+
+    #[test]
+    fn rewind_builds_a_projection_side_path() {
+        let mut b = NetworkBuilder::new("p", Shape::Chw(4, 8, 8))
+            .conv3x3("pre", 4);
+        let fork = b.branch();
+        b = b.conv("main", 8, 3, 2, 1, 1, false);
+        let main = b.branch();
+        b = b.rewind(fork).conv1x1("proj", 8, 2);
+        b = b.merge_add("add", main);
+        let n = b.build();
+        let proj =
+            n.nodes.iter().position(|x| x.layer.name == "proj").unwrap();
+        assert_eq!(n.nodes[proj].inputs, vec![0]);
+        assert_eq!(n.layer(proj).out, Shape::Chw(8, 4, 4));
+        let add = n.len() - 1;
+        assert_eq!(n.layer(add).out, Shape::Chw(8, 4, 4));
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let mut b = NetworkBuilder::new("c", Shape::Chw(4, 8, 8))
+            .conv3x3("pre", 4);
+        let fork = b.branch();
+        b = b.conv3x3("left", 6);
+        let left = b.branch();
+        b = b.rewind(fork).conv3x3("right", 2);
+        b = b.merge_concat("cat", left);
+        let n = b.build();
+        assert_eq!(n.output(), Shape::Chw(8, 8, 8));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn mismatched_add_panics() {
+        let mut b = NetworkBuilder::new("x", Shape::Chw(4, 8, 8))
+            .conv3x3("pre", 4);
+        let fork = b.branch();
+        b = b.conv3x3("widen", 8);
+        let _ = b.merge_add("bad", fork);
+    }
+
+    #[test]
+    fn cut_marks_record_positions_in_order() {
+        let n = NetworkBuilder::new("m", Shape::Chw(3, 8, 8))
+            .conv3x3("c1", 4)
+            .relu("r1")
+            .cut_here("c1")
+            .maxpool2("p1")
+            .cut_here("p1")
+            .flatten("f")
+            .linear("fc", 10)
+            .build();
+        assert_eq!(
+            n.cut_marks,
+            vec![(1, "c1".to_string()), (3, "p1".to_string())]
+        );
     }
 }

@@ -1,0 +1,232 @@
+//! MobileNetV2 model definitions: the torchvision ImageNet variant with a
+//! width multiplier (golden at 1.0: 3,504,872 params) and a slim CIFAR
+//! geometry, on the DAG IR — inverted-residual blocks whose stride-1
+//! same-width instances carry an `Add` skip, so split enumeration excludes
+//! their interiors automatically.
+//!
+//! Split-point candidates (19 per network, stable ids `0..=18`): the stem
+//! conv, each of the 17 inverted-residual blocks, and the 1x1 head conv.
+
+use super::layer::{Network, NetworkBuilder, Shape};
+
+/// Inverted-residual plan: (expansion t, channels c, repeats n, stride s).
+pub const MOBILENETV2_CFG: [(usize, usize, usize, usize); 7] = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+];
+
+/// Round a scaled channel count to the nearest multiple of 8, never
+/// dropping below 90% of the requested width (torchvision's
+/// `_make_divisible`).
+pub fn make_divisible(v: f64, divisor: usize) -> usize {
+    let new_v = ((v + divisor as f64 / 2.0) as usize / divisor * divisor)
+        .max(divisor);
+    if (new_v as f64) < 0.9 * v {
+        new_v + divisor
+    } else {
+        new_v
+    }
+}
+
+/// One inverted residual: optional 1x1 expand (+BN+ReLU6), 3x3 depthwise
+/// (+BN+ReLU6), 1x1 linear project (+BN), with an `Add` skip when stride
+/// is 1 and the width is unchanged.
+fn inverted_residual(
+    mut b: NetworkBuilder,
+    name: &str,
+    in_ch: usize,
+    out_ch: usize,
+    stride: usize,
+    expand: usize,
+) -> NetworkBuilder {
+    let hidden = in_ch * expand;
+    let skip = b.branch();
+    if expand != 1 {
+        b = b
+            .conv1x1(&format!("{name}.expand"), hidden, 1)
+            .bn(&format!("{name}.expand_bn"))
+            .relu6(&format!("{name}.expand_relu"));
+    }
+    b = b
+        .dwconv3x3(&format!("{name}.dw"), stride)
+        .bn(&format!("{name}.dw_bn"))
+        .relu6(&format!("{name}.dw_relu"))
+        .conv1x1(&format!("{name}.project"), out_ch, 1)
+        .bn(&format!("{name}.project_bn"));
+    if stride == 1 && in_ch == out_ch {
+        b = b.merge_add(&format!("{name}.add"), skip);
+    }
+    b.cut_here(name)
+}
+
+fn build(
+    name: &str,
+    img_size: usize,
+    stem_stride: usize,
+    width_mult: f64,
+    last_channel: usize,
+    num_classes: usize,
+) -> Network {
+    let stem_ch = make_divisible(32.0 * width_mult, 8);
+    let mut b = NetworkBuilder::new(name, Shape::Chw(3, img_size, img_size))
+        .conv("stem", stem_ch, 3, stem_stride, 1, 1, false)
+        .bn("stem_bn")
+        .relu6("stem_relu")
+        .cut_here("stem");
+    let mut in_ch = stem_ch;
+    let mut idx = 0;
+    for (t, c, n, s) in MOBILENETV2_CFG {
+        let out_ch = make_divisible(c as f64 * width_mult, 8);
+        for i in 0..n {
+            idx += 1;
+            let stride = if i == 0 { s } else { 1 };
+            b = inverted_residual(
+                b,
+                &format!("block{idx}"),
+                in_ch,
+                out_ch,
+                stride,
+                t,
+            );
+            in_ch = out_ch;
+        }
+    }
+    b.conv1x1("head", last_channel, 1)
+        .bn("head_bn")
+        .relu6("head_relu")
+        .cut_here("head")
+        .adaptive_avgpool("avgpool", 1)
+        .flatten("flatten")
+        .dropout("dropout")
+        .linear("classifier", num_classes)
+        .build()
+}
+
+/// Torchvision MobileNetV2 at 224x224 / 1000 classes with a width
+/// multiplier. The head channel count never shrinks below 1280
+/// (`_make_divisible(1280 * max(1, width))`), matching torchvision.
+pub fn mobilenetv2(width_mult: f64) -> Network {
+    let last = make_divisible(1280.0 * width_mult.max(1.0), 8);
+    build("MobileNetV2", 224, 2, width_mult, last, 1000)
+}
+
+/// Slim CIFAR geometry: 32x32 input, stride-1 stem (the ImageNet stem
+/// would halve the map before the first block), head channels scaled by
+/// the width multiplier (no 1280 floor). Split-point ids match
+/// [`mobilenetv2`].
+pub fn mobilenetv2_cifar(width_mult: f64, num_classes: usize) -> Network {
+    let last = make_divisible(1280.0 * width_mult, 8);
+    build("MobileNetV2-cifar", 32, 1, width_mult, last, num_classes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::cut::{split_points, valid_cuts};
+
+    #[test]
+    fn mobilenetv2_torchvision_total_params() {
+        // Torchvision golden at width 1.0.
+        assert_eq!(mobilenetv2(1.0).total_params(), 3_504_872);
+    }
+
+    #[test]
+    fn make_divisible_matches_torchvision() {
+        assert_eq!(make_divisible(32.0, 8), 32);
+        assert_eq!(make_divisible(32.0 * 0.5, 8), 16);
+        assert_eq!(make_divisible(24.0 * 0.5, 8), 16); // 12 -> 16 (90% rule)
+        assert_eq!(make_divisible(4.0, 8), 8); // divisor floor
+        assert_eq!(make_divisible(96.0 * 0.5, 8), 48);
+    }
+
+    #[test]
+    fn imagenet_shapes_follow_the_stride_plan() {
+        let net = mobilenetv2(1.0);
+        let shape_of = |name: &str| {
+            net.layers().find(|l| l.name == name).unwrap().out
+        };
+        assert_eq!(shape_of("stem"), Shape::Chw(32, 112, 112));
+        assert_eq!(shape_of("block1.project_bn"), Shape::Chw(16, 112, 112));
+        assert_eq!(shape_of("block3.add"), Shape::Chw(24, 56, 56));
+        assert_eq!(shape_of("block17.project_bn"), Shape::Chw(320, 7, 7));
+        assert_eq!(shape_of("head"), Shape::Chw(1280, 7, 7));
+        assert_eq!(net.output(), Shape::Flat(1000));
+    }
+
+    #[test]
+    fn nineteen_split_points_with_conserved_macs() {
+        for net in [mobilenetv2(1.0), mobilenetv2_cifar(0.5, 10)] {
+            let pts = split_points(&net);
+            assert_eq!(pts.len(), 19, "{}", net.name);
+            assert_eq!(pts[0].name, "stem");
+            assert_eq!(pts[1].name, "block1");
+            assert_eq!(pts[17].name, "block17");
+            assert_eq!(pts[18].name, "head");
+            for p in &pts {
+                assert_eq!(
+                    p.head_mult_adds + p.tail_mult_adds,
+                    net.mult_adds(),
+                    "{} cut {}",
+                    net.name,
+                    p.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn residual_block_interiors_are_excluded() {
+        // block5 (32ch, stride 1) carries a skip; no valid cut may sit
+        // strictly inside it.
+        let net = mobilenetv2(1.0);
+        let cuts = valid_cuts(&net);
+        let first = net
+            .nodes
+            .iter()
+            .position(|n| n.layer.name == "block5.expand")
+            .unwrap();
+        let add = net
+            .nodes
+            .iter()
+            .position(|n| n.layer.name == "block5.add")
+            .unwrap();
+        for c in &cuts {
+            assert!(
+                c.pos < first || c.pos >= add,
+                "cut at node {} ({}) crosses block5's skip edge",
+                c.pos,
+                c.name
+            );
+        }
+        // Non-residual blocks (stride 2 or width change) cut anywhere.
+        assert!(net.layers().all(|l| l.name != "block2.add"));
+    }
+
+    #[test]
+    fn depthwise_blocks_are_cheaper_than_dense() {
+        // Depthwise 3x3 + pointwise 1x1 must undercut a dense 3x3 at the
+        // same shape — the whole point of the architecture.
+        let net = mobilenetv2(1.0);
+        let dw = net.layers().find(|l| l.name == "block4.dw").unwrap();
+        // block4 expands 24 -> 144 hidden channels before the depthwise.
+        let out_el = dw.out.elements() as u64;
+        let dense_equivalent = out_el * (144 * 9) as u64;
+        assert!(dw.mult_adds() * 10 < dense_equivalent);
+    }
+
+    #[test]
+    fn width_multiplier_scales_params_down() {
+        let full = mobilenetv2(1.0).total_params();
+        let half = mobilenetv2_cifar(0.5, 10).total_params();
+        assert!(half * 2 < full, "half {half} vs full {full}");
+        // Pinned regression values (verified against the transliterated
+        // reference).
+        assert_eq!(half, 590_410);
+        assert_eq!(mobilenetv2(1.0).mult_adds(), 300_775_272);
+    }
+}

@@ -1,16 +1,165 @@
-//! Model metadata subsystem: layer graphs, shapes, parameter/mult-add
-//! accounting (Tables I/II), per-layer activation/latent volumetrics, and
-//! device compute-time profiles.
+//! Model metadata subsystem: the DAG layer-graph IR ([`layer`]), graph-cut
+//! split enumeration ([`cut`]), the architecture zoo (VGG16, ResNet-18,
+//! MobileNetV2), parameter/mult-add accounting (Tables I/II), per-cut
+//! activation/latent volumetrics, and device compute-time profiles.
 
+pub mod cut;
 pub mod device;
 pub mod layer;
+pub mod mobilenet;
+pub mod resnet;
 pub mod stats;
 pub mod vgg;
 
+use anyhow::{bail, Result};
+
+pub use cut::{split_points, valid_cuts, Cut};
 pub use device::DeviceProfile;
-pub use layer::{Layer, LayerKind, Network, Shape};
+pub use layer::{Layer, LayerKind, Network, NetworkBuilder, Node, Shape};
+pub use mobilenet::{mobilenetv2, mobilenetv2_cifar};
+pub use resnet::{resnet18, resnet18_cifar};
 pub use stats::{model_stats, render_table1, render_table2, ModelStats};
 pub use vgg::{
     feature_layers, split_compute, vgg16_full, vgg16_slim, FeatureLayer,
     NUM_FEATURE_LAYERS,
 };
+
+/// Architecture axis of the design space: which network geometry drives
+/// volumetrics, compute costs and split-point enumeration. This is the
+/// single model-string parser — the CLI (`--arch`), sweep-spec JSON
+/// (`"archs"`) and examples all go through [`Arch::parse`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Arch {
+    /// The paper's VGG16 (18 chain split points).
+    #[default]
+    Vgg16,
+    /// ResNet-18 (10 block-boundary split points; residual interiors are
+    /// invalid cuts).
+    ResNet18,
+    /// MobileNetV2 (19 block-boundary split points).
+    MobileNetV2,
+}
+
+impl Arch {
+    pub const ALL: [Arch; 3] =
+        [Arch::Vgg16, Arch::ResNet18, Arch::MobileNetV2];
+
+    /// Parse an architecture name (case-insensitive; common dashed and
+    /// underscored spellings accepted).
+    pub fn parse(s: &str) -> Result<Arch> {
+        match s.to_ascii_lowercase().replace('-', "").replace('_', "")
+            .as_str()
+        {
+            "vgg16" => Ok(Arch::Vgg16),
+            "resnet18" => Ok(Arch::ResNet18),
+            "mobilenetv2" | "mobilenet" => Ok(Arch::MobileNetV2),
+            _ => bail!(
+                "unknown architecture '{s}' (valid: vgg16 | resnet18 | \
+                 mobilenetv2)"
+            ),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Arch::Vgg16 => "vgg16",
+            Arch::ResNet18 => "resnet18",
+            Arch::MobileNetV2 => "mobilenetv2",
+        }
+    }
+
+    /// Infer the architecture from a manifest `model.arch` string (e.g.
+    /// `"vgg16-slim-analytic"`, `"resnet18-analytic"`); unrecognized
+    /// strings default to VGG16, the original backend geometry.
+    pub fn infer(manifest_arch: &str) -> Arch {
+        let a = manifest_arch.to_ascii_lowercase();
+        if a.contains("resnet18") {
+            Arch::ResNet18
+        } else if a.contains("mobilenet") {
+            Arch::MobileNetV2
+        } else {
+            Arch::Vgg16
+        }
+    }
+
+    /// The paper-scale (224x224, 1000-class) network of this architecture.
+    pub fn full_network(&self) -> Network {
+        match self {
+            Arch::Vgg16 => vgg16_full(),
+            Arch::ResNet18 => resnet18(),
+            Arch::MobileNetV2 => mobilenetv2(1.0),
+        }
+    }
+
+    /// The slim (32x32-class, trained-artifact geometry) network. VGG uses
+    /// every manifest knob; ResNet-18 has no width knob (its CIFAR variant
+    /// is the standard 64-channel plan); MobileNetV2 honours the width
+    /// multiplier.
+    pub fn slim_network(
+        &self,
+        img_size: usize,
+        width_mult: f64,
+        hidden: usize,
+        num_classes: usize,
+    ) -> Network {
+        match self {
+            Arch::Vgg16 => {
+                vgg16_slim(img_size, width_mult, hidden, num_classes)
+            }
+            Arch::ResNet18 => resnet18_cifar(num_classes),
+            Arch::MobileNetV2 => mobilenetv2_cifar(width_mult, num_classes),
+        }
+    }
+}
+
+impl std::fmt::Display for Arch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arch_parse_roundtrips_and_aliases() {
+        for a in Arch::ALL {
+            assert_eq!(Arch::parse(a.as_str()).unwrap(), a);
+        }
+        assert_eq!(Arch::parse("ResNet-18").unwrap(), Arch::ResNet18);
+        assert_eq!(Arch::parse("mobilenet_v2").unwrap(), Arch::MobileNetV2);
+        assert_eq!(Arch::parse("VGG16").unwrap(), Arch::Vgg16);
+        let err = Arch::parse("alexnet").unwrap_err().to_string();
+        assert!(err.contains("vgg16") && err.contains("resnet18")
+                && err.contains("mobilenetv2"), "{err}");
+    }
+
+    #[test]
+    fn arch_infer_from_manifest_strings() {
+        assert_eq!(Arch::infer("vgg16-slim-analytic"), Arch::Vgg16);
+        assert_eq!(Arch::infer("resnet18-analytic"), Arch::ResNet18);
+        assert_eq!(Arch::infer("mobilenetv2-analytic"), Arch::MobileNetV2);
+        assert_eq!(Arch::infer("something-else"), Arch::Vgg16);
+    }
+
+    #[test]
+    fn full_networks_have_distinct_sizes() {
+        let vgg = Arch::Vgg16.full_network().mult_adds();
+        let res = Arch::ResNet18.full_network().mult_adds();
+        let mob = Arch::MobileNetV2.full_network().mult_adds();
+        // The zoo spans ~2 orders of magnitude of compute — that is what
+        // makes architecture a meaningful sweep axis.
+        assert!(mob < res && res < vgg, "{mob} {res} {vgg}");
+        assert!(vgg > 5 * res && res > 5 * mob);
+    }
+
+    #[test]
+    fn slim_networks_classify_into_n_classes() {
+        for a in Arch::ALL {
+            let n = a.slim_network(32, 0.5, 64, 10);
+            assert_eq!(n.output(), Shape::Flat(10), "{}", a.as_str());
+            assert!(!split_points(&n).is_empty());
+        }
+    }
+}

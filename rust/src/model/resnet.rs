@@ -1,0 +1,197 @@
+//! ResNet-18 model definitions: the torchvision ImageNet variant (Table-II
+//! style golden: 11,689,512 params) and a slim CIFAR-geometry variant, both
+//! expressed on the DAG IR — every residual block is a
+//! `branch`/`merge_add` subgraph, so split enumeration automatically
+//! excludes cuts whose frontier a skip edge would cross.
+//!
+//! Split-point candidates (10 per network, stable ids `0..=9`): the stem
+//! conv (+ maxpool for the ImageNet variant), then each BasicBlock's
+//! closing ReLU — the block boundaries where exactly one tensor crosses.
+
+use super::layer::{Network, NetworkBuilder, Shape};
+
+/// (stage, blocks, channels) of ResNet-18's four stages.
+pub const RESNET18_STAGES: [(usize, usize, usize); 4] =
+    [(1, 2, 64), (2, 2, 128), (3, 2, 256), (4, 2, 512)];
+
+/// One BasicBlock: conv3x3(s)-BN-ReLU-conv3x3-BN, residual add (identity
+/// shortcut, or 1x1-conv + BN projection when the shape changes), ReLU.
+fn basic_block(
+    mut b: NetworkBuilder,
+    name: &str,
+    out_ch: usize,
+    stride: usize,
+    in_ch: usize,
+) -> NetworkBuilder {
+    let skip = b.branch();
+    b = b
+        .conv(&format!("{name}.conv1"), out_ch, 3, stride, 1, 1, false)
+        .bn(&format!("{name}.bn1"))
+        .relu(&format!("{name}.relu1"))
+        .conv(&format!("{name}.conv2"), out_ch, 3, 1, 1, 1, false)
+        .bn(&format!("{name}.bn2"));
+    let main = b.branch();
+    let shortcut = if stride != 1 || in_ch != out_ch {
+        b = b
+            .rewind(skip)
+            .conv1x1(&format!("{name}.downsample.0"), out_ch, stride)
+            .bn(&format!("{name}.downsample.1"));
+        b.branch()
+    } else {
+        skip
+    };
+    b.rewind(main)
+        .merge_add(&format!("{name}.add"), shortcut)
+        .relu(&format!("{name}.relu2"))
+        .cut_here(name)
+}
+
+fn stages(mut b: NetworkBuilder, mut in_ch: usize) -> NetworkBuilder {
+    for (stage, blocks, ch) in RESNET18_STAGES {
+        for blk in 0..blocks {
+            let stride = if stage > 1 && blk == 0 { 2 } else { 1 };
+            let name = format!("layer{stage}.{blk}");
+            b = basic_block(b, &name, ch, stride, in_ch);
+            in_ch = ch;
+        }
+    }
+    b
+}
+
+/// Torchvision ResNet-18 at 224x224 / 1000 classes: 7x7-s2 stem, 3x3-s2
+/// maxpool, 4 stages of 2 BasicBlocks, global average pool, fc.
+pub fn resnet18() -> Network {
+    let mut b = NetworkBuilder::new("ResNet18", Shape::Chw(3, 224, 224))
+        .conv("conv1", 64, 7, 2, 3, 1, false)
+        .bn("bn1")
+        .relu("relu1")
+        .cut_here("conv1")
+        .maxpool("maxpool", 3, 2, 1)
+        .cut_here("maxpool");
+    b = stages(b, 64);
+    b.adaptive_avgpool("avgpool", 1)
+        .flatten("flatten")
+        .linear("fc", 1000)
+        .build()
+}
+
+/// CIFAR-geometry slim variant: 3x3-s1 stem (no downsampling maxpool —
+/// at 32x32 the ImageNet stem would collapse the map to 8x8 before the
+/// first block), same 4-stage BasicBlock plan. To keep the split-point
+/// count (and ids) aligned with [`resnet18`], the identity position of
+/// the removed maxpool is still marked as candidate 1.
+pub fn resnet18_cifar(num_classes: usize) -> Network {
+    let mut b = NetworkBuilder::new("ResNet18-cifar", Shape::Chw(3, 32, 32))
+        .conv("conv1", 64, 3, 1, 1, 1, false)
+        .bn("bn1")
+        .relu("relu1")
+        .cut_here("conv1")
+        .cut_here("maxpool");
+    b = stages(b, 64);
+    b.adaptive_avgpool("avgpool", 1)
+        .flatten("flatten")
+        .linear("fc", num_classes)
+        .build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::cut::{split_points, valid_cuts};
+
+    #[test]
+    fn resnet18_torchvision_total_params() {
+        // Torchvision golden: conv weights (bias-free) + BN affine pairs
+        // + fc = 11,689,512.
+        assert_eq!(resnet18().total_params(), 11_689_512);
+    }
+
+    #[test]
+    fn resnet18_stage_shapes() {
+        let net = resnet18();
+        let shape_of = |name: &str| {
+            net.layers().find(|l| l.name == name).unwrap().out
+        };
+        assert_eq!(shape_of("conv1"), Shape::Chw(64, 112, 112));
+        assert_eq!(shape_of("maxpool"), Shape::Chw(64, 56, 56));
+        assert_eq!(shape_of("layer2.0.add"), Shape::Chw(128, 28, 28));
+        assert_eq!(shape_of("layer4.1.add"), Shape::Chw(512, 7, 7));
+        assert_eq!(net.output(), Shape::Flat(1000));
+    }
+
+    #[test]
+    fn resnet18_has_ten_split_points_at_block_boundaries() {
+        for net in [resnet18(), resnet18_cifar(10)] {
+            let pts = split_points(&net);
+            assert_eq!(pts.len(), 10, "{}", net.name);
+            assert_eq!(pts[0].name, "conv1");
+            assert_eq!(pts[1].name, "maxpool");
+            assert_eq!(pts[2].name, "layer1.0");
+            assert_eq!(pts[9].name, "layer4.1");
+            for p in &pts {
+                assert_eq!(
+                    p.head_mult_adds + p.tail_mult_adds,
+                    net.mult_adds(),
+                    "{} cut {}",
+                    net.name,
+                    p.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn residual_interiors_are_not_valid_cuts() {
+        let net = resnet18();
+        let cuts = valid_cuts(&net);
+        // No valid frontier may sit strictly between a block's first conv
+        // and its merge: the skip edge would cross alongside the main
+        // path. Check layer1.0 (identity shortcut) explicitly.
+        let first = net
+            .nodes
+            .iter()
+            .position(|n| n.layer.name == "layer1.0.conv1")
+            .unwrap();
+        let add = net
+            .nodes
+            .iter()
+            .position(|n| n.layer.name == "layer1.0.add")
+            .unwrap();
+        for c in &cuts {
+            assert!(
+                c.pos < first || c.pos >= add,
+                "cut at node {} ({}) crosses the layer1.0 skip edge",
+                c.pos,
+                c.name
+            );
+        }
+    }
+
+    #[test]
+    fn projection_blocks_have_downsample_params() {
+        let net = resnet18();
+        assert!(net
+            .layers()
+            .any(|l| l.name == "layer2.0.downsample.0" && l.params() == 8192));
+        // Identity blocks have none.
+        assert!(!net.layers().any(|l| l.name == "layer1.0.downsample.0"));
+    }
+
+    #[test]
+    fn cifar_variant_keeps_split_ids_but_shrinks_compute() {
+        let full = resnet18();
+        let slim = resnet18_cifar(10);
+        let fp = split_points(&full);
+        let sp = split_points(&slim);
+        assert_eq!(fp.len(), sp.len());
+        for (f, s) in fp.iter().zip(&sp) {
+            assert_eq!(f.name, s.name);
+        }
+        assert!(slim.mult_adds() < full.mult_adds());
+        assert_eq!(slim.output(), Shape::Flat(10));
+        // Pinned regression values (verified against the transliterated
+        // reference): CIFAR variant params and ImageNet mult-adds.
+        assert_eq!(slim.total_params(), 11_173_962);
+        assert_eq!(full.mult_adds(), 1_814_074_344);
+    }
+}

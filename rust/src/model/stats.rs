@@ -15,8 +15,7 @@ pub struct SummaryRow {
 }
 
 pub fn summary_rows(net: &Network, batch: usize) -> Vec<SummaryRow> {
-    net.layers
-        .iter()
+    net.layers()
         .enumerate()
         .map(|(i, l)| SummaryRow {
             name: l.name.clone(),

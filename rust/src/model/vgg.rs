@@ -1,8 +1,14 @@
 //! VGG16 model definitions: the paper's full torchvision VGG16 (Tables I/II,
 //! Fig. 3/4 transmission volumetrics at 224x224) and the slim variant that
 //! matches the trained JAX model in `python/compile/model.py`.
+//!
+//! Both builders mark the 18 feature layers (13 conv+ReLU pairs, named
+//! after the conv, plus 5 pools) as split-point candidates, so
+//! [`super::cut::split_points`] reproduces the paper's Fig. 2 indexing
+//! `0..=17` exactly.
 
-use super::layer::{Network, NetworkBuilder, Shape};
+use super::cut::{split_points, Cut};
+use super::layer::{LayerKind, Network, NetworkBuilder, Shape};
 
 /// VGG16 conv plan: (block, convs, out channels).
 pub const VGG16_BLOCKS: [(usize, usize, usize); 5] =
@@ -11,7 +17,7 @@ pub const VGG16_BLOCKS: [(usize, usize, usize); 5] =
 /// Keras-style names of the 18 feature layers (13 conv + 5 pool), matching
 /// `python/compile/model.py::VGG16_LAYER_NAMES` and the paper's Fig. 2.
 pub fn feature_layer_names() -> Vec<String> {
-    let mut names = Vec::with_capacity(18);
+    let mut names = Vec::with_capacity(NUM_FEATURE_LAYERS);
     for (b, convs, _) in VGG16_BLOCKS {
         for c in 1..=convs {
             names.push(format!("block{b}_conv{c}"));
@@ -21,25 +27,51 @@ pub fn feature_layer_names() -> Vec<String> {
     names
 }
 
-pub const NUM_FEATURE_LAYERS: usize = 18;
+/// Number of feature layers, derived from the conv plan (one candidate
+/// per conv plus one per block pool) instead of a free-standing literal.
+pub const NUM_FEATURE_LAYERS: usize = num_feature_layers();
 
+const fn num_feature_layers() -> usize {
+    let mut n = 0;
+    let mut i = 0;
+    while i < VGG16_BLOCKS.len() {
+        n += VGG16_BLOCKS[i].1 + 1;
+        i += 1;
+    }
+    n
+}
+
+/// Channel width scaled by `width_mult`, rounded half-up (the old
+/// implementation silently truncated, so e.g. `scaled(30, 0.15)` lost
+/// almost half a channel), floored at 4 channels.
 fn scaled(ch: usize, width_mult: f64) -> usize {
-    ((ch as f64 * width_mult) as usize).max(4)
+    ((ch as f64 * width_mult + 0.5).floor() as usize).max(4)
+}
+
+fn features(mut b: NetworkBuilder, width_mult: Option<f64>) -> NetworkBuilder {
+    for (blk, convs, ch) in VGG16_BLOCKS {
+        let oc = width_mult.map(|m| scaled(ch, m)).unwrap_or(ch);
+        for c in 1..=convs {
+            b = b
+                .conv3x3(&format!("block{blk}_conv{c}"), oc)
+                .relu(&format!("block{blk}_relu{c}"))
+                .cut_here(&format!("block{blk}_conv{c}"));
+        }
+        b = b
+            .maxpool2(&format!("block{blk}_pool"))
+            .cut_here(&format!("block{blk}_pool"));
+    }
+    b
 }
 
 /// Torchvision VGG16 exactly as summarized in the paper's Table I:
 /// 224x224x3 input, avgpool to 7x7, classifier 4096/4096/1000 with ReLU and
 /// Dropout rows.
 pub fn vgg16_full() -> Network {
-    let mut b = NetworkBuilder::new("VGG16", Shape::Chw(3, 224, 224));
-    for (blk, convs, ch) in VGG16_BLOCKS {
-        for c in 1..=convs {
-            b = b
-                .conv3x3(&format!("block{blk}_conv{c}"), ch)
-                .relu(&format!("block{blk}_relu{c}"));
-        }
-        b = b.maxpool2(&format!("block{blk}_pool"));
-    }
+    let b = features(
+        NetworkBuilder::new("VGG16", Shape::Chw(3, 224, 224)),
+        None,
+    );
     b.adaptive_avgpool("avgpool", 7)
         .flatten("flatten")
         .linear("fc1", 4096)
@@ -57,19 +89,10 @@ pub fn vgg16_full() -> Network {
 /// stay in lockstep with `python/compile/model.py`.
 pub fn vgg16_slim(img_size: usize, width_mult: f64, hidden: usize,
                   num_classes: usize) -> Network {
-    let mut b = NetworkBuilder::new(
-        "VGG16-slim",
-        Shape::Chw(3, img_size, img_size),
+    let b = features(
+        NetworkBuilder::new("VGG16-slim", Shape::Chw(3, img_size, img_size)),
+        Some(width_mult),
     );
-    for (blk, convs, ch) in VGG16_BLOCKS {
-        let oc = scaled(ch, width_mult);
-        for c in 1..=convs {
-            b = b
-                .conv3x3(&format!("block{blk}_conv{c}"), oc)
-                .relu(&format!("block{blk}_relu{c}"));
-        }
-        b = b.maxpool2(&format!("block{blk}_pool"));
-    }
     b.flatten("flatten")
         .linear("fc0", hidden)
         .relu("fc0_relu")
@@ -78,7 +101,9 @@ pub fn vgg16_slim(img_size: usize, width_mult: f64, hidden: usize,
 }
 
 /// Metadata of one of the 18 feature layers (ReLU folded into its conv),
-/// indexed 0..17 as in the paper's Fig. 2 and the python model.
+/// indexed 0..17 as in the paper's Fig. 2 and the python model. Kept as
+/// the VGG-specific view of [`split_points`]; new code should use the
+/// arch-agnostic [`Cut`]s directly.
 #[derive(Clone, Debug)]
 pub struct FeatureLayer {
     pub index: usize,
@@ -105,61 +130,49 @@ impl FeatureLayer {
 }
 
 /// Extract the 18 feature layers of a (full or slim) VGG16 network built by
-/// this module, with cumulative-friendly per-layer costs.
+/// this module, as per-layer deltas of the marked split points.
 pub fn feature_layers(net: &Network) -> Vec<FeatureLayer> {
-    let mut out = Vec::with_capacity(NUM_FEATURE_LAYERS);
-    for l in &net.layers {
-        match l.kind {
-            super::layer::LayerKind::Conv2d { .. }
-                if l.name.starts_with("block") =>
-            {
-                out.push(FeatureLayer {
-                    index: out.len(),
-                    name: l.name.clone(),
-                    is_pool: false,
-                    out: l.out,
-                    params: l.params(),
-                    mult_adds: l.mult_adds(),
-                });
-            }
-            super::layer::LayerKind::MaxPool2 => {
-                out.push(FeatureLayer {
-                    index: out.len(),
-                    name: l.name.clone(),
-                    is_pool: true,
-                    out: l.out,
-                    params: 0,
-                    mult_adds: 0,
-                });
-            }
-            _ => {}
-        }
+    let pts: Vec<Cut> = split_points(net);
+    assert_eq!(pts.len(), NUM_FEATURE_LAYERS);
+    // Cumulative params up to each node, to attribute each cut segment's
+    // params to its candidate (the conv between two consecutive cuts).
+    let mut cum_params = vec![0u64; net.len()];
+    let mut acc = 0u64;
+    for (i, c) in cum_params.iter_mut().enumerate() {
+        acc += net.layer(i).params();
+        *c = acc;
     }
-    assert_eq!(out.len(), NUM_FEATURE_LAYERS);
+    let mut out = Vec::with_capacity(pts.len());
+    let mut prev_ma = 0u64;
+    let mut prev_p = 0u64;
+    for cut in &pts {
+        let is_pool = matches!(
+            net.layer(cut.source).kind,
+            LayerKind::MaxPool2 | LayerKind::MaxPool { .. }
+        );
+        let p = cum_params[cut.pos];
+        out.push(FeatureLayer {
+            index: cut.index,
+            name: cut.name.clone(),
+            is_pool,
+            out: cut.out,
+            params: p - prev_p,
+            mult_adds: cut.head_mult_adds - prev_ma,
+        });
+        prev_ma = cut.head_mult_adds;
+        prev_p = p;
+    }
     out
 }
 
 /// Mult-adds per image of the head (feature layers 0..=split, plus the
 /// bottleneck encoder conv) and of the tail (decoder conv + remaining
-/// feature layers + classifier).
+/// feature layers + classifier). VGG-indexed wrapper over
+/// [`Cut::split_compute`].
 pub fn split_compute(net: &Network, split: usize) -> (u64, u64) {
-    let feats = feature_layers(net);
-    assert!(split < NUM_FEATURE_LAYERS - 1, "split {split} out of range");
-    let head_feat: u64 = feats[..=split].iter().map(|f| f.mult_adds).sum();
-    let tail_feat: u64 = feats[split + 1..].iter().map(|f| f.mult_adds).sum();
-    let classifier: u64 = net
-        .layers
-        .iter()
-        .filter(|l| matches!(l.kind, super::layer::LayerKind::Linear { .. }))
-        .map(|l| l.mult_adds())
-        .sum();
-    // Bottleneck convs: encoder C->C/2 3x3 at the split's spatial size,
-    // decoder C/2->C (mirrors python/compile/bottleneck.py).
-    let Shape::Chw(c, h, w) = feats[split].out else { unreachable!() };
-    let zc = (c / 2).max(1);
-    let enc = (zc * h * w) as u64 * (c * 9) as u64 + (zc * h * w) as u64;
-    let dec = (c * h * w) as u64 * (zc * 9) as u64 + (c * h * w) as u64;
-    (head_feat + enc, dec + tail_feat + classifier)
+    let pts = split_points(net);
+    assert!(split < pts.len() - 1, "split {split} out of range");
+    pts[split].split_compute()
 }
 
 #[cfg(test)]
@@ -182,12 +195,12 @@ mod tests {
     #[test]
     fn vgg16_table1_spot_rows() {
         let net = vgg16_full();
-        let c1 = net.layers.iter().find(|l| l.name == "block1_conv1").unwrap();
+        let c1 = net.layers().find(|l| l.name == "block1_conv1").unwrap();
         assert_eq!(c1.params(), 1_792);
         assert_eq!(c1.out, Shape::Chw(64, 224, 224));
-        let fc1 = net.layers.iter().find(|l| l.name == "fc1").unwrap();
+        let fc1 = net.layers().find(|l| l.name == "fc1").unwrap();
         assert_eq!(fc1.params(), 102_764_544);
-        let fc3 = net.layers.iter().find(|l| l.name == "fc3").unwrap();
+        let fc3 = net.layers().find(|l| l.name == "fc3").unwrap();
         assert_eq!(fc3.params(), 4_097_000);
     }
 
@@ -204,6 +217,12 @@ mod tests {
     }
 
     #[test]
+    fn num_feature_layers_is_derived_from_the_conv_plan() {
+        assert_eq!(NUM_FEATURE_LAYERS, feature_layer_names().len());
+        assert_eq!(NUM_FEATURE_LAYERS, 18);
+    }
+
+    #[test]
     fn feature_layers_of_full_vgg16() {
         let f = feature_layers(&vgg16_full());
         assert_eq!(f.len(), 18);
@@ -213,6 +232,26 @@ mod tests {
         assert_eq!(f[11].latent_bytes(), 256 * 28 * 28 * 4);
         assert_eq!(f[15].out, Shape::Chw(512, 14, 14));
         assert_eq!(f[15].latent_bytes(), 256 * 14 * 14 * 4);
+    }
+
+    #[test]
+    fn feature_layers_match_the_layer_table() {
+        // The cut-based view must attribute params/MACs to the same rows
+        // the old linear scan did: conv candidates own their conv's
+        // params+MACs, pools own nothing.
+        let net = vgg16_full();
+        let f = feature_layers(&net);
+        let c1 = net.layers().find(|l| l.name == "block1_conv1").unwrap();
+        assert_eq!(f[0].params, c1.params());
+        assert_eq!(f[0].mult_adds, c1.mult_adds());
+        let c42 = net.layers().find(|l| l.name == "block4_conv2").unwrap();
+        assert_eq!(f[11].params, c42.params());
+        assert_eq!(f[11].mult_adds, c42.mult_adds());
+        for pool in [2usize, 5, 9, 13, 17] {
+            assert!(f[pool].is_pool);
+            assert_eq!(f[pool].params, 0);
+            assert_eq!(f[pool].mult_adds, 0);
+        }
     }
 
     #[test]
@@ -228,6 +267,36 @@ mod tests {
         assert_eq!(f[0].out, Shape::Chw(8, 32, 32));
         assert_eq!(f[17].out, Shape::Chw(64, 1, 1));
         assert_eq!(f[11].out, Shape::Chw(64, 4, 4));
+    }
+
+    #[test]
+    fn scaled_widths_regression() {
+        // The trained slim widths (width_mult 0.125) are exact halvings —
+        // the rounding change must not move them.
+        let f = feature_layers(&vgg16_slim(32, 0.125, 64, 10));
+        let widths: Vec<usize> = [0usize, 3, 7, 11, 15]
+            .iter()
+            .map(|&i| {
+                let Shape::Chw(c, _, _) = f[i].out else { unreachable!() };
+                c
+            })
+            .collect();
+        assert_eq!(widths, vec![8, 16, 32, 64, 64]);
+        // ...and the lite-model widths (0.0625) are pinned too.
+        let lite = feature_layers(&vgg16_slim(32, 0.0625, 48, 10));
+        let Shape::Chw(c0, _, _) = lite[0].out else { unreachable!() };
+        assert_eq!(c0, 4);
+    }
+
+    #[test]
+    fn scaled_rounds_half_up_instead_of_truncating() {
+        // 64 * 0.15 = 9.6 -> 10 (the old truncation said 9);
+        // 30 * 0.15 = 4.5 -> 5 (exactly half rounds up);
+        // the 4-channel floor still applies.
+        assert_eq!(scaled(64, 0.15), 10);
+        assert_eq!(scaled(30, 0.15), 5);
+        assert_eq!(scaled(8, 0.125), 4);
+        assert_eq!(scaled(64, 0.125), 8);
     }
 
     #[test]
@@ -251,5 +320,17 @@ mod tests {
             assert!(h > prev);
             prev = h;
         }
+    }
+
+    #[test]
+    fn split_points_match_feature_indexing() {
+        // The DAG cut enumeration reproduces the paper's 0..=17 indexing.
+        let pts = super::super::cut::split_points(&vgg16_full());
+        assert_eq!(pts.len(), NUM_FEATURE_LAYERS);
+        let names = feature_layer_names();
+        for (p, n) in pts.iter().zip(&names) {
+            assert_eq!(&p.name, n);
+        }
+        assert_eq!(pts[11].out, Shape::Chw(512, 28, 28));
     }
 }

@@ -9,7 +9,11 @@
 //! embedded target, with bit-identical results for a given seed.
 //!
 //! The synthetic model is a prototype-correlation classifier over the
-//! slim VGG16 geometry:
+//! configured architecture's slim geometry (VGG16 by default; ResNet-18
+//! and MobileNetV2 via [`AnalyticConfig::arch`] — cut names, latent
+//! shapes, exported splits, CS curve and the accuracy model all follow
+//! the arch, while prototypes and datasets stay shared so cross-arch
+//! sweeps classify the same frames):
 //!
 //!   * each class `c` has a fixed ±1 prototype `p_c` of input length;
 //!   * an image of class `c` is `1.0 + 0.25 p_c + 0.05 eta` (eta a ±1
@@ -43,7 +47,7 @@ use super::manifest::{
     SplitEvalRow,
 };
 use crate::data::Dataset;
-use crate::model::{self, Shape};
+use crate::model::{self, Arch, Cut, Shape};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -57,17 +61,73 @@ const GEN_ERR_ICE: f64 = 0.04;
 /// Extra deterministic misclassification rate of the lite model.
 const LITE_FLIP_RATE: f64 = 0.10;
 
-/// Exported split points (the paper's Fig. 2 candidates) and the split
-/// accuracies the synthetic manifest records for them.
+/// Exported VGG split points (the paper's Fig. 2 candidates) and the
+/// split accuracies the synthetic manifest records for them.
 const SPLITS: [usize; 5] = [5, 9, 11, 13, 15];
 const SPLIT_ACC: [f64; 5] = [0.952, 0.958, 0.961, 0.965, 0.968];
 
-/// Synthetic raw CS curve: local maxima exactly at the exported splits
+/// Synthetic raw VGG CS curve: local maxima exactly at the exported splits
 /// (plus layer 1, below the default `min_layer`).
 const CS_RAW: [f64; 18] = [
     0.05, 0.10, 0.08, 0.12, 0.20, 0.35, 0.18, 0.22, 0.30, 0.46, 0.38, 0.55,
     0.44, 0.66, 0.58, 0.83, 0.70, 0.92,
 ];
+
+/// The seeded accuracy model, keyed off the architecture the manifest
+/// advertises: `(full-model flip rate, base test accuracy, ICE accuracy)`.
+/// VGG16 keeps a zero flip rate (the original backend behaviour, and the
+/// exact head->tail composition its tests pin); the other architectures
+/// flip a deterministic content-hashed fraction of predictions so their
+/// measured accuracy lands on the recorded values — which makes the
+/// accuracy-vs-latency trade across architectures non-degenerate.
+fn arch_accuracy(arch: Arch) -> (f64, f64, f64) {
+    match arch {
+        Arch::Vgg16 => (0.0, 0.97, 0.96),
+        Arch::ResNet18 => (0.012, 0.958, 0.948),
+        Arch::MobileNetV2 => (0.03, 0.941, 0.931),
+    }
+}
+
+/// Exported split-point ids per architecture (cut indices into
+/// [`model::split_points`] of the slim network). Every arch exports cut
+/// id 5, so cross-arch sweep specs can share `sc@5`.
+fn arch_splits(arch: Arch) -> Vec<usize> {
+    match arch {
+        Arch::Vgg16 => SPLITS.to_vec(),
+        Arch::ResNet18 => vec![3, 5, 7],
+        Arch::MobileNetV2 => vec![5, 9, 12, 15],
+    }
+}
+
+/// Synthetic raw CS curve for `n` cut points with local maxima exactly at
+/// `splits`: a rising base trend, damped at non-split positions. VGG keeps
+/// its original hand-shaped table.
+fn arch_cs_raw(arch: Arch, n: usize, splits: &[usize]) -> Vec<f64> {
+    if arch == Arch::Vgg16 {
+        return CS_RAW.to_vec();
+    }
+    (0..n)
+        .map(|i| {
+            let base = (i + 1) as f64 / n as f64;
+            if splits.contains(&i) {
+                base
+            } else {
+                base * 0.7
+            }
+        })
+        .collect()
+}
+
+/// Recorded split accuracies: monotone in depth, just under the arch's
+/// base accuracy (the fine-tuned split models of the paper's Fig. 2).
+fn arch_split_acc(arch: Arch, splits: &[usize]) -> Vec<f64> {
+    if arch == Arch::Vgg16 {
+        return SPLIT_ACC.to_vec();
+    }
+    let (_, base, _) = arch_accuracy(arch);
+    let n = splits.len();
+    (0..n).map(|k| base - 0.002 * (n - k) as f64).collect()
+}
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
@@ -137,8 +197,9 @@ enum Body {
     Classifier { flip_rate: f64 },
     /// Bottleneck encoder into the split's latent shape.
     Head { signs: Rc<Vec<f32>> },
-    /// Latent-space classifier over the projected prototypes.
-    Tail { w_protos: Vec<Vec<f64>> },
+    /// Latent-space classifier over the projected prototypes (the flip
+    /// rate mirrors the arch's full-model accuracy).
+    Tail { w_protos: Vec<Vec<f64>>, flip_rate: f64 },
     /// Per-image cumulative-saliency value of one feature layer.
     GradCam { cs_raw: f64 },
 }
@@ -209,9 +270,11 @@ impl AnalyticExec {
             .collect()
     }
 
-    fn tail_row(&self, row: &[f32], w_protos: &[Vec<f64>]) -> Vec<f32> {
+    fn tail_row(&self, row: &[f32], w_protos: &[Vec<f64>], flip_rate: f64)
+        -> Vec<f32>
+    {
         let nc = self.num_classes;
-        let (_, damaged) = damage_check(row, self.family_hash, nc);
+        let (h, damaged) = damage_check(row, self.family_hash, nc);
         if let Some(c) = damaged {
             return one_hot(c, nc);
         }
@@ -222,6 +285,14 @@ impl AnalyticExec {
                 acc += wj * ((x as f64 - 1.0) / 0.5);
             }
             scores.push(acc / self.n_input as f64);
+        }
+        if flip_rate > 0.0 {
+            let h2 = h.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            if hash_frac(h2) < flip_rate {
+                let top = argmax(&scores);
+                let wrong = (top + 1 + (h % (nc as u64 - 1)) as usize) % nc;
+                return one_hot(wrong, nc);
+            }
         }
         scores.iter().map(|s| *s as f32).collect()
     }
@@ -295,8 +366,8 @@ impl Executable for AnalyticExec {
                     let latent_len = out_elems / batch;
                     out.extend(self.head_row(row, signs, latent_len));
                 }
-                Body::Tail { w_protos } => {
-                    out.extend(self.tail_row(row, w_protos));
+                Body::Tail { w_protos, flip_rate } => {
+                    out.extend(self.tail_row(row, w_protos, *flip_rate));
                 }
                 Body::GradCam { cs_raw } => {
                     out.push(self.gradcam_row(row, *cs_raw));
@@ -322,11 +393,20 @@ pub struct AnalyticConfig {
     /// Extra seed folded into every synthetic stream; 0 is the canonical
     /// deterministic default used by tests and CI.
     pub seed: u64,
+    /// Architecture the backend serves (manifest geometry, split points,
+    /// executables, accuracy model). Defaults to VGG16 — the original
+    /// backend, byte-identical to the pre-zoo behaviour.
+    pub arch: Arch,
 }
 
 /// The hermetic analytic backend (see module docs).
 pub struct AnalyticBackend {
     seed_mix: u64,
+    /// Extra hash folded into per-arch streams (0 for VGG16, keeping the
+    /// original backend bit-identical).
+    arch_mix: u64,
+    /// Full-model flip rate of the arch's seeded accuracy model.
+    arch_flip: f64,
     manifest: Manifest,
     protos: Rc<Vec<Vec<f32>>>,
     n_input: usize,
@@ -338,13 +418,32 @@ pub struct AnalyticBackend {
     datasets: RefCell<HashMap<String, Dataset>>,
 }
 
+/// The slim network geometry each arch's backend is built around.
+fn slim_network_of(arch: Arch) -> model::Network {
+    match arch {
+        Arch::Vgg16 => model::vgg16_slim(32, 0.125, 64, 10),
+        Arch::ResNet18 => model::resnet18_cifar(10),
+        Arch::MobileNetV2 => model::mobilenetv2_cifar(0.5, 10),
+    }
+}
+
 impl AnalyticBackend {
     pub fn new(cfg: AnalyticConfig) -> AnalyticBackend {
         let seed_mix = cfg.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        let slim = model::vgg16_slim(32, 0.125, 64, 10);
-        let manifest = synth_manifest(&slim);
+        let arch = cfg.arch;
+        let arch_mix = if arch == Arch::Vgg16 {
+            0
+        } else {
+            fnv1a(FNV_OFFSET, arch.as_str().as_bytes())
+        };
+        let slim = slim_network_of(arch);
+        let cuts = model::split_points(&slim);
+        let manifest = synth_manifest(arch, &slim, &cuts);
         let m = &manifest.model;
         let n_input = 3 * m.img_size * m.img_size;
+        // Prototypes and datasets are deliberately arch-independent: all
+        // backends classify the same synthetic frames, so sweeps over the
+        // arch axis share one dataset.
         let protos: Vec<Vec<f32>> = (0..m.num_classes)
             .map(|c| {
                 let mut rng = Rng::new(
@@ -357,12 +456,14 @@ impl AnalyticBackend {
             .collect();
         let lite_ma =
             model::vgg16_slim(32, 0.0625, 48, m.num_classes).mult_adds();
-        let split_ma = SPLITS
+        let split_ma = arch_splits(arch)
             .iter()
-            .map(|&s| (s, model::split_compute(&slim, s)))
+            .map(|&s| (s, cuts[s].split_compute()))
             .collect();
         AnalyticBackend {
             seed_mix,
+            arch_mix,
+            arch_flip: arch_accuracy(arch).0,
             full_ma: slim.mult_adds(),
             lite_ma,
             split_ma,
@@ -378,7 +479,8 @@ impl AnalyticBackend {
         let mut rng = Rng::new(
             BASE_SEED
                 .wrapping_add(0x5EAD + split as u64 * 0x101)
-                .wrapping_add(self.seed_mix),
+                .wrapping_add(self.seed_mix)
+                .wrapping_add(self.arch_mix),
         );
         sign_stream(&mut rng, self.n_input)
     }
@@ -414,10 +516,12 @@ impl AnalyticBackend {
                 .split_layer
                 .or(spec.gradcam_layer)
                 .unwrap_or(usize::MAX) as u64;
-            fnv1a(h, &tag.to_le_bytes()).wrapping_add(self.seed_mix)
+            fnv1a(h, &tag.to_le_bytes())
+                .wrapping_add(self.seed_mix)
+                .wrapping_add(self.arch_mix)
         };
         let body = match spec.kind.as_str() {
-            "full" => Body::Classifier { flip_rate: 0.0 },
+            "full" => Body::Classifier { flip_rate: self.arch_flip },
             "lite" => Body::Classifier { flip_rate: LITE_FLIP_RATE },
             "head" => {
                 let split = spec
@@ -446,13 +550,15 @@ impl AnalyticBackend {
                         w
                     })
                     .collect();
-                Body::Tail { w_protos }
+                Body::Tail { w_protos, flip_rate: self.arch_flip }
             }
             "gradcam" => {
                 let layer = spec.gradcam_layer.ok_or_else(|| {
                     anyhow!("{}: gradcam without layer", spec.name)
                 })?;
-                Body::GradCam { cs_raw: CS_RAW[layer] }
+                Body::GradCam {
+                    cs_raw: self.manifest.cs_curve.raw[layer],
+                }
             }
             other => bail!("{}: unknown analytic kind '{other}'", spec.name),
         };
@@ -607,31 +713,44 @@ fn mk_exec(
     }
 }
 
-/// Build the synthetic manifest for the slim model geometry.
-fn synth_manifest(slim: &model::Network) -> Manifest {
+/// Build the synthetic manifest for one arch's slim model geometry: cut
+/// names become the layer names, cut crossing shapes the feature shapes,
+/// and the exported splits / CS curve / accuracies come from the seeded
+/// per-arch model ([`arch_splits`], [`arch_cs_raw`], [`arch_accuracy`]).
+fn synth_manifest(arch: Arch, slim: &model::Network, cuts: &[Cut])
+    -> Manifest
+{
     let num_classes = 10usize;
     let img = 32usize;
-    let feats = model::feature_layers(slim);
-    let feature_shapes: Vec<[usize; 3]> = feats
+    let feature_shapes: Vec<[usize; 3]> = cuts
         .iter()
-        .map(|f| {
-            let Shape::Chw(c, h, w) = f.out else {
-                unreachable!("feature layers are CHW")
+        .map(|c| {
+            let Shape::Chw(ch, h, w) = c.out else {
+                unreachable!("split-point crossings are CHW")
             };
-            [c, h, w]
+            [ch, h, w]
         })
         .collect();
+    let (_, base_acc, ice_acc) = arch_accuracy(arch);
+    let splits = arch_splits(arch);
+    let split_acc = arch_split_acc(arch, &splits);
+    let cs_raw = arch_cs_raw(arch, cuts.len(), &splits);
+    let (arch_name, width_mult, hidden) = match arch {
+        Arch::Vgg16 => ("vgg16-slim-analytic", 0.125, 64),
+        Arch::ResNet18 => ("resnet18-analytic", 1.0, 0),
+        Arch::MobileNetV2 => ("mobilenetv2-analytic", 0.5, 0),
+    };
     let model_info = ModelInfo {
-        arch: "vgg16-slim-analytic".to_string(),
-        width_mult: 0.125,
+        arch: arch_name.to_string(),
+        width_mult,
         num_classes,
         img_size: img,
-        hidden: 64,
-        layer_names: model::vgg::feature_layer_names(),
+        hidden,
+        layer_names: cuts.iter().map(|c| c.name.clone()).collect(),
         feature_shapes: feature_shapes.clone(),
         total_params: slim.total_params(),
-        base_test_accuracy: 0.97,
-        ice_accuracy: 0.96,
+        base_test_accuracy: base_acc,
+        ice_accuracy: ice_acc,
     };
 
     let mut datasets = BTreeMap::new();
@@ -647,21 +766,21 @@ fn synth_manifest(slim: &model::Network) -> Manifest {
         );
     }
 
-    let lo = CS_RAW.iter().cloned().fold(f64::INFINITY, f64::min);
-    let hi = CS_RAW.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let lo = cs_raw.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = cs_raw.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
     let cs_curve = CsCurveSpec {
-        norm: CS_RAW.iter().map(|v| (v - lo) / (hi - lo)).collect(),
-        raw: CS_RAW.to_vec(),
-        candidates: SPLITS.to_vec(),
+        norm: cs_raw.iter().map(|v| (v - lo) / (hi - lo)).collect(),
+        raw: cs_raw,
+        candidates: splits.clone(),
     };
 
     let latent_of = |s: usize| -> [usize; 3] {
         let [c, h, w] = feature_shapes[s];
         [(c / 2).max(1), h, w]
     };
-    let split_eval: Vec<SplitEvalRow> = SPLITS
+    let split_eval: Vec<SplitEvalRow> = splits
         .iter()
-        .zip(SPLIT_ACC.iter())
+        .zip(split_acc.iter())
         .map(|(&s, &acc)| {
             let [c, h, w] = feature_shapes[s];
             let [zc, zh, zw] = latent_of(s);
@@ -716,7 +835,7 @@ fn synth_manifest(slim: &model::Network) -> Manifest {
             vec![arg("logits", logit_shape(b), "float32")],
         ));
     }
-    for &s in &SPLITS {
+    for &s in &splits {
         let [zc, zh, zw] = latent_of(s);
         for b in [1usize, 16] {
             add(mk_exec(
@@ -741,7 +860,7 @@ fn synth_manifest(slim: &model::Network) -> Manifest {
             ));
         }
     }
-    for l in 0..model::NUM_FEATURE_LAYERS {
+    for l in 0..cuts.len() {
         add(mk_exec(
             format!("gradcam_L{l}_b16"),
             "gradcam",
@@ -971,10 +1090,99 @@ mod tests {
 
     #[test]
     fn seeds_change_the_streams() {
-        let a = AnalyticBackend::new(AnalyticConfig { seed: 1 });
+        let a = AnalyticBackend::new(AnalyticConfig {
+            seed: 1,
+            ..AnalyticConfig::default()
+        });
         let b = backend();
         let da = a.dataset("test").unwrap();
         let db = b.dataset("test").unwrap();
         assert_ne!(da.images.data(), db.images.data());
+    }
+
+    fn arch_backend(arch: Arch) -> AnalyticBackend {
+        AnalyticBackend::new(AnalyticConfig { seed: 0, arch })
+    }
+
+    #[test]
+    fn arch_backends_are_well_formed() {
+        for arch in Arch::ALL {
+            let b = arch_backend(arch);
+            let m = b.manifest();
+            assert_eq!(Arch::infer(&m.model.arch), arch);
+            assert_eq!(m.available_splits(), arch_splits(arch));
+            assert_eq!(
+                m.model.layer_names.len(),
+                m.model.feature_shapes.len()
+            );
+            assert_eq!(m.gradcam_layers().len(), m.model.layer_names.len());
+            // The synthetic CS curve's local maxima are exactly the
+            // exported splits for every arch, not just VGG.
+            let curve =
+                crate::coordinator::CsCurve::from_manifest(m);
+            assert_eq!(curve.candidates(2), arch_splits(arch), "{arch:?}");
+        }
+    }
+
+    #[test]
+    fn arch_backends_reach_their_recorded_accuracy() {
+        for arch in Arch::ALL {
+            let b = arch_backend(arch);
+            let acc = accuracy(&b, "full_fwd_b16", 256);
+            let base = b.manifest().model.base_test_accuracy;
+            assert!(
+                (acc - base).abs() < 0.05,
+                "{arch:?}: measured {acc} vs recorded {base}"
+            );
+        }
+    }
+
+    #[test]
+    fn datasets_are_arch_independent() {
+        // The arch axis shares one synthetic dataset: sweeps load it once.
+        let v = arch_backend(Arch::Vgg16).dataset("test").unwrap();
+        let r = arch_backend(Arch::ResNet18).dataset("test").unwrap();
+        let m = arch_backend(Arch::MobileNetV2).dataset("test").unwrap();
+        assert_eq!(v.images.data(), r.images.data());
+        assert_eq!(v.images.data(), m.images.data());
+        assert_eq!(v.labels, r.labels);
+        assert_eq!(v.labels, m.labels);
+    }
+
+    #[test]
+    fn arch_split_executables_run_end_to_end() {
+        for arch in [Arch::ResNet18, Arch::MobileNetV2] {
+            let b = arch_backend(arch);
+            let test = b.dataset("test").unwrap();
+            let x = test.batch(0, 16).unwrap();
+            for &s in &arch_splits(arch) {
+                let head =
+                    b.executable(&format!("head_L{s}_b16")).unwrap();
+                let tail =
+                    b.executable(&format!("tail_L{s}_b16")).unwrap();
+                let z = head.run(&[RtInput::F32(&x)]).unwrap();
+                let spec_latent = head.spec().latent_shape.unwrap();
+                assert_eq!(
+                    z.shape()[1..],
+                    spec_latent[..],
+                    "{arch:?} head L{s}"
+                );
+                let logits = tail.run(&[RtInput::F32(&z)]).unwrap();
+                assert_eq!(logits.shape(), &[16, 10]);
+            }
+        }
+    }
+
+    #[test]
+    fn weaker_archs_flip_some_predictions() {
+        // The seeded accuracy model must differentiate the archs: the
+        // MobileNet backend (3% flip rate) classifies strictly fewer test
+        // frames correctly than the flip-free VGG backend on the shared
+        // dataset.
+        let v = arch_backend(Arch::Vgg16);
+        let m = arch_backend(Arch::MobileNetV2);
+        let va = accuracy(&v, "full_fwd_b16", 256);
+        let ma = accuracy(&m, "full_fwd_b16", 256);
+        assert!(ma < va, "mobilenet {ma} vs vgg {va}");
     }
 }

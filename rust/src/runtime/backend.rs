@@ -86,22 +86,36 @@ pub trait InferenceBackend {
     fn cached(&self) -> Vec<String>;
 }
 
-/// Open the best available backend for `dir`:
+/// Open the best available backend for `dir` serving the default
+/// architecture (VGG16). Equivalent to
+/// [`load_backend_for(dir, Arch::Vgg16)`](load_backend_for).
+pub fn load_backend(dir: &Path) -> Result<Box<dyn InferenceBackend>> {
+    load_backend_for(dir, crate::model::Arch::Vgg16)
+}
+
+/// Open the best available backend for `dir` serving `arch`:
 ///
 /// * with the `xla` feature and a built `dir/manifest.json`, the real
-///   PJRT engine over the AOT artifacts;
+///   PJRT engine over the AOT artifacts — VGG16 only (the python AOT
+///   pipeline exports the slim VGG); other archs fall through to the
+///   analytic backend, which synthesises their geometry;
 /// * otherwise the hermetic analytic backend (ignores `dir`; synthesises
-///   everything in memory).
-pub fn load_backend(dir: &Path) -> Result<Box<dyn InferenceBackend>> {
+///   everything in memory for the requested arch).
+pub fn load_backend_for(
+    dir: &Path,
+    arch: crate::model::Arch,
+) -> Result<Box<dyn InferenceBackend>> {
     #[cfg(feature = "xla")]
     {
-        if dir.join("manifest.json").exists() {
+        if arch == crate::model::Arch::Vgg16
+            && dir.join("manifest.json").exists()
+        {
             return Ok(Box::new(super::engine::Engine::load(dir)?));
         }
     }
     #[cfg(not(feature = "xla"))]
     let _ = dir;
     Ok(Box::new(super::analytic::AnalyticBackend::new(
-        super::analytic::AnalyticConfig::default(),
+        super::analytic::AnalyticConfig { seed: 0, arch },
     )))
 }

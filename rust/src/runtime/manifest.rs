@@ -278,6 +278,14 @@ impl Manifest {
         })
     }
 
+    /// The architecture this manifest's artifacts belong to, inferred
+    /// from the `model.arch` string (unknown strings mean VGG16, the
+    /// original geometry). Scenario costing and split enumeration key off
+    /// this.
+    pub fn arch(&self) -> crate::model::Arch {
+        crate::model::Arch::infer(&self.model.arch)
+    }
+
     pub fn executable(&self, name: &str) -> Result<&ExecSpec> {
         self.executables
             .get(name)
@@ -396,6 +404,12 @@ mod tests {
         assert_eq!(m.cs_curve.candidates, vec![1]);
         assert_eq!(m.split_eval[0].latent_shape, [4, 32, 32]);
         assert!(m.fast);
+    }
+
+    #[test]
+    fn arch_is_inferred_from_the_model_string() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.arch(), crate::model::Arch::Vgg16);
     }
 
     #[test]

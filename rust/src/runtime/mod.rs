@@ -26,7 +26,8 @@ pub mod manifest;
 
 pub use analytic::{AnalyticBackend, AnalyticConfig};
 pub use backend::{
-    load_backend, ExecCounters, Executable, InferenceBackend, RtInput,
+    load_backend, load_backend_for, ExecCounters, Executable,
+    InferenceBackend, RtInput,
 };
 #[cfg(feature = "xla")]
 pub use engine::{Engine, LoadedExec};

@@ -8,13 +8,20 @@ use std::path::Path;
 
 use sei::coordinator::{
     self, CsCurve, ModelScale, QosRequirements, ScenarioConfig, ScenarioKind,
+    SweepSpec,
 };
-use sei::model::DeviceProfile;
+use sei::model::{Arch, DeviceProfile};
 use sei::netsim::transfer::{NetworkConfig, Protocol};
-use sei::runtime::{load_backend, Executable, InferenceBackend};
+use sei::runtime::{
+    load_backend, load_backend_for, Executable, InferenceBackend,
+};
 
 fn engine() -> Box<dyn InferenceBackend> {
     load_backend(Path::new("artifacts")).expect("backend")
+}
+
+fn engine_for(arch: Arch) -> Box<dyn InferenceBackend> {
+    load_backend_for(Path::new("artifacts"), arch).expect("backend")
 }
 
 fn cfg(kind: ScenarioKind, proto: Protocol, loss: f64) -> ScenarioConfig {
@@ -222,7 +229,7 @@ fn paper_scale_fig3_shape_holds() {
             net: NetworkConfig::gigabit(Protocol::Tcp, loss, 11),
             edge: DeviceProfile::edge_gpu(),
             server: DeviceProfile::server_gpu(),
-            scale: ModelScale::Vgg16Full,
+            scale: ModelScale::Full,
             frame_period_ns: 50_000_000,
         };
         let lats = coordinator::simulate_latency(&*engine, &c, 200)
@@ -238,6 +245,93 @@ fn paper_scale_fig3_shape_holds() {
     assert!(
         mean(11, 0.08) > mean(15, 0.08),
         "L11 must degrade faster than L15"
+    );
+}
+
+#[test]
+fn suggest_ranks_dag_cuts_for_resnet_and_mobilenet() {
+    // The acceptance check of the model-IR refactor: `suggest` on a
+    // skip-connection architecture returns non-trivial cut rankings —
+    // SC candidates exist, carry block-boundary cut names, and every
+    // offered split id is one of the arch's valid (non-interior) cuts.
+    for (arch, name_prefixes) in [
+        (Arch::ResNet18, &["layer", "maxpool", "conv1"][..]),
+        (Arch::MobileNetV2, &["block", "stem", "head"][..]),
+    ] {
+        let engine = engine_for(arch);
+        let test = engine.dataset("test").unwrap();
+        let qos = QosRequirements::ice_lab();
+        let suggestions = coordinator::suggest(
+            &*engine,
+            &NetworkConfig::gigabit(Protocol::Tcp, 0.0, 7),
+            &DeviceProfile::edge_gpu(),
+            &DeviceProfile::server_gpu(),
+            &qos,
+            &test,
+            32,
+            2,
+        )
+        .unwrap();
+        let sc: Vec<_> = suggestions
+            .iter()
+            .filter(|s| matches!(s.rank.kind, ScenarioKind::Sc { .. }))
+            .collect();
+        assert!(sc.len() >= 2, "{arch:?}: {} SC candidates", sc.len());
+        let n_cuts = engine.manifest().model.layer_names.len();
+        for s in &sc {
+            let ScenarioKind::Sc { split } = s.rank.kind else {
+                unreachable!()
+            };
+            assert!(split < n_cuts - 1, "{arch:?} split {split}");
+            let cut = s.rank.cut_name.as_deref().unwrap();
+            assert!(
+                name_prefixes.iter().any(|p| cut.starts_with(p)),
+                "{arch:?}: unexpected cut name '{cut}'"
+            );
+            assert!(s.report.frames == 32);
+            assert!(s.report.accuracy > 0.5);
+        }
+    }
+}
+
+#[test]
+fn arch_sweep_pareto_frontier_spans_architectures() {
+    // Architecture as a design axis: at paper scale the zoo trades
+    // accuracy (VGG16 highest) against compute (MobileNetV2 ~50x
+    // cheaper), so the accuracy-vs-latency frontier of a cross-arch RC
+    // sweep must retain at least two different architectures.
+    let mut spec = SweepSpec::new("arch-pareto");
+    spec.scenarios = vec![ScenarioKind::Rc];
+    spec.protocols = vec![Protocol::Tcp];
+    spec.loss_rates = vec![0.0];
+    spec.scales = vec![ModelScale::Full];
+    spec.archs = vec![Arch::Vgg16, Arch::ResNet18, Arch::MobileNetV2];
+    spec.frames = 192;
+    spec.seeds_per_point = 2;
+    let report = coordinator::run_sweep(&spec, 2, &|arch| {
+        load_backend_for(Path::new("artifacts"), arch)
+    })
+    .unwrap();
+    assert_eq!(report.points.len(), 3);
+    // Latency strictly follows model size at paper scale.
+    let lat = |a: Arch| {
+        report
+            .points
+            .iter()
+            .find(|p| p.arch == a)
+            .unwrap()
+            .mean_latency_ns
+    };
+    assert!(lat(Arch::MobileNetV2) < lat(Arch::ResNet18));
+    assert!(lat(Arch::ResNet18) < lat(Arch::Vgg16));
+    let frontier_archs: std::collections::BTreeSet<&str> = report
+        .pareto
+        .iter()
+        .map(|&i| report.points[i].arch.as_str())
+        .collect();
+    assert!(
+        frontier_archs.len() >= 2,
+        "frontier holds one arch only: {frontier_archs:?}"
     );
 }
 

@@ -1,0 +1,168 @@
+//! Model IR & zoo property tests: for every architecture in the zoo and
+//! every enumerated graph cut, compute is conserved (head MACs + tail
+//! MACs == whole-network MACs), the crossing-tensor byte count equals the
+//! cut edge's shape, split-point ids are stable across scales, and
+//! residual interiors are never offered as cuts.
+
+use sei::model::{
+    self, split_points, valid_cuts, Arch, LayerKind, Network, Shape,
+};
+
+fn zoo() -> Vec<Network> {
+    let mut nets = Vec::new();
+    for arch in Arch::ALL {
+        nets.push(arch.full_network());
+        nets.push(arch.slim_network(32, 0.5, 64, 10));
+    }
+    // The actual trained slim geometry too.
+    nets.push(model::vgg16_slim(32, 0.125, 64, 10));
+    nets
+}
+
+#[test]
+fn every_cut_conserves_mult_adds() {
+    for net in zoo() {
+        let total = net.mult_adds();
+        let cuts = valid_cuts(&net);
+        assert!(!cuts.is_empty(), "{}", net.name);
+        for c in cuts.iter().chain(split_points(&net).iter()) {
+            assert_eq!(
+                c.head_mult_adds + c.tail_mult_adds,
+                total,
+                "{} cut '{}' at pos {}",
+                net.name,
+                c.name,
+                c.pos
+            );
+        }
+    }
+}
+
+#[test]
+fn crossing_bytes_equal_the_cut_edge_shape() {
+    for net in zoo() {
+        for c in valid_cuts(&net) {
+            // The crossing tensor is the source node's output: its f32
+            // byte count is what the netsim would transfer uncompressed.
+            assert_eq!(
+                c.crossing_bytes(),
+                net.layer(c.source).out.bytes_f32() as u64,
+                "{} cut '{}'",
+                net.name,
+                c.name
+            );
+            assert_eq!(c.out, net.layer(c.source).out);
+            // The 50% bottleneck halves the leading dimension.
+            assert!(c.latent_bytes() <= c.crossing_bytes());
+            // Bottleneck compute is strictly positive: split serving is
+            // never free.
+            let (enc, dec) = c.bottleneck_mult_adds();
+            assert!(enc > 0 && dec > 0);
+        }
+    }
+}
+
+#[test]
+fn split_point_ids_are_dense_and_scale_stable() {
+    for arch in Arch::ALL {
+        let full = split_points(&arch.full_network());
+        let slim = split_points(&arch.slim_network(32, 0.5, 64, 10));
+        assert_eq!(full.len(), slim.len(), "{}", arch.as_str());
+        for (i, (f, s)) in full.iter().zip(&slim).enumerate() {
+            assert_eq!(f.index, i);
+            assert_eq!(s.index, i);
+            assert_eq!(f.name, s.name, "{} id {i}", arch.as_str());
+        }
+        // Head compute grows monotonically with the cut id.
+        for w in full.windows(2) {
+            assert!(w[1].head_mult_adds >= w[0].head_mult_adds);
+        }
+    }
+}
+
+#[test]
+fn skip_connections_exclude_interior_cuts() {
+    // Every Add merge in the zoo implies a contiguous run of invalid cut
+    // positions strictly between its fork and the merge node.
+    for net in [Arch::ResNet18.full_network(),
+                Arch::MobileNetV2.full_network()] {
+        let cuts = valid_cuts(&net);
+        let valid: Vec<usize> = cuts.iter().map(|c| c.pos).collect();
+        let mut residual_blocks = 0;
+        for (v, node) in net.nodes.iter().enumerate() {
+            if !matches!(node.layer.kind, LayerKind::Add) {
+                continue;
+            }
+            residual_blocks += 1;
+            // Positions strictly between the merge's earliest input and
+            // the merge itself have a second edge (the other branch)
+            // crossing the frontier — none may be offered as a cut.
+            let earliest = *node.inputs.iter().min().unwrap();
+            for pos in earliest + 1..v {
+                assert!(
+                    !valid.contains(&pos),
+                    "{}: cut at {pos} crosses a branch of merge '{}'",
+                    net.name,
+                    node.layer.name
+                );
+            }
+            // The post-merge frontier is always a valid single-tensor cut.
+            assert!(valid.contains(&v), "{}", node.layer.name);
+        }
+        assert!(residual_blocks >= 6, "{}", net.name);
+        // And no split point is ever an interior position.
+        for p in split_points(&net) {
+            assert!(valid.contains(&p.pos), "{} '{}'", net.name, p.name);
+        }
+    }
+}
+
+#[test]
+fn zoo_goldens() {
+    assert_eq!(Arch::Vgg16.full_network().total_params(), 138_357_544);
+    assert_eq!(Arch::ResNet18.full_network().total_params(), 11_689_512);
+    assert_eq!(
+        Arch::MobileNetV2.full_network().total_params(),
+        3_504_872
+    );
+}
+
+#[test]
+fn table_renderers_accept_every_arch() {
+    // Table I/II generation is DAG-agnostic: it renders any zoo network.
+    for arch in Arch::ALL {
+        let net = arch.full_network();
+        let t1 = model::render_table1(&net, 16);
+        let t2 = model::render_table2(&net, 16);
+        assert!(t1.contains("Conv2d"), "{}", arch.as_str());
+        assert!(t2.contains("Total params"), "{}", arch.as_str());
+        match arch {
+            Arch::Vgg16 => assert!(t2.contains("138.357.544")),
+            Arch::ResNet18 => {
+                assert!(t1.contains("BatchNorm2d"));
+                assert!(t2.contains("11.689.512"));
+            }
+            Arch::MobileNetV2 => {
+                assert!(t1.contains("ReLU6"));
+                assert!(t2.contains("3.504.872"));
+            }
+        }
+    }
+}
+
+#[test]
+fn cut_shapes_are_chw_in_the_feature_extractor() {
+    // Split points (the transmittable candidates) are all feature maps —
+    // the classifier tail is never offered as a cut.
+    for net in zoo() {
+        for p in split_points(&net) {
+            assert!(
+                matches!(p.out, Shape::Chw(..)),
+                "{} '{}' crosses {:?}",
+                net.name,
+                p.name,
+                p.out
+            );
+        }
+    }
+}

@@ -171,7 +171,7 @@ fn overload_diverges_from_open_loop() {
     // Paper-scale RC input (~602 kB -> ~4.9 ms on the uplink) offered at
     // 1000 FPS: far past the channel's capacity.
     let c = cfg(ScenarioKind::Rc, Protocol::Udp, 0.0,
-                ModelScale::Vgg16Full, 1_000_000);
+                ModelScale::Full, 1_000_000);
     let closed = coordinator::simulate_latency(&*engine, &c, 64).unwrap();
     let open = simulate_latency_open_loop(&*engine, &c, 64).unwrap();
     let mean = |v: &[u64]| {
@@ -202,7 +202,7 @@ fn per_frame_latency_monotone_in_offered_load() {
     for &fps in &ladder {
         let sc = StreamConfig {
             scenario: cfg(ScenarioKind::Rc, Protocol::Udp, 0.0,
-                          ModelScale::Vgg16Full, (1e9 / fps) as u64),
+                          ModelScale::Full, (1e9 / fps) as u64),
             clients: 1,
             frames_per_client: 48,
             batch: BatchPolicy::immediate(),
@@ -302,7 +302,7 @@ fn throughput_plateaus_past_bottleneck() {
     let run = |fps: f64| {
         let sc = StreamConfig {
             scenario: cfg(ScenarioKind::Rc, Protocol::Udp, 0.0,
-                          ModelScale::Vgg16Full, (1e9 / fps) as u64),
+                          ModelScale::Full, (1e9 / fps) as u64),
             clients: 1,
             frames_per_client: 64,
             batch: BatchPolicy::immediate(),

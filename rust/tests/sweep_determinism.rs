@@ -5,16 +5,17 @@
 use std::path::Path;
 
 use sei::coordinator::{
-    run_sweep, ScenarioKind, SweepMode, SweepSpec,
+    run_sweep, ModelScale, ScenarioKind, SweepMode, SweepSpec,
 };
+use sei::model::Arch;
 use sei::netsim::transfer::Protocol;
 use sei::report::pareto::dominates;
-use sei::runtime::{load_backend, InferenceBackend};
+use sei::runtime::{load_backend_for, InferenceBackend};
 
-fn factory() -> anyhow::Result<Box<dyn InferenceBackend>> {
+fn factory(arch: Arch) -> anyhow::Result<Box<dyn InferenceBackend>> {
     // No artifacts directory in the test environment: this loads the
     // hermetic analytic backend, which is bit-reproducible per seed.
-    load_backend(Path::new("artifacts"))
+    load_backend_for(Path::new("artifacts"), arch)
 }
 
 fn grid_spec() -> SweepSpec {
@@ -145,6 +146,40 @@ fn streaming_axes_are_thread_count_invariant() {
             p.throughput_fps,
             offered_agg
         );
+    }
+}
+
+#[test]
+fn arch_axis_is_thread_count_invariant() {
+    // The new arch grid axis must preserve the headline guarantee: a
+    // sweep spanning the whole zoo produces byte-identical reports at
+    // every worker-thread count (workers open per-arch backends lazily,
+    // in whatever order the job counter deals them).
+    let mut spec = SweepSpec::new("arch-determinism");
+    spec.scenarios = vec![
+        ScenarioKind::Lc,
+        ScenarioKind::Rc,
+        ScenarioKind::Sc { split: 5 },
+    ];
+    spec.protocols = vec![Protocol::Tcp, Protocol::Udp];
+    spec.loss_rates = vec![0.0, 0.05];
+    spec.scales = vec![ModelScale::Slim, ModelScale::Full];
+    spec.archs = vec![Arch::Vgg16, Arch::ResNet18, Arch::MobileNetV2];
+    spec.frames = 12;
+    spec.max_latency_ms = 50.0;
+    spec.min_accuracy = 0.9;
+    let one = run_sweep(&spec, 1, &factory).unwrap();
+    let eight = run_sweep(&spec, 8, &factory).unwrap();
+    assert_eq!(one.points.len(), 3 * 2 * 2 * 2 * 3);
+    assert_eq!(
+        one.to_json().to_string(),
+        eight.to_json().to_string(),
+        "arch-axis sweep JSON must not depend on the thread count"
+    );
+    assert_eq!(one.to_csv().to_string(), eight.to_csv().to_string());
+    // Every zoo arch actually reported points.
+    for arch in Arch::ALL {
+        assert!(one.points.iter().any(|p| p.arch == arch));
     }
 }
 
