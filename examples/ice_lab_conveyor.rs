@@ -43,14 +43,14 @@ fn main() -> anyhow::Result<()> {
     );
 
     for loss in [0.0, 0.02, 0.05] {
-        let cfg = ScenarioConfig {
-            kind: ScenarioKind::Sc { split },
-            net: NetworkConfig::gigabit(Protocol::Tcp, loss, 1234),
-            edge: DeviceProfile::edge_gpu(),
-            server: DeviceProfile::server_gpu(),
-            scale: ModelScale::Slim,
-            frame_period_ns: 50_000_000,
-        };
+        let cfg = ScenarioConfig::two_tier(
+            ScenarioKind::Sc { split },
+            NetworkConfig::gigabit(Protocol::Tcp, loss, 1234),
+            DeviceProfile::edge_gpu(),
+            DeviceProfile::server_gpu(),
+            ModelScale::Slim,
+            50_000_000,
+        );
         let report = coordinator::serve(&*engine, &cfg, &ice, frames,
                                         &qos)?;
         println!("--- loss rate {:.0}% ---", loss * 100.0);

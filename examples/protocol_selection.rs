@@ -29,14 +29,14 @@ fn main() -> anyhow::Result<()> {
     for loss in [0.0, 0.01, 0.03, 0.05, 0.08, 0.10] {
         let mut row = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
         for protocol in [Protocol::Tcp, Protocol::Udp] {
-            let cfg = ScenarioConfig {
-                kind: ScenarioKind::Rc,
-                net: NetworkConfig::gigabit(protocol, loss, 99),
-                edge: DeviceProfile::edge_gpu(),
-                server: DeviceProfile::server_gpu(),
-                scale: ModelScale::Slim,
-                frame_period_ns: 50_000_000,
-            };
+            let cfg = ScenarioConfig::two_tier(
+                ScenarioKind::Rc,
+                NetworkConfig::gigabit(protocol, loss, 99),
+                DeviceProfile::edge_gpu(),
+                DeviceProfile::server_gpu(),
+                ModelScale::Slim,
+                50_000_000,
+            );
             let r = coordinator::run_scenario(&*engine, &cfg, &test, 128,
                                               &qos)?;
             match protocol {

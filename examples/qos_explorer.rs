@@ -40,15 +40,15 @@ fn main() -> anyhow::Result<()> {
     let loss = 0.02;
     for (cname, make) in channels {
         for protocol in [Protocol::Tcp, Protocol::Udp] {
-            for &kind in &kinds {
-                let cfg = ScenarioConfig {
-                    kind,
-                    net: make(protocol, loss, 7),
-                    edge: DeviceProfile::edge_gpu(),
-                    server: DeviceProfile::server_gpu(),
-                    scale: ModelScale::Slim,
-                    frame_period_ns: 50_000_000,
-                };
+            for kind in &kinds {
+                let cfg = ScenarioConfig::two_tier(
+                    kind.clone(),
+                    make(protocol, loss, 7),
+                    DeviceProfile::edge_gpu(),
+                    DeviceProfile::server_gpu(),
+                    ModelScale::Slim,
+                    50_000_000,
+                );
                 let r = coordinator::run_scenario(&*engine, &cfg, &test,
                                                   64, &qos)?;
                 let ok = qos

@@ -53,14 +53,14 @@ fn main() -> anyhow::Result<()> {
              qos.describe());
     for kind in [ScenarioKind::Lc, ScenarioKind::Rc,
                  ScenarioKind::Sc { split }] {
-        let cfg = ScenarioConfig {
-            kind,
-            net: NetworkConfig::gigabit(Protocol::Tcp, 0.02, 7),
-            edge: DeviceProfile::edge_gpu(),
-            server: DeviceProfile::server_gpu(),
-            scale: ModelScale::Slim,
-            frame_period_ns: 50_000_000,
-        };
+        let cfg = ScenarioConfig::two_tier(
+            kind.clone(),
+            NetworkConfig::gigabit(Protocol::Tcp, 0.02, 7),
+            DeviceProfile::edge_gpu(),
+            DeviceProfile::server_gpu(),
+            ModelScale::Slim,
+            50_000_000,
+        );
         let r = coordinator::run_scenario(&*engine, &cfg, &test, 96,
                                           &qos)?;
         println!(
@@ -80,8 +80,7 @@ fn main() -> anyhow::Result<()> {
     let suggestions = coordinator::suggest(
         &*engine,
         &NetworkConfig::gigabit(Protocol::Tcp, 0.02, 7),
-        &DeviceProfile::edge_gpu(),
-        &DeviceProfile::server_gpu(),
+        &[DeviceProfile::edge_gpu(), DeviceProfile::server_gpu()],
         &qos,
         &test,
         96,

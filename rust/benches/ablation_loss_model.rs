@@ -69,14 +69,14 @@ fn main() {
                 let mut net =
                     NetworkConfig::gigabit(Protocol::Udp, loss, 555);
                 net.loss_model = model;
-                let cfg = ScenarioConfig {
-                    kind: ScenarioKind::Rc,
+                let cfg = ScenarioConfig::two_tier(
+                    ScenarioKind::Rc,
                     net,
-                    edge: DeviceProfile::edge_gpu(),
-                    server: DeviceProfile::server_gpu(),
-                    scale: ModelScale::Slim,
-                    frame_period_ns: 50_000_000,
-                };
+                    DeviceProfile::edge_gpu(),
+                    DeviceProfile::server_gpu(),
+                    ModelScale::Slim,
+                    50_000_000,
+                );
                 let r = run_scenario(&*engine, &cfg, &test, FRAMES,
                                      &QosRequirements::none())
                     .expect("scenario");

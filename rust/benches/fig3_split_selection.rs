@@ -187,6 +187,61 @@ fn main() {
         ]));
     }
 
+    // -- multi-tier axis: the same question with the head pushed onto a
+    //    sensor NPU — SC@11 two-tier vs MC chains ending at the same cut
+    //    over sensor -> edge -> cloud, paper scale. -----------------------
+    let mut mc_spec = SweepSpec::new("fig3_multi_tier");
+    mc_spec.mode = SweepMode::LatencyOnly;
+    mc_spec.scenarios = vec![ScenarioKind::Sc { split: 11 }];
+    mc_spec.cut_chains = vec![vec![5, 11], vec![9, 11]];
+    mc_spec.tiers = vec![
+        vec!["edge-gpu".into(), "server-gpu".into()],
+        vec![
+            "sensor-npu".into(),
+            "edge-gpu".into(),
+            "server-gpu".into(),
+        ],
+    ];
+    mc_spec.protocols = vec![Protocol::Tcp];
+    mc_spec.loss_rates = vec![0.0, 0.05];
+    mc_spec.scales = vec![ModelScale::Full];
+    mc_spec.frames = frames.min(120);
+    mc_spec.seeds_per_point = seeds.min(2);
+    mc_spec.seed = 1000;
+    mc_spec.frame_period_ns = 50_000_000;
+    mc_spec.max_latency_ms = CONSTRAINT_S * 1e3;
+    let mc_sweep = run_sweep(&mc_spec, threads, &|arch| {
+        load_backend_for(Path::new("artifacts"), arch)
+    })
+    .expect("multi-tier sweep");
+    println!("\nmulti-tier placement at cut 11 (paper scale, TCP):");
+    let mut mc_rows = Vec::new();
+    for p in &mc_sweep.points {
+        println!(
+            "  {:<10} over {:<38} loss {:>4.1}%  mean {:>8.2} ms  \
+             p95 {:>8.2} ms",
+            p.kind.to_string(),
+            p.tiers.join(">"),
+            p.loss * 100.0,
+            p.mean_latency_ns / 1e6,
+            p.p95_latency_ns as f64 / 1e6,
+        );
+        mc_rows.push(json::obj(vec![
+            ("scenario", json::s(&p.kind.to_string())),
+            ("tiers", json::s(&p.tiers.join(">"))),
+            ("loss", json::num(p.loss)),
+            ("mean_latency_ms", json::num(p.mean_latency_ns / 1e6)),
+            (
+                "p95_latency_ms",
+                json::num(p.p95_latency_ns as f64 / 1e6),
+            ),
+            (
+                "deadline_hit_rate",
+                p.deadline_hit_rate.map(json::num).unwrap_or(Json::Null),
+            ),
+        ]));
+    }
+
     // Merge the per-arch rows into the shared perf-trajectory file (CI
     // points SEI_BENCH_JSON at BENCH_netsim.json, which netsim_micro has
     // already written — read-modify-write keeps its sections). A file
@@ -209,8 +264,12 @@ fn main() {
         };
         if let Json::Obj(map) = &mut doc {
             map.insert("fig3_arch".to_string(), json::arr(arch_rows));
+            map.insert("fig3_mc".to_string(), json::arr(mc_rows));
         }
         std::fs::write(&path, doc.to_string()).unwrap();
-        println!("\nmerged per-arch rows into {path} (key: fig3_arch)");
+        println!(
+            "\nmerged per-arch + multi-tier rows into {path} \
+             (keys: fig3_arch, fig3_mc)"
+        );
     }
 }

@@ -51,14 +51,14 @@ fn main() {
     let mut rows: Vec<(f64, f64, f64, f64, usize, f64)> = Vec::new();
     for &fps in ladder {
         let cfg = StreamConfig {
-            scenario: ScenarioConfig {
-                kind: ScenarioKind::Rc,
-                net: NetworkConfig::gigabit(Protocol::Udp, 0.0, 7),
-                edge: DeviceProfile::edge_gpu(),
-                server: DeviceProfile::server_gpu(),
-                scale: ModelScale::Full,
-                frame_period_ns: (1e9 / fps) as u64,
-            },
+            scenario: ScenarioConfig::two_tier(
+                ScenarioKind::Rc,
+                NetworkConfig::gigabit(Protocol::Udp, 0.0, 7),
+                DeviceProfile::edge_gpu(),
+                DeviceProfile::server_gpu(),
+                ModelScale::Full,
+                (1e9 / fps) as u64,
+            ),
             clients,
             frames_per_client: frames,
             batch: BatchPolicy::immediate(),

@@ -1,5 +1,5 @@
-//! Scenario engine: LC / RC / SC pipelines over the simulated channel with
-//! *real* model inference (paper Sec. IV: supervisor / sensing / XMTR /
+//! Scenario engine: LC / RC / SC / MC pipelines over the simulated channel
+//! with *real* model inference (paper Sec. IV: supervisor / sensing / XMTR /
 //! netsim / RCVR).
 //!
 //! Each frame of the workload runs the full pipeline:
@@ -8,7 +8,12 @@
 //!   RC: [edge: capture] -> XMTR(input) -> netsim -> [server: full model]
 //!       -> XMTR(result) -> netsim -> prediction at the edge
 //!   SC: [edge: head + AE encoder] -> XMTR(latent) -> netsim ->
-//!       [server: AE decoder + tail] -> XMTR(result) -> netsim -> prediction
+//!       [server: AE decoder + tail] -> XMTR(result) -> netsim ->
+//!       prediction at the edge
+//!   MC: k ordered cuts over one topological order — k+1 segments on a
+//!       chain of tiers (sensor -> edge -> cloud), every inter-tier hop a
+//!       distinct netsim channel; the result returns hop by hop. `mc@i`
+//!       over two tiers reproduces `sc@i` byte-identically.
 //!
 //! *Latency* is simulated time: device-profile compute + discrete-event
 //! transfer. *Accuracy* is measured: the backend's executables run on the
@@ -26,7 +31,8 @@
 //! [`run_scenario_open_loop`] / [`simulate_latency_open_loop`] — a
 //! reference implementation used by regression tests to pin the low-load
 //! equivalence of the two engines and to demonstrate their divergence
-//! under overload.
+//! under overload. The open-loop reference predates multi-tier placement
+//! and deliberately supports only the two-tier kinds.
 
 use anyhow::{bail, Result};
 
@@ -40,33 +46,78 @@ use crate::netsim::Dir;
 use crate::runtime::{Executable, InferenceBackend, RtInput};
 use crate::tensor::Tensor;
 
-/// Architecture under test (paper Sec. II-A).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Architecture under test (paper Sec. II-A, extended with the multi-tier
+/// placement axis). No longer `Copy`: the multi-cut variant owns its cut
+/// chain — clone deliberately where a scenario kind crosses an API.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ScenarioKind {
     /// Local-only computing: lightweight model on the sensing device.
     Lc,
     /// Remote-only computing: raw input to the server.
     Rc,
-    /// Split computing at feature layer `split`.
+    /// Split computing at feature layer `split` (two tiers).
     Sc { split: usize },
+    /// Multi-tier split computing: `cuts.len()` ordered cuts partition the
+    /// network into `cuts.len() + 1` segments over a tier chain; each
+    /// inter-tier hop is its own queued channel.
+    Mc { cuts: Vec<usize> },
 }
 
 impl ScenarioKind {
-    /// Parse `"lc" | "rc" | "sc@<layer>"` (case-insensitive; `sc@L13` and
-    /// `sc@13` are both accepted, so [`std::fmt::Display`] round-trips).
+    /// Parse `"lc" | "rc" | "sc@<layer>" | "mc@<c1>,<c2>,..."`
+    /// (case-insensitive; layer ids accept an optional `L` prefix, so
+    /// `sc@L13`, `sc@13` and `mc@L4,L11` all work and
+    /// [`std::fmt::Display`] round-trips).
     pub fn parse(s: &str) -> Result<ScenarioKind> {
         let t = s.to_ascii_lowercase();
+        let layer = |tok: &str| -> Result<usize> {
+            let tok = tok.strip_prefix('l').unwrap_or(tok);
+            Ok(tok.parse()?)
+        };
         match t.as_str() {
             "lc" => Ok(ScenarioKind::Lc),
             "rc" => Ok(ScenarioKind::Rc),
             other => {
                 if let Some(rest) = other.strip_prefix("sc@") {
-                    let rest = rest.strip_prefix('l').unwrap_or(rest);
-                    Ok(ScenarioKind::Sc { split: rest.parse()? })
+                    Ok(ScenarioKind::Sc { split: layer(rest)? })
+                } else if let Some(rest) = other.strip_prefix("mc@") {
+                    // An empty (or trailing-comma) cut list would surface
+                    // as a bare integer-parse error from the empty token;
+                    // catch it here for a useful diagnostic.
+                    if rest.split(',').any(|tok| tok.is_empty()) {
+                        bail!(
+                            "mc@ needs a comma-separated list of cuts \
+                             (e.g. mc@4,11), got '{s}'"
+                        );
+                    }
+                    let cuts: Vec<usize> = rest
+                        .split(',')
+                        .map(layer)
+                        .collect::<Result<_>>()?;
+                    if !model::is_ordered_chain(&cuts) {
+                        bail!(
+                            "mc@ cuts must be strictly increasing \
+                             (one topological order), got '{s}'"
+                        );
+                    }
+                    Ok(ScenarioKind::Mc { cuts })
                 } else {
-                    bail!("scenario must be lc | rc | sc@<layer>, got '{s}'")
+                    bail!(
+                        "scenario must be lc | rc | sc@<layer> | \
+                         mc@<c1>,<c2>,..., got '{s}'"
+                    )
                 }
             }
+        }
+    }
+
+    /// Number of device tiers this kind occupies: 1 for LC, 2 for RC/SC,
+    /// `cuts + 1` for MC.
+    pub fn tiers_needed(&self) -> usize {
+        match self {
+            ScenarioKind::Lc => 1,
+            ScenarioKind::Rc | ScenarioKind::Sc { .. } => 2,
+            ScenarioKind::Mc { cuts } => cuts.len() + 1,
         }
     }
 }
@@ -77,6 +128,16 @@ impl std::fmt::Display for ScenarioKind {
             ScenarioKind::Lc => write!(f, "LC"),
             ScenarioKind::Rc => write!(f, "RC"),
             ScenarioKind::Sc { split } => write!(f, "SC@L{split}"),
+            ScenarioKind::Mc { cuts } => {
+                write!(f, "MC@")?;
+                for (i, c) in cuts.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "L{c}")?;
+                }
+                Ok(())
+            }
         }
     }
 }
@@ -98,12 +159,16 @@ pub enum ModelScale {
 
 impl ModelScale {
     /// Parse `"slim" | "full"` (case-insensitive; the historical
-    /// `"vgg16"` spelling is accepted as an alias for `full`).
+    /// `"vgg16"` / `"vgg16-full"` spellings are accepted as aliases for
+    /// `full`).
     pub fn parse(s: &str) -> Result<ModelScale> {
         match s.to_ascii_lowercase().as_str() {
             "slim" => Ok(ModelScale::Slim),
             "full" | "vgg16" | "vgg16-full" => Ok(ModelScale::Full),
-            other => bail!("unknown model scale '{other}' (slim | full)"),
+            other => bail!(
+                "unknown model scale '{other}' (slim | full; 'vgg16' and \
+                 'vgg16-full' are accepted as aliases for full)"
+            ),
         }
     }
 
@@ -115,17 +180,70 @@ impl ModelScale {
     }
 }
 
+/// Seed stride between the per-hop channels of a tier chain: hop `h`
+/// simulates on `net.seed + h * HOP_SEED_STRIDE`, so hop 0 keeps the
+/// configured seed exactly (the two-tier degenerate-equivalence anchor)
+/// while later hops draw decorrelated loss patterns.
+const HOP_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
+
 #[derive(Clone, Debug)]
 pub struct ScenarioConfig {
     pub kind: ScenarioKind,
+    /// Channel settings shared by every inter-tier hop (each hop gets its
+    /// own [`Channel`] instance, seeded via [`ScenarioConfig::hop_net`]).
     pub net: NetworkConfig,
-    pub edge: DeviceProfile,
-    pub server: DeviceProfile,
+    /// Device tier chain, sensor side first. LC runs on `tiers[0]`; RC and
+    /// SC use the first and last tiers (intermediate tiers, if any, are
+    /// bypassed — a direct sensor→cloud channel); MC with k cuts needs
+    /// exactly k+1 tiers.
+    pub tiers: Vec<DeviceProfile>,
     pub scale: ModelScale,
     /// Frame inter-arrival time (conveyor speed); 0 = closed-loop
     /// back-to-back (the source emits the next frame the moment the
     /// previous one completes).
     pub frame_period_ns: SimTime,
+}
+
+impl ScenarioConfig {
+    /// The classic two-tier configuration (edge + server).
+    pub fn two_tier(
+        kind: ScenarioKind,
+        net: NetworkConfig,
+        edge: DeviceProfile,
+        server: DeviceProfile,
+        scale: ModelScale,
+        frame_period_ns: SimTime,
+    ) -> ScenarioConfig {
+        ScenarioConfig {
+            kind,
+            net,
+            tiers: vec![edge, server],
+            scale,
+            frame_period_ns,
+        }
+    }
+
+    /// The sensor-side tier (first in the chain).
+    pub fn edge(&self) -> &DeviceProfile {
+        &self.tiers[0]
+    }
+
+    /// The cloud-side tier (last in the chain).
+    pub fn server(&self) -> &DeviceProfile {
+        self.tiers.last().expect("scenario config with no tiers")
+    }
+
+    /// The [`NetworkConfig`] of inter-tier hop `h`: the shared channel
+    /// settings with a per-hop seed (hop 0 keeps the configured seed, so
+    /// two-tier scenarios are unchanged byte-for-byte).
+    pub fn hop_net(&self, hop: usize) -> NetworkConfig {
+        let mut net = self.net.clone();
+        net.seed = self
+            .net
+            .seed
+            .wrapping_add((hop as u64).wrapping_mul(HOP_SEED_STRIDE));
+        net
+    }
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -166,12 +284,23 @@ pub struct ScenarioReport {
 }
 
 impl ScenarioReport {
+    /// Reduce per-frame records to a report. A zero-frame stream is an
+    /// error: the old code divided by `n.max(1)` and fabricated accuracy
+    /// 0.0 / mean 0.0 for an empty record set, which read as a real (and
+    /// catastrophically bad) measurement downstream.
     pub(crate) fn from_records(
         cfg: &ScenarioConfig,
         records: Vec<FrameRecord>,
         qos: &QosRequirements,
-    ) -> ScenarioReport {
-        let n = records.len().max(1);
+    ) -> Result<ScenarioReport> {
+        if records.is_empty() {
+            bail!(
+                "scenario {} produced no frame records; refusing to \
+                 report metrics for an empty stream",
+                cfg.kind
+            );
+        }
+        let n = records.len();
         let accuracy =
             records.iter().filter(|r| r.correct).count() as f64 / n as f64;
         let mean_latency_ns =
@@ -191,8 +320,8 @@ impl ScenarioReport {
         } else {
             None
         };
-        ScenarioReport {
-            kind: cfg.kind,
+        Ok(ScenarioReport {
+            kind: cfg.kind.clone(),
             protocol: cfg.net.protocol,
             loss_rate: cfg.net.loss_rate,
             frames: records.len(),
@@ -207,18 +336,27 @@ impl ScenarioReport {
             deadline_hit_rate,
             qos_satisfied,
             records,
-        }
+        })
     }
 }
 
-/// Volumetrics + compute costs resolved for a (kind, scale) pair.
+/// Volumetrics + compute costs resolved for a (kind, scale, tiers) triple:
+/// per-tier segment compute and per-hop uplink payloads.
 pub(crate) struct Costs {
-    /// Bytes on the wire for the uplink payload (input or latent).
-    pub(crate) up_bytes: u64,
-    /// Result payload (class scores).
+    /// Bytes on the wire of each inter-tier uplink hop (input for RC,
+    /// latents for SC/MC); empty for LC.
+    pub(crate) up_bytes: Vec<u64>,
+    /// Result payload (class scores), returned hop by hop in reverse.
     pub(crate) down_bytes: u64,
-    pub(crate) edge_mult_adds: u64,
-    pub(crate) server_mult_adds: u64,
+    /// Mult-adds of each pipeline segment, sensor side first
+    /// (`len == up_bytes.len() + 1`).
+    pub(crate) seg_mult_adds: Vec<u64>,
+}
+
+impl Costs {
+    pub(crate) fn hops(&self) -> usize {
+        self.up_bytes.len()
+    }
 }
 
 /// The network whose volumetrics/compute drive a scenario: the backend
@@ -244,6 +382,14 @@ pub(crate) fn costs(engine: &dyn InferenceBackend, cfg: &ScenarioConfig)
     -> Result<Costs>
 {
     let m = &engine.manifest().model;
+    if cfg.tiers.len() < cfg.kind.tiers_needed().min(2) {
+        bail!(
+            "scenario {} needs {} tiers, config has {}",
+            cfg.kind,
+            cfg.kind.tiers_needed(),
+            cfg.tiers.len()
+        );
+    }
     let down_bytes = (m.num_classes * 4) as u64;
     let net = scenario_network(engine, cfg.scale);
     let input_bytes: u64 = match cfg.scale {
@@ -252,7 +398,7 @@ pub(crate) fn costs(engine: &dyn InferenceBackend, cfg: &ScenarioConfig)
         ModelScale::Slim => engine.manifest().input_bytes_per_frame(),
         ModelScale::Full => net.input.bytes_f32() as u64,
     };
-    Ok(match cfg.kind {
+    Ok(match &cfg.kind {
         ScenarioKind::Lc => {
             // Lightweight local model: measured lite model at slim scale;
             // at paper scale, assume a quarter-width VGG16 (MobileNet-class
@@ -268,17 +414,15 @@ pub(crate) fn costs(engine: &dyn InferenceBackend, cfg: &ScenarioConfig)
                 }
             };
             Costs {
-                up_bytes: 0,
+                up_bytes: Vec::new(),
                 down_bytes: 0,
-                edge_mult_adds: lite_ma,
-                server_mult_adds: 0,
+                seg_mult_adds: vec![lite_ma],
             }
         }
         ScenarioKind::Rc => Costs {
-            up_bytes: input_bytes,
+            up_bytes: vec![input_bytes],
             down_bytes,
-            edge_mult_adds: 0,
-            server_mult_adds: net.mult_adds(),
+            seg_mult_adds: vec![0, net.mult_adds()],
         },
         ScenarioKind::Sc { split } => {
             // DAG cut semantics: the split id indexes the arch's marked
@@ -286,7 +430,7 @@ pub(crate) fn costs(engine: &dyn InferenceBackend, cfg: &ScenarioConfig)
             // (residual interiors never appear), and the crossing
             // tensor's bottleneck latent is what the netsim transfers.
             let cuts = model::split_points(&net);
-            if split >= cuts.len() - 1 {
+            if *split >= cuts.len() - 1 {
                 bail!(
                     "split {split} out of range: {} has {} cut points \
                      (valid: 0..={})",
@@ -295,13 +439,34 @@ pub(crate) fn costs(engine: &dyn InferenceBackend, cfg: &ScenarioConfig)
                     cuts.len() - 2
                 );
             }
-            let cut = &cuts[split];
+            let cut = &cuts[*split];
             let (head_ma, tail_ma) = cut.split_compute();
             Costs {
-                up_bytes: cut.latent_bytes(),
+                up_bytes: vec![cut.latent_bytes()],
                 down_bytes,
-                edge_mult_adds: head_ma,
-                server_mult_adds: tail_ma,
+                seg_mult_adds: vec![head_ma, tail_ma],
+            }
+        }
+        ScenarioKind::Mc { cuts } => {
+            if cfg.tiers.len() != cuts.len() + 1 {
+                bail!(
+                    "MC with {} cuts needs exactly {} tiers, config \
+                     has {} ({:?})",
+                    cuts.len(),
+                    cuts.len() + 1,
+                    cfg.tiers.len(),
+                    cfg.tiers.iter().map(|t| t.name.as_str())
+                        .collect::<Vec<_>>()
+                );
+            }
+            let points = model::split_points(&net);
+            let chain = model::chain_costs(&points, cuts).map_err(|e| {
+                anyhow::anyhow!("{}: {e}", net.name)
+            })?;
+            Costs {
+                up_bytes: chain.hop_bytes,
+                down_bytes,
+                seg_mult_adds: chain.seg_mult_adds,
             }
         }
     })
@@ -311,7 +476,7 @@ pub(crate) fn costs(engine: &dyn InferenceBackend, cfg: &ScenarioConfig)
 ///
 /// Rides the closed-loop streaming engine ([`super::streaming`]) with a
 /// single client and batch size 1: per-frame latency *includes* the time
-/// spent queued behind earlier frames on the edge device, the channel and
+/// spent queued behind earlier frames on the edge device, the channels and
 /// the server. At low load (frame period longer than the pipeline
 /// latency) this reproduces the open-loop reference
 /// ([`run_scenario_open_loop`]) exactly for UDP and lossless TCP — and is
@@ -331,7 +496,7 @@ pub fn run_scenario(
         Some(dataset),
         qos,
     )?;
-    Ok(ScenarioReport::from_records(cfg, stream.to_frame_records(), qos))
+    ScenarioReport::from_records(cfg, stream.to_frame_records(), qos)
 }
 
 /// Latency-only variant: no model execution, pure simulation (used by the
@@ -357,8 +522,8 @@ pub fn simulate_latency(
 /// is still in flight, so waiting time never shows up in latency — the
 /// timing bug the closed-loop engine fixes. Used only by regression tests
 /// that (a) pin `run_scenario == run_scenario_open_loop` at low load and
-/// (b) demonstrate the divergence under overload. Do not build new
-/// functionality on this path.
+/// (b) demonstrate the divergence under overload. Two-tier kinds only
+/// (LC / RC / SC); do not build new functionality on this path.
 pub fn run_scenario_open_loop(
     engine: &dyn InferenceBackend,
     cfg: &ScenarioConfig,
@@ -366,12 +531,18 @@ pub fn run_scenario_open_loop(
     n_frames: usize,
     qos: &QosRequirements,
 ) -> Result<ScenarioReport> {
+    if let ScenarioKind::Mc { .. } = cfg.kind {
+        bail!("the open-loop reference engine predates multi-tier placement");
+    }
     let costs = costs(engine, cfg)?;
+    let up_bytes = costs.up_bytes.first().copied().unwrap_or(0);
+    let edge_ma = costs.seg_mult_adds[0];
+    let server_ma = costs.seg_mult_adds.last().copied().unwrap_or(0);
     let mut channel = Channel::new(cfg.net.clone());
     let num_classes = engine.manifest().model.num_classes;
 
     // Pre-load the executables used by this scenario.
-    let (full_exec, head_exec, tail_exec) = match cfg.kind {
+    let (full_exec, head_exec, tail_exec) = match &cfg.kind {
         ScenarioKind::Lc => {
             let name = if engine.manifest().executables
                 .contains_key("full_fwd_lite_b1")
@@ -389,6 +560,7 @@ pub fn run_scenario_open_loop(
             Some(engine.executable(&format!("head_L{split}_b1"))?),
             Some(engine.executable(&format!("tail_L{split}_b1"))?),
         ),
+        ScenarioKind::Mc { .. } => unreachable!("rejected above"),
     };
 
     let mut records = Vec::with_capacity(n_frames);
@@ -404,13 +576,13 @@ pub fn run_scenario_open_loop(
         let mut retx = 0u64;
         let mut corrupted = false;
 
-        let logits: Tensor = match cfg.kind {
+        let logits: Tensor = match &cfg.kind {
             ScenarioKind::Lc => {
-                latency += cfg.edge.compute_ns(costs.edge_mult_adds);
+                latency += cfg.edge().compute_ns(edge_ma);
                 full_exec.as_ref().unwrap().run(&[RtInput::F32(&x)])?
             }
             ScenarioKind::Rc => {
-                let up = channel.send(Dir::Up, costs.up_bytes)?;
+                let up = channel.send(Dir::Up, up_bytes)?;
                 latency += up.latency_ns();
                 wire += up.wire_bytes();
                 retx += up.retransmits();
@@ -420,10 +592,10 @@ pub fn run_scenario_open_loop(
                 {
                     corrupted = true;
                     corruption::corrupt_scaled(
-                        &mut input, up.lost_ranges(), costs.up_bytes,
+                        &mut input, up.lost_ranges(), up_bytes,
                     );
                 }
-                latency += cfg.server.compute_ns(costs.server_mult_adds);
+                latency += cfg.server().compute_ns(server_ma);
                 let logits =
                     full_exec.as_ref().unwrap().run(&[RtInput::F32(&input)])?;
                 channel.advance_to(frame_start + latency);
@@ -443,11 +615,11 @@ pub fn run_scenario_open_loop(
                 }
             }
             ScenarioKind::Sc { .. } => {
-                latency += cfg.edge.compute_ns(costs.edge_mult_adds);
+                latency += cfg.edge().compute_ns(edge_ma);
                 let mut latent =
                     head_exec.as_ref().unwrap().run(&[RtInput::F32(&x)])?;
                 channel.advance_to(frame_start + latency);
-                let up = channel.send(Dir::Up, costs.up_bytes)?;
+                let up = channel.send(Dir::Up, up_bytes)?;
                 latency += up.latency_ns();
                 wire += up.wire_bytes();
                 retx += up.retransmits();
@@ -456,10 +628,10 @@ pub fn run_scenario_open_loop(
                 {
                     corrupted = true;
                     corruption::corrupt_scaled(
-                        &mut latent, up.lost_ranges(), costs.up_bytes,
+                        &mut latent, up.lost_ranges(), up_bytes,
                     );
                 }
-                latency += cfg.server.compute_ns(costs.server_mult_adds);
+                latency += cfg.server().compute_ns(server_ma);
                 let logits = tail_exec
                     .as_ref()
                     .unwrap()
@@ -478,6 +650,7 @@ pub fn run_scenario_open_loop(
                     logits
                 }
             }
+            ScenarioKind::Mc { .. } => unreachable!("rejected above"),
         };
 
         let pred = logits.argmax_last()[0];
@@ -490,30 +663,36 @@ pub fn run_scenario_open_loop(
             corrupted,
         });
     }
-    Ok(ScenarioReport::from_records(cfg, records, qos))
+    ScenarioReport::from_records(cfg, records, qos)
 }
 
 /// The legacy open-loop latency-only runner (see
 /// [`run_scenario_open_loop`]): pure simulation, frame `i` pinned to
 /// `i * frame_period_ns` regardless of resource state. Reference for
-/// regression tests only.
+/// regression tests only; two-tier kinds only.
 pub fn simulate_latency_open_loop(
     engine: &dyn InferenceBackend,
     cfg: &ScenarioConfig,
     n_frames: usize,
 ) -> Result<Vec<SimTime>> {
+    if let ScenarioKind::Mc { .. } = cfg.kind {
+        bail!("the open-loop reference engine predates multi-tier placement");
+    }
     let costs = costs(engine, cfg)?;
+    let up_bytes = costs.up_bytes.first().copied().unwrap_or(0);
+    let edge_ma = costs.seg_mult_adds[0];
+    let server_ma = costs.seg_mult_adds.last().copied().unwrap_or(0);
     let mut channel = Channel::new(cfg.net.clone());
     let mut out = Vec::with_capacity(n_frames);
     for i in 0..n_frames {
         channel.advance_to(i as SimTime * cfg.frame_period_ns);
         let frame_start = channel.now();
         let mut latency: SimTime = 0;
-        latency += cfg.edge.compute_ns(costs.edge_mult_adds);
-        if costs.up_bytes > 0 {
+        latency += cfg.edge().compute_ns(edge_ma);
+        if up_bytes > 0 {
             channel.advance_to(frame_start + latency);
-            latency += channel.send(Dir::Up, costs.up_bytes)?.latency_ns();
-            latency += cfg.server.compute_ns(costs.server_mult_adds);
+            latency += channel.send(Dir::Up, up_bytes)?.latency_ns();
+            latency += cfg.server().compute_ns(server_ma);
             channel.advance_to(frame_start + latency);
             latency +=
                 channel.send(Dir::Down, costs.down_bytes)?.latency_ns();
@@ -534,20 +713,90 @@ mod tests {
     fn kind_display() {
         assert_eq!(ScenarioKind::Lc.to_string(), "LC");
         assert_eq!(ScenarioKind::Sc { split: 11 }.to_string(), "SC@L11");
+        assert_eq!(
+            ScenarioKind::Mc { cuts: vec![4, 11] }.to_string(),
+            "MC@L4,L11"
+        );
     }
 
     #[test]
     fn kind_parse_roundtrips_display() {
-        for kind in [ScenarioKind::Lc, ScenarioKind::Rc,
-                     ScenarioKind::Sc { split: 13 }] {
+        for kind in [
+            ScenarioKind::Lc,
+            ScenarioKind::Rc,
+            ScenarioKind::Sc { split: 13 },
+            ScenarioKind::Mc { cuts: vec![5] },
+            ScenarioKind::Mc { cuts: vec![4, 11, 15] },
+        ] {
             assert_eq!(ScenarioKind::parse(&kind.to_string()).unwrap(), kind);
         }
         assert_eq!(
             ScenarioKind::parse("sc@11").unwrap(),
             ScenarioKind::Sc { split: 11 }
         );
+        assert_eq!(
+            ScenarioKind::parse("mc@4,11").unwrap(),
+            ScenarioKind::Mc { cuts: vec![4, 11] }
+        );
+        assert_eq!(
+            ScenarioKind::parse("MC@L4,11").unwrap(),
+            ScenarioKind::Mc { cuts: vec![4, 11] }
+        );
         assert!(ScenarioKind::parse("mc").is_err());
+        assert!(ScenarioKind::parse("mc@").is_err());
+        assert!(ScenarioKind::parse("mc@4,").is_err());
+        assert!(ScenarioKind::parse("mc@11,4").is_err());
+        assert!(ScenarioKind::parse("mc@4,4").is_err());
         assert!(ScenarioKind::parse("sc@x").is_err());
+    }
+
+    #[test]
+    fn prop_kind_and_scale_parse_roundtrip() {
+        // Property: Display -> parse is the identity for every
+        // representable ScenarioKind (including multi-cut chains) and
+        // ModelScale, and parsing is case-insensitive.
+        use crate::util::propcheck::{check, Config};
+        check("scenario_kind_roundtrip", Config::default(), |c| {
+            let kind = match c.rng.below(4) {
+                0 => ScenarioKind::Lc,
+                1 => ScenarioKind::Rc,
+                2 => ScenarioKind::Sc {
+                    split: c.rng.below(40) as usize,
+                },
+                _ => {
+                    let k = 1 + c.rng.below(4) as usize;
+                    let mut cuts = Vec::with_capacity(k);
+                    let mut next = c.rng.below(6) as usize;
+                    for _ in 0..k {
+                        cuts.push(next);
+                        next += 1 + c.rng.below(5) as usize;
+                    }
+                    ScenarioKind::Mc { cuts }
+                }
+            };
+            let shown = kind.to_string();
+            let back = ScenarioKind::parse(&shown)
+                .map_err(|e| format!("parse('{shown}'): {e}"))?;
+            if back != kind {
+                return Err(format!("{shown} -> {back:?} != {kind:?}"));
+            }
+            let lower = ScenarioKind::parse(&shown.to_ascii_lowercase())
+                .map_err(|e| e.to_string())?;
+            if lower != kind {
+                return Err(format!("lowercase '{shown}' != {kind:?}"));
+            }
+            let scale = if c.bool() {
+                ModelScale::Slim
+            } else {
+                ModelScale::Full
+            };
+            if ModelScale::parse(scale.as_str()).map_err(|e| e.to_string())?
+                != scale
+            {
+                return Err(format!("scale {scale:?} does not round-trip"));
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -555,21 +804,56 @@ mod tests {
         for scale in [ModelScale::Slim, ModelScale::Full] {
             assert_eq!(ModelScale::parse(scale.as_str()).unwrap(), scale);
         }
-        // Historical alias still accepted; arch names are not scales.
+        // Historical aliases still accepted; arch names are not scales.
         assert_eq!(ModelScale::parse("vgg16").unwrap(), ModelScale::Full);
+        assert_eq!(ModelScale::parse("vgg16-full").unwrap(), ModelScale::Full);
         assert!(ModelScale::parse("resnet18").is_err());
+        // The error names the silently accepted aliases.
+        let err = ModelScale::parse("resnet18").unwrap_err().to_string();
+        assert!(
+            err.contains("vgg16") && err.contains("vgg16-full"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn tiers_needed_per_kind() {
+        assert_eq!(ScenarioKind::Lc.tiers_needed(), 1);
+        assert_eq!(ScenarioKind::Rc.tiers_needed(), 2);
+        assert_eq!(ScenarioKind::Sc { split: 5 }.tiers_needed(), 2);
+        assert_eq!(
+            ScenarioKind::Mc { cuts: vec![4, 11] }.tiers_needed(),
+            3
+        );
+    }
+
+    #[test]
+    fn hop_nets_keep_hop_zero_seed_and_decorrelate_the_rest() {
+        let cfg = ScenarioConfig::two_tier(
+            ScenarioKind::Rc,
+            NetworkConfig::gigabit(Protocol::Udp, 0.1, 1234),
+            DeviceProfile::edge_gpu(),
+            DeviceProfile::server_gpu(),
+            ModelScale::Slim,
+            0,
+        );
+        assert_eq!(cfg.hop_net(0).seed, 1234);
+        assert_ne!(cfg.hop_net(1).seed, 1234);
+        assert_ne!(cfg.hop_net(1).seed, cfg.hop_net(2).seed);
+        assert_eq!(cfg.edge().name, "edge-gpu");
+        assert_eq!(cfg.server().name, "server-gpu");
     }
 
     #[test]
     fn report_aggregates() {
-        let cfg = ScenarioConfig {
-            kind: ScenarioKind::Lc,
-            net: NetworkConfig::gigabit(Protocol::Tcp, 0.0, 0),
-            edge: DeviceProfile::edge_gpu(),
-            server: DeviceProfile::server_gpu(),
-            scale: ModelScale::Slim,
-            frame_period_ns: 0,
-        };
+        let cfg = ScenarioConfig::two_tier(
+            ScenarioKind::Lc,
+            NetworkConfig::gigabit(Protocol::Tcp, 0.0, 0),
+            DeviceProfile::edge_gpu(),
+            DeviceProfile::server_gpu(),
+            ModelScale::Slim,
+            0,
+        );
         let records = vec![
             FrameRecord { latency_ns: 10, completed_ns: 10, correct: true,
                           wire_bytes: 4, retransmits: 0, corrupted: false },
@@ -577,7 +861,7 @@ mod tests {
                           wire_bytes: 6, retransmits: 2, corrupted: true },
         ];
         let q = QosRequirements::with_fps(1e9 / 20.0).unwrap();
-        let r = ScenarioReport::from_records(&cfg, records, &q);
+        let r = ScenarioReport::from_records(&cfg, records, &q).unwrap();
         assert_eq!(r.frames, 2);
         assert!((r.accuracy - 0.5).abs() < 1e-9);
         assert!((r.mean_latency_ns - 20.0).abs() < 1e-9);
@@ -592,17 +876,33 @@ mod tests {
     }
 
     #[test]
+    fn empty_record_set_is_an_error_not_fake_metrics() {
+        let cfg = ScenarioConfig::two_tier(
+            ScenarioKind::Lc,
+            NetworkConfig::gigabit(Protocol::Tcp, 0.0, 0),
+            DeviceProfile::edge_gpu(),
+            DeviceProfile::server_gpu(),
+            ModelScale::Slim,
+            0,
+        );
+        let err = ScenarioReport::from_records(
+            &cfg, Vec::new(), &QosRequirements::none(),
+        );
+        assert!(err.is_err(), "empty streams must not report accuracy 0.0");
+    }
+
+    #[test]
     fn p95_is_nearest_rank_not_max() {
         // 20 equal-spaced latencies: p95 must be the 19th value, not the
         // max — the old `(n * 0.95) as usize % n` indexed the maximum.
-        let cfg = ScenarioConfig {
-            kind: ScenarioKind::Lc,
-            net: NetworkConfig::gigabit(Protocol::Tcp, 0.0, 0),
-            edge: DeviceProfile::edge_gpu(),
-            server: DeviceProfile::server_gpu(),
-            scale: ModelScale::Slim,
-            frame_period_ns: 0,
-        };
+        let cfg = ScenarioConfig::two_tier(
+            ScenarioKind::Lc,
+            NetworkConfig::gigabit(Protocol::Tcp, 0.0, 0),
+            DeviceProfile::edge_gpu(),
+            DeviceProfile::server_gpu(),
+            ModelScale::Slim,
+            0,
+        );
         let records: Vec<FrameRecord> = (1..=20)
             .map(|i| FrameRecord {
                 latency_ns: i * 100,
@@ -615,7 +915,8 @@ mod tests {
             .collect();
         let r = ScenarioReport::from_records(
             &cfg, records, &QosRequirements::none(),
-        );
+        )
+        .unwrap();
         assert_eq!(r.p95_latency_ns, 1900);
         assert_eq!(r.p99_latency_ns, 2000);
         assert_eq!(r.max_latency_ns, 2000);

@@ -163,14 +163,14 @@ mod tests {
         use crate::coordinator::scenario::FrameRecord;
         use crate::model::DeviceProfile;
         use crate::netsim::transfer::NetworkConfig;
-        let cfg = crate::coordinator::scenario::ScenarioConfig {
-            kind: ScenarioKind::Lc,
-            net: NetworkConfig::gigabit(Protocol::Tcp, 0.0, 0),
-            edge: DeviceProfile::edge_gpu(),
-            server: DeviceProfile::server_gpu(),
-            scale: crate::coordinator::scenario::ModelScale::Slim,
-            frame_period_ns: 1_000_000_000,
-        };
+        let cfg = crate::coordinator::scenario::ScenarioConfig::two_tier(
+            ScenarioKind::Lc,
+            NetworkConfig::gigabit(Protocol::Tcp, 0.0, 0),
+            DeviceProfile::edge_gpu(),
+            DeviceProfile::server_gpu(),
+            crate::coordinator::scenario::ModelScale::Slim,
+            1_000_000_000,
+        );
         // Two frames, 1 s apart, 2 ms latency each: the stream lasts
         // ~1.002 s — the old max-latency implementation would have said
         // 2 ms.
@@ -183,7 +183,7 @@ mod tests {
                           wire_bytes: 0, retransmits: 0, corrupted: false },
         ];
         let report = crate::coordinator::scenario::ScenarioReport::
-            from_records(&cfg, records, &QosRequirements::none());
+            from_records(&cfg, records, &QosRequirements::none()).unwrap();
         let d = simulated_duration_secs(&report);
         assert!((d - 1.002).abs() < 1e-9, "{d}");
     }

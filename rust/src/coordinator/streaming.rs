@@ -1,5 +1,7 @@
 //! Closed-loop, queueing, multi-client streaming simulator — the serving
-//! path of the framework (paper Sec. IV-V, scaled to many sensing devices).
+//! path of the framework (paper Sec. IV-V, scaled to many sensing devices
+//! and, since the multi-tier refactor, to pipelines spanning a chain of
+//! device tiers).
 //!
 //! The original scenario engine was *open-loop*: frame `i` started at
 //! `i * frame_period_ns` even when the edge device, the channel or the
@@ -10,9 +12,10 @@
 //! streams emit frames into per-resource FIFO queues —
 //!
 //! ```text
-//!   client c ──► [edge compute c] ──► [shared uplink] ──► [batcher]
+//!   client c ─► [tier 0 compute c] ─► [hop 0 uplink] ─► [tier 1 compute]
+//!                 ─► [hop 1 uplink] ─► … ─► [last tier: batcher+compute]
 //!                                                            │
-//!   client c ◄── [shared downlink] ◄── [server compute] ◄────┘
+//!   client c ◄─ [hop 0 downlink] ◄─ … ◄─ [hop H-1 downlink] ◄┘
 //! ```
 //!
 //! — so a frame's latency includes the time spent waiting behind earlier
@@ -27,37 +30,47 @@
 //!   *closed-loop source*: the next frame is emitted the instant the
 //!   previous one completes (the "back-to-back" mode of the old engine,
 //!   now with well-defined queueing semantics).
-//! * **Edge.** Each client owns its edge device; LC and SC frames pay the
-//!   edge compute there (FIFO per client). RC frames skip the stage, as in
-//!   the per-frame pipeline.
-//! * **Uplink / downlink.** All clients share one channel. Messages queue
+//! * **Tier 0.** Each client owns its sensing device; LC, SC and MC frames
+//!   pay the first segment's compute there (FIFO per client). RC frames
+//!   skip the stage, as in the per-frame pipeline.
+//! * **Hops.** Every inter-tier hop is its own [`Channel`] (seeded via
+//!   [`ScenarioConfig::hop_net`]), shared by all clients. Messages queue
 //!   at message level ([`Channel::send_no_earlier`]): under UDP the two
-//!   directions are independent FIFO resources (true full duplex, no
-//!   reverse traffic); under TCP every message's ACK stream rides the
-//!   opposite link, so TCP messages serialize across the whole channel —
-//!   the same coupling the legacy engine expressed through its single
-//!   clock.
-//! * **Server.** Requests arriving off the uplink are fronted by the
-//!   size-or-deadline [`Batcher`]; a released batch of `n` requests costs
-//!   `server.compute_ns(n × server_mult_adds)`, amortizing the per-call
+//!   directions of a hop are independent FIFO resources (true full
+//!   duplex, no reverse traffic); under TCP every message's ACK stream
+//!   rides the opposite link of *its* hop, so TCP messages serialize
+//!   across that hop — the same coupling the legacy engine expressed
+//!   through its single clock. A slow mid-chain hop therefore saturates
+//!   exactly like any other bottleneck resource.
+//! * **Mid tiers.** MC's intermediate tiers are shared single-server FIFO
+//!   resources: a frame pays `tiers[t].compute_ns(segment MACs)` and
+//!   forwards its re-encoded latent up the next hop.
+//! * **Last tier.** Requests arriving off the final uplink hop are fronted
+//!   by the size-or-deadline [`Batcher`]; a released batch of `n` requests
+//!   costs `server.compute_ns(n × segment MACs)`, amortizing the per-call
 //!   overhead — with [`BatchPolicy::immediate`] this degenerates to the
-//!   old per-frame cost exactly.
+//!   old per-frame cost exactly. Results return hop by hop in reverse
+//!   over each hop's downlink.
 //! * **Inference.** In full mode the per-frame tensors flow through the
 //!   same executables and UDP corruption path as `run_scenario` always
 //!   used (batching affects *timing* only; accuracy is measured with the
-//!   per-frame `b1` executables).
+//!   per-frame `b1` executables). MC chains run `head → mid… → tail`
+//!   segment executables, synthesized on demand by the analytic backend.
 //!
 //! With one client, batch size 1 and a period longer than the pipeline
 //! latency, the closed-loop engine reproduces the open-loop per-frame
 //! latencies *exactly* for UDP (any loss rate) and lossless TCP, and
 //! drives byte-identical transfers in every case (asserted by
 //! `rust/tests/streaming_properties.rs` against the retained
-//! [`super::scenario::run_scenario_open_loop`] reference). Under lossy
-//! TCP the closed loop additionally counts the time a result waits for
-//! the channel to drain the upstream ACK tail — time the open-loop
-//! accounting silently dropped — so those latencies are `>=` the legacy
-//! ones frame-by-frame. Under overload the two engines deliberately
-//! diverge; that divergence is the bug this engine fixes.
+//! [`super::scenario::run_scenario_open_loop`] reference). Likewise,
+//! `mc@[i]` over two tiers reproduces `sc@i` byte-identically — the
+//! degenerate-equivalence anchor of the multi-tier refactor (pinned by
+//! `rust/tests/multi_tier.rs`). Under lossy TCP the closed loop
+//! additionally counts the time a result waits for the channel to drain
+//! the upstream ACK tail — time the open-loop accounting silently
+//! dropped — so those latencies are `>=` the legacy ones frame-by-frame.
+//! Under overload the two engines deliberately diverge; that divergence
+//! is the bug this engine fixes.
 
 use std::collections::VecDeque;
 use std::rc::Rc;
@@ -69,6 +82,7 @@ use super::corruption;
 use super::qos::QosRequirements;
 use super::scenario::{costs, Costs, FrameRecord, ScenarioConfig, ScenarioKind};
 use crate::data::Dataset;
+use crate::model::DeviceProfile;
 use crate::netsim::event::{secs, EventQueue, SimTime};
 use crate::netsim::transfer::{Channel, Protocol};
 use crate::netsim::Dir;
@@ -82,7 +96,7 @@ pub struct StreamConfig {
     /// Scenario under test. `scenario.frame_period_ns` is the per-client
     /// source period (0 = closed-loop back-to-back).
     pub scenario: ScenarioConfig,
-    /// Number of concurrent client streams sharing the channel + server.
+    /// Number of concurrent client streams sharing the channels + server.
     pub clients: usize,
     /// Frames each client emits.
     pub frames_per_client: usize,
@@ -123,8 +137,8 @@ pub struct StreamFrameRecord {
     pub completed_ns: SimTime,
     /// End-to-end latency including all queue waits.
     pub latency_ns: SimTime,
-    /// Time spent waiting in queues (edge, uplink, batcher+server,
-    /// downlink), i.e. the part of `latency_ns` the open-loop model lost.
+    /// Time spent waiting in queues (tiers, hop lanes, batcher+server),
+    /// i.e. the part of `latency_ns` the open-loop model lost.
     pub queue_wait_ns: SimTime,
     /// `None` in latency-only runs.
     pub correct: Option<bool>,
@@ -418,18 +432,20 @@ pub fn pooled_stream(
 enum Ev {
     /// Client `c` emits its next frame.
     Emit { c: usize },
-    /// Client `c`'s edge device finished its current frame.
+    /// Client `c`'s tier-0 device finished its current frame.
     EdgeDone { c: usize },
-    /// Channel lane `lane` is free for the next message.
+    /// Transfer lane `lane` (hop `lane / 2`) is free for the next message.
     NetFree { lane: usize },
-    /// Frame `g`'s uplink payload fully arrived at the server.
-    UpDelivered { g: usize },
+    /// Frame `g`'s uplink payload fully arrived at tier `hop + 1`.
+    UpDelivered { g: usize, hop: usize },
+    /// Shared mid-chain tier `tier` finished its current frame.
+    MidDone { tier: usize },
     /// Size-or-deadline batcher poll point.
     BatchTimer,
     /// The server finished computing `batch`.
     ServerDone { batch: Batch },
-    /// Frame `g`'s result arrived back at its client.
-    DownDelivered { g: usize },
+    /// Frame `g`'s result arrived back at tier `hop` (0 = the client).
+    DownDelivered { g: usize, hop: usize },
 }
 
 #[derive(Clone, Debug, Default)]
@@ -442,7 +458,7 @@ struct Frame {
     wire_bytes: u64,
     retransmits: u64,
     corrupted: bool,
-    /// In-flight tensor (input for RC, latent for SC) in full mode.
+    /// In-flight tensor (input for RC, latent for SC/MC) in full mode.
     payload: Option<Tensor>,
     pred: Option<usize>,
     label: usize,
@@ -454,11 +470,14 @@ struct Sim<'a> {
     dataset: Option<&'a Dataset>,
     full_exec: Option<Rc<dyn Executable>>,
     head_exec: Option<Rc<dyn Executable>>,
+    /// MC mid-segment executables (`mid_execs[t - 1]` runs on tier `t`).
+    mid_execs: Vec<Rc<dyn Executable>>,
     tail_exec: Option<Rc<dyn Executable>>,
     /// `argmax` of an all-zero logits tensor — the prediction a frame is
     /// left with when its UDP result datagram is fully lost.
     zero_pred: usize,
-    channel: Channel,
+    /// One channel per inter-tier hop (hop 0 keeps the configured seed).
+    channels: Vec<Channel>,
     q: EventQueue<Ev>,
     frames: Vec<Frame>,
     /// Per-client next frame index to emit.
@@ -466,10 +485,16 @@ struct Sim<'a> {
     edge_q: Vec<VecDeque<usize>>,
     edge_busy: Vec<bool>,
     edge_cur: Vec<usize>,
-    /// Channel transfer lanes: one shared lane for TCP (the ACK stream
-    /// couples the directions), one per direction for UDP (full duplex).
-    lane_q: [VecDeque<(Dir, usize)>; 2],
-    lane_busy: [bool; 2],
+    /// Shared mid-chain tier resources, indexed by tier (0 and the last
+    /// tier are unused — they have their own machinery).
+    mid_q: Vec<VecDeque<usize>>,
+    mid_busy: Vec<bool>,
+    mid_cur: Vec<usize>,
+    /// Transfer lanes, two per hop: lane `2h` is hop `h`'s shared lane for
+    /// TCP (the ACK stream couples the directions) and its uplink lane for
+    /// UDP; lane `2h + 1` is hop `h`'s UDP downlink lane (full duplex).
+    lane_q: Vec<VecDeque<(Dir, usize)>>,
+    lane_busy: Vec<bool>,
     batcher: Batcher,
     /// Batcher request id -> global frame index (ids are sequential).
     offered: Vec<usize>,
@@ -498,6 +523,24 @@ impl<'a> Sim<'a> {
 
     fn client_of(&self, g: usize) -> usize {
         g / self.fpc()
+    }
+
+    /// Number of inter-tier hops in this pipeline.
+    fn hops(&self) -> usize {
+        self.costs.hops()
+    }
+
+    /// The device executing pipeline segment `seg` (RC/SC on a longer
+    /// chain bypass the middle tiers: first and last device only).
+    fn device(&self, seg: usize) -> &DeviceProfile {
+        let tiers = &self.cfg.scenario.tiers;
+        if seg == 0 {
+            &tiers[0]
+        } else if seg + 1 == self.costs.seg_mult_adds.len() {
+            tiers.last().expect("validated by costs()")
+        } else {
+            &tiers[seg]
+        }
     }
 
     fn input(&self, g: usize) -> Result<Tensor> {
@@ -540,14 +583,14 @@ impl<'a> Sim<'a> {
             }
         }
         match self.cfg.scenario.kind {
-            ScenarioKind::Rc => self.enqueue_xfer(Dir::Up, g, t),
-            ScenarioKind::Lc | ScenarioKind::Sc { .. } => {
-                self.enqueue_edge(c, g, t)
-            }
+            ScenarioKind::Rc => self.enqueue_xfer(Dir::Up, 0, g, t),
+            ScenarioKind::Lc
+            | ScenarioKind::Sc { .. }
+            | ScenarioKind::Mc { .. } => self.enqueue_edge(c, g, t),
         }
     }
 
-    // -- edge compute (one device per client) ------------------------------
+    // -- tier-0 compute (one device per client) ----------------------------
 
     fn enqueue_edge(&mut self, c: usize, g: usize, t: SimTime) -> Result<()> {
         self.frames[g].ready_at = t;
@@ -565,8 +608,7 @@ impl<'a> Sim<'a> {
         self.edge_cur[c] = g;
         let wait = t - self.frames[g].ready_at;
         self.frames[g].queue_wait_ns += wait;
-        let dur =
-            self.cfg.scenario.edge.compute_ns(self.costs.edge_mult_adds);
+        let dur = self.device(0).compute_ns(self.costs.seg_mult_adds[0]);
         self.q.schedule(t + dur, Ev::EdgeDone { c });
         Ok(())
     }
@@ -575,7 +617,7 @@ impl<'a> Sim<'a> {
         let g = self.edge_cur[c];
         self.edge_busy[c] = false;
         if self.full_mode() {
-            match self.cfg.scenario.kind {
+            match &self.cfg.scenario.kind {
                 ScenarioKind::Lc => {
                     let x = self.input(g)?;
                     let logits = self
@@ -585,7 +627,7 @@ impl<'a> Sim<'a> {
                         .run(&[RtInput::F32(&x)])?;
                     self.frames[g].pred = Some(logits.argmax_last()[0]);
                 }
-                ScenarioKind::Sc { .. } => {
+                ScenarioKind::Sc { .. } | ScenarioKind::Mc { .. } => {
                     let x = self.input(g)?;
                     let latent = self
                         .head_exec
@@ -594,13 +636,13 @@ impl<'a> Sim<'a> {
                         .run(&[RtInput::F32(&x)])?;
                     self.frames[g].payload = Some(latent);
                 }
-                ScenarioKind::Rc => unreachable!("RC has no edge stage"),
+                ScenarioKind::Rc => unreachable!("RC has no tier-0 stage"),
             }
         }
-        if self.costs.up_bytes == 0 {
+        if self.hops() == 0 {
             self.complete(g, t); // LC: done at the edge
         } else {
-            self.enqueue_xfer(Dir::Up, g, t)?;
+            self.enqueue_xfer(Dir::Up, 0, g, t)?;
         }
         if let Some(g2) = self.edge_q[c].pop_front() {
             self.dec_queued(1);
@@ -609,22 +651,29 @@ impl<'a> Sim<'a> {
         Ok(())
     }
 
-    // -- shared channel lanes ----------------------------------------------
+    // -- shared per-hop channel lanes --------------------------------------
 
-    /// Which transfer lane a direction uses: TCP shares lane 0 (ACK
-    /// entanglement serializes the channel), UDP gets one lane per
-    /// direction (full duplex).
-    fn lane_of(&self, dir: Dir) -> usize {
-        match (self.cfg.scenario.net.protocol, dir) {
+    /// Which transfer lane a (hop, direction) pair uses: TCP shares one
+    /// lane per hop (ACK entanglement serializes the hop), UDP gets one
+    /// lane per direction (full duplex).
+    fn lane_of(&self, hop: usize, dir: Dir) -> usize {
+        let local = match (self.cfg.scenario.net.protocol, dir) {
             (Protocol::Tcp, _) => 0,
             (Protocol::Udp, Dir::Up) => 0,
             (Protocol::Udp, Dir::Down) => 1,
-        }
+        };
+        hop * 2 + local
     }
 
-    fn enqueue_xfer(&mut self, dir: Dir, g: usize, t: SimTime) -> Result<()> {
+    fn enqueue_xfer(
+        &mut self,
+        dir: Dir,
+        hop: usize,
+        g: usize,
+        t: SimTime,
+    ) -> Result<()> {
         self.frames[g].ready_at = t;
-        let lane = self.lane_of(dir);
+        let lane = self.lane_of(hop, dir);
         if self.lane_busy[lane] {
             self.lane_q[lane].push_back((dir, g));
             self.inc_queued(1);
@@ -642,13 +691,15 @@ impl<'a> Sim<'a> {
         t: SimTime,
     ) -> Result<()> {
         self.lane_busy[lane] = true;
+        let hop = lane / 2;
         let wait = t - self.frames[g].ready_at;
         self.frames[g].queue_wait_ns += wait;
         let bytes = match dir {
-            Dir::Up => self.costs.up_bytes,
+            Dir::Up => self.costs.up_bytes[hop],
             Dir::Down => self.costs.down_bytes,
         };
-        let (start, res) = self.channel.send_no_earlier(dir, bytes, t)?;
+        let (start, res) =
+            self.channels[hop].send_no_earlier(dir, bytes, t)?;
         debug_assert_eq!(start, t, "channel lane discipline violated");
         self.frames[g].wire_bytes += res.wire_bytes();
         self.frames[g].retransmits += res.retransmits();
@@ -662,12 +713,14 @@ impl<'a> Sim<'a> {
                         corruption::corrupt_scaled(
                             p,
                             res.lost_ranges(),
-                            self.costs.up_bytes,
+                            self.costs.up_bytes[hop],
                         );
                     }
                 }
-                self.q
-                    .schedule(start + res.latency_ns(), Ev::UpDelivered { g });
+                self.q.schedule(
+                    start + res.latency_ns(),
+                    Ev::UpDelivered { g, hop },
+                );
             }
             Dir::Down => {
                 let lost: u64 =
@@ -681,7 +734,7 @@ impl<'a> Sim<'a> {
                 }
                 self.q.schedule(
                     start + res.latency_ns(),
-                    Ev::DownDelivered { g },
+                    Ev::DownDelivered { g, hop },
                 );
             }
         }
@@ -698,9 +751,62 @@ impl<'a> Sim<'a> {
         Ok(())
     }
 
+    // -- mid-chain tiers (shared FIFO compute) -----------------------------
+
+    fn enqueue_mid(&mut self, tier: usize, g: usize, t: SimTime)
+        -> Result<()>
+    {
+        self.frames[g].ready_at = t;
+        if self.mid_busy[tier] {
+            self.mid_q[tier].push_back(g);
+            self.inc_queued(1);
+            Ok(())
+        } else {
+            self.start_mid(tier, g, t)
+        }
+    }
+
+    fn start_mid(&mut self, tier: usize, g: usize, t: SimTime) -> Result<()> {
+        self.mid_busy[tier] = true;
+        self.mid_cur[tier] = g;
+        let wait = t - self.frames[g].ready_at;
+        self.frames[g].queue_wait_ns += wait;
+        let dur =
+            self.device(tier).compute_ns(self.costs.seg_mult_adds[tier]);
+        self.q.schedule(t + dur, Ev::MidDone { tier });
+        Ok(())
+    }
+
+    fn mid_done(&mut self, tier: usize, t: SimTime) -> Result<()> {
+        let g = self.mid_cur[tier];
+        self.mid_busy[tier] = false;
+        if self.full_mode() {
+            let payload = self.frames[g]
+                .payload
+                .take()
+                .ok_or_else(|| anyhow!("frame {g} lost its payload"))?;
+            let exec = &self.mid_execs[tier - 1];
+            let latent = exec.run(&[RtInput::F32(&payload)])?;
+            self.frames[g].payload = Some(latent);
+        }
+        self.enqueue_xfer(Dir::Up, tier, g, t)?;
+        if let Some(g2) = self.mid_q[tier].pop_front() {
+            self.dec_queued(1);
+            self.start_mid(tier, g2, t)?;
+        }
+        Ok(())
+    }
+
     // -- server (batcher + compute) ----------------------------------------
 
-    fn up_delivered(&mut self, g: usize, t: SimTime) -> Result<()> {
+    fn up_delivered(&mut self, g: usize, hop: usize, t: SimTime)
+        -> Result<()>
+    {
+        let tier = hop + 1;
+        if tier < self.hops() {
+            // A mid-chain tier: pay its segment compute, then forward.
+            return self.enqueue_mid(tier, g, t);
+        }
         self.frames[g].ready_at = t;
         self.offered.push(g);
         if let Some(batch) = self.batcher.offer(t) {
@@ -747,15 +853,17 @@ impl<'a> Sim<'a> {
             let wait = t - self.frames[g].ready_at;
             self.frames[g].queue_wait_ns += wait;
         }
-        let dur = self.cfg.scenario.server.compute_ns(
-            batch.len() as u64 * self.costs.server_mult_adds,
-        );
+        let last = self.costs.seg_mult_adds.len() - 1;
+        let dur = self
+            .device(last)
+            .compute_ns(batch.len() as u64 * self.costs.seg_mult_adds[last]);
         self.q.schedule(t + dur, Ev::ServerDone { batch });
         Ok(())
     }
 
     fn server_done(&mut self, batch: Batch, t: SimTime) -> Result<()> {
         self.srv_busy = false;
+        let last_hop = self.hops() - 1;
         for req in &batch.requests {
             let g = self.offered[req.id as usize];
             if self.full_mode() {
@@ -763,9 +871,9 @@ impl<'a> Sim<'a> {
                     .payload
                     .take()
                     .ok_or_else(|| anyhow!("frame {g} lost its payload"))?;
-                let exec = match self.cfg.scenario.kind {
+                let exec = match &self.cfg.scenario.kind {
                     ScenarioKind::Rc => self.full_exec.as_ref().unwrap(),
-                    ScenarioKind::Sc { .. } => {
+                    ScenarioKind::Sc { .. } | ScenarioKind::Mc { .. } => {
                         self.tail_exec.as_ref().unwrap()
                     }
                     ScenarioKind::Lc => {
@@ -775,13 +883,25 @@ impl<'a> Sim<'a> {
                 let logits = exec.run(&[RtInput::F32(&payload)])?;
                 self.frames[g].pred = Some(logits.argmax_last()[0]);
             }
-            self.enqueue_xfer(Dir::Down, g, t)?;
+            self.enqueue_xfer(Dir::Down, last_hop, g, t)?;
         }
         if let Some(next) = self.srv_q.pop_front() {
             self.dec_queued(next.len());
             self.start_srv(next, t)?;
         }
         Ok(())
+    }
+
+    fn down_delivered(&mut self, g: usize, hop: usize, t: SimTime)
+        -> Result<()>
+    {
+        if hop == 0 {
+            self.complete(g, t);
+            Ok(())
+        } else {
+            // Relay the result down the next hop toward the client.
+            self.enqueue_xfer(Dir::Down, hop - 1, g, t)
+        }
     }
 
     // -- completion --------------------------------------------------------
@@ -803,15 +923,35 @@ impl<'a> Sim<'a> {
             Ev::Emit { c } => self.emit(c, t),
             Ev::EdgeDone { c } => self.edge_done(c, t),
             Ev::NetFree { lane } => self.net_free(lane, t),
-            Ev::UpDelivered { g } => self.up_delivered(g, t),
+            Ev::UpDelivered { g, hop } => self.up_delivered(g, hop, t),
+            Ev::MidDone { tier } => self.mid_done(tier, t),
             Ev::BatchTimer => self.batch_timer(t),
             Ev::ServerDone { batch } => self.server_done(batch, t),
-            Ev::DownDelivered { g } => {
-                self.complete(g, t);
-                Ok(())
-            }
+            Ev::DownDelivered { g, hop } => self.down_delivered(g, hop, t),
         }
     }
+}
+
+/// The executable name serving the final segment of a cut chain: the
+/// plain split tail for a single cut, the composed chain tail otherwise
+/// (synthesized on demand by the analytic backend).
+pub fn chain_tail_name(cuts: &[usize], batch: usize) -> String {
+    if cuts.len() == 1 {
+        format!("tail_L{}_b{batch}", cuts[0])
+    } else {
+        let mut name = "tail_chain".to_string();
+        for c in cuts {
+            name.push_str(&format!("_L{c}"));
+        }
+        name.push_str(&format!("_b{batch}"));
+        name
+    }
+}
+
+/// The executable name re-encoding the latent of cut `from` into the
+/// latent of cut `to` on a mid-chain tier.
+pub fn mid_exec_name(from: usize, to: usize, batch: usize) -> String {
+    format!("mid_L{from}_L{to}_b{batch}")
 }
 
 /// Run the closed-loop streaming simulation.
@@ -841,8 +981,9 @@ pub fn run_stream(
     let num_classes = engine.manifest().model.num_classes;
 
     // Pre-load the executables used by this scenario (full mode only).
+    let mut mid_execs: Vec<Rc<dyn Executable>> = Vec::new();
     let (full_exec, head_exec, tail_exec) = if dataset.is_some() {
-        match cfg.scenario.kind {
+        match &cfg.scenario.kind {
             ScenarioKind::Lc => {
                 let name = if engine
                     .manifest()
@@ -863,29 +1004,51 @@ pub fn run_stream(
                 Some(engine.executable(&format!("head_L{split}_b1"))?),
                 Some(engine.executable(&format!("tail_L{split}_b1"))?),
             ),
+            ScenarioKind::Mc { cuts } => {
+                for w in cuts.windows(2) {
+                    mid_execs.push(
+                        engine.executable(&mid_exec_name(w[0], w[1], 1))?,
+                    );
+                }
+                (
+                    None,
+                    Some(
+                        engine
+                            .executable(&format!("head_L{}_b1", cuts[0]))?,
+                    ),
+                    Some(engine.executable(&chain_tail_name(cuts, 1))?),
+                )
+            }
         }
     } else {
         (None, None, None)
     };
 
+    let hops = costs.hops();
     let total = cfg.clients * cfg.frames_per_client;
+    let n_tiers = costs.seg_mult_adds.len();
     let mut sim = Sim {
         cfg,
-        costs,
         dataset,
         full_exec,
         head_exec,
+        mid_execs,
         tail_exec,
         zero_pred: Tensor::zeros(vec![1, num_classes]).argmax_last()[0],
-        channel: Channel::new(cfg.scenario.net.clone()),
+        channels: (0..hops.max(1))
+            .map(|h| Channel::new(cfg.scenario.hop_net(h)))
+            .collect(),
         q: EventQueue::new(),
         frames: vec![Frame::default(); total],
         next_frame: vec![0; cfg.clients],
         edge_q: vec![VecDeque::new(); cfg.clients],
         edge_busy: vec![false; cfg.clients],
         edge_cur: vec![0; cfg.clients],
-        lane_q: [VecDeque::new(), VecDeque::new()],
-        lane_busy: [false, false],
+        mid_q: vec![VecDeque::new(); n_tiers],
+        mid_busy: vec![false; n_tiers],
+        mid_cur: vec![0; n_tiers],
+        lane_q: vec![VecDeque::new(); 2 * hops.max(1)],
+        lane_busy: vec![false; 2 * hops.max(1)],
         batcher: Batcher::new(cfg.batch),
         offered: Vec::new(),
         srv_q: VecDeque::new(),
@@ -895,6 +1058,7 @@ pub fn run_stream(
         depth_area: 0.0,
         last_t: 0,
         completed: 0,
+        costs,
     };
 
     for c in 0..cfg.clients {
@@ -969,6 +1133,7 @@ pub fn run_stream(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::scenario::ModelScale;
     use crate::model::DeviceProfile;
     use crate::netsim::transfer::NetworkConfig;
     use crate::runtime::load_backend;
@@ -979,14 +1144,14 @@ mod tests {
     }
 
     fn scenario(period_ns: SimTime) -> ScenarioConfig {
-        ScenarioConfig {
-            kind: ScenarioKind::Rc,
-            net: NetworkConfig::gigabit(Protocol::Udp, 0.0, 9),
-            edge: DeviceProfile::edge_gpu(),
-            server: DeviceProfile::server_gpu(),
-            scale: crate::coordinator::scenario::ModelScale::Slim,
-            frame_period_ns: period_ns,
-        }
+        ScenarioConfig::two_tier(
+            ScenarioKind::Rc,
+            NetworkConfig::gigabit(Protocol::Udp, 0.0, 9),
+            DeviceProfile::edge_gpu(),
+            DeviceProfile::server_gpu(),
+            ModelScale::Slim,
+            period_ns,
+        )
     }
 
     #[test]
@@ -1121,6 +1286,62 @@ mod tests {
         cfg.frames_per_client = 0;
         assert!(run_stream(&*eng, &cfg, None, &QosRequirements::none())
             .is_err());
+    }
+
+    #[test]
+    fn mc_needs_matching_tier_chain() {
+        let eng = engine();
+        let mut sc = scenario(0);
+        sc.kind = ScenarioKind::Mc { cuts: vec![5, 9] };
+        // 2 cuts over 2 tiers: rejected (needs 3).
+        let cfg = StreamConfig {
+            scenario: sc,
+            clients: 1,
+            frames_per_client: 2,
+            batch: BatchPolicy::immediate(),
+        };
+        assert!(run_stream(&*eng, &cfg, None, &QosRequirements::none())
+            .is_err());
+    }
+
+    #[test]
+    fn three_tier_chain_runs_and_charges_every_hop() {
+        let eng = engine();
+        let mut sc = scenario(50_000_000);
+        sc.kind = ScenarioKind::Mc { cuts: vec![5, 9] };
+        sc.tiers = vec![
+            DeviceProfile::sensor_npu(),
+            DeviceProfile::edge_gpu(),
+            DeviceProfile::server_gpu(),
+        ];
+        let cfg = StreamConfig {
+            scenario: sc,
+            clients: 1,
+            frames_per_client: 4,
+            batch: BatchPolicy::immediate(),
+        };
+        let r = run_stream(&*eng, &cfg, None, &QosRequirements::none())
+            .unwrap();
+        assert_eq!(r.frames, 4);
+        // Two uplink hops + two downlink hops of wire traffic per frame:
+        // strictly more than the single-hop SC equivalent at the deeper
+        // cut alone.
+        let mut sc1 = scenario(50_000_000);
+        sc1.kind = ScenarioKind::Sc { split: 9 };
+        let one = run_stream(
+            &*eng,
+            &StreamConfig {
+                scenario: sc1,
+                clients: 1,
+                frames_per_client: 4,
+                batch: BatchPolicy::immediate(),
+            },
+            None,
+            &QosRequirements::none(),
+        )
+        .unwrap();
+        assert!(r.mean_wire_bytes > one.mean_wire_bytes);
+        assert!(r.mean_latency_ns > 0.0);
     }
 
     #[test]

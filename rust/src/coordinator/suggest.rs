@@ -13,7 +13,7 @@ use super::scenario::{
 };
 use super::sweep;
 use crate::data::Dataset;
-use crate::model::DeviceProfile;
+use crate::model::{ordered_chains, DeviceProfile};
 use crate::netsim::transfer::NetworkConfig;
 use crate::runtime::InferenceBackend;
 
@@ -42,10 +42,15 @@ pub struct Suggestion {
 }
 
 /// Step 1+2: candidate split points from the CS curve, ranked by predicted
-/// accuracy, plus the LC and RC baselines.
-pub fn rank_configurations(engine: &dyn InferenceBackend, min_layer: usize)
-    -> Vec<RankedConfig>
-{
+/// accuracy, plus the LC and RC baselines. With a tier chain deeper than
+/// two devices (`n_tiers >= 3`), every ordered chain of `n_tiers - 1`
+/// exported cuts whose first element is a CS candidate joins the ranking
+/// as a multi-tier (MC) configuration.
+pub fn rank_configurations(
+    engine: &dyn InferenceBackend,
+    min_layer: usize,
+    n_tiers: usize,
+) -> Vec<RankedConfig> {
     let m = engine.manifest();
     let curve = CsCurve::from_manifest(m);
     let norm = curve.normalized();
@@ -54,7 +59,8 @@ pub fn rank_configurations(engine: &dyn InferenceBackend, min_layer: usize)
 
     // SC candidates: CS local maxima (cut ids of the manifest's arch)
     // that have exported artifacts.
-    for cand in curve.candidates(min_layer) {
+    let cands = curve.candidates(min_layer);
+    for &cand in &cands {
         if !available.contains(&cand) {
             continue;
         }
@@ -73,6 +79,44 @@ pub fn rank_configurations(engine: &dyn InferenceBackend, min_layer: usize)
             up_bytes: up,
             cs_value: norm.get(cand).copied(),
         });
+    }
+    // MC candidates: ordered chains of exported cuts matching the tier
+    // chain's hop count. Predicted accuracy is the most pessimistic cut's
+    // split-eval accuracy; the reported uplink volume is the sensor-side
+    // hop (the constrained one).
+    if n_tiers >= 3 {
+        let k = n_tiers - 1;
+        for chain in ordered_chains(&available, k) {
+            if !cands.contains(&chain[0]) {
+                continue;
+            }
+            let acc = chain
+                .iter()
+                .filter_map(|&c| m.split_eval_for(c).map(|r| r.accuracy))
+                .fold(m.model.base_test_accuracy, f64::min);
+            let up = m
+                .split_eval_for(chain[0])
+                .map(|r| r.latent_bytes_per_image)
+                .unwrap_or(0);
+            let name = chain
+                .iter()
+                .map(|&c| {
+                    m.model
+                        .layer_names
+                        .get(c)
+                        .cloned()
+                        .unwrap_or_else(|| format!("L{c}"))
+                })
+                .collect::<Vec<_>>()
+                .join(">");
+            out.push(RankedConfig {
+                cs_value: norm.get(chain[0]).copied(),
+                kind: ScenarioKind::Mc { cuts: chain },
+                cut_name: Some(name),
+                predicted_accuracy: acc,
+                up_bytes: up,
+            });
+        }
     }
     // Baselines. The RC uplink volume is the manifest's input tensor
     // description (shape × dtype), not a dense-RGB-f32 assumption.
@@ -106,31 +150,68 @@ fn lite_accuracy(engine: &dyn InferenceBackend) -> f64 {
 /// Step 3: simulate each ranked configuration and check QoS.
 /// `n_frames` frames of `dataset` per configuration.
 ///
+/// `tiers` is the device chain (sensor side first): with the classic two
+/// tiers the candidates are LC/RC/SC; a deeper chain adds every matching
+/// multi-tier (MC) cut chain to the ranking, and the two-tier baselines
+/// run on the chain's first and last devices.
+///
 /// Each configuration is one point of the design space; execution rides the
 /// sweep engine's point runner ([`sweep::pooled_scenario`]) so the suggest
 /// loop and batch sweeps share a single scenario-execution path.
-#[allow(clippy::too_many_arguments)]
 pub fn suggest(
     engine: &dyn InferenceBackend,
     net: &NetworkConfig,
-    edge: &DeviceProfile,
-    server: &DeviceProfile,
+    tiers: &[DeviceProfile],
     qos: &QosRequirements,
     dataset: &Dataset,
     n_frames: usize,
     min_layer: usize,
 ) -> Result<Vec<Suggestion>> {
-    let ranked = rank_configurations(engine, min_layer);
+    if tiers.len() < 2 {
+        anyhow::bail!("suggest needs a chain of at least 2 device tiers");
+    }
+    let ranked = rank_configurations(engine, min_layer, tiers.len());
     let mut out = Vec::with_capacity(ranked.len());
     for rank in ranked {
         let cfg = ScenarioConfig {
-            kind: rank.kind,
+            kind: rank.kind.clone(),
             net: net.clone(),
-            edge: edge.clone(),
-            server: server.clone(),
+            tiers: match rank.kind {
+                // MC occupies the whole chain; the two-tier baselines run
+                // on its endpoints.
+                ScenarioKind::Mc { .. } => tiers.to_vec(),
+                _ => vec![
+                    tiers[0].clone(),
+                    tiers.last().unwrap().clone(),
+                ],
+            },
             scale: ModelScale::Slim,
             frame_period_ns: qos.max_latency_ns.unwrap_or(0),
         };
+        // Capability probe: a backend without per-segment chain
+        // executables (real AOT artifacts export single-split
+        // heads/tails only; on-demand synthesis is an analytic-backend
+        // capability) cannot serve an MC candidate — drop the chain from
+        // the table rather than failing the LC/RC/SC baselines with it.
+        // Genuine simulation failures below still propagate.
+        if let ScenarioKind::Mc { cuts } = &rank.kind {
+            let servable = engine
+                .executable(&format!("head_L{}_b1", cuts[0]))
+                .is_ok()
+                && cuts.windows(2).all(|w| {
+                    engine
+                        .executable(&super::streaming::mid_exec_name(
+                            w[0], w[1], 1,
+                        ))
+                        .is_ok()
+                })
+                && engine
+                    .executable(&super::streaming::chain_tail_name(cuts, 1))
+                    .is_ok();
+            if !servable {
+                continue;
+            }
+        }
         let report = sweep::pooled_scenario(
             engine, &cfg, dataset, n_frames, &[net.seed], qos,
         )?;
@@ -235,5 +316,18 @@ mod tests {
     #[test]
     fn best_of_empty_is_none() {
         assert!(best(&[]).is_none());
+    }
+
+    #[test]
+    fn ordered_chains_enumerate_increasing_subsets() {
+        let ids = [5usize, 9, 11, 13, 15];
+        assert_eq!(ordered_chains(&ids, 1).len(), 5);
+        assert_eq!(ordered_chains(&ids, 2).len(), 10);
+        assert_eq!(ordered_chains(&ids, 5).len(), 1);
+        assert!(ordered_chains(&ids, 6).is_empty());
+        assert!(ordered_chains(&ids, 0).is_empty());
+        for ch in ordered_chains(&ids, 3) {
+            assert!(ch.windows(2).all(|w| w[0] < w[1]));
+        }
     }
 }

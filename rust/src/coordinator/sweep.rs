@@ -3,10 +3,12 @@
 //!
 //! A [`SweepSpec`] declares a cartesian grid over the paper's design axes —
 //! network condition (channel preset, propagation latency, loss rate),
-//! transport protocol (TCP/UDP), scenario kind (LC / RC / SC×split),
-//! model scale, and the serving-load axes (concurrent `clients`,
-//! per-client `offered_fps`) — plus the fixed evaluation parameters
-//! (frames, seeds, device profiles, batching policy, QoS bounds).
+//! transport protocol (TCP/UDP), scenario kind (LC / RC / SC×split /
+//! MC×cut-chain via `cut_chains`), model scale, the serving-load axes
+//! (concurrent `clients`, per-client `offered_fps`), and the device
+//! tier-chain axis (`tiers`: sensor → edge → cloud placements) — plus the
+//! fixed evaluation parameters (frames, seeds, batching policy, QoS
+//! bounds).
 //! Every grid point executes on the closed-loop streaming engine
 //! ([`super::streaming`]), so overloaded points report queueing latency
 //! and saturated throughput instead of an open-loop fiction.
@@ -123,6 +125,14 @@ pub struct SweepSpec {
     /// Per-client offered frame rates; empty = one point driven by
     /// `frame_period_ns` instead. Rates must be finite and > 0.
     pub offered_fps: Vec<f64>,
+    /// Device tier chains (sensor side first), each a list of
+    /// [`DeviceProfile::parse`] specs; empty = the single `[edge, server]`
+    /// chain. MC scenarios pair only with chains of matching length
+    /// (`cuts + 1`); LC/RC/SC run on any chain (first + last tier).
+    pub tiers: Vec<Vec<String>>,
+    /// Ordered cut chains added to the scenario axis as
+    /// [`ScenarioKind::Mc`] entries (strictly increasing split ids).
+    pub cut_chains: Vec<Vec<usize>>,
     // -- fixed parameters -------------------------------------------------
     pub edge: String,
     pub server: String,
@@ -162,6 +172,8 @@ pub struct SweepJob {
     pub clients: usize,
     /// Per-client offered rate; `None` = use the spec's `frame_period_ns`.
     pub offered_fps: Option<f64>,
+    /// Device tier chain of this point (sensor side first).
+    pub tiers: Vec<String>,
 }
 
 /// Resolve a channel-preset name into its [`NetworkConfig`].
@@ -197,6 +209,8 @@ impl SweepSpec {
             archs: vec![Arch::Vgg16],
             clients: vec![1],
             offered_fps: Vec::new(),
+            tiers: Vec::new(),
+            cut_chains: Vec::new(),
             edge: "edge-gpu".to_string(),
             server: "server-gpu".to_string(),
             dataset: "test".to_string(),
@@ -232,12 +246,16 @@ impl SweepSpec {
     }
 
     /// Expand the grid into its ordered job list. Axis order (outermost
-    /// first): scenario, protocol, channel, latency, loss, scale, arch,
-    /// clients, offered_fps — so a caller can index `jobs` arithmetically;
-    /// newer inner axes (arch, load) default to a single value, preserving
-    /// the stride of older specs.
+    /// first): scenario (declared kinds, then one MC entry per
+    /// `cut_chains` element), protocol, channel, latency, loss, scale,
+    /// arch, clients, offered_fps, tiers — so a caller can index `jobs`
+    /// arithmetically; newer inner axes (arch, load, tiers) default to a
+    /// single value, preserving the stride of older specs. The only
+    /// non-cartesian rule: an MC scenario pairs exclusively with tier
+    /// chains of matching length (`cuts + 1`), and it is an error for an
+    /// MC scenario to match none of them.
     pub fn expand(&self) -> Result<Vec<SweepJob>> {
-        if self.scenarios.is_empty() {
+        if self.scenarios.is_empty() && self.cut_chains.is_empty() {
             bail!("sweep spec '{}' has no scenarios", self.name);
         }
         if self.protocols.is_empty() {
@@ -322,11 +340,62 @@ impl SweepSpec {
         for c in &self.channels {
             channel_preset(c, Protocol::Tcp, 0.0, 0)?;
         }
+        // Every device spec — the two-tier defaults and every chain
+        // element — goes through the one shared parse path.
         for name in [&self.edge, &self.server] {
-            if DeviceProfile::by_name(name).is_none() {
-                bail!("unknown device profile '{name}'");
+            DeviceProfile::parse(name)?;
+        }
+        for chain in &self.tiers {
+            if chain.len() < 2 {
+                bail!(
+                    "sweep spec '{}': tier chain {chain:?} needs at least \
+                     2 devices",
+                    self.name
+                );
+            }
+            for name in chain {
+                DeviceProfile::parse(name)?;
             }
         }
+        for cuts in &self.cut_chains {
+            if !crate::model::is_ordered_chain(cuts) {
+                bail!(
+                    "sweep spec '{}': cut chain {cuts:?} must be non-empty \
+                     and strictly increasing",
+                    self.name
+                );
+            }
+        }
+        let scenarios = self.effective_scenarios();
+        // MC cut ids must be in range for every arch on the grid — an
+        // invalid spec fails here, not inside a worker thread mid-sweep.
+        // (Per-arch cut-mark counts are scale-independent: the slim and
+        // paper-scale networks mark the same split points.)
+        if scenarios.iter().any(|k| matches!(k, ScenarioKind::Mc { .. })) {
+            let cut_counts: Vec<(Arch, usize)> = self
+                .archs
+                .iter()
+                .map(|&a| {
+                    (a, crate::model::split_points(&a.full_network()).len())
+                })
+                .collect();
+            for kind in &scenarios {
+                let ScenarioKind::Mc { cuts } = kind else { continue };
+                for &(arch, n) in &cut_counts {
+                    if cuts.iter().any(|&c| c + 1 >= n) {
+                        bail!(
+                            "sweep spec '{}': cut chain {cuts:?} out of \
+                             range for {} ({} cut points, valid 0..={})",
+                            self.name,
+                            arch.as_str(),
+                            n,
+                            n.saturating_sub(2),
+                        );
+                    }
+                }
+            }
+        }
+        let tier_chains = self.effective_tiers();
         let lats: Vec<Option<f64>> = if self.latencies_us.is_empty() {
             vec![None]
         } else {
@@ -338,7 +407,8 @@ impl SweepSpec {
             self.offered_fps.iter().map(|&f| Some(f)).collect()
         };
         let mut jobs = Vec::new();
-        for &kind in &self.scenarios {
+        for kind in &scenarios {
+            let before = jobs.len();
             for &protocol in &self.protocols {
                 for channel in &self.channels {
                     for &latency_us in &lats {
@@ -347,18 +417,35 @@ impl SweepSpec {
                                 for &arch in &self.archs {
                                     for &clients in &self.clients {
                                         for &offered_fps in &rates {
-                                            jobs.push(SweepJob {
-                                                index: jobs.len(),
-                                                kind,
-                                                protocol,
-                                                channel: channel.clone(),
-                                                latency_us,
-                                                loss,
-                                                scale,
-                                                arch,
-                                                clients,
-                                                offered_fps,
-                                            });
+                                            for chain in &tier_chains {
+                                                // MC pairs only with tier
+                                                // chains of matching
+                                                // length; other kinds run
+                                                // on any chain.
+                                                if let ScenarioKind::Mc {
+                                                    cuts,
+                                                } = kind
+                                                {
+                                                    if chain.len()
+                                                        != cuts.len() + 1
+                                                    {
+                                                        continue;
+                                                    }
+                                                }
+                                                jobs.push(SweepJob {
+                                                    index: jobs.len(),
+                                                    kind: kind.clone(),
+                                                    protocol,
+                                                    channel: channel.clone(),
+                                                    latency_us,
+                                                    loss,
+                                                    scale,
+                                                    arch,
+                                                    clients,
+                                                    offered_fps,
+                                                    tiers: chain.clone(),
+                                                });
+                                            }
                                         }
                                     }
                                 }
@@ -367,21 +454,51 @@ impl SweepSpec {
                     }
                 }
             }
+            if jobs.len() == before {
+                bail!(
+                    "sweep spec '{}': scenario {kind} has no compatible \
+                     tier chain (MC with k cuts needs a {}-tier chain)",
+                    self.name,
+                    kind.tiers_needed(),
+                );
+            }
         }
         Ok(jobs)
+    }
+
+    /// The scenario axis actually swept: the declared `scenarios` plus one
+    /// [`ScenarioKind::Mc`] entry per `cut_chains` element, in order.
+    fn effective_scenarios(&self) -> Vec<ScenarioKind> {
+        let mut out = self.scenarios.clone();
+        out.extend(
+            self.cut_chains
+                .iter()
+                .map(|cuts| ScenarioKind::Mc { cuts: cuts.clone() }),
+        );
+        out
+    }
+
+    /// The tier-chain axis actually swept: `tiers`, or the single
+    /// `[edge, server]` chain when none are declared.
+    fn effective_tiers(&self) -> Vec<Vec<String>> {
+        if self.tiers.is_empty() {
+            vec![vec![self.edge.clone(), self.server.clone()]]
+        } else {
+            self.tiers.clone()
+        }
     }
 
     /// Parse a spec from its JSON document (see the type-level docs for
     /// the schema). The grid is validated eagerly, so an invalid spec
     /// fails here rather than inside a worker thread.
     pub fn from_json(text: &str) -> Result<SweepSpec> {
-        const KEYS: [&str; 24] = [
+        const KEYS: [&str; 26] = [
             "name", "mode", "scenarios", "protocols", "channels",
             "latencies_us", "loss_rates", "scales", "archs", "clients",
-            "offered_fps", "edge", "server", "dataset", "frames",
-            "seeds_per_point", "seed", "fps", "frame_period_ns",
-            "max_latency_ms", "min_accuracy", "min_hit_rate", "max_batch",
-            "batch_wait_us",
+            "offered_fps", "tiers", "cut_chains", "edge", "server",
+            "dataset", "frames", "seeds_per_point", "seed", "fps",
+            "frame_period_ns", "max_latency_ms", "min_accuracy",
+            "min_hit_rate", "max_batch", "batch_wait_us",
         ];
         let j = Json::parse(text).context("parsing sweep spec")?;
         // A misspelled optional key must not silently fall back to its
@@ -396,12 +513,17 @@ impl SweepSpec {
         let mut spec = SweepSpec::new(
             j.opt("name").map(|v| v.str()).transpose()?.unwrap_or("sweep"),
         );
-        spec.scenarios = j
-            .get("scenarios")?
-            .str_vec()?
-            .iter()
-            .map(|s| ScenarioKind::parse(s))
-            .collect::<Result<_>>()?;
+        // `scenarios` may be omitted when `cut_chains` supplies the MC
+        // scenario axis on its own (an empty union still fails in
+        // `expand`).
+        spec.scenarios = match j.opt("scenarios") {
+            Some(v) => v
+                .str_vec()?
+                .iter()
+                .map(|s| ScenarioKind::parse(s))
+                .collect::<Result<_>>()?,
+            None => Vec::new(),
+        };
         spec.protocols = j
             .get("protocols")?
             .str_vec()?
@@ -434,6 +556,20 @@ impl SweepSpec {
         }
         if let Some(v) = j.opt("offered_fps") {
             spec.offered_fps = v.f64_vec()?;
+        }
+        if let Some(v) = j.opt("tiers") {
+            spec.tiers = v
+                .arr()?
+                .iter()
+                .map(|chain| chain.str_vec())
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = j.opt("cut_chains") {
+            spec.cut_chains = v
+                .arr()?
+                .iter()
+                .map(|chain| chain.usize_vec())
+                .collect::<Result<_>>()?;
         }
         if let Some(v) = j.opt("max_batch") {
             spec.max_batch = v.u64()? as usize;
@@ -568,6 +704,35 @@ impl SweepSpec {
                     self.offered_fps.iter().map(|&f| json::num(f)).collect(),
                 ),
             ),
+            (
+                "tiers",
+                json::arr(
+                    self.tiers
+                        .iter()
+                        .map(|chain| {
+                            json::arr(
+                                chain.iter().map(|d| json::s(d)).collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "cut_chains",
+                json::arr(
+                    self.cut_chains
+                        .iter()
+                        .map(|chain| {
+                            json::arr(
+                                chain
+                                    .iter()
+                                    .map(|&c| json::num(c as f64))
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
             ("edge", json::s(&self.edge)),
             ("server", json::s(&self.server)),
             ("dataset", json::s(&self.dataset)),
@@ -600,6 +765,8 @@ pub struct SweepPoint {
     pub clients: usize,
     /// Per-client offered rate; `None` = spec `frame_period_ns` drove it.
     pub offered_fps: Option<f64>,
+    /// Device tier chain of this point (sensor side first).
+    pub tiers: Vec<String>,
     /// Total frames pooled into this point (clients × frames × seeds).
     pub frames: usize,
     /// Measured accuracy; `None` in latency-only sweeps.
@@ -642,7 +809,7 @@ pub fn pooled_scenario(
         c.net.seed = seed;
         records.extend(run_scenario(engine, &c, dataset, frames, qos)?.records);
     }
-    Ok(ScenarioReport::from_records(cfg, records, qos))
+    ScenarioReport::from_records(cfg, records, qos)
 }
 
 /// Execute one expanded job on `engine` — which must serve `job.arch`
@@ -662,20 +829,20 @@ fn run_job(
     if let Some(us) = job.latency_us {
         net.latency_ns = (us * 1000.0) as SimTime;
     }
-    let edge = DeviceProfile::by_name(&spec.edge)
-        .ok_or_else(|| anyhow!("unknown edge profile '{}'", spec.edge))?;
-    let server = DeviceProfile::by_name(&spec.server)
-        .ok_or_else(|| anyhow!("unknown server profile '{}'", spec.server))?;
+    let tiers = job
+        .tiers
+        .iter()
+        .map(|d| DeviceProfile::parse(d))
+        .collect::<Result<Vec<_>>>()?;
     let frame_period_ns = match job.offered_fps {
         Some(fps) => (1e9 / fps) as SimTime,
         None => spec.frame_period_ns,
     };
     let cfg = StreamConfig {
         scenario: ScenarioConfig {
-            kind: job.kind,
+            kind: job.kind.clone(),
             net,
-            edge,
-            server,
+            tiers,
             scale: job.scale,
             frame_period_ns,
         },
@@ -696,7 +863,7 @@ fn run_job(
     let r = pooled_stream(engine, &cfg, ds, &seeds, &qos)?;
     Ok(SweepPoint {
         index: job.index,
-        kind: job.kind,
+        kind: job.kind.clone(),
         protocol: job.protocol,
         channel: job.channel.clone(),
         latency_us: job.latency_us,
@@ -705,6 +872,7 @@ fn run_job(
         arch: job.arch,
         clients: job.clients,
         offered_fps: job.offered_fps,
+        tiers: job.tiers.clone(),
         frames: r.frames,
         accuracy: r.accuracy,
         mean_latency_ns: r.mean_latency_ns,
@@ -808,6 +976,7 @@ impl SweepReport {
             "arch",
             "clients",
             "offered_fps",
+            "tiers",
             "frames",
             "accuracy",
             "mean_latency_ms",
@@ -833,6 +1002,7 @@ impl SweepReport {
                 p.arch.as_str().to_string(),
                 p.clients.to_string(),
                 p.offered_fps.map(|v| format!("{v}")).unwrap_or_default(),
+                p.tiers.join(">"),
                 p.frames.to_string(),
                 p.accuracy.map(|a| format!("{a:.4}")).unwrap_or_default(),
                 format!("{:.4}", p.mean_latency_ns / 1e6),
@@ -882,6 +1052,11 @@ impl SweepReport {
                         Some(f) => format!("{}x{:.0}", p.clients, f),
                         None => format!("{}x—", p.clients),
                     },
+                    if p.tiers.len() <= 2 {
+                        format!("{}t", p.tiers.len())
+                    } else {
+                        format!("{}t:{}", p.tiers.len(), p.tiers.join(">"))
+                    },
                     p.accuracy
                         .map(|a| format!("{:.1}%", a * 100.0))
                         .unwrap_or_else(|| "—".to_string()),
@@ -902,8 +1077,8 @@ impl SweepReport {
         out.push_str(&table::render(
             &[
                 "#", "scenario", "transport", "loss", "scale", "arch",
-                "load", "accuracy", "mean lat", "p99 lat", "thru", "QoS",
-                "Pareto",
+                "load", "tiers", "accuracy", "mean lat", "p99 lat", "thru",
+                "QoS", "Pareto",
             ],
             &rows,
         ));
@@ -953,6 +1128,10 @@ fn point_json(p: &SweepPoint) -> Json {
         (
             "offered_fps",
             p.offered_fps.map(json::num).unwrap_or(Json::Null),
+        ),
+        (
+            "tiers",
+            json::arr(p.tiers.iter().map(|d| json::s(d)).collect()),
         ),
         ("frames", json::num(p.frames as f64)),
         ("accuracy", p.accuracy.map(json::num).unwrap_or(Json::Null)),
@@ -1241,6 +1420,87 @@ mod tests {
         // An empty arch axis is rejected eagerly.
         spec.archs.clear();
         assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn tier_and_cut_chain_axes_expand_with_the_compat_rule() {
+        let mut spec = small_spec();
+        spec.scenarios = vec![ScenarioKind::Rc];
+        spec.protocols = vec![Protocol::Tcp];
+        spec.loss_rates = vec![0.0];
+        spec.tiers = vec![
+            vec!["edge-gpu".into(), "server-gpu".into()],
+            vec![
+                "sensor-npu".into(),
+                "edge-gpu".into(),
+                "server-gpu".into(),
+            ],
+        ];
+        spec.cut_chains = vec![vec![5, 9]];
+        let jobs = spec.expand().unwrap();
+        // RC runs on both chains; MC@5,9 pairs only with the 3-tier one.
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(jobs[0].kind, ScenarioKind::Rc);
+        assert_eq!(jobs[0].tiers.len(), 2);
+        assert_eq!(jobs[1].tiers.len(), 3);
+        assert_eq!(jobs[2].kind, ScenarioKind::Mc { cuts: vec![5, 9] });
+        assert_eq!(jobs[2].tiers[0], "sensor-npu");
+        // An MC scenario with no matching chain is an eager error.
+        spec.tiers.remove(1);
+        assert!(spec.expand().is_err());
+        // Malformed chains are rejected.
+        let mut spec = small_spec();
+        spec.cut_chains = vec![vec![9, 5]];
+        assert!(spec.expand().is_err());
+        // Out-of-range cuts fail eagerly, not inside a worker thread.
+        let mut spec = small_spec();
+        spec.tiers = vec![vec![
+            "sensor-npu".into(),
+            "edge-gpu".into(),
+            "server-gpu".into(),
+        ]];
+        spec.cut_chains = vec![vec![5, 40]];
+        assert!(spec.expand().is_err());
+        let mut spec = small_spec();
+        spec.cut_chains = vec![vec![]];
+        assert!(spec.expand().is_err());
+        let mut spec = small_spec();
+        spec.tiers = vec![vec!["edge-gpu".into()]];
+        assert!(spec.expand().is_err());
+        let mut spec = small_spec();
+        spec.tiers = vec![vec!["edge-gpu".into(), "warp-drive".into()]];
+        assert!(spec.expand().is_err());
+        // Custom device specs ride the shared parse path.
+        let mut spec = small_spec();
+        spec.tiers =
+            vec![vec!["npu@5e10+400000".into(), "server-gpu".into()]];
+        assert!(spec.expand().is_ok());
+    }
+
+    #[test]
+    fn from_json_parses_tiers_and_cut_chains() {
+        let spec = SweepSpec::from_json(
+            r#"{"protocols": ["tcp"], "loss_rates": [0.0],
+                "cut_chains": [[5, 9], [5, 13]],
+                "tiers": [["sensor-npu", "edge-gpu", "server-gpu"]]}"#,
+        )
+        .unwrap();
+        assert!(spec.scenarios.is_empty());
+        assert_eq!(spec.cut_chains, vec![vec![5, 9], vec![5, 13]]);
+        assert_eq!(spec.tiers.len(), 1);
+        assert_eq!(spec.expand().unwrap().len(), 2);
+        // The grid round-trips through JSON with the new axes intact.
+        let back = SweepSpec::from_json(&spec.to_json().to_string()).unwrap();
+        assert_eq!(back.tiers, spec.tiers);
+        assert_eq!(back.cut_chains, spec.cut_chains);
+        assert_eq!(back.to_json().to_string(), spec.to_json().to_string());
+        // Non-increasing chains fail at parse time.
+        assert!(SweepSpec::from_json(
+            r#"{"protocols": ["tcp"], "loss_rates": [0.0],
+                "cut_chains": [[9, 5]],
+                "tiers": [["sensor-npu", "edge-gpu", "server-gpu"]]}"#,
+        )
+        .is_err());
     }
 
     #[test]

@@ -11,24 +11,28 @@
 //!    model executables, see [`runtime`]) and propose candidate split
 //!    points at its local maxima.
 //! 2. **Communication-aware simulation** ([`netsim`],
-//!    [`coordinator::scenario`]): replay LC / RC / SC pipelines over a
+//!    [`coordinator::scenario`]): replay LC / RC / SC pipelines — and
+//!    multi-tier MC pipelines placing k ordered cuts across a sensor →
+//!    edge → cloud device chain, one channel per hop — over a
 //!    discrete-event channel model (TCP/UDP, latency, capacity, interface
 //!    speed, saboteur) with per-frame model inference.
 //! 3. **Closed-loop streaming** ([`coordinator::streaming`]): a queueing,
 //!    multi-client serving simulator — client streams feed per-resource
-//!    FIFO queues (per-client edge compute, shared uplink/downlink, a
-//!    size-or-deadline batched server), so per-frame latency includes
-//!    waiting time and throughput saturates at the bottleneck resource
-//!    under overload. `run_scenario` rides this engine.
+//!    FIFO queues (per-client sensor compute, per-hop uplink/downlink
+//!    lanes, shared mid-chain tiers, a size-or-deadline batched server),
+//!    so per-frame latency includes waiting time and throughput saturates
+//!    at the bottleneck resource under overload. `run_scenario` rides
+//!    this engine.
 //! 4. **QoS suggestion** ([`coordinator::suggest`]): rank configurations by
 //!    accuracy, simulate the shortlist, and report which designs satisfy
 //!    the application's latency/accuracy requirements (per-frame deadline
 //!    hit-rate, [`coordinator::qos::QosRequirements::min_hit_rate`]).
 //! 5. **Design-space sweeps** ([`coordinator::sweep`]): expand a
 //!    declarative [`coordinator::sweep::SweepSpec`] — a cartesian grid over
-//!    network condition, protocol, scenario kind, model scale,
-//!    architecture ([`model::Arch`]) and serving load (clients × offered
-//!    FPS) — into jobs, execute them on a deterministic worker pool
+//!    network condition, protocol, scenario kind (incl. MC cut chains),
+//!    model scale, architecture ([`model::Arch`]), serving load (clients
+//!    × offered FPS) and device tier chains — into jobs, execute them on
+//!    a deterministic worker pool
 //!    (byte-identical reports at any thread count), and reduce them to an
 //!    accuracy-vs-latency Pareto frontier ([`report::pareto`]) with
 //!    per-constraint satisfaction counts.

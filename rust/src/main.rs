@@ -4,7 +4,7 @@
 //!   summary    Tables I/II for VGG16 (or the trained slim model)
 //!   cs-curve   compute the Grad-CAM CS curve in Rust via the backend
 //!   suggest    rank + simulate configurations against QoS requirements
-//!   simulate   run one LC/RC/SC scenario over the simulated channel
+//!   simulate   run one LC/RC/SC/MC scenario over the simulated channel(s)
 //!   sweep      run a declarative design-space grid on a worker pool
 //!   serve      stream the ICE-Lab workload through a configuration
 //!
@@ -78,14 +78,16 @@ commands:
   summary    print the neural network summary and statistics (Tables I/II)
   cs-curve   compute the Cumulative Saliency curve via the backend
   suggest    rank candidate configurations and simulate them against QoS
-  simulate   run one LC/RC/SC scenario over the simulated channel
+  simulate   run one LC/RC/SC/MC scenario over the simulated channel(s)
   sweep      run a design-space grid in parallel, with a Pareto report
   serve      stream the ICE-Lab conveyor workload through a configuration
   hil-worker hardware-in-the-loop: serve a tail/full artifact on a socket
   hil-serve  run split serving against a real worker over localhost TCP
 
 most commands accept --arch vgg16 | resnet18 | mobilenetv2 to pick the
-model architecture (split ids are per-arch graph-cut indices)
+model architecture (split ids are per-arch graph-cut indices), and
+--tiers <sensor,...,cloud> to place a pipeline across a device chain
+(mc@<k cuts> partitions the network over k+1 tiers, one channel per hop)
 
 run `sei <command> --help` for options"
         .to_string()
@@ -108,14 +110,23 @@ fn network_from(m: &sei::util::cli::Matches) -> Result<NetworkConfig> {
     Ok(net)
 }
 
-fn devices_from(m: &sei::util::cli::Matches)
-    -> Result<(DeviceProfile, DeviceProfile)>
-{
-    let edge = DeviceProfile::by_name(m.str("edge"))
-        .ok_or_else(|| anyhow::anyhow!("unknown edge profile"))?;
-    let server = DeviceProfile::by_name(m.str("server"))
-        .ok_or_else(|| anyhow::anyhow!("unknown server profile"))?;
-    Ok((edge, server))
+/// Resolve the device tier chain: `--tiers a,b,c` wins; otherwise the
+/// classic `[--edge, --server]` pair. Every spec goes through the shared
+/// [`DeviceProfile::parse`] path (built-in names or
+/// `name@<macs_per_sec>+<overhead_ns>`).
+fn tiers_from(m: &sei::util::cli::Matches) -> Result<Vec<DeviceProfile>> {
+    let list = m.str("tiers");
+    if !list.is_empty() {
+        let tiers = DeviceProfile::parse_tiers(list)?;
+        if tiers.len() < 2 {
+            bail!("--tiers needs at least 2 devices (sensor-side first)");
+        }
+        return Ok(tiers);
+    }
+    Ok(vec![
+        DeviceProfile::parse(m.str("edge"))?,
+        DeviceProfile::parse(m.str("server"))?,
+    ])
 }
 
 fn cmd_summary(args: &[String]) -> Result<()> {
@@ -207,12 +218,16 @@ fn cmd_suggest(args: &[String]) -> Result<()> {
         .opt("frames", "128", "frames to simulate per configuration")
         .opt("edge", "edge-gpu", "edge device profile")
         .opt("server", "server-gpu", "server device profile")
+        .opt("tiers", "",
+             "device tier chain, sensor first (e.g. \
+              sensor-npu,edge-gpu,server-gpu); >= 3 tiers adds multi-tier \
+              MC candidates to the ranking")
         .opt("min-layer", "2", "earliest admissible split layer")
         .opt("seed", "42", "simulation seed")
         .parse(args)?;
     let engine = backend_from(&m)?;
     let net = network_from(&m)?;
-    let (edge, server) = devices_from(&m)?;
+    let tiers = tiers_from(&m)?;
     let mut qos = QosRequirements::with_fps(m.f64("fps")?)?;
     let min_acc = m.f64("min-accuracy")?;
     if min_acc > 0.0 {
@@ -221,10 +236,15 @@ fn cmd_suggest(args: &[String]) -> Result<()> {
     let test = engine.dataset("test")?;
     println!("arch: {}", engine.manifest().model.arch);
     println!("QoS: {}", qos.describe());
+    println!(
+        "tiers: {}",
+        tiers.iter().map(|t| t.name.as_str()).collect::<Vec<_>>()
+            .join(" -> ")
+    );
     println!("network: {} {} loss {:.1}%\n", m.str("channel"),
              net.protocol, net.loss_rate * 100.0);
     let suggestions = coordinator::suggest(
-        &*engine, &net, &edge, &server, &qos, &test, m.usize("frames")?,
+        &*engine, &net, &tiers, &qos, &test, m.usize("frames")?,
         m.usize("min-layer")?,
     )?;
     println!(
@@ -317,7 +337,7 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     let m = Command::new("simulate", "run one scenario")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("arch", "vgg16", "vgg16 | resnet18 | mobilenetv2")
-        .opt("scenario", "rc", "lc | rc | sc@<cut>")
+        .opt("scenario", "rc", "lc | rc | sc@<cut> | mc@<c1>,<c2>,...")
         .opt("protocol", "tcp", "tcp | udp")
         .opt("channel", "gigabit", "gigabit | fast-ethernet | wifi")
         .opt("loss", "0.0", "packet loss rate")
@@ -326,19 +346,21 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
         .opt("fps", "20", "frame rate of the source (and QoS bound)")
         .opt("edge", "edge-gpu", "edge device profile")
         .opt("server", "server-gpu", "server device profile")
+        .opt("tiers", "",
+             "device tier chain, sensor first (mc@<k cuts> needs k+1 \
+              tiers, e.g. sensor-npu,edge-gpu,server-gpu)")
         .opt("scale", "slim", "slim | full (paper-scale volumetrics)")
         .opt("dataset", "test", "train | test | ice")
         .opt("seed", "42", "simulation seed")
         .parse(args)?;
     let engine = backend_from(&m)?;
     let net = network_from(&m)?;
-    let (edge, server) = devices_from(&m)?;
+    let tiers = tiers_from(&m)?;
     let qos = QosRequirements::with_fps(m.f64("fps")?)?;
     let cfg = ScenarioConfig {
         kind: ScenarioKind::parse(m.str("scenario"))?,
         net,
-        edge,
-        server,
+        tiers,
         scale: ModelScale::parse(m.str("scale"))?,
         frame_period_ns: (1e9 / m.f64("fps")?) as u64,
     };
@@ -357,7 +379,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     )
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("arch", "vgg16", "vgg16 | resnet18 | mobilenetv2")
-        .opt("scenario", "rc", "lc | rc | sc@<cut>")
+        .opt("scenario", "rc", "lc | rc | sc@<cut> | mc@<c1>,<c2>,...")
         .opt("protocol", "tcp", "tcp | udp")
         .opt("channel", "gigabit", "gigabit | fast-ethernet | wifi")
         .opt("loss", "0.0", "packet loss rate")
@@ -370,11 +392,14 @@ fn cmd_serve(args: &[String]) -> Result<()> {
              "server dynamic batching: partial-batch deadline, µs")
         .opt("edge", "edge-gpu", "edge device profile")
         .opt("server", "server-gpu", "server device profile")
+        .opt("tiers", "",
+             "device tier chain, sensor first (mc@<k cuts> needs k+1 \
+              tiers)")
         .opt("seed", "42", "simulation seed")
         .parse(args)?;
     let engine = backend_from(&m)?;
     let net = network_from(&m)?;
-    let (edge, server) = devices_from(&m)?;
+    let tiers = tiers_from(&m)?;
     let qos = QosRequirements::with_fps(m.f64("fps")?)?;
     let clients = m.usize("clients")?;
     if clients == 0 {
@@ -387,8 +412,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let cfg = ScenarioConfig {
         kind: ScenarioKind::parse(m.str("scenario"))?,
         net,
-        edge,
-        server,
+        tiers,
         scale: ModelScale::Slim,
         frame_period_ns: (1e9 / m.f64("fps")?) as u64,
     };

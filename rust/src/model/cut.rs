@@ -15,6 +15,8 @@
 //! block boundaries for ResNet/MobileNet), indexed `0..n` per arch. For
 //! VGG16 these coincide exactly with the 18 feature layers of Fig. 2.
 
+use anyhow::{bail, Result};
+
 use super::layer::{Network, Shape};
 
 /// One valid cut: the head/tail partition after topological position
@@ -169,6 +171,106 @@ pub fn split_points(net: &Network) -> Vec<Cut> {
         .collect()
 }
 
+/// Per-segment costs of a k-cut chain over `points` (the output of
+/// [`split_points`]): the network is partitioned into `chain.len() + 1`
+/// segments executed on a chain of tiers, each consecutive pair of
+/// segments linked by the bottleneck codec of the cut between them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChainCosts {
+    /// Mult-adds per image of each segment, *including* the bottleneck
+    /// decoder of the incoming cut and the encoder of the outgoing cut
+    /// (`len == chain.len() + 1`). A single-cut chain reproduces
+    /// [`Cut::split_compute`] exactly.
+    pub seg_mult_adds: Vec<u64>,
+    /// Compressed latent bytes crossing each inter-tier hop
+    /// (`len == chain.len()`), i.e. [`Cut::latent_bytes`] per cut.
+    pub hop_bytes: Vec<u64>,
+}
+
+/// Is `cuts` a well-ordered cut chain: non-empty and strictly increasing
+/// (k ordered cuts over one topological order)? The single validity
+/// predicate shared by the scenario parser, the sweep spec, the analytic
+/// backend's on-demand executables and [`chain_costs`].
+pub fn is_ordered_chain(cuts: &[usize]) -> bool {
+    !cuts.is_empty() && cuts.windows(2).all(|w| w[0] < w[1])
+}
+
+/// Resolve the per-segment accounting of an ordered cut chain. `chain`
+/// holds strictly increasing indices into `points`; the last split point
+/// is excluded (its tail is degenerate), mirroring the single-cut bound.
+pub fn chain_costs(points: &[Cut], chain: &[usize]) -> Result<ChainCosts> {
+    if !is_ordered_chain(chain) {
+        bail!(
+            "cut chain {chain:?} must be non-empty and strictly \
+             increasing (one topological order, k ordered cuts)"
+        );
+    }
+    let last_valid = points.len().saturating_sub(1);
+    for &c in chain {
+        if c >= last_valid {
+            bail!(
+                "cut {c} out of range: {} cut points (valid: 0..={})",
+                points.len(),
+                last_valid.saturating_sub(1)
+            );
+        }
+    }
+    let mut seg = Vec::with_capacity(chain.len() + 1);
+    let mut hop = Vec::with_capacity(chain.len());
+    let mut prev_head = 0u64; // cumulative head MACs up to the previous cut
+    let mut prev_dec = 0u64; // decoder of the incoming bottleneck
+    for &c in chain {
+        let cut = &points[c];
+        let (enc, dec) = cut.bottleneck_mult_adds();
+        seg.push(cut.head_mult_adds - prev_head + prev_dec + enc);
+        hop.push(cut.latent_bytes());
+        prev_head = cut.head_mult_adds;
+        prev_dec = dec;
+    }
+    let last = &points[*chain.last().unwrap()];
+    seg.push(last.tail_mult_adds + prev_dec);
+    Ok(ChainCosts { seg_mult_adds: seg, hop_bytes: hop })
+}
+
+/// All strictly increasing chains of `k` ids over the ascending list
+/// `ids` — the shared k-subset enumerator behind [`valid_cut_chains`]
+/// and the suggest engine's multi-tier candidate generation.
+pub fn ordered_chains(ids: &[usize], k: usize) -> Vec<Vec<usize>> {
+    fn rec(
+        ids: &[usize],
+        start: usize,
+        k: usize,
+        cur: &mut Vec<usize>,
+        out: &mut Vec<Vec<usize>>,
+    ) {
+        if cur.len() == k {
+            out.push(cur.clone());
+            return;
+        }
+        for i in start..ids.len() {
+            cur.push(ids[i]);
+            rec(ids, i + 1, k, cur, out);
+            cur.pop();
+        }
+    }
+    let mut out = Vec::new();
+    if k > 0 && k <= ids.len() {
+        rec(ids, 0, k, &mut Vec::with_capacity(k), &mut out);
+    }
+    out
+}
+
+/// Enumerate every valid ordered chain of `k` cuts over the network's
+/// marked split points: all strictly increasing k-subsets of the split
+/// ids admissible for [`chain_costs`]. The single topological order makes
+/// validity purely combinatorial — the frontier machinery already
+/// guarantees each individual id is a single-tensor cut.
+pub fn valid_cut_chains(net: &Network, k: usize) -> Vec<Vec<usize>> {
+    let ids: Vec<usize> =
+        (0..split_points(net).len().saturating_sub(1)).collect();
+    ordered_chains(&ids, k)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -296,6 +398,88 @@ mod tests {
         let (h, t) = c.split_compute();
         assert_eq!(h, 10 + enc);
         assert_eq!(t, dec + 20);
+    }
+
+    #[test]
+    fn single_cut_chain_reproduces_split_compute() {
+        // The degenerate-equivalence anchor at the accounting level: a
+        // one-cut chain's two segments are exactly (head+enc, dec+tail).
+        let net = chain();
+        let pts = split_points(&net);
+        for c in 0..pts.len() - 1 {
+            let costs = chain_costs(&pts, &[c]).unwrap();
+            let (head, tail) = pts[c].split_compute();
+            assert_eq!(costs.seg_mult_adds, vec![head, tail]);
+            assert_eq!(costs.hop_bytes, vec![pts[c].latent_bytes()]);
+        }
+    }
+
+    fn chain3() -> Network {
+        // Three marked points, so 2-cut chains exist over this toy net.
+        NetworkBuilder::new("chain3", Shape::Chw(3, 8, 8))
+            .conv3x3("c1", 4)
+            .relu("r1")
+            .cut_here("c1")
+            .maxpool2("p1")
+            .cut_here("p1")
+            .conv3x3("c2", 8)
+            .relu("r2")
+            .cut_here("c2")
+            .flatten("f")
+            .linear("fc", 10)
+            .build()
+    }
+
+    #[test]
+    fn chain_segments_conserve_macs_plus_codecs() {
+        let net = chain3();
+        let pts = split_points(&net);
+        let chains = [vec![0usize], vec![1], vec![0, 1]];
+        for ch in &chains {
+            let costs = chain_costs(&pts, ch).unwrap();
+            assert_eq!(costs.seg_mult_adds.len(), ch.len() + 1);
+            assert_eq!(costs.hop_bytes.len(), ch.len());
+            let codec: u64 = ch
+                .iter()
+                .map(|&c| {
+                    let (e, d) = pts[c].bottleneck_mult_adds();
+                    e + d
+                })
+                .sum();
+            assert_eq!(
+                costs.seg_mult_adds.iter().sum::<u64>(),
+                net.mult_adds() + codec,
+                "chain {ch:?}: segment MACs must telescope to \
+                 total + codecs"
+            );
+        }
+    }
+
+    #[test]
+    fn chain_costs_rejects_bad_chains() {
+        let net = chain();
+        let pts = split_points(&net);
+        assert!(chain_costs(&pts, &[]).is_err());
+        assert!(chain_costs(&pts, &[1, 1]).is_err());
+        assert!(chain_costs(&pts, &[1, 0]).is_err());
+        // The last split point is excluded, as for single cuts.
+        assert!(chain_costs(&pts, &[pts.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn valid_cut_chains_enumerates_increasing_subsets() {
+        let net = chain3();
+        let n = split_points(&net).len() - 1; // admissible ids: 0..n
+        let one = valid_cut_chains(&net, 1);
+        assert_eq!(one.len(), n);
+        let two = valid_cut_chains(&net, 2);
+        assert_eq!(two.len(), n * (n - 1) / 2);
+        for ch in one.iter().chain(&two) {
+            assert!(chain_costs(&split_points(&net), ch).is_ok());
+            assert!(ch.windows(2).all(|w| w[0] < w[1]));
+        }
+        assert!(valid_cut_chains(&net, 0).is_empty());
+        assert!(valid_cut_chains(&net, n + 1).is_empty());
     }
 
     #[test]

@@ -2,12 +2,20 @@
 //! three-dimensional design space (Sec. I). Compute time is modelled as
 //! mult-adds / effective-throughput, the same first-order model the paper's
 //! simulator uses for the timing of the computation phases.
+//!
+//! With multi-tier placement the platform axis is a *chain* of devices
+//! (sensor -> edge -> cloud); [`DeviceProfile::parse`] is the single parse
+//! path shared by the CLI (`--edge`, `--server`, `--tiers`) and sweep-spec
+//! JSON: it accepts the built-in profile names plus custom
+//! `name@<macs_per_sec>+<overhead_ns>` specs (e.g. `tpu@2e12+100000`).
+
+use anyhow::{bail, Result};
 
 use crate::netsim::event::SimTime;
 
 #[derive(Clone, Debug)]
 pub struct DeviceProfile {
-    pub name: &'static str,
+    pub name: String,
     /// Effective throughput in mult-adds per second (MACs/s), i.e. already
     /// discounted for achievable utilization, not peak datasheet FLOPs.
     pub macs_per_sec: f64,
@@ -16,42 +24,105 @@ pub struct DeviceProfile {
 }
 
 impl DeviceProfile {
+    fn named(name: &str, macs_per_sec: f64, overhead_ns: SimTime) -> Self {
+        DeviceProfile { name: name.to_string(), macs_per_sec, overhead_ns }
+    }
+
+    /// Microcontroller-class sensing device (Cortex-M with CMSIS-NN):
+    /// suitable only for the first few layers of a slim head.
+    pub fn sensor_mcu() -> Self {
+        Self::named("sensor-mcu", 2e8, 500_000)
+    }
+
+    /// Camera-attached NPU (Coral/Ethos-class, int8): runs a shallow head
+    /// in real time but cannot hold a full backbone.
+    pub fn sensor_npu() -> Self {
+        Self::named("sensor-npu", 5e10, 400_000)
+    }
+
     /// Embedded CPU-class sensing device (Cortex-A with NEON).
     pub fn edge_cpu() -> Self {
-        DeviceProfile {
-            name: "edge-cpu",
-            macs_per_sec: 4e9,
-            overhead_ns: 200_000,
-        }
+        Self::named("edge-cpu", 4e9, 200_000)
     }
 
     /// Embedded GPU/NPU-class sensing device (Jetson-class, fp16).
     /// 1e12 MACs/s ≈ a Xavier-class NX at realistic utilization — head@L11
     /// of VGG16@224 (~11 GMAC) in ~11 ms, inside the ICE-Lab 50 ms budget.
     pub fn edge_gpu() -> Self {
-        DeviceProfile {
-            name: "edge-gpu",
-            macs_per_sec: 1e12,
-            overhead_ns: 300_000,
-        }
+        Self::named("edge-gpu", 1e12, 300_000)
     }
 
     /// Server-class accelerator.
     pub fn server_gpu() -> Self {
-        DeviceProfile {
-            name: "server-gpu",
-            macs_per_sec: 1e13,
-            overhead_ns: 150_000,
-        }
+        Self::named("server-gpu", 1e13, 150_000)
     }
 
     pub fn by_name(name: &str) -> Option<DeviceProfile> {
         match name {
+            "sensor-mcu" => Some(Self::sensor_mcu()),
+            "sensor-npu" => Some(Self::sensor_npu()),
             "edge-cpu" => Some(Self::edge_cpu()),
             "edge-gpu" => Some(Self::edge_gpu()),
             "server-gpu" => Some(Self::server_gpu()),
             _ => None,
         }
+    }
+
+    /// Parse a device spec: a built-in profile name, or a custom
+    /// `name@<macs_per_sec>+<overhead_ns>` triple (throughput accepts
+    /// scientific notation, overhead is integer nanoseconds). The one
+    /// parse path behind CLI `--tiers`/`--edge`/`--server` and the sweep
+    /// spec's `tiers` axis.
+    pub fn parse(spec: &str) -> Result<DeviceProfile> {
+        if let Some(p) = Self::by_name(spec) {
+            return Ok(p);
+        }
+        let Some((name, rest)) = spec.split_once('@') else {
+            bail!(
+                "unknown device profile '{spec}' (built-ins: sensor-mcu | \
+                 sensor-npu | edge-cpu | edge-gpu | server-gpu; custom: \
+                 name@<macs_per_sec>+<overhead_ns>)"
+            );
+        };
+        // Split at the *last* '+': the overhead is an integer (never
+        // signed), so MACs/s may use an explicit-plus exponent
+        // ("tpu@2e+12+100000").
+        let Some((macs, overhead)) = rest.rsplit_once('+') else {
+            bail!(
+                "custom device '{spec}' must be \
+                 name@<macs_per_sec>+<overhead_ns>"
+            );
+        };
+        if name.is_empty() {
+            bail!("custom device '{spec}' has an empty name");
+        }
+        let macs_per_sec: f64 = macs.parse().map_err(|_| {
+            anyhow::anyhow!("custom device '{spec}': bad MACs/s '{macs}'")
+        })?;
+        if !macs_per_sec.is_finite() || macs_per_sec <= 0.0 {
+            bail!("custom device '{spec}': MACs/s must be positive");
+        }
+        let overhead_ns: SimTime = overhead.parse().map_err(|_| {
+            anyhow::anyhow!(
+                "custom device '{spec}': bad overhead '{overhead}' \
+                 (integer ns)"
+            )
+        })?;
+        Ok(DeviceProfile::named(name, macs_per_sec, overhead_ns))
+    }
+
+    /// Parse a comma-separated tier chain (`sensor-npu,edge-gpu,server-gpu`),
+    /// sensor-side first. Every element goes through [`DeviceProfile::parse`];
+    /// empty elements (stray commas) are an error, not silently dropped —
+    /// a typo must not shorten the chain.
+    pub fn parse_tiers(list: &str) -> Result<Vec<DeviceProfile>> {
+        if list.split(',').any(|s| s.trim().is_empty()) {
+            bail!(
+                "tier chain '{list}' has an empty element (expected a \
+                 comma-separated device list, sensor side first)"
+            );
+        }
+        list.split(',').map(|s| Self::parse(s.trim())).collect()
     }
 
     /// Simulated wall time to execute `mult_adds` MACs on this device.
@@ -90,14 +161,61 @@ mod tests {
             DeviceProfile::edge_gpu().compute_ns(ma)
                 < DeviceProfile::edge_cpu().compute_ns(ma)
         );
+        // The sensor tiers sit below the edge devices in throughput.
+        assert!(
+            DeviceProfile::sensor_npu().macs_per_sec
+                < DeviceProfile::edge_gpu().macs_per_sec
+        );
+        assert!(
+            DeviceProfile::sensor_mcu().macs_per_sec
+                < DeviceProfile::sensor_npu().macs_per_sec
+        );
     }
 
     #[test]
     fn by_name_roundtrip() {
-        for n in ["edge-cpu", "edge-gpu", "server-gpu"] {
+        for n in ["sensor-mcu", "sensor-npu", "edge-cpu", "edge-gpu",
+                  "server-gpu"] {
             assert_eq!(DeviceProfile::by_name(n).unwrap().name, n);
         }
         assert!(DeviceProfile::by_name("tpu-v9").is_none());
+    }
+
+    #[test]
+    fn parse_accepts_builtins_and_custom_specs() {
+        assert_eq!(DeviceProfile::parse("edge-gpu").unwrap().name, "edge-gpu");
+        let c = DeviceProfile::parse("tpu@2e12+100000").unwrap();
+        assert_eq!(c.name, "tpu");
+        assert_eq!(c.macs_per_sec, 2e12);
+        assert_eq!(c.overhead_ns, 100_000);
+        // Explicit-plus exponents split at the *last* '+'.
+        let e = DeviceProfile::parse("tpu@2e+12+100000").unwrap();
+        assert_eq!(e.macs_per_sec, 2e12);
+        assert_eq!(e.overhead_ns, 100_000);
+        assert_eq!(c.compute_ns(2_000_000_000_000), 100_000 + 1_000_000_000);
+        // Malformed custom specs fail with a clear error.
+        assert!(DeviceProfile::parse("tpu-v9").is_err());
+        assert!(DeviceProfile::parse("tpu@fast+1").is_err());
+        assert!(DeviceProfile::parse("tpu@1e12").is_err());
+        assert!(DeviceProfile::parse("tpu@-1e12+5").is_err());
+        assert!(DeviceProfile::parse("tpu@1e12+5.5").is_err());
+        assert!(DeviceProfile::parse("@1e12+5").is_err());
+    }
+
+    #[test]
+    fn parse_tiers_builds_the_chain() {
+        let t = DeviceProfile::parse_tiers(
+            "sensor-npu, edge-gpu, server-gpu",
+        )
+        .unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0].name, "sensor-npu");
+        assert_eq!(t[2].name, "server-gpu");
+        assert!(DeviceProfile::parse_tiers("edge-gpu,nope").is_err());
+        assert!(DeviceProfile::parse_tiers(" , ").is_err());
+        // Stray commas must not silently shorten the chain.
+        assert!(DeviceProfile::parse_tiers("edge-gpu,,server-gpu").is_err());
+        assert!(DeviceProfile::parse_tiers("edge-gpu,server-gpu,").is_err());
     }
 
     #[test]

@@ -13,7 +13,10 @@ pub mod vgg;
 
 use anyhow::{bail, Result};
 
-pub use cut::{split_points, valid_cuts, Cut};
+pub use cut::{
+    chain_costs, is_ordered_chain, ordered_chains, split_points,
+    valid_cut_chains, valid_cuts, ChainCosts, Cut,
+};
 pub use device::DeviceProfile;
 pub use layer::{Layer, LayerKind, Network, NetworkBuilder, Node, Shape};
 pub use mobilenet::{mobilenetv2, mobilenetv2_cifar};

@@ -129,6 +129,14 @@ fn arch_split_acc(arch: Arch, splits: &[usize]) -> Vec<f64> {
     (0..n).map(|k| base - 0.002 * (n - k) as f64).collect()
 }
 
+/// The 50%-bottleneck latent shape of a crossing tensor (channel
+/// dimension halved) — the one formula behind the manifest's exported
+/// latent shapes and the on-demand chain executables (mirrors
+/// [`crate::model::Cut::latent_bytes`]).
+fn bottleneck_latent([c, h, w]: [usize; 3]) -> [usize; 3] {
+    [(c / 2).max(1), h, w]
+}
+
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
 
@@ -149,6 +157,38 @@ fn hash_f32s(mut h: u64, vals: &[f32]) -> u64 {
 /// Map a hash to a uniform fraction in [0, 1).
 fn hash_frac(h: u64) -> f64 {
     (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Split a chain-executable name into (kind, cut ids, batch):
+/// `mid_L4_L11_b1` → ("mid", [4, 11], 1) and `tail_chain_L4_L11_b16` →
+/// ("chain-tail", [4, 11], 16). Returns `None` for any other name.
+fn parse_chain_exec(name: &str) -> Option<(&'static str, Vec<usize>, usize)> {
+    let (kind, rest) = if let Some(r) = name.strip_prefix("mid_") {
+        ("mid", r)
+    } else if let Some(r) = name.strip_prefix("tail_chain_") {
+        ("chain-tail", r)
+    } else if let Some(r) = name.strip_prefix("head_") {
+        ("head", r)
+    } else if let Some(r) = name.strip_prefix("tail_") {
+        ("tail", r)
+    } else {
+        return None;
+    };
+    let mut cuts = Vec::new();
+    let mut batch = None;
+    for tok in rest.split('_') {
+        if batch.is_some() {
+            return None; // tokens after the batch suffix
+        }
+        if let Some(l) = tok.strip_prefix('L') {
+            cuts.push(l.parse().ok()?);
+        } else if let Some(b) = tok.strip_prefix('b') {
+            batch = Some(b.parse().ok()?);
+        } else {
+            return None;
+        }
+    }
+    Some((kind, cuts, batch?))
 }
 
 fn sign_stream(rng: &mut Rng, n: usize) -> Vec<f32> {
@@ -197,8 +237,17 @@ enum Body {
     Classifier { flip_rate: f64 },
     /// Bottleneck encoder into the split's latent shape.
     Head { signs: Rc<Vec<f32>> },
+    /// Mid-chain re-encoder: folds the latent of one cut into the latent
+    /// of a deeper cut through a seeded ±1 block code — the composition
+    /// `mid ∘ head` is itself a signed fold, so chain tails classify with
+    /// the same algebra (and accuracy) as single-split tails. A latent the
+    /// damage model judges destroyed is forwarded as all-zeros, which the
+    /// next stage's damage check flips with probability 1 (corruption
+    /// cascades down the chain instead of being silently washed out).
+    Mid { signs: Rc<Vec<f32>> },
     /// Latent-space classifier over the projected prototypes (the flip
-    /// rate mirrors the arch's full-model accuracy).
+    /// rate mirrors the arch's full-model accuracy). Chain tails use the
+    /// prototypes projected through the whole `head ∘ mid…` composition.
     Tail { w_protos: Vec<Vec<f64>>, flip_rate: f64 },
     /// Per-image cumulative-saliency value of one feature layer.
     GradCam { cs_raw: f64 },
@@ -248,6 +297,34 @@ impl AnalyticExec {
             }
         }
         scores.iter().map(|s| *s as f32).collect()
+    }
+
+    fn mid_row(&self, row: &[f32], signs: &[f32], latent_len: usize)
+        -> Vec<f32>
+    {
+        let nc = self.num_classes;
+        let (_, damaged) = damage_check(row, self.family_hash, nc);
+        if damaged.is_some() {
+            // Poison the forwarded latent: all-zero rows trip the next
+            // stage's damage check with probability 1.
+            return vec![0.0; latent_len];
+        }
+        let mut sums = vec![0.0f64; latent_len];
+        for (j, (&s, &x)) in signs.iter().zip(row).enumerate() {
+            // Latents are affine-encoded (1 + 0.5·v): center by the same
+            // convention the tail uses, so mid ∘ head composes linearly.
+            sums[j % latent_len] += s as f64 * ((x as f64 - 1.0) / 0.5);
+        }
+        sums.iter()
+            .map(|v| {
+                let lat = (1.0 + 0.5 * v) as f32;
+                if lat == 0.0 {
+                    1e-30
+                } else {
+                    lat
+                }
+            })
+            .collect()
     }
 
     fn head_row(&self, row: &[f32], signs: &[f32], latent_len: usize)
@@ -366,6 +443,10 @@ impl Executable for AnalyticExec {
                     let latent_len = out_elems / batch;
                     out.extend(self.head_row(row, signs, latent_len));
                 }
+                Body::Mid { signs } => {
+                    let latent_len = out_elems / batch;
+                    out.extend(self.mid_row(row, signs, latent_len));
+                }
                 Body::Tail { w_protos, flip_rate } => {
                     out.extend(self.tail_row(row, w_protos, *flip_rate));
                 }
@@ -412,8 +493,10 @@ pub struct AnalyticBackend {
     n_input: usize,
     full_ma: u64,
     lite_ma: u64,
-    /// (split, (head mult-adds, tail mult-adds)) per exported split.
-    split_ma: Vec<(usize, (u64, u64))>,
+    /// The arch's slim split points: per-cut head/tail/bottleneck MACs
+    /// behind the latency counters of every split executable, including
+    /// the on-demand `mid_*` / `tail_chain_*` / unexported-cut ones.
+    cuts: Vec<Cut>,
     cache: RefCell<HashMap<String, Rc<AnalyticExec>>>,
     datasets: RefCell<HashMap<String, Dataset>>,
 }
@@ -456,22 +539,150 @@ impl AnalyticBackend {
             .collect();
         let lite_ma =
             model::vgg16_slim(32, 0.0625, 48, m.num_classes).mult_adds();
-        let split_ma = arch_splits(arch)
-            .iter()
-            .map(|&s| (s, cuts[s].split_compute()))
-            .collect();
         AnalyticBackend {
             seed_mix,
             arch_mix,
             arch_flip: arch_accuracy(arch).0,
             full_ma: slim.mult_adds(),
             lite_ma,
-            split_ma,
+            cuts,
             manifest,
             protos: Rc::new(protos),
             n_input,
             cache: RefCell::new(HashMap::new()),
             datasets: RefCell::new(HashMap::new()),
+        }
+    }
+
+    /// Latent shape of a split: the shared 50%-bottleneck formula, so the
+    /// on-demand chain executables stay bit-consistent with the
+    /// manifest's exported latent shapes.
+    fn latent_shape_of(&self, s: usize) -> [usize; 3] {
+        bottleneck_latent(self.manifest.model.feature_shapes[s])
+    }
+
+    fn latent_len_of(&self, s: usize) -> usize {
+        let [c, h, w] = self.latent_shape_of(s);
+        c * h * w
+    }
+
+    /// Seeded ±1 block code folding the latent of cut `from` into the
+    /// latent of cut `to` (the mid-chain re-encoder's weights).
+    fn mid_signs(&self, from: usize, to: usize) -> Vec<f32> {
+        let mut rng = Rng::new(
+            BASE_SEED
+                .wrapping_add(0x31D0)
+                .wrapping_add(from as u64 * 0x1_0007)
+                .wrapping_add(to as u64 * 0x101)
+                .wrapping_add(self.seed_mix)
+                .wrapping_add(self.arch_mix),
+        );
+        sign_stream(&mut rng, self.latent_len_of(from))
+    }
+
+    /// Prototypes projected through `head(chain[0])` then every mid
+    /// re-encoder along the chain — the weights of a chain tail. The
+    /// composition of signed folds is a signed fold, so these classify
+    /// with the same margin structure as single-split tail weights.
+    fn chain_weights(&self, chain: &[usize]) -> Vec<Vec<f64>> {
+        let signs = self.head_signs(chain[0]);
+        let mut len = self.latent_len_of(chain[0]);
+        let mut w_protos: Vec<Vec<f64>> = self
+            .protos
+            .iter()
+            .map(|proto| {
+                let mut w = vec![0.0f64; len];
+                for (j, (&s, &p)) in signs.iter().zip(proto).enumerate() {
+                    w[j % len] += s as f64 * p as f64;
+                }
+                w
+            })
+            .collect();
+        for pair in chain.windows(2) {
+            let ms = self.mid_signs(pair[0], pair[1]);
+            let next_len = self.latent_len_of(pair[1]);
+            w_protos = w_protos
+                .iter()
+                .map(|w| {
+                    let mut out = vec![0.0f64; next_len];
+                    for (j, (&s, &v)) in ms.iter().zip(w).enumerate() {
+                        out[j % next_len] += s as f64 * v;
+                    }
+                    out
+                })
+                .collect();
+            len = next_len;
+        }
+        debug_assert!(w_protos.iter().all(|w| w.len() == len));
+        w_protos
+    }
+
+    /// Synthesize the spec of an on-demand segment executable —
+    /// `mid_L{a}_L{b}_b{n}`, `tail_chain_L{a}_L{b}..._b{n}`, or a plain
+    /// `head_L{s}_b{n}` / `tail_L{s}_b{n}` at a cut the manifest does not
+    /// export. The analytic model needs no trained artifacts, so any
+    /// structurally valid cut id (everything but the terminal split
+    /// point) is admissible; exported splits keep their manifest specs
+    /// (this path only runs on a manifest miss).
+    fn synth_chain_spec(&self, name: &str) -> Option<ExecSpec> {
+        let (kind, cuts, batch) = parse_chain_exec(name)?;
+        if batch == 0 || !model::is_ordered_chain(&cuts) {
+            return None;
+        }
+        if cuts.iter().any(|&c| c + 1 >= self.cuts.len()) {
+            return None;
+        }
+        let nc = self.manifest.model.num_classes;
+        let img = self.manifest.model.img_size;
+        let latent_arg = |s: usize, label: &str| {
+            let [c, h, w] = self.latent_shape_of(s);
+            arg(label, vec![batch, c, h, w], "float32")
+        };
+        match kind {
+            "head" if cuts.len() == 1 => Some(mk_exec(
+                name.to_string(),
+                "head",
+                batch,
+                Some(cuts[0]),
+                None,
+                Some(self.latent_shape_of(cuts[0])),
+                vec![arg("x", vec![batch, 3, img, img], "float32")],
+                vec![latent_arg(cuts[0], "latent")],
+            )),
+            "tail" if cuts.len() == 1 => Some(mk_exec(
+                name.to_string(),
+                "tail",
+                batch,
+                Some(cuts[0]),
+                None,
+                Some(self.latent_shape_of(cuts[0])),
+                vec![latent_arg(cuts[0], "latent")],
+                vec![arg("logits", vec![batch, nc], "float32")],
+            )),
+            "mid" if cuts.len() == 2 => Some(mk_exec(
+                name.to_string(),
+                "mid",
+                batch,
+                None,
+                None,
+                Some(self.latent_shape_of(cuts[1])),
+                vec![latent_arg(cuts[0], "latent")],
+                vec![latent_arg(cuts[1], "latent")],
+            )),
+            "chain-tail" if cuts.len() >= 2 => {
+                let last = *cuts.last().unwrap();
+                Some(mk_exec(
+                    name.to_string(),
+                    "chain-tail",
+                    batch,
+                    None,
+                    None,
+                    Some(self.latent_shape_of(last)),
+                    vec![latent_arg(last, "latent")],
+                    vec![arg("logits", vec![batch, nc], "float32")],
+                ))
+            }
+            _ => None,
         }
     }
 
@@ -490,13 +701,33 @@ impl AnalyticBackend {
         match spec.kind.as_str() {
             "lite" => self.lite_ma,
             "gradcam" => 3 * self.full_ma,
+            "mid" => {
+                // Segment MACs between the two cuts plus the incoming
+                // decoder and outgoing encoder of the bottlenecks.
+                match parse_chain_exec(&spec.name) {
+                    Some((_, cuts, _)) if cuts.len() == 2 => {
+                        let (a, b) = (&self.cuts[cuts[0]], &self.cuts[cuts[1]]);
+                        b.head_mult_adds - a.head_mult_adds
+                            + a.bottleneck_mult_adds().1
+                            + b.bottleneck_mult_adds().0
+                    }
+                    _ => self.full_ma,
+                }
+            }
+            "chain-tail" => match parse_chain_exec(&spec.name) {
+                Some((_, cuts, _)) if !cuts.is_empty() => {
+                    // Identical to the plain tail cost at the last cut.
+                    let last = &self.cuts[*cuts.last().unwrap()];
+                    last.tail_mult_adds + last.bottleneck_mult_adds().1
+                }
+                _ => self.full_ma,
+            },
             "head" | "tail" => {
                 let split = spec.split_layer.unwrap_or(SPLITS[0]);
                 let (head, tail) = self
-                    .split_ma
-                    .iter()
-                    .find(|(s, _)| *s == split)
-                    .map(|(_, ma)| *ma)
+                    .cuts
+                    .get(split)
+                    .map(|c| c.split_compute())
                     .unwrap_or((self.full_ma, self.full_ma));
                 if spec.kind == "head" {
                     head
@@ -510,7 +741,18 @@ impl AnalyticBackend {
 
     fn build_exec(&self, spec: ExecSpec) -> Result<AnalyticExec> {
         let nc = self.manifest.model.num_classes;
-        let family_hash = {
+        let family_hash = if matches!(spec.kind.as_str(), "mid" | "chain-tail")
+        {
+            // Chain executables hash their full name: distinct chains get
+            // distinct damage/flip streams (the pre-chain kinds keep the
+            // original tag so every existing stream stays bit-identical).
+            fnv1a(
+                fnv1a(FNV_OFFSET, spec.kind.as_bytes()),
+                spec.name.as_bytes(),
+            )
+            .wrapping_add(self.seed_mix)
+            .wrapping_add(self.arch_mix)
+        } else {
             let h = fnv1a(FNV_OFFSET, spec.kind.as_bytes());
             let tag = spec
                 .split_layer
@@ -521,6 +763,25 @@ impl AnalyticBackend {
                 .wrapping_add(self.arch_mix)
         };
         let body = match spec.kind.as_str() {
+            "mid" => {
+                let (_, cuts, _) = parse_chain_exec(&spec.name)
+                    .ok_or_else(|| {
+                        anyhow!("{}: malformed mid exec name", spec.name)
+                    })?;
+                Body::Mid {
+                    signs: Rc::new(self.mid_signs(cuts[0], cuts[1])),
+                }
+            }
+            "chain-tail" => {
+                let (_, cuts, _) = parse_chain_exec(&spec.name)
+                    .ok_or_else(|| {
+                        anyhow!("{}: malformed chain tail name", spec.name)
+                    })?;
+                Body::Tail {
+                    w_protos: self.chain_weights(&cuts),
+                    flip_rate: self.arch_flip,
+                }
+            }
             "full" => Body::Classifier { flip_rate: self.arch_flip },
             "lite" => Body::Classifier { flip_rate: LITE_FLIP_RATE },
             "head" => {
@@ -634,7 +895,16 @@ impl InferenceBackend for AnalyticBackend {
         if let Some(e) = self.cache.borrow().get(name) {
             return Ok(e.clone());
         }
-        let spec = self.manifest.executable(name)?.clone();
+        // Chain executables (mid-segment re-encoders and composed chain
+        // tails) are synthesized on demand: pre-declaring every ordered
+        // cut chain in the manifest would be combinatorial.
+        let spec = match self.manifest.executable(name) {
+            Ok(s) => s.clone(),
+            Err(e) => match self.synth_chain_spec(name) {
+                Some(s) => s,
+                None => return Err(e),
+            },
+        };
         let exec = Rc::new(self.build_exec(spec)?);
         self.cache
             .borrow_mut()
@@ -774,10 +1044,7 @@ fn synth_manifest(arch: Arch, slim: &model::Network, cuts: &[Cut])
         candidates: splits.clone(),
     };
 
-    let latent_of = |s: usize| -> [usize; 3] {
-        let [c, h, w] = feature_shapes[s];
-        [(c / 2).max(1), h, w]
-    };
+    let latent_of = |s: usize| -> [usize; 3] { bottleneck_latent(feature_shapes[s]) };
     let split_eval: Vec<SplitEvalRow> = splits
         .iter()
         .zip(split_acc.iter())
@@ -1171,6 +1438,141 @@ mod tests {
                 assert_eq!(logits.shape(), &[16, 10]);
             }
         }
+    }
+
+    #[test]
+    fn chain_execs_synthesize_and_compose() {
+        // head -> mid -> chain tail over [5, 13]: the double fold is
+        // algebraically a single signed fold, so the chain's predictions
+        // track the full model closely on clean inputs.
+        let b = backend();
+        let test = b.dataset("test").unwrap();
+        let x = test.batch(0, 16).unwrap();
+        let head = b.executable("head_L5_b16").unwrap();
+        let mid = b.executable("mid_L5_L13_b16").unwrap();
+        let tail = b.executable("tail_chain_L5_L13_b16").unwrap();
+        let z5 = head.run(&[RtInput::F32(&x)]).unwrap();
+        let z13 = mid.run(&[RtInput::F32(&z5)]).unwrap();
+        assert_eq!(z13.shape()[1..], mid.spec().latent_shape.unwrap()[..]);
+        assert!(z13.data().iter().all(|v| *v != 0.0));
+        let logits = tail.run(&[RtInput::F32(&z13)]).unwrap();
+        assert_eq!(logits.shape(), &[16, 10]);
+        // Accuracy over a larger slice stays near the recorded base.
+        let n = 128usize;
+        let (head, mid, tail) = (
+            b.executable("head_L5_b16").unwrap(),
+            b.executable("mid_L5_L13_b16").unwrap(),
+            b.executable("tail_chain_L5_L13_b16").unwrap(),
+        );
+        let mut correct = 0usize;
+        for start in (0..n).step_by(16) {
+            let x = test.batch(start, 16).unwrap();
+            let z = head.run(&[RtInput::F32(&x)]).unwrap();
+            let z = mid.run(&[RtInput::F32(&z)]).unwrap();
+            let logits = tail.run(&[RtInput::F32(&z)]).unwrap();
+            for (p, l) in logits
+                .argmax_last()
+                .iter()
+                .zip(test.batch_labels(start, 16))
+            {
+                if *p == *l as usize {
+                    correct += 1;
+                }
+            }
+        }
+        let acc = correct as f64 / n as f64;
+        let base = b.manifest().model.base_test_accuracy;
+        assert!(acc > base - 0.12, "chain accuracy {acc} vs base {base}");
+    }
+
+    #[test]
+    fn poisoned_mid_latent_flips_the_chain_tail() {
+        // A latent the damage model judges destroyed is forwarded as
+        // all-zeros; the chain tail's damage check then fires with
+        // probability 1, so corruption cascades instead of washing out.
+        let b = backend();
+        let test = b.dataset("test").unwrap();
+        let x = test.batch(0, 1).unwrap();
+        let head = b.executable("head_L5_b1").unwrap();
+        let mid = b.executable("mid_L5_L13_b1").unwrap();
+        let mut z = head.run(&[RtInput::F32(&x)]).unwrap();
+        // Zero the whole latent: q = 1 makes the damage flip certain
+        // (p = 1 - (1-q)^4 = 1), so the cascade is tested
+        // deterministically.
+        z.zero_byte_range(0, z.byte_len() as u32);
+        let out = mid.run(&[RtInput::F32(&z)]).unwrap();
+        assert!(
+            out.data().iter().all(|v| *v == 0.0),
+            "a destroyed latent must be forwarded as all-zero poison"
+        );
+        let tail = b.executable("tail_chain_L5_L13_b1").unwrap();
+        let logits = tail.run(&[RtInput::F32(&out)]).unwrap();
+        // One-hot pseudo-random class, not a correlation score vector.
+        let ones = logits.data().iter().filter(|v| **v == 1.0).count();
+        assert_eq!(ones, 1);
+    }
+
+    #[test]
+    fn malformed_chain_exec_names_are_rejected() {
+        let b = backend();
+        assert!(b.executable("mid_L5_L5_b1").is_err()); // not increasing
+        assert!(b.executable("mid_L13_L5_b1").is_err());
+        assert!(b.executable("mid_L5_L17_b1").is_err()); // terminal cut
+        assert!(b.executable("mid_L5_L40_b1").is_err()); // out of range
+        assert!(b.executable("mid_L5_b1").is_err()); // needs two cuts
+        assert!(b.executable("tail_chain_L5_b1").is_err()); // single cut
+        assert!(b.executable("tail_chain_L5_L13_b0").is_err());
+        assert!(b.executable("mid_L5_L13").is_err()); // no batch
+        assert!(b.executable("mid_L5_L13_b1_x").is_err());
+        assert!(b.executable("head_L40_b1").is_err());
+    }
+
+    #[test]
+    fn unexported_cuts_synthesize_head_tail_and_compose() {
+        // The analytic model needs no trained artifacts, so any
+        // structurally valid cut works — `mc@4,11` from the CLI resolves
+        // head_L4 / mid_L4_L11 / tail_chain_L4_L11 even though 4 is not
+        // among the manifest's exported splits.
+        let b = backend();
+        assert!(!b.manifest().available_splits().contains(&4));
+        let test = b.dataset("test").unwrap();
+        let x = test.batch(0, 16).unwrap();
+        let head = b.executable("head_L4_b16").unwrap();
+        let mid = b.executable("mid_L4_L11_b16").unwrap();
+        let tail = b.executable("tail_chain_L4_L11_b16").unwrap();
+        let z = head.run(&[RtInput::F32(&x)]).unwrap();
+        let z = mid.run(&[RtInput::F32(&z)]).unwrap();
+        let logits = tail.run(&[RtInput::F32(&z)]).unwrap();
+        let mut correct = 0usize;
+        for (p, l) in
+            logits.argmax_last().iter().zip(test.batch_labels(0, 16))
+        {
+            if *p == *l as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 12, "chain over unexported cuts: {correct}/16");
+        // Exported splits still resolve through the manifest spec.
+        assert!(b.manifest().executable("head_L4_b16").is_err());
+        assert!(b.manifest().executable("head_L5_b16").is_ok());
+    }
+
+    #[test]
+    fn chain_execs_have_segment_scale_latency_counters() {
+        // The mid segment's simulated cost sits strictly between zero and
+        // the full model's, and the chain tail costs the same as the
+        // plain tail at its last cut.
+        let b = backend();
+        let test = b.dataset("test").unwrap();
+        let x = test.batch(0, 1).unwrap();
+        let head = b.executable("head_L5_b1").unwrap();
+        let z = head.run(&[RtInput::F32(&x)]).unwrap();
+        let mid = b.executable("mid_L5_L13_b1").unwrap();
+        mid.run(&[RtInput::F32(&z)]).unwrap();
+        let full = b.executable("full_fwd_b1").unwrap();
+        full.run(&[RtInput::F32(&x)]).unwrap();
+        assert!(mid.counters().total_exec_ns > 0);
+        assert!(mid.counters().total_exec_ns < full.counters().total_exec_ns);
     }
 
     #[test]

@@ -17,14 +17,14 @@ fn backend() -> Box<dyn InferenceBackend> {
 }
 
 fn cfg(kind: ScenarioKind, seed: u64) -> ScenarioConfig {
-    ScenarioConfig {
+    ScenarioConfig::two_tier(
         kind,
-        net: NetworkConfig::gigabit(Protocol::Tcp, 0.02, seed),
-        edge: DeviceProfile::edge_gpu(),
-        server: DeviceProfile::server_gpu(),
-        scale: ModelScale::Slim,
-        frame_period_ns: 50_000_000,
-    }
+        NetworkConfig::gigabit(Protocol::Tcp, 0.02, seed),
+        DeviceProfile::edge_gpu(),
+        DeviceProfile::server_gpu(),
+        ModelScale::Slim,
+        50_000_000,
+    )
 }
 
 #[test]
@@ -57,8 +57,7 @@ fn suggestion_table_is_reproducible() {
         coordinator::suggest(
             &*engine,
             &NetworkConfig::gigabit(Protocol::Tcp, 0.02, 7),
-            &DeviceProfile::edge_gpu(),
-            &DeviceProfile::server_gpu(),
+            &[DeviceProfile::edge_gpu(), DeviceProfile::server_gpu()],
             &qos,
             &test,
             32,

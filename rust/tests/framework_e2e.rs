@@ -25,14 +25,14 @@ fn engine_for(arch: Arch) -> Box<dyn InferenceBackend> {
 }
 
 fn cfg(kind: ScenarioKind, proto: Protocol, loss: f64) -> ScenarioConfig {
-    ScenarioConfig {
+    ScenarioConfig::two_tier(
         kind,
-        net: NetworkConfig::gigabit(proto, loss, 42),
-        edge: DeviceProfile::edge_gpu(),
-        server: DeviceProfile::server_gpu(),
-        scale: ModelScale::Slim,
-        frame_period_ns: 50_000_000,
-    }
+        NetworkConfig::gigabit(proto, loss, 42),
+        DeviceProfile::edge_gpu(),
+        DeviceProfile::server_gpu(),
+        ModelScale::Slim,
+        50_000_000,
+    )
 }
 
 #[test]
@@ -134,8 +134,7 @@ fn suggestion_engine_ranks_and_simulates() {
     let suggestions = coordinator::suggest(
         &*engine,
         &NetworkConfig::gigabit(Protocol::Tcp, 0.02, 7),
-        &DeviceProfile::edge_gpu(),
-        &DeviceProfile::server_gpu(),
+        &[DeviceProfile::edge_gpu(), DeviceProfile::server_gpu()],
         &qos,
         &test,
         48,
@@ -224,14 +223,14 @@ fn paper_scale_fig3_shape_holds() {
         return;
     }
     let mean = |split: usize, loss: f64| -> f64 {
-        let c = ScenarioConfig {
-            kind: ScenarioKind::Sc { split },
-            net: NetworkConfig::gigabit(Protocol::Tcp, loss, 11),
-            edge: DeviceProfile::edge_gpu(),
-            server: DeviceProfile::server_gpu(),
-            scale: ModelScale::Full,
-            frame_period_ns: 50_000_000,
-        };
+        let c = ScenarioConfig::two_tier(
+            ScenarioKind::Sc { split },
+            NetworkConfig::gigabit(Protocol::Tcp, loss, 11),
+            DeviceProfile::edge_gpu(),
+            DeviceProfile::server_gpu(),
+            ModelScale::Full,
+            50_000_000,
+        );
         let lats = coordinator::simulate_latency(&*engine, &c, 200)
             .unwrap();
         lats.iter().map(|v| *v as f64).sum::<f64>() / lats.len() as f64
@@ -264,8 +263,7 @@ fn suggest_ranks_dag_cuts_for_resnet_and_mobilenet() {
         let suggestions = coordinator::suggest(
             &*engine,
             &NetworkConfig::gigabit(Protocol::Tcp, 0.0, 7),
-            &DeviceProfile::edge_gpu(),
-            &DeviceProfile::server_gpu(),
+            &[DeviceProfile::edge_gpu(), DeviceProfile::server_gpu()],
             &qos,
             &test,
             32,
@@ -279,10 +277,10 @@ fn suggest_ranks_dag_cuts_for_resnet_and_mobilenet() {
         assert!(sc.len() >= 2, "{arch:?}: {} SC candidates", sc.len());
         let n_cuts = engine.manifest().model.layer_names.len();
         for s in &sc {
-            let ScenarioKind::Sc { split } = s.rank.kind else {
+            let ScenarioKind::Sc { split } = &s.rank.kind else {
                 unreachable!()
             };
-            assert!(split < n_cuts - 1, "{arch:?} split {split}");
+            assert!(*split < n_cuts - 1, "{arch:?} split {split}");
             let cut = s.rank.cut_name.as_deref().unwrap();
             assert!(
                 name_prefixes.iter().any(|p| cut.starts_with(p)),

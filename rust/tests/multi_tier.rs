@@ -1,0 +1,300 @@
+//! Multi-tier placement acceptance tests.
+//!
+//! The correctness anchor of the k-cut refactor is **degenerate
+//! equivalence**: `mc@[i]` over two tiers must reproduce `sc@i`
+//! byte-identically — same per-frame latency, wire bytes, retransmits,
+//! corruption flags and accuracy — for every exported cut of every
+//! architecture, under both transports. Beyond the anchor: three-tier
+//! chains run end-to-end (hermetically, on the analytic backend's
+//! on-demand segment executables), corruption on any hop costs accuracy,
+//! a slow mid-chain tier queues like any other bottleneck, and the sweep
+//! engine's thread-count determinism survives the new `tiers` /
+//! `cut_chains` axes.
+
+use std::path::Path;
+
+use sei::coordinator::{
+    self, ModelScale, QosRequirements, ScenarioConfig, ScenarioKind,
+    SweepSpec,
+};
+use sei::model::{Arch, DeviceProfile};
+use sei::netsim::transfer::{NetworkConfig, Protocol};
+use sei::runtime::{load_backend_for, InferenceBackend};
+
+fn engine_for(arch: Arch) -> Box<dyn InferenceBackend> {
+    // No artifacts directory in tests: loads the hermetic analytic backend.
+    load_backend_for(Path::new("artifacts"), arch).expect("backend")
+}
+
+fn two_tier(kind: ScenarioKind, proto: Protocol, loss: f64)
+    -> ScenarioConfig
+{
+    ScenarioConfig::two_tier(
+        kind,
+        NetworkConfig::gigabit(proto, loss, 42),
+        DeviceProfile::edge_gpu(),
+        DeviceProfile::server_gpu(),
+        ModelScale::Slim,
+        50_000_000,
+    )
+}
+
+fn three_tier(cuts: Vec<usize>, proto: Protocol, loss: f64)
+    -> ScenarioConfig
+{
+    ScenarioConfig {
+        kind: ScenarioKind::Mc { cuts },
+        net: NetworkConfig::gigabit(proto, loss, 42),
+        tiers: vec![
+            DeviceProfile::sensor_npu(),
+            DeviceProfile::edge_gpu(),
+            DeviceProfile::server_gpu(),
+        ],
+        scale: ModelScale::Slim,
+        frame_period_ns: 50_000_000,
+    }
+}
+
+#[test]
+fn mc_single_cut_reproduces_sc_byte_identically() {
+    // Every exported cut of every arch, both transports, with loss: the
+    // one-cut chain and the classic split must be indistinguishable.
+    for arch in Arch::ALL {
+        let engine = engine_for(arch);
+        let test = engine.dataset("test").unwrap();
+        let qos = QosRequirements::ice_lab();
+        for split in engine.manifest().available_splits() {
+            for (proto, loss) in
+                [(Protocol::Tcp, 0.03), (Protocol::Udp, 0.08)]
+            {
+                let sc = coordinator::run_scenario(
+                    &*engine,
+                    &two_tier(ScenarioKind::Sc { split }, proto, loss),
+                    &test,
+                    20,
+                    &qos,
+                )
+                .unwrap();
+                let mc = coordinator::run_scenario(
+                    &*engine,
+                    &two_tier(
+                        ScenarioKind::Mc { cuts: vec![split] },
+                        proto,
+                        loss,
+                    ),
+                    &test,
+                    20,
+                    &qos,
+                )
+                .unwrap();
+                assert_eq!(sc.frames, mc.frames);
+                assert_eq!(
+                    sc.accuracy, mc.accuracy,
+                    "{arch:?} L{split} {proto} accuracy"
+                );
+                for (i, (a, b)) in
+                    sc.records.iter().zip(&mc.records).enumerate()
+                {
+                    assert_eq!(
+                        a.latency_ns, b.latency_ns,
+                        "{arch:?} L{split} {proto} frame {i} latency"
+                    );
+                    assert_eq!(a.completed_ns, b.completed_ns);
+                    assert_eq!(a.wire_bytes, b.wire_bytes);
+                    assert_eq!(a.retransmits, b.retransmits);
+                    assert_eq!(a.corrupted, b.corrupted);
+                    assert_eq!(a.correct, b.correct);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn mc_single_cut_matches_sc_in_latency_only_mode_too() {
+    let engine = engine_for(Arch::Vgg16);
+    for scale in [ModelScale::Slim, ModelScale::Full] {
+        for (proto, loss) in [(Protocol::Tcp, 0.02), (Protocol::Udp, 0.0)] {
+            let mut sc = two_tier(ScenarioKind::Sc { split: 11 }, proto, loss);
+            sc.scale = scale;
+            let mut mc =
+                two_tier(ScenarioKind::Mc { cuts: vec![11] }, proto, loss);
+            mc.scale = scale;
+            assert_eq!(
+                coordinator::simulate_latency(&*engine, &sc, 32).unwrap(),
+                coordinator::simulate_latency(&*engine, &mc, 32).unwrap(),
+                "{scale:?} {proto} loss {loss}"
+            );
+        }
+    }
+}
+
+#[test]
+fn three_tier_chain_serves_end_to_end_with_real_inference() {
+    // Sensor -> edge -> cloud with two cuts: the analytic backend
+    // synthesizes the mid re-encoder and the composed chain tail on
+    // demand, and the chain classifies nearly as well as the full model
+    // (the composition of signed folds is itself a signed fold).
+    let engine = engine_for(Arch::Vgg16);
+    let test = engine.dataset("test").unwrap();
+    let qos = QosRequirements::none();
+    let cfg = three_tier(vec![5, 13], Protocol::Tcp, 0.0);
+    let r = coordinator::run_scenario(&*engine, &cfg, &test, 64, &qos)
+        .unwrap();
+    assert_eq!(r.frames, 64);
+    let base = engine.manifest().model.base_test_accuracy;
+    assert!(
+        r.accuracy > base - 0.12,
+        "3-tier chain accuracy {} collapsed vs base {base}",
+        r.accuracy
+    );
+    // Two uplink hops: more wire traffic than the deeper single split,
+    // and every frame's result comes back over both downlinks.
+    let one = coordinator::run_scenario(
+        &*engine,
+        &two_tier(ScenarioKind::Sc { split: 13 }, Protocol::Tcp, 0.0),
+        &test,
+        64,
+        &qos,
+    )
+    .unwrap();
+    assert!(r.mean_wire_bytes > one.mean_wire_bytes);
+    assert!(r.mean_latency_ns > 0.0);
+}
+
+#[test]
+fn udp_loss_on_a_multi_tier_chain_costs_accuracy() {
+    let engine = engine_for(Arch::Vgg16);
+    let test = engine.dataset("test").unwrap();
+    let qos = QosRequirements::none();
+    let clean = coordinator::run_scenario(
+        &*engine,
+        &three_tier(vec![5, 13], Protocol::Udp, 0.0),
+        &test,
+        96,
+        &qos,
+    )
+    .unwrap();
+    let lossy = coordinator::run_scenario(
+        &*engine,
+        &three_tier(vec![5, 13], Protocol::Udp, 0.30),
+        &test,
+        96,
+        &qos,
+    )
+    .unwrap();
+    assert!(
+        lossy.accuracy < clean.accuracy,
+        "corruption on the chain must cost accuracy: {} vs {}",
+        lossy.accuracy,
+        clean.accuracy
+    );
+    // UDP latency stays loss-independent, hop by hop.
+    assert!(
+        (lossy.mean_latency_ns - clean.mean_latency_ns).abs()
+            < 0.01 * clean.mean_latency_ns
+    );
+}
+
+#[test]
+fn slow_mid_tier_queues_like_any_bottleneck() {
+    // The same chain with a microcontroller-class middle tier must show
+    // strictly higher latency, and under offered load its queue builds.
+    let engine = engine_for(Arch::Vgg16);
+    let fast = coordinator::simulate_latency(
+        &*engine,
+        &three_tier(vec![5, 9], Protocol::Udp, 0.0),
+        16,
+    )
+    .unwrap();
+    let mut slow_cfg = three_tier(vec![5, 9], Protocol::Udp, 0.0);
+    slow_cfg.tiers[1] = DeviceProfile::sensor_mcu();
+    let slow = coordinator::simulate_latency(&*engine, &slow_cfg, 16)
+        .unwrap();
+    for (f, s) in fast.iter().zip(&slow) {
+        assert!(s > f, "slow mid tier must cost latency: {s} vs {f}");
+    }
+    // Offered faster than the weak tier can serve: closed-loop queueing
+    // shows up as growing per-frame latency.
+    slow_cfg.frame_period_ns = 1_000_000; // 1000 FPS offered
+    let overloaded =
+        coordinator::simulate_latency(&*engine, &slow_cfg, 24).unwrap();
+    assert!(overloaded.last().unwrap() > overloaded.first().unwrap());
+}
+
+#[test]
+fn suggest_ranks_multi_tier_chains_against_qos() {
+    let engine = engine_for(Arch::Vgg16);
+    let test = engine.dataset("test").unwrap();
+    let qos = QosRequirements::ice_lab();
+    let tiers = [
+        DeviceProfile::sensor_npu(),
+        DeviceProfile::edge_gpu(),
+        DeviceProfile::server_gpu(),
+    ];
+    let suggestions = coordinator::suggest(
+        &*engine,
+        &NetworkConfig::gigabit(Protocol::Tcp, 0.0, 7),
+        &tiers,
+        &qos,
+        &test,
+        24,
+        2,
+    )
+    .unwrap();
+    let mc: Vec<_> = suggestions
+        .iter()
+        .filter(|s| matches!(s.rank.kind, ScenarioKind::Mc { .. }))
+        .collect();
+    assert!(!mc.is_empty(), "3-tier suggest must rank MC chains");
+    for s in &mc {
+        assert_eq!(s.report.frames, 24);
+        assert!(s.report.accuracy > 0.5, "{}", s.rank.kind);
+        assert!(s.rank.cut_name.as_deref().unwrap().contains('>'));
+    }
+    // LC/RC/SC baselines still present alongside the chains.
+    let kinds: Vec<String> =
+        suggestions.iter().map(|s| s.rank.kind.to_string()).collect();
+    assert!(kinds.iter().any(|k| k == "LC"));
+    assert!(kinds.iter().any(|k| k == "RC"));
+    assert!(kinds.iter().any(|k| k.starts_with("SC@")));
+}
+
+#[test]
+fn tier_axes_sweep_is_thread_count_invariant() {
+    // The headline sweep guarantee survives the tiers / cut_chains axes:
+    // byte-identical JSON and CSV at every worker-thread count.
+    let mut spec = SweepSpec::new("tier-determinism");
+    spec.scenarios = vec![ScenarioKind::Rc, ScenarioKind::Sc { split: 13 }];
+    spec.protocols = vec![Protocol::Tcp, Protocol::Udp];
+    spec.loss_rates = vec![0.0, 0.05];
+    spec.tiers = vec![
+        vec!["edge-gpu".into(), "server-gpu".into()],
+        vec!["sensor-npu".into(), "edge-gpu".into(), "server-gpu".into()],
+    ];
+    spec.cut_chains = vec![vec![5, 13], vec![9, 13]];
+    spec.frames = 8;
+    spec.max_latency_ms = 50.0;
+    spec.min_accuracy = 0.9;
+    let factory = |arch| load_backend_for(Path::new("artifacts"), arch);
+    let one = coordinator::run_sweep(&spec, 1, &factory).unwrap();
+    let eight = coordinator::run_sweep(&spec, 8, &factory).unwrap();
+    // RC/SC run on both chains; each MC chain pairs with the 3-tier one.
+    assert_eq!(one.points.len(), (2 * 2 + 2) * 2 * 2);
+    assert_eq!(
+        one.to_json().to_string(),
+        eight.to_json().to_string(),
+        "tier-axis sweep JSON must not depend on the thread count"
+    );
+    assert_eq!(one.to_csv().to_string(), eight.to_csv().to_string());
+    // Every point reports its tier chain; MC points carry three tiers.
+    for p in &one.points {
+        assert!(p.tiers.len() >= 2);
+        if let ScenarioKind::Mc { cuts } = &p.kind {
+            assert_eq!(p.tiers.len(), cuts.len() + 1);
+            assert!(p.accuracy.is_some());
+        }
+    }
+    let csv = one.to_csv().to_string();
+    assert!(csv.contains("sensor-npu>edge-gpu>server-gpu"));
+}

@@ -46,14 +46,14 @@ fn cfg(
     scale: ModelScale,
     period_ns: u64,
 ) -> ScenarioConfig {
-    ScenarioConfig {
+    ScenarioConfig::two_tier(
         kind,
-        net: NetworkConfig::gigabit(proto, loss, 42),
-        edge: DeviceProfile::edge_gpu(),
-        server: DeviceProfile::server_gpu(),
+        NetworkConfig::gigabit(proto, loss, 42),
+        DeviceProfile::edge_gpu(),
+        DeviceProfile::server_gpu(),
         scale,
-        frame_period_ns: period_ns,
-    }
+        period_ns,
+    )
 }
 
 #[test]
@@ -66,7 +66,7 @@ fn closed_loop_matches_open_loop_at_low_load() {
                  ScenarioKind::Sc { split }] {
         for proto in [Protocol::Tcp, Protocol::Udp] {
             for loss in [0.0, 0.05] {
-                let c = cfg(kind, proto, loss, ModelScale::Slim,
+                let c = cfg(kind.clone(), proto, loss, ModelScale::Slim,
                             50_000_000);
                 let closed = coordinator::run_scenario(
                     &*engine, &c, &test, 32, &qos,
@@ -132,7 +132,7 @@ fn latency_only_matches_open_loop_at_low_load() {
         (ScenarioKind::Sc { split }, Protocol::Tcp, 0.0),
         (ScenarioKind::Sc { split }, Protocol::Udp, 0.10),
     ] {
-        let c = cfg(kind, proto, loss, ModelScale::Slim, 50_000_000);
+        let c = cfg(kind.clone(), proto, loss, ModelScale::Slim, 50_000_000);
         let closed =
             coordinator::simulate_latency(&*engine, &c, 48).unwrap();
         let open = simulate_latency_open_loop(&*engine, &c, 48).unwrap();
@@ -233,11 +233,13 @@ fn prop_no_frame_lost_across_queues_and_batches() {
     let engine = engine();
     let split = *engine.manifest().available_splits().last().unwrap();
     check("stream_conservation", Config::default(), |c| {
-        let kind = *c.choice(&[
-            ScenarioKind::Lc,
-            ScenarioKind::Rc,
-            ScenarioKind::Sc { split },
-        ]);
+        let kind = c
+            .choice(&[
+                ScenarioKind::Lc,
+                ScenarioKind::Rc,
+                ScenarioKind::Sc { split },
+            ])
+            .clone();
         let proto =
             if c.bool() { Protocol::Tcp } else { Protocol::Udp };
         let loss = c.f64(0.0, 0.2);
@@ -251,16 +253,14 @@ fn prop_no_frame_lost_across_queues_and_batches() {
         let max_batch = c.sized_range(1, 8) as usize;
         let wait = c.rng.range_u64(1, 2_000_000);
         let sc = StreamConfig {
-            scenario: ScenarioConfig {
-                kind,
-                net: NetworkConfig::gigabit(
-                    proto, loss, c.rng.next_u64(),
-                ),
-                edge: DeviceProfile::edge_gpu(),
-                server: DeviceProfile::server_gpu(),
-                scale: ModelScale::Slim,
-                frame_period_ns: period,
-            },
+            scenario: ScenarioConfig::two_tier(
+                kind.clone(),
+                NetworkConfig::gigabit(proto, loss, c.rng.next_u64()),
+                DeviceProfile::edge_gpu(),
+                DeviceProfile::server_gpu(),
+                ModelScale::Slim,
+                period,
+            ),
             clients,
             frames_per_client: frames,
             batch: BatchPolicy::new(max_batch, wait),
