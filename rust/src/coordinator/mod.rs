@@ -8,6 +8,7 @@
 pub mod batcher;
 pub mod corruption;
 pub mod hil;
+pub mod placement;
 pub mod qos;
 pub mod saliency;
 pub mod scenario;
@@ -17,6 +18,10 @@ pub mod suggest;
 pub mod sweep;
 pub mod workload;
 
+pub use placement::{
+    place, FleetDevice, FleetSpec, FleetStream, PlacementOutcome,
+    PlacementPlan, StreamVerdict,
+};
 pub use qos::QosRequirements;
 pub use saliency::CsCurve;
 pub use scenario::{

@@ -1,0 +1,1123 @@
+//! Fleet-scale auto-placement (paper Fig. 1 step iii, lifted from one
+//! hand-picked chain to a declared inventory; cf. SplitPlace,
+//! arXiv 2110.04841): a [`FleetSpec`] names the devices a deployment
+//! owns, the channels between them and the streams it must serve, and
+//! [`place`] searches tier chains × cut chains × per-hop channel
+//! assignments for the [`PlacementPlan`] that satisfies the most
+//! streams' QoS — tie-broken by mean latency, then accuracy.
+//!
+//! The search is branch-and-bound: candidates are ordered by an
+//! *admissible* analytic latency lower bound (segment compute via
+//! [`DeviceProfile::compute_ns`] over [`chain_costs`], plus per-hop
+//! serialization at link capacity and propagation latency — everything
+//! the simulator can only add to: queueing, headers, acks, retransmits),
+//! and a candidate is pruned when that bound proves it cannot beat the
+//! incumbent even on tie-breaks. Survivors are simulated with the
+//! deterministic scenario evaluator ([`sweep::pooled_scenario`]), so the
+//! winning plan is byte-identical at any worker-thread count; setting
+//! [`FleetSpec::exhaustive`] disables pruning, which the tests use as
+//! the enumeration oracle for the bound's admissibility.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::qos::QosRequirements;
+use super::scenario::{
+    scenario_network, ModelScale, ScenarioConfig, ScenarioKind,
+};
+use super::streaming::{chain_tail_name, mid_exec_name};
+use super::sweep::{self, BackendFactory};
+use crate::data::Dataset;
+use crate::model::{
+    chain_costs, split_points, valid_cut_chains, Arch, ChainCosts, Cut,
+    DeviceProfile,
+};
+use crate::netsim::event::SimTime;
+use crate::netsim::transfer::NetworkConfig;
+use crate::runtime::InferenceBackend;
+use crate::util::json::{self, Json};
+
+/// One entry of the fleet's device inventory: a profile and how many of
+/// it the deployment owns. The `devices` list is ordered sensor side
+/// first; tier chains are order-preserving selections from it.
+#[derive(Clone, Debug)]
+pub struct FleetDevice {
+    pub profile: DeviceProfile,
+    pub count: usize,
+}
+
+/// One application stream the placement must serve, with its QoS.
+#[derive(Clone, Debug)]
+pub struct FleetStream {
+    pub name: String,
+    /// Offered (and required) frame rate; the per-frame deadline is one
+    /// frame period.
+    pub fps: f64,
+    pub min_accuracy: Option<f64>,
+    /// Fraction of frames that must meet the deadline, in (0, 1]
+    /// (default 1.0: every frame).
+    pub min_hit_rate: Option<f64>,
+}
+
+impl FleetStream {
+    pub fn qos(&self) -> Result<QosRequirements> {
+        let mut q = QosRequirements::with_fps(self.fps)
+            .with_context(|| format!("stream '{}'", self.name))?;
+        if let Some(a) = self.min_accuracy {
+            if !(0.0..=1.0).contains(&a) {
+                bail!(
+                    "stream '{}': min_accuracy must be in [0, 1], got {a}",
+                    self.name
+                );
+            }
+            q = q.and_accuracy(a);
+        }
+        if let Some(h) = self.min_hit_rate {
+            if !(h > 0.0 && h <= 1.0) {
+                bail!(
+                    "stream '{}': min_hit_rate must be in (0, 1], got {h}",
+                    self.name
+                );
+            }
+            q = q.and_hit_rate(h);
+        }
+        Ok(q)
+    }
+}
+
+/// The declarative input of the placement search (`sei place --fleet`).
+///
+/// JSON schema (see `examples/specs/fleet.json` / ARCHITECTURE.md):
+/// ```json
+/// {
+///   "name": "ice-lab",
+///   "arch": "vgg16",
+///   "devices": [{"profile": "sensor-npu", "count": 1}, ...],
+///   "links": {"uplink": "wifi:udp:loss=0.02", "backbone": "gigabit:tcp"},
+///   "streams": [{"name": "belt-a", "fps": 20, "min_accuracy": 0.5}],
+///   "frames": 64, "seed": 42, "max_tiers": 3, "dataset": "test",
+///   "exhaustive": false
+/// }
+/// ```
+/// Link channel specs go through [`NetworkConfig::parse`]; any `seed=`
+/// they carry is overridden by the spec's `seed` at evaluation time
+/// (via [`ScenarioConfig::set_base_seed`]), keeping plans deterministic
+/// in the spec alone.
+#[derive(Clone, Debug)]
+pub struct FleetSpec {
+    pub name: String,
+    pub arch: Arch,
+    /// Inventory, sensor side first.
+    pub devices: Vec<FleetDevice>,
+    /// Named channels, name-sorted (JSON object order).
+    pub links: Vec<(String, NetworkConfig)>,
+    pub streams: Vec<FleetStream>,
+    /// Frames simulated per stream per candidate.
+    pub frames: usize,
+    pub seed: u64,
+    /// Longest tier chain considered (>= 2).
+    pub max_tiers: usize,
+    pub dataset: String,
+    /// Disable branch-and-bound pruning and simulate every candidate —
+    /// the enumeration oracle for small fleets.
+    pub exhaustive: bool,
+}
+
+impl FleetSpec {
+    pub fn from_json(text: &str) -> Result<FleetSpec> {
+        let j = Json::parse(text).context("fleet spec")?;
+        const KEYS: [&str; 10] = [
+            "name", "arch", "devices", "links", "streams", "frames",
+            "seed", "max_tiers", "dataset", "exhaustive",
+        ];
+        match &j {
+            Json::Obj(m) => {
+                for k in m.keys() {
+                    if !KEYS.contains(&k.as_str()) {
+                        bail!(
+                            "fleet spec: unknown key '{k}' (known: {})",
+                            KEYS.join(", ")
+                        );
+                    }
+                }
+            }
+            _ => bail!("fleet spec must be a JSON object"),
+        }
+        let mut devices = Vec::new();
+        for d in j.get("devices")?.arr()? {
+            let profile = DeviceProfile::parse(d.get("profile")?.str()?)?;
+            let count = match d.opt("count") {
+                Some(c) => c.usize()?,
+                None => 1,
+            };
+            devices.push(FleetDevice { profile, count });
+        }
+        let mut links = Vec::new();
+        match j.get("links")? {
+            Json::Obj(m) => {
+                for (k, v) in m {
+                    let net = NetworkConfig::parse(v.str()?)
+                        .with_context(|| format!("fleet link '{k}'"))?;
+                    links.push((k.clone(), net));
+                }
+            }
+            _ => bail!(
+                "fleet spec: 'links' must be an object of \
+                 name -> channel spec"
+            ),
+        }
+        let mut streams = Vec::new();
+        for s in j.get("streams")?.arr()? {
+            streams.push(FleetStream {
+                name: s.get("name")?.str()?.to_string(),
+                fps: s.get("fps")?.f64()?,
+                min_accuracy: s
+                    .opt("min_accuracy")
+                    .map(|v| v.f64())
+                    .transpose()?,
+                min_hit_rate: s
+                    .opt("min_hit_rate")
+                    .map(|v| v.f64())
+                    .transpose()?,
+            });
+        }
+        let spec = FleetSpec {
+            name: j.get("name")?.str()?.to_string(),
+            arch: Arch::parse(j.get("arch")?.str()?)?,
+            devices,
+            links,
+            streams,
+            frames: match j.opt("frames") {
+                Some(v) => v.usize()?,
+                None => 64,
+            },
+            seed: match j.opt("seed") {
+                Some(v) => v.u64()?,
+                None => 42,
+            },
+            max_tiers: match j.opt("max_tiers") {
+                Some(v) => v.usize()?,
+                None => 3,
+            },
+            dataset: match j.opt("dataset") {
+                Some(v) => v.str()?.to_string(),
+                None => "test".to_string(),
+            },
+            exhaustive: match j.opt("exhaustive") {
+                Some(v) => v.bool()?,
+                None => false,
+            },
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.devices.iter().any(|d| d.count == 0) {
+            bail!("fleet '{}': every device needs count >= 1", self.name);
+        }
+        let owned: usize = self.devices.iter().map(|d| d.count).sum();
+        if owned < 2 {
+            bail!(
+                "fleet '{}' owns {owned} device(s); placement needs a \
+                 chain of at least 2",
+                self.name
+            );
+        }
+        if self.links.is_empty() {
+            bail!("fleet '{}' declares no links", self.name);
+        }
+        if self.streams.is_empty() {
+            bail!("fleet '{}' declares no streams", self.name);
+        }
+        let mut names: Vec<&str> =
+            self.streams.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        if names.windows(2).any(|w| w[0] == w[1]) {
+            bail!("fleet '{}': duplicate stream names", self.name);
+        }
+        for s in &self.streams {
+            s.qos()?; // surfaces bad fps / accuracy / hit-rate early
+        }
+        if self.frames == 0 {
+            bail!("fleet '{}': frames must be >= 1", self.name);
+        }
+        if self.max_tiers < 2 {
+            bail!(
+                "fleet '{}': max_tiers must be >= 2, got {}",
+                self.name,
+                self.max_tiers
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Per-stream verdict of the winning plan.
+#[derive(Clone, Debug)]
+pub struct StreamVerdict {
+    pub stream: String,
+    pub satisfied: bool,
+    pub mean_latency_ns: f64,
+    pub accuracy: f64,
+    pub deadline_hit_rate: Option<f64>,
+}
+
+/// The search's output: where to place which segments over which
+/// channels, plus the measured evidence.
+#[derive(Clone, Debug)]
+pub struct PlacementPlan {
+    pub fleet: String,
+    pub arch: Arch,
+    /// Chosen tier chain, sensor side first.
+    pub tiers: Vec<DeviceProfile>,
+    /// Chosen cut chain (`tiers.len() - 1` ordered split ids).
+    pub cuts: Vec<usize>,
+    /// Human-readable names of the chosen cuts.
+    pub cut_names: Vec<String>,
+    /// Chosen link name per inter-tier hop.
+    pub hop_links: Vec<String>,
+    /// The channels those names resolve to.
+    pub hop_nets: Vec<NetworkConfig>,
+    /// Streams satisfied out of [`PlacementPlan::streams`].
+    pub satisfied: usize,
+    pub streams: Vec<StreamVerdict>,
+    /// Mean of the per-stream mean latencies.
+    pub mean_latency_ns: f64,
+    /// Mean of the per-stream accuracies.
+    pub accuracy: f64,
+    /// The candidate's analytic latency lower bound.
+    pub bound_ns: SimTime,
+}
+
+impl PlacementPlan {
+    pub fn kind(&self) -> ScenarioKind {
+        ScenarioKind::Mc { cuts: self.cuts.clone() }
+    }
+
+    /// Stable JSON form — the CI determinism check compares these bytes
+    /// across thread counts.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("fleet", json::s(&self.fleet)),
+            ("arch", json::s(self.arch.as_str())),
+            (
+                "tiers",
+                json::arr(
+                    self.tiers
+                        .iter()
+                        .map(|t| json::s(&t.name))
+                        .collect(),
+                ),
+            ),
+            (
+                "cuts",
+                json::arr(
+                    self.cuts
+                        .iter()
+                        .map(|&c| json::num(c as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "cut_names",
+                json::arr(
+                    self.cut_names.iter().map(|n| json::s(n)).collect(),
+                ),
+            ),
+            (
+                "hop_links",
+                json::arr(
+                    self.hop_links.iter().map(|l| json::s(l)).collect(),
+                ),
+            ),
+            (
+                "hop_nets",
+                json::arr(
+                    self.hop_nets
+                        .iter()
+                        .map(|n| json::s(&n.to_string()))
+                        .collect(),
+                ),
+            ),
+            ("bound_ns", json::num(self.bound_ns as f64)),
+            ("satisfied", json::num(self.satisfied as f64)),
+            ("total_streams", json::num(self.streams.len() as f64)),
+            ("mean_latency_ns", json::num(self.mean_latency_ns)),
+            ("accuracy", json::num(self.accuracy)),
+            (
+                "streams",
+                json::arr(
+                    self.streams
+                        .iter()
+                        .map(|v| {
+                            json::obj(vec![
+                                ("name", json::s(&v.stream)),
+                                ("satisfied", Json::Bool(v.satisfied)),
+                                (
+                                    "mean_latency_ns",
+                                    json::num(v.mean_latency_ns),
+                                ),
+                                ("accuracy", json::num(v.accuracy)),
+                                (
+                                    "deadline_hit_rate",
+                                    v.deadline_hit_rate
+                                        .map(json::num)
+                                        .unwrap_or(Json::Null),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Human-readable plan summary for the CLI.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "=== placement plan — fleet '{}' ({}) ===\n",
+            self.fleet, self.arch
+        );
+        s.push_str(&format!(
+            "tiers              {}\n",
+            self.tiers
+                .iter()
+                .map(|t| t.name.as_str())
+                .collect::<Vec<_>>()
+                .join(" -> ")
+        ));
+        s.push_str(&format!(
+            "cuts               {} ({})\n",
+            self.kind(),
+            self.cut_names.join(" > ")
+        ));
+        for (h, (link, net)) in
+            self.hop_links.iter().zip(&self.hop_nets).enumerate()
+        {
+            s.push_str(&format!("hop {h} channel      {link}: {net}\n"));
+        }
+        s.push_str(&format!(
+            "QoS                {}/{} streams satisfied\n",
+            self.satisfied,
+            self.streams.len()
+        ));
+        for v in &self.streams {
+            s.push_str(&format!(
+                "  {:<16} {:<9} mean {:>8.2} ms   acc {:>5.1}%\n",
+                v.stream,
+                if v.satisfied { "ok" } else { "violated" },
+                v.mean_latency_ns / 1e6,
+                v.accuracy * 100.0
+            ));
+        }
+        s.push_str(&format!(
+            "analytic bound     {:.2} ms (mean measured {:.2} ms)\n",
+            self.bound_ns as f64 / 1e6,
+            self.mean_latency_ns / 1e6
+        ));
+        s
+    }
+}
+
+/// [`place`]'s result: the winning plan plus search accounting. Only the
+/// plan is thread-count invariant — evaluated/pruned counts depend on
+/// wave boundaries (see module docs).
+#[derive(Clone, Debug)]
+pub struct PlacementOutcome {
+    pub plan: PlacementPlan,
+    pub candidates: usize,
+    pub evaluated: usize,
+    pub pruned: usize,
+}
+
+/// One point of the search space before simulation.
+#[derive(Clone, Debug)]
+struct Candidate {
+    /// Indices into `fleet.devices` (repeats allowed up to `count`).
+    tiers: Vec<usize>,
+    cuts: Vec<usize>,
+    /// Index into `fleet.links` per hop.
+    links: Vec<usize>,
+    bound_ns: SimTime,
+}
+
+/// The measured value of a candidate.
+#[derive(Clone, Debug)]
+struct Eval {
+    cand: usize,
+    satisfied: usize,
+    mean_latency_ns: f64,
+    accuracy: f64,
+    verdicts: Vec<StreamVerdict>,
+}
+
+/// Strict total order of the search: more satisfied streams, then lower
+/// mean latency, then higher accuracy, then lower candidate index (the
+/// deterministic tie-break that makes the winner independent of
+/// evaluation order, hence of thread count).
+fn better(a: &Eval, b: &Eval) -> bool {
+    if a.satisfied != b.satisfied {
+        return a.satisfied > b.satisfied;
+    }
+    if a.mean_latency_ns != b.mean_latency_ns {
+        return a.mean_latency_ns < b.mean_latency_ns;
+    }
+    if a.accuracy != b.accuracy {
+        return a.accuracy > b.accuracy;
+    }
+    a.cand < b.cand
+}
+
+/// Order-preserving multisubset chains over the inventory: each device
+/// contributes `0..=count` tiers, totals in `2..=max_tiers`, declared
+/// order kept (sensor side first).
+fn tier_chains(devices: &[FleetDevice], max_tiers: usize) -> Vec<Vec<usize>> {
+    fn rec(
+        devices: &[FleetDevice],
+        i: usize,
+        max_tiers: usize,
+        cur: &mut Vec<usize>,
+        out: &mut Vec<Vec<usize>>,
+    ) {
+        if i == devices.len() {
+            if cur.len() >= 2 {
+                out.push(cur.clone());
+            }
+            return;
+        }
+        let budget = max_tiers - cur.len();
+        for m in 0..=devices[i].count.min(budget) {
+            for _ in 0..m {
+                cur.push(i);
+            }
+            rec(devices, i + 1, max_tiers, cur, out);
+            for _ in 0..m {
+                cur.pop();
+            }
+        }
+        // `m = 0` was the first iteration, so every selection count is
+        // covered exactly once.
+    }
+    let mut out = Vec::new();
+    rec(devices, 0, max_tiers, &mut Vec::new(), &mut out);
+    out
+}
+
+/// Admissible latency lower bound of one frame through the candidate:
+/// per-segment compute plus per-hop payload serialization at capacity
+/// and propagation latency. The simulator can only add to this
+/// (queueing, protocol headers, acks, retransmits, downlink).
+fn latency_bound_ns(
+    tiers: &[&DeviceProfile],
+    costs: &ChainCosts,
+    hop_nets: &[&NetworkConfig],
+) -> SimTime {
+    let mut t: SimTime = 0;
+    for (d, &ma) in tiers.iter().zip(&costs.seg_mult_adds) {
+        t = t.saturating_add(d.compute_ns(ma));
+    }
+    for (net, &bytes) in hop_nets.iter().zip(&costs.hop_bytes) {
+        let rate = net.capacity_bps.min(net.interface_bps);
+        let wire = (bytes as f64 * 8.0 / rate * 1e9) as SimTime;
+        t = t.saturating_add(net.latency_ns).saturating_add(wire);
+    }
+    t
+}
+
+/// Can a plan with per-frame latency >= `bound_ns` still satisfy the
+/// stream? (Latency only — accuracy is sampled, so no analytic bound on
+/// it is admissible.)
+fn stream_reachable(stream: &FleetStream, bound_ns: SimTime) -> bool {
+    match QosRequirements::with_fps(stream.fps)
+        .ok()
+        .and_then(|q| q.max_latency_ns)
+    {
+        Some(deadline) => bound_ns <= deadline,
+        None => true,
+    }
+}
+
+/// Upper bound on the number of streams a candidate can satisfy.
+fn ub_satisfied(fleet: &FleetSpec, bound_ns: SimTime) -> usize {
+    fleet
+        .streams
+        .iter()
+        .filter(|s| stream_reachable(s, bound_ns))
+        .count()
+}
+
+/// Prune when the candidate provably cannot beat the incumbent, even on
+/// the latency tie-break: its satisfiable-stream upper bound is below
+/// the incumbent's count, or ties it while the latency bound already
+/// exceeds the incumbent's *measured* mean latency.
+fn prunable(fleet: &FleetSpec, cand: &Candidate, inc: &Eval) -> bool {
+    let ub = ub_satisfied(fleet, cand.bound_ns);
+    ub < inc.satisfied
+        || (ub == inc.satisfied
+            && (cand.bound_ns as f64) > inc.mean_latency_ns)
+}
+
+/// A cut chain is servable when the backend has (or can synthesize) the
+/// head, every mid segment and the chain tail at batch 1 — the same
+/// capability probe the suggest engine applies to MC candidates.
+fn chain_servable(engine: &dyn InferenceBackend, cuts: &[usize]) -> bool {
+    engine.executable(&format!("head_L{}_b1", cuts[0])).is_ok()
+        && cuts.windows(2).all(|w| {
+            engine.executable(&mid_exec_name(w[0], w[1], 1)).is_ok()
+        })
+        && engine.executable(&chain_tail_name(cuts, 1)).is_ok()
+}
+
+/// Enumerate the full candidate space (tier chains × servable cut chains
+/// × per-hop link assignments) with analytic bounds, in one fixed,
+/// thread-independent order.
+fn enumerate(
+    fleet: &FleetSpec,
+    engine: &dyn InferenceBackend,
+    points: &[Cut],
+) -> Result<Vec<Candidate>> {
+    let network = scenario_network(engine, ModelScale::Slim);
+    let available = engine.manifest().available_splits();
+    // Cut chains and their costs per hop count, probed once.
+    let mut chains_for: HashMap<usize, Vec<(Vec<usize>, ChainCosts)>> =
+        HashMap::new();
+    let mut cands = Vec::new();
+    for chain in tier_chains(&fleet.devices, fleet.max_tiers) {
+        let k = chain.len() - 1;
+        let cut_chains =
+            match chains_for.entry(k) {
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    e.into_mut()
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    let mut v = Vec::new();
+                    for cuts in valid_cut_chains(&network, k) {
+                        if !cuts.iter().all(|c| available.contains(c)) {
+                            continue;
+                        }
+                        if !chain_servable(engine, &cuts) {
+                            continue;
+                        }
+                        let costs = chain_costs(points, &cuts)?;
+                        v.push((cuts, costs));
+                    }
+                    e.insert(v)
+                }
+            };
+        let tiers: Vec<&DeviceProfile> = chain
+            .iter()
+            .map(|&d| &fleet.devices[d].profile)
+            .collect();
+        for (cuts, costs) in cut_chains.iter() {
+            // Odometer over per-hop link assignments, hop 0 most
+            // significant.
+            let mut assign = vec![0usize; k];
+            loop {
+                let hop_nets: Vec<&NetworkConfig> =
+                    assign.iter().map(|&l| &fleet.links[l].1).collect();
+                cands.push(Candidate {
+                    tiers: chain.clone(),
+                    cuts: cuts.clone(),
+                    links: assign.clone(),
+                    bound_ns: latency_bound_ns(&tiers, costs, &hop_nets),
+                });
+                let mut h = k;
+                loop {
+                    if h == 0 {
+                        break;
+                    }
+                    h -= 1;
+                    assign[h] += 1;
+                    if assign[h] < fleet.links.len() {
+                        break;
+                    }
+                    assign[h] = 0;
+                }
+                if assign.iter().all(|&l| l == 0) {
+                    break;
+                }
+            }
+        }
+    }
+    if cands.len() > 100_000 {
+        bail!(
+            "fleet '{}': search space has {} candidates — lower \
+             max_tiers, device counts or the link set",
+            fleet.name,
+            cands.len()
+        );
+    }
+    Ok(cands)
+}
+
+/// Simulate every stream of the fleet on one candidate.
+fn evaluate(
+    engine: &dyn InferenceBackend,
+    dataset: &Dataset,
+    fleet: &FleetSpec,
+    cands: &[Candidate],
+    ci: usize,
+) -> Result<Eval> {
+    let c = &cands[ci];
+    let tiers: Vec<DeviceProfile> = c
+        .tiers
+        .iter()
+        .map(|&d| fleet.devices[d].profile.clone())
+        .collect();
+    let hop_nets: Vec<NetworkConfig> =
+        c.links.iter().map(|&l| fleet.links[l].1.clone()).collect();
+    let mut verdicts = Vec::with_capacity(fleet.streams.len());
+    for stream in &fleet.streams {
+        let qos = stream.qos()?;
+        let cfg = ScenarioConfig {
+            kind: ScenarioKind::Mc { cuts: c.cuts.clone() },
+            hop_nets: hop_nets.clone(),
+            tiers: tiers.clone(),
+            scale: ModelScale::Slim,
+            frame_period_ns: (1e9 / stream.fps) as SimTime,
+        };
+        let r = sweep::pooled_scenario(
+            engine,
+            &cfg,
+            dataset,
+            fleet.frames,
+            &[fleet.seed],
+            &qos,
+        )?;
+        verdicts.push(StreamVerdict {
+            stream: stream.name.clone(),
+            satisfied: qos.satisfied_by(r.deadline_hit_rate, r.accuracy),
+            mean_latency_ns: r.mean_latency_ns,
+            accuracy: r.accuracy,
+            deadline_hit_rate: r.deadline_hit_rate,
+        });
+    }
+    let n = verdicts.len() as f64;
+    Ok(Eval {
+        cand: ci,
+        satisfied: verdicts.iter().filter(|v| v.satisfied).count(),
+        mean_latency_ns: verdicts
+            .iter()
+            .map(|v| v.mean_latency_ns)
+            .sum::<f64>()
+            / n,
+        accuracy: verdicts.iter().map(|v| v.accuracy).sum::<f64>() / n,
+        verdicts,
+    })
+}
+
+/// Evaluate one wave of candidates — inline on `engine` for a single
+/// slot, else on a scoped worker pool mirroring the sweep engine's
+/// determinism pattern (jobs pulled from a shared counter, results
+/// stored by wave index; backends are per-worker since they are not
+/// `Send`).
+fn evaluate_wave(
+    engine: &dyn InferenceBackend,
+    dataset: &Dataset,
+    fleet: &FleetSpec,
+    cands: &[Candidate],
+    wave: &[usize],
+    threads: usize,
+    factory: &BackendFactory<'_>,
+) -> Result<Vec<Eval>> {
+    if threads <= 1 || wave.len() <= 1 {
+        return wave
+            .iter()
+            .map(|&ci| evaluate(engine, dataset, fleet, cands, ci))
+            .collect();
+    }
+    let workers = threads.min(wave.len());
+    let results: Mutex<Vec<Option<Eval>>> =
+        Mutex::new(vec![None; wave.len()]);
+    let next = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+    let error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                let mut engine: Option<Box<dyn InferenceBackend>> = None;
+                loop {
+                    if failed.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let w = next.fetch_add(1, Ordering::Relaxed);
+                    if w >= wave.len() {
+                        return;
+                    }
+                    if engine.is_none() {
+                        match factory(fleet.arch) {
+                            Ok(e) => engine = Some(e),
+                            Err(e) => {
+                                failed.store(true, Ordering::Relaxed);
+                                let mut slot = error.lock().unwrap();
+                                if slot.is_none() {
+                                    *slot = Some(e);
+                                }
+                                return;
+                            }
+                        }
+                    }
+                    let eng = engine.as_deref().unwrap();
+                    match evaluate(eng, dataset, fleet, cands, wave[w]) {
+                        Ok(ev) => {
+                            results.lock().unwrap()[w] = Some(ev);
+                        }
+                        Err(e) => {
+                            failed.store(true, Ordering::Relaxed);
+                            let mut slot = error.lock().unwrap();
+                            if slot.is_none() {
+                                *slot = Some(e);
+                            }
+                            return;
+                        }
+                    }
+                }
+            });
+        }
+    });
+    if let Some(e) = error.into_inner().unwrap() {
+        return Err(e);
+    }
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .enumerate()
+        .map(|(w, ev)| {
+            ev.ok_or_else(|| {
+                anyhow::anyhow!("placement wave slot {w} missing")
+            })
+        })
+        .collect()
+}
+
+/// Search the fleet for the best placement plan.
+///
+/// Candidates are visited in ascending analytic-bound order in waves of
+/// `threads`; between waves the incumbent absorbs every finished
+/// evaluation, and subsequent candidates it provably dominates are
+/// pruned. Because the bound is admissible and ties are
+/// broken by candidate index, the returned plan is identical for every
+/// `threads` value — and identical to exhaustive enumeration
+/// ([`FleetSpec::exhaustive`]).
+pub fn place(
+    fleet: &FleetSpec,
+    threads: usize,
+    factory: &BackendFactory<'_>,
+) -> Result<PlacementOutcome> {
+    fleet.validate()?;
+    let engine = factory(fleet.arch)?;
+    let dataset = engine.dataset(&fleet.dataset)?;
+    let network = scenario_network(&*engine, ModelScale::Slim);
+    let points = split_points(&network);
+    let cands = enumerate(fleet, &*engine, &points)?;
+    if cands.is_empty() {
+        bail!(
+            "fleet '{}': no placement candidates (no servable cut chain \
+             fits any tier chain up to {} tiers)",
+            fleet.name,
+            fleet.max_tiers
+        );
+    }
+    let mut order: Vec<usize> = (0..cands.len()).collect();
+    order.sort_by_key(|&i| (cands[i].bound_ns, i));
+
+    let threads = threads.max(1);
+    let mut incumbent: Option<Eval> = None;
+    let mut evaluated = 0usize;
+    let mut pruned = 0usize;
+    let mut pos = 0usize;
+    while pos < order.len() {
+        let mut wave = Vec::with_capacity(threads);
+        while pos < order.len() && wave.len() < threads {
+            let ci = order[pos];
+            pos += 1;
+            if !fleet.exhaustive {
+                if let Some(inc) = &incumbent {
+                    if prunable(fleet, &cands[ci], inc) {
+                        pruned += 1;
+                        continue;
+                    }
+                }
+            }
+            wave.push(ci);
+        }
+        if wave.is_empty() {
+            continue;
+        }
+        let evals = evaluate_wave(
+            &*engine, &dataset, fleet, &cands, &wave, threads, factory,
+        )?;
+        evaluated += evals.len();
+        for ev in evals {
+            if incumbent.as_ref().map_or(true, |inc| better(&ev, inc)) {
+                incumbent = Some(ev);
+            }
+        }
+    }
+    let winner = incumbent.expect("non-empty candidate set was evaluated");
+    let c = &cands[winner.cand];
+    let names = &engine.manifest().model.layer_names;
+    let plan = PlacementPlan {
+        fleet: fleet.name.clone(),
+        arch: fleet.arch,
+        tiers: c
+            .tiers
+            .iter()
+            .map(|&d| fleet.devices[d].profile.clone())
+            .collect(),
+        cuts: c.cuts.clone(),
+        cut_names: c
+            .cuts
+            .iter()
+            .map(|&cut| {
+                names
+                    .get(cut)
+                    .cloned()
+                    .unwrap_or_else(|| format!("L{cut}"))
+            })
+            .collect(),
+        hop_links: c
+            .links
+            .iter()
+            .map(|&l| fleet.links[l].0.clone())
+            .collect(),
+        hop_nets: c
+            .links
+            .iter()
+            .map(|&l| fleet.links[l].1.clone())
+            .collect(),
+        satisfied: winner.satisfied,
+        streams: winner.verdicts,
+        mean_latency_ns: winner.mean_latency_ns,
+        accuracy: winner.accuracy,
+        bound_ns: c.bound_ns,
+    };
+    Ok(PlacementOutcome {
+        plan,
+        candidates: cands.len(),
+        evaluated,
+        pruned,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::transfer::Protocol;
+    use crate::runtime::load_backend_for;
+    use std::path::Path;
+
+    fn factory(arch: Arch) -> Result<Box<dyn InferenceBackend>> {
+        // No artifacts directory in tests: loads the analytic backend.
+        load_backend_for(Path::new("artifacts"), arch)
+    }
+
+    fn small_fleet() -> FleetSpec {
+        FleetSpec {
+            name: "unit".into(),
+            arch: Arch::Vgg16,
+            devices: vec![
+                FleetDevice {
+                    profile: DeviceProfile::edge_gpu(),
+                    count: 1,
+                },
+                FleetDevice {
+                    profile: DeviceProfile::server_gpu(),
+                    count: 1,
+                },
+            ],
+            links: vec![
+                (
+                    "backbone".into(),
+                    NetworkConfig::gigabit(Protocol::Tcp, 0.0, 0),
+                ),
+                (
+                    "uplink".into(),
+                    NetworkConfig::wifi(Protocol::Udp, 0.05, 0),
+                ),
+            ],
+            streams: vec![
+                FleetStream {
+                    name: "belt-a".into(),
+                    fps: 20.0,
+                    min_accuracy: None,
+                    min_hit_rate: None,
+                },
+                FleetStream {
+                    name: "belt-b".into(),
+                    fps: 50.0,
+                    min_accuracy: Some(0.5),
+                    min_hit_rate: None,
+                },
+            ],
+            frames: 6,
+            seed: 42,
+            max_tiers: 2,
+            dataset: "test".into(),
+            exhaustive: false,
+        }
+    }
+
+    #[test]
+    fn tier_chains_respect_counts_and_order() {
+        let devices = vec![
+            FleetDevice {
+                profile: DeviceProfile::sensor_npu(),
+                count: 2,
+            },
+            FleetDevice { profile: DeviceProfile::edge_gpu(), count: 1 },
+        ];
+        let chains = tier_chains(&devices, 3);
+        // ss, se, sse, e alone is too short; s alone too short.
+        assert!(chains.contains(&vec![0, 0]));
+        assert!(chains.contains(&vec![0, 1]));
+        assert!(chains.contains(&vec![0, 0, 1]));
+        assert!(!chains.iter().any(|c| c.len() < 2 || c.len() > 3));
+        // Counts are a hard budget: no chain uses three sensors or two
+        // edges.
+        assert!(!chains.iter().any(|c| {
+            c.iter().filter(|&&d| d == 0).count() > 2
+                || c.iter().filter(|&&d| d == 1).count() > 1
+        }));
+        // Declared order is preserved (non-decreasing indices).
+        assert!(chains
+            .iter()
+            .all(|c| c.windows(2).all(|w| w[0] <= w[1])));
+    }
+
+    #[test]
+    fn branch_and_bound_matches_exhaustive_enumeration() {
+        // The acceptance oracle: pruning must never change the winner.
+        let mut fleet = small_fleet();
+        let bb = place(&fleet, 1, &factory).unwrap();
+        fleet.exhaustive = true;
+        let oracle = place(&fleet, 1, &factory).unwrap();
+        assert_eq!(
+            bb.plan.to_json().to_string(),
+            oracle.plan.to_json().to_string()
+        );
+        assert_eq!(oracle.evaluated, oracle.candidates);
+        assert_eq!(oracle.pruned, 0);
+        assert!(bb.evaluated <= oracle.evaluated);
+    }
+
+    #[test]
+    fn winning_plan_is_thread_count_invariant() {
+        let fleet = small_fleet();
+        let one = place(&fleet, 1, &factory).unwrap();
+        let many = place(&fleet, 8, &factory).unwrap();
+        assert_eq!(
+            one.plan.to_json().to_string(),
+            many.plan.to_json().to_string()
+        );
+    }
+
+    #[test]
+    fn bound_is_admissible_for_every_evaluated_candidate() {
+        // Every stream's measured mean latency must dominate the
+        // analytic bound — otherwise pruning could discard true winners.
+        let mut fleet = small_fleet();
+        fleet.exhaustive = true;
+        let engine = factory(fleet.arch).unwrap();
+        let dataset = engine.dataset(&fleet.dataset).unwrap();
+        let network = scenario_network(&*engine, ModelScale::Slim);
+        let points = split_points(&network);
+        let cands = enumerate(&fleet, &*engine, &points).unwrap();
+        assert!(!cands.is_empty());
+        for ci in 0..cands.len() {
+            let ev = evaluate(&*engine, &dataset, &fleet, &cands, ci)
+                .unwrap();
+            for v in &ev.verdicts {
+                assert!(
+                    v.mean_latency_ns >= cands[ci].bound_ns as f64,
+                    "candidate {ci} ({:?} cuts {:?}): bound {} ns \
+                     exceeds measured {} ns for stream {}",
+                    cands[ci].tiers,
+                    cands[ci].cuts,
+                    cands[ci].bound_ns,
+                    v.mean_latency_ns,
+                    v.stream
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fleet_spec_parses_and_validates() {
+        let text = r#"{
+            "name": "demo", "arch": "vgg16",
+            "devices": [
+                {"profile": "sensor-npu", "count": 1},
+                {"profile": "server-gpu"}
+            ],
+            "links": {"up": "wifi:udp:loss=0.02", "bb": "gigabit:tcp"},
+            "streams": [{"name": "a", "fps": 20, "min_accuracy": 0.4}],
+            "frames": 8, "seed": 7, "max_tiers": 2
+        }"#;
+        let spec = FleetSpec::from_json(text).unwrap();
+        assert_eq!(spec.name, "demo");
+        assert_eq!(spec.devices.len(), 2);
+        assert_eq!(spec.devices[1].count, 1);
+        // JSON objects are name-sorted: "bb" precedes "up".
+        assert_eq!(spec.links[0].0, "bb");
+        assert_eq!(spec.links[1].1.protocol, Protocol::Udp);
+        assert!((spec.links[1].1.loss_rate - 0.02).abs() < 1e-12);
+        assert_eq!(spec.streams[0].min_accuracy, Some(0.4));
+        assert_eq!(spec.max_tiers, 2);
+        assert!(!spec.exhaustive);
+
+        for bad in [
+            r#"{"name": "x"}"#,
+            // unknown key
+            r#"{"name": "x", "arch": "vgg16", "devices": [],
+                "links": {"l": "gigabit"}, "streams": [], "bogus": 1}"#,
+            // no devices at all
+            r#"{"name": "x", "arch": "vgg16", "devices": [],
+                "links": {"l": "gigabit"},
+                "streams": [{"name": "a", "fps": 20}]}"#,
+            // one device cannot form a chain
+            r#"{"name": "x", "arch": "vgg16",
+                "devices": [{"profile": "edge-gpu"}],
+                "links": {"l": "gigabit"},
+                "streams": [{"name": "a", "fps": 20}]}"#,
+            // duplicate stream names
+            r#"{"name": "x", "arch": "vgg16",
+                "devices": [{"profile": "edge-gpu"},
+                            {"profile": "server-gpu"}],
+                "links": {"l": "gigabit"},
+                "streams": [{"name": "a", "fps": 20},
+                            {"name": "a", "fps": 10}]}"#,
+            // bad link spec
+            r#"{"name": "x", "arch": "vgg16",
+                "devices": [{"profile": "edge-gpu"},
+                            {"profile": "server-gpu"}],
+                "links": {"l": "carrier-pigeon"},
+                "streams": [{"name": "a", "fps": 20}]}"#,
+        ] {
+            assert!(FleetSpec::from_json(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn plan_prefers_satisfying_fast_links() {
+        // With a gigabit backbone available, the winner must not route
+        // its hop over the lossy wifi uplink: same cut chain over the
+        // faster link strictly dominates on satisfied streams (or mean
+        // latency at equal satisfaction).
+        let fleet = small_fleet();
+        let out = place(&fleet, 1, &factory).unwrap();
+        assert_eq!(out.plan.hop_links, vec!["backbone".to_string()]);
+        assert_eq!(out.plan.tiers.len(), 2);
+        assert_eq!(out.plan.cuts.len(), 1);
+        assert_eq!(out.plan.streams.len(), 2);
+        assert!(out.plan.satisfied >= 1);
+        // The search did real pruning work on this fleet, and the
+        // accounting is consistent.
+        assert_eq!(out.evaluated + out.pruned, out.candidates);
+    }
+}

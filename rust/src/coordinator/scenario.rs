@@ -180,18 +180,24 @@ impl ModelScale {
     }
 }
 
-/// Seed stride between the per-hop channels of a tier chain: hop `h`
-/// simulates on `net.seed + h * HOP_SEED_STRIDE`, so hop 0 keeps the
-/// configured seed exactly (the two-tier degenerate-equivalence anchor)
-/// while later hops draw decorrelated loss patterns.
+/// Seed stride between the per-hop channels of a *replicated* tier chain:
+/// with a single `hop_nets` template, hop `h` simulates on
+/// `net.seed + h * HOP_SEED_STRIDE`, so hop 0 keeps the configured seed
+/// exactly (the two-tier degenerate-equivalence anchor) while later hops
+/// draw decorrelated loss patterns.
 const HOP_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
 
 #[derive(Clone, Debug)]
 pub struct ScenarioConfig {
     pub kind: ScenarioKind,
-    /// Channel settings shared by every inter-tier hop (each hop gets its
-    /// own [`Channel`] instance, seeded via [`ScenarioConfig::hop_net`]).
-    pub net: NetworkConfig,
+    /// Per-hop channel settings, sensor side first (each inter-tier hop
+    /// gets its own [`Channel`] instance via [`ScenarioConfig::hop_net`]).
+    /// A **single entry** is a template replicated to every hop with
+    /// derived per-hop seeds (the pre-redesign behaviour, byte-identical);
+    /// **multiple entries** configure each hop explicitly — a wifi sensor
+    /// uplink can feed a gigabit backbone — and the length must then equal
+    /// `tiers − 1` for the scenario kind (checked by the engines).
+    pub hop_nets: Vec<NetworkConfig>,
     /// Device tier chain, sensor side first. LC runs on `tiers[0]`; RC and
     /// SC use the first and last tiers (intermediate tiers, if any, are
     /// bypassed — a direct sensor→cloud channel); MC with k cuts needs
@@ -205,7 +211,7 @@ pub struct ScenarioConfig {
 }
 
 impl ScenarioConfig {
-    /// The classic two-tier configuration (edge + server).
+    /// The classic two-tier configuration (edge + server) over one channel.
     pub fn two_tier(
         kind: ScenarioKind,
         net: NetworkConfig,
@@ -216,7 +222,7 @@ impl ScenarioConfig {
     ) -> ScenarioConfig {
         ScenarioConfig {
             kind,
-            net,
+            hop_nets: vec![net],
             tiers: vec![edge, server],
             scale,
             frame_period_ns,
@@ -233,16 +239,44 @@ impl ScenarioConfig {
         self.tiers.last().expect("scenario config with no tiers")
     }
 
-    /// The [`NetworkConfig`] of inter-tier hop `h`: the shared channel
-    /// settings with a per-hop seed (hop 0 keeps the configured seed, so
-    /// two-tier scenarios are unchanged byte-for-byte).
+    /// The channel template reports and reseeding derive from: hop 0's
+    /// configuration (the only one, when a single entry is replicated).
+    pub fn base_net(&self) -> &NetworkConfig {
+        self.hop_nets.first().expect("scenario config with no hop nets")
+    }
+
+    /// The [`NetworkConfig`] of inter-tier hop `h`.
+    ///
+    /// Replicated form (one entry): the template with a per-hop derived
+    /// seed — **hop 0 keeps the configured seed exactly** (pinned: two-tier
+    /// scenarios and `mc@i ≡ sc@i` degenerate equivalence stay
+    /// byte-identical with the pre-`hop_nets` engine), later hops add
+    /// `h * HOP_SEED_STRIDE`. Heterogeneous form (one entry per hop): each
+    /// entry is returned verbatim, seed included — no derivation, what you
+    /// configure is what each hop simulates.
     pub fn hop_net(&self, hop: usize) -> NetworkConfig {
-        let mut net = self.net.clone();
-        net.seed = self
-            .net
+        if self.hop_nets.len() > 1 {
+            return self.hop_nets[hop].clone();
+        }
+        let base = self.base_net();
+        let mut net = base.clone();
+        net.seed = base
             .seed
             .wrapping_add((hop as u64).wrapping_mul(HOP_SEED_STRIDE));
         net
+    }
+
+    /// Reseed the whole chain from one base seed, preserving the per-hop
+    /// derivation contract: the replicated template takes `seed` directly
+    /// (hop `h` then derives `seed + h * HOP_SEED_STRIDE` as before);
+    /// explicit heterogeneous entries take `seed + h * HOP_SEED_STRIDE`
+    /// verbatim. Used by the pooled multi-seed evaluators so a seed sweep
+    /// re-draws every hop's loss pattern deterministically.
+    pub fn set_base_seed(&mut self, seed: u64) {
+        for (h, net) in self.hop_nets.iter_mut().enumerate() {
+            net.seed = seed
+                .wrapping_add((h as u64).wrapping_mul(HOP_SEED_STRIDE));
+        }
     }
 }
 
@@ -322,8 +356,11 @@ impl ScenarioReport {
         };
         Ok(ScenarioReport {
             kind: cfg.kind.clone(),
-            protocol: cfg.net.protocol,
-            loss_rate: cfg.net.loss_rate,
+            // Heterogeneous chains report hop 0's transport and loss (the
+            // sensor uplink — the hop the paper's split decision trades
+            // against); per-hop detail lives in the config itself.
+            protocol: cfg.base_net().protocol,
+            loss_rate: cfg.base_net().loss_rate,
             frames: records.len(),
             accuracy,
             mean_latency_ns,
@@ -388,6 +425,21 @@ pub(crate) fn costs(engine: &dyn InferenceBackend, cfg: &ScenarioConfig)
             cfg.kind,
             cfg.kind.tiers_needed(),
             cfg.tiers.len()
+        );
+    }
+    if cfg.hop_nets.is_empty() {
+        bail!("scenario {} has no hop_nets configured", cfg.kind);
+    }
+    // A single hop_nets entry is a template replicated to every hop; an
+    // explicit heterogeneous list must cover each inter-tier hop exactly.
+    let hops_needed = cfg.kind.tiers_needed().saturating_sub(1);
+    if cfg.hop_nets.len() > 1 && cfg.hop_nets.len() != hops_needed {
+        bail!(
+            "scenario {} has {} inter-tier hops but {} hop_nets entries \
+             (give one per hop, or a single template to replicate)",
+            cfg.kind,
+            hops_needed,
+            cfg.hop_nets.len()
         );
     }
     let down_bytes = (m.num_classes * 4) as u64;
@@ -538,7 +590,7 @@ pub fn run_scenario_open_loop(
     let up_bytes = costs.up_bytes.first().copied().unwrap_or(0);
     let edge_ma = costs.seg_mult_adds[0];
     let server_ma = costs.seg_mult_adds.last().copied().unwrap_or(0);
-    let mut channel = Channel::new(cfg.net.clone());
+    let mut channel = Channel::new(cfg.hop_net(0));
     let num_classes = engine.manifest().model.num_classes;
 
     // Pre-load the executables used by this scenario.
@@ -587,7 +639,7 @@ pub fn run_scenario_open_loop(
                 wire += up.wire_bytes();
                 retx += up.retransmits();
                 let mut input = x.clone();
-                if cfg.net.protocol == Protocol::Udp
+                if cfg.base_net().protocol == Protocol::Udp
                     && !up.lost_ranges().is_empty()
                 {
                     corrupted = true;
@@ -623,7 +675,7 @@ pub fn run_scenario_open_loop(
                 latency += up.latency_ns();
                 wire += up.wire_bytes();
                 retx += up.retransmits();
-                if cfg.net.protocol == Protocol::Udp
+                if cfg.base_net().protocol == Protocol::Udp
                     && !up.lost_ranges().is_empty()
                 {
                     corrupted = true;
@@ -682,7 +734,7 @@ pub fn simulate_latency_open_loop(
     let up_bytes = costs.up_bytes.first().copied().unwrap_or(0);
     let edge_ma = costs.seg_mult_adds[0];
     let server_ma = costs.seg_mult_adds.last().copied().unwrap_or(0);
-    let mut channel = Channel::new(cfg.net.clone());
+    let mut channel = Channel::new(cfg.hop_net(0));
     let mut out = Vec::with_capacity(n_frames);
     for i in 0..n_frames {
         channel.advance_to(i as SimTime * cfg.frame_period_ns);
@@ -842,6 +894,58 @@ mod tests {
         assert_ne!(cfg.hop_net(1).seed, cfg.hop_net(2).seed);
         assert_eq!(cfg.edge().name, "edge-gpu");
         assert_eq!(cfg.server().name, "server-gpu");
+    }
+
+    #[test]
+    fn heterogeneous_hop_nets_are_used_verbatim() {
+        let mut cfg = ScenarioConfig::two_tier(
+            ScenarioKind::Mc { cuts: vec![4, 11] },
+            NetworkConfig::wifi(Protocol::Udp, 0.05, 7),
+            DeviceProfile::sensor_npu(),
+            DeviceProfile::server_gpu(),
+            ModelScale::Slim,
+            0,
+        );
+        cfg.tiers.insert(1, DeviceProfile::edge_gpu());
+        cfg.hop_nets = vec![
+            NetworkConfig::wifi(Protocol::Udp, 0.05, 7),
+            NetworkConfig::gigabit(Protocol::Tcp, 0.0, 99),
+        ];
+        // Explicit entries come back verbatim — no seed derivation.
+        assert_eq!(cfg.hop_net(0).seed, 7);
+        assert_eq!(cfg.hop_net(0).protocol, Protocol::Udp);
+        assert_eq!(cfg.hop_net(1).seed, 99);
+        assert_eq!(cfg.hop_net(1).protocol, Protocol::Tcp);
+        assert_eq!(cfg.hop_net(1).capacity_bps, 1e9);
+        assert_eq!(cfg.base_net().protocol, Protocol::Udp);
+    }
+
+    #[test]
+    fn set_base_seed_reseeds_every_hop_deterministically() {
+        // Replicated template: the base takes the seed directly, so
+        // hop_net(h) still derives seed + h * stride.
+        let mut rep = ScenarioConfig::two_tier(
+            ScenarioKind::Rc,
+            NetworkConfig::gigabit(Protocol::Udp, 0.1, 1),
+            DeviceProfile::edge_gpu(),
+            DeviceProfile::server_gpu(),
+            ModelScale::Slim,
+            0,
+        );
+        rep.set_base_seed(5000);
+        assert_eq!(rep.hop_net(0).seed, 5000);
+        // Heterogeneous chain: each hop gets the derived seed verbatim —
+        // the same per-hop streams a replicated chain would draw.
+        let mut het = rep.clone();
+        het.kind = ScenarioKind::Mc { cuts: vec![4, 11] };
+        het.tiers.insert(1, DeviceProfile::edge_gpu());
+        het.hop_nets = vec![
+            NetworkConfig::wifi(Protocol::Udp, 0.1, 0),
+            NetworkConfig::gigabit(Protocol::Udp, 0.1, 0),
+        ];
+        het.set_base_seed(5000);
+        assert_eq!(het.hop_net(0).seed, 5000);
+        assert_eq!(het.hop_net(1).seed, rep.hop_net(1).seed);
     }
 
     #[test]

@@ -368,8 +368,9 @@ impl StreamReport {
     }
 }
 
-/// Run `cfg` once per seed (`cfg.scenario.net.seed = seed`) and merge the
-/// results into one pooled report — the streaming analogue of
+/// Run `cfg` once per seed (via [`ScenarioConfig::set_base_seed`], which
+/// re-derives every hop's channel seed) and merge the results into one
+/// pooled report — the streaming analogue of
 /// [`super::sweep::pooled_scenario`].
 pub fn pooled_stream(
     engine: &dyn InferenceBackend,
@@ -384,7 +385,7 @@ pub fn pooled_stream(
     let mut reports = Vec::with_capacity(seeds.len());
     for &seed in seeds {
         let mut c = cfg.clone();
-        c.scenario.net.seed = seed;
+        c.scenario.set_base_seed(seed);
         reports.push(run_stream(engine, &c, dataset, qos)?);
     }
     let k = reports.len();
@@ -653,11 +654,12 @@ impl<'a> Sim<'a> {
 
     // -- shared per-hop channel lanes --------------------------------------
 
-    /// Which transfer lane a (hop, direction) pair uses: TCP shares one
-    /// lane per hop (ACK entanglement serializes the hop), UDP gets one
-    /// lane per direction (full duplex).
+    /// Which transfer lane a (hop, direction) pair uses: a TCP hop shares
+    /// one lane (ACK entanglement serializes the hop), a UDP hop gets one
+    /// lane per direction (full duplex). With heterogeneous `hop_nets`
+    /// each hop follows *its own* channel's transport.
     fn lane_of(&self, hop: usize, dir: Dir) -> usize {
-        let local = match (self.cfg.scenario.net.protocol, dir) {
+        let local = match (self.channels[hop].cfg.protocol, dir) {
             (Protocol::Tcp, _) => 0,
             (Protocol::Udp, Dir::Up) => 0,
             (Protocol::Udp, Dir::Down) => 1,
@@ -705,7 +707,7 @@ impl<'a> Sim<'a> {
         self.frames[g].retransmits += res.retransmits();
         match dir {
             Dir::Up => {
-                if self.cfg.scenario.net.protocol == Protocol::Udp
+                if self.channels[hop].cfg.protocol == Protocol::Udp
                     && !res.lost_ranges().is_empty()
                 {
                     self.frames[g].corrupted = true;

@@ -175,7 +175,7 @@ pub fn suggest(
     for rank in ranked {
         let cfg = ScenarioConfig {
             kind: rank.kind.clone(),
-            net: net.clone(),
+            hop_nets: vec![net.clone()],
             tiers: match rank.kind {
                 // MC occupies the whole chain; the two-tier baselines run
                 // on its endpoints.

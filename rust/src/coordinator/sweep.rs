@@ -133,6 +133,15 @@ pub struct SweepSpec {
     /// Ordered cut chains added to the scenario axis as
     /// [`ScenarioKind::Mc`] entries (strictly increasing split ids).
     pub cut_chains: Vec<Vec<usize>>,
+    /// Explicit per-hop channel specs (sensor side first), each a
+    /// [`NetworkConfig::parse`] string (`wifi:udp:loss=0.01`,
+    /// `gigabit:tcp`, `radio@5e7+3000000`). Empty = the channel chain is
+    /// derived from the `protocols` × `channels` × `latencies_us` ×
+    /// `loss_rates` axes as usual. Non-empty, those four axes must be
+    /// single-valued (the hop list replaces them); a multi-entry list must
+    /// match every swept scenario's hop count. Any `seed=` segments are
+    /// overridden by the sweep's own seed schedule.
+    pub hop_nets: Vec<String>,
     // -- fixed parameters -------------------------------------------------
     pub edge: String,
     pub server: String,
@@ -174,6 +183,9 @@ pub struct SweepJob {
     pub offered_fps: Option<f64>,
     /// Device tier chain of this point (sensor side first).
     pub tiers: Vec<String>,
+    /// Explicit per-hop channel specs (empty = derived from the
+    /// protocol/channel/latency/loss fields above).
+    pub hop_nets: Vec<String>,
 }
 
 /// Resolve a channel-preset name into its [`NetworkConfig`].
@@ -211,6 +223,7 @@ impl SweepSpec {
             offered_fps: Vec::new(),
             tiers: Vec::new(),
             cut_chains: Vec::new(),
+            hop_nets: Vec::new(),
             edge: "edge-gpu".to_string(),
             server: "server-gpu".to_string(),
             dataset: "test".to_string(),
@@ -366,7 +379,47 @@ impl SweepSpec {
                 );
             }
         }
+        // Explicit per-hop channels go through the shared spec grammar and
+        // replace the four channel-derivation axes, which must then be
+        // single-valued (the grid would otherwise silently ignore them).
+        let hop0 = match self.hop_nets.first() {
+            Some(first) => {
+                for s in &self.hop_nets {
+                    NetworkConfig::parse(s).with_context(|| {
+                        format!("sweep spec '{}': hop_nets entry", self.name)
+                    })?;
+                }
+                if self.protocols.len() > 1
+                    || self.channels.len() > 1
+                    || self.loss_rates.len() > 1
+                    || self.latencies_us.len() > 1
+                {
+                    bail!(
+                        "sweep spec '{}': hop_nets pins every hop's channel \
+                         — drop the multi-valued protocols / channels / \
+                         loss_rates / latencies_us axes",
+                        self.name
+                    );
+                }
+                Some((first.clone(), NetworkConfig::parse(first)?))
+            }
+            None => None,
+        };
         let scenarios = self.effective_scenarios();
+        if self.hop_nets.len() > 1 {
+            for kind in &scenarios {
+                let hops = kind.tiers_needed().saturating_sub(1);
+                if hops != self.hop_nets.len() {
+                    bail!(
+                        "sweep spec '{}': scenario {kind} has {hops} \
+                         inter-tier hops but hop_nets lists {} channels \
+                         (give one per hop, or a single template)",
+                        self.name,
+                        self.hop_nets.len()
+                    );
+                }
+            }
+        }
         // MC cut ids must be in range for every arch on the grid — an
         // invalid spec fails here, not inside a worker thread mid-sweep.
         // (Per-arch cut-mark counts are scale-independent: the slim and
@@ -432,18 +485,48 @@ impl SweepSpec {
                                                         continue;
                                                     }
                                                 }
-                                                jobs.push(SweepJob {
-                                                    index: jobs.len(),
-                                                    kind: kind.clone(),
-                                                    protocol,
-                                                    channel: channel.clone(),
-                                                    latency_us,
-                                                    loss,
-                                                    scale,
-                                                    arch,
-                                                    clients,
-                                                    offered_fps,
-                                                    tiers: chain.clone(),
+                                                // With explicit hop_nets,
+                                                // the labelling columns
+                                                // come from hop 0 (the
+                                                // sensor uplink).
+                                                jobs.push(match &hop0 {
+                                                    Some((spec0, net0)) => {
+                                                        SweepJob {
+                                                            index: jobs.len(),
+                                                            kind: kind.clone(),
+                                                            protocol:
+                                                                net0.protocol,
+                                                            channel: spec0
+                                                                .clone(),
+                                                            latency_us: None,
+                                                            loss: net0
+                                                                .loss_rate,
+                                                            scale,
+                                                            arch,
+                                                            clients,
+                                                            offered_fps,
+                                                            tiers: chain
+                                                                .clone(),
+                                                            hop_nets: self
+                                                                .hop_nets
+                                                                .clone(),
+                                                        }
+                                                    }
+                                                    None => SweepJob {
+                                                        index: jobs.len(),
+                                                        kind: kind.clone(),
+                                                        protocol,
+                                                        channel: channel
+                                                            .clone(),
+                                                        latency_us,
+                                                        loss,
+                                                        scale,
+                                                        arch,
+                                                        clients,
+                                                        offered_fps,
+                                                        tiers: chain.clone(),
+                                                        hop_nets: Vec::new(),
+                                                    },
                                                 });
                                             }
                                         }
@@ -492,11 +575,11 @@ impl SweepSpec {
     /// the schema). The grid is validated eagerly, so an invalid spec
     /// fails here rather than inside a worker thread.
     pub fn from_json(text: &str) -> Result<SweepSpec> {
-        const KEYS: [&str; 26] = [
+        const KEYS: [&str; 27] = [
             "name", "mode", "scenarios", "protocols", "channels",
             "latencies_us", "loss_rates", "scales", "archs", "clients",
-            "offered_fps", "tiers", "cut_chains", "edge", "server",
-            "dataset", "frames", "seeds_per_point", "seed", "fps",
+            "offered_fps", "tiers", "cut_chains", "hop_nets", "edge",
+            "server", "dataset", "frames", "seeds_per_point", "seed", "fps",
             "frame_period_ns", "max_latency_ms", "min_accuracy",
             "min_hit_rate", "max_batch", "batch_wait_us",
         ];
@@ -570,6 +653,9 @@ impl SweepSpec {
                 .iter()
                 .map(|chain| chain.usize_vec())
                 .collect::<Result<_>>()?;
+        }
+        if let Some(v) = j.opt("hop_nets") {
+            spec.hop_nets = v.str_vec()?;
         }
         if let Some(v) = j.opt("max_batch") {
             spec.max_batch = v.u64()? as usize;
@@ -733,6 +819,12 @@ impl SweepSpec {
                         .collect(),
                 ),
             ),
+            (
+                "hop_nets",
+                json::arr(
+                    self.hop_nets.iter().map(|h| json::s(h)).collect(),
+                ),
+            ),
             ("edge", json::s(&self.edge)),
             ("server", json::s(&self.server)),
             ("dataset", json::s(&self.dataset)),
@@ -767,6 +859,8 @@ pub struct SweepPoint {
     pub offered_fps: Option<f64>,
     /// Device tier chain of this point (sensor side first).
     pub tiers: Vec<String>,
+    /// Explicit per-hop channel specs (empty = single derived channel).
+    pub hop_nets: Vec<String>,
     /// Total frames pooled into this point (clients × frames × seeds).
     pub frames: usize,
     /// Measured accuracy; `None` in latency-only sweeps.
@@ -806,7 +900,7 @@ pub fn pooled_scenario(
     let mut records = Vec::with_capacity(frames * seeds.len());
     for &seed in seeds {
         let mut c = cfg.clone();
-        c.net.seed = seed;
+        c.set_base_seed(seed);
         records.extend(run_scenario(engine, &c, dataset, frames, qos)?.records);
     }
     ScenarioReport::from_records(cfg, records, qos)
@@ -824,11 +918,22 @@ fn run_job(
     job: &SweepJob,
 ) -> Result<SweepPoint> {
     let qos = spec.qos();
-    let mut net =
-        channel_preset(&job.channel, job.protocol, job.loss, spec.seed)?;
-    if let Some(us) = job.latency_us {
-        net.latency_ns = (us * 1000.0) as SimTime;
-    }
+    let hop_nets: Vec<NetworkConfig> = if job.hop_nets.is_empty() {
+        let mut net =
+            channel_preset(&job.channel, job.protocol, job.loss, spec.seed)?;
+        if let Some(us) = job.latency_us {
+            net.latency_ns = (us * 1000.0) as SimTime;
+        }
+        vec![net]
+    } else {
+        // Explicit per-hop channels; their seeds are re-derived from the
+        // spec seed by pooled_stream, keeping the point deterministic in
+        // (spec, job) alone.
+        job.hop_nets
+            .iter()
+            .map(|s| NetworkConfig::parse(s))
+            .collect::<Result<_>>()?
+    };
     let tiers = job
         .tiers
         .iter()
@@ -841,7 +946,7 @@ fn run_job(
     let cfg = StreamConfig {
         scenario: ScenarioConfig {
             kind: job.kind.clone(),
-            net,
+            hop_nets,
             tiers,
             scale: job.scale,
             frame_period_ns,
@@ -873,6 +978,7 @@ fn run_job(
         clients: job.clients,
         offered_fps: job.offered_fps,
         tiers: job.tiers.clone(),
+        hop_nets: job.hop_nets.clone(),
         frames: r.frames,
         accuracy: r.accuracy,
         mean_latency_ns: r.mean_latency_ns,
@@ -977,6 +1083,7 @@ impl SweepReport {
             "clients",
             "offered_fps",
             "tiers",
+            "hop_nets",
             "frames",
             "accuracy",
             "mean_latency_ms",
@@ -1003,6 +1110,7 @@ impl SweepReport {
                 p.clients.to_string(),
                 p.offered_fps.map(|v| format!("{v}")).unwrap_or_default(),
                 p.tiers.join(">"),
+                p.hop_nets.join(">"),
                 p.frames.to_string(),
                 p.accuracy.map(|a| format!("{a:.4}")).unwrap_or_default(),
                 format!("{:.4}", p.mean_latency_ns / 1e6),
@@ -1132,6 +1240,10 @@ fn point_json(p: &SweepPoint) -> Json {
         (
             "tiers",
             json::arr(p.tiers.iter().map(|d| json::s(d)).collect()),
+        ),
+        (
+            "hop_nets",
+            json::arr(p.hop_nets.iter().map(|h| json::s(h)).collect()),
         ),
         ("frames", json::num(p.frames as f64)),
         ("accuracy", p.accuracy.map(json::num).unwrap_or(Json::Null)),
@@ -1501,6 +1613,65 @@ mod tests {
                 "tiers": [["sensor-npu", "edge-gpu", "server-gpu"]]}"#,
         )
         .is_err());
+    }
+
+    #[test]
+    fn hop_nets_replace_the_channel_axes_and_label_from_hop_zero() {
+        let mut spec = small_spec();
+        spec.scenarios = vec![ScenarioKind::Rc];
+        spec.protocols = vec![Protocol::Tcp];
+        spec.loss_rates = vec![0.0];
+        spec.hop_nets = vec!["wifi:udp:loss=0.02".into()];
+        let jobs = spec.expand().unwrap();
+        assert_eq!(jobs.len(), 1);
+        // The labelling columns come from hop 0, not the (single-valued)
+        // channel-derivation axes.
+        assert_eq!(jobs[0].protocol, Protocol::Udp);
+        assert_eq!(jobs[0].channel, "wifi:udp:loss=0.02");
+        assert!((jobs[0].loss - 0.02).abs() < 1e-12);
+        assert_eq!(jobs[0].hop_nets.len(), 1);
+        // A multi-entry chain must match every scenario's hop count.
+        spec.scenarios = Vec::new();
+        spec.cut_chains = vec![vec![5, 13]];
+        spec.tiers = vec![vec![
+            "sensor-npu".into(),
+            "edge-gpu".into(),
+            "server-gpu".into(),
+        ]];
+        spec.hop_nets = vec!["wifi:udp".into(), "gigabit:udp".into()];
+        assert!(spec.expand().is_ok());
+        spec.scenarios = vec![ScenarioKind::Rc]; // 1 hop, 2 entries
+        let err = spec.expand().unwrap_err().to_string();
+        assert!(err.contains("1 inter-tier hops"), "{err}");
+        assert!(err.contains("2 channels"), "{err}");
+        // hop_nets replaces the channel axes: multi-valued axes error.
+        let mut spec = small_spec();
+        spec.hop_nets = vec!["gigabit:tcp".into()];
+        assert!(spec.expand().is_err());
+        // Malformed channel specs fail eagerly.
+        let mut spec = small_spec();
+        spec.protocols = vec![Protocol::Tcp];
+        spec.loss_rates = vec![0.0];
+        spec.hop_nets = vec!["carrier-pigeon".into()];
+        assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn from_json_parses_hop_nets() {
+        let spec = SweepSpec::from_json(
+            r#"{"protocols": ["udp"], "loss_rates": [0.0],
+                "cut_chains": [[5, 13]],
+                "tiers": [["sensor-npu", "edge-gpu", "server-gpu"]],
+                "hop_nets": ["wifi:udp:loss=0.05", "gigabit:tcp"]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.hop_nets.len(), 2);
+        let jobs = spec.expand().unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].hop_nets.len(), 2);
+        let back = SweepSpec::from_json(&spec.to_json().to_string()).unwrap();
+        assert_eq!(back.hop_nets, spec.hop_nets);
+        assert_eq!(back.to_json().to_string(), spec.to_json().to_string());
     }
 
     #[test]

@@ -48,6 +48,7 @@ fn main() -> ExitCode {
         "summary" => cmd_summary(&rest),
         "cs-curve" => cmd_cs_curve(&rest),
         "suggest" => cmd_suggest(&rest),
+        "place" => cmd_place(&rest),
         "simulate" => cmd_simulate(&rest),
         "sweep" => cmd_sweep(&rest),
         "serve" => cmd_serve(&rest),
@@ -78,6 +79,7 @@ commands:
   summary    print the neural network summary and statistics (Tables I/II)
   cs-curve   compute the Cumulative Saliency curve via the backend
   suggest    rank candidate configurations and simulate them against QoS
+  place      search a fleet inventory for the best placement plan
   simulate   run one LC/RC/SC/MC scenario over the simulated channel(s)
   sweep      run a design-space grid in parallel, with a Pareto report
   serve      stream the ICE-Lab conveyor workload through a configuration
@@ -94,6 +96,15 @@ run `sei <command> --help` for options"
 }
 
 fn network_from(m: &sei::util::cli::Matches) -> Result<NetworkConfig> {
+    // `--net <spec>` is the one-string spelling (NetworkConfig::parse);
+    // a spec without an explicit `seed=` segment takes `--seed`.
+    if let Some(spec) = m.opt_str("net").filter(|s| !s.is_empty()) {
+        let mut net = NetworkConfig::parse(spec)?;
+        if !spec.contains("seed=") {
+            net.seed = m.u64("seed")?;
+        }
+        return Ok(net);
+    }
     let protocol = Protocol::parse(m.str("protocol"))?;
     let mut net = match m.str("channel") {
         "gigabit" => NetworkConfig::gigabit(protocol, 0.0, m.u64("seed")?),
@@ -108,6 +119,42 @@ fn network_from(m: &sei::util::cli::Matches) -> Result<NetworkConfig> {
         net.latency_ns = (lat.parse::<f64>()? * 1000.0) as u64;
     }
     Ok(net)
+}
+
+/// Per-hop channel chain: `--hop-nets a,b,...` (sensor side first) wins;
+/// otherwise the single `--net`/`--channel` template is replicated by the
+/// scenario engine with derived per-hop seeds. When no `--hop-nets` entry
+/// pins a `seed=`, the whole chain is reseeded from `--seed` (hop 0
+/// exact, later hops derived) so CLI runs stay reproducible.
+fn hop_nets_from(m: &sei::util::cli::Matches) -> Result<Vec<NetworkConfig>> {
+    let list = m.str("hop-nets");
+    if list.is_empty() {
+        return Ok(vec![network_from(m)?]);
+    }
+    let mut nets = Vec::new();
+    for part in list.split(',') {
+        if part.is_empty() {
+            bail!("--hop-nets has an empty element in '{list}'");
+        }
+        nets.push(
+            NetworkConfig::parse(part)
+                .with_context(|| format!("--hop-nets entry '{part}'"))?,
+        );
+    }
+    Ok(nets)
+}
+
+/// Apply the CLI seed policy after the scenario config is assembled (see
+/// [`hop_nets_from`]).
+fn reseed_from_cli(
+    cfg: &mut ScenarioConfig,
+    m: &sei::util::cli::Matches,
+) -> Result<()> {
+    let list = m.str("hop-nets");
+    if !list.is_empty() && !list.contains("seed=") {
+        cfg.set_base_seed(m.u64("seed")?);
+    }
+    Ok(())
 }
 
 /// Resolve the device tier chain: `--tiers a,b,c` wins; otherwise the
@@ -213,6 +260,14 @@ fn cmd_suggest(args: &[String]) -> Result<()> {
         .opt("channel", "gigabit", "gigabit | fast-ethernet | wifi")
         .opt("loss", "0.0", "packet loss rate")
         .opt("latency-us", "100", "channel latency, µs")
+        .opt("net", "",
+             "one-string channel spec, e.g. wifi:udp:loss=0.01 or \
+              radio@5e7+3000000 (overrides --channel/--protocol/--loss/\
+              --latency-us)")
+        .opt("fleet", "",
+             "FleetSpec JSON: also run the fleet placement search and \
+              print the winning plan (see `sei place`)")
+        .opt("threads", "1", "worker threads for the --fleet search")
         .opt("fps", "20", "required frames per second")
         .opt("min-accuracy", "0", "required accuracy in [0,1]")
         .opt("frames", "128", "frames to simulate per configuration")
@@ -241,8 +296,7 @@ fn cmd_suggest(args: &[String]) -> Result<()> {
         tiers.iter().map(|t| t.name.as_str()).collect::<Vec<_>>()
             .join(" -> ")
     );
-    println!("network: {} {} loss {:.1}%\n", m.str("channel"),
-             net.protocol, net.loss_rate * 100.0);
+    println!("network: {net}\n");
     let suggestions = coordinator::suggest(
         &*engine, &net, &tiers, &qos, &test, m.usize("frames")?,
         m.usize("min-layer")?,
@@ -266,6 +320,69 @@ fn cmd_suggest(args: &[String]) -> Result<()> {
     }
     if let Some(b) = coordinator::best(&suggestions) {
         println!("\nsuggested configuration: {}", b.rank.kind);
+    }
+    // Fleet integration: with `--fleet <spec>` the suggestion table is
+    // followed by the auto-placement search's winning plan.
+    if !m.str("fleet").is_empty() {
+        let outcome = run_placement(
+            m.str("fleet"),
+            m.str("artifacts"),
+            m.usize("threads")?.max(1),
+        )?;
+        println!("\nfleet placement ({}):", m.str("fleet"));
+        print!("{}", outcome.plan.render());
+    }
+    Ok(())
+}
+
+/// Shared `sei place` / `sei suggest --fleet` driver: load the fleet
+/// spec, build per-worker backends, run the search.
+fn run_placement(
+    spec_path: &str,
+    artifacts: &str,
+    threads: usize,
+) -> Result<coordinator::PlacementOutcome> {
+    let text = std::fs::read_to_string(spec_path)
+        .with_context(|| format!("reading fleet spec '{spec_path}'"))?;
+    let fleet = coordinator::FleetSpec::from_json(&text)?;
+    let dir = PathBuf::from(artifacts);
+    let factory = move |arch| load_backend_for(&dir, arch);
+    coordinator::place(&fleet, threads, &factory)
+}
+
+fn cmd_place(args: &[String]) -> Result<()> {
+    let m = Command::new(
+        "place",
+        "fleet-scale auto-placement: search tier chains x cut chains x \
+         per-hop channels for the plan satisfying the most streams",
+    )
+    .opt("artifacts", "artifacts", "artifacts directory")
+    .required("fleet", "FleetSpec JSON file (schema: ARCHITECTURE.md)")
+    .opt("threads", "1", "worker threads (plan is identical at any count)")
+    .opt("out", "", "write the winning PlacementPlan as JSON")
+    .parse(args)?;
+    let threads = m.usize("threads")?.max(1);
+    let t0 = std::time::Instant::now();
+    let outcome =
+        run_placement(m.str("fleet"), m.str("artifacts"), threads)?;
+    print!("{}", outcome.plan.render());
+    println!(
+        "search             {} candidates, {} simulated, {} pruned \
+         ({:.2}s on {threads} thread(s))",
+        outcome.candidates,
+        outcome.evaluated,
+        outcome.pruned,
+        t0.elapsed().as_secs_f64()
+    );
+    if !m.str("out").is_empty() {
+        let p = Path::new(m.str("out"));
+        if let Some(parent) = p.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(p, outcome.plan.to_json().to_string())?;
+        println!("wrote {}", m.str("out"));
     }
     Ok(())
 }
@@ -342,6 +459,12 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
         .opt("channel", "gigabit", "gigabit | fast-ethernet | wifi")
         .opt("loss", "0.0", "packet loss rate")
         .opt("latency-us", "100", "channel latency, µs")
+        .opt("net", "",
+             "one-string channel spec, e.g. wifi:udp:loss=0.01 \
+              (overrides --channel/--protocol/--loss/--latency-us)")
+        .opt("hop-nets", "",
+             "per-hop channel specs, comma-separated, sensor side first \
+              (mc@<k cuts> needs k specs; overrides --net)")
         .opt("frames", "256", "number of frames")
         .opt("fps", "20", "frame rate of the source (and QoS bound)")
         .opt("edge", "edge-gpu", "edge device profile")
@@ -354,16 +477,17 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
         .opt("seed", "42", "simulation seed")
         .parse(args)?;
     let engine = backend_from(&m)?;
-    let net = network_from(&m)?;
+    let hop_nets = hop_nets_from(&m)?;
     let tiers = tiers_from(&m)?;
     let qos = QosRequirements::with_fps(m.f64("fps")?)?;
-    let cfg = ScenarioConfig {
+    let mut cfg = ScenarioConfig {
         kind: ScenarioKind::parse(m.str("scenario"))?,
-        net,
+        hop_nets,
         tiers,
         scale: ModelScale::parse(m.str("scale"))?,
         frame_period_ns: (1e9 / m.f64("fps")?) as u64,
     };
+    reseed_from_cli(&mut cfg, &m)?;
     let ds = engine.dataset(m.str("dataset"))?;
     let report = coordinator::serve(&*engine, &cfg, &ds,
                                     m.usize("frames")?, &qos)?;
@@ -384,6 +508,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("channel", "gigabit", "gigabit | fast-ethernet | wifi")
         .opt("loss", "0.0", "packet loss rate")
         .opt("latency-us", "100", "channel latency, µs")
+        .opt("net", "",
+             "one-string channel spec, e.g. wifi:udp:loss=0.01 \
+              (overrides --channel/--protocol/--loss/--latency-us)")
+        .opt("hop-nets", "",
+             "per-hop channel specs, comma-separated, sensor side first \
+              (mc@<k cuts> needs k specs; overrides --net)")
         .opt("frames", "512", "frames per client")
         .opt("fps", "20", "per-client offered frame rate (and QoS bound)")
         .opt("clients", "1", "concurrent client streams")
@@ -398,7 +528,6 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("seed", "42", "simulation seed")
         .parse(args)?;
     let engine = backend_from(&m)?;
-    let net = network_from(&m)?;
     let tiers = tiers_from(&m)?;
     let qos = QosRequirements::with_fps(m.f64("fps")?)?;
     let clients = m.usize("clients")?;
@@ -409,13 +538,14 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         m.usize("max-batch")?,
         m.f64("batch-wait-us")?,
     )?;
-    let cfg = ScenarioConfig {
+    let mut cfg = ScenarioConfig {
         kind: ScenarioKind::parse(m.str("scenario"))?,
-        net,
+        hop_nets: hop_nets_from(&m)?,
         tiers,
         scale: ModelScale::Slim,
         frame_period_ns: (1e9 / m.f64("fps")?) as u64,
     };
+    reseed_from_cli(&mut cfg, &m)?;
     let ice = engine.dataset("ice")?;
     println!("ICE-Lab conveyor serving — platform {}", engine.platform());
     if clients > 1 || batch.max_batch > 1 {

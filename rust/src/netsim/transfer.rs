@@ -2,7 +2,7 @@
 //! message-level API the scenario engine drives (XMTR/RCVR in the paper's
 //! architecture).
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::event::SimTime;
 use super::link::{Link, LinkConfig, LinkStats, LossModel};
@@ -90,6 +90,101 @@ impl NetworkConfig {
         c
     }
 
+    /// Parse a channel spec string: `<base>[:tcp|udp][:loss=<f>][:seed=<u64>]`
+    /// where `<base>` is a built-in preset name (`gigabit | fast-ethernet |
+    /// wifi`) or a custom `name@<bw_bps>+<lat_ns>` pair (bandwidth accepts
+    /// scientific notation and sets both capacity and interface speed;
+    /// latency is integer nanoseconds, split at the *last* `+` so
+    /// explicit-plus exponents like `radio@5e+7+3000000` work). The
+    /// trailing segments may appear in any order; defaults are TCP,
+    /// loss 0, seed 0. Examples: `wifi:udp:loss=0.01:seed=7`,
+    /// `gigabit:tcp`, `radio@5e7+3000000:udp`.
+    ///
+    /// This is the one parse path behind CLI `--net` / `--hop-nets`, the
+    /// sweep spec's `hop_nets` axis, and `FleetSpec` links — the channel
+    /// twin of [`crate::model::DeviceProfile::parse`].
+    pub fn parse(spec: &str) -> Result<NetworkConfig> {
+        let mut parts = spec.split(':');
+        let base = parts.next().unwrap_or("");
+        let mut cfg = match base {
+            "gigabit" => Self::gigabit(Protocol::Tcp, 0.0, 0),
+            "fast-ethernet" => Self::fast_ethernet(Protocol::Tcp, 0.0, 0),
+            "wifi" => Self::wifi(Protocol::Tcp, 0.0, 0),
+            _ => {
+                let Some((name, rest)) = base.split_once('@') else {
+                    bail!(
+                        "unknown channel '{base}' in '{spec}' (built-ins: \
+                         gigabit | fast-ethernet | wifi; custom: \
+                         name@<bw_bps>+<lat_ns>)"
+                    );
+                };
+                if name.is_empty() {
+                    bail!("custom channel '{spec}' has an empty name");
+                }
+                let Some((bw, lat)) = rest.rsplit_once('+') else {
+                    bail!(
+                        "custom channel '{spec}' must be \
+                         name@<bw_bps>+<lat_ns>"
+                    );
+                };
+                let bw_bps: f64 = bw.parse().map_err(|_| {
+                    anyhow!("custom channel '{spec}': bad bandwidth '{bw}'")
+                })?;
+                if !bw_bps.is_finite() || bw_bps <= 0.0 {
+                    bail!("custom channel '{spec}': bandwidth must be positive");
+                }
+                let lat_ns: SimTime = lat.parse().map_err(|_| {
+                    anyhow!(
+                        "custom channel '{spec}': bad latency '{lat}' \
+                         (integer ns)"
+                    )
+                })?;
+                let mut c = Self::gigabit(Protocol::Tcp, 0.0, 0);
+                c.capacity_bps = bw_bps;
+                c.interface_bps = bw_bps;
+                c.latency_ns = lat_ns;
+                c
+            }
+        };
+        let (mut saw_proto, mut saw_loss, mut saw_seed) =
+            (false, false, false);
+        for part in parts {
+            if let Some(v) = part.strip_prefix("loss=") {
+                if saw_loss {
+                    bail!("channel '{spec}': duplicate loss= segment");
+                }
+                saw_loss = true;
+                let loss: f64 = v.parse().map_err(|_| {
+                    anyhow!("channel '{spec}': bad loss '{v}'")
+                })?;
+                if !(0.0..1.0).contains(&loss) {
+                    bail!("channel '{spec}': loss must be in [0, 1)");
+                }
+                cfg.loss_rate = loss;
+            } else if let Some(v) = part.strip_prefix("seed=") {
+                if saw_seed {
+                    bail!("channel '{spec}': duplicate seed= segment");
+                }
+                saw_seed = true;
+                cfg.seed = v.parse().map_err(|_| {
+                    anyhow!("channel '{spec}': bad seed '{v}' (integer)")
+                })?;
+            } else {
+                if saw_proto {
+                    bail!("channel '{spec}': duplicate protocol segment");
+                }
+                saw_proto = true;
+                cfg.protocol = Protocol::parse(part).map_err(|_| {
+                    anyhow!(
+                        "channel '{spec}': unknown segment '{part}' \
+                         (expected tcp | udp | loss=<f> | seed=<u64>)"
+                    )
+                })?;
+            }
+        }
+        Ok(cfg)
+    }
+
     fn link_config(&self) -> LinkConfig {
         LinkConfig {
             latency_ns: self.latency_ns,
@@ -99,6 +194,39 @@ impl NetworkConfig {
             loss_model: self.loss_model,
             jitter_ns: self.jitter_ns,
         }
+    }
+}
+
+impl std::fmt::Display for NetworkConfig {
+    /// Canonical channel spec string, re-parseable by
+    /// [`NetworkConfig::parse`]: a built-in preset name when bandwidth and
+    /// latency match one (interface speed equal to capacity), else
+    /// `custom@<bw_bps>+<lat_ns>`, always followed by the protocol, loss
+    /// and seed segments. Fields the spec grammar cannot express
+    /// (loss model, jitter, transport tuning) are not rendered.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let symmetric = self.interface_bps == self.capacity_bps;
+        if symmetric && self.capacity_bps == 1e9 && self.latency_ns == 100_000
+        {
+            f.write_str("gigabit")?;
+        } else if symmetric
+            && self.capacity_bps == 1e8
+            && self.latency_ns == 100_000
+        {
+            f.write_str("fast-ethernet")?;
+        } else if symmetric
+            && self.capacity_bps == 16e7
+            && self.latency_ns == 2_000_000
+        {
+            f.write_str("wifi")?;
+        } else {
+            write!(f, "custom@{}+{}", self.capacity_bps, self.latency_ns)?;
+        }
+        let proto = match self.protocol {
+            Protocol::Tcp => "tcp",
+            Protocol::Udp => "udp",
+        };
+        write!(f, ":{proto}:loss={}:seed={}", self.loss_rate, self.seed)
     }
 }
 
@@ -425,5 +553,105 @@ mod tests {
         let w = NetworkConfig::wifi(Protocol::Tcp, 0.0, 0);
         assert!(g.capacity_bps > f.capacity_bps);
         assert!(w.latency_ns > g.latency_ns);
+    }
+
+    #[test]
+    fn parse_accepts_presets_and_custom_specs() {
+        let w = NetworkConfig::parse("wifi:udp:loss=0.01:seed=7").unwrap();
+        assert_eq!(w.protocol, Protocol::Udp);
+        assert_eq!(w.capacity_bps, 16e7);
+        assert_eq!(w.latency_ns, 2_000_000);
+        assert_eq!(w.loss_rate, 0.01);
+        assert_eq!(w.seed, 7);
+        let g = NetworkConfig::parse("gigabit:tcp").unwrap();
+        assert_eq!(g.protocol, Protocol::Tcp);
+        assert_eq!(g.loss_rate, 0.0);
+        assert_eq!(g.seed, 0);
+        // Bare preset: TCP, loss 0, seed 0.
+        let b = NetworkConfig::parse("fast-ethernet").unwrap();
+        assert_eq!(b.capacity_bps, 1e8);
+        assert_eq!(b.protocol, Protocol::Tcp);
+        // Custom bandwidth+latency; explicit-plus exponents split at the
+        // last '+'. Segments compose in any order.
+        let c = NetworkConfig::parse("radio@5e+7+3000000:seed=3:udp").unwrap();
+        assert_eq!(c.capacity_bps, 5e7);
+        assert_eq!(c.interface_bps, 5e7);
+        assert_eq!(c.latency_ns, 3_000_000);
+        assert_eq!(c.protocol, Protocol::Udp);
+        assert_eq!(c.seed, 3);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "lan",                       // unknown preset
+            "radio@5e7",                 // no latency
+            "radio@fast+1",              // bad bandwidth
+            "radio@-5e7+1",              // negative bandwidth
+            "radio@5e7+1.5",             // fractional latency
+            "@5e7+1",                    // empty name
+            "gigabit:sctp",              // unknown protocol
+            "gigabit:loss=1.5",          // loss out of range
+            "gigabit:loss=x",            // bad loss
+            "gigabit:seed=-1",           // bad seed
+            "gigabit:tcp:udp",           // duplicate protocol
+            "gigabit:loss=0:loss=0.1",   // duplicate loss
+            "gigabit:seed=1:seed=2",     // duplicate seed
+        ] {
+            assert!(NetworkConfig::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn display_is_a_canonical_reparseable_spec() {
+        let w = NetworkConfig::wifi(Protocol::Udp, 0.08, 42);
+        assert_eq!(w.to_string(), "wifi:udp:loss=0.08:seed=42");
+        let c = NetworkConfig::parse("radio@5e7+3000000:udp:loss=0.1").unwrap();
+        assert_eq!(c.to_string(), "custom@50000000+3000000:udp:loss=0.1:seed=0");
+    }
+
+    #[test]
+    fn prop_channel_spec_roundtrips_display() {
+        use crate::util::propcheck::{check, Config};
+        check("channel spec round-trip", Config::default(), |c| {
+            let base = *c.choice(&[
+                "gigabit",
+                "fast-ethernet",
+                "wifi",
+                "custom",
+            ]);
+            let spec = if base == "custom" {
+                let bw = (c.f64(1e6, 1e10) / 1e3).round() * 1e3;
+                let lat: SimTime = c.sized_range(1, 100_000_000);
+                format!("edge-link@{bw}+{lat}")
+            } else {
+                base.to_string()
+            };
+            let proto = if c.bool() { "tcp" } else { "udp" };
+            let loss = (c.f64(0.0, 0.5) * 1e4).round() / 1e4;
+            let seed = c.sized_range(0, 1_000_000_000);
+            let spec = format!("{spec}:{proto}:loss={loss}:seed={seed}");
+            let cfg = NetworkConfig::parse(&spec)
+                .map_err(|e| format!("parse({spec}): {e}"))?;
+            let rt = NetworkConfig::parse(&cfg.to_string())
+                .map_err(|e| format!("reparse({cfg}): {e}"))?;
+            if rt.protocol != cfg.protocol
+                || rt.latency_ns != cfg.latency_ns
+                || rt.capacity_bps != cfg.capacity_bps
+                || rt.interface_bps != cfg.interface_bps
+                || rt.loss_rate != cfg.loss_rate
+                || rt.seed != cfg.seed
+            {
+                return Err(format!(
+                    "display '{cfg}' did not round-trip '{spec}'"
+                ));
+            }
+            if rt.to_string() != cfg.to_string() {
+                return Err(format!(
+                    "display not a fixpoint: '{cfg}' vs '{rt}'"
+                ));
+            }
+            Ok(())
+        });
     }
 }

@@ -44,7 +44,7 @@ fn three_tier(cuts: Vec<usize>, proto: Protocol, loss: f64)
 {
     ScenarioConfig {
         kind: ScenarioKind::Mc { cuts },
-        net: NetworkConfig::gigabit(proto, loss, 42),
+        hop_nets: vec![NetworkConfig::gigabit(proto, loss, 42)],
         tiers: vec![
             DeviceProfile::sensor_npu(),
             DeviceProfile::edge_gpu(),
@@ -220,6 +220,110 @@ fn slow_mid_tier_queues_like_any_bottleneck() {
     let overloaded =
         coordinator::simulate_latency(&*engine, &slow_cfg, 24).unwrap();
     assert!(overloaded.last().unwrap() > overloaded.first().unwrap());
+}
+
+#[test]
+fn heterogeneous_hop_nets_latency_sits_between_homogeneous_baselines() {
+    // wifi -> gigabit on a sensor -> edge -> cloud chain: the mixed
+    // channel assignment must cost strictly more than all-gigabit (its
+    // slow hop is real) and strictly less than all-wifi (its fast hop is
+    // real too).
+    let engine = engine_for(Arch::Vgg16);
+    let test = engine.dataset("test").unwrap();
+    let qos = QosRequirements::none();
+    let run = |hop_nets: Vec<NetworkConfig>| {
+        let cfg = ScenarioConfig {
+            kind: ScenarioKind::Mc { cuts: vec![5, 13] },
+            hop_nets,
+            tiers: vec![
+                DeviceProfile::sensor_npu(),
+                DeviceProfile::edge_gpu(),
+                DeviceProfile::server_gpu(),
+            ],
+            scale: ModelScale::Slim,
+            frame_period_ns: 50_000_000,
+        };
+        coordinator::run_scenario(&*engine, &cfg, &test, 16, &qos)
+            .unwrap()
+            .mean_latency_ns
+    };
+    let wifi = NetworkConfig::wifi(Protocol::Tcp, 0.0, 42);
+    let gigabit = NetworkConfig::gigabit(Protocol::Tcp, 0.0, 42);
+    let all_wifi = run(vec![wifi.clone()]);
+    let all_gigabit = run(vec![gigabit.clone()]);
+    let mixed = run(vec![wifi, gigabit]);
+    assert!(
+        all_gigabit < mixed && mixed < all_wifi,
+        "heterogeneous chain latency must sit strictly between the \
+         homogeneous baselines: gigabit {all_gigabit} | mixed {mixed} | \
+         wifi {all_wifi}"
+    );
+}
+
+#[test]
+fn single_entry_hop_nets_replicates_the_template_byte_identically() {
+    // The backward-compat rule: one hop_nets entry is a template — hop 0
+    // keeps its seed verbatim, deeper hops derive theirs. Spelling the
+    // derived per-hop channels out explicitly (ScenarioConfig::hop_net)
+    // must reproduce the template run byte-for-byte, for chains over
+    // every exported cut under both transports (UDP loss exercises the
+    // per-hop corruption RNG, so a seed regression cannot hide).
+    let engine = engine_for(Arch::Vgg16);
+    let test = engine.dataset("test").unwrap();
+    let qos = QosRequirements::none();
+    let splits = engine.manifest().available_splits();
+    for pair in splits.windows(2) {
+        for (proto, loss) in [(Protocol::Tcp, 0.03), (Protocol::Udp, 0.10)]
+        {
+            let template = three_tier(pair.to_vec(), proto, loss);
+            let explicit = ScenarioConfig {
+                hop_nets: (0..2).map(|h| template.hop_net(h)).collect(),
+                ..template.clone()
+            };
+            let a = coordinator::run_scenario(
+                &*engine, &template, &test, 12, &qos,
+            )
+            .unwrap();
+            let b = coordinator::run_scenario(
+                &*engine, &explicit, &test, 12, &qos,
+            )
+            .unwrap();
+            assert_eq!(a.accuracy, b.accuracy, "{pair:?} {proto}");
+            for (i, (x, y)) in a.records.iter().zip(&b.records).enumerate()
+            {
+                assert_eq!(x.latency_ns, y.latency_ns, "{pair:?} frame {i}");
+                assert_eq!(x.completed_ns, y.completed_ns);
+                assert_eq!(x.wire_bytes, y.wire_bytes);
+                assert_eq!(x.retransmits, y.retransmits);
+                assert_eq!(x.corrupted, y.corrupted);
+                assert_eq!(x.correct, y.correct);
+            }
+        }
+    }
+}
+
+#[test]
+fn fleet_placement_smoke_is_thread_count_invariant() {
+    // The shipped example fleet: the search returns a plan, and the plan
+    // JSON is byte-identical at 1 and 8 worker threads (CI re-checks this
+    // through the CLI).
+    let text = std::fs::read_to_string(
+        Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("../examples/specs/fleet.json"),
+    )
+    .expect("examples/specs/fleet.json");
+    let mut fleet = coordinator::FleetSpec::from_json(&text).unwrap();
+    fleet.frames = 6; // keep the smoke fast; determinism is the point
+    let factory = |arch| load_backend_for(Path::new("artifacts"), arch);
+    let one = coordinator::place(&fleet, 1, &factory).unwrap();
+    let eight = coordinator::place(&fleet, 8, &factory).unwrap();
+    assert_eq!(
+        one.plan.to_json().to_string(),
+        eight.plan.to_json().to_string(),
+        "placement plan must not depend on the thread count"
+    );
+    assert!(one.plan.satisfied >= 1, "example fleet must serve a stream");
+    assert_eq!(one.plan.hop_links.len(), one.plan.cuts.len());
 }
 
 #[test]
