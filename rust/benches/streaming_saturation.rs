@@ -1,29 +1,94 @@
 //! Bench: saturation behaviour + engine speed of the closed-loop
-//! streaming simulator.
+//! streaming simulator, plus the multi-tenant event-calendar scaling run.
 //!
-//! Drives a 4-client paper-scale RC deployment through an offered-load
-//! ladder, records the achieved throughput / latency / queue depth at
-//! each point, and checks the closed-loop contract: past the bottleneck
-//! the throughput plateaus while mean and p99 latency grow. Also reports
-//! the simulator's own speed (simulated frames per wall-second).
+//! Part 1 drives a 4-client paper-scale RC deployment through an
+//! offered-load ladder, records the achieved throughput / latency /
+//! queue depth at each point, and checks the closed-loop contract: past
+//! the bottleneck the throughput plateaus while mean and p99 latency
+//! grow. Also reports the simulator's own speed (simulated frames per
+//! wall-second).
+//!
+//! Part 2 measures the discrete-event core itself: a heterogeneous
+//! tenant population (archs × RC/SC placements, slow periodic sources so
+//! every pending stream keeps a timer in the event queue) is run once on
+//! the indexed event calendar and once on the retained linear-scan
+//! backend at 10⁴ streams, asserting the calendar sustains >= 10× the
+//! events/second; full mode additionally scales the calendar alone to
+//! 10⁵ streams. The events/second figures land in the JSON document that
+//! CI gates against `benches/baselines/streaming_events.json`.
 //!
 //! Environment knobs (same contract as `netsim_micro`):
-//!   SEI_BENCH_QUICK=1      fewer frames per point
-//!   SEI_BENCH_JSON=<path>  also write the curve as machine-readable JSON
-//!     (CI uploads it as BENCH_streaming.json)
+//!   SEI_BENCH_QUICK=1      fewer frames per point, skip the 10⁵ run
+//!   SEI_BENCH_JSON=<path>  also write the results as machine-readable
+//!     JSON (CI uploads it as BENCH_streaming.json)
 
 use std::path::Path;
 use std::time::Instant;
 
 use sei::coordinator::batcher::BatchPolicy;
 use sei::coordinator::{
-    run_stream, ModelScale, QosRequirements, ScenarioConfig, ScenarioKind,
+    run_hetero_stream, run_stream, ClientSpec, Fairness, ModelScale,
+    MultiStreamConfig, QosRequirements, ScenarioConfig, ScenarioKind,
     StreamConfig,
 };
-use sei::model::DeviceProfile;
+use sei::model::{Arch, DeviceProfile};
 use sei::netsim::transfer::{NetworkConfig, Protocol};
-use sei::runtime::load_backend;
+use sei::netsim::QueueKind;
+use sei::runtime::{load_backend, load_backend_for, InferenceBackend};
 use sei::util::json::{self, Json};
+
+/// A heterogeneous tenant population: architectures and placements cycle
+/// per client, every source is slow-periodic (so between its frames the
+/// stream parks exactly one pending Emit timer in the event queue — the
+/// regime where the linear next-event scan degenerates to O(streams) per
+/// pop) and emits two frames.
+fn mixed_clients(n: usize) -> Vec<ClientSpec> {
+    let archs = [Arch::Vgg16, Arch::ResNet18, Arch::MobileNetV2];
+    (0..n)
+        .map(|i| {
+            let kind = if i % 2 == 0 {
+                ScenarioKind::Rc
+            } else {
+                ScenarioKind::Sc { split: 5 }
+            };
+            let mut c = ClientSpec::new(kind);
+            c.arch = archs[i % archs.len()];
+            c.scale = ModelScale::Slim;
+            // 1 frame per minute per stream: aggregate load stays far
+            // below every resource's capacity even at 10⁵ streams, so
+            // admission keeps all of them.
+            c.frame_period_ns = 60_000_000_000;
+            c.frames = 2;
+            c.weight = 1 + 3 * (i % 4 == 0) as u64;
+            c
+        })
+        .collect()
+}
+
+/// Run `n` mixed tenants on the chosen event-queue backend
+/// (latency-only: no model execution) and return
+/// (events processed, events per wall-second, admitted streams).
+fn hetero_events_run(
+    engines: &[(Arch, &dyn InferenceBackend)],
+    n: usize,
+    queue: QueueKind,
+) -> (u64, f64, usize) {
+    let cfg = MultiStreamConfig {
+        clients: mixed_clients(n),
+        hop_nets: vec![NetworkConfig::gigabit(Protocol::Udp, 0.0, 11)],
+        tiers: vec![DeviceProfile::edge_gpu(), DeviceProfile::server_gpu()],
+        batch: BatchPolicy::immediate(),
+        fairness: Fairness::Drr,
+        admission: true,
+        queue,
+    };
+    let t0 = Instant::now();
+    let report = run_hetero_stream(engines, &cfg, None, &QosRequirements::none())
+        .expect("hetero stream");
+    let wall = t0.elapsed().as_secs_f64();
+    let events = report.aggregate.stats.events_processed;
+    (events, events as f64 / wall.max(1e-9), report.admitted())
+}
 
 fn main() {
     let quick = std::env::var("SEI_BENCH_QUICK").is_ok();
@@ -104,6 +169,68 @@ fn main() {
     assert!(latency_grows, "latency must grow under overload");
     assert!(thr_capped, "overloaded throughput must cap at the bottleneck");
 
+    // ---- Part 2: event-calendar scaling over heterogeneous tenants ----
+    let backends: Vec<(Arch, Box<dyn InferenceBackend>)> =
+        [Arch::Vgg16, Arch::ResNet18, Arch::MobileNetV2]
+            .into_iter()
+            .map(|a| {
+                (a, load_backend_for(Path::new("artifacts"), a)
+                    .expect("backend"))
+            })
+            .collect();
+    let engines: Vec<(Arch, &dyn InferenceBackend)> =
+        backends.iter().map(|(a, b)| (*a, &**b)).collect();
+
+    let n_quick = 10_000usize;
+    println!(
+        "\n=== event calendar vs linear scan @ {n_quick} heterogeneous \
+         streams ==="
+    );
+    let (ev_cal, rate_cal, adm_cal) =
+        hetero_events_run(&engines, n_quick, QueueKind::Calendar);
+    let (ev_lin, rate_lin, adm_lin) =
+        hetero_events_run(&engines, n_quick, QueueKind::LinearScan);
+    println!(
+        "  calendar    {:>12} events  {:>14.0} events/s  ({adm_cal} \
+         admitted)",
+        ev_cal, rate_cal
+    );
+    println!(
+        "  linear scan {:>12} events  {:>14.0} events/s  ({adm_lin} \
+         admitted)",
+        ev_lin, rate_lin
+    );
+    let speedup = rate_cal / rate_lin.max(1e-9);
+    println!("  speedup     {speedup:>12.1}x");
+    assert_eq!(adm_cal, n_quick, "all streams must be admitted");
+    assert_eq!(
+        ev_cal, ev_lin,
+        "both backends must process the same event count"
+    );
+    assert!(
+        speedup >= 10.0,
+        "calendar must be >= 10x faster than the linear scan at \
+         {n_quick} streams, got {speedup:.1}x"
+    );
+
+    let full_scale = if quick {
+        None
+    } else {
+        let n_full = 100_000usize;
+        println!(
+            "\n=== event calendar @ {n_full} heterogeneous streams ==="
+        );
+        let (ev, rate, adm) =
+            hetero_events_run(&engines, n_full, QueueKind::Calendar);
+        println!(
+            "  calendar    {:>12} events  {:>14.0} events/s  ({adm} \
+             admitted)",
+            ev, rate
+        );
+        assert_eq!(adm, n_full, "all streams must be admitted");
+        Some((n_full, ev, rate))
+    };
+
     if let Ok(path) = std::env::var("SEI_BENCH_JSON") {
         let entries: Vec<Json> = rows
             .iter()
@@ -118,12 +245,25 @@ fn main() {
                 ])
             })
             .collect();
+        let mut events = vec![
+            ("streams", json::num(n_quick as f64)),
+            ("calendar_events", json::num(ev_cal as f64)),
+            ("calendar_events_per_sec", json::num(rate_cal)),
+            ("linear_scan_events_per_sec", json::num(rate_lin)),
+            ("speedup", json::num(speedup)),
+        ];
+        if let Some((n_full, ev, rate)) = full_scale {
+            events.push(("streams_full", json::num(n_full as f64)));
+            events.push(("calendar_events_full", json::num(ev as f64)));
+            events.push(("calendar_events_per_sec_full", json::num(rate)));
+        }
         let doc = json::obj(vec![
             ("bench", json::s("streaming_saturation")),
             ("quick", Json::Bool(quick)),
             ("clients", json::num(clients as f64)),
             ("frames_per_client", json::num(frames as f64)),
             ("curve", json::arr(entries)),
+            ("events", json::obj(events)),
         ]);
         std::fs::write(&path, doc.to_string()).expect("write bench json");
         println!("\nwrote {path}");

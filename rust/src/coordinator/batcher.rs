@@ -159,6 +159,100 @@ impl Batcher {
     }
 }
 
+/// A fairness-aware variant of [`Batcher`] for multi-tenant serving: same
+/// size-or-deadline release triggers, same counters, same id assignment
+/// (ids are dense in offer order — the streaming engine maps them back to
+/// frames), but each released batch orders its requests by deficit round
+/// robin over the offering clients instead of pure arrival order.
+///
+/// Because `offer` releases the moment the queue reaches `max_batch`, the
+/// pending set never exceeds one batch and every release drains it — so
+/// the *membership* of each batch matches [`Batcher`] exactly; DRR only
+/// decides the within-batch service order (which drives the order the
+/// server's results re-enter the shared downlink lanes).
+pub struct DrrBatcher {
+    policy: BatchPolicy,
+    /// Pending requests in offer order, tagged with the offering client.
+    queue: Vec<(usize, Request)>,
+    weights: Vec<u64>,
+    next_id: u64,
+    pub batches_released: u64,
+    pub requests_seen: u64,
+}
+
+impl DrrBatcher {
+    /// `weights[c]` scales client `c`'s share of each batch's head
+    /// positions (minimum 1 enforced by the scheduler).
+    pub fn new(policy: BatchPolicy, weights: Vec<u64>) -> Self {
+        DrrBatcher {
+            policy,
+            queue: Vec::new(),
+            weights,
+            next_id: 0,
+            batches_released: 0,
+            requests_seen: 0,
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Offer a request from `client` at simulated time `now`.
+    pub fn offer(&mut self, client: usize, now: SimTime) -> Option<Batch> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.requests_seen += 1;
+        self.queue.push((client, Request { id, arrival_ns: now }));
+        if self.queue.len() >= self.policy.max_batch {
+            return Some(self.release(now));
+        }
+        None
+    }
+
+    /// Deadline of the oldest pending request (offer order = arrival
+    /// order, so the first entry is the oldest).
+    pub fn deadline(&self) -> Option<SimTime> {
+        self.queue
+            .first()
+            .map(|(_, r)| r.arrival_ns + self.policy.max_wait_ns)
+    }
+
+    pub fn poll(&mut self, now: SimTime) -> Option<Batch> {
+        match self.deadline() {
+            Some(d) if now >= d && !self.queue.is_empty() => {
+                Some(self.release(now))
+            }
+            _ => None,
+        }
+    }
+
+    pub fn flush(&mut self, now: SimTime) -> Option<Batch> {
+        if self.queue.is_empty() {
+            None
+        } else {
+            Some(self.release(now))
+        }
+    }
+
+    fn release(&mut self, now: SimTime) -> Batch {
+        self.batches_released += 1;
+        // Unit cost + quantum 1 turns DRR into weighted round robin over
+        // the offering clients; ring order follows first appearance in the
+        // batch, so the ordering is deterministic.
+        let mut drr =
+            super::drr::DrrQueue::new(&self.weights, 1);
+        for (client, req) in self.queue.drain(..) {
+            drr.push(client, 1, req);
+        }
+        let mut requests = Vec::with_capacity(drr.len());
+        while let Some(req) = drr.pop() {
+            requests.push(req);
+        }
+        Batch { requests, released_ns: now }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -237,6 +331,63 @@ mod tests {
         }
         assert_eq!(b.requests_seen, 6);
         assert_eq!(b.batches_released, 3);
+    }
+
+    #[test]
+    fn drr_batcher_matches_fifo_membership_and_triggers() {
+        // Same offer sequence into both batchers: identical release
+        // points, identical batch membership (as id sets), identical
+        // counters — only the within-batch order may differ.
+        let policy = BatchPolicy::new(4, 1_000);
+        let mut fifo = Batcher::new(policy);
+        let mut drr = DrrBatcher::new(policy, vec![1, 1, 1]);
+        for (i, t) in [0u64, 5, 10, 15, 100, 105, 110, 115].iter()
+            .enumerate()
+        {
+            let a = fifo.offer(*t);
+            let b = drr.offer(i % 3, *t);
+            assert_eq!(a.is_some(), b.is_some());
+            if let (Some(a), Some(b)) = (a, b) {
+                let mut ia: Vec<u64> =
+                    a.requests.iter().map(|r| r.id).collect();
+                let mut ib: Vec<u64> =
+                    b.requests.iter().map(|r| r.id).collect();
+                ia.sort_unstable();
+                ib.sort_unstable();
+                assert_eq!(ia, ib);
+                assert_eq!(a.released_ns, b.released_ns);
+            }
+        }
+        assert_eq!(fifo.requests_seen, drr.requests_seen);
+        assert_eq!(fifo.batches_released, drr.batches_released);
+        assert_eq!(fifo.deadline(), drr.deadline());
+    }
+
+    #[test]
+    fn drr_batcher_interleaves_clients_within_a_batch() {
+        // Client 0 offers three requests, client 1 one: DRR puts client
+        // 1's request second, not last.
+        let mut b = DrrBatcher::new(BatchPolicy::new(4, 1_000), vec![1, 1]);
+        assert!(b.offer(0, 0).is_none());
+        assert!(b.offer(0, 1).is_none());
+        assert!(b.offer(0, 2).is_none());
+        let batch = b.offer(1, 3).expect("size trigger");
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 3, 1, 2]);
+    }
+
+    #[test]
+    fn drr_batcher_deadline_release() {
+        let mut b =
+            DrrBatcher::new(BatchPolicy::new(16, 1_000), vec![1, 1]);
+        b.offer(0, 0);
+        b.offer(1, 500);
+        assert_eq!(b.pending(), 2);
+        assert!(b.poll(999).is_none());
+        let batch = b.poll(1_000).expect("deadline trigger");
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.pending(), 0);
+        assert!(b.flush(2_000).is_none());
     }
 
     /// Property: no released request ever waits longer than max_wait (when

@@ -1,0 +1,214 @@
+//! Deficit-round-robin (DRR) scheduling for the shared tiers of the
+//! multi-tenant streaming engine.
+//!
+//! With FIFO service at a shared lane or device, one aggressive stream can
+//! starve every other tenant: its backlog sits at the head of the queue and
+//! light streams wait behind the full burst. DRR (Shreedhar & Varghese,
+//! SIGCOMM '95) bounds that: each active client queue holds a *deficit
+//! counter*; a queue at the head of the active ring may serve items while
+//! their cost fits its deficit, the deficit grows by `weight × quantum`
+//! per round, and unserved queues keep their credit. With `quantum` at
+//! least the maximum item cost, every active client is guaranteed service
+//! proportional to its weight per round — the classic O(1) fairness bound.
+//!
+//! Cost units are per-resource: bytes at the network lanes, mult-adds at
+//! the compute tiers, and 1 per request at the batcher (pure round-robin).
+
+use std::collections::VecDeque;
+
+/// A multi-client queue served in deficit-round-robin order.
+///
+/// Items are `(cost, payload)` per client; `pop` returns payloads in DRR
+/// order. Deterministic: ring order is a pure function of the push/pop
+/// sequence, so simulations stay replayable.
+pub struct DrrQueue<T> {
+    queues: Vec<VecDeque<(u64, T)>>,
+    deficit: Vec<u64>,
+    weight: Vec<u64>,
+    quantum: u64,
+    /// Active clients in service order; `ring[0]` is being served.
+    ring: VecDeque<usize>,
+    in_ring: Vec<bool>,
+    len: usize,
+}
+
+impl<T> DrrQueue<T> {
+    /// One queue per client. `weights[c]` scales client `c`'s share
+    /// (minimum 1 is enforced); `quantum` should be at least the maximum
+    /// single-item cost for the one-item-per-round service guarantee
+    /// (minimum 1 is enforced so the scheduler always makes progress).
+    pub fn new(weights: &[u64], quantum: u64) -> Self {
+        let n = weights.len();
+        DrrQueue {
+            queues: (0..n).map(|_| VecDeque::new()).collect(),
+            deficit: vec![0; n],
+            weight: weights.iter().map(|&w| w.max(1)).collect(),
+            quantum: quantum.max(1),
+            ring: VecDeque::new(),
+            in_ring: vec![false; n],
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Enqueue `item` for `client` with the given service cost. A newly
+    /// active client joins the back of the ring with zero deficit (credit
+    /// never accumulates while idle).
+    pub fn push(&mut self, client: usize, cost: u64, item: T) {
+        self.queues[client].push_back((cost, item));
+        self.len += 1;
+        if !self.in_ring[client] {
+            self.in_ring[client] = true;
+            self.deficit[client] = 0;
+            self.ring.push_back(client);
+        }
+    }
+
+    /// Dequeue the next item in DRR order.
+    pub fn pop(&mut self) -> Option<T> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            let c = *self.ring.front().expect("len > 0 with empty ring");
+            let head_cost =
+                self.queues[c].front().expect("ringed client empty").0;
+            if head_cost <= self.deficit[c] {
+                let (cost, item) =
+                    self.queues[c].pop_front().expect("checked front");
+                self.deficit[c] -= cost;
+                self.len -= 1;
+                if self.queues[c].is_empty() {
+                    // Leaving the ring forfeits remaining credit.
+                    self.deficit[c] = 0;
+                    self.in_ring[c] = false;
+                    self.ring.pop_front();
+                }
+                return Some(item);
+            }
+            // Head item does not fit: credit one round and move to the
+            // back of the ring. Deficit grows monotonically, so any finite
+            // cost is eventually served — no livelock.
+            self.deficit[c] = self.deficit[c]
+                .saturating_add(self.weight[c].saturating_mul(self.quantum));
+            self.ring.rotate_left(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_pops_none() {
+        let mut q: DrrQueue<u32> = DrrQueue::new(&[1, 1], 10);
+        assert!(q.is_empty());
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn single_client_is_fifo() {
+        let mut q = DrrQueue::new(&[1], 4);
+        for i in 0..5u32 {
+            q.push(0, 1, i);
+        }
+        let out: Vec<u32> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn unit_costs_equal_weights_round_robin() {
+        // Client 0 has a deep backlog, client 1 a shallow one: with unit
+        // costs, equal weights and quantum >= cost, service strictly
+        // alternates — the backlog cannot starve the light client.
+        let mut q = DrrQueue::new(&[1, 1], 1);
+        for i in 0..6u32 {
+            q.push(0, 1, 100 + i);
+        }
+        for i in 0..3u32 {
+            q.push(1, 1, 200 + i);
+        }
+        let out: Vec<u32> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(
+            out,
+            vec![100, 200, 101, 201, 102, 202, 103, 104, 105]
+        );
+    }
+
+    #[test]
+    fn weights_scale_service_share() {
+        // Weight 2 vs 1 with unit costs: per round, client 0 serves two
+        // items for each one of client 1.
+        let mut q = DrrQueue::new(&[2, 1], 1);
+        for i in 0..8u32 {
+            q.push(0, 1, i);
+        }
+        for i in 0..4u32 {
+            q.push(1, 1, 100 + i);
+        }
+        let out: Vec<u32> = std::iter::from_fn(|| q.pop()).collect();
+        // First 6 services: client 0 gets 4, client 1 gets 2.
+        let head = &out[..6];
+        let c0 = head.iter().filter(|&&x| x < 100).count();
+        assert_eq!(c0, 4, "{out:?}");
+    }
+
+    #[test]
+    fn starvation_bound_under_heavy_skew() {
+        // 100:1 backlog skew with quantum = max cost: the light client is
+        // served at least once per round, i.e. its single item departs
+        // within 2 services of joining the ring — not after the heavy
+        // client's 100-item burst.
+        let mut q = DrrQueue::new(&[1, 1], 5);
+        for i in 0..100u32 {
+            q.push(0, 5, i);
+        }
+        q.push(1, 5, 9999);
+        let mut served_at = None;
+        for k in 0..102 {
+            let item = q.pop().unwrap();
+            if item == 9999 {
+                served_at = Some(k);
+                break;
+            }
+        }
+        assert!(
+            served_at.unwrap() <= 2,
+            "light client starved: served at position {served_at:?}"
+        );
+    }
+
+    #[test]
+    fn oversized_items_still_make_progress() {
+        // An item costing far more than weight*quantum needs several
+        // credit rounds but is eventually served.
+        let mut q = DrrQueue::new(&[1, 1], 2);
+        q.push(0, 1000, 7u32);
+        q.push(1, 1, 8u32);
+        let a = q.pop().unwrap();
+        let b = q.pop().unwrap();
+        assert_eq!({ let mut v = vec![a, b]; v.sort(); v }, vec![7, 8]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn idle_clients_do_not_hoard_credit() {
+        let mut q = DrrQueue::new(&[1, 1], 1);
+        q.push(0, 1, 1u32);
+        assert_eq!(q.pop(), Some(1));
+        // Client 0 went idle; re-arrival starts from zero deficit and the
+        // back of the ring.
+        q.push(1, 1, 2);
+        q.push(0, 1, 3);
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+}

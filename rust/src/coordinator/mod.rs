@@ -7,6 +7,7 @@
 
 pub mod batcher;
 pub mod corruption;
+pub mod drr;
 pub mod hil;
 pub mod placement;
 pub mod qos;
@@ -28,12 +29,15 @@ pub use scenario::{
     run_scenario, simulate_latency, ModelScale, ScenarioConfig, ScenarioKind,
     ScenarioReport,
 };
-pub use serve::{serve, ServeReport};
+pub use serve::{serve, serve_clients, HeteroServeReport, ServeReport};
 pub use streaming::{
-    pooled_stream, run_stream, StreamConfig, StreamReport,
+    parse_clients_spec, pooled_hetero_stream, pooled_stream,
+    run_hetero_stream, run_stream, run_stream_with_queue, ClientOutcome,
+    ClientSpec, Fairness, HeteroStreamReport, MultiStreamConfig,
+    StreamConfig, StreamFrameRecord, StreamReport,
 };
 pub use suggest::{best, rank_configurations, suggest, Suggestion};
 pub use sweep::{
-    pooled_scenario, run_sweep, SweepJob, SweepMode, SweepPoint, SweepReport,
-    SweepSpec,
+    pooled_scenario, run_sweep, ClientMix, SweepJob, SweepMode, SweepPoint,
+    SweepReport, SweepSpec,
 };

@@ -61,6 +61,39 @@ impl QosRequirements {
         })
     }
 
+    /// Build requirements from optional parsed bounds (the clients-spec /
+    /// sweep JSON form), validating each: a latency bound must be a
+    /// positive finite millisecond count, accuracy in [0, 1], hit-rate in
+    /// (0, 1]. All `None` yields [`QosRequirements::none`].
+    pub fn from_bounds(
+        max_latency_ms: Option<f64>,
+        min_accuracy: Option<f64>,
+        min_hit_rate: Option<f64>,
+    ) -> Result<Self> {
+        let mut q = QosRequirements::none();
+        if let Some(ms) = max_latency_ms {
+            if !ms.is_finite() || ms <= 0.0 {
+                bail!(
+                    "max_latency_ms must be a positive number, got {ms}"
+                );
+            }
+            q.max_latency_ns = Some(from_secs(ms / 1e3));
+        }
+        if let Some(a) = min_accuracy {
+            if !a.is_finite() || !(0.0..=1.0).contains(&a) {
+                bail!("min_accuracy must be in [0, 1], got {a}");
+            }
+            q.min_accuracy = Some(a);
+        }
+        if let Some(h) = min_hit_rate {
+            if !h.is_finite() || h <= 0.0 || h > 1.0 {
+                bail!("min_hit_rate must be in (0, 1], got {h}");
+            }
+            q.min_hit_rate = h;
+        }
+        Ok(q)
+    }
+
     pub fn and_accuracy(mut self, min: f64) -> Self {
         self.min_accuracy = Some(min);
         self
@@ -197,5 +230,35 @@ mod tests {
     #[should_panic]
     fn hit_rate_threshold_validated() {
         let _ = QosRequirements::ice_lab().and_hit_rate(0.0);
+    }
+
+    #[test]
+    fn from_bounds_validates_each_field() {
+        let q = QosRequirements::from_bounds(None, None, None).unwrap();
+        assert!(q.max_latency_ns.is_none() && q.min_accuracy.is_none());
+        assert_eq!(q.min_hit_rate, 1.0);
+
+        let q = QosRequirements::from_bounds(
+            Some(50.0),
+            Some(0.9),
+            Some(0.95),
+        )
+        .unwrap();
+        assert_eq!(q.max_latency_ns, Some(50_000_000));
+        assert_eq!(q.min_accuracy, Some(0.9));
+        assert_eq!(q.min_hit_rate, 0.95);
+
+        assert!(QosRequirements::from_bounds(Some(0.0), None, None)
+            .is_err());
+        assert!(QosRequirements::from_bounds(Some(f64::NAN), None, None)
+            .is_err());
+        assert!(QosRequirements::from_bounds(None, Some(1.5), None)
+            .is_err());
+        assert!(QosRequirements::from_bounds(None, Some(-0.1), None)
+            .is_err());
+        assert!(QosRequirements::from_bounds(None, None, Some(0.0))
+            .is_err());
+        assert!(QosRequirements::from_bounds(None, None, Some(1.1))
+            .is_err());
     }
 }

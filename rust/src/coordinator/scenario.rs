@@ -185,7 +185,36 @@ impl ModelScale {
 /// `net.seed + h * HOP_SEED_STRIDE`, so hop 0 keeps the configured seed
 /// exactly (the two-tier degenerate-equivalence anchor) while later hops
 /// draw decorrelated loss patterns.
-const HOP_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
+pub(crate) const HOP_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Shared per-hop channel derivation, used both by
+/// [`ScenarioConfig::hop_net`] and the heterogeneous multi-stream config:
+/// a single entry is a template replicated to every hop with derived seeds
+/// (hop 0 keeps the configured seed exactly); multiple entries configure
+/// each hop explicitly and are returned verbatim.
+pub(crate) fn derive_hop_net(
+    hop_nets: &[NetworkConfig],
+    hop: usize,
+) -> NetworkConfig {
+    if hop_nets.len() > 1 {
+        return hop_nets[hop].clone();
+    }
+    let base = &hop_nets[0];
+    let mut net = base.clone();
+    net.seed = base
+        .seed
+        .wrapping_add((hop as u64).wrapping_mul(HOP_SEED_STRIDE));
+    net
+}
+
+/// Shared reseeding contract (see [`ScenarioConfig::set_base_seed`]):
+/// entry `h` takes `seed + h * HOP_SEED_STRIDE`.
+pub(crate) fn reseed_hop_nets(hop_nets: &mut [NetworkConfig], seed: u64) {
+    for (h, net) in hop_nets.iter_mut().enumerate() {
+        net.seed =
+            seed.wrapping_add((h as u64).wrapping_mul(HOP_SEED_STRIDE));
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct ScenarioConfig {
@@ -255,15 +284,7 @@ impl ScenarioConfig {
     /// entry is returned verbatim, seed included — no derivation, what you
     /// configure is what each hop simulates.
     pub fn hop_net(&self, hop: usize) -> NetworkConfig {
-        if self.hop_nets.len() > 1 {
-            return self.hop_nets[hop].clone();
-        }
-        let base = self.base_net();
-        let mut net = base.clone();
-        net.seed = base
-            .seed
-            .wrapping_add((hop as u64).wrapping_mul(HOP_SEED_STRIDE));
-        net
+        derive_hop_net(&self.hop_nets, hop)
     }
 
     /// Reseed the whole chain from one base seed, preserving the per-hop
@@ -273,10 +294,7 @@ impl ScenarioConfig {
     /// verbatim. Used by the pooled multi-seed evaluators so a seed sweep
     /// re-draws every hop's loss pattern deterministically.
     pub fn set_base_seed(&mut self, seed: u64) {
-        for (h, net) in self.hop_nets.iter_mut().enumerate() {
-            net.seed = seed
-                .wrapping_add((h as u64).wrapping_mul(HOP_SEED_STRIDE));
-        }
+        reseed_hop_nets(&mut self.hop_nets, seed);
     }
 }
 
@@ -341,8 +359,7 @@ impl ScenarioReport {
             records.iter().map(|r| r.latency_ns as f64).sum::<f64>() / n as f64;
         let mut lat: Vec<SimTime> =
             records.iter().map(|r| r.latency_ns).collect();
-        lat.sort_unstable();
-        let max = *lat.last().unwrap_or(&0);
+        let max = lat.iter().copied().max().unwrap_or(0);
         let deadline_hit_rate = qos.max_latency_ns.map(|m| {
             records.iter().filter(|r| r.latency_ns <= m).count() as f64
                 / n as f64
@@ -364,8 +381,12 @@ impl ScenarioReport {
             frames: records.len(),
             accuracy,
             mean_latency_ns,
-            p95_latency_ns: crate::report::stats::percentile(&lat, 0.95),
-            p99_latency_ns: crate::report::stats::percentile(&lat, 0.99),
+            p95_latency_ns: crate::report::stats::percentile_mut(
+                &mut lat, 0.95,
+            ),
+            p99_latency_ns: crate::report::stats::percentile_mut(
+                &mut lat, 0.99,
+            ),
             max_latency_ns: max,
             mean_wire_bytes: records.iter().map(|r| r.wire_bytes as f64)
                 .sum::<f64>() / n as f64,
@@ -418,15 +439,6 @@ pub(crate) fn scenario_network(
 pub(crate) fn costs(engine: &dyn InferenceBackend, cfg: &ScenarioConfig)
     -> Result<Costs>
 {
-    let m = &engine.manifest().model;
-    if cfg.tiers.len() < cfg.kind.tiers_needed().min(2) {
-        bail!(
-            "scenario {} needs {} tiers, config has {}",
-            cfg.kind,
-            cfg.kind.tiers_needed(),
-            cfg.tiers.len()
-        );
-    }
     if cfg.hop_nets.is_empty() {
         bail!("scenario {} has no hop_nets configured", cfg.kind);
     }
@@ -442,21 +454,44 @@ pub(crate) fn costs(engine: &dyn InferenceBackend, cfg: &ScenarioConfig)
             cfg.hop_nets.len()
         );
     }
+    kind_costs(engine, &cfg.kind, cfg.scale, cfg.tiers.len())
+}
+
+/// Per-(kind, scale) volumetrics against a physical chain of `n_tiers`
+/// devices — the tier-count validation plus the cost table, shared by the
+/// homogeneous [`costs`] path and the heterogeneous multi-stream engine
+/// (where every client resolves its own kind/arch/scale against one
+/// physical chain).
+pub(crate) fn kind_costs(
+    engine: &dyn InferenceBackend,
+    kind: &ScenarioKind,
+    scale: ModelScale,
+    n_tiers: usize,
+) -> Result<Costs> {
+    let m = &engine.manifest().model;
+    if n_tiers < kind.tiers_needed().min(2) {
+        bail!(
+            "scenario {} needs {} tiers, config has {}",
+            kind,
+            kind.tiers_needed(),
+            n_tiers
+        );
+    }
     let down_bytes = (m.num_classes * 4) as u64;
-    let net = scenario_network(engine, cfg.scale);
-    let input_bytes: u64 = match cfg.scale {
+    let net = scenario_network(engine, scale);
+    let input_bytes: u64 = match scale {
         // Slim-scale input volume comes from the manifest's input tensor
         // description, not a hard-coded dense-RGB-f32 assumption.
         ModelScale::Slim => engine.manifest().input_bytes_per_frame(),
         ModelScale::Full => net.input.bytes_f32() as u64,
     };
-    Ok(match &cfg.kind {
+    Ok(match kind {
         ScenarioKind::Lc => {
             // Lightweight local model: measured lite model at slim scale;
             // at paper scale, assume a quarter-width VGG16 (MobileNet-class
             // MACs). The lite model is arch-independent — it is the same
             // tiny CNN whatever the server-side architecture.
-            let lite_ma = match cfg.scale {
+            let lite_ma = match scale {
                 ModelScale::Slim => {
                     model::vgg16_slim(m.img_size, 0.0625, 48, m.num_classes)
                         .mult_adds()
@@ -500,15 +535,13 @@ pub(crate) fn costs(engine: &dyn InferenceBackend, cfg: &ScenarioConfig)
             }
         }
         ScenarioKind::Mc { cuts } => {
-            if cfg.tiers.len() != cuts.len() + 1 {
+            if n_tiers != cuts.len() + 1 {
                 bail!(
                     "MC with {} cuts needs exactly {} tiers, config \
-                     has {} ({:?})",
+                     has {}",
                     cuts.len(),
                     cuts.len() + 1,
-                    cfg.tiers.len(),
-                    cfg.tiers.iter().map(|t| t.name.as_str())
-                        .collect::<Vec<_>>()
+                    n_tiers
                 );
             }
             let points = model::split_points(&net);

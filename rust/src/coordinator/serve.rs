@@ -11,7 +11,9 @@ use anyhow::Result;
 
 use super::qos::QosRequirements;
 use super::scenario::{run_scenario, ScenarioConfig, ScenarioReport};
+use super::streaming::{run_hetero_stream, HeteroStreamReport, MultiStreamConfig};
 use crate::data::Dataset;
+use crate::model::Arch;
 use crate::netsim::event::secs;
 use crate::runtime::InferenceBackend;
 
@@ -105,6 +107,47 @@ pub fn serve(
         wall_fps: scenario.frames as f64 / wall.max(1e-9),
         sim_fps,
         scenario,
+    })
+}
+
+/// Result of the multi-tenant serving path (`sei serve --clients-spec`).
+#[derive(Clone, Debug)]
+pub struct HeteroServeReport {
+    pub report: HeteroStreamReport,
+    /// Real wall-clock seconds spent serving (backend + coordinator).
+    pub wall_seconds: f64,
+    /// Real frames per second achieved by the serving path.
+    pub wall_fps: f64,
+}
+
+impl HeteroServeReport {
+    pub fn render(&self, qos: &QosRequirements) -> String {
+        let mut out = self.report.render(qos);
+        out.push_str(&format!(
+            "serving wall time  {:.2} s ({:.1} frames/s real)\n",
+            self.wall_seconds, self.wall_fps
+        ));
+        out
+    }
+}
+
+/// Serve a heterogeneous tenant mix end-to-end: full-mode
+/// [`run_hetero_stream`] (per-frame inference from `dataset`) plus
+/// wall-clock accounting.
+pub fn serve_clients(
+    engines: &[(Arch, &dyn InferenceBackend)],
+    cfg: &MultiStreamConfig,
+    dataset: &Dataset,
+    qos: &QosRequirements,
+) -> Result<HeteroServeReport> {
+    let t0 = Instant::now();
+    let report = run_hetero_stream(engines, cfg, Some(dataset), qos)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let frames = report.aggregate.frames;
+    Ok(HeteroServeReport {
+        report,
+        wall_seconds: wall,
+        wall_fps: frames as f64 / wall.max(1e-9),
     })
 }
 

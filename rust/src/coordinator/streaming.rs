@@ -71,24 +71,42 @@
 //! dropped — so those latencies are `>=` the legacy ones frame-by-frame.
 //! Under overload the two engines deliberately diverge; that divergence
 //! is the bug this engine fixes.
+//!
+//! **Scale & multi-tenancy.** The event core runs on an indexed event
+//! calendar ([`EventQueue`] over a binary heap keyed by `(time, seq)`),
+//! replacing the linear next-event scan; the retained
+//! [`QueueKind::LinearScan`] backend stays available so the differential
+//! harness (`rust/tests/calendar_equivalence.rs`) can pin the two
+//! byte-identical. Frame state lives in a struct-of-arrays
+//! [`FrameArena`], seeded in one batched pass. On top of the same core,
+//! [`run_hetero_stream`] serves *heterogeneous* tenants — per-client
+//! architecture, placement, scale, rate, DRR weight and QoS — through
+//! one shared tier chain, with utilization-based admission control
+//! (rejected streams emit nothing, leaving admitted streams bit-exact)
+//! and optional deficit-round-robin fairness at every shared resource.
 
 use std::collections::VecDeque;
 use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::batcher::{Batch, BatchPolicy, Batcher};
+use super::batcher::{Batch, BatchPolicy, Batcher, DrrBatcher};
 use super::corruption;
+use super::drr::DrrQueue;
 use super::qos::QosRequirements;
-use super::scenario::{costs, Costs, FrameRecord, ScenarioConfig, ScenarioKind};
+use super::scenario::{
+    costs, derive_hop_net, kind_costs, reseed_hop_nets, Costs, FrameRecord,
+    ModelScale, ScenarioConfig, ScenarioKind,
+};
 use crate::data::Dataset;
-use crate::model::DeviceProfile;
-use crate::netsim::event::{secs, EventQueue, SimTime};
-use crate::netsim::transfer::{Channel, Protocol};
+use crate::model::{Arch, DeviceProfile};
+use crate::netsim::event::{secs, EventQueue, QueueKind, SimTime};
+use crate::netsim::transfer::{Channel, NetworkConfig, Protocol};
 use crate::netsim::Dir;
-use crate::report::stats::percentile;
+use crate::report::stats::{percentile, percentile_mut};
 use crate::runtime::{Executable, InferenceBackend, RtInput};
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 
 /// Configuration of one streaming run.
 #[derive(Clone, Debug)]
@@ -127,8 +145,10 @@ impl StreamConfig {
     }
 }
 
-/// One served frame.
-#[derive(Clone, Debug)]
+/// One served frame. `PartialEq`/`Eq` make byte-identity pins (the
+/// calendar-vs-linear-scan and admission-isolation differential tests)
+/// one-line assertions.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct StreamFrameRecord {
     pub client: usize,
     /// Per-client frame number.
@@ -162,6 +182,9 @@ pub struct ResourceStats {
     pub batches_released: u64,
     /// Requests that went through the batcher (frames with an uplink leg).
     pub batched_requests: u64,
+    /// Discrete events the simulator processed (the numerator of the
+    /// events/sec engine-throughput metric in `benches/streaming_saturation`).
+    pub events_processed: u64,
 }
 
 impl ResourceStats {
@@ -388,7 +411,23 @@ pub fn pooled_stream(
         c.scenario.set_base_seed(seed);
         reports.push(run_stream(engine, &c, dataset, qos)?);
     }
-    let k = reports.len();
+    Ok(merge_stream_reports(
+        cfg.clients,
+        cfg.offered_fps(),
+        reports,
+        qos,
+    ))
+}
+
+/// Merge per-seed reports into one pooled report: duration and peak depth
+/// take the max, rates average, counters sum, records concatenate.
+fn merge_stream_reports(
+    clients: usize,
+    offered_fps: f64,
+    reports: Vec<StreamReport>,
+    qos: &QosRequirements,
+) -> StreamReport {
+    let k = reports.len().max(1);
     let stats = ResourceStats {
         duration_ns: reports
             .iter()
@@ -418,12 +457,218 @@ pub fn pooled_stream(
             .iter()
             .map(|r| r.stats.batched_requests)
             .sum(),
+        events_processed: reports
+            .iter()
+            .map(|r| r.stats.events_processed)
+            .sum(),
     };
-    let clients = cfg.clients;
-    let offered = cfg.offered_fps();
     let records: Vec<StreamFrameRecord> =
         reports.into_iter().flat_map(|r| r.records).collect();
-    Ok(StreamReport::from_parts(clients, offered, records, stats, qos))
+    StreamReport::from_parts(clients, offered_fps, records, stats, qos)
+}
+
+// ---------------------------------------------------------------------------
+// Heterogeneous multi-tenant serving.
+// ---------------------------------------------------------------------------
+
+/// Queue-service discipline at the shared resources (hop lanes, mid-chain
+/// tiers and the server-side batcher).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fairness {
+    /// Plain arrival order — one aggressive tenant can starve the rest.
+    Fifo,
+    /// Deficit round robin over clients ([`super::drr::DrrQueue`]):
+    /// byte-costed at the lanes, MAC-costed at the mid tiers, per-request
+    /// at the batcher. Bounds any tenant's wait behind another tenant's
+    /// burst to ~one weighted round.
+    Drr,
+}
+
+/// One tenant stream of a heterogeneous serving run.
+#[derive(Clone, Debug)]
+pub struct ClientSpec {
+    /// Placement of this client's pipeline (LC / SC / RC / MC).
+    pub kind: ScenarioKind,
+    /// Model family this client runs (must have a loaded backend).
+    pub arch: Arch,
+    pub scale: ModelScale,
+    /// Source period; 0 = closed-loop (emit on completion).
+    pub frame_period_ns: SimTime,
+    /// Frames this client emits.
+    pub frames: usize,
+    /// DRR weight (service share relative to other clients; min 1).
+    pub weight: u64,
+    /// Per-tenant QoS, judged per client in the report.
+    pub qos: QosRequirements,
+}
+
+impl ClientSpec {
+    /// A single open-loop slim-VGG16 client of the given kind; adjust
+    /// fields as needed.
+    pub fn new(kind: ScenarioKind) -> ClientSpec {
+        ClientSpec {
+            kind,
+            arch: Arch::Vgg16,
+            scale: ModelScale::Slim,
+            frame_period_ns: 0,
+            frames: 1,
+            weight: 1,
+            qos: QosRequirements::none(),
+        }
+    }
+}
+
+/// Configuration of a heterogeneous multi-tenant streaming run: every
+/// client brings its own architecture, placement, scale, rate and QoS;
+/// the physical tier chain, per-hop channels and batcher are shared.
+#[derive(Clone, Debug)]
+pub struct MultiStreamConfig {
+    pub clients: Vec<ClientSpec>,
+    /// One [`NetworkConfig`] per inter-tier hop, or a single template
+    /// replicated with per-hop derived seeds (see
+    /// [`ScenarioConfig::hop_net`] for the same rule on the homogeneous
+    /// path).
+    pub hop_nets: Vec<NetworkConfig>,
+    /// The shared physical device chain (tier 0 is per-client hardware of
+    /// this profile; the last tier hosts the batcher).
+    pub tiers: Vec<DeviceProfile>,
+    pub batch: BatchPolicy,
+    pub fairness: Fairness,
+    /// Reject streams the bottleneck resource provably cannot serve
+    /// (utilization > 1 under lower-bound service times). Rejected
+    /// streams emit nothing, so admitted streams behave exactly as if
+    /// the rejected ones were never offered.
+    pub admission: bool,
+    /// Event-queue backend (the calendar unless a differential test asks
+    /// for the retained linear scan).
+    pub queue: QueueKind,
+}
+
+impl MultiStreamConfig {
+    /// Re-derive every hop's channel seed from `seed` (same derivation as
+    /// [`ScenarioConfig::set_base_seed`]).
+    pub fn set_base_seed(&mut self, seed: u64) {
+        reseed_hop_nets(&mut self.hop_nets, seed);
+    }
+
+    /// Aggregate offered load over the open-loop clients, frames/s.
+    pub fn offered_fps(&self) -> f64 {
+        self.clients
+            .iter()
+            .filter(|s| s.frame_period_ns > 0)
+            .map(|s| 1e9 / s.frame_period_ns as f64)
+            .sum()
+    }
+}
+
+/// Per-tenant verdict of a heterogeneous run.
+#[derive(Clone, Debug)]
+pub struct ClientOutcome {
+    pub client: usize,
+    /// "kind arch scale" tag for rendering.
+    pub label: String,
+    pub admitted: bool,
+    pub reject_reason: Option<String>,
+    pub frames: usize,
+    pub accuracy: Option<f64>,
+    pub mean_latency_ns: f64,
+    pub p95_latency_ns: SimTime,
+    pub max_latency_ns: SimTime,
+    pub deadline_hit_rate: Option<f64>,
+    /// Judged against this client's own [`ClientSpec::qos`].
+    pub qos_satisfied: Option<bool>,
+}
+
+/// Result of [`run_hetero_stream`]: the shared-infrastructure aggregate
+/// plus one outcome per offered client (admitted or not).
+#[derive(Clone, Debug)]
+pub struct HeteroStreamReport {
+    pub outcomes: Vec<ClientOutcome>,
+    pub aggregate: StreamReport,
+}
+
+impl HeteroStreamReport {
+    pub fn admitted(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.admitted).count()
+    }
+
+    /// Human-readable multi-tenant summary (aggregate + per-client).
+    pub fn render(&self, qos: &QosRequirements) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "tenants            {} offered, {} admitted\n",
+            self.outcomes.len(),
+            self.admitted()
+        ));
+        out.push_str(&self.aggregate.render(qos));
+        out.push_str("per-client\n");
+        const SHOWN: usize = 32;
+        for o in self.outcomes.iter().take(SHOWN) {
+            match &o.reject_reason {
+                Some(r) => out.push_str(&format!(
+                    "  [{}] {:<22} {}\n",
+                    o.client, o.label, r
+                )),
+                None => {
+                    out.push_str(&format!(
+                        "  [{}] {:<22} {} frames | mean {:.2} ms | p95 \
+                         {:.2} ms | max {:.2} ms",
+                        o.client,
+                        o.label,
+                        o.frames,
+                        o.mean_latency_ns / 1e6,
+                        o.p95_latency_ns as f64 / 1e6,
+                        o.max_latency_ns as f64 / 1e6,
+                    ));
+                    if let Some(hit) = o.deadline_hit_rate {
+                        out.push_str(&format!(" | hit {:.1}%", hit * 100.0));
+                    }
+                    if let Some(acc) = o.accuracy {
+                        out.push_str(&format!(" | acc {:.1}%", acc * 100.0));
+                    }
+                    out.push_str(match o.qos_satisfied {
+                        Some(true) => " | OK",
+                        Some(false) => " | VIOLATED",
+                        None => "",
+                    });
+                    out.push('\n');
+                }
+            }
+        }
+        if self.outcomes.len() > SHOWN {
+            out.push_str(&format!(
+                "  ... and {} more clients\n",
+                self.outcomes.len() - SHOWN
+            ));
+        }
+        out
+    }
+}
+
+/// Run a heterogeneous config once per seed and merge the aggregates —
+/// the multi-tenant analogue of [`pooled_stream`].
+pub fn pooled_hetero_stream(
+    engines: &[(Arch, &dyn InferenceBackend)],
+    cfg: &MultiStreamConfig,
+    dataset: Option<&Dataset>,
+    seeds: &[u64],
+    qos: &QosRequirements,
+) -> Result<StreamReport> {
+    if seeds.is_empty() {
+        bail!("pooled_hetero_stream needs at least one seed");
+    }
+    let mut reports = Vec::with_capacity(seeds.len());
+    for &seed in seeds {
+        let mut c = cfg.clone();
+        c.set_base_seed(seed);
+        reports.push(run_hetero_stream(engines, &c, dataset, qos)?.aggregate);
+    }
+    Ok(merge_stream_reports(
+        cfg.clients.len(),
+        cfg.offered_fps(),
+        reports,
+        qos,
+    ))
 }
 
 // ---------------------------------------------------------------------------
@@ -449,26 +694,151 @@ enum Ev {
     DownDelivered { g: usize, hop: usize },
 }
 
-#[derive(Clone, Debug, Default)]
-struct Frame {
-    emitted_ns: SimTime,
-    completed_ns: SimTime,
-    queue_wait_ns: SimTime,
+/// Frame state in struct-of-arrays layout: one arena entry per frame,
+/// indexed by the global frame id `g`. The hot per-event fields
+/// (`ready_at`, `queue_wait_ns`, timing counters) live in dense parallel
+/// `Vec`s instead of one AoS struct, so a 10^5-stream run touches only
+/// the lanes of cache it actually needs per event; `owner`/`fidx` give
+/// O(1) frame -> client mapping for heterogeneous (ragged) stream sizes.
+struct FrameArena {
+    emitted_ns: Vec<SimTime>,
+    completed_ns: Vec<SimTime>,
+    queue_wait_ns: Vec<SimTime>,
     /// When the frame entered its current queue (reused per stage).
-    ready_at: SimTime,
-    wire_bytes: u64,
-    retransmits: u64,
-    corrupted: bool,
+    ready_at: Vec<SimTime>,
+    wire_bytes: Vec<u64>,
+    retransmits: Vec<u64>,
+    corrupted: Vec<bool>,
     /// In-flight tensor (input for RC, latent for SC/MC) in full mode.
-    payload: Option<Tensor>,
-    pred: Option<usize>,
-    label: usize,
+    payload: Vec<Option<Tensor>>,
+    pred: Vec<Option<usize>>,
+    label: Vec<usize>,
+    /// Owning client of each frame.
+    owner: Vec<u32>,
+    /// Per-client frame number of each frame.
+    fidx: Vec<u32>,
 }
 
-struct Sim<'a> {
-    cfg: &'a StreamConfig,
+impl FrameArena {
+    /// Batched seeding: lay out every client's frames contiguously in
+    /// client order (`g = start[c] + f`) in one pass.
+    fn seeded(fpc: &[usize]) -> FrameArena {
+        let total: usize = fpc.iter().sum();
+        let mut owner = Vec::with_capacity(total);
+        let mut fidx = Vec::with_capacity(total);
+        for (c, &k) in fpc.iter().enumerate() {
+            for f in 0..k {
+                owner.push(c as u32);
+                fidx.push(f as u32);
+            }
+        }
+        FrameArena {
+            emitted_ns: vec![0; total],
+            completed_ns: vec![0; total],
+            queue_wait_ns: vec![0; total],
+            ready_at: vec![0; total],
+            wire_bytes: vec![0; total],
+            retransmits: vec![0; total],
+            corrupted: vec![false; total],
+            payload: vec![None; total],
+            pred: vec![None; total],
+            label: vec![0; total],
+            owner,
+            fidx,
+        }
+    }
+}
+
+/// A shared-resource queue under the configured [`Fairness`] discipline.
+enum MultiQueue<T> {
+    Fifo(VecDeque<T>),
+    Drr(DrrQueue<T>),
+}
+
+impl<T> MultiQueue<T> {
+    fn push(&mut self, client: usize, cost: u64, item: T) {
+        match self {
+            MultiQueue::Fifo(q) => q.push_back(item),
+            MultiQueue::Drr(q) => q.push(client, cost, item),
+        }
+    }
+
+    fn pop(&mut self) -> Option<T> {
+        match self {
+            MultiQueue::Fifo(q) => q.pop_front(),
+            MultiQueue::Drr(q) => q.pop(),
+        }
+    }
+}
+
+fn new_multi_queue<T>(
+    fairness: Fairness,
+    weights: &[u64],
+    quantum: u64,
+) -> MultiQueue<T> {
+    match fairness {
+        Fairness::Fifo => MultiQueue::Fifo(VecDeque::new()),
+        Fairness::Drr => MultiQueue::Drr(DrrQueue::new(weights, quantum)),
+    }
+}
+
+/// The server-side batching front under the configured [`Fairness`]:
+/// identical release triggers and batch membership, DRR only reorders
+/// requests *within* a batch (see [`DrrBatcher`]).
+enum Front {
+    Fifo(Batcher),
+    Drr(DrrBatcher),
+}
+
+impl Front {
+    fn pending(&self) -> usize {
+        match self {
+            Front::Fifo(b) => b.pending(),
+            Front::Drr(b) => b.pending(),
+        }
+    }
+
+    fn offer(&mut self, client: usize, now: SimTime) -> Option<Batch> {
+        match self {
+            Front::Fifo(b) => b.offer(now),
+            Front::Drr(b) => b.offer(client, now),
+        }
+    }
+
+    fn deadline(&self) -> Option<SimTime> {
+        match self {
+            Front::Fifo(b) => b.deadline(),
+            Front::Drr(b) => b.deadline(),
+        }
+    }
+
+    fn poll(&mut self, now: SimTime) -> Option<Batch> {
+        match self {
+            Front::Fifo(b) => b.poll(now),
+            Front::Drr(b) => b.poll(now),
+        }
+    }
+
+    fn batches_released(&self) -> u64 {
+        match self {
+            Front::Fifo(b) => b.batches_released,
+            Front::Drr(b) => b.batches_released,
+        }
+    }
+
+    fn requests_seen(&self) -> u64 {
+        match self {
+            Front::Fifo(b) => b.requests_seen,
+            Front::Drr(b) => b.requests_seen,
+        }
+    }
+}
+
+/// Resolved execution profile of one `(arch, kind, scale)` combination,
+/// shared by every client running that combination.
+struct Profile {
+    kind: ScenarioKind,
     costs: Costs,
-    dataset: Option<&'a Dataset>,
     full_exec: Option<Rc<dyn Executable>>,
     head_exec: Option<Rc<dyn Executable>>,
     /// MC mid-segment executables (`mid_execs[t - 1]` runs on tier `t`).
@@ -477,10 +847,50 @@ struct Sim<'a> {
     /// `argmax` of an all-zero logits tensor — the prediction a frame is
     /// left with when its UDP result datagram is fully lost.
     zero_pred: usize,
+}
+
+/// Fully resolved per-client inputs of one simulation, shared between the
+/// homogeneous ([`run_stream`]) and heterogeneous ([`run_hetero_stream`])
+/// entry points.
+struct StreamSetup<'a> {
+    profiles: Vec<Profile>,
+    /// Per-client profile index.
+    prof: Vec<usize>,
+    /// Per-client source period (0 = closed loop).
+    period: Vec<SimTime>,
+    /// Per-client frame count (0 = rejected by admission: emits nothing).
+    fpc: Vec<usize>,
+    /// Per-client DRR weight.
+    weight: Vec<u64>,
+    /// The shared physical device chain.
+    tiers: Vec<DeviceProfile>,
+    batch: BatchPolicy,
+    fairness: Fairness,
+    queue: QueueKind,
+    dataset: Option<&'a Dataset>,
+}
+
+/// Which transfer lane a (hop, direction) pair uses: a TCP hop shares
+/// one lane (ACK entanglement serializes the hop), a UDP hop gets one
+/// lane per direction (full duplex). With heterogeneous `hop_nets`
+/// each hop follows *its own* channel's transport.
+fn lane_index(channels: &[Channel], hop: usize, dir: Dir) -> usize {
+    let local = match (channels[hop].cfg.protocol, dir) {
+        (Protocol::Tcp, _) => 0,
+        (Protocol::Udp, Dir::Up) => 0,
+        (Protocol::Udp, Dir::Down) => 1,
+    };
+    hop * 2 + local
+}
+
+struct Sim<'a> {
+    setup: &'a StreamSetup<'a>,
+    /// Per-client arena offset (`g = start[c] + f`).
+    start: Vec<usize>,
     /// One channel per inter-tier hop (hop 0 keeps the configured seed).
     channels: Vec<Channel>,
     q: EventQueue<Ev>,
-    frames: Vec<Frame>,
+    arena: FrameArena,
     /// Per-client next frame index to emit.
     next_frame: Vec<usize>,
     edge_q: Vec<VecDeque<usize>>,
@@ -488,15 +898,13 @@ struct Sim<'a> {
     edge_cur: Vec<usize>,
     /// Shared mid-chain tier resources, indexed by tier (0 and the last
     /// tier are unused — they have their own machinery).
-    mid_q: Vec<VecDeque<usize>>,
+    mid_q: Vec<MultiQueue<usize>>,
     mid_busy: Vec<bool>,
     mid_cur: Vec<usize>,
-    /// Transfer lanes, two per hop: lane `2h` is hop `h`'s shared lane for
-    /// TCP (the ACK stream couples the directions) and its uplink lane for
-    /// UDP; lane `2h + 1` is hop `h`'s UDP downlink lane (full duplex).
-    lane_q: Vec<VecDeque<(Dir, usize)>>,
+    /// Transfer lanes, two per hop (see [`lane_index`]).
+    lane_q: Vec<MultiQueue<(Dir, usize)>>,
     lane_busy: Vec<bool>,
-    batcher: Batcher,
+    front: Front,
     /// Batcher request id -> global frame index (ids are sequential).
     offered: Vec<usize>,
     srv_q: VecDeque<Batch>,
@@ -511,33 +919,42 @@ struct Sim<'a> {
 
 impl<'a> Sim<'a> {
     fn full_mode(&self) -> bool {
-        self.dataset.is_some()
+        self.setup.dataset.is_some()
     }
 
-    fn period(&self) -> SimTime {
-        self.cfg.scenario.frame_period_ns
+    fn prof_of(&self, c: usize) -> &Profile {
+        &self.setup.profiles[self.setup.prof[c]]
     }
 
-    fn fpc(&self) -> usize {
-        self.cfg.frames_per_client
+    fn costs_of(&self, c: usize) -> &Costs {
+        &self.prof_of(c).costs
+    }
+
+    fn fpc(&self, c: usize) -> usize {
+        self.setup.fpc[c]
     }
 
     fn client_of(&self, g: usize) -> usize {
-        g / self.fpc()
+        self.arena.owner[g] as usize
     }
 
-    /// Number of inter-tier hops in this pipeline.
-    fn hops(&self) -> usize {
-        self.costs.hops()
+    fn fidx(&self, g: usize) -> usize {
+        self.arena.fidx[g] as usize
     }
 
-    /// The device executing pipeline segment `seg` (RC/SC on a longer
-    /// chain bypass the middle tiers: first and last device only).
-    fn device(&self, seg: usize) -> &DeviceProfile {
-        let tiers = &self.cfg.scenario.tiers;
+    /// Number of inter-tier hops in client `c`'s pipeline.
+    fn hops_of(&self, c: usize) -> usize {
+        self.costs_of(c).hops()
+    }
+
+    /// The device executing pipeline segment `seg` of client `c` (RC/SC
+    /// on a longer chain bypass the middle tiers: first and last device
+    /// only).
+    fn device(&self, c: usize, seg: usize) -> &DeviceProfile {
+        let tiers = &self.setup.tiers;
         if seg == 0 {
             &tiers[0]
-        } else if seg + 1 == self.costs.seg_mult_adds.len() {
+        } else if seg + 1 == self.costs_of(c).seg_mult_adds.len() {
             tiers.last().expect("validated by costs()")
         } else {
             &tiers[seg]
@@ -545,9 +962,13 @@ impl<'a> Sim<'a> {
     }
 
     fn input(&self, g: usize) -> Result<Tensor> {
-        let ds = self.dataset.ok_or_else(|| anyhow!("no dataset"))?;
-        let f = g % self.fpc();
+        let ds = self.setup.dataset.ok_or_else(|| anyhow!("no dataset"))?;
+        let f = self.fidx(g);
         ds.batch(f % ds.len(), 1)
+    }
+
+    fn lane_of(&self, hop: usize, dir: Dir) -> usize {
+        lane_index(&self.channels, hop, dir)
     }
 
     // -- queue-depth bookkeeping -------------------------------------------
@@ -566,35 +987,34 @@ impl<'a> Sim<'a> {
 
     fn emit(&mut self, c: usize, t: SimTime) -> Result<()> {
         let f = self.next_frame[c];
-        debug_assert!(f < self.fpc());
+        debug_assert!(f < self.fpc(c));
         self.next_frame[c] = f + 1;
-        let g = c * self.fpc() + f;
-        self.frames[g].emitted_ns = t;
-        let period = self.period();
-        if period > 0 && f + 1 < self.fpc() {
+        let g = self.start[c] + f;
+        self.arena.emitted_ns[g] = t;
+        let period = self.setup.period[c];
+        if period > 0 && f + 1 < self.fpc(c) {
             self.q.schedule(t + period, Ev::Emit { c });
         }
-        if self.full_mode() {
-            let ds = self.dataset.unwrap();
-            self.frames[g].label = ds.labels[f % ds.len()] as usize;
-            if self.cfg.scenario.kind == ScenarioKind::Rc {
+        let is_rc = matches!(self.prof_of(c).kind, ScenarioKind::Rc);
+        if let Some(ds) = self.setup.dataset {
+            self.arena.label[g] = ds.labels[f % ds.len()] as usize;
+            if is_rc {
                 // The RC uplink payload is the raw input frame.
                 let x = self.input(g)?;
-                self.frames[g].payload = Some(x);
+                self.arena.payload[g] = Some(x);
             }
         }
-        match self.cfg.scenario.kind {
-            ScenarioKind::Rc => self.enqueue_xfer(Dir::Up, 0, g, t),
-            ScenarioKind::Lc
-            | ScenarioKind::Sc { .. }
-            | ScenarioKind::Mc { .. } => self.enqueue_edge(c, g, t),
+        if is_rc {
+            self.enqueue_xfer(Dir::Up, 0, g, t)
+        } else {
+            self.enqueue_edge(c, g, t)
         }
     }
 
     // -- tier-0 compute (one device per client) ----------------------------
 
     fn enqueue_edge(&mut self, c: usize, g: usize, t: SimTime) -> Result<()> {
-        self.frames[g].ready_at = t;
+        self.arena.ready_at[g] = t;
         if self.edge_busy[c] {
             self.edge_q[c].push_back(g);
             self.inc_queued(1);
@@ -607,9 +1027,10 @@ impl<'a> Sim<'a> {
     fn start_edge(&mut self, c: usize, g: usize, t: SimTime) -> Result<()> {
         self.edge_busy[c] = true;
         self.edge_cur[c] = g;
-        let wait = t - self.frames[g].ready_at;
-        self.frames[g].queue_wait_ns += wait;
-        let dur = self.device(0).compute_ns(self.costs.seg_mult_adds[0]);
+        let wait = t - self.arena.ready_at[g];
+        self.arena.queue_wait_ns[g] += wait;
+        let ma = self.costs_of(c).seg_mult_adds[0];
+        let dur = self.device(c, 0).compute_ns(ma);
         self.q.schedule(t + dur, Ev::EdgeDone { c });
         Ok(())
     }
@@ -618,29 +1039,28 @@ impl<'a> Sim<'a> {
         let g = self.edge_cur[c];
         self.edge_busy[c] = false;
         if self.full_mode() {
-            match &self.cfg.scenario.kind {
-                ScenarioKind::Lc => {
-                    let x = self.input(g)?;
-                    let logits = self
-                        .full_exec
-                        .as_ref()
-                        .unwrap()
-                        .run(&[RtInput::F32(&x)])?;
-                    self.frames[g].pred = Some(logits.argmax_last()[0]);
-                }
-                ScenarioKind::Sc { .. } | ScenarioKind::Mc { .. } => {
-                    let x = self.input(g)?;
-                    let latent = self
-                        .head_exec
-                        .as_ref()
-                        .unwrap()
-                        .run(&[RtInput::F32(&x)])?;
-                    self.frames[g].payload = Some(latent);
-                }
-                ScenarioKind::Rc => unreachable!("RC has no tier-0 stage"),
+            let is_lc = matches!(self.prof_of(c).kind, ScenarioKind::Lc);
+            let x = self.input(g)?;
+            if is_lc {
+                let exec = self
+                    .prof_of(c)
+                    .full_exec
+                    .clone()
+                    .expect("LC executable preloaded");
+                let logits = exec.run(&[RtInput::F32(&x)])?;
+                self.arena.pred[g] = Some(logits.argmax_last()[0]);
+            } else {
+                // SC / MC head; RC never enters the edge stage.
+                let exec = self
+                    .prof_of(c)
+                    .head_exec
+                    .clone()
+                    .expect("head executable preloaded");
+                let latent = exec.run(&[RtInput::F32(&x)])?;
+                self.arena.payload[g] = Some(latent);
             }
         }
-        if self.hops() == 0 {
+        if self.hops_of(c) == 0 {
             self.complete(g, t); // LC: done at the edge
         } else {
             self.enqueue_xfer(Dir::Up, 0, g, t)?;
@@ -654,17 +1074,14 @@ impl<'a> Sim<'a> {
 
     // -- shared per-hop channel lanes --------------------------------------
 
-    /// Which transfer lane a (hop, direction) pair uses: a TCP hop shares
-    /// one lane (ACK entanglement serializes the hop), a UDP hop gets one
-    /// lane per direction (full duplex). With heterogeneous `hop_nets`
-    /// each hop follows *its own* channel's transport.
-    fn lane_of(&self, hop: usize, dir: Dir) -> usize {
-        let local = match (self.channels[hop].cfg.protocol, dir) {
-            (Protocol::Tcp, _) => 0,
-            (Protocol::Udp, Dir::Up) => 0,
-            (Protocol::Udp, Dir::Down) => 1,
-        };
-        hop * 2 + local
+    /// Wire cost of frame `g`'s transfer on `hop` in `dir` — also the DRR
+    /// service cost at that lane.
+    fn xfer_bytes(&self, dir: Dir, hop: usize, g: usize) -> u64 {
+        let c = self.client_of(g);
+        match dir {
+            Dir::Up => self.costs_of(c).up_bytes[hop],
+            Dir::Down => self.costs_of(c).down_bytes,
+        }
     }
 
     fn enqueue_xfer(
@@ -674,10 +1091,12 @@ impl<'a> Sim<'a> {
         g: usize,
         t: SimTime,
     ) -> Result<()> {
-        self.frames[g].ready_at = t;
+        self.arena.ready_at[g] = t;
         let lane = self.lane_of(hop, dir);
         if self.lane_busy[lane] {
-            self.lane_q[lane].push_back((dir, g));
+            let c = self.client_of(g);
+            let cost = self.xfer_bytes(dir, hop, g);
+            self.lane_q[lane].push(c, cost, (dir, g));
             self.inc_queued(1);
             Ok(())
         } else {
@@ -694,28 +1113,26 @@ impl<'a> Sim<'a> {
     ) -> Result<()> {
         self.lane_busy[lane] = true;
         let hop = lane / 2;
-        let wait = t - self.frames[g].ready_at;
-        self.frames[g].queue_wait_ns += wait;
-        let bytes = match dir {
-            Dir::Up => self.costs.up_bytes[hop],
-            Dir::Down => self.costs.down_bytes,
-        };
+        let c = self.client_of(g);
+        let wait = t - self.arena.ready_at[g];
+        self.arena.queue_wait_ns[g] += wait;
+        let bytes = self.xfer_bytes(dir, hop, g);
         let (start, res) =
             self.channels[hop].send_no_earlier(dir, bytes, t)?;
         debug_assert_eq!(start, t, "channel lane discipline violated");
-        self.frames[g].wire_bytes += res.wire_bytes();
-        self.frames[g].retransmits += res.retransmits();
+        self.arena.wire_bytes[g] += res.wire_bytes();
+        self.arena.retransmits[g] += res.retransmits();
         match dir {
             Dir::Up => {
                 if self.channels[hop].cfg.protocol == Protocol::Udp
                     && !res.lost_ranges().is_empty()
                 {
-                    self.frames[g].corrupted = true;
-                    if let Some(p) = self.frames[g].payload.as_mut() {
+                    self.arena.corrupted[g] = true;
+                    if let Some(p) = self.arena.payload[g].as_mut() {
                         corruption::corrupt_scaled(
                             p,
                             res.lost_ranges(),
-                            self.costs.up_bytes[hop],
+                            bytes,
                         );
                     }
                 }
@@ -727,11 +1144,11 @@ impl<'a> Sim<'a> {
             Dir::Down => {
                 let lost: u64 =
                     res.lost_ranges().iter().map(|(_, l)| *l as u64).sum();
-                if lost >= self.costs.down_bytes {
+                if lost >= bytes {
                     // A fully lost UDP result datagram voids the frame.
-                    self.frames[g].corrupted = true;
+                    self.arena.corrupted[g] = true;
                     if self.full_mode() {
-                        self.frames[g].pred = Some(self.zero_pred);
+                        self.arena.pred[g] = Some(self.prof_of(c).zero_pred);
                     }
                 }
                 self.q.schedule(
@@ -746,7 +1163,7 @@ impl<'a> Sim<'a> {
 
     fn net_free(&mut self, lane: usize, t: SimTime) -> Result<()> {
         self.lane_busy[lane] = false;
-        if let Some((dir, g)) = self.lane_q[lane].pop_front() {
+        if let Some((dir, g)) = self.lane_q[lane].pop() {
             self.dec_queued(1);
             self.start_xfer(lane, dir, g, t)?;
         }
@@ -758,9 +1175,11 @@ impl<'a> Sim<'a> {
     fn enqueue_mid(&mut self, tier: usize, g: usize, t: SimTime)
         -> Result<()>
     {
-        self.frames[g].ready_at = t;
+        self.arena.ready_at[g] = t;
         if self.mid_busy[tier] {
-            self.mid_q[tier].push_back(g);
+            let c = self.client_of(g);
+            let cost = self.costs_of(c).seg_mult_adds[tier];
+            self.mid_q[tier].push(c, cost, g);
             self.inc_queued(1);
             Ok(())
         } else {
@@ -771,10 +1190,11 @@ impl<'a> Sim<'a> {
     fn start_mid(&mut self, tier: usize, g: usize, t: SimTime) -> Result<()> {
         self.mid_busy[tier] = true;
         self.mid_cur[tier] = g;
-        let wait = t - self.frames[g].ready_at;
-        self.frames[g].queue_wait_ns += wait;
-        let dur =
-            self.device(tier).compute_ns(self.costs.seg_mult_adds[tier]);
+        let wait = t - self.arena.ready_at[g];
+        self.arena.queue_wait_ns[g] += wait;
+        let c = self.client_of(g);
+        let ma = self.costs_of(c).seg_mult_adds[tier];
+        let dur = self.device(c, tier).compute_ns(ma);
         self.q.schedule(t + dur, Ev::MidDone { tier });
         Ok(())
     }
@@ -783,16 +1203,16 @@ impl<'a> Sim<'a> {
         let g = self.mid_cur[tier];
         self.mid_busy[tier] = false;
         if self.full_mode() {
-            let payload = self.frames[g]
-                .payload
+            let payload = self.arena.payload[g]
                 .take()
                 .ok_or_else(|| anyhow!("frame {g} lost its payload"))?;
-            let exec = &self.mid_execs[tier - 1];
+            let c = self.client_of(g);
+            let exec = self.prof_of(c).mid_execs[tier - 1].clone();
             let latent = exec.run(&[RtInput::F32(&payload)])?;
-            self.frames[g].payload = Some(latent);
+            self.arena.payload[g] = Some(latent);
         }
         self.enqueue_xfer(Dir::Up, tier, g, t)?;
-        if let Some(g2) = self.mid_q[tier].pop_front() {
+        if let Some(g2) = self.mid_q[tier].pop() {
             self.dec_queued(1);
             self.start_mid(tier, g2, t)?;
         }
@@ -804,14 +1224,15 @@ impl<'a> Sim<'a> {
     fn up_delivered(&mut self, g: usize, hop: usize, t: SimTime)
         -> Result<()>
     {
+        let c = self.client_of(g);
         let tier = hop + 1;
-        if tier < self.hops() {
+        if tier < self.hops_of(c) {
             // A mid-chain tier: pay its segment compute, then forward.
             return self.enqueue_mid(tier, g, t);
         }
-        self.frames[g].ready_at = t;
+        self.arena.ready_at[g] = t;
         self.offered.push(g);
-        if let Some(batch) = self.batcher.offer(t) {
+        if let Some(batch) = self.front.offer(c, t) {
             // The size trigger fired: the batch holds batch.len()-1
             // previously queued requests plus this one, which was served
             // immediately and never counted as waiting.
@@ -819,10 +1240,10 @@ impl<'a> Sim<'a> {
             self.enqueue_srv(batch, t)?;
         } else {
             self.inc_queued(1);
-            if self.batcher.pending() == 1 {
+            if self.front.pending() == 1 {
                 // The deadline is set by the oldest pending request; only
                 // the request that *opens* a batch needs to arm the timer.
-                if let Some(d) = self.batcher.deadline() {
+                if let Some(d) = self.front.deadline() {
                     self.q.schedule(d, Ev::BatchTimer);
                 }
             }
@@ -831,7 +1252,7 @@ impl<'a> Sim<'a> {
     }
 
     fn batch_timer(&mut self, t: SimTime) -> Result<()> {
-        if let Some(batch) = self.batcher.poll(t) {
+        if let Some(batch) = self.front.poll(t) {
             self.dec_queued(batch.len());
             self.enqueue_srv(batch, t)?;
         }
@@ -850,41 +1271,51 @@ impl<'a> Sim<'a> {
 
     fn start_srv(&mut self, batch: Batch, t: SimTime) -> Result<()> {
         self.srv_busy = true;
+        // Heterogeneous batch cost: the sum of each request's own final
+        // segment (for a homogeneous batch this reduces to the old
+        // `batch.len() * seg_mult_adds[last]` exactly).
+        let mut total_ma = 0u64;
         for req in &batch.requests {
             let g = self.offered[req.id as usize];
-            let wait = t - self.frames[g].ready_at;
-            self.frames[g].queue_wait_ns += wait;
+            let wait = t - self.arena.ready_at[g];
+            self.arena.queue_wait_ns[g] += wait;
+            let c = self.client_of(g);
+            let segs = &self.costs_of(c).seg_mult_adds;
+            total_ma += segs[segs.len() - 1];
         }
-        let last = self.costs.seg_mult_adds.len() - 1;
         let dur = self
-            .device(last)
-            .compute_ns(batch.len() as u64 * self.costs.seg_mult_adds[last]);
+            .setup
+            .tiers
+            .last()
+            .expect("validated by costs()")
+            .compute_ns(total_ma);
         self.q.schedule(t + dur, Ev::ServerDone { batch });
         Ok(())
     }
 
     fn server_done(&mut self, batch: Batch, t: SimTime) -> Result<()> {
         self.srv_busy = false;
-        let last_hop = self.hops() - 1;
         for req in &batch.requests {
             let g = self.offered[req.id as usize];
+            let c = self.client_of(g);
             if self.full_mode() {
-                let payload = self.frames[g]
-                    .payload
+                let payload = self.arena.payload[g]
                     .take()
                     .ok_or_else(|| anyhow!("frame {g} lost its payload"))?;
-                let exec = match &self.cfg.scenario.kind {
-                    ScenarioKind::Rc => self.full_exec.as_ref().unwrap(),
+                let p = self.prof_of(c);
+                let exec = match &p.kind {
+                    ScenarioKind::Rc => p.full_exec.clone().unwrap(),
                     ScenarioKind::Sc { .. } | ScenarioKind::Mc { .. } => {
-                        self.tail_exec.as_ref().unwrap()
+                        p.tail_exec.clone().unwrap()
                     }
                     ScenarioKind::Lc => {
                         unreachable!("LC never reaches the server")
                     }
                 };
                 let logits = exec.run(&[RtInput::F32(&payload)])?;
-                self.frames[g].pred = Some(logits.argmax_last()[0]);
+                self.arena.pred[g] = Some(logits.argmax_last()[0]);
             }
+            let last_hop = self.hops_of(c) - 1;
             self.enqueue_xfer(Dir::Down, last_hop, g, t)?;
         }
         if let Some(next) = self.srv_q.pop_front() {
@@ -909,13 +1340,12 @@ impl<'a> Sim<'a> {
     // -- completion --------------------------------------------------------
 
     fn complete(&mut self, g: usize, t: SimTime) {
-        let fr = &mut self.frames[g];
-        fr.completed_ns = t;
-        fr.payload = None;
+        self.arena.completed_ns[g] = t;
+        self.arena.payload[g] = None;
         self.completed += 1;
         let c = self.client_of(g);
         // Closed-loop source: emit the next frame on completion.
-        if self.period() == 0 && self.next_frame[c] < self.fpc() {
+        if self.setup.period[c] == 0 && self.next_frame[c] < self.fpc(c) {
             self.q.schedule(t, Ev::Emit { c });
         }
     }
@@ -956,36 +1386,19 @@ pub fn mid_exec_name(from: usize, to: usize, batch: usize) -> String {
     format!("mid_L{from}_L{to}_b{batch}")
 }
 
-/// Run the closed-loop streaming simulation.
-///
-/// `dataset: Some(_)` selects *full* mode (per-frame inference and
-/// accuracy, the `run_scenario` path); `None` selects *latency-only* mode
-/// (pure timing, the `simulate_latency` / Fig. 3 path). Deterministic in
-/// `(cfg, engine seed)` alone.
-pub fn run_stream(
+/// Resolve the execution profile of one `(kind, scale)` on `engine`,
+/// given precomputed costs: preload the executables this placement needs
+/// (full mode only) and the zero-logits fallback prediction.
+fn build_profile_with_costs(
     engine: &dyn InferenceBackend,
-    cfg: &StreamConfig,
-    dataset: Option<&Dataset>,
-    qos: &QosRequirements,
-) -> Result<StreamReport> {
-    if cfg.clients == 0 {
-        bail!("streaming needs at least one client");
-    }
-    if cfg.frames_per_client == 0 {
-        bail!("streaming needs at least one frame per client");
-    }
-    if let Some(ds) = dataset {
-        if ds.len() == 0 {
-            bail!("streaming needs a non-empty dataset in full mode");
-        }
-    }
-    let costs = costs(engine, &cfg.scenario)?;
+    kind: &ScenarioKind,
+    costs: Costs,
+    full: bool,
+) -> Result<Profile> {
     let num_classes = engine.manifest().model.num_classes;
-
-    // Pre-load the executables used by this scenario (full mode only).
     let mut mid_execs: Vec<Rc<dyn Executable>> = Vec::new();
-    let (full_exec, head_exec, tail_exec) = if dataset.is_some() {
-        match &cfg.scenario.kind {
+    let (full_exec, head_exec, tail_exec) = if full {
+        match kind {
             ScenarioKind::Lc => {
                 let name = if engine
                     .manifest()
@@ -1025,33 +1438,96 @@ pub fn run_stream(
     } else {
         (None, None, None)
     };
-
-    let hops = costs.hops();
-    let total = cfg.clients * cfg.frames_per_client;
-    let n_tiers = costs.seg_mult_adds.len();
-    let mut sim = Sim {
-        cfg,
-        dataset,
+    Ok(Profile {
+        kind: kind.clone(),
+        costs,
         full_exec,
         head_exec,
         mid_execs,
         tail_exec,
         zero_pred: Tensor::zeros(vec![1, num_classes]).argmax_last()[0],
-        channels: (0..hops.max(1))
-            .map(|h| Channel::new(cfg.scenario.hop_net(h)))
+    })
+}
+
+fn build_profile(
+    engine: &dyn InferenceBackend,
+    kind: &ScenarioKind,
+    scale: ModelScale,
+    n_tiers: usize,
+    full: bool,
+) -> Result<Profile> {
+    let costs = kind_costs(engine, kind, scale, n_tiers)?;
+    build_profile_with_costs(engine, kind, costs, full)
+}
+
+/// Run one resolved setup to completion and reduce it to records + stats.
+fn simulate(
+    setup: &StreamSetup<'_>,
+    channels: Vec<Channel>,
+) -> Result<(Vec<StreamFrameRecord>, ResourceStats)> {
+    let n_clients = setup.prof.len();
+    let total: usize = setup.fpc.iter().sum();
+    let mut start = Vec::with_capacity(n_clients);
+    let mut acc = 0usize;
+    for &k in &setup.fpc {
+        start.push(acc);
+        acc += k;
+    }
+    let n_mid = setup.tiers.len();
+    let n_lanes = 2 * channels.len();
+
+    // DRR quanta: at least the maximum single-item cost at each resource
+    // over the admitted clients, so every active client is guaranteed at
+    // least one item of service per weighted round.
+    let mut lane_quantum = vec![1u64; n_lanes];
+    let mut mid_quantum = vec![1u64; n_mid];
+    for c in 0..n_clients {
+        if setup.fpc[c] == 0 {
+            continue;
+        }
+        let costs = &setup.profiles[setup.prof[c]].costs;
+        for h in 0..costs.hops() {
+            let up = lane_index(&channels, h, Dir::Up);
+            lane_quantum[up] = lane_quantum[up].max(costs.up_bytes[h]);
+            let down = lane_index(&channels, h, Dir::Down);
+            lane_quantum[down] = lane_quantum[down].max(costs.down_bytes);
+        }
+        for tier in 1..costs.hops() {
+            mid_quantum[tier] =
+                mid_quantum[tier].max(costs.seg_mult_adds[tier]);
+        }
+    }
+
+    let front = match setup.fairness {
+        Fairness::Fifo => Front::Fifo(Batcher::new(setup.batch)),
+        Fairness::Drr => {
+            Front::Drr(DrrBatcher::new(setup.batch, setup.weight.clone()))
+        }
+    };
+    let mut sim = Sim {
+        setup,
+        start,
+        channels,
+        q: EventQueue::with_kind(setup.queue),
+        arena: FrameArena::seeded(&setup.fpc),
+        next_frame: vec![0; n_clients],
+        edge_q: vec![VecDeque::new(); n_clients],
+        edge_busy: vec![false; n_clients],
+        edge_cur: vec![0; n_clients],
+        mid_q: (0..n_mid)
+            .map(|t| {
+                new_multi_queue(setup.fairness, &setup.weight, mid_quantum[t])
+            })
             .collect(),
-        q: EventQueue::new(),
-        frames: vec![Frame::default(); total],
-        next_frame: vec![0; cfg.clients],
-        edge_q: vec![VecDeque::new(); cfg.clients],
-        edge_busy: vec![false; cfg.clients],
-        edge_cur: vec![0; cfg.clients],
-        mid_q: vec![VecDeque::new(); n_tiers],
-        mid_busy: vec![false; n_tiers],
-        mid_cur: vec![0; n_tiers],
-        lane_q: vec![VecDeque::new(); 2 * hops.max(1)],
-        lane_busy: vec![false; 2 * hops.max(1)],
-        batcher: Batcher::new(cfg.batch),
+        mid_busy: vec![false; n_mid],
+        mid_cur: vec![0; n_mid],
+        lane_q: (0..n_lanes)
+            .map(|l| {
+                new_multi_queue(setup.fairness, &setup.weight, lane_quantum[l])
+            })
+            .collect(),
+        lane_busy: vec![false; n_lanes],
+        front,
         offered: Vec::new(),
         srv_q: VecDeque::new(),
         srv_busy: false,
@@ -1060,11 +1536,19 @@ pub fn run_stream(
         depth_area: 0.0,
         last_t: 0,
         completed: 0,
-        costs,
     };
 
-    for c in 0..cfg.clients {
-        sim.q.schedule(0, Ev::Emit { c });
+    // Batched seeding: run the emit handler directly, in client order,
+    // instead of scheduling N seed events. The N `Emit`s would carry the
+    // N smallest sequence numbers at t = 0 and therefore pop first, in
+    // exactly this order, before any derived event; skipping the queue
+    // round-trip shifts every later event's tiebreak down by N
+    // *uniformly*, which preserves their relative order — frame-visible
+    // behavior is identical (pinned by tests/calendar_equivalence.rs).
+    for c in 0..n_clients {
+        if setup.fpc[c] > 0 {
+            sim.emit(c, 0)?;
+        }
     }
     while sim.completed < total {
         let Some((t, ev)) = sim.q.pop() else {
@@ -1079,12 +1563,8 @@ pub fn run_stream(
         sim.handle(ev, t)?;
     }
 
-    let duration_ns = sim
-        .frames
-        .iter()
-        .map(|f| f.completed_ns)
-        .max()
-        .unwrap_or(0);
+    let duration_ns =
+        sim.arena.completed_ns.iter().copied().max().unwrap_or(0);
     let stats = ResourceStats {
         duration_ns,
         throughput_fps: if duration_ns > 0 {
@@ -1098,31 +1578,96 @@ pub fn run_stream(
             0.0
         },
         max_queue_depth: sim.max_queued,
-        batches_released: sim.batcher.batches_released,
-        batched_requests: sim.batcher.requests_seen,
+        batches_released: sim.front.batches_released(),
+        batched_requests: sim.front.requests_seen(),
+        events_processed: sim.q.processed(),
     };
-    let fpc = cfg.frames_per_client;
-    let records: Vec<StreamFrameRecord> = sim
-        .frames
-        .iter()
-        .enumerate()
-        .map(|(g, f)| StreamFrameRecord {
-            client: g / fpc.max(1),
-            frame: g % fpc.max(1),
-            emitted_ns: f.emitted_ns,
-            completed_ns: f.completed_ns,
-            latency_ns: f.completed_ns - f.emitted_ns,
-            queue_wait_ns: f.queue_wait_ns,
-            correct: if dataset.is_some() {
-                Some(f.pred == Some(f.label))
+    let full = setup.dataset.is_some();
+    let a = &sim.arena;
+    let records: Vec<StreamFrameRecord> = (0..total)
+        .map(|g| StreamFrameRecord {
+            client: a.owner[g] as usize,
+            frame: a.fidx[g] as usize,
+            emitted_ns: a.emitted_ns[g],
+            completed_ns: a.completed_ns[g],
+            latency_ns: a.completed_ns[g] - a.emitted_ns[g],
+            queue_wait_ns: a.queue_wait_ns[g],
+            correct: if full {
+                Some(a.pred[g] == Some(a.label[g]))
             } else {
                 None
             },
-            wire_bytes: f.wire_bytes,
-            retransmits: f.retransmits,
-            corrupted: f.corrupted,
+            wire_bytes: a.wire_bytes[g],
+            retransmits: a.retransmits[g],
+            corrupted: a.corrupted[g],
         })
         .collect();
+    Ok((records, stats))
+}
+
+/// Run the closed-loop streaming simulation.
+///
+/// `dataset: Some(_)` selects *full* mode (per-frame inference and
+/// accuracy, the `run_scenario` path); `None` selects *latency-only* mode
+/// (pure timing, the `simulate_latency` / Fig. 3 path). Deterministic in
+/// `(cfg, engine seed)` alone.
+pub fn run_stream(
+    engine: &dyn InferenceBackend,
+    cfg: &StreamConfig,
+    dataset: Option<&Dataset>,
+    qos: &QosRequirements,
+) -> Result<StreamReport> {
+    run_stream_with_queue(engine, cfg, dataset, qos, QueueKind::Calendar)
+}
+
+/// [`run_stream`] with an explicit event-queue backend — the hook the
+/// differential harness uses to pin the calendar against the retained
+/// linear scan. Results are byte-identical across backends by
+/// construction (both always extract the event with the globally minimal
+/// `(time, seq)` key).
+pub fn run_stream_with_queue(
+    engine: &dyn InferenceBackend,
+    cfg: &StreamConfig,
+    dataset: Option<&Dataset>,
+    qos: &QosRequirements,
+    queue: QueueKind,
+) -> Result<StreamReport> {
+    if cfg.clients == 0 {
+        bail!("streaming needs at least one client");
+    }
+    if cfg.frames_per_client == 0 {
+        bail!("streaming needs at least one frame per client");
+    }
+    if let Some(ds) = dataset {
+        if ds.len() == 0 {
+            bail!("streaming needs a non-empty dataset in full mode");
+        }
+    }
+    let costs = costs(engine, &cfg.scenario)?;
+    let hops = costs.hops();
+    let profile = build_profile_with_costs(
+        engine,
+        &cfg.scenario.kind,
+        costs,
+        dataset.is_some(),
+    )?;
+    let channels: Vec<Channel> = (0..hops.max(1))
+        .map(|h| Channel::new(cfg.scenario.hop_net(h)))
+        .collect();
+    let n = cfg.clients;
+    let setup = StreamSetup {
+        profiles: vec![profile],
+        prof: vec![0; n],
+        period: vec![cfg.scenario.frame_period_ns; n],
+        fpc: vec![cfg.frames_per_client; n],
+        weight: vec![1; n],
+        tiers: cfg.scenario.tiers.clone(),
+        batch: cfg.batch,
+        fairness: Fairness::Fifo,
+        queue,
+        dataset,
+    };
+    let (records, stats) = simulate(&setup, channels)?;
     Ok(StreamReport::from_parts(
         cfg.clients,
         cfg.offered_fps(),
@@ -1130,6 +1675,514 @@ pub fn run_stream(
         stats,
         qos,
     ))
+}
+
+// ---------------------------------------------------------------------------
+// Admission control.
+// ---------------------------------------------------------------------------
+
+/// Optimistic (lower-bound) serialization time of `bytes` on `net`'s
+/// bottleneck rate, in ns. Ignores protocol headers, losses and ACK
+/// coupling — everything that can only make the real channel slower — so
+/// a stream rejected on this estimate provably cannot be served.
+fn lane_service_ns(net: &NetworkConfig, bytes: u64) -> f64 {
+    let mut rate = net.capacity_bps;
+    if net.interface_bps > 0.0 {
+        rate = rate.min(net.interface_bps);
+    }
+    if rate <= 0.0 {
+        return f64::INFINITY;
+    }
+    bytes as f64 * 8.0 / rate * 1e9
+}
+
+/// Greedy admission in client order: each open-loop client adds its
+/// lower-bound utilization `lambda * service_time` to every shared
+/// resource it visits (lanes by serialization time, mid tiers and the
+/// amortized server by compute time); a client that would push any
+/// resource past utilization 1 — or whose own tier-0 device cannot keep
+/// up with its period — is rejected with a reason naming the bottleneck.
+/// Closed-loop clients (period 0) self-clock and are always admitted.
+fn admission_reasons(
+    specs: &[ClientSpec],
+    profiles: &[Profile],
+    prof: &[usize],
+    tiers: &[DeviceProfile],
+    hop_nets: &[NetworkConfig],
+    batch: &BatchPolicy,
+) -> Vec<Option<String>> {
+    const LIMIT: f64 = 1.0 + 1e-9;
+    let mut lane_util = vec![0.0f64; 2 * hop_nets.len()];
+    let mut mid_util = vec![0.0f64; tiers.len()];
+    let mut srv_util = 0.0f64;
+    let mut out = Vec::with_capacity(specs.len());
+    for (c, spec) in specs.iter().enumerate() {
+        let p = &profiles[prof[c]];
+        let costs = &p.costs;
+        let period = spec.frame_period_ns;
+        if period == 0 {
+            // Closed-loop sources emit only on completion: they cannot
+            // push any resource past saturation.
+            out.push(None);
+            continue;
+        }
+        // Tier 0 is the client's own device, not a shared resource: the
+        // stream starves itself when one frame's compute exceeds its
+        // period.
+        if !matches!(p.kind, ScenarioKind::Rc) {
+            let s0 = tiers[0].compute_ns(costs.seg_mult_adds[0]);
+            if s0 > period {
+                out.push(Some(format!(
+                    "rejected by admission control: tier-0 device '{}' \
+                     needs {:.3} ms per frame, more than the {:.3} ms \
+                     frame period",
+                    tiers[0].name,
+                    s0 as f64 / 1e6,
+                    period as f64 / 1e6
+                )));
+                continue;
+            }
+        }
+        let lam = 1.0 / period as f64; // frames per ns
+        let mut lane_add = vec![0.0f64; lane_util.len()];
+        let mut mid_add = vec![0.0f64; mid_util.len()];
+        let mut srv_add = 0.0f64;
+        for h in 0..costs.hops() {
+            let net = &hop_nets[h];
+            lane_add[2 * h] +=
+                lam * lane_service_ns(net, costs.up_bytes[h]);
+            let down_lane = match net.protocol {
+                Protocol::Tcp => 2 * h,
+                Protocol::Udp => 2 * h + 1,
+            };
+            lane_add[down_lane] +=
+                lam * lane_service_ns(net, costs.down_bytes);
+        }
+        for tier in 1..costs.hops() {
+            mid_add[tier] += lam
+                * tiers[tier].compute_ns(costs.seg_mult_adds[tier]) as f64;
+        }
+        if costs.hops() >= 1 {
+            let last_ma = *costs.seg_mult_adds.last().expect("non-empty");
+            let b = batch.max_batch.max(1);
+            let amortized = tiers
+                .last()
+                .expect("validated")
+                .compute_ns(b as u64 * last_ma) as f64
+                / b as f64;
+            srv_add += lam * amortized;
+        }
+        let mut reason: Option<String> = None;
+        for (l, add) in lane_add.iter().enumerate() {
+            if reason.is_none() && lane_util[l] + add > LIMIT {
+                let dir = if l % 2 == 0 { "uplink" } else { "downlink" };
+                reason = Some(format!(
+                    "hop {} {dir} lane utilization would reach {:.2}",
+                    l / 2,
+                    lane_util[l] + add
+                ));
+            }
+        }
+        for (tier, add) in mid_add.iter().enumerate() {
+            if reason.is_none() && mid_util[tier] + add > LIMIT {
+                reason = Some(format!(
+                    "mid tier {} ('{}') utilization would reach {:.2}",
+                    tier,
+                    tiers[tier].name,
+                    mid_util[tier] + add
+                ));
+            }
+        }
+        if reason.is_none() && srv_util + srv_add > LIMIT {
+            reason = Some(format!(
+                "server tier ('{}') utilization would reach {:.2}",
+                tiers.last().expect("validated").name,
+                srv_util + srv_add
+            ));
+        }
+        match reason {
+            Some(r) => out.push(Some(format!(
+                "rejected by admission control: {r} (> 1 at the bottleneck)"
+            ))),
+            None => {
+                for (l, add) in lane_add.iter().enumerate() {
+                    lane_util[l] += add;
+                }
+                for (tier, add) in mid_add.iter().enumerate() {
+                    mid_util[tier] += add;
+                }
+                srv_util += srv_add;
+                out.push(None);
+            }
+        }
+    }
+    out
+}
+
+/// Reduce one client's record slice (its contiguous arena span) to a
+/// per-tenant outcome judged against its own QoS.
+fn client_outcome(
+    c: usize,
+    spec: &ClientSpec,
+    reason: Option<String>,
+    recs: &[StreamFrameRecord],
+) -> ClientOutcome {
+    let label = format!(
+        "{} {} {}",
+        spec.kind,
+        spec.arch.as_str(),
+        spec.scale.as_str()
+    );
+    if let Some(r) = reason {
+        let has_constraints = spec.qos.max_latency_ns.is_some()
+            || spec.qos.min_accuracy.is_some();
+        return ClientOutcome {
+            client: c,
+            label,
+            admitted: false,
+            reject_reason: Some(r),
+            frames: 0,
+            accuracy: None,
+            mean_latency_ns: 0.0,
+            p95_latency_ns: 0,
+            max_latency_ns: 0,
+            deadline_hit_rate: None,
+            // A rejected stream serves nothing: a constrained QoS is
+            // definitively violated, an unconstrained one stays open.
+            qos_satisfied: if has_constraints { Some(false) } else { None },
+        };
+    }
+    let n = recs.len().max(1);
+    let mut lat: Vec<SimTime> = recs.iter().map(|r| r.latency_ns).collect();
+    let mean_latency_ns =
+        lat.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+    let max_latency_ns = lat.iter().copied().max().unwrap_or(0);
+    let p95_latency_ns = percentile_mut(&mut lat, 0.95);
+    let measured =
+        !recs.is_empty() && recs.iter().all(|r| r.correct.is_some());
+    let accuracy = if measured {
+        Some(
+            recs.iter().filter(|r| r.correct == Some(true)).count() as f64
+                / n as f64,
+        )
+    } else {
+        None
+    };
+    let deadline_hit_rate = spec.qos.max_latency_ns.map(|m| {
+        recs.iter().filter(|r| r.latency_ns <= m).count() as f64 / n as f64
+    });
+    let latency_ok = spec.qos.latency_ok(deadline_hit_rate);
+    let qos_satisfied =
+        match (spec.qos.max_latency_ns, spec.qos.min_accuracy, accuracy) {
+            (None, None, _) => None,
+            _ if !latency_ok => Some(false),
+            (_, Some(_), None) => None,
+            (_, _, acc) => Some(
+                spec.qos.satisfied_by(deadline_hit_rate, acc.unwrap_or(1.0)),
+            ),
+        };
+    ClientOutcome {
+        client: c,
+        label,
+        admitted: true,
+        reject_reason: None,
+        frames: recs.len(),
+        accuracy,
+        mean_latency_ns,
+        p95_latency_ns,
+        max_latency_ns,
+        deadline_hit_rate,
+        qos_satisfied,
+    }
+}
+
+/// Run a heterogeneous multi-tenant streaming simulation: per-client
+/// architecture / placement / scale / rate / weight / QoS over one shared
+/// tier chain, with optional admission control and DRR fairness.
+///
+/// `engines` maps each architecture to a loaded backend; every distinct
+/// `(arch, kind, scale)` combination resolves to one shared [`Profile`].
+/// Rejected clients emit nothing — admitted streams produce records
+/// byte-identical to a run where the rejected streams were never offered.
+/// The aggregate's records keep original client indices, grouped per
+/// client in emission order.
+pub fn run_hetero_stream(
+    engines: &[(Arch, &dyn InferenceBackend)],
+    cfg: &MultiStreamConfig,
+    dataset: Option<&Dataset>,
+    qos: &QosRequirements,
+) -> Result<HeteroStreamReport> {
+    if cfg.clients.is_empty() {
+        bail!("streaming needs at least one client");
+    }
+    if cfg.tiers.is_empty() {
+        bail!("multi-tenant streaming needs at least one device tier");
+    }
+    if cfg.hop_nets.is_empty() {
+        bail!(
+            "multi-tenant streaming needs at least one hop_nets entry \
+             (a single entry is replicated per hop with derived seeds)"
+        );
+    }
+    let phys_hops = cfg.tiers.len() - 1;
+    if cfg.hop_nets.len() > 1 && cfg.hop_nets.len() != phys_hops {
+        bail!(
+            "tier chain has {} inter-tier hops but {} hop_nets entries \
+             (give one per hop, or a single template to replicate)",
+            phys_hops,
+            cfg.hop_nets.len()
+        );
+    }
+    if let Some(ds) = dataset {
+        if ds.len() == 0 {
+            bail!("streaming needs a non-empty dataset in full mode");
+        }
+    }
+    for (i, spec) in cfg.clients.iter().enumerate() {
+        if spec.frames == 0 {
+            bail!("clients[{i}]: needs at least one frame");
+        }
+        if spec.weight == 0 {
+            bail!("clients[{i}]: weight must be >= 1");
+        }
+    }
+
+    // Resolve one profile per distinct (arch, kind, scale).
+    let mut profiles: Vec<Profile> = Vec::new();
+    let mut keys: Vec<(Arch, ScenarioKind, ModelScale)> = Vec::new();
+    let mut prof = Vec::with_capacity(cfg.clients.len());
+    for (i, spec) in cfg.clients.iter().enumerate() {
+        let key = (spec.arch, spec.kind.clone(), spec.scale);
+        let idx = match keys.iter().position(|k| *k == key) {
+            Some(idx) => idx,
+            None => {
+                let engine = engines
+                    .iter()
+                    .find(|(a, _)| *a == spec.arch)
+                    .map(|(_, e)| *e)
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "clients[{i}]: no inference backend loaded \
+                             for arch '{}'",
+                            spec.arch.as_str()
+                        )
+                    })?;
+                profiles.push(
+                    build_profile(
+                        engine,
+                        &spec.kind,
+                        spec.scale,
+                        cfg.tiers.len(),
+                        dataset.is_some(),
+                    )
+                    .map_err(|e| anyhow!("clients[{i}]: {e}"))?,
+                );
+                keys.push(key);
+                profiles.len() - 1
+            }
+        };
+        prof.push(idx);
+    }
+
+    let hop_nets: Vec<NetworkConfig> = (0..phys_hops.max(1))
+        .map(|h| derive_hop_net(&cfg.hop_nets, h))
+        .collect();
+    let reasons: Vec<Option<String>> = if cfg.admission {
+        admission_reasons(
+            &cfg.clients,
+            &profiles,
+            &prof,
+            &cfg.tiers,
+            &hop_nets,
+            &cfg.batch,
+        )
+    } else {
+        vec![None; cfg.clients.len()]
+    };
+    let fpc: Vec<usize> = cfg
+        .clients
+        .iter()
+        .zip(&reasons)
+        .map(|(s, r)| if r.is_none() { s.frames } else { 0 })
+        .collect();
+
+    let channels: Vec<Channel> =
+        hop_nets.iter().cloned().map(Channel::new).collect();
+    let setup = StreamSetup {
+        profiles,
+        prof,
+        period: cfg.clients.iter().map(|s| s.frame_period_ns).collect(),
+        fpc: fpc.clone(),
+        weight: cfg.clients.iter().map(|s| s.weight).collect(),
+        tiers: cfg.tiers.clone(),
+        batch: cfg.batch,
+        fairness: cfg.fairness,
+        queue: cfg.queue,
+        dataset,
+    };
+    let (records, stats) = simulate(&setup, channels)?;
+    let aggregate = StreamReport::from_parts(
+        cfg.clients.len(),
+        cfg.offered_fps(),
+        records,
+        stats,
+        qos,
+    );
+
+    let mut outcomes = Vec::with_capacity(cfg.clients.len());
+    let mut off = 0usize;
+    for ((c, spec), reason) in
+        cfg.clients.iter().enumerate().zip(reasons.into_iter())
+    {
+        let k = fpc[c];
+        let recs = &aggregate.records[off..off + k];
+        off += k;
+        outcomes.push(client_outcome(c, spec, reason, recs));
+    }
+    Ok(HeteroStreamReport { outcomes, aggregate })
+}
+
+// ---------------------------------------------------------------------------
+// Clients-spec JSON.
+// ---------------------------------------------------------------------------
+
+const CLIENT_KEYS: [&str; 11] = [
+    "count",
+    "scenario",
+    "arch",
+    "scale",
+    "fps",
+    "frame_period_ns",
+    "frames",
+    "weight",
+    "max_latency_ms",
+    "min_accuracy",
+    "min_hit_rate",
+];
+
+/// Parse a clients-spec document (`sei serve --clients-spec`): either a
+/// bare JSON array of client entries or `{"clients": [...]}`. Every
+/// entry requires `"scenario"`; optional keys are `count` (bulk
+/// expansion), `arch`, `scale`, `fps` *or* `frame_period_ns`, `frames`,
+/// `weight` and the QoS bounds `max_latency_ms` / `min_accuracy` /
+/// `min_hit_rate`. Errors name the offending entry as `clients[i]`.
+pub fn parse_clients_spec(text: &str) -> Result<Vec<ClientSpec>> {
+    let json = Json::parse(text)?;
+    parse_client_entries(&json)
+}
+
+/// [`parse_clients_spec`] over an already-parsed [`Json`] value.
+pub fn parse_client_entries(json: &Json) -> Result<Vec<ClientSpec>> {
+    let entries = match json {
+        Json::Arr(items) => items,
+        _ => json
+            .get("clients")
+            .map_err(|_| {
+                anyhow!(
+                    "clients spec must be a JSON array of client entries \
+                     or an object with a 'clients' array"
+                )
+            })?
+            .arr()?,
+    };
+    let mut out = Vec::new();
+    for (i, e) in entries.iter().enumerate() {
+        let Json::Obj(map) = e else {
+            bail!("clients[{i}]: each entry must be a JSON object");
+        };
+        if let Some(k) =
+            map.keys().find(|k| !CLIENT_KEYS.contains(&k.as_str()))
+        {
+            bail!(
+                "clients[{i}]: unknown key '{k}' (known: {})",
+                CLIENT_KEYS.join(", ")
+            );
+        }
+        let ctx = |err: anyhow::Error| anyhow!("clients[{i}]: {err}");
+        let kind_s = e
+            .get("scenario")
+            .map_err(|_| {
+                anyhow!("clients[{i}]: missing required key 'scenario'")
+            })?
+            .str()
+            .map_err(ctx)?;
+        let kind = ScenarioKind::parse(kind_s).map_err(ctx)?;
+        let arch = match e.opt("arch") {
+            Some(v) => Arch::parse(v.str().map_err(ctx)?).map_err(ctx)?,
+            None => Arch::Vgg16,
+        };
+        let scale = match e.opt("scale") {
+            Some(v) => {
+                ModelScale::parse(v.str().map_err(ctx)?).map_err(ctx)?
+            }
+            None => ModelScale::Slim,
+        };
+        let frames = match e.opt("frames") {
+            Some(v) => v.usize().map_err(ctx)?,
+            None => 64,
+        };
+        if frames == 0 {
+            bail!("clients[{i}]: frames must be >= 1");
+        }
+        let weight = match e.opt("weight") {
+            Some(v) => v.u64().map_err(ctx)?,
+            None => 1,
+        };
+        if weight == 0 {
+            bail!("clients[{i}]: weight must be >= 1");
+        }
+        let count = match e.opt("count") {
+            Some(v) => v.usize().map_err(ctx)?,
+            None => 1,
+        };
+        if count == 0 {
+            bail!("clients[{i}]: count must be >= 1");
+        }
+        let frame_period_ns = match (e.opt("fps"), e.opt("frame_period_ns"))
+        {
+            (Some(_), Some(_)) => bail!(
+                "clients[{i}]: give 'fps' or 'frame_period_ns', not both"
+            ),
+            (Some(v), None) => {
+                let fps = v.f64().map_err(ctx)?;
+                if !fps.is_finite() || fps <= 0.0 || fps > 1e9 {
+                    bail!(
+                        "clients[{i}]: fps must be a positive number \
+                         <= 1e9, got {fps}"
+                    );
+                }
+                (1e9 / fps).round() as SimTime
+            }
+            (None, Some(v)) => v.u64().map_err(ctx)?,
+            (None, None) => 0,
+        };
+        let bound = |key: &str| -> Result<Option<f64>> {
+            e.opt(key)
+                .map(|v| v.f64())
+                .transpose()
+                .map_err(|err| anyhow!("clients[{i}]: {err}"))
+        };
+        let qos = QosRequirements::from_bounds(
+            bound("max_latency_ms")?,
+            bound("min_accuracy")?,
+            bound("min_hit_rate")?,
+        )
+        .map_err(ctx)?;
+        let spec = ClientSpec {
+            kind,
+            arch,
+            scale,
+            frame_period_ns,
+            frames,
+            weight,
+            qos,
+        };
+        out.extend(std::iter::repeat_with(|| spec.clone()).take(count));
+    }
+    if out.is_empty() {
+        bail!("clients spec contains no client entries");
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -1372,5 +2425,194 @@ mod tests {
         assert_eq!(unbatched.stats.mean_batch_size(), 1.0);
         assert!(batched.stats.mean_batch_size() > 1.0);
         assert_eq!(batched.frames, unbatched.frames);
+    }
+
+    #[test]
+    fn linear_scan_backend_matches_calendar_exactly() {
+        let eng = engine();
+        let cfg = StreamConfig {
+            scenario: scenario(150_000),
+            clients: 4,
+            frames_per_client: 10,
+            batch: BatchPolicy::new(4, 1_000_000),
+        };
+        let qos = QosRequirements::none();
+        let cal = run_stream_with_queue(
+            &*eng,
+            &cfg,
+            None,
+            &qos,
+            QueueKind::Calendar,
+        )
+        .unwrap();
+        let lin = run_stream_with_queue(
+            &*eng,
+            &cfg,
+            None,
+            &qos,
+            QueueKind::LinearScan,
+        )
+        .unwrap();
+        assert_eq!(cal.records, lin.records);
+        assert_eq!(
+            cal.stats.events_processed,
+            lin.stats.events_processed
+        );
+        assert!(cal.stats.events_processed > 0);
+    }
+
+    fn hetero_cfg(clients: Vec<ClientSpec>) -> MultiStreamConfig {
+        MultiStreamConfig {
+            clients,
+            hop_nets: vec![NetworkConfig::gigabit(Protocol::Udp, 0.0, 9)],
+            tiers: vec![
+                DeviceProfile::edge_gpu(),
+                DeviceProfile::server_gpu(),
+            ],
+            batch: BatchPolicy::immediate(),
+            fairness: Fairness::Drr,
+            admission: true,
+            queue: QueueKind::Calendar,
+        }
+    }
+
+    #[test]
+    fn hetero_mixed_kinds_conserve_frames() {
+        let eng = engine();
+        let engines: Vec<(Arch, &dyn InferenceBackend)> =
+            vec![(Arch::Vgg16, &*eng)];
+        let mut rc = ClientSpec::new(ScenarioKind::Rc);
+        rc.frame_period_ns = 2_000_000;
+        rc.frames = 6;
+        let mut sc = ClientSpec::new(ScenarioKind::Sc { split: 9 });
+        sc.frame_period_ns = 3_000_000;
+        sc.frames = 4;
+        let cfg = hetero_cfg(vec![rc, sc]);
+        let r = run_hetero_stream(
+            &engines,
+            &cfg,
+            None,
+            &QosRequirements::none(),
+        )
+        .unwrap();
+        assert_eq!(r.admitted(), 2);
+        assert_eq!(r.aggregate.frames, 10);
+        // Records are grouped per client, each stream complete and in
+        // frame order.
+        assert!(r.aggregate.records[..6]
+            .iter()
+            .enumerate()
+            .all(|(f, rec)| rec.client == 0 && rec.frame == f));
+        assert!(r.aggregate.records[6..]
+            .iter()
+            .enumerate()
+            .all(|(f, rec)| rec.client == 1 && rec.frame == f));
+        assert_eq!(r.outcomes[0].frames, 6);
+        assert_eq!(r.outcomes[1].frames, 4);
+        assert!(r.outcomes.iter().all(|o| o.reject_reason.is_none()));
+    }
+
+    #[test]
+    fn admission_rejects_unservable_stream_and_isolates_the_rest() {
+        let eng = engine();
+        let engines: Vec<(Arch, &dyn InferenceBackend)> =
+            vec![(Arch::Vgg16, &*eng)];
+        // The light, servable client comes FIRST so its greedy admission
+        // decision cannot depend on the hog behind it.
+        let mut light = ClientSpec::new(ScenarioKind::Rc);
+        light.frame_period_ns = 5_000_000;
+        light.frames = 4;
+        // A 1 ns frame period is beyond any resource's service rate.
+        let mut hog = ClientSpec::new(ScenarioKind::Sc { split: 9 });
+        hog.frame_period_ns = 1;
+        hog.frames = 4;
+        let both = hetero_cfg(vec![light.clone(), hog]);
+        let r = run_hetero_stream(
+            &engines,
+            &both,
+            None,
+            &QosRequirements::none(),
+        )
+        .unwrap();
+        assert_eq!(r.admitted(), 1);
+        assert!(r.outcomes[0].admitted);
+        assert!(!r.outcomes[1].admitted);
+        let reason = r.outcomes[1].reject_reason.as_deref().unwrap();
+        assert!(reason.contains("admission"), "{reason}");
+        assert_eq!(r.outcomes[1].frames, 0);
+        // The admitted stream's records are byte-identical to a run where
+        // the rejected stream was never offered.
+        let solo = hetero_cfg(vec![light]);
+        let s = run_hetero_stream(
+            &engines,
+            &solo,
+            None,
+            &QosRequirements::none(),
+        )
+        .unwrap();
+        assert_eq!(r.aggregate.records, s.aggregate.records);
+    }
+
+    #[test]
+    fn clients_spec_parses_and_expands_counts() {
+        let specs = parse_clients_spec(
+            r#"[
+                {"scenario": "rc", "count": 2, "fps": 20.0},
+                {"scenario": "sc@9", "frames": 5, "weight": 3,
+                 "max_latency_ms": 50.0}
+            ]"#,
+        )
+        .unwrap();
+        assert_eq!(specs.len(), 3);
+        assert!(matches!(specs[0].kind, ScenarioKind::Rc));
+        assert!(matches!(specs[1].kind, ScenarioKind::Rc));
+        assert_eq!(specs[0].frame_period_ns, 50_000_000);
+        assert!(matches!(specs[2].kind, ScenarioKind::Sc { split: 9 }));
+        assert_eq!(specs[2].frames, 5);
+        assert_eq!(specs[2].weight, 3);
+        assert_eq!(specs[2].qos.max_latency_ns, Some(50_000_000));
+        // The wrapped-object form parses identically.
+        let wrapped = parse_clients_spec(
+            r#"{"clients": [{"scenario": "lc"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(wrapped.len(), 1);
+        assert!(matches!(wrapped[0].kind, ScenarioKind::Lc));
+    }
+
+    #[test]
+    fn clients_spec_errors_name_the_offending_entry() {
+        let err = parse_clients_spec(
+            r#"[{"scenario": "rc"}, {"scenario": "rc", "color": 1}]"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(
+            err.contains("clients[1]") && err.contains("color"),
+            "{err}"
+        );
+        let err = parse_clients_spec(
+            r#"[{"scenario": "rc", "fps": 20, "frame_period_ns": 100}]"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("not both"), "{err}");
+        let err = parse_clients_spec(r#"[{"count": 3}]"#)
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("clients[0]") && err.contains("scenario"),
+            "{err}"
+        );
+        let err = parse_clients_spec(
+            r#"[{"scenario": "rc", "min_accuracy": 1.5}]"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(
+            err.contains("clients[0]") && err.contains("min_accuracy"),
+            "{err}"
+        );
+        assert!(parse_clients_spec("[]").is_err());
     }
 }

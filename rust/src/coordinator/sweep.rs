@@ -8,7 +8,10 @@
 //! (concurrent `clients`, per-client `offered_fps`), and the device
 //! tier-chain axis (`tiers`: sensor → edge → cloud placements) — plus the
 //! fixed evaluation parameters (frames, seeds, batching policy, QoS
-//! bounds).
+//! bounds). Named heterogeneous tenant mixes (`client_mixes`) add
+//! multi-tenant grid points that run on
+//! [`super::streaming::run_hetero_stream`] (per-client arch/placement/
+//! rate, DRR fairness, admission control).
 //! Every grid point executes on the closed-loop streaming engine
 //! ([`super::streaming`]), so overloaded points report queueing latency
 //! and saturated throughput instead of an open-loop fiction.
@@ -57,10 +60,13 @@ use super::qos::QosRequirements;
 use super::scenario::{
     run_scenario, ModelScale, ScenarioConfig, ScenarioKind, ScenarioReport,
 };
-use super::streaming::{pooled_stream, StreamConfig};
+use super::streaming::{
+    parse_client_entries, pooled_hetero_stream, pooled_stream, ClientSpec,
+    Fairness, MultiStreamConfig, StreamConfig,
+};
 use crate::data::Dataset;
 use crate::model::{Arch, DeviceProfile};
-use crate::netsim::event::SimTime;
+use crate::netsim::event::{QueueKind, SimTime};
 use crate::netsim::transfer::{NetworkConfig, Protocol};
 use crate::report::csv::Csv;
 use crate::report::pareto::pareto_frontier;
@@ -133,6 +139,14 @@ pub struct SweepSpec {
     /// Ordered cut chains added to the scenario axis as
     /// [`ScenarioKind::Mc`] entries (strictly increasing split ids).
     pub cut_chains: Vec<Vec<usize>>,
+    /// Named heterogeneous tenant mixes. Each mix adds one grid point per
+    /// channel × tier combination, executed on the multi-tenant engine
+    /// ([`super::streaming::run_hetero_stream`]: DRR fairness, admission
+    /// control, indexed event calendar) instead of the homogeneous
+    /// clients × offered_fps axes — the mix pins every tenant's scenario,
+    /// arch, scale, rate, frame count and per-tenant QoS itself, so the
+    /// homogeneous scenario / scale / arch / load axes do not multiply it.
+    pub client_mixes: Vec<ClientMix>,
     /// Explicit per-hop channel specs (sensor side first), each a
     /// [`NetworkConfig::parse`] string (`wifi:udp:loss=0.01`,
     /// `gigabit:tcp`, `radio@5e7+3000000`). Empty = the channel chain is
@@ -186,6 +200,18 @@ pub struct SweepJob {
     /// Explicit per-hop channel specs (empty = derived from the
     /// protocol/channel/latency/loss fields above).
     pub hop_nets: Vec<String>,
+    /// `Some(i)` = this point runs `spec.client_mixes[i]` on the
+    /// multi-tenant engine; the scenario / arch / scale columns then label
+    /// the mix's first tenant and `clients` counts the whole mix.
+    pub mix: Option<usize>,
+}
+
+/// A named heterogeneous tenant mix swept as one grid point per channel ×
+/// tier combination (see [`SweepSpec::client_mixes`]).
+#[derive(Clone, Debug)]
+pub struct ClientMix {
+    pub name: String,
+    pub clients: Vec<ClientSpec>,
 }
 
 /// Resolve a channel-preset name into its [`NetworkConfig`].
@@ -223,6 +249,7 @@ impl SweepSpec {
             offered_fps: Vec::new(),
             tiers: Vec::new(),
             cut_chains: Vec::new(),
+            client_mixes: Vec::new(),
             hop_nets: Vec::new(),
             edge: "edge-gpu".to_string(),
             server: "server-gpu".to_string(),
@@ -268,7 +295,10 @@ impl SweepSpec {
     /// chains of matching length (`cuts + 1`), and it is an error for an
     /// MC scenario to match none of them.
     pub fn expand(&self) -> Result<Vec<SweepJob>> {
-        if self.scenarios.is_empty() && self.cut_chains.is_empty() {
+        if self.scenarios.is_empty()
+            && self.cut_chains.is_empty()
+            && self.client_mixes.is_empty()
+        {
             bail!("sweep spec '{}' has no scenarios", self.name);
         }
         if self.protocols.is_empty() {
@@ -377,6 +407,54 @@ impl SweepSpec {
                      and strictly increasing",
                     self.name
                 );
+            }
+        }
+        // Tenant mixes are validated eagerly with the same rigor as the
+        // homogeneous axes: an unservable mix fails here, not inside a
+        // worker thread mid-sweep.
+        for (mi, mix) in self.client_mixes.iter().enumerate() {
+            if mix.clients.is_empty() {
+                bail!(
+                    "sweep spec '{}': client_mixes[{mi}] ('{}') has no \
+                     clients",
+                    self.name,
+                    mix.name
+                );
+            }
+            for (ci, c) in mix.clients.iter().enumerate() {
+                if c.frames == 0 || c.weight == 0 {
+                    bail!(
+                        "sweep spec '{}': client_mixes[{mi}] ('{}') client \
+                         {ci} needs frames >= 1 and weight >= 1",
+                        self.name,
+                        mix.name
+                    );
+                }
+                if let ScenarioKind::Mc { cuts } = &c.kind {
+                    if !crate::model::is_ordered_chain(cuts) {
+                        bail!(
+                            "sweep spec '{}': client_mixes[{mi}] ('{}') \
+                             client {ci}: cut chain {cuts:?} must be \
+                             non-empty and strictly increasing",
+                            self.name,
+                            mix.name
+                        );
+                    }
+                    let n = crate::model::split_points(&c.arch.full_network())
+                        .len();
+                    if cuts.iter().any(|&x| x + 1 >= n) {
+                        bail!(
+                            "sweep spec '{}': client_mixes[{mi}] ('{}') \
+                             client {ci}: cut chain {cuts:?} out of range \
+                             for {} ({} cut points, valid 0..={})",
+                            self.name,
+                            mix.name,
+                            c.arch.as_str(),
+                            n,
+                            n.saturating_sub(2),
+                        );
+                    }
+                }
             }
         }
         // Explicit per-hop channels go through the shared spec grammar and
@@ -510,6 +588,7 @@ impl SweepSpec {
                                                             hop_nets: self
                                                                 .hop_nets
                                                                 .clone(),
+                                                            mix: None,
                                                         }
                                                     }
                                                     None => SweepJob {
@@ -526,6 +605,7 @@ impl SweepSpec {
                                                         offered_fps,
                                                         tiers: chain.clone(),
                                                         hop_nets: Vec::new(),
+                                                        mix: None,
                                                     },
                                                 });
                                             }
@@ -543,6 +623,93 @@ impl SweepSpec {
                      tier chain (MC with k cuts needs a {}-tier chain)",
                     self.name,
                     kind.tiers_needed(),
+                );
+            }
+        }
+        // Tenant-mix points ride only the channel and tier axes: the mix
+        // itself pins each tenant's scenario / arch / scale / rate, so the
+        // homogeneous scenario × scale × arch × load axes do not multiply
+        // it. The labelling columns come from the mix's first tenant.
+        for (mi, mix) in self.client_mixes.iter().enumerate() {
+            let before = jobs.len();
+            for &protocol in &self.protocols {
+                for channel in &self.channels {
+                    for &latency_us in &lats {
+                        for &loss in &self.loss_rates {
+                            for chain in &tier_chains {
+                                // An MC tenant pairs only with chains of
+                                // matching length, exactly like the
+                                // homogeneous MC rule.
+                                let mc_mismatch =
+                                    mix.clients.iter().any(|c| match &c.kind {
+                                        ScenarioKind::Mc { cuts } => {
+                                            chain.len() != cuts.len() + 1
+                                        }
+                                        _ => false,
+                                    });
+                                if mc_mismatch {
+                                    continue;
+                                }
+                                if self.hop_nets.len() > 1
+                                    && self.hop_nets.len() != chain.len() - 1
+                                {
+                                    bail!(
+                                        "sweep spec '{}': client_mixes[{mi}] \
+                                         ('{}') pairs with a {}-tier chain \
+                                         but hop_nets lists {} channels \
+                                         (the multi-tenant engine needs one \
+                                         per physical hop)",
+                                        self.name,
+                                        mix.name,
+                                        chain.len(),
+                                        self.hop_nets.len()
+                                    );
+                                }
+                                let lead = &mix.clients[0];
+                                jobs.push(match &hop0 {
+                                    Some((spec0, net0)) => SweepJob {
+                                        index: jobs.len(),
+                                        kind: lead.kind.clone(),
+                                        protocol: net0.protocol,
+                                        channel: spec0.clone(),
+                                        latency_us: None,
+                                        loss: net0.loss_rate,
+                                        scale: lead.scale,
+                                        arch: lead.arch,
+                                        clients: mix.clients.len(),
+                                        offered_fps: None,
+                                        tiers: chain.clone(),
+                                        hop_nets: self.hop_nets.clone(),
+                                        mix: Some(mi),
+                                    },
+                                    None => SweepJob {
+                                        index: jobs.len(),
+                                        kind: lead.kind.clone(),
+                                        protocol,
+                                        channel: channel.clone(),
+                                        latency_us,
+                                        loss,
+                                        scale: lead.scale,
+                                        arch: lead.arch,
+                                        clients: mix.clients.len(),
+                                        offered_fps: None,
+                                        tiers: chain.clone(),
+                                        hop_nets: Vec::new(),
+                                        mix: Some(mi),
+                                    },
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+            if jobs.len() == before {
+                bail!(
+                    "sweep spec '{}': client_mixes[{mi}] ('{}') has no \
+                     compatible tier chain (an MC tenant with k cuts needs \
+                     a (k+1)-tier chain)",
+                    self.name,
+                    mix.name
                 );
             }
         }
@@ -575,12 +742,12 @@ impl SweepSpec {
     /// the schema). The grid is validated eagerly, so an invalid spec
     /// fails here rather than inside a worker thread.
     pub fn from_json(text: &str) -> Result<SweepSpec> {
-        const KEYS: [&str; 27] = [
+        const KEYS: [&str; 28] = [
             "name", "mode", "scenarios", "protocols", "channels",
             "latencies_us", "loss_rates", "scales", "archs", "clients",
-            "offered_fps", "tiers", "cut_chains", "hop_nets", "edge",
-            "server", "dataset", "frames", "seeds_per_point", "seed", "fps",
-            "frame_period_ns", "max_latency_ms", "min_accuracy",
+            "offered_fps", "tiers", "cut_chains", "client_mixes", "hop_nets",
+            "edge", "server", "dataset", "frames", "seeds_per_point", "seed",
+            "fps", "frame_period_ns", "max_latency_ms", "min_accuracy",
             "min_hit_rate", "max_batch", "batch_wait_us",
         ];
         let j = Json::parse(text).context("parsing sweep spec")?;
@@ -652,6 +819,26 @@ impl SweepSpec {
                 .arr()?
                 .iter()
                 .map(|chain| chain.usize_vec())
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = j.opt("client_mixes") {
+            spec.client_mixes = v
+                .arr()?
+                .iter()
+                .enumerate()
+                .map(|(i, m)| -> Result<ClientMix> {
+                    let name = match m.opt("name") {
+                        Some(n) => n.str()?.to_string(),
+                        None => format!("mix{i}"),
+                    };
+                    let clients = m
+                        .get("clients")
+                        .and_then(|c| parse_client_entries(c))
+                        .with_context(|| {
+                            format!("client_mixes[{i}] ('{name}')")
+                        })?;
+                    Ok(ClientMix { name, clients })
+                })
                 .collect::<Result<_>>()?;
         }
         if let Some(v) = j.opt("hop_nets") {
@@ -820,6 +1007,28 @@ impl SweepSpec {
                 ),
             ),
             (
+                "client_mixes",
+                json::arr(
+                    self.client_mixes
+                        .iter()
+                        .map(|m| {
+                            json::obj(vec![
+                                ("name", json::s(&m.name)),
+                                (
+                                    "clients",
+                                    json::arr(
+                                        m.clients
+                                            .iter()
+                                            .map(client_spec_json)
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
                 "hop_nets",
                 json::arr(
                     self.hop_nets.iter().map(|h| json::s(h)).collect(),
@@ -839,6 +1048,30 @@ impl SweepSpec {
             ("batch_wait_us", json::num(self.batch_wait_us)),
         ])
     }
+}
+
+/// Serialize one tenant back to the client-entry schema accepted by
+/// [`parse_client_entries`], so a spec with mixes round-trips through
+/// [`SweepSpec::to_json`] / [`SweepSpec::from_json`] losslessly.
+fn client_spec_json(c: &ClientSpec) -> Json {
+    let mut fields = vec![
+        ("scenario", json::s(&c.kind.to_string())),
+        ("arch", json::s(c.arch.as_str())),
+        ("scale", json::s(c.scale.as_str())),
+        ("frame_period_ns", json::num(c.frame_period_ns as f64)),
+        ("frames", json::num(c.frames as f64)),
+        ("weight", json::num(c.weight as f64)),
+    ];
+    if let Some(ns) = c.qos.max_latency_ns {
+        fields.push(("max_latency_ms", json::num(ns as f64 / 1e6)));
+    }
+    if let Some(acc) = c.qos.min_accuracy {
+        fields.push(("min_accuracy", json::num(acc)));
+    }
+    if c.qos.min_hit_rate != 1.0 {
+        fields.push(("min_hit_rate", json::num(c.qos.min_hit_rate)));
+    }
+    json::obj(fields)
 }
 
 /// Aggregated metrics of one grid point (pooled over its seeds).
@@ -861,6 +1094,8 @@ pub struct SweepPoint {
     pub tiers: Vec<String>,
     /// Explicit per-hop channel specs (empty = single derived channel).
     pub hop_nets: Vec<String>,
+    /// Name of the tenant mix this point ran (`None` = homogeneous).
+    pub mix: Option<String>,
     /// Total frames pooled into this point (clients × frames × seeds).
     pub frames: usize,
     /// Measured accuracy; `None` in latency-only sweeps.
@@ -906,13 +1141,42 @@ pub fn pooled_scenario(
     ScenarioReport::from_records(cfg, records, qos)
 }
 
-/// Execute one expanded job on `engine` — which must serve `job.arch`
-/// (the caller's per-arch backend cache guarantees it). Deterministic in
-/// `(spec, job)` alone: the channel seeds are `spec.seed + s`, never
-/// thread state. Both modes ride the closed-loop streaming engine;
-/// latency-only mode simply skips model execution (`dataset: None`).
+/// The architectures a job touches: its own axis value, plus (for a
+/// tenant-mix point) every tenant's. Callers preload one backend per
+/// entry before dispatching the job.
+fn job_archs(spec: &SweepSpec, job: &SweepJob) -> Vec<Arch> {
+    let mut archs = vec![job.arch];
+    if let Some(m) = job.mix {
+        for c in &spec.client_mixes[m].clients {
+            if !archs.contains(&c.arch) {
+                archs.push(c.arch);
+            }
+        }
+    }
+    archs
+}
+
+fn engine_for<'e>(
+    engines: &'e HashMap<Arch, Box<dyn InferenceBackend>>,
+    arch: Arch,
+) -> Result<&'e dyn InferenceBackend> {
+    engines
+        .get(&arch)
+        .map(|e| &**e)
+        .ok_or_else(|| anyhow!("no backend loaded for {}", arch.as_str()))
+}
+
+/// Execute one expanded job against `engines` — which must hold a backend
+/// for every arch in [`job_archs`] (the caller's per-arch cache
+/// guarantees it). Deterministic in `(spec, job)` alone: the channel
+/// seeds are `spec.seed + s`, never thread state. Both modes ride the
+/// closed-loop streaming engine; latency-only mode simply skips model
+/// execution (`dataset: None`). Homogeneous points run [`pooled_stream`];
+/// tenant-mix points run the multi-tenant engine
+/// ([`pooled_hetero_stream`]: DRR fairness, admission control, indexed
+/// event calendar).
 fn run_job(
-    engine: &dyn InferenceBackend,
+    engines: &HashMap<Arch, Box<dyn InferenceBackend>>,
     dataset: Option<&Dataset>,
     spec: &SweepSpec,
     job: &SweepJob,
@@ -939,22 +1203,6 @@ fn run_job(
         .iter()
         .map(|d| DeviceProfile::parse(d))
         .collect::<Result<Vec<_>>>()?;
-    let frame_period_ns = match job.offered_fps {
-        Some(fps) => (1e9 / fps) as SimTime,
-        None => spec.frame_period_ns,
-    };
-    let cfg = StreamConfig {
-        scenario: ScenarioConfig {
-            kind: job.kind.clone(),
-            hop_nets,
-            tiers,
-            scale: job.scale,
-            frame_period_ns,
-        },
-        clients: job.clients,
-        frames_per_client: spec.frames,
-        batch: spec.batch_policy(),
-    };
     let seeds: Vec<u64> = (0..spec.seeds_per_point as u64)
         .map(|s| spec.seed.wrapping_add(s))
         .collect();
@@ -965,7 +1213,53 @@ fn run_job(
         ),
         SweepMode::LatencyOnly => None,
     };
-    let r = pooled_stream(engine, &cfg, ds, &seeds, &qos)?;
+    let (r, mix_name) = match job.mix {
+        None => {
+            let frame_period_ns = match job.offered_fps {
+                Some(fps) => (1e9 / fps) as SimTime,
+                None => spec.frame_period_ns,
+            };
+            let cfg = StreamConfig {
+                scenario: ScenarioConfig {
+                    kind: job.kind.clone(),
+                    hop_nets,
+                    tiers,
+                    scale: job.scale,
+                    frame_period_ns,
+                },
+                clients: job.clients,
+                frames_per_client: spec.frames,
+                batch: spec.batch_policy(),
+            };
+            let r = pooled_stream(
+                engine_for(engines, job.arch)?,
+                &cfg,
+                ds,
+                &seeds,
+                &qos,
+            )?;
+            (r, None)
+        }
+        Some(m) => {
+            let mix = &spec.client_mixes[m];
+            let cfg = MultiStreamConfig {
+                clients: mix.clients.clone(),
+                hop_nets,
+                tiers,
+                batch: spec.batch_policy(),
+                fairness: Fairness::Drr,
+                admission: true,
+                queue: QueueKind::Calendar,
+            };
+            let refs: Vec<(Arch, &dyn InferenceBackend)> =
+                job_archs(spec, job)
+                    .into_iter()
+                    .map(|a| Ok((a, engine_for(engines, a)?)))
+                    .collect::<Result<_>>()?;
+            let r = pooled_hetero_stream(&refs, &cfg, ds, &seeds, &qos)?;
+            (r, Some(mix.name.clone()))
+        }
+    };
     Ok(SweepPoint {
         index: job.index,
         kind: job.kind.clone(),
@@ -979,6 +1273,7 @@ fn run_job(
         offered_fps: job.offered_fps,
         tiers: job.tiers.clone(),
         hop_nets: job.hop_nets.clone(),
+        mix: mix_name,
         frames: r.frames,
         accuracy: r.accuracy,
         mean_latency_ns: r.mean_latency_ns,
@@ -1084,6 +1379,7 @@ impl SweepReport {
             "offered_fps",
             "tiers",
             "hop_nets",
+            "mix",
             "frames",
             "accuracy",
             "mean_latency_ms",
@@ -1111,6 +1407,7 @@ impl SweepReport {
                 p.offered_fps.map(|v| format!("{v}")).unwrap_or_default(),
                 p.tiers.join(">"),
                 p.hop_nets.join(">"),
+                p.mix.clone().unwrap_or_default(),
                 p.frames.to_string(),
                 p.accuracy.map(|a| format!("{a:.4}")).unwrap_or_default(),
                 format!("{:.4}", p.mean_latency_ns / 1e6),
@@ -1151,7 +1448,10 @@ impl SweepReport {
             .map(|(pos, p)| {
                 vec![
                     p.index.to_string(),
-                    p.kind.to_string(),
+                    match &p.mix {
+                        Some(name) => format!("mix:{name}"),
+                        None => p.kind.to_string(),
+                    },
                     format!("{} {}", p.protocol, p.channel),
                     format!("{:.1}%", p.loss * 100.0),
                     p.scale.as_str().to_string(),
@@ -1245,6 +1545,10 @@ fn point_json(p: &SweepPoint) -> Json {
             "hop_nets",
             json::arr(p.hop_nets.iter().map(|h| json::s(h)).collect()),
         ),
+        (
+            "mix",
+            p.mix.as_deref().map(json::s).unwrap_or(Json::Null),
+        ),
         ("frames", json::num(p.frames as f64)),
         ("accuracy", p.accuracy.map(json::num).unwrap_or(Json::Null)),
         ("mean_latency_ns", json::num(p.mean_latency_ns)),
@@ -1334,14 +1638,16 @@ pub fn run_sweep(
         let mut dataset: Option<Dataset> = None;
         let mut points = Vec::with_capacity(jobs.len());
         for job in &jobs {
-            if !engines.contains_key(&job.arch) {
-                engines.insert(job.arch, factory(job.arch)?);
+            for arch in job_archs(spec, job) {
+                if !engines.contains_key(&arch) {
+                    engines.insert(arch, factory(arch)?);
+                }
             }
-            let engine = engines.get(&job.arch).unwrap();
             if dataset.is_none() && spec.mode == SweepMode::Full {
+                let engine = engines.get(&job.arch).unwrap();
                 dataset = load_dataset(&**engine, spec)?;
             }
-            points.push(run_job(&**engine, dataset.as_ref(), spec, job)?);
+            points.push(run_job(&engines, dataset.as_ref(), spec, job)?);
         }
         return Ok(SweepReport::from_points(spec, points));
     }
@@ -1374,19 +1680,19 @@ pub fn run_sweep(
                     if i >= jobs.len() {
                         return;
                     }
-                    let arch = jobs[i].arch;
-                    if !engines.contains_key(&arch) {
-                        match factory(arch) {
-                            Ok(e) => {
-                                engines.insert(arch, e);
-                            }
-                            Err(e) => {
-                                return record_failure(&failed, &error, e)
+                    for arch in job_archs(spec, &jobs[i]) {
+                        if !engines.contains_key(&arch) {
+                            match factory(arch) {
+                                Ok(e) => {
+                                    engines.insert(arch, e);
+                                }
+                                Err(e) => {
+                                    return record_failure(&failed, &error, e)
+                                }
                             }
                         }
                     }
-                    let engine = engines.get(&arch).unwrap();
-                    match run_job(&**engine, dataset.as_ref(), spec, &jobs[i])
+                    match run_job(&engines, dataset.as_ref(), spec, &jobs[i])
                     {
                         Ok(p) => results.lock().unwrap()[i] = Some(p),
                         Err(e) => {
@@ -1771,6 +2077,138 @@ mod tests {
         // The report serializes to valid JSON.
         let j = Json::parse(&report.to_json().to_string()).unwrap();
         assert_eq!(j.get("total_points").unwrap().usize().unwrap(), 8);
+    }
+
+    #[test]
+    fn client_mix_axis_expands_and_runs() {
+        let mut spec = small_spec();
+        spec.scenarios = vec![ScenarioKind::Rc];
+        spec.protocols = vec![Protocol::Tcp];
+        spec.loss_rates = vec![0.0, 0.08];
+        spec.frames = 4;
+        let mut a = ClientSpec::new(ScenarioKind::Rc);
+        a.frame_period_ns = 2_000_000;
+        a.frames = 4;
+        let mut b = ClientSpec::new(ScenarioKind::Sc { split: 5 });
+        b.arch = Arch::ResNet18;
+        b.frame_period_ns = 3_000_000;
+        b.frames = 4;
+        spec.client_mixes = vec![ClientMix {
+            name: "duo".to_string(),
+            clients: vec![a, b],
+        }];
+        let jobs = spec.expand().unwrap();
+        // 2 homogeneous points (loss axis) + 2 mix points: the mix rides
+        // the channel axes but not scenario/scale/arch/load.
+        assert_eq!(jobs.len(), 4);
+        assert_eq!(jobs[0].mix, None);
+        assert_eq!(jobs[2].mix, Some(0));
+        assert_eq!(jobs[2].clients, 2);
+        assert_eq!(jobs[3].loss, 0.08);
+        // The mix point runs end-to-end on the multi-tenant engine, with
+        // a per-arch backend per worker (vgg16 + resnet18 here).
+        let report = run_sweep(&spec, 2, &factory).unwrap();
+        assert_eq!(report.points.len(), 4);
+        let p = &report.points[2];
+        assert_eq!(p.mix.as_deref(), Some("duo"));
+        assert_eq!(p.clients, 2);
+        assert_eq!(p.frames, 8);
+        assert!(p.accuracy.is_some());
+        assert!(p.mean_latency_ns > 0.0);
+        // JSON and CSV carry the mix column.
+        let j = report.to_json().to_string();
+        assert!(j.contains("\"mix\""), "{j}");
+        assert!(report.to_csv().to_string().contains("duo"));
+        // Mixed heterogeneous points stay thread-count deterministic.
+        let solo = run_sweep(&spec, 1, &factory).unwrap();
+        assert_eq!(solo.to_json().to_string(), j);
+        // An empty mix is rejected eagerly.
+        spec.client_mixes.push(ClientMix {
+            name: "empty".to_string(),
+            clients: Vec::new(),
+        });
+        let err = spec.expand().unwrap_err().to_string();
+        assert!(err.contains("client_mixes[1]"), "{err}");
+        // A zero-frame tenant is rejected eagerly.
+        let mut spec2 = small_spec();
+        let mut c = ClientSpec::new(ScenarioKind::Rc);
+        c.frames = 0;
+        spec2.client_mixes = vec![ClientMix {
+            name: "zero".to_string(),
+            clients: vec![c],
+        }];
+        assert!(spec2.expand().is_err());
+        // An MC tenant pairs only with tier chains of matching length.
+        let mut spec3 = small_spec();
+        spec3.scenarios = vec![ScenarioKind::Rc];
+        spec3.protocols = vec![Protocol::Tcp];
+        spec3.loss_rates = vec![0.0];
+        spec3.client_mixes = vec![ClientMix {
+            name: "mc".to_string(),
+            clients: vec![ClientSpec::new(ScenarioKind::Mc {
+                cuts: vec![5, 9],
+            })],
+        }];
+        let err = spec3.expand().unwrap_err().to_string();
+        assert!(err.contains("no compatible tier chain"), "{err}");
+        spec3.tiers = vec![vec![
+            "sensor-npu".into(),
+            "edge-gpu".into(),
+            "server-gpu".into(),
+        ]];
+        let jobs = spec3.expand().unwrap();
+        // RC homogeneous point + the MC mix point, both on the 3-tier
+        // chain.
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[1].mix, Some(0));
+        assert_eq!(jobs[1].tiers.len(), 3);
+    }
+
+    #[test]
+    fn from_json_parses_client_mixes() {
+        let spec = SweepSpec::from_json(
+            r#"{"scenarios": ["rc"], "protocols": ["tcp"],
+                "loss_rates": [0.0],
+                "client_mixes": [{"name": "duo", "clients": [
+                    {"scenario": "rc", "fps": 200, "frames": 4},
+                    {"scenario": "sc@5", "arch": "resnet18", "fps": 100,
+                     "frames": 4, "max_latency_ms": 25}
+                ]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.client_mixes.len(), 1);
+        assert_eq!(spec.client_mixes[0].name, "duo");
+        assert_eq!(spec.client_mixes[0].clients.len(), 2);
+        assert_eq!(spec.client_mixes[0].clients[0].frame_period_ns, 5_000_000);
+        assert_eq!(spec.client_mixes[0].clients[1].arch, Arch::ResNet18);
+        assert_eq!(spec.expand().unwrap().len(), 2);
+        // The grid round-trips through JSON with the mixes intact.
+        let back = SweepSpec::from_json(&spec.to_json().to_string()).unwrap();
+        assert_eq!(back.client_mixes[0].name, "duo");
+        assert_eq!(back.client_mixes[0].clients.len(), 2);
+        assert_eq!(
+            back.client_mixes[0].clients[1].qos.max_latency_ns,
+            Some(25_000_000)
+        );
+        assert_eq!(back.to_json().to_string(), spec.to_json().to_string());
+        // A malformed tenant entry names the offending mix.
+        let err = SweepSpec::from_json(
+            r#"{"scenarios": ["rc"], "protocols": ["tcp"],
+                "loss_rates": [0.0],
+                "client_mixes": [{"name": "bad",
+                                  "clients": [{"fps": 5}]}]}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("client_mixes[0]"), "{err:#}");
+        // A mix-only spec (no homogeneous scenarios) is valid.
+        let solo = SweepSpec::from_json(
+            r#"{"protocols": ["tcp"], "loss_rates": [0.0],
+                "client_mixes": [{"clients": [
+                    {"scenario": "rc", "frames": 2}]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(solo.client_mixes[0].name, "mix0");
+        assert_eq!(solo.expand().unwrap().len(), 1);
     }
 
     #[test]

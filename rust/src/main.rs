@@ -525,8 +525,22 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("tiers", "",
              "device tier chain, sensor first (mc@<k cuts> needs k+1 \
               tiers)")
+        .opt("clients-spec", "",
+             "JSON file of heterogeneous client entries (per-client \
+              scenario/arch/scale/rate/weight/QoS; overrides \
+              --scenario/--clients/--frames/--fps)")
+        .opt("fairness", "drr",
+             "drr | fifo service at shared resources (clients-spec mode)")
+        .opt("admission", "on",
+             "on | off: reject provably unservable streams \
+              (clients-spec mode)")
         .opt("seed", "42", "simulation seed")
         .parse(args)?;
+    if let Some(path) =
+        m.opt_str("clients-spec").filter(|s| !s.is_empty())
+    {
+        return serve_clients_from_spec(&m, path);
+    }
     let engine = backend_from(&m)?;
     let tiers = tiers_from(&m)?;
     let qos = QosRequirements::with_fps(m.f64("fps")?)?;
@@ -571,6 +585,70 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                                         m.usize("frames")?, &qos)?;
         print!("{}", report.render(&qos));
     }
+    Ok(())
+}
+
+/// The `serve --clients-spec` path: heterogeneous multi-tenant serving
+/// with per-client QoS, admission control and DRR fairness.
+fn serve_clients_from_spec(
+    m: &sei::util::cli::Matches,
+    path: &str,
+) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading clients spec '{path}'"))?;
+    let clients = coordinator::parse_clients_spec(&text)
+        .with_context(|| format!("in clients spec '{path}'"))?;
+    let batch = sei::coordinator::batcher::BatchPolicy::from_micros(
+        m.usize("max-batch")?,
+        m.f64("batch-wait-us")?,
+    )?;
+    let fairness = match m.str("fairness") {
+        "drr" => coordinator::Fairness::Drr,
+        "fifo" => coordinator::Fairness::Fifo,
+        other => bail!("unknown fairness '{other}' (drr | fifo)"),
+    };
+    let admission = match m.str("admission") {
+        "on" => true,
+        "off" => false,
+        other => bail!("unknown admission mode '{other}' (on | off)"),
+    };
+    let mut cfg = coordinator::MultiStreamConfig {
+        clients,
+        hop_nets: hop_nets_from(m)?,
+        tiers: tiers_from(m)?,
+        batch,
+        fairness,
+        admission,
+        queue: sei::netsim::QueueKind::Calendar,
+    };
+    let list = m.str("hop-nets");
+    if list.is_empty() || !list.contains("seed=") {
+        cfg.set_base_seed(m.u64("seed")?);
+    }
+    // One backend per distinct architecture in the mix.
+    let mut archs: Vec<Arch> = Vec::new();
+    for s in &cfg.clients {
+        if !archs.contains(&s.arch) {
+            archs.push(s.arch);
+        }
+    }
+    let backends: Vec<(Arch, Box<dyn InferenceBackend>)> = archs
+        .into_iter()
+        .map(|a| {
+            Ok((a, load_backend_for(Path::new(m.str("artifacts")), a)?))
+        })
+        .collect::<Result<_>>()?;
+    let engines: Vec<(Arch, &dyn InferenceBackend)> =
+        backends.iter().map(|(a, b)| (*a, &**b)).collect();
+    let qos = QosRequirements::with_fps(m.f64("fps")?)?;
+    let ice = backends[0].1.dataset("ice")?;
+    println!(
+        "ICE-Lab multi-tenant serving — platform {}",
+        backends[0].1.platform()
+    );
+    let report =
+        coordinator::serve_clients(&engines, &cfg, &ice, &qos)?;
+    print!("{}", report.render(&qos));
     Ok(())
 }
 

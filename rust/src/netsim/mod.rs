@@ -18,6 +18,6 @@ pub mod tcp;
 pub mod transfer;
 pub mod udp;
 
-pub use event::{from_secs, secs, SimTime};
+pub use event::{from_secs, secs, QueueKind, SimTime};
 pub use packet::Dir;
 pub use transfer::{Channel, NetworkConfig, Protocol, TransferResult};

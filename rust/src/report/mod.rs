@@ -10,4 +10,4 @@ pub mod stats;
 
 pub use figures::{fig2_report, fig3_report, fig4_report};
 pub use pareto::pareto_frontier;
-pub use stats::percentile;
+pub use stats::{percentile, percentile_mut};

@@ -23,6 +23,22 @@ pub fn percentile(sorted: &[u64], q: f64) -> u64 {
     sorted[rank - 1]
 }
 
+/// Nearest-rank percentile of an **unsorted** slice, by selection.
+///
+/// Same contract as [`percentile`] (rank `⌈q·n⌉`, 1-based; empty → 0) but
+/// O(n) per call via `select_nth_unstable` instead of an O(n log n) sort of
+/// a full clone — this is the per-report hot path once a run carries 10⁵
+/// client streams, each wanting its own p95/p99. The slice is reordered
+/// (partitioned around the selected rank), not sorted.
+pub fn percentile_mut(values: &mut [u64], q: f64) -> u64 {
+    if values.is_empty() {
+        return 0;
+    }
+    let n = values.len();
+    let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+    *values.select_nth_unstable(rank - 1).1
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -53,6 +69,60 @@ mod tests {
         let v = [1, 2, 3];
         assert_eq!(percentile(&v, 0.0), 1); // clamped to rank 1
         assert_eq!(percentile(&v, 1.0), 3);
+    }
+
+    #[test]
+    fn selection_empty_is_zero() {
+        let mut v: Vec<u64> = vec![];
+        assert_eq!(percentile_mut(&mut v, 0.95), 0);
+    }
+
+    #[test]
+    fn selection_single_sample() {
+        assert_eq!(percentile_mut(&mut [7], 0.5), 7);
+        assert_eq!(percentile_mut(&mut [7], 0.99), 7);
+        assert_eq!(percentile_mut(&mut [7], 0.0), 7);
+        assert_eq!(percentile_mut(&mut [7], 1.0), 7);
+    }
+
+    #[test]
+    fn selection_all_equal() {
+        for &q in &[0.0, 0.5, 0.95, 0.99, 1.0] {
+            let mut v = [42u64; 9];
+            assert_eq!(percentile_mut(&mut v, q), 42);
+        }
+    }
+
+    #[test]
+    fn selection_rank_bounds_are_clamped() {
+        // p0 clamps to rank 1 (the minimum), p100 to rank n (the maximum),
+        // regardless of input order.
+        let mut v = [3u64, 1, 2];
+        assert_eq!(percentile_mut(&mut v, 0.0), 1);
+        let mut v = [3u64, 1, 2];
+        assert_eq!(percentile_mut(&mut v, 1.0), 3);
+    }
+
+    /// Property: selection on a shuffled copy agrees with the sorted
+    /// nearest-rank reference at every quoted quantile.
+    #[test]
+    fn prop_selection_matches_sorted_reference() {
+        use crate::util::propcheck::{check, Config};
+        check("percentile_mut_matches", Config::default(), |c| {
+            let n = c.sized_range(1, 200);
+            let v: Vec<u64> =
+                (0..n).map(|_| c.rng.below(1_000_000)).collect();
+            let mut sorted = v.clone();
+            sorted.sort_unstable();
+            for &q in &[0.0, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                let mut scratch = v.clone();
+                if percentile_mut(&mut scratch, q) != percentile(&sorted, q)
+                {
+                    return Err(format!("divergence at q={q}"));
+                }
+            }
+            Ok(())
+        });
     }
 
     /// Property: the fraction of samples <= percentile(q) is >= q, and

@@ -1,0 +1,205 @@
+//! Differential pin of the event-queue backends: the indexed event
+//! calendar (binary heap on the packed `(time, seq)` key) must reproduce
+//! the retained linear next-event scan **byte for byte** — identical
+//! `StreamFrameRecord` streams and identical processed-event counts —
+//! across randomized draws over architecture × transport × loss ×
+//! tier chain × scenario kind (including MC cut chains) × client count ×
+//! source period × batching × seed.
+//!
+//! Both backends pop the event with the smallest packed key and every
+//! key is unique (the sequence number breaks time ties), so any
+//! divergence is an ordering bug in one of them, not a modeling change.
+//! The suite also carries the `mc@[i] == sc@i` two-tier pin under both
+//! backends: a one-cut MC chain is the same deployment as a split
+//! computing scenario, and the calendar must agree on that equivalence.
+
+use std::path::Path;
+
+use sei::coordinator::batcher::BatchPolicy;
+use sei::coordinator::{
+    run_stream_with_queue, ModelScale, QosRequirements, ScenarioConfig,
+    ScenarioKind, StreamConfig,
+};
+use sei::model::{split_points, Arch, DeviceProfile};
+use sei::netsim::transfer::{NetworkConfig, Protocol};
+use sei::netsim::QueueKind;
+use sei::runtime::{load_backend_for, InferenceBackend};
+
+/// Deterministic xorshift64* draw source — the test is randomized but
+/// reproducible (fixed seed, no thread or time dependence).
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+fn engine(arch: Arch) -> Box<dyn InferenceBackend> {
+    load_backend_for(Path::new("artifacts"), arch).expect("backend")
+}
+
+/// Cut ids usable for SC / MC on `arch` (away from the input and the
+/// terminal classifier, matching the analytic backend's validity rule).
+fn valid_cuts(arch: Arch) -> Vec<usize> {
+    let n = split_points(&arch.full_network()).len();
+    (1..n.saturating_sub(1)).collect()
+}
+
+#[test]
+fn randomized_draws_pin_calendar_to_linear_scan() {
+    let archs = [Arch::Vgg16, Arch::ResNet18, Arch::MobileNetV2];
+    let engines: Vec<Box<dyn InferenceBackend>> =
+        archs.iter().map(|&a| engine(a)).collect();
+    let datasets: Vec<_> = engines
+        .iter()
+        .map(|e| e.dataset("test").expect("dataset"))
+        .collect();
+    let qos = QosRequirements::ice_lab();
+    let mut rng = Rng(0x5EED_CA1E_4DA2_0001);
+
+    for draw in 0..24usize {
+        let ai = rng.below(archs.len() as u64) as usize;
+        let arch = archs[ai];
+        let cuts = valid_cuts(arch);
+        let protocol = if rng.below(2) == 0 {
+            Protocol::Tcp
+        } else {
+            Protocol::Udp
+        };
+        let loss = [0.0, 0.03, 0.08][rng.below(3) as usize];
+        let three_tier = rng.below(2) == 0;
+        let tiers = if three_tier {
+            vec![
+                DeviceProfile::parse("sensor-npu").unwrap(),
+                DeviceProfile::edge_gpu(),
+                DeviceProfile::server_gpu(),
+            ]
+        } else {
+            vec![DeviceProfile::edge_gpu(), DeviceProfile::server_gpu()]
+        };
+        let kind = if three_tier {
+            // Two ordered cuts for the 3-tier chain.
+            let i = rng.below(cuts.len() as u64 - 1) as usize;
+            let j = i + 1 + rng.below((cuts.len() - i - 1) as u64) as usize;
+            ScenarioKind::Mc { cuts: vec![cuts[i], cuts[j]] }
+        } else {
+            let s = cuts[rng.below(cuts.len() as u64) as usize];
+            match rng.below(4) {
+                0 => ScenarioKind::Lc,
+                1 => ScenarioKind::Rc,
+                2 => ScenarioKind::Sc { split: s },
+                _ => ScenarioKind::Mc { cuts: vec![s] },
+            }
+        };
+        let clients = 1 + rng.below(3) as usize;
+        let frames = 3 + rng.below(5) as usize;
+        let period = [0u64, 1_500_000][rng.below(2) as usize];
+        let batch = if rng.below(2) == 0 {
+            BatchPolicy::immediate()
+        } else {
+            BatchPolicy::from_micros(4, 500.0).unwrap()
+        };
+        let seed = rng.next();
+        let cfg = StreamConfig {
+            scenario: ScenarioConfig {
+                kind: kind.clone(),
+                hop_nets: vec![NetworkConfig::gigabit(protocol, loss, seed)],
+                tiers,
+                scale: ModelScale::Slim,
+                frame_period_ns: period,
+            },
+            clients,
+            frames_per_client: frames,
+            batch,
+        };
+        // Every fourth draw runs real inference so the pinned records
+        // carry correctness bits too, not just timing.
+        let dataset =
+            if draw % 4 == 0 { Some(&datasets[ai]) } else { None };
+        let cal = run_stream_with_queue(
+            &*engines[ai], &cfg, dataset, &qos, QueueKind::Calendar,
+        )
+        .unwrap();
+        let lin = run_stream_with_queue(
+            &*engines[ai], &cfg, dataset, &qos, QueueKind::LinearScan,
+        )
+        .unwrap();
+        assert_eq!(
+            cal.records, lin.records,
+            "draw {draw}: {kind} {} records diverged between backends",
+            arch.as_str()
+        );
+        assert_eq!(
+            cal.stats.events_processed, lin.stats.events_processed,
+            "draw {draw}: processed-event counts diverged"
+        );
+        assert!(cal.stats.events_processed > 0, "draw {draw}: empty run");
+        assert_eq!(cal.records.len(), clients * frames, "draw {draw}");
+    }
+}
+
+#[test]
+fn single_cut_mc_matches_sc_under_both_backends() {
+    for arch in [Arch::Vgg16, Arch::ResNet18, Arch::MobileNetV2] {
+        let engine = engine(arch);
+        let test = engine.dataset("test").unwrap();
+        let qos = QosRequirements::ice_lab();
+        let cuts = valid_cuts(arch);
+        let split = cuts[cuts.len() / 2];
+        let make = |kind: ScenarioKind| StreamConfig {
+            scenario: ScenarioConfig {
+                kind,
+                hop_nets: vec![NetworkConfig::gigabit(
+                    Protocol::Udp,
+                    0.05,
+                    7,
+                )],
+                tiers: vec![
+                    DeviceProfile::edge_gpu(),
+                    DeviceProfile::server_gpu(),
+                ],
+                scale: ModelScale::Slim,
+                frame_period_ns: 2_000_000,
+            },
+            clients: 2,
+            frames_per_client: 6,
+            batch: BatchPolicy::immediate(),
+        };
+        let sc = make(ScenarioKind::Sc { split });
+        let mc = make(ScenarioKind::Mc { cuts: vec![split] });
+        let mut reports = Vec::new();
+        for queue in [QueueKind::Calendar, QueueKind::LinearScan] {
+            for cfg in [&sc, &mc] {
+                reports.push(
+                    run_stream_with_queue(
+                        &*engine,
+                        cfg,
+                        Some(&test),
+                        &qos,
+                        queue,
+                    )
+                    .unwrap(),
+                );
+            }
+        }
+        // All four runs — {sc, mc@[split]} × {calendar, linear scan} —
+        // must produce the same record stream.
+        for r in &reports[1..] {
+            assert_eq!(
+                reports[0].records, r.records,
+                "{}: mc@[{split}] / sc@{split} records diverged",
+                arch.as_str()
+            );
+        }
+    }
+}
