@@ -17,6 +17,14 @@
 //! 10⁵ streams. The events/second figures land in the JSON document that
 //! CI gates against `benches/baselines/streaming_events.json`.
 //!
+//! Part 3 runs the adaptive re-split comparison over the committed
+//! degrading trace (`examples/specs/trace_suite.json#degrading`): the
+//! deadline hit-rates of the best static cut chain, both adaptive switch
+//! policies and the zero-cost oracle land in an `adaptive` block that CI
+//! gates against `benches/baselines/adaptive_degrading.json` — the
+//! outcomes are deterministic, so a drop means the controller regressed,
+//! not that the runner was slow.
+//!
 //! Environment knobs (same contract as `netsim_micro`):
 //!   SEI_BENCH_QUICK=1      fewer frames per point, skip the 10⁵ run
 //!   SEI_BENCH_JSON=<path>  also write the results as machine-readable
@@ -27,11 +35,12 @@ use std::time::Instant;
 
 use sei::coordinator::batcher::BatchPolicy;
 use sei::coordinator::{
-    run_hetero_stream, run_stream, ClientSpec, Fairness, ModelScale,
-    MultiStreamConfig, QosRequirements, ScenarioConfig, ScenarioKind,
-    StreamConfig,
+    run_adaptive_comparison, run_hetero_stream, run_stream, AdaptiveConfig,
+    ClientSpec, ControllerConfig, Fairness, ModelScale, MultiStreamConfig,
+    QosRequirements, ScenarioConfig, ScenarioKind, StreamConfig,
 };
-use sei::model::{Arch, DeviceProfile};
+use sei::model::{split_points, Arch, DeviceProfile};
+use sei::netsim::trace::parse_trace_arg;
 use sei::netsim::transfer::{NetworkConfig, Protocol};
 use sei::netsim::QueueKind;
 use sei::runtime::{load_backend, load_backend_for, InferenceBackend};
@@ -231,6 +240,87 @@ fn main() {
         Some((n_full, ev, rate))
     };
 
+    // ---- Part 3: adaptive re-splitting over the committed trace ----
+    // Same calibration as tests/trace_semantics.rs: the degrading entry's
+    // rates are derived from VGG16's own latent volumetrics, the edge is
+    // tuned so the deep low-latent cut runs at 1.02x the frame period.
+    let period: u64 = 10_000_000;
+    let ad_frames = 60usize;
+    let points = split_points(&Arch::Vgg16.full_network());
+    let n_cand = points.len() - 1;
+    let min_bytes =
+        (0..n_cand).map(|i| points[i].latent_bytes()).min().unwrap();
+    let d = (0..n_cand)
+        .find(|&i| points[i].latent_bytes() == min_bytes)
+        .unwrap();
+    let (head_d, _) = points[d].split_compute();
+    let overhead = 10_000u64;
+    let macs =
+        head_d as f64 / ((1.02 * period as f64 - overhead as f64) / 1e9);
+    let traces = parse_trace_arg(&format!(
+        "{}/../examples/specs/trace_suite.json#degrading",
+        env!("CARGO_MANIFEST_DIR")
+    ))
+    .expect("trace suite");
+    let base = NetworkConfig::parse("up@642252800+200000:udp").unwrap();
+    let ad_cfg = AdaptiveConfig {
+        arch: Arch::Vgg16,
+        scale: ModelScale::Full,
+        tiers: vec![
+            DeviceProfile::parse(&format!("edge@{macs:e}+{overhead}"))
+                .unwrap(),
+            DeviceProfile::parse("srv@1e15+1000").unwrap(),
+        ],
+        hop_nets: vec![base.with_trace(traces[0].1.clone())],
+        frames: ad_frames,
+        frame_period_ns: period,
+        deadline_ns: period * 2,
+        controller: ControllerConfig {
+            window: 4,
+            check_period_ns: period / 2,
+            min_dwell_ns: 5 * period,
+            switch_margin: 0.1,
+        },
+        queue: QueueKind::Calendar,
+    };
+    println!(
+        "\n=== adaptive re-splitting @ trace_suite.json#degrading, \
+         {ad_frames} frames ==="
+    );
+    let t0 = Instant::now();
+    let ad = run_adaptive_comparison(&ad_cfg).expect("adaptive comparison");
+    let ad_wall = t0.elapsed().as_secs_f64();
+    let sb = ad.static_best_outcome();
+    println!(
+        "  static best ({})   hit-rate {:.4}",
+        sb.label, sb.deadline_hit_rate
+    );
+    println!(
+        "  adaptive (drain)       hit-rate {:.4}  ({} switches)",
+        ad.adaptive_drain.deadline_hit_rate, ad.adaptive_drain.switches
+    );
+    println!(
+        "  adaptive (drop)        hit-rate {:.4}  ({} switches, {} dropped)",
+        ad.adaptive_drop.deadline_hit_rate,
+        ad.adaptive_drop.switches,
+        ad.adaptive_drop.dropped
+    );
+    println!(
+        "  oracle (free switches) hit-rate {:.4}",
+        ad.oracle.deadline_hit_rate
+    );
+    assert!(
+        ad.adaptive_drain.deadline_hit_rate > sb.deadline_hit_rate,
+        "adaptive (drain) must beat the best static chain on the \
+         degrading trace: {} vs {}",
+        ad.adaptive_drain.deadline_hit_rate,
+        sb.deadline_hit_rate
+    );
+    assert!(
+        ad.oracle.deadline_hit_rate >= ad.adaptive_drain.deadline_hit_rate,
+        "the zero-cost oracle bounds the drain policy"
+    );
+
     if let Ok(path) = std::env::var("SEI_BENCH_JSON") {
         let entries: Vec<Json> = rows
             .iter()
@@ -257,6 +347,22 @@ fn main() {
             events.push(("calendar_events_full", json::num(ev as f64)));
             events.push(("calendar_events_per_sec_full", json::num(rate)));
         }
+        let adaptive = json::obj(vec![
+            ("trace", json::s("degrading")),
+            ("frames", json::num(ad_frames as f64)),
+            ("static_best_hit_rate", json::num(sb.deadline_hit_rate)),
+            (
+                "drain_hit_rate",
+                json::num(ad.adaptive_drain.deadline_hit_rate),
+            ),
+            ("drop_hit_rate", json::num(ad.adaptive_drop.deadline_hit_rate)),
+            ("oracle_hit_rate", json::num(ad.oracle.deadline_hit_rate)),
+            (
+                "drain_switches",
+                json::num(ad.adaptive_drain.switches as f64),
+            ),
+            ("wall_s", json::num(ad_wall)),
+        ]);
         let doc = json::obj(vec![
             ("bench", json::s("streaming_saturation")),
             ("quick", Json::Bool(quick)),
@@ -264,6 +370,7 @@ fn main() {
             ("frames_per_client", json::num(frames as f64)),
             ("curve", json::arr(entries)),
             ("events", json::obj(events)),
+            ("adaptive", adaptive),
         ]);
         std::fs::write(&path, doc.to_string()).expect("write bench json");
         println!("\nwrote {path}");

@@ -1,0 +1,1238 @@
+//! Adaptive mid-stream re-splitting over time-varying channels (the
+//! payoff scenario on top of the [`crate::netsim::trace`] layer).
+//!
+//! A static cut chain is chosen once and survives whatever the link does;
+//! this module closes the loop: a controller monitors the *observed*
+//! per-hop goodput over a sliding window of completed uplink transfers
+//! and re-selects the cut chain mid-stream when the link degrades,
+//! paying an explicit switchover cost. The engine is a self-contained
+//! single-client discrete-event pipeline simulator — its own event
+//! calendar (same [`EventQueue`] backends as the streaming engine, so
+//! backend determinism is pinned the same way), real [`Channel`]s per hop
+//! (with [`LinkTrace`]s attached via the hop's `NetworkConfig`), per-tier
+//! busy clocks, and analytic per-candidate costs from [`chain_costs`].
+//!
+//! Controller state machine:
+//!
+//!   Stable --(Check: best < cur·(1-margin), dwell elapsed)--> Switching
+//!   Switching --(resync transfer delivered: ResyncDone)-----> Stable
+//!
+//! In `Switching` further switch decisions are suppressed and the two
+//! policies part ways. `Drain` is make-before-break: the old chain keeps
+//! serving (in-flight *and* queued frames drain through it) while the
+//! resync transfer rides the downlink, and the cutover happens the
+//! instant the resync lands. `Drop` is break-before-make: tier 0 stops
+//! after its current frame, frames queued at tier 0 are discarded
+//! (counted as deadline misses), and the pipeline restarts fresh on the
+//! new chain when the resync lands. Frames already past tier 0 always
+//! finish under the chain they were stamped with, in both policies.
+//!
+//! Switchover cost model: candidate heads/tails are assumed pre-staged
+//! on every tier at session setup (the candidate set is enumerable and
+//! known), so what must cross the wire at switch time is the *boundary
+//! state* that cannot be pre-staged — each changed hop drains the old
+//! cut's latent and primes the new cut's decoder (one old-latent plus
+//! one new-latent transfer worth of bytes) on top of a fixed control
+//! handshake. The resync rides the real (possibly degraded) channel as
+//! an ordinary transfer, which is exactly why the adaptive run is
+//! strictly worse than the zero-cost oracle.
+//!
+//! [`run_adaptive_comparison`] runs every static candidate, the adaptive
+//! controller under both switch policies, and the zero-switchover-cost
+//! oracle over the *same* traced channels, and reports them side by
+//! side. Everything is deterministic in the config alone: no wall clock,
+//! no threads, event ties broken by sequence number identically across
+//! queue backends.
+
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::{bail, Result};
+
+use crate::model::{
+    chain_costs, split_points, valid_cut_chains, Arch, Cut, DeviceProfile,
+    Network,
+};
+use crate::netsim::event::{EventQueue, QueueKind, SimTime};
+use crate::netsim::transfer::{Channel, NetworkConfig};
+use crate::netsim::Dir;
+use crate::util::json::Json;
+
+use super::scenario::{derive_hop_net, ModelScale};
+
+/// Fixed control-plane handshake bytes of any re-split, under the
+/// boundary-state resync model (one MTU-ish message each way).
+pub const RESYNC_CONTROL_BYTES: u64 = 1500;
+
+/// What happens to frames queued at tier 0 when a switch begins.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwitchPolicy {
+    /// Make-before-break: the old chain keeps serving every frame while
+    /// the resync is in flight; the cutover is instant when it lands.
+    Drain,
+    /// Break-before-make: tier 0 blocks for the resync and frames queued
+    /// there are discarded (counted as deadline misses), so the new
+    /// chain starts from an empty pipeline.
+    Drop,
+}
+
+impl SwitchPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SwitchPolicy::Drain => "drain",
+            SwitchPolicy::Drop => "drop",
+        }
+    }
+}
+
+/// Hysteresis + observation parameters of the re-split controller.
+#[derive(Clone, Debug)]
+pub struct ControllerConfig {
+    /// Sliding window (completed uplink transfers per hop) the observed
+    /// goodput is estimated over.
+    pub window: usize,
+    /// Period of the controller's Check events.
+    pub check_period_ns: SimTime,
+    /// Minimum simulated time between switches (dwell-time hysteresis).
+    pub min_dwell_ns: SimTime,
+    /// Relative-improvement hysteresis: switch only when the best
+    /// candidate's predicted cost is below `current * (1 - margin)`.
+    pub switch_margin: f64,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            window: 4,
+            check_period_ns: 5_000_000,
+            min_dwell_ns: 50_000_000,
+            switch_margin: 0.1,
+        }
+    }
+}
+
+/// Full configuration of one adaptive-vs-static comparison.
+#[derive(Clone, Debug)]
+pub struct AdaptiveConfig {
+    pub arch: Arch,
+    pub scale: ModelScale,
+    /// Device tier chain, sensor side first (k = tiers - 1 cuts).
+    pub tiers: Vec<DeviceProfile>,
+    /// Per-hop channels (traces attached); a single entry is a template
+    /// replicated with derived seeds, like [`super::scenario`].
+    pub hop_nets: Vec<NetworkConfig>,
+    pub frames: usize,
+    pub frame_period_ns: SimTime,
+    /// Per-frame latency deadline the hit-rate is measured against.
+    pub deadline_ns: SimTime,
+    pub controller: ControllerConfig,
+    pub queue: QueueKind,
+}
+
+// ---------------------------------------------------------------------------
+// Candidate enumeration cache.
+// ---------------------------------------------------------------------------
+
+/// Memoized [`valid_cut_chains`] per (arch × scale × k): the controller
+/// re-evaluates the candidate set on every Check, and re-enumerating the
+/// k-subset lattice each time would make a decision O(enumeration)
+/// instead of O(candidates). The counters are observable so regression
+/// tests can pin "one enumeration, many lookups".
+pub struct ChainCache {
+    map: HashMap<(Arch, ModelScale, usize), Vec<Vec<usize>>>,
+    enumerations: u64,
+    lookups: u64,
+}
+
+impl Default for ChainCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ChainCache {
+    pub fn new() -> Self {
+        ChainCache { map: HashMap::new(), enumerations: 0, lookups: 0 }
+    }
+
+    /// The candidate cut chains of `net` for `k` cuts, enumerating at
+    /// most once per (arch, scale, k).
+    pub fn chains(
+        &mut self,
+        arch: Arch,
+        scale: ModelScale,
+        k: usize,
+        net: &Network,
+    ) -> &[Vec<usize>] {
+        self.lookups += 1;
+        let key = (arch, scale, k);
+        if !self.map.contains_key(&key) {
+            self.enumerations += 1;
+            self.map.insert(key, valid_cut_chains(net, k));
+        }
+        self.map.get(&key).expect("just inserted")
+    }
+
+    /// How many times the k-subset lattice was actually enumerated.
+    pub fn enumerations(&self) -> u64 {
+        self.enumerations
+    }
+
+    /// How many candidate-set requests were served (cache hits + misses).
+    pub fn lookups(&self) -> u64 {
+        self.lookups
+    }
+}
+
+/// The geometry/scale pair resolved to a concrete network, mirroring the
+/// scenario engine's resolution but without an [`InferenceBackend`]
+/// (adaptive comparisons are pure timing studies): `Full` is the
+/// paper-scale network, `Slim` the standard trained-artifact geometry
+/// (32x32, width 0.5, hidden 64, 10 classes).
+///
+/// [`InferenceBackend`]: crate::runtime::InferenceBackend
+fn network_for(arch: Arch, scale: ModelScale) -> Network {
+    match scale {
+        ModelScale::Full => arch.full_network(),
+        ModelScale::Slim => arch.slim_network(32, 0.5, 64, 10),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-candidate cost tables.
+// ---------------------------------------------------------------------------
+
+/// One candidate chain with everything the engine and the controller
+/// need precomputed: per-tier compute times and per-hop latent bytes.
+#[derive(Clone, Debug)]
+struct Cand {
+    chain: Vec<usize>,
+    /// Compute time of segment `t` on tier `t` (overhead included).
+    seg_ns: Vec<SimTime>,
+    /// Latent bytes crossing hop `h`.
+    hop_bytes: Vec<u64>,
+}
+
+fn build_cands(
+    points: &[Cut],
+    chains: &[Vec<usize>],
+    tiers: &[DeviceProfile],
+) -> Result<Vec<Cand>> {
+    chains
+        .iter()
+        .map(|chain| {
+            let costs = chain_costs(points, chain)?;
+            let seg_ns = costs
+                .seg_mult_adds
+                .iter()
+                .zip(tiers)
+                .map(|(&ma, d)| d.compute_ns(ma))
+                .collect();
+            Ok(Cand {
+                chain: chain.clone(),
+                seg_ns,
+                hop_bytes: costs.hop_bytes,
+            })
+        })
+        .collect()
+}
+
+/// Boundary-state bytes a switch from `old` to `new` must move: per
+/// changed hop, one old-latent drain plus one new-latent prime, plus the
+/// fixed control handshake. Identical chains cost nothing (no switch).
+fn resync_bytes(old: &Cand, new: &Cand) -> u64 {
+    let mut bytes = 0u64;
+    for h in 0..old.hop_bytes.len().max(new.hop_bytes.len()) {
+        let ob = old.hop_bytes.get(h).copied().unwrap_or(0);
+        let nb = new.hop_bytes.get(h).copied().unwrap_or(0);
+        let changed = old.chain.get(h) != new.chain.get(h);
+        if changed {
+            bytes += ob + nb;
+        }
+    }
+    if bytes == 0 {
+        0
+    } else {
+        bytes + RESYNC_CONTROL_BYTES
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The single-client event engine.
+// ---------------------------------------------------------------------------
+
+enum AdEv {
+    /// Frame `f` is emitted by the source.
+    Emit { f: usize },
+    /// Tier `tier` finished computing frame `f`'s segment.
+    TierDone { f: usize, tier: usize },
+    /// Frame `f`'s uplink latent fully arrived at tier `hop + 1`.
+    UpDelivered { f: usize, hop: usize },
+    /// Frame `f`'s result arrived back at tier `hop` (0 = done).
+    DownDelivered { f: usize, hop: usize },
+    /// Controller observation/decision point.
+    Check,
+    /// The switchover resync transfer landed; the new chain is live.
+    ResyncDone,
+}
+
+/// One per-hop goodput observation: committed (visible to the
+/// controller) from `at_ns` on — the transfer's arrival time, so the
+/// controller never sees into the future of the calendar.
+#[derive(Clone, Copy)]
+struct Obs {
+    at_ns: SimTime,
+    bytes: u64,
+    dur_ns: SimTime,
+}
+
+struct Engine<'a> {
+    cands: &'a [Cand],
+    ctl: Option<&'a ControllerConfig>,
+    policy: SwitchPolicy,
+    /// Oracle mode: switches are free and instantaneous.
+    zero_cost: bool,
+    period: SimTime,
+    frames: usize,
+    result_bytes: u64,
+
+    q: EventQueue<AdEv>,
+    channels: Vec<Channel>,
+
+    emitted: Vec<SimTime>,
+    completed: Vec<Option<SimTime>>,
+    dropped: Vec<bool>,
+    cand_of: Vec<usize>,
+
+    edge_q: VecDeque<usize>,
+    edge_busy: bool,
+    /// Busy-until clock of each non-edge tier (index 0 unused).
+    tier_free: Vec<SimTime>,
+
+    window: Vec<VecDeque<Obs>>,
+    active: usize,
+    pending: Option<usize>,
+    last_switch: SimTime,
+    switches: usize,
+    settled: usize,
+
+    // Cache instrumentation: the controller consults the memoized
+    // candidate enumeration on every decision.
+    cache: &'a mut ChainCache,
+    arch: Arch,
+    scale: ModelScale,
+    net: &'a Network,
+}
+
+/// Aggregate outcome of one run (one static candidate or one policy).
+#[derive(Clone, Debug)]
+pub struct PolicyOutcome {
+    pub label: String,
+    pub frames: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    pub switches: usize,
+    /// Frames meeting the deadline over *all* frames (drops are misses).
+    pub deadline_hit_rate: f64,
+    /// Mean latency over completed frames.
+    pub mean_latency_ns: f64,
+    pub p95_latency_ns: SimTime,
+}
+
+impl<'a> Engine<'a> {
+    fn start_edge(&mut self, f: usize, t: SimTime) {
+        self.cand_of[f] = self.active;
+        self.edge_busy = true;
+        let dt = self.cands[self.active].seg_ns[0];
+        self.q.schedule(t + dt, AdEv::TierDone { f, tier: 0 });
+    }
+
+    fn start_resync(&mut self, t: SimTime) -> Result<()> {
+        let to = self.pending.expect("resync without a pending chain");
+        let bytes = resync_bytes(&self.cands[self.active], &self.cands[to])
+            .max(RESYNC_CONTROL_BYTES);
+        if self.policy == SwitchPolicy::Drop {
+            // Break-before-make: tier 0 is held until the resync lands.
+            self.edge_busy = true;
+        }
+        let (start, r) =
+            self.channels[0].send_no_earlier(Dir::Down, bytes, t)?;
+        self.q.schedule(start + r.latency_ns(), AdEv::ResyncDone);
+        Ok(())
+    }
+
+    fn emit(&mut self, f: usize, t: SimTime) {
+        self.emitted[f] = t;
+        if f + 1 < self.frames {
+            self.q.schedule(t + self.period, AdEv::Emit { f: f + 1 });
+        }
+        if self.edge_busy {
+            self.edge_q.push_back(f);
+        } else {
+            self.start_edge(f, t);
+        }
+    }
+
+    fn send_up(&mut self, f: usize, hop: usize, t: SimTime) -> Result<()> {
+        let bytes = self.cands[self.cand_of[f]].hop_bytes[hop];
+        let (start, r) =
+            self.channels[hop].send_no_earlier(Dir::Up, bytes, t)?;
+        let arrival = start + r.latency_ns();
+        // Commit the goodput observation at arrival time; the window is
+        // filled in channel-FIFO order, so arrival stamps are monotone
+        // per hop and the controller filter below stays a prefix.
+        self.window[hop].push_back(Obs {
+            at_ns: arrival,
+            bytes,
+            dur_ns: (arrival - start).max(1),
+        });
+        let cap = self.ctl.map(|c| c.window.max(1)).unwrap_or(1);
+        while self.window[hop].len() > cap {
+            self.window[hop].pop_front();
+        }
+        self.q.schedule(arrival, AdEv::UpDelivered { f, hop });
+        Ok(())
+    }
+
+    fn send_down(&mut self, f: usize, hop: usize, t: SimTime) -> Result<()> {
+        let (start, r) = self.channels[hop].send_no_earlier(
+            Dir::Down,
+            self.result_bytes,
+            t,
+        )?;
+        self.q
+            .schedule(start + r.latency_ns(), AdEv::DownDelivered { f, hop });
+        Ok(())
+    }
+
+    fn tier_done(&mut self, f: usize, tier: usize, t: SimTime) -> Result<()> {
+        if tier == 0 {
+            self.edge_busy = false;
+            if self.pending.is_some() && self.policy == SwitchPolicy::Drop {
+                // Deferred break-before-make: the in-flight head frame
+                // finished, now hold tier 0 for the resync.
+                self.start_resync(t)?;
+            } else if let Some(g) = self.edge_q.pop_front() {
+                self.start_edge(g, t);
+            }
+        }
+        let k = self.cands[self.cand_of[f]].hop_bytes.len();
+        if tier < k {
+            self.send_up(f, tier, t)?;
+        } else {
+            // Last tier: the result returns hop by hop.
+            self.send_down(f, k - 1, t)?;
+        }
+        Ok(())
+    }
+
+    fn up_delivered(&mut self, f: usize, hop: usize, t: SimTime) {
+        let tier = hop + 1;
+        let start = t.max(self.tier_free[tier]);
+        let dt = self.cands[self.cand_of[f]].seg_ns[tier];
+        self.tier_free[tier] = start + dt;
+        self.q.schedule(start + dt, AdEv::TierDone { f, tier });
+    }
+
+    fn down_delivered(&mut self, f: usize, hop: usize, t: SimTime)
+        -> Result<()>
+    {
+        if hop == 0 {
+            self.completed[f] = Some(t);
+            self.settled += 1;
+            Ok(())
+        } else {
+            self.send_down(f, hop - 1, t)
+        }
+    }
+
+    /// Observed goodput of hop `h` at time `t` (bps), from window
+    /// entries already delivered; before any observation, the channel's
+    /// best-case rate (the same optimistic prior admission uses).
+    fn observed_rate(&self, h: usize, t: SimTime) -> f64 {
+        let mut bytes = 0u64;
+        let mut dur = 0u64;
+        for o in &self.window[h] {
+            if o.at_ns <= t {
+                bytes += o.bytes;
+                dur += o.dur_ns;
+            }
+        }
+        if dur == 0 {
+            self.channels[h].cfg.best_rate_bps()
+        } else {
+            bytes as f64 * 8.0 / dur as f64 * 1e9
+        }
+    }
+
+    /// Predicted per-frame cost of candidate `ci` under the currently
+    /// observed rates: pipelined end-to-end latency plus a queue-growth
+    /// penalty when any stage's service time exceeds the frame period
+    /// (a sustained-overload chain is bad even if one frame would fit).
+    fn predict(&self, ci: usize, t: SimTime) -> f64 {
+        let c = &self.cands[ci];
+        let mut lat = 0.0f64;
+        let mut stage_max = 0.0f64;
+        for &ns in &c.seg_ns {
+            lat += ns as f64;
+            stage_max = stage_max.max(ns as f64);
+        }
+        for (h, &bytes) in c.hop_bytes.iter().enumerate() {
+            let rate = self.observed_rate(h, t);
+            if rate <= 0.0 {
+                return f64::INFINITY;
+            }
+            let up = bytes as f64 * 8.0 / rate * 1e9;
+            let down = self.result_bytes as f64 * 8.0 / rate * 1e9;
+            let prop = self.channels[h].cfg.latency_ns as f64;
+            lat += up + down + 2.0 * prop;
+            stage_max = stage_max.max(up);
+        }
+        lat + 10.0 * (stage_max - self.period as f64).max(0.0)
+    }
+
+    fn check(&mut self, t: SimTime) -> Result<()> {
+        let Some(ctl) = self.ctl else { return Ok(()) };
+        if self.settled < self.frames {
+            self.q.schedule(t + ctl.check_period_ns.max(1), AdEv::Check);
+        }
+        if self.pending.is_some() {
+            return Ok(());
+        }
+        if t < self.last_switch + ctl.min_dwell_ns {
+            return Ok(());
+        }
+        // The memoized enumeration is the controller's candidate set —
+        // a cache hit per decision, never a re-enumeration.
+        let k = self.cands[0].hop_bytes.len();
+        let n = self
+            .cache
+            .chains(self.arch, self.scale, k, self.net)
+            .len();
+        debug_assert_eq!(n, self.cands.len());
+        let cur = self.predict(self.active, t);
+        let (mut best_i, mut best) = (self.active, cur);
+        for ci in 0..self.cands.len() {
+            let p = self.predict(ci, t);
+            if p < best {
+                best = p;
+                best_i = ci;
+            }
+        }
+        if best_i != self.active && best < cur * (1.0 - ctl.switch_margin) {
+            self.begin_switch(best_i, t)?;
+        }
+        Ok(())
+    }
+
+    fn begin_switch(&mut self, to: usize, t: SimTime) -> Result<()> {
+        self.switches += 1;
+        self.last_switch = t;
+        if self.zero_cost {
+            // Oracle: free, instantaneous switchover.
+            self.active = to;
+            return Ok(());
+        }
+        self.pending = Some(to);
+        match self.policy {
+            // Make-before-break: resync rides the downlink immediately,
+            // the old chain keeps serving in the meantime.
+            SwitchPolicy::Drain => self.start_resync(t)?,
+            SwitchPolicy::Drop => {
+                for f in self.edge_q.drain(..) {
+                    self.dropped[f] = true;
+                    self.settled += 1;
+                }
+                if !self.edge_busy {
+                    self.start_resync(t)?;
+                }
+                // else: deferred to the in-flight frame's TierDone.
+            }
+        }
+        Ok(())
+    }
+
+    fn resync_done(&mut self, t: SimTime) {
+        self.active = self.pending.take().expect("ResyncDone without switch");
+        if self.policy == SwitchPolicy::Drop {
+            // Frames that arrived while tier 0 was held are stale at
+            // cutover — break-before-make restarts from an empty
+            // pipeline.
+            for f in self.edge_q.drain(..) {
+                self.dropped[f] = true;
+                self.settled += 1;
+            }
+            self.edge_busy = false;
+        }
+    }
+
+    fn handle(&mut self, ev: AdEv, t: SimTime) -> Result<()> {
+        match ev {
+            AdEv::Emit { f } => {
+                self.emit(f, t);
+                Ok(())
+            }
+            AdEv::TierDone { f, tier } => self.tier_done(f, tier, t),
+            AdEv::UpDelivered { f, hop } => {
+                self.up_delivered(f, hop, t);
+                Ok(())
+            }
+            AdEv::DownDelivered { f, hop } => self.down_delivered(f, hop, t),
+            AdEv::Check => self.check(t),
+            AdEv::ResyncDone => {
+                self.resync_done(t);
+                Ok(())
+            }
+        }
+    }
+}
+
+struct RunParams<'a> {
+    cands: &'a [Cand],
+    hop_nets: &'a [NetworkConfig],
+    frames: usize,
+    period: SimTime,
+    deadline: SimTime,
+    result_bytes: u64,
+    queue: QueueKind,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_once(
+    p: &RunParams<'_>,
+    initial: usize,
+    ctl: Option<&ControllerConfig>,
+    policy: SwitchPolicy,
+    zero_cost: bool,
+    label: String,
+    cache: &mut ChainCache,
+    arch: Arch,
+    scale: ModelScale,
+    net: &Network,
+) -> Result<PolicyOutcome> {
+    let n_hops = p.hop_nets.len();
+    let channels: Vec<Channel> =
+        p.hop_nets.iter().map(|n| Channel::new(n.clone())).collect();
+    let mut eng = Engine {
+        cands: p.cands,
+        ctl,
+        policy,
+        zero_cost,
+        period: p.period,
+        frames: p.frames,
+        result_bytes: p.result_bytes,
+        q: EventQueue::with_kind(p.queue),
+        channels,
+        emitted: vec![0; p.frames],
+        completed: vec![None; p.frames],
+        dropped: vec![false; p.frames],
+        cand_of: vec![0; p.frames],
+        edge_q: VecDeque::new(),
+        edge_busy: false,
+        tier_free: vec![0; n_hops + 1],
+        window: vec![VecDeque::new(); n_hops],
+        active: initial,
+        pending: None,
+        last_switch: 0,
+        switches: 0,
+        settled: 0,
+        cache,
+        arch,
+        scale,
+        net,
+    };
+    eng.q.schedule(0, AdEv::Emit { f: 0 });
+    if let Some(c) = ctl {
+        eng.q.schedule(c.check_period_ns.max(1), AdEv::Check);
+    }
+    while eng.settled < eng.frames {
+        let Some((t, ev)) = eng.q.pop() else {
+            bail!(
+                "adaptive deadlock: {}/{} frames settled ({label})",
+                eng.settled,
+                eng.frames
+            );
+        };
+        eng.handle(ev, t)?;
+    }
+
+    let mut latencies: Vec<SimTime> = Vec::new();
+    let mut hits = 0usize;
+    let mut dropped = 0usize;
+    for f in 0..p.frames {
+        if eng.dropped[f] {
+            dropped += 1;
+            continue;
+        }
+        let done = eng.completed[f].expect("settled frame incomplete");
+        let lat = done - eng.emitted[f];
+        if lat <= p.deadline {
+            hits += 1;
+        }
+        latencies.push(lat);
+    }
+    latencies.sort_unstable();
+    let completed = latencies.len();
+    let mean = if completed > 0 {
+        latencies.iter().map(|&l| l as f64).sum::<f64>() / completed as f64
+    } else {
+        0.0
+    };
+    let p95 = if completed > 0 {
+        latencies[((completed as f64 * 0.95).ceil() as usize)
+            .saturating_sub(1)
+            .min(completed - 1)]
+    } else {
+        0
+    };
+    Ok(PolicyOutcome {
+        label,
+        frames: p.frames,
+        completed,
+        dropped,
+        switches: eng.switches,
+        deadline_hit_rate: hits as f64 / p.frames as f64,
+        mean_latency_ns: mean,
+        p95_latency_ns: p95,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The comparison report.
+// ---------------------------------------------------------------------------
+
+/// Side-by-side outcome of every static candidate, the adaptive
+/// controller under both switch policies, and the zero-cost oracle, over
+/// one traced channel configuration.
+#[derive(Clone, Debug)]
+pub struct AdaptiveReport {
+    /// One static (never-switching) run per candidate chain.
+    pub candidates: Vec<(Vec<usize>, PolicyOutcome)>,
+    /// Index into `candidates` of the best static run (highest hit-rate,
+    /// ties broken by lower mean latency, then lower index).
+    pub static_best: usize,
+    pub adaptive_drain: PolicyOutcome,
+    pub adaptive_drop: PolicyOutcome,
+    pub oracle: PolicyOutcome,
+    /// How many times the candidate lattice was enumerated (memoized:
+    /// stays 1 however many decisions the controllers make).
+    pub chain_enumerations: u64,
+    /// How many candidate-set requests the cache served.
+    pub chain_lookups: u64,
+}
+
+impl AdaptiveReport {
+    pub fn static_best_outcome(&self) -> &PolicyOutcome {
+        &self.candidates[self.static_best].1
+    }
+
+    fn chain_label(chain: &[usize]) -> String {
+        let mut s = String::from("mc@");
+        for (i, c) in chain.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("L{c}"));
+        }
+        s
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            "policy                 hit-rate   mean-lat(ms)  p95(ms)  \
+             switches  dropped\n",
+        );
+        let mut row = |label: &str, o: &PolicyOutcome| {
+            out.push_str(&format!(
+                "{label:<22} {:>8.3} {:>13.3} {:>8.3} {:>9} {:>8}\n",
+                o.deadline_hit_rate,
+                o.mean_latency_ns / 1e6,
+                o.p95_latency_ns as f64 / 1e6,
+                o.switches,
+                o.dropped,
+            ));
+        };
+        let (chain, best) = &self.candidates[self.static_best];
+        row(
+            &format!("static-best {}", Self::chain_label(chain)),
+            best,
+        );
+        row("adaptive (drain)", &self.adaptive_drain);
+        row("adaptive (drop)", &self.adaptive_drop);
+        row("oracle (free switch)", &self.oracle);
+        out.push_str(&format!(
+            "\n{} static candidates evaluated; chain cache: {} \
+             enumeration(s), {} lookups\n",
+            self.candidates.len(),
+            self.chain_enumerations,
+            self.chain_lookups,
+        ));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let outcome = |o: &PolicyOutcome| {
+            Json::obj(vec![
+                ("label", Json::s(&o.label)),
+                ("frames", Json::num(o.frames as f64)),
+                ("completed", Json::num(o.completed as f64)),
+                ("dropped", Json::num(o.dropped as f64)),
+                ("switches", Json::num(o.switches as f64)),
+                ("deadline_hit_rate", Json::num(o.deadline_hit_rate)),
+                ("mean_latency_ns", Json::num(o.mean_latency_ns)),
+                ("p95_latency_ns", Json::num(o.p95_latency_ns as f64)),
+            ])
+        };
+        Json::obj(vec![
+            (
+                "static_best",
+                Json::obj(vec![
+                    (
+                        "chain",
+                        Json::arr(
+                            self.candidates[self.static_best]
+                                .0
+                                .iter()
+                                .map(|&c| Json::num(c as f64))
+                                .collect(),
+                        ),
+                    ),
+                    ("outcome", outcome(self.static_best_outcome())),
+                ]),
+            ),
+            ("adaptive_drain", outcome(&self.adaptive_drain)),
+            ("adaptive_drop", outcome(&self.adaptive_drop)),
+            ("oracle", outcome(&self.oracle)),
+            ("candidates", Json::num(self.candidates.len() as f64)),
+            (
+                "chain_enumerations",
+                Json::num(self.chain_enumerations as f64),
+            ),
+            ("chain_lookups", Json::num(self.chain_lookups as f64)),
+        ])
+    }
+}
+
+/// Run the full static-vs-adaptive comparison for `cfg`: every candidate
+/// chain statically, the adaptive controller under Drain and Drop, and
+/// the zero-switchover-cost oracle, all over identical traced channels.
+/// Deterministic in `cfg` alone — across queue backends by the shared
+/// `(time, seq)` tiebreak, across thread counts trivially (the engine is
+/// single-threaded by construction).
+pub fn run_adaptive_comparison(cfg: &AdaptiveConfig)
+    -> Result<AdaptiveReport>
+{
+    if cfg.tiers.len() < 2 {
+        bail!("adaptive re-splitting needs at least 2 tiers (edge + server)");
+    }
+    if cfg.frames == 0 {
+        bail!("adaptive comparison needs at least one frame");
+    }
+    if cfg.frame_period_ns == 0 {
+        bail!("adaptive comparison needs a positive frame period");
+    }
+    if cfg.deadline_ns == 0 {
+        bail!("adaptive comparison needs a positive deadline");
+    }
+    let k = cfg.tiers.len() - 1;
+    if cfg.hop_nets.is_empty() {
+        bail!("adaptive comparison needs at least one hop net");
+    }
+    if cfg.hop_nets.len() != 1 && cfg.hop_nets.len() != k {
+        bail!(
+            "{} hop nets for {} hops (one per inter-tier hop, or a single \
+             template)",
+            cfg.hop_nets.len(),
+            k
+        );
+    }
+    let hop_nets: Vec<NetworkConfig> =
+        (0..k).map(|h| derive_hop_net(&cfg.hop_nets, h)).collect();
+
+    let net = network_for(cfg.arch, cfg.scale);
+    let points = split_points(&net);
+    let mut cache = ChainCache::new();
+    let chains =
+        cache.chains(cfg.arch, cfg.scale, k, &net).to_vec();
+    if chains.is_empty() {
+        bail!(
+            "{} has no valid {k}-cut chains ({} split points)",
+            cfg.arch,
+            points.len()
+        );
+    }
+    let cands = build_cands(&points, &chains, &cfg.tiers)?;
+    let result_bytes = net.output().bytes_f32() as u64;
+    let p = RunParams {
+        cands: &cands,
+        hop_nets: &hop_nets,
+        frames: cfg.frames,
+        period: cfg.frame_period_ns,
+        deadline: cfg.deadline_ns,
+        result_bytes,
+        queue: cfg.queue,
+    };
+
+    // Static runs: every candidate, no controller.
+    let mut candidates = Vec::with_capacity(cands.len());
+    for (ci, cand) in cands.iter().enumerate() {
+        let o = run_once(
+            &p,
+            ci,
+            None,
+            SwitchPolicy::Drain,
+            false,
+            format!("static {}", AdaptiveReport::chain_label(&cand.chain)),
+            &mut cache,
+            cfg.arch,
+            cfg.scale,
+            &net,
+        )?;
+        candidates.push((cand.chain.clone(), o));
+    }
+    let mut static_best = 0usize;
+    for i in 1..candidates.len() {
+        let (b, c) = (&candidates[static_best].1, &candidates[i].1);
+        if c.deadline_hit_rate > b.deadline_hit_rate
+            || (c.deadline_hit_rate == b.deadline_hit_rate
+                && c.mean_latency_ns < b.mean_latency_ns)
+        {
+            static_best = i;
+        }
+    }
+
+    // The adaptive runs all start from the candidate the controller
+    // would pick blind (best-case rates, no observations) — the same
+    // first decision a fresh deployment would make.
+    let initial = run_params_initial(&p);
+
+    let adaptive_drain = run_once(
+        &p,
+        initial,
+        Some(&cfg.controller),
+        SwitchPolicy::Drain,
+        false,
+        "adaptive-drain".to_string(),
+        &mut cache,
+        cfg.arch,
+        cfg.scale,
+        &net,
+    )?;
+    let adaptive_drop = run_once(
+        &p,
+        initial,
+        Some(&cfg.controller),
+        SwitchPolicy::Drop,
+        false,
+        "adaptive-drop".to_string(),
+        &mut cache,
+        cfg.arch,
+        cfg.scale,
+        &net,
+    )?;
+    let oracle = run_once(
+        &p,
+        initial,
+        Some(&cfg.controller),
+        SwitchPolicy::Drain,
+        true,
+        "oracle".to_string(),
+        &mut cache,
+        cfg.arch,
+        cfg.scale,
+        &net,
+    )?;
+
+    Ok(AdaptiveReport {
+        candidates,
+        static_best,
+        adaptive_drain,
+        adaptive_drop,
+        oracle,
+        chain_enumerations: cache.enumerations(),
+        chain_lookups: cache.lookups(),
+    })
+}
+
+/// The controller's blind first pick: argmin predicted cost under each
+/// channel's best-case rate (no observations yet) — computed without an
+/// engine instance so every policy run starts identically.
+fn run_params_initial(p: &RunParams<'_>) -> usize {
+    let rates: Vec<f64> =
+        p.hop_nets.iter().map(|n| n.best_rate_bps()).collect();
+    let mut best_i = 0usize;
+    let mut best = f64::INFINITY;
+    for (ci, c) in p.cands.iter().enumerate() {
+        let mut lat = 0.0f64;
+        let mut stage_max = 0.0f64;
+        for &ns in &c.seg_ns {
+            lat += ns as f64;
+            stage_max = stage_max.max(ns as f64);
+        }
+        let mut feasible = true;
+        for (h, &bytes) in c.hop_bytes.iter().enumerate() {
+            if rates[h] <= 0.0 {
+                feasible = false;
+                break;
+            }
+            let up = bytes as f64 * 8.0 / rates[h] * 1e9;
+            let down =
+                p.result_bytes as f64 * 8.0 / rates[h] * 1e9;
+            lat += up + down + 2.0 * p.hop_nets[h].latency_ns as f64;
+            stage_max = stage_max.max(up);
+        }
+        if !feasible {
+            continue;
+        }
+        let score = lat + 10.0 * (stage_max - p.period as f64).max(0.0);
+        if score < best {
+            best = score;
+            best_i = ci;
+        }
+    }
+    best_i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::trace::LinkTrace;
+    use crate::netsim::transfer::Protocol;
+
+    fn cmp_outcome(a: &PolicyOutcome, b: &PolicyOutcome) -> bool {
+        a.deadline_hit_rate == b.deadline_hit_rate
+            && a.mean_latency_ns == b.mean_latency_ns
+            && a.p95_latency_ns == b.p95_latency_ns
+            && a.switches == b.switches
+            && a.dropped == b.dropped
+            && a.completed == b.completed
+    }
+
+    fn base_cfg() -> AdaptiveConfig {
+        // Short propagation delay so the observed goodput stays close
+        // to the configured rate — on a steady link the blind first
+        // pick must remain inside the hysteresis margin.
+        let mut net = NetworkConfig::parse("gigabit:udp:loss=0").unwrap();
+        net.latency_ns = 10_000;
+        AdaptiveConfig {
+            arch: Arch::Vgg16,
+            scale: ModelScale::Full,
+            tiers: vec![
+                DeviceProfile::parse("edge@2e12+10000").unwrap(),
+                DeviceProfile::parse("srv@1e15+1000").unwrap(),
+            ],
+            hop_nets: vec![net],
+            frames: 20,
+            frame_period_ns: 10_000_000,
+            deadline_ns: 18_000_000,
+            controller: ControllerConfig::default(),
+            queue: QueueKind::Calendar,
+        }
+    }
+
+    #[test]
+    fn chain_cache_memoizes_per_key() {
+        let net = Arch::Vgg16.full_network();
+        let mut cache = ChainCache::new();
+        let n1 = cache
+            .chains(Arch::Vgg16, ModelScale::Full, 1, &net)
+            .len();
+        for _ in 0..10 {
+            let n = cache
+                .chains(Arch::Vgg16, ModelScale::Full, 1, &net)
+                .len();
+            assert_eq!(n, n1);
+        }
+        assert_eq!(cache.enumerations(), 1);
+        assert_eq!(cache.lookups(), 11);
+        // A different k is a different key — exactly one more enumeration.
+        cache.chains(Arch::Vgg16, ModelScale::Full, 2, &net);
+        assert_eq!(cache.enumerations(), 2);
+    }
+
+    #[test]
+    fn resync_bytes_counts_changed_hops_only() {
+        let points = split_points(&Arch::Vgg16.full_network());
+        let tiers = vec![
+            DeviceProfile::edge_gpu(),
+            DeviceProfile::server_gpu(),
+        ];
+        let cands = build_cands(
+            &points,
+            &[vec![5], vec![13], vec![5]],
+            &tiers,
+        )
+        .unwrap();
+        let b = resync_bytes(&cands[0], &cands[1]);
+        assert_eq!(
+            b,
+            cands[0].hop_bytes[0]
+                + cands[1].hop_bytes[0]
+                + RESYNC_CONTROL_BYTES
+        );
+        // Identical chains: nothing changes, nothing moves.
+        assert_eq!(resync_bytes(&cands[0], &cands[2]), 0);
+    }
+
+    #[test]
+    fn constant_channel_comparison_is_deterministic_across_backends() {
+        let mut cfg = base_cfg();
+        let a = run_adaptive_comparison(&cfg).unwrap();
+        cfg.queue = QueueKind::LinearScan;
+        let b = run_adaptive_comparison(&cfg).unwrap();
+        assert_eq!(a.static_best, b.static_best);
+        assert!(cmp_outcome(&a.adaptive_drain, &b.adaptive_drain));
+        assert!(cmp_outcome(&a.adaptive_drop, &b.adaptive_drop));
+        assert!(cmp_outcome(&a.oracle, &b.oracle));
+        for ((ca, oa), (cb, ob)) in
+            a.candidates.iter().zip(b.candidates.iter())
+        {
+            assert_eq!(ca, cb);
+            assert!(cmp_outcome(oa, ob));
+        }
+    }
+
+    #[test]
+    fn constant_channel_adaptive_never_switches() {
+        let r = run_adaptive_comparison(&base_cfg()).unwrap();
+        // A steady link gives the controller nothing to react to: the
+        // blind first pick stays best within the hysteresis margin.
+        assert_eq!(r.adaptive_drain.switches, 0);
+        assert_eq!(r.adaptive_drop.switches, 0);
+        assert_eq!(r.chain_enumerations, 1);
+        assert!(r.chain_lookups > 1, "{}", r.chain_lookups);
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_configs() {
+        let mut c = base_cfg();
+        c.tiers.truncate(1);
+        assert!(run_adaptive_comparison(&c).is_err());
+        let mut c = base_cfg();
+        c.frames = 0;
+        assert!(run_adaptive_comparison(&c).is_err());
+        let mut c = base_cfg();
+        c.frame_period_ns = 0;
+        assert!(run_adaptive_comparison(&c).is_err());
+        let mut c = base_cfg();
+        c.hop_nets = vec![
+            NetworkConfig::parse("gigabit").unwrap(),
+            NetworkConfig::parse("gigabit").unwrap(),
+        ];
+        assert!(run_adaptive_comparison(&c).is_err());
+    }
+
+    #[test]
+    fn degrading_trace_adaptive_beats_static_and_loses_to_oracle() {
+        // Self-calibrating handoff scenario (good -> bad -> good) built
+        // from the arch's own volumetrics; see tests/trace_semantics.rs
+        // for the committed-suite version.
+        let period: SimTime = 10_000_000; // 10 ms
+        let frames = 60usize;
+        let net = Arch::Vgg16.full_network();
+        let points = split_points(&net);
+        // d: the shallowest candidate in the smallest-latent group
+        // (VGG: pool4); a: the best shallow candidate (pool3 group).
+        let n_cand = points.len() - 1;
+        let min_bytes = (0..n_cand)
+            .map(|i| points[i].latent_bytes())
+            .min()
+            .unwrap();
+        let d = (0..n_cand)
+            .find(|&i| points[i].latent_bytes() == min_bytes)
+            .unwrap();
+        let shallow_min_bytes = (0..d)
+            .map(|i| points[i].latent_bytes())
+            .min()
+            .unwrap();
+        assert!(
+            shallow_min_bytes >= 2 * min_bytes,
+            "need byte separation: {shallow_min_bytes} vs {min_bytes}"
+        );
+        // Edge tuned so d's head runs at 1.02 x period: a slow drift that
+        // makes the deep chain infeasible as a *static* choice (its edge
+        // queue grows all run) while a mid-stream visit stays affordable.
+        let (head_d, _) = points[d].split_compute();
+        let overhead = 10_000u64;
+        let macs = head_d as f64
+            / ((1.02 * period as f64 - overhead as f64) / 1e9);
+        let tiers = vec![
+            DeviceProfile::parse(&format!("edge@{macs:e}+{overhead}"))
+                .unwrap(),
+            DeviceProfile::parse("srv@1e15+1000").unwrap(),
+        ];
+        // Good rate: the shallow latent crosses in period/2. Bad rate: it
+        // needs 1.35 periods — the shallow uplink outruns the frame period
+        // (its queue grows without bound) while the deep latent still
+        // crosses in ~0.68 periods and keeps meeting the deadline.
+        let rg = shallow_min_bytes as f64 * 8.0
+            / (0.5 * period as f64 / 1e9);
+        let rb = shallow_min_bytes as f64 * 8.0
+            / (1.35 * period as f64 / 1e9);
+        let mk = |rate: f64| {
+            let mut n =
+                NetworkConfig::parse("gigabit:udp:loss=0").unwrap();
+            n.capacity_bps = rate;
+            n.interface_bps = rate;
+            n.latency_ns = 200_000;
+            n
+        };
+        let (good, bad) = (mk(rg), mk(rb));
+        let t1 = (frames as u64 * period) * 2 / 5; // 40%: bad begins
+        let t2 = (frames as u64 * period) * 7 / 10; // 70%: recovery
+        let trace = LinkTrace::new(
+            "handoff".into(),
+            vec![
+                crate::netsim::trace::TraceSegment::from_net(&good, 0),
+                crate::netsim::trace::TraceSegment::from_net(&bad, t1),
+                crate::netsim::trace::TraceSegment::from_net(&good, t2),
+            ],
+        )
+        .unwrap();
+        let cfg = AdaptiveConfig {
+            arch: Arch::Vgg16,
+            scale: ModelScale::Full,
+            tiers,
+            hop_nets: vec![good.clone().with_trace(trace)],
+            frames,
+            frame_period_ns: period,
+            deadline_ns: period * 2,
+            controller: ControllerConfig {
+                window: 4,
+                check_period_ns: period / 2,
+                min_dwell_ns: 5 * period,
+                switch_margin: 0.1,
+            },
+            queue: QueueKind::Calendar,
+        };
+        let r = run_adaptive_comparison(&cfg).unwrap();
+        let sb = r.static_best_outcome();
+        assert!(
+            r.adaptive_drain.deadline_hit_rate > sb.deadline_hit_rate,
+            "drain {} vs static-best {} ({})",
+            r.adaptive_drain.deadline_hit_rate,
+            sb.deadline_hit_rate,
+            sb.label,
+        );
+        assert!(
+            r.adaptive_drop.deadline_hit_rate > sb.deadline_hit_rate,
+            "drop {} vs static-best {}",
+            r.adaptive_drop.deadline_hit_rate,
+            sb.deadline_hit_rate,
+        );
+        assert!(
+            r.oracle.deadline_hit_rate
+                > r.adaptive_drain.deadline_hit_rate,
+            "oracle {} vs drain {}",
+            r.oracle.deadline_hit_rate,
+            r.adaptive_drain.deadline_hit_rate,
+        );
+        assert!(r.adaptive_drain.switches >= 1);
+        assert!(r.oracle.switches >= 1);
+        assert_eq!(r.chain_enumerations, 1);
+        assert!(r.chain_lookups as usize > r.candidates.len());
+        // The report renders and serializes.
+        assert!(r.render().contains("adaptive (drain)"));
+        assert!(r.to_json().to_string().contains("oracle"));
+    }
+}

@@ -5,6 +5,7 @@
 //! loop and drives the netsim plus whichever [`crate::runtime`] inference
 //! backend is loaded (PJRT artifacts or the hermetic analytic reference).
 
+pub mod adaptive;
 pub mod batcher;
 pub mod corruption;
 pub mod drr;
@@ -19,6 +20,10 @@ pub mod suggest;
 pub mod sweep;
 pub mod workload;
 
+pub use adaptive::{
+    run_adaptive_comparison, AdaptiveConfig, AdaptiveReport, ChainCache,
+    ControllerConfig, PolicyOutcome, SwitchPolicy,
+};
 pub use placement::{
     place, FleetDevice, FleetSpec, FleetStream, PlacementOutcome,
     PlacementPlan, StreamVerdict,

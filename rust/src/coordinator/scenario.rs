@@ -41,6 +41,7 @@ use super::qos::QosRequirements;
 use crate::data::Dataset;
 use crate::model::{self, DeviceProfile, Network};
 use crate::netsim::event::SimTime;
+use crate::netsim::trace::LinkTrace;
 use crate::netsim::transfer::{Channel, NetworkConfig, Protocol};
 use crate::netsim::Dir;
 use crate::runtime::{Executable, InferenceBackend, RtInput};
@@ -147,7 +148,7 @@ impl std::fmt::Display for ScenarioKind {
 /// ([`crate::runtime::Manifest::arch`]); the scale picks between that
 /// arch's trained slim geometry and its paper-scale (224x224, 1000-class)
 /// network.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ModelScale {
     /// The actual trained slim model (end-to-end serving).
     Slim,
@@ -214,6 +215,39 @@ pub(crate) fn reseed_hop_nets(hop_nets: &mut [NetworkConfig], seed: u64) {
         net.seed =
             seed.wrapping_add((h as u64).wrapping_mul(HOP_SEED_STRIDE));
     }
+}
+
+/// Attach per-hop [`LinkTrace`]s to a hop-net chain, shared by
+/// [`ScenarioConfig::apply_traces`] and the heterogeneous multi-stream
+/// config. A trace targets one hop only, so a replicated single-entry
+/// template is first materialized to `hops` explicit entries (via
+/// [`derive_hop_net`], preserving the per-hop seed derivation
+/// byte-identically) whenever the chain has more than one hop — otherwise
+/// a trace set on the template would silently replicate to every hop.
+pub(crate) fn apply_hop_traces(
+    hop_nets: &mut Vec<NetworkConfig>,
+    hops: usize,
+    traces: &[(usize, LinkTrace)],
+) -> Result<()> {
+    if traces.is_empty() {
+        return Ok(());
+    }
+    let hops = hops.max(1);
+    if hop_nets.len() == 1 && hops > 1 {
+        *hop_nets =
+            (0..hops).map(|h| derive_hop_net(hop_nets, h)).collect();
+    }
+    for (hop, trace) in traces {
+        if *hop >= hop_nets.len() {
+            bail!(
+                "trace targets hop{hop} but the scenario has only {} \
+                 inter-tier hop(s)",
+                hop_nets.len()
+            );
+        }
+        hop_nets[*hop].trace = Some(trace.clone());
+    }
+    Ok(())
 }
 
 #[derive(Clone, Debug)]
@@ -295,6 +329,20 @@ impl ScenarioConfig {
     /// re-draws every hop's loss pattern deterministically.
     pub fn set_base_seed(&mut self, seed: u64) {
         reseed_hop_nets(&mut self.hop_nets, seed);
+    }
+
+    /// Attach time-varying [`LinkTrace`]s to this scenario's hops (parsed
+    /// from `--trace hop0=wifi>congested@2s,...` or a JSON trace file).
+    /// A single-entry replicated template is materialized to one explicit
+    /// entry per inter-tier hop first (byte-identical derivation), so a
+    /// trace on hop 0 never leaks onto later hops. Errors if a trace
+    /// targets a hop the scenario kind doesn't have.
+    pub fn apply_traces(
+        &mut self,
+        traces: &[(usize, LinkTrace)],
+    ) -> Result<()> {
+        let hops = self.kind.tiers_needed().saturating_sub(1).max(1);
+        apply_hop_traces(&mut self.hop_nets, hops, traces)
     }
 }
 

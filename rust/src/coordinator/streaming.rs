@@ -551,6 +551,18 @@ impl MultiStreamConfig {
         reseed_hop_nets(&mut self.hop_nets, seed);
     }
 
+    /// Attach time-varying [`crate::netsim::LinkTrace`]s to this mix's
+    /// hops, materializing a single-entry template first (same contract
+    /// as [`ScenarioConfig::apply_traces`], but the hop count comes from
+    /// the shared tier chain).
+    pub fn apply_traces(
+        &mut self,
+        traces: &[(usize, crate::netsim::LinkTrace)],
+    ) -> Result<()> {
+        let hops = self.tiers.len().saturating_sub(1).max(1);
+        super::scenario::apply_hop_traces(&mut self.hop_nets, hops, traces)
+    }
+
     /// Aggregate offered load over the open-loop clients, frames/s.
     pub fn offered_fps(&self) -> f64 {
         self.clients
@@ -692,6 +704,15 @@ enum Ev {
     ServerDone { batch: Batch },
     /// Frame `g`'s result arrived back at tier `hop` (0 = the client).
     DownDelivered { g: usize, hop: usize },
+    /// Hop `hop`'s [`LinkTrace`] enters a new segment. Scheduled upfront
+    /// (one event per boundary) only for hops whose trace has more than
+    /// one segment, so constant traces leave the event stream — and
+    /// therefore `events_processed` and every sequence-number tiebreak —
+    /// byte-identical to the untraced engine. The links themselves sample
+    /// the trace lazily at send time; this event exists so the calendar
+    /// *sees* the boundary (waking the simulation even when idle, and
+    /// giving adaptive controllers a deterministic observation point).
+    TraceBoundary { hop: usize },
 }
 
 /// Frame state in struct-of-arrays layout: one arena entry per frame,
@@ -1360,6 +1381,11 @@ impl<'a> Sim<'a> {
             Ev::BatchTimer => self.batch_timer(t),
             Ev::ServerDone { batch } => self.server_done(batch, t),
             Ev::DownDelivered { g, hop } => self.down_delivered(g, hop, t),
+            // Segment entry itself is a no-op: links cost transfers
+            // piecewise from the trace regardless. The event's job is
+            // done the moment it pops (clock advanced, boundary visible
+            // in the calendar).
+            Ev::TraceBoundary { .. } => Ok(()),
         }
     }
 }
@@ -1550,6 +1576,26 @@ fn simulate(
             sim.emit(c, 0)?;
         }
     }
+    // Trace boundaries enter the calendar as explicit events — one per
+    // segment transition per hop. Constant (or absent) traces schedule
+    // none, keeping the event stream byte-identical to the untraced
+    // engine; multi-segment traces get deterministic boundary wakeups
+    // regardless of traffic.
+    let boundaries: Vec<(usize, Vec<SimTime>)> = sim
+        .channels
+        .iter()
+        .enumerate()
+        .filter_map(|(hop, ch)| {
+            ch.trace().filter(|tr| !tr.is_constant()).map(|tr| {
+                (hop, tr.boundaries())
+            })
+        })
+        .collect();
+    for (hop, bounds) in boundaries {
+        for b in bounds {
+            sim.q.schedule(b, Ev::TraceBoundary { hop });
+        }
+    }
     while sim.completed < total {
         let Some((t, ev)) = sim.q.pop() else {
             bail!(
@@ -1684,12 +1730,12 @@ pub fn run_stream_with_queue(
 /// Optimistic (lower-bound) serialization time of `bytes` on `net`'s
 /// bottleneck rate, in ns. Ignores protocol headers, losses and ACK
 /// coupling — everything that can only make the real channel slower — so
-/// a stream rejected on this estimate provably cannot be served.
+/// a stream rejected on this estimate provably cannot be served. Under a
+/// time-varying trace the bound uses the trace's *best-case* segment
+/// ([`NetworkConfig::best_rate_bps`]): a stream infeasible even on the
+/// link's best segment is infeasible on every segment.
 fn lane_service_ns(net: &NetworkConfig, bytes: u64) -> f64 {
-    let mut rate = net.capacity_bps;
-    if net.interface_bps > 0.0 {
-        rate = rate.min(net.interface_bps);
-    }
+    let rate = net.best_rate_bps();
     if rate <= 0.0 {
         return f64::INFINITY;
     }

@@ -156,6 +156,14 @@ pub struct SweepSpec {
     /// match every swept scenario's hop count. Any `seed=` segments are
     /// overridden by the sweep's own seed schedule.
     pub hop_nets: Vec<String>,
+    /// Time-varying channel schedules swept as a grid axis. Each entry is
+    /// a hop-trace spec (`"hop0=wifi>congested@2s"`, see
+    /// [`crate::netsim::trace::parse_hop_traces`]) attached on top of the
+    /// point's channel chain; empty = one untraced value. Traces multiply
+    /// the grid as the innermost axis, so untraced specs keep their
+    /// stride, and a constant trace reproduces the untraced point
+    /// byte-identically.
+    pub traces: Vec<String>,
     // -- fixed parameters -------------------------------------------------
     pub edge: String,
     pub server: String,
@@ -200,6 +208,9 @@ pub struct SweepJob {
     /// Explicit per-hop channel specs (empty = derived from the
     /// protocol/channel/latency/loss fields above).
     pub hop_nets: Vec<String>,
+    /// Hop-trace spec attached to this point's channels (`None` =
+    /// untraced constant channels).
+    pub trace: Option<String>,
     /// `Some(i)` = this point runs `spec.client_mixes[i]` on the
     /// multi-tenant engine; the scenario / arch / scale columns then label
     /// the mix's first tenant and `clients` counts the whole mix.
@@ -251,6 +262,7 @@ impl SweepSpec {
             cut_chains: Vec::new(),
             client_mixes: Vec::new(),
             hop_nets: Vec::new(),
+            traces: Vec::new(),
             edge: "edge-gpu".to_string(),
             server: "server-gpu".to_string(),
             dataset: "test".to_string(),
@@ -288,9 +300,10 @@ impl SweepSpec {
     /// Expand the grid into its ordered job list. Axis order (outermost
     /// first): scenario (declared kinds, then one MC entry per
     /// `cut_chains` element), protocol, channel, latency, loss, scale,
-    /// arch, clients, offered_fps, tiers — so a caller can index `jobs`
-    /// arithmetically; newer inner axes (arch, load, tiers) default to a
-    /// single value, preserving the stride of older specs. The only
+    /// arch, clients, offered_fps, tiers, traces — so a caller can index
+    /// `jobs` arithmetically; newer inner axes (arch, load, tiers,
+    /// traces) default to a single value, preserving the stride of older
+    /// specs. The only
     /// non-cartesian rule: an MC scenario pairs exclusively with tier
     /// chains of matching length (`cuts + 1`), and it is an error for an
     /// MC scenario to match none of them.
@@ -498,6 +511,31 @@ impl SweepSpec {
                 }
             }
         }
+        // Trace specs parse eagerly and must target hops every swept
+        // scenario actually has (mix points are checked against their
+        // tier chains inside the mix loop below).
+        let mut trace_max_hop: Option<usize> = None;
+        for t in &self.traces {
+            let entries = crate::netsim::trace::parse_hop_traces(t)
+                .with_context(|| {
+                    format!("sweep spec '{}': traces entry", self.name)
+                })?;
+            let max_hop =
+                entries.iter().map(|(h, _)| *h).max().unwrap_or(0);
+            trace_max_hop =
+                Some(trace_max_hop.unwrap_or(0).max(max_hop));
+            for kind in &scenarios {
+                let hops = kind.tiers_needed().saturating_sub(1).max(1);
+                if max_hop >= hops {
+                    bail!(
+                        "sweep spec '{}': trace '{t}' targets hop{max_hop} \
+                         but scenario {kind} has only {hops} inter-tier \
+                         hop(s)",
+                        self.name
+                    );
+                }
+            }
+        }
         // MC cut ids must be in range for every arch on the grid — an
         // invalid spec fails here, not inside a worker thread mid-sweep.
         // (Per-arch cut-mark counts are scale-independent: the slim and
@@ -588,6 +626,7 @@ impl SweepSpec {
                                                             hop_nets: self
                                                                 .hop_nets
                                                                 .clone(),
+                                                            trace: None,
                                                             mix: None,
                                                         }
                                                     }
@@ -605,6 +644,7 @@ impl SweepSpec {
                                                         offered_fps,
                                                         tiers: chain.clone(),
                                                         hop_nets: Vec::new(),
+                                                        trace: None,
                                                         mix: None,
                                                     },
                                                 });
@@ -650,6 +690,20 @@ impl SweepSpec {
                                 if mc_mismatch {
                                     continue;
                                 }
+                                if let Some(mh) = trace_max_hop {
+                                    if mh + 1 >= chain.len() {
+                                        bail!(
+                                            "sweep spec '{}': \
+                                             client_mixes[{mi}] ('{}') \
+                                             pairs with a {}-tier chain \
+                                             but a traces entry targets \
+                                             hop{mh}",
+                                            self.name,
+                                            mix.name,
+                                            chain.len()
+                                        );
+                                    }
+                                }
                                 if self.hop_nets.len() > 1
                                     && self.hop_nets.len() != chain.len() - 1
                                 {
@@ -680,6 +734,7 @@ impl SweepSpec {
                                         offered_fps: None,
                                         tiers: chain.clone(),
                                         hop_nets: self.hop_nets.clone(),
+                                        trace: None,
                                         mix: Some(mi),
                                     },
                                     None => SweepJob {
@@ -695,6 +750,7 @@ impl SweepSpec {
                                         offered_fps: None,
                                         tiers: chain.clone(),
                                         hop_nets: Vec::new(),
+                                        trace: None,
                                         mix: Some(mi),
                                     },
                                 });
@@ -711,6 +767,19 @@ impl SweepSpec {
                     self.name,
                     mix.name
                 );
+            }
+        }
+        // The trace axis multiplies the grid as the innermost axis (trace
+        // values vary fastest), so untraced specs keep their stride.
+        if !self.traces.is_empty() {
+            let base = std::mem::take(&mut jobs);
+            for job in base {
+                for t in &self.traces {
+                    let mut j = job.clone();
+                    j.index = jobs.len();
+                    j.trace = Some(t.clone());
+                    jobs.push(j);
+                }
             }
         }
         Ok(jobs)
@@ -742,13 +811,14 @@ impl SweepSpec {
     /// the schema). The grid is validated eagerly, so an invalid spec
     /// fails here rather than inside a worker thread.
     pub fn from_json(text: &str) -> Result<SweepSpec> {
-        const KEYS: [&str; 28] = [
+        const KEYS: [&str; 29] = [
             "name", "mode", "scenarios", "protocols", "channels",
             "latencies_us", "loss_rates", "scales", "archs", "clients",
             "offered_fps", "tiers", "cut_chains", "client_mixes", "hop_nets",
-            "edge", "server", "dataset", "frames", "seeds_per_point", "seed",
-            "fps", "frame_period_ns", "max_latency_ms", "min_accuracy",
-            "min_hit_rate", "max_batch", "batch_wait_us",
+            "traces", "edge", "server", "dataset", "frames",
+            "seeds_per_point", "seed", "fps", "frame_period_ns",
+            "max_latency_ms", "min_accuracy", "min_hit_rate", "max_batch",
+            "batch_wait_us",
         ];
         let j = Json::parse(text).context("parsing sweep spec")?;
         // A misspelled optional key must not silently fall back to its
@@ -843,6 +913,9 @@ impl SweepSpec {
         }
         if let Some(v) = j.opt("hop_nets") {
             spec.hop_nets = v.str_vec()?;
+        }
+        if let Some(v) = j.opt("traces") {
+            spec.traces = v.str_vec()?;
         }
         if let Some(v) = j.opt("max_batch") {
             spec.max_batch = v.u64()? as usize;
@@ -1034,6 +1107,10 @@ impl SweepSpec {
                     self.hop_nets.iter().map(|h| json::s(h)).collect(),
                 ),
             ),
+            (
+                "traces",
+                json::arr(self.traces.iter().map(|t| json::s(t)).collect()),
+            ),
             ("edge", json::s(&self.edge)),
             ("server", json::s(&self.server)),
             ("dataset", json::s(&self.dataset)),
@@ -1094,6 +1171,8 @@ pub struct SweepPoint {
     pub tiers: Vec<String>,
     /// Explicit per-hop channel specs (empty = single derived channel).
     pub hop_nets: Vec<String>,
+    /// Hop-trace spec this point ran under (`None` = constant channels).
+    pub trace: Option<String>,
     /// Name of the tenant mix this point ran (`None` = homogeneous).
     pub mix: Option<String>,
     /// Total frames pooled into this point (clients × frames × seeds).
@@ -1182,7 +1261,7 @@ fn run_job(
     job: &SweepJob,
 ) -> Result<SweepPoint> {
     let qos = spec.qos();
-    let hop_nets: Vec<NetworkConfig> = if job.hop_nets.is_empty() {
+    let mut hop_nets: Vec<NetworkConfig> = if job.hop_nets.is_empty() {
         let mut net =
             channel_preset(&job.channel, job.protocol, job.loss, spec.seed)?;
         if let Some(us) = job.latency_us {
@@ -1203,6 +1282,17 @@ fn run_job(
         .iter()
         .map(|d| DeviceProfile::parse(d))
         .collect::<Result<Vec<_>>>()?;
+    if let Some(t) = &job.trace {
+        // Attach the point's time-varying schedule before the engines
+        // replicate / reseed the hop chain: a mix point spans the full
+        // tier chain, a homogeneous point only the hops its kind uses.
+        let hops = match job.mix {
+            None => job.kind.tiers_needed().saturating_sub(1).max(1),
+            Some(_) => tiers.len().saturating_sub(1).max(1),
+        };
+        let entries = crate::netsim::trace::parse_hop_traces(t)?;
+        super::scenario::apply_hop_traces(&mut hop_nets, hops, &entries)?;
+    }
     let seeds: Vec<u64> = (0..spec.seeds_per_point as u64)
         .map(|s| spec.seed.wrapping_add(s))
         .collect();
@@ -1273,6 +1363,7 @@ fn run_job(
         offered_fps: job.offered_fps,
         tiers: job.tiers.clone(),
         hop_nets: job.hop_nets.clone(),
+        trace: job.trace.clone(),
         mix: mix_name,
         frames: r.frames,
         accuracy: r.accuracy,
@@ -1379,6 +1470,7 @@ impl SweepReport {
             "offered_fps",
             "tiers",
             "hop_nets",
+            "trace",
             "mix",
             "frames",
             "accuracy",
@@ -1407,6 +1499,7 @@ impl SweepReport {
                 p.offered_fps.map(|v| format!("{v}")).unwrap_or_default(),
                 p.tiers.join(">"),
                 p.hop_nets.join(">"),
+                p.trace.clone().unwrap_or_default(),
                 p.mix.clone().unwrap_or_default(),
                 p.frames.to_string(),
                 p.accuracy.map(|a| format!("{a:.4}")).unwrap_or_default(),
@@ -1544,6 +1637,10 @@ fn point_json(p: &SweepPoint) -> Json {
         (
             "hop_nets",
             json::arr(p.hop_nets.iter().map(|h| json::s(h)).collect()),
+        ),
+        (
+            "trace",
+            p.trace.as_deref().map(json::s).unwrap_or(Json::Null),
         ),
         (
             "mix",
@@ -1978,6 +2075,68 @@ mod tests {
         let back = SweepSpec::from_json(&spec.to_json().to_string()).unwrap();
         assert_eq!(back.hop_nets, spec.hop_nets);
         assert_eq!(back.to_json().to_string(), spec.to_json().to_string());
+    }
+
+    #[test]
+    fn traces_axis_multiplies_innermost_and_validates() {
+        let mut spec = small_spec();
+        spec.scenarios = vec![ScenarioKind::Sc { split: 13 }];
+        spec.protocols = vec![Protocol::Tcp];
+        spec.loss_rates = vec![0.0, 0.08];
+        spec.frames = 4;
+        spec.traces = vec![
+            "hop0=gigabit".to_string(),
+            "hop0=gigabit>degraded@2ms".to_string(),
+        ];
+        let jobs = spec.expand().unwrap();
+        // 2 loss values × 2 traces, the trace varying fastest.
+        assert_eq!(jobs.len(), 4);
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.index, i);
+        }
+        assert_eq!(jobs[0].trace.as_deref(), Some("hop0=gigabit"));
+        assert_eq!(
+            jobs[1].trace.as_deref(),
+            Some("hop0=gigabit>degraded@2ms")
+        );
+        assert_eq!(jobs[1].loss, 0.0);
+        assert_eq!(jobs[2].loss, 0.08);
+        // The axis survives the JSON round-trip.
+        let back = SweepSpec::from_json(&spec.to_json().to_string()).unwrap();
+        assert_eq!(back.traces, spec.traces);
+        assert_eq!(back.to_json().to_string(), spec.to_json().to_string());
+        // A constant trace restating the point's own channel reproduces
+        // the untraced metrics; the degraded trace visibly hurts.
+        let report = run_sweep(&spec, 2, &factory).unwrap();
+        let mut untraced = spec.clone();
+        untraced.traces.clear();
+        let base = run_sweep(&untraced, 1, &factory).unwrap();
+        let p = &report.points[0];
+        let b = &base.points[0];
+        assert_eq!(p.mean_latency_ns, b.mean_latency_ns);
+        assert_eq!(p.p99_latency_ns, b.p99_latency_ns);
+        assert_eq!(p.throughput_fps, b.throughput_fps);
+        assert!(
+            report.points[1].mean_latency_ns > p.mean_latency_ns,
+            "degraded trace should slow the stream"
+        );
+        // CSV and JSON carry the trace column, deterministically across
+        // thread counts.
+        assert!(report.to_csv().to_string().contains("degraded@2ms"));
+        assert!(report.to_json().to_string().contains("\"trace\""));
+        let solo = run_sweep(&spec, 1, &factory).unwrap();
+        assert_eq!(
+            solo.to_json().to_string(),
+            report.to_json().to_string()
+        );
+        // Malformed chains and out-of-range hops fail eagerly.
+        let mut bad = spec.clone();
+        bad.traces = vec!["hop0=carrier-pigeon".to_string()];
+        assert!(bad.expand().is_err());
+        let mut bad = spec.clone();
+        bad.traces = vec!["hop1=gigabit".to_string()];
+        let err = bad.expand().unwrap_err().to_string();
+        assert!(err.contains("hop1"), "{err}");
     }
 
     #[test]

@@ -89,7 +89,9 @@ commands:
 most commands accept --arch vgg16 | resnet18 | mobilenetv2 to pick the
 model architecture (split ids are per-arch graph-cut indices), and
 --tiers <sensor,...,cloud> to place a pipeline across a device chain
-(mc@<k cuts> partitions the network over k+1 tiers, one channel per hop)
+(mc@<k cuts> partitions the network over k+1 tiers, one channel per hop);
+simulate/serve take --trace hop0=<chain> for time-varying channels and
+simulate --adaptive on compares mid-stream re-splitting to static cuts
 
 run `sei <command> --help` for options"
         .to_string()
@@ -474,9 +476,17 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
               tiers, e.g. sensor-npu,edge-gpu,server-gpu)")
         .opt("scale", "slim", "slim | full (paper-scale volumetrics)")
         .opt("dataset", "test", "train | test | ice")
+        .opt("trace", "",
+             "time-varying channel schedule: hop0=<chain>[,hop1=...] with \
+              chain = state[>state@t...] (states: congested | degraded | \
+              a channel spec), a .json hop-map file, or file.json#entry \
+              of a trace suite")
+        .opt("adaptive", "off",
+             "on | off: run the adaptive re-split comparison (static-best \
+              vs drain/drop controllers vs zero-cost oracle) over the \
+              traced channels instead of one fixed configuration")
         .opt("seed", "42", "simulation seed")
         .parse(args)?;
-    let engine = backend_from(&m)?;
     let hop_nets = hop_nets_from(&m)?;
     let tiers = tiers_from(&m)?;
     let qos = QosRequirements::with_fps(m.f64("fps")?)?;
@@ -488,6 +498,35 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
         frame_period_ns: (1e9 / m.f64("fps")?) as u64,
     };
     reseed_from_cli(&mut cfg, &m)?;
+    if let Some(t) = m.opt_str("trace").filter(|s| !s.is_empty()) {
+        cfg.apply_traces(&sei::netsim::trace::parse_trace_arg(t)?)?;
+    }
+    match m.str("adaptive") {
+        "off" => {}
+        "on" => {
+            // A pure timing study — no inference backend needed: compare
+            // the best static cut chain against the mid-stream re-split
+            // controller (both switch policies) and the zero-cost oracle.
+            let acfg = sei::coordinator::AdaptiveConfig {
+                arch: Arch::parse(m.str("arch"))?,
+                scale: cfg.scale,
+                tiers: cfg.tiers.clone(),
+                hop_nets: cfg.hop_nets.clone(),
+                frames: m.usize("frames")?,
+                frame_period_ns: cfg.frame_period_ns,
+                deadline_ns: qos
+                    .max_latency_ns
+                    .unwrap_or(cfg.frame_period_ns * 2),
+                controller: Default::default(),
+                queue: sei::netsim::QueueKind::Calendar,
+            };
+            let report = sei::coordinator::run_adaptive_comparison(&acfg)?;
+            print!("{}", report.render());
+            return Ok(());
+        }
+        other => bail!("unknown adaptive mode '{other}' (on | off)"),
+    }
+    let engine = backend_from(&m)?;
     let ds = engine.dataset(m.str("dataset"))?;
     let report = coordinator::serve(&*engine, &cfg, &ds,
                                     m.usize("frames")?, &qos)?;
@@ -534,6 +573,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("admission", "on",
              "on | off: reject provably unservable streams \
               (clients-spec mode)")
+        .opt("trace", "",
+             "time-varying channel schedule (hop0=<chain>[,hop1=...], a \
+              .json hop map, or file.json#entry — see `simulate --help`)")
         .opt("seed", "42", "simulation seed")
         .parse(args)?;
     if let Some(path) =
@@ -560,6 +602,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         frame_period_ns: (1e9 / m.f64("fps")?) as u64,
     };
     reseed_from_cli(&mut cfg, &m)?;
+    if let Some(t) = m.opt_str("trace").filter(|s| !s.is_empty()) {
+        cfg.apply_traces(&sei::netsim::trace::parse_trace_arg(t)?)?;
+    }
     let ice = engine.dataset("ice")?;
     println!("ICE-Lab conveyor serving — platform {}", engine.platform());
     if clients > 1 || batch.max_batch > 1 {
@@ -624,6 +669,9 @@ fn serve_clients_from_spec(
     let list = m.str("hop-nets");
     if list.is_empty() || !list.contains("seed=") {
         cfg.set_base_seed(m.u64("seed")?);
+    }
+    if let Some(t) = m.opt_str("trace").filter(|s| !s.is_empty()) {
+        cfg.apply_traces(&sei::netsim::trace::parse_trace_arg(t)?)?;
     }
     // One backend per distinct architecture in the mix.
     let mut archs: Vec<Arch> = Vec::new();

@@ -12,6 +12,7 @@
 //! previous one finished (`busy_until`), at rate min(interface, capacity).
 
 use super::event::{SimTime, NS_PER_SEC};
+use super::trace::LinkTrace;
 use crate::util::rng::Rng;
 
 /// Saboteur model: how packet losses are distributed in time.
@@ -117,8 +118,13 @@ pub struct Link {
     pub cfg: LinkConfig,
     busy_until: SimTime,
     rng: Rng,
-    /// Gilbert-Elliott state: true = Bad.
+    /// Gilbert-Elliott state: true = Bad. Persists across trace segments
+    /// (a handoff does not reset the channel's burst phase).
     ge_bad: bool,
+    /// Optional time-varying schedule. When attached, `send` samples the
+    /// active [`super::trace::TraceSegment`] instead of `cfg`, costing
+    /// boundary-straddling packets piecewise.
+    trace: Option<LinkTrace>,
     pub stats: LinkStats,
 }
 
@@ -129,13 +135,27 @@ impl Link {
             busy_until: 0,
             rng,
             ge_bad: false,
+            trace: None,
             stats: LinkStats::default(),
         }
     }
 
-    fn saboteur(&mut self) -> bool {
-        match self.cfg.loss_model {
-            LossModel::Iid => self.rng.chance(self.cfg.loss_rate),
+    /// Attach (or detach) a time-varying schedule. A constant trace is
+    /// byte-identical to `None`.
+    pub fn set_trace(&mut self, trace: Option<LinkTrace>) {
+        self.trace = trace;
+    }
+
+    pub fn trace(&self) -> Option<&LinkTrace> {
+        self.trace.as_ref()
+    }
+
+    /// The saboteur with explicit parameters, so a trace segment can
+    /// swap the loss law per packet while the Gilbert-Elliott state and
+    /// the RNG stream persist.
+    fn saboteur_at(&mut self, loss_rate: f64, loss_model: LossModel) -> bool {
+        match loss_model {
+            LossModel::Iid => self.rng.chance(loss_rate),
             LossModel::GilbertElliott { p_gb, p_bg, bad_loss } => {
                 // Transition first, then sample in the new state.
                 if self.ge_bad {
@@ -152,18 +172,58 @@ impl Link {
 
     /// Enqueue `bytes` at `now`; returns serialization/arrival times and the
     /// saboteur's verdict. Deterministic given the link's RNG stream.
+    ///
+    /// With a trace attached, serialization integrates the packet's bits
+    /// across every segment it straddles (each span of bits pays its own
+    /// segment's rate), while latency/jitter/loss come from the segment
+    /// active when serialization *starts* — the packet committed to the
+    /// wire under that segment's propagation conditions.
     pub fn send(&mut self, now: SimTime, bytes: u32) -> SendOutcome {
         let start = now.max(self.busy_until);
-        let ser = self.cfg.serialization_ns(bytes);
-        let tx_done = start + ser;
+        let (seg0, tx_done) = if let Some(tr) = &self.trace {
+            let seg0 = *tr.segment_at(start);
+            let mut cur = start;
+            let mut rem_bits = bytes as f64 * 8.0;
+            let tx_done = loop {
+                let rate = tr.segment_at(cur).rate_bps();
+                // First iteration of a constant trace evaluates the
+                // identical expression tree to `serialization_ns`, so a
+                // single-segment trace is byte-identical to no trace.
+                let fin =
+                    cur + ((rem_bits / rate) * NS_PER_SEC).round() as SimTime;
+                match tr.next_boundary_after(cur) {
+                    Some(b) if fin > b => {
+                        rem_bits -= rate * ((b - cur) as f64) / NS_PER_SEC;
+                        cur = b;
+                        if rem_bits <= 0.0 {
+                            break b;
+                        }
+                    }
+                    _ => break fin,
+                }
+            };
+            (Some(seg0), tx_done)
+        } else {
+            (None, start + self.cfg.serialization_ns(bytes))
+        };
+        let ser = tx_done - start;
         self.busy_until = tx_done;
-        let jitter = if self.cfg.jitter_ns > 0 {
-            self.rng.range_u64(0, self.cfg.jitter_ns)
+        let (latency_ns, jitter_ns, loss_rate, loss_model) = match &seg0 {
+            Some(s) => (s.latency_ns, s.jitter_ns, s.loss_rate, s.loss_model),
+            None => (
+                self.cfg.latency_ns,
+                self.cfg.jitter_ns,
+                self.cfg.loss_rate,
+                self.cfg.loss_model,
+            ),
+        };
+        let jitter = if jitter_ns > 0 {
+            self.rng.range_u64(0, jitter_ns)
         } else {
             0
         };
-        let arrival = tx_done + self.cfg.latency_ns + jitter;
-        let dropped = self.saboteur();
+        let arrival = tx_done + latency_ns + jitter;
+        let dropped = self.saboteur_at(loss_rate, loss_model);
         self.stats.packets_sent += 1;
         self.stats.bytes_sent += bytes as u64;
         self.stats.busy_ns += ser;
@@ -315,5 +375,69 @@ mod tests {
         assert_eq!(l.stats.packets_sent, 2);
         assert_eq!(l.stats.bytes_sent, 1500);
         assert_eq!(l.stats.busy_ns, 12_000);
+    }
+
+    #[test]
+    fn constant_trace_is_byte_identical_to_no_trace() {
+        let mut cfg = gbe();
+        cfg.loss_rate = 0.1;
+        cfg.jitter_ns = 30_000;
+        let mut plain = Link::new(cfg.clone(), Rng::new(9));
+        let mut traced = Link::new(cfg.clone(), Rng::new(9));
+        let mut net =
+            crate::netsim::transfer::NetworkConfig::gigabit(
+                crate::netsim::transfer::Protocol::Udp,
+                cfg.loss_rate,
+                0,
+            );
+        net.jitter_ns = cfg.jitter_ns;
+        traced.set_trace(Some(LinkTrace::constant(&net)));
+        for i in 0..500u64 {
+            let a = plain.send(i * 37_000, 100 + (i as u32 % 1400));
+            let b = traced.send(i * 37_000, 100 + (i as u32 % 1400));
+            assert_eq!(a, b, "packet {i}");
+        }
+        assert_eq!(plain.stats.packets_sent, traced.stats.packets_sent);
+        assert_eq!(plain.stats.packets_dropped, traced.stats.packets_dropped);
+        assert_eq!(plain.stats.bytes_sent, traced.stats.bytes_sent);
+        assert_eq!(plain.stats.busy_ns, traced.stats.busy_ns);
+    }
+
+    #[test]
+    fn boundary_straddling_packet_matches_two_segment_closed_form() {
+        // 1500 B starting at t=0 on a 1 Gb/s -> 100 Mb/s trace switching
+        // at 6 µs: 6000 of the 12000 bits clear at 1 Gb/s by the boundary,
+        // the remaining 6000 bits pay 100 Mb/s (60 µs) => tx_done 66 µs.
+        let mut l = Link::new(gbe(), Rng::new(0));
+        l.set_trace(Some(
+            LinkTrace::parse_chain("gigabit>custom@1e8+100000@6000ns")
+                .unwrap(),
+        ));
+        let o = l.send(0, 1500);
+        assert_eq!(o.tx_done, 66_000);
+        // Latency comes from the segment active at send time (100 µs).
+        assert_eq!(o.arrival, 166_000);
+        assert_eq!(l.stats.busy_ns, 66_000);
+        // A packet sent entirely inside the second segment pays its rate.
+        let o2 = l.send(1_000_000, 1500);
+        assert_eq!(o2.tx_done, 1_000_000 + 120_000);
+    }
+
+    #[test]
+    fn trace_switches_loss_and_jitter_at_boundaries() {
+        // Lossless and jitter-free until 1 ms, then loss 1.0: every packet
+        // sent after the boundary drops, none before.
+        let mut l = Link::new(gbe(), Rng::new(4));
+        l.set_trace(Some(
+            LinkTrace::parse_chain("gigabit>gigabit:loss=0.999@1ms")
+                .unwrap(),
+        ));
+        for i in 0..50 {
+            assert!(!l.send(i * 10_000, 100).dropped, "pre-boundary {i}");
+        }
+        let drops = (0..200)
+            .filter(|i| l.send(1_000_000 + i * 10_000, 100).dropped)
+            .count();
+        assert!(drops > 150, "post-boundary drops: {drops}");
     }
 }

@@ -8,6 +8,8 @@
 //!   [`tcp`]      — reliable transport (Reno: slow start, AIMD, fast
 //!                  retransmit, RTO + backoff);
 //!   [`udp`]      — unreliable datagrams with loss reporting;
+//!   [`trace`]    — [`trace::LinkTrace`]: piecewise time-varying link
+//!                  schedules (fading, congestion bursts, handoffs);
 //!   [`transfer`] — [`transfer::Channel`]: the full-duplex message API the
 //!                  scenario engine drives.
 
@@ -15,9 +17,11 @@ pub mod event;
 pub mod link;
 pub mod packet;
 pub mod tcp;
+pub mod trace;
 pub mod transfer;
 pub mod udp;
 
 pub use event::{from_secs, secs, QueueKind, SimTime};
 pub use packet::Dir;
+pub use trace::{LinkTrace, TraceSegment};
 pub use transfer::{Channel, NetworkConfig, Protocol, TransferResult};

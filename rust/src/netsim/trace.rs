@@ -1,0 +1,612 @@
+//! Time-varying link model: piecewise-constant channel traces.
+//!
+//! A [`LinkTrace`] describes how a link's physical parameters (bandwidth,
+//! latency, loss, jitter) evolve over simulated time as an ordered list of
+//! [`TraceSegment`]s — the piecewise-constant abstraction every packet-level
+//! channel emulator (mahimahi, tc-netem schedules) converges on. The
+//! [`super::link::Link`] samples the active segment at send time and costs a
+//! packet that straddles a boundary piecewise, so a transfer spanning a
+//! Wi-Fi → congested handoff pays the degraded rate for exactly the bits
+//! that cross it.
+//!
+//! A *constant* (single-segment) trace is byte-identical to running the
+//! plain [`NetworkConfig`] fields: the piecewise integration collapses to
+//! the same floating-point expression the static path evaluates, the RNG
+//! draw order is unchanged, and no boundary events exist to perturb event
+//! sequence numbers (pinned by `tests/trace_semantics.rs`).
+//!
+//! Trace construction:
+//!   * [`LinkTrace::parse_chain`] — compact grammar
+//!     `<state0>[><state>@<time>...]` where each state is a channel spec
+//!     understood by [`NetworkConfig::parse`] (minus protocol/seed, which
+//!     belong to the channel, not the link) or a trace-only preset
+//!     (`congested`, `degraded`), and times accept `s`/`ms`/`us`/`ns`
+//!     suffixes. Example: `wifi>congested@2s>wifi@4s`.
+//!   * [`LinkTrace::fade`] — smooth multiplicative rate fades (piecewise
+//!     approximation of a fading cycle).
+//!   * [`LinkTrace::congestion_bursts`] — seeded alternation between the
+//!     base channel and a congested state with exponential dwell times.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::event::{SimTime, NS_PER_SEC};
+use super::link::LossModel;
+use super::transfer::{NetworkConfig, Protocol};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One piecewise-constant span of link behavior, active from `start_ns`
+/// until the next segment's start (the last segment extends forever).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceSegment {
+    /// Absolute sim time this segment becomes active, ns.
+    pub start_ns: SimTime,
+    /// Channel capacity, bits/s.
+    pub capacity_bps: f64,
+    /// Interface (NIC) speed, bits/s.
+    pub interface_bps: f64,
+    /// Propagation delay, ns.
+    pub latency_ns: SimTime,
+    /// Saboteur loss rate in [0, 1).
+    pub loss_rate: f64,
+    /// Loss distribution in time.
+    pub loss_model: LossModel,
+    /// Per-packet propagation jitter bound, ns.
+    pub jitter_ns: SimTime,
+}
+
+impl TraceSegment {
+    /// Snapshot the link-level fields of a channel spec as a segment.
+    pub fn from_net(net: &NetworkConfig, start_ns: SimTime) -> TraceSegment {
+        TraceSegment {
+            start_ns,
+            capacity_bps: net.capacity_bps,
+            interface_bps: net.interface_bps,
+            latency_ns: net.latency_ns,
+            loss_rate: net.loss_rate,
+            loss_model: net.loss_model,
+            jitter_ns: net.jitter_ns,
+        }
+    }
+
+    /// Effective serialization rate while this segment is active.
+    pub fn rate_bps(&self) -> f64 {
+        self.capacity_bps.min(self.interface_bps)
+    }
+}
+
+/// A piecewise-constant link schedule over sim time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkTrace {
+    /// Human-readable label carried into reports (`wifi>congested@2s`,
+    /// `fade`, ...).
+    pub name: String,
+    segments: Vec<TraceSegment>,
+}
+
+impl LinkTrace {
+    /// Build a trace from explicit segments. The first segment must start
+    /// at t = 0 and starts must strictly increase; every segment needs a
+    /// positive finite rate.
+    pub fn new(name: &str, segments: Vec<TraceSegment>) -> Result<LinkTrace> {
+        if segments.is_empty() {
+            bail!("trace '{name}': needs at least one segment");
+        }
+        if segments[0].start_ns != 0 {
+            bail!(
+                "trace '{name}': first segment must start at t=0, got {}",
+                segments[0].start_ns
+            );
+        }
+        for w in segments.windows(2) {
+            if w[1].start_ns <= w[0].start_ns {
+                bail!(
+                    "trace '{name}': segment starts must strictly increase \
+                     ({} then {})",
+                    w[0].start_ns,
+                    w[1].start_ns
+                );
+            }
+        }
+        for s in &segments {
+            let r = s.rate_bps();
+            if !r.is_finite() || r <= 0.0 {
+                bail!(
+                    "trace '{name}': segment at {} ns has non-positive \
+                     rate {r}",
+                    s.start_ns
+                );
+            }
+        }
+        Ok(LinkTrace { name: name.to_string(), segments })
+    }
+
+    /// A single-segment trace equal to `net`'s own link parameters — the
+    /// identity trace (byte-identical to no trace at all).
+    pub fn constant(net: &NetworkConfig) -> LinkTrace {
+        LinkTrace {
+            name: "constant".to_string(),
+            segments: vec![TraceSegment::from_net(net, 0)],
+        }
+    }
+
+    pub fn segments(&self) -> &[TraceSegment] {
+        &self.segments
+    }
+
+    /// The segment active at absolute time `t`.
+    pub fn segment_at(&self, t: SimTime) -> &TraceSegment {
+        self.segments
+            .iter()
+            .rev()
+            .find(|s| s.start_ns <= t)
+            .expect("first segment starts at 0")
+    }
+
+    /// The first segment boundary strictly after `t`, if any.
+    pub fn next_boundary_after(&self, t: SimTime) -> Option<SimTime> {
+        self.segments
+            .iter()
+            .map(|s| s.start_ns)
+            .find(|&b| b > t)
+    }
+
+    /// All interior boundaries (every segment start except t = 0) — the
+    /// times the streaming engine schedules `TraceBoundary` calendar
+    /// events at.
+    pub fn boundaries(&self) -> Vec<SimTime> {
+        self.segments[1..].iter().map(|s| s.start_ns).collect()
+    }
+
+    /// A constant trace has no boundaries and degenerates to the static
+    /// channel model.
+    pub fn is_constant(&self) -> bool {
+        self.segments.len() == 1
+    }
+
+    /// Best-case serialization rate over all segments: the bound
+    /// placement/admission stays admissible under (an optimistic estimate
+    /// can only over-admit, never wrongly reject, and the paper's
+    /// admission contract is "rejected ⇒ provably unservable").
+    pub fn best_rate_bps(&self) -> f64 {
+        self.segments
+            .iter()
+            .map(|s| s.rate_bps())
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Worst-case serialization rate over all segments (reporting).
+    pub fn worst_rate_bps(&self) -> f64 {
+        self.segments
+            .iter()
+            .map(|s| s.rate_bps())
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Parse the compact chain grammar: `<state0>[><state>@<time>...]`.
+    /// Each state is a trace preset (`congested` | `degraded`) or a
+    /// channel spec accepted by [`NetworkConfig::parse`] *without*
+    /// protocol/seed segments; `<time>` takes `s`/`ms`/`us`/`ns` suffixes
+    /// or raw integer ns. The chain itself becomes the trace name.
+    pub fn parse_chain(spec: &str) -> Result<LinkTrace> {
+        let mut toks = spec.split('>');
+        let first = toks.next().unwrap_or("");
+        if first.is_empty() {
+            bail!("trace '{spec}': empty initial state");
+        }
+        let mut segments =
+            vec![TraceSegment::from_net(&state_config(first)?, 0)];
+        for tok in toks {
+            let Some((state, at)) = tok.rsplit_once('@') else {
+                bail!(
+                    "trace '{spec}': state '{tok}' needs a switch time \
+                     (<state>@<time>)"
+                );
+            };
+            let t = parse_sim_time(at)
+                .map_err(|e| anyhow!("trace '{spec}': {e}"))?;
+            segments.push(TraceSegment::from_net(&state_config(state)?, t));
+        }
+        LinkTrace::new(spec, segments)
+    }
+
+    /// Piecewise approximation of `cycles` raised-cosine rate fades on top
+    /// of `base`: within each `period_ns` the serialization rate dips
+    /// smoothly from the base rate down to `floor * rate` and back, in
+    /// `steps` constant segments per period. Latency/loss/jitter follow
+    /// the base channel throughout.
+    pub fn fade(
+        base: &NetworkConfig,
+        floor: f64,
+        period_ns: SimTime,
+        cycles: usize,
+        steps: usize,
+    ) -> Result<LinkTrace> {
+        if !(0.0..=1.0).contains(&floor) || floor == 0.0 {
+            bail!("fade: floor must be in (0, 1], got {floor}");
+        }
+        if period_ns == 0 || cycles == 0 || steps < 2 {
+            bail!("fade: needs period > 0, cycles > 0, steps >= 2");
+        }
+        let mut segments = Vec::with_capacity(cycles * steps + 1);
+        for c in 0..cycles {
+            for i in 0..steps {
+                let t = c as u64 * period_ns
+                    + (i as u64 * period_ns) / steps as u64;
+                let phase =
+                    2.0 * std::f64::consts::PI * i as f64 / steps as f64;
+                let depth = 0.5 * (1.0 - phase.cos()); // 0 → 1 → 0
+                let factor = 1.0 - (1.0 - floor) * depth;
+                let mut seg = TraceSegment::from_net(base, t);
+                seg.capacity_bps *= factor;
+                seg.interface_bps *= factor;
+                if segments
+                    .last()
+                    .map(|p: &TraceSegment| p.start_ns)
+                    != Some(t)
+                {
+                    segments.push(seg);
+                }
+            }
+        }
+        // Recover the base channel after the last cycle.
+        segments.push(TraceSegment::from_net(
+            base,
+            cycles as u64 * period_ns,
+        ));
+        LinkTrace::new("fade", segments)
+    }
+
+    /// Seeded alternation between `base` and `congested` with
+    /// exponentially distributed dwell times (`mean_gap_ns` in the base
+    /// state, `mean_burst_ns` congested), out to `total_ns`; the trace
+    /// ends in the base state. Deterministic in `seed`.
+    pub fn congestion_bursts(
+        base: &NetworkConfig,
+        congested: &NetworkConfig,
+        total_ns: SimTime,
+        mean_gap_ns: SimTime,
+        mean_burst_ns: SimTime,
+        seed: u64,
+    ) -> Result<LinkTrace> {
+        if total_ns == 0 || mean_gap_ns == 0 || mean_burst_ns == 0 {
+            bail!("congestion_bursts: all durations must be > 0");
+        }
+        let mut rng = Rng::new(seed);
+        let mut segments = vec![TraceSegment::from_net(base, 0)];
+        let mut t: SimTime = 0;
+        loop {
+            let gap = (rng.exp(mean_gap_ns as f64).round() as SimTime).max(1);
+            t += gap;
+            if t >= total_ns {
+                break;
+            }
+            segments.push(TraceSegment::from_net(congested, t));
+            let burst =
+                (rng.exp(mean_burst_ns as f64).round() as SimTime).max(1);
+            t += burst;
+            segments.push(TraceSegment::from_net(base, t.min(total_ns)));
+            if t >= total_ns {
+                break;
+            }
+        }
+        LinkTrace::new("congestion-bursts", segments)
+    }
+}
+
+/// Resolve one trace-state token: a trace-only preset or a channel spec
+/// restricted to link parameters (protocol/seed belong to the channel the
+/// trace rides on, not to a point-in-time link state).
+fn state_config(tok: &str) -> Result<NetworkConfig> {
+    match tok {
+        // A heavily congested last-mile: 20 Mb/s, 20 ms, bursty 5% loss.
+        "congested" => {
+            let mut c = NetworkConfig::gigabit(Protocol::Tcp, 0.05, 0);
+            c.capacity_bps = 2e7;
+            c.interface_bps = 2e7;
+            c.latency_ns = 20_000_000;
+            c.loss_model = LossModel::bursty(0.05, 8.0);
+            Ok(c)
+        }
+        // A degraded but usable link: 50 Mb/s, 10 ms, 2% i.i.d. loss.
+        "degraded" => {
+            let mut c = NetworkConfig::gigabit(Protocol::Tcp, 0.02, 0);
+            c.capacity_bps = 5e7;
+            c.interface_bps = 5e7;
+            c.latency_ns = 10_000_000;
+            Ok(c)
+        }
+        _ => {
+            for part in tok.split(':').skip(1) {
+                let p = part.to_ascii_lowercase();
+                if p == "tcp" || p == "udp" || p.starts_with("seed=") {
+                    bail!(
+                        "trace state '{tok}': '{part}' is not a link \
+                         parameter (protocol and seed belong to the \
+                         channel spec, not a trace state)"
+                    );
+                }
+            }
+            NetworkConfig::parse(tok)
+        }
+    }
+}
+
+/// Parse a simulated-time literal: a number with an `s`/`ms`/`us`/`ns`
+/// suffix, or raw integer nanoseconds.
+pub fn parse_sim_time(s: &str) -> Result<SimTime> {
+    let s = s.trim();
+    let (num, mult) = if let Some(v) = s.strip_suffix("ns") {
+        (v, 1.0)
+    } else if let Some(v) = s.strip_suffix("us") {
+        (v, 1e3)
+    } else if let Some(v) = s.strip_suffix("ms") {
+        (v, 1e6)
+    } else if let Some(v) = s.strip_suffix('s') {
+        (v, 1e9)
+    } else {
+        (s, 1.0)
+    };
+    let val: f64 = num
+        .parse()
+        .map_err(|_| anyhow!("bad time '{s}' (number + s|ms|us|ns)"))?;
+    if !val.is_finite() || val < 0.0 {
+        bail!("bad time '{s}': must be finite and non-negative");
+    }
+    Ok((val * mult).round() as SimTime)
+}
+
+/// Parse a per-hop trace assignment: `hop<N>=<chain>[,hop<M>=<chain>...]`.
+/// Commas *inside* a chain (e.g. `burst=0.1,0.9` channel-spec segments)
+/// are re-joined onto the preceding group: a new group only starts at a
+/// `hop<N>=` token.
+pub fn parse_hop_traces(spec: &str) -> Result<Vec<(usize, LinkTrace)>> {
+    let mut groups: Vec<String> = Vec::new();
+    for tok in spec.split(',') {
+        let is_new = tok.starts_with("hop") && tok.contains('=');
+        match groups.last_mut() {
+            Some(last) if !is_new => {
+                last.push(',');
+                last.push_str(tok);
+            }
+            _ => groups.push(tok.to_string()),
+        }
+    }
+    let mut out = Vec::new();
+    for g in &groups {
+        let Some((hop, chain)) = g.split_once('=') else {
+            bail!("trace assignment '{g}': expected hop<N>=<chain>");
+        };
+        let Some(idx) = hop.strip_prefix("hop") else {
+            bail!("trace assignment '{g}': expected hop<N>=<chain>");
+        };
+        let hop: usize = idx.parse().map_err(|_| {
+            anyhow!("trace assignment '{g}': bad hop index '{idx}'")
+        })?;
+        if out.iter().any(|(h, _)| *h == hop) {
+            bail!("trace assignment '{spec}': duplicate hop{hop}");
+        }
+        out.push((hop, LinkTrace::parse_chain(chain)?));
+    }
+    if out.is_empty() {
+        bail!("empty trace assignment");
+    }
+    Ok(out)
+}
+
+/// Parse a JSON hop-map object (`{"hop0": "<chain>", ...}`) into per-hop
+/// traces — the document format of a trace file and of each entry in a
+/// trace suite.
+pub fn hop_traces_from_json(json: &Json) -> Result<Vec<(usize, LinkTrace)>> {
+    let Json::Obj(map) = json else {
+        bail!("trace document must be an object mapping hop<N> to a chain");
+    };
+    let mut out = Vec::new();
+    for (k, v) in map {
+        let Some(idx) = k.strip_prefix("hop") else {
+            bail!("trace document: key '{k}' is not hop<N>");
+        };
+        let hop: usize = idx
+            .parse()
+            .map_err(|_| anyhow!("trace document: bad hop index '{k}'"))?;
+        out.push((hop, LinkTrace::parse_chain(v.str()?)?));
+    }
+    if out.is_empty() {
+        bail!("trace document assigns no hops");
+    }
+    out.sort_by_key(|(h, _)| *h);
+    Ok(out)
+}
+
+/// Resolve a `--trace` argument: either the compact per-hop grammar
+/// (`hop0=wifi>congested@2s,...`), a JSON trace file (`file.json`, a
+/// hop-map object), or one entry of a trace suite (`file.json#entry`,
+/// where the file maps entry names to hop-map objects).
+pub fn parse_trace_arg(arg: &str) -> Result<Vec<(usize, LinkTrace)>> {
+    let (path, entry) = match arg.split_once('#') {
+        Some((p, e)) => (p, Some(e)),
+        None => (arg, None),
+    };
+    if path.ends_with(".json") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("trace file '{path}': {e}"))?;
+        let json = Json::parse(&text)
+            .map_err(|e| anyhow!("trace file '{path}': {e}"))?;
+        let doc = match entry {
+            Some(name) => json.get(name).map_err(|_| {
+                anyhow!("trace file '{path}' has no entry '{name}'")
+            })?,
+            None => &json,
+        };
+        hop_traces_from_json(doc)
+    } else if entry.is_some() {
+        bail!("trace '{arg}': #entry selectors only apply to .json files");
+    } else {
+        parse_hop_traces(arg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_parses_states_and_times() {
+        let tr = LinkTrace::parse_chain("wifi>congested@2s>wifi@4s").unwrap();
+        assert_eq!(tr.segments().len(), 3);
+        assert_eq!(tr.segments()[0].rate_bps(), 16e7);
+        assert_eq!(tr.segments()[1].start_ns, 2_000_000_000);
+        assert_eq!(tr.segments()[1].rate_bps(), 2e7);
+        assert_eq!(tr.segments()[2].start_ns, 4_000_000_000);
+        assert_eq!(tr.boundaries(), vec![2_000_000_000, 4_000_000_000]);
+        assert!(!tr.is_constant());
+        assert_eq!(tr.best_rate_bps(), 16e7);
+        assert_eq!(tr.worst_rate_bps(), 2e7);
+    }
+
+    #[test]
+    fn chain_accepts_custom_states_with_at_signs() {
+        // The switch time splits at the *last* '@'.
+        let tr =
+            LinkTrace::parse_chain("gigabit>edge@5e7+100000@1500ms").unwrap();
+        assert_eq!(tr.segments()[1].start_ns, 1_500_000_000);
+        assert_eq!(tr.segments()[1].rate_bps(), 5e7);
+    }
+
+    #[test]
+    fn segment_lookup_and_boundaries() {
+        let tr = LinkTrace::parse_chain("gigabit>wifi@1000>gigabit@3000")
+            .unwrap();
+        assert_eq!(tr.segment_at(0).rate_bps(), 1e9);
+        assert_eq!(tr.segment_at(999).rate_bps(), 1e9);
+        assert_eq!(tr.segment_at(1000).rate_bps(), 16e7);
+        assert_eq!(tr.segment_at(2999).rate_bps(), 16e7);
+        assert_eq!(tr.segment_at(u64::MAX).rate_bps(), 1e9);
+        assert_eq!(tr.next_boundary_after(0), Some(1000));
+        assert_eq!(tr.next_boundary_after(1000), Some(3000));
+        assert_eq!(tr.next_boundary_after(3000), None);
+    }
+
+    #[test]
+    fn constant_trace_is_the_identity() {
+        let net = NetworkConfig::wifi(Protocol::Udp, 0.01, 7);
+        let tr = LinkTrace::constant(&net);
+        assert!(tr.is_constant());
+        assert!(tr.boundaries().is_empty());
+        let s = tr.segment_at(123_456);
+        assert_eq!(s.latency_ns, net.latency_ns);
+        assert_eq!(s.rate_bps(), 16e7);
+        assert_eq!(s.loss_rate, 0.01);
+    }
+
+    #[test]
+    fn chain_rejects_protocol_seed_and_malformed_times() {
+        assert!(LinkTrace::parse_chain("wifi:udp>congested@1s").is_err());
+        assert!(LinkTrace::parse_chain("wifi:seed=3").is_err());
+        assert!(LinkTrace::parse_chain("wifi>congested").is_err());
+        assert!(LinkTrace::parse_chain("wifi>congested@-1s").is_err());
+        assert!(LinkTrace::parse_chain("wifi>congested@fast").is_err());
+        assert!(LinkTrace::parse_chain("").is_err());
+        // Same-time or out-of-order switches are rejected.
+        assert!(
+            LinkTrace::parse_chain("wifi>congested@1s>wifi@1s").is_err()
+        );
+        assert!(
+            LinkTrace::parse_chain("wifi>congested@2s>wifi@1s").is_err()
+        );
+        // Link parameters (loss, jitter, burst) are allowed in states.
+        assert!(
+            LinkTrace::parse_chain("wifi:loss=0.1:jitter=5000").is_ok()
+        );
+    }
+
+    #[test]
+    fn sim_time_suffixes() {
+        assert_eq!(parse_sim_time("2s").unwrap(), 2_000_000_000);
+        assert_eq!(parse_sim_time("1500ms").unwrap(), 1_500_000_000);
+        assert_eq!(parse_sim_time("250us").unwrap(), 250_000);
+        assert_eq!(parse_sim_time("42ns").unwrap(), 42);
+        assert_eq!(parse_sim_time("1000").unwrap(), 1000);
+        assert_eq!(parse_sim_time("0.5s").unwrap(), 500_000_000);
+        assert!(parse_sim_time("x").is_err());
+        assert!(parse_sim_time("-1s").is_err());
+    }
+
+    #[test]
+    fn hop_traces_regroup_commas_inside_chains() {
+        let got = parse_hop_traces(
+            "hop0=wifi:burst=0.1,0.9>congested@2s,hop1=gigabit",
+        )
+        .unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].0, 0);
+        assert_eq!(got[0].1.segments().len(), 2);
+        assert!(matches!(
+            got[0].1.segments()[0].loss_model,
+            LossModel::GilbertElliott { .. }
+        ));
+        assert_eq!(got[1].0, 1);
+        assert!(got[1].1.is_constant());
+        assert!(parse_hop_traces("hop0=wifi,hop0=gigabit").is_err());
+        assert!(parse_hop_traces("wifi").is_err());
+        assert!(parse_hop_traces("").is_err());
+    }
+
+    #[test]
+    fn json_hop_map_parses_and_sorts() {
+        let j = Json::parse(
+            r#"{"hop1": "gigabit", "hop0": "wifi>congested@2s"}"#,
+        )
+        .unwrap();
+        let got = hop_traces_from_json(&j).unwrap();
+        assert_eq!(got[0].0, 0);
+        assert_eq!(got[0].1.segments().len(), 2);
+        assert_eq!(got[1].0, 1);
+        assert!(hop_traces_from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(hop_traces_from_json(
+            &Json::parse(r#"{"link0": "wifi"}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn fade_dips_and_recovers() {
+        let base = NetworkConfig::gigabit(Protocol::Tcp, 0.0, 0);
+        let tr = LinkTrace::fade(&base, 0.2, 1_000_000, 2, 8).unwrap();
+        assert!(tr.segments().len() > 8);
+        assert_eq!(tr.segments()[0].rate_bps(), 1e9);
+        let worst = tr.worst_rate_bps();
+        assert!(
+            worst < 0.25 * 1e9 && worst > 0.199 * 1e9,
+            "fade floor missed: {worst}"
+        );
+        // Ends back at the base rate.
+        assert_eq!(tr.segments().last().unwrap().rate_bps(), 1e9);
+        assert_eq!(tr.best_rate_bps(), 1e9);
+        assert!(LinkTrace::fade(&base, 0.0, 1, 1, 8).is_err());
+        assert!(LinkTrace::fade(&base, 0.5, 0, 1, 8).is_err());
+    }
+
+    #[test]
+    fn congestion_bursts_alternate_deterministically() {
+        let base = NetworkConfig::gigabit(Protocol::Tcp, 0.0, 0);
+        let bad = state_config("congested").unwrap();
+        let a = LinkTrace::congestion_bursts(
+            &base, &bad, 10_000_000, 1_000_000, 300_000, 11,
+        )
+        .unwrap();
+        let b = LinkTrace::congestion_bursts(
+            &base, &bad, 10_000_000, 1_000_000, 300_000, 11,
+        )
+        .unwrap();
+        assert_eq!(a, b, "same seed must give the same trace");
+        assert!(a.segments().len() >= 3);
+        assert_eq!(a.segments()[0].rate_bps(), 1e9);
+        assert!(a.worst_rate_bps() < 1e9);
+        let c = LinkTrace::congestion_bursts(
+            &base, &bad, 10_000_000, 1_000_000, 300_000, 12,
+        )
+        .unwrap();
+        assert_ne!(a, c, "different seeds diverge");
+    }
+}

@@ -7,6 +7,7 @@ use anyhow::{anyhow, bail, Result};
 use super::event::SimTime;
 use super::link::{Link, LinkConfig, LinkStats, LossModel};
 use super::packet::Dir;
+use super::trace::LinkTrace;
 use super::tcp::{self, TcpConfig, TcpMessageResult, TcpState};
 use super::udp::{self, UdpConfig, UdpMessageResult};
 use crate::util::rng::Rng;
@@ -56,6 +57,11 @@ pub struct NetworkConfig {
     pub tcp: TcpConfig,
     pub udp: UdpConfig,
     pub seed: u64,
+    /// Optional time-varying schedule for both link directions. `None`
+    /// (and any constant trace) reproduces the static fields above
+    /// byte-identically; a multi-segment trace overrides the link-level
+    /// fields per [`super::trace::TraceSegment`] at send time.
+    pub trace: Option<LinkTrace>,
 }
 
 impl NetworkConfig {
@@ -72,6 +78,7 @@ impl NetworkConfig {
             tcp: TcpConfig::default(),
             udp: UdpConfig::default(),
             seed,
+            trace: None,
         }
     }
 
@@ -90,15 +97,20 @@ impl NetworkConfig {
         c
     }
 
-    /// Parse a channel spec string: `<base>[:tcp|udp][:loss=<f>][:seed=<u64>]`
+    /// Parse a channel spec string:
+    /// `<base>[:tcp|udp][:loss=<f>][:seed=<u64>][:jitter=<ns>][:burst=<p_enter>,<p_exit>]`
     /// where `<base>` is a built-in preset name (`gigabit | fast-ethernet |
     /// wifi`) or a custom `name@<bw_bps>+<lat_ns>` pair (bandwidth accepts
     /// scientific notation and sets both capacity and interface speed;
     /// latency is integer nanoseconds, split at the *last* `+` so
     /// explicit-plus exponents like `radio@5e+7+3000000` work). The
     /// trailing segments may appear in any order; defaults are TCP,
-    /// loss 0, seed 0. Examples: `wifi:udp:loss=0.01:seed=7`,
-    /// `gigabit:tcp`, `radio@5e7+3000000:udp`.
+    /// loss 0, seed 0, jitter 0, i.i.d. loss. `jitter=<ns>` bounds the
+    /// per-packet propagation jitter; `burst=<p_enter>,<p_exit>` switches
+    /// the saboteur to a Gilbert-Elliott burst model with the given
+    /// per-packet state-transition probabilities (bad-state loss 1).
+    /// Examples: `wifi:udp:loss=0.01:seed=7`, `gigabit:tcp`,
+    /// `radio@5e7+3000000:udp`, `wifi:jitter=200000:burst=0.02,0.25`.
     ///
     /// This is the one parse path behind CLI `--net` / `--hop-nets`, the
     /// sweep spec's `hop_nets` axis, and `FleetSpec` links — the channel
@@ -148,6 +160,7 @@ impl NetworkConfig {
         };
         let (mut saw_proto, mut saw_loss, mut saw_seed) =
             (false, false, false);
+        let (mut saw_jitter, mut saw_burst) = (false, false);
         for part in parts {
             if let Some(v) = part.strip_prefix("loss=") {
                 if saw_loss {
@@ -169,6 +182,45 @@ impl NetworkConfig {
                 cfg.seed = v.parse().map_err(|_| {
                     anyhow!("channel '{spec}': bad seed '{v}' (integer)")
                 })?;
+            } else if let Some(v) = part.strip_prefix("jitter=") {
+                if saw_jitter {
+                    bail!("channel '{spec}': duplicate jitter= segment");
+                }
+                saw_jitter = true;
+                cfg.jitter_ns = v.parse().map_err(|_| {
+                    anyhow!(
+                        "channel '{spec}': bad jitter '{v}' (integer ns)"
+                    )
+                })?;
+            } else if let Some(v) = part.strip_prefix("burst=") {
+                if saw_burst {
+                    bail!("channel '{spec}': duplicate burst= segment");
+                }
+                saw_burst = true;
+                let Some((enter, exit)) = v.split_once(',') else {
+                    bail!(
+                        "channel '{spec}': burst needs \
+                         <p_enter>,<p_exit>, got '{v}'"
+                    );
+                };
+                let p_gb: f64 = enter.parse().map_err(|_| {
+                    anyhow!("channel '{spec}': bad burst p_enter '{enter}'")
+                })?;
+                let p_bg: f64 = exit.parse().map_err(|_| {
+                    anyhow!("channel '{spec}': bad burst p_exit '{exit}'")
+                })?;
+                if !(p_gb > 0.0 && p_gb < 1.0) {
+                    bail!(
+                        "channel '{spec}': burst p_enter must be in (0, 1)"
+                    );
+                }
+                if !(p_bg > 0.0 && p_bg <= 1.0) {
+                    bail!(
+                        "channel '{spec}': burst p_exit must be in (0, 1]"
+                    );
+                }
+                cfg.loss_model =
+                    LossModel::GilbertElliott { p_gb, p_bg, bad_loss: 1.0 };
             } else {
                 if saw_proto {
                     bail!("channel '{spec}': duplicate protocol segment");
@@ -177,12 +229,37 @@ impl NetworkConfig {
                 cfg.protocol = Protocol::parse(part).map_err(|_| {
                     anyhow!(
                         "channel '{spec}': unknown segment '{part}' \
-                         (expected tcp | udp | loss=<f> | seed=<u64>)"
+                         (expected tcp | udp | loss=<f> | seed=<u64> | \
+                         jitter=<ns> | burst=<p_enter>,<p_exit>)"
                     )
                 })?;
             }
         }
         Ok(cfg)
+    }
+
+    /// Attach a time-varying schedule (builder form).
+    pub fn with_trace(mut self, trace: LinkTrace) -> Self {
+        self.trace = Some(trace);
+        self
+    }
+
+    /// The best-case serialization rate this channel can ever offer: the
+    /// maximum over the attached trace's segments, or the plain
+    /// capacity/interface bound without one. Admission and placement
+    /// bounds use this so a stream rejected under a time-varying channel
+    /// is provably unservable even in the trace's best segment.
+    pub fn best_rate_bps(&self) -> f64 {
+        match &self.trace {
+            Some(tr) => tr.best_rate_bps(),
+            None => {
+                let mut rate = self.capacity_bps;
+                if self.interface_bps > 0.0 {
+                    rate = rate.min(self.interface_bps);
+                }
+                rate
+            }
+        }
     }
 
     fn link_config(&self) -> LinkConfig {
@@ -202,8 +279,11 @@ impl std::fmt::Display for NetworkConfig {
     /// [`NetworkConfig::parse`]: a built-in preset name when bandwidth and
     /// latency match one (interface speed equal to capacity), else
     /// `custom@<bw_bps>+<lat_ns>`, always followed by the protocol, loss
-    /// and seed segments. Fields the spec grammar cannot express
-    /// (loss model, jitter, transport tuning) are not rendered.
+    /// and seed segments; non-zero jitter renders as `:jitter=<ns>` and a
+    /// bursty saboteur (Gilbert-Elliott with bad-state loss 1) as
+    /// `:burst=<p_enter>,<p_exit>`. Fields the spec grammar cannot express
+    /// (a Gilbert-Elliott bad-state loss below 1, transport tuning,
+    /// attached traces) are not rendered.
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         let symmetric = self.interface_bps == self.capacity_bps;
         if symmetric && self.capacity_bps == 1e9 && self.latency_ns == 100_000
@@ -226,7 +306,18 @@ impl std::fmt::Display for NetworkConfig {
             Protocol::Tcp => "tcp",
             Protocol::Udp => "udp",
         };
-        write!(f, ":{proto}:loss={}:seed={}", self.loss_rate, self.seed)
+        write!(f, ":{proto}:loss={}:seed={}", self.loss_rate, self.seed)?;
+        if self.jitter_ns != 0 {
+            write!(f, ":jitter={}", self.jitter_ns)?;
+        }
+        if let LossModel::GilbertElliott { p_gb, p_bg, bad_loss } =
+            self.loss_model
+        {
+            if bad_loss == 1.0 {
+                write!(f, ":burst={p_gb},{p_bg}")?;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -315,17 +406,28 @@ impl Channel {
     pub fn new(cfg: NetworkConfig) -> Self {
         let mut rng = Rng::new(cfg.seed);
         let lcfg = cfg.link_config();
+        let mut up = Link::new(lcfg.clone(), rng.fork());
+        let mut down = Link::new(lcfg, rng.fork());
+        if let Some(tr) = &cfg.trace {
+            up.set_trace(Some(tr.clone()));
+            down.set_trace(Some(tr.clone()));
+        }
         Channel {
             tcp_up: TcpState::new(&cfg.tcp),
             tcp_down: TcpState::new(&cfg.tcp),
             cfg,
-            up: Link::new(lcfg.clone(), rng.fork()),
-            down: Link::new(lcfg, rng.fork()),
+            up,
+            down,
             now: 0,
             busy_up: 0,
             busy_down: 0,
             transfers: 0,
         }
+    }
+
+    /// The attached time-varying schedule, if any.
+    pub fn trace(&self) -> Option<&LinkTrace> {
+        self.cfg.trace.as_ref()
     }
 
     pub fn now(&self) -> SimTime {
@@ -579,6 +681,21 @@ mod tests {
         assert_eq!(c.latency_ns, 3_000_000);
         assert_eq!(c.protocol, Protocol::Udp);
         assert_eq!(c.seed, 3);
+        // jitter= and burst= reach the struct fields the old grammar
+        // could not express.
+        let j = NetworkConfig::parse(
+            "wifi:udp:jitter=200000:burst=0.02,0.25",
+        )
+        .unwrap();
+        assert_eq!(j.jitter_ns, 200_000);
+        assert_eq!(
+            j.loss_model,
+            LossModel::GilbertElliott {
+                p_gb: 0.02,
+                p_bg: 0.25,
+                bad_loss: 1.0
+            }
+        );
     }
 
     #[test]
@@ -597,6 +714,13 @@ mod tests {
             "gigabit:tcp:udp",           // duplicate protocol
             "gigabit:loss=0:loss=0.1",   // duplicate loss
             "gigabit:seed=1:seed=2",     // duplicate seed
+            "gigabit:jitter=x",          // bad jitter
+            "gigabit:jitter=-5",         // negative jitter
+            "gigabit:jitter=1:jitter=2", // duplicate jitter
+            "gigabit:burst=0.5",         // burst missing p_exit
+            "gigabit:burst=1.5,0.5",     // p_enter out of range
+            "gigabit:burst=0.1,0",       // p_exit out of range
+            "gigabit:burst=0.1,0.5:burst=0.1,0.5", // duplicate burst
         ] {
             assert!(NetworkConfig::parse(bad).is_err(), "{bad}");
         }
@@ -608,6 +732,18 @@ mod tests {
         assert_eq!(w.to_string(), "wifi:udp:loss=0.08:seed=42");
         let c = NetworkConfig::parse("radio@5e7+3000000:udp:loss=0.1").unwrap();
         assert_eq!(c.to_string(), "custom@50000000+3000000:udp:loss=0.1:seed=0");
+        // jitter/burst render and re-parse.
+        let b = NetworkConfig::parse(
+            "wifi:udp:jitter=150000:burst=0.02,0.25",
+        )
+        .unwrap();
+        assert_eq!(
+            b.to_string(),
+            "wifi:udp:loss=0:seed=0:jitter=150000:burst=0.02,0.25"
+        );
+        let rt = NetworkConfig::parse(&b.to_string()).unwrap();
+        assert_eq!(rt.jitter_ns, 150_000);
+        assert_eq!(rt.loss_model, b.loss_model);
     }
 
     #[test]
@@ -630,7 +766,18 @@ mod tests {
             let proto = if c.bool() { "tcp" } else { "udp" };
             let loss = (c.f64(0.0, 0.5) * 1e4).round() / 1e4;
             let seed = c.sized_range(0, 1_000_000_000);
-            let spec = format!("{spec}:{proto}:loss={loss}:seed={seed}");
+            let mut spec = format!("{spec}:{proto}:loss={loss}:seed={seed}");
+            if c.bool() {
+                let jitter: SimTime = c.sized_range(1, 10_000_000);
+                spec.push_str(&format!(":jitter={jitter}"));
+            }
+            if c.bool() {
+                let p_gb =
+                    ((c.f64(0.0001, 0.5) * 1e4).round() / 1e4).max(0.0001);
+                let p_bg =
+                    ((c.f64(0.0001, 1.0) * 1e4).round() / 1e4).max(0.0001);
+                spec.push_str(&format!(":burst={p_gb},{p_bg}"));
+            }
             let cfg = NetworkConfig::parse(&spec)
                 .map_err(|e| format!("parse({spec}): {e}"))?;
             let rt = NetworkConfig::parse(&cfg.to_string())
@@ -641,6 +788,8 @@ mod tests {
                 || rt.interface_bps != cfg.interface_bps
                 || rt.loss_rate != cfg.loss_rate
                 || rt.seed != cfg.seed
+                || rt.jitter_ns != cfg.jitter_ns
+                || rt.loss_model != cfg.loss_model
             {
                 return Err(format!(
                     "display '{cfg}' did not round-trip '{spec}'"

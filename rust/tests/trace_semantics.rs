@@ -1,0 +1,271 @@
+//! Time-varying channel acceptance tests.
+//!
+//! The correctness anchor of the trace refactor is **constant-trace
+//! identity**: attaching a single-segment trace that restates a channel's
+//! own parameters must reproduce the untraced stream byte-identically —
+//! same per-frame records, accuracy, wire bytes and retransmits — for
+//! every cut, transport and event-queue backend. Beyond the anchor: a
+//! boundary-straddling transfer pays each segment's rate piecewise
+//! (two-segment closed form at the channel layer), the committed trace
+//! suite parses and runs, and on its degrading entry the adaptive
+//! re-split controller strictly beats the best static cut chain while
+//! remaining below the zero-switchover-cost oracle — deterministically
+//! across queue backends.
+
+use std::path::Path;
+
+use sei::coordinator::batcher::BatchPolicy;
+use sei::coordinator::{
+    run_adaptive_comparison, run_stream_with_queue, AdaptiveConfig,
+    ControllerConfig, ModelScale, PolicyOutcome, QosRequirements,
+    ScenarioConfig, ScenarioKind, StreamConfig,
+};
+use sei::model::{split_points, Arch, DeviceProfile};
+use sei::netsim::trace::{parse_trace_arg, LinkTrace};
+use sei::netsim::transfer::{Channel, NetworkConfig, Protocol};
+use sei::netsim::{Dir, QueueKind, SimTime};
+use sei::runtime::{load_backend_for, InferenceBackend};
+
+fn engine_for(arch: Arch) -> Box<dyn InferenceBackend> {
+    // No artifacts directory in tests: loads the hermetic analytic backend.
+    load_backend_for(Path::new("artifacts"), arch).expect("backend")
+}
+
+fn suite_arg(entry: &str) -> String {
+    format!(
+        "{}/../examples/specs/trace_suite.json#{entry}",
+        env!("CARGO_MANIFEST_DIR")
+    )
+}
+
+/// Attaching `LinkTrace::constant(net)` to every hop must not move a
+/// single byte or nanosecond: the traced run's frame records equal the
+/// untraced run's, across cuts × transports × queue backends.
+#[test]
+fn constant_trace_reproduces_untraced_stream_byte_identically() {
+    let engine = engine_for(Arch::Vgg16);
+    let ds = engine.dataset("test").unwrap();
+    let qos = QosRequirements::with_fps(50.0).unwrap();
+    let kinds = [
+        (ScenarioKind::Rc, 2usize),
+        (ScenarioKind::Sc { split: 5 }, 2),
+        (ScenarioKind::Sc { split: 13 }, 2),
+        (ScenarioKind::Mc { cuts: vec![5, 13] }, 3),
+    ];
+    for (kind, tiers) in &kinds {
+        for proto in [Protocol::Tcp, Protocol::Udp] {
+            let net = NetworkConfig::gigabit(proto, 0.02, 42);
+            let chain: Vec<DeviceProfile> = match tiers {
+                2 => vec![
+                    DeviceProfile::edge_gpu(),
+                    DeviceProfile::server_gpu(),
+                ],
+                _ => vec![
+                    DeviceProfile::parse("sensor-npu").unwrap(),
+                    DeviceProfile::edge_gpu(),
+                    DeviceProfile::server_gpu(),
+                ],
+            };
+            let scenario = ScenarioConfig {
+                kind: kind.clone(),
+                hop_nets: vec![net.clone()],
+                tiers: chain,
+                scale: ModelScale::Slim,
+                frame_period_ns: 5_000_000,
+            };
+            let mut traced = scenario.clone();
+            traced.hop_nets = vec![net
+                .clone()
+                .with_trace(LinkTrace::constant(&net))];
+            for queue in [QueueKind::Calendar, QueueKind::LinearScan] {
+                let run = |s: &ScenarioConfig| {
+                    run_stream_with_queue(
+                        &*engine,
+                        &StreamConfig {
+                            scenario: s.clone(),
+                            clients: 1,
+                            frames_per_client: 12,
+                            batch: BatchPolicy::immediate(),
+                        },
+                        Some(&ds),
+                        &qos,
+                        queue,
+                    )
+                    .unwrap()
+                };
+                let a = run(&scenario);
+                let b = run(&traced);
+                assert_eq!(
+                    a.records, b.records,
+                    "records diverged: {kind} {proto} {queue:?}"
+                );
+                assert_eq!(a.accuracy, b.accuracy);
+                assert_eq!(a.mean_latency_ns, b.mean_latency_ns);
+                assert_eq!(a.total_retransmits, b.total_retransmits);
+            }
+        }
+    }
+}
+
+/// A transfer that straddles a trace boundary pays each segment's rate
+/// for the bits it moves inside that segment. One 1472 B UDP datagram
+/// (1500 B on the wire = 12000 bits) on a 1 Gb/s -> 100 Mb/s schedule
+/// switching at 6 µs: 6000 bits clear by the boundary, the rest pays
+/// 100 Mb/s (60 µs) — tx end 66 µs, arrival 66 µs + the 100 µs latency
+/// of the segment active at send time.
+#[test]
+fn boundary_straddling_transfer_matches_two_segment_closed_form() {
+    let net = NetworkConfig::parse("up@1e9+100000:udp")
+        .unwrap()
+        .with_trace(
+            LinkTrace::parse_chain("gigabit>slow@1e8+100000@6000ns")
+                .unwrap(),
+        );
+    let mut ch = Channel::new(net);
+    let r = ch.send(Dir::Up, 1472).unwrap();
+    assert_eq!(r.sender_busy_ns(), 66_000);
+    assert_eq!(r.busy_ns(), 166_000);
+    // A message sent entirely inside the second segment pays its rate:
+    // 12000 bits / 1e8 = 120 µs of serialization.
+    ch.advance_to(1_000_000);
+    let r2 = ch.send(Dir::Up, 1472).unwrap();
+    assert_eq!(r2.sender_busy_ns(), 120_000);
+}
+
+/// Every committed suite entry parses into a non-constant single-hop
+/// schedule, and a stream survives the handoff entry end-to-end.
+#[test]
+fn committed_suite_entries_parse_and_stream() {
+    for entry in ["fade", "burst", "handoff", "degrading"] {
+        let traces = parse_trace_arg(&suite_arg(entry)).unwrap();
+        assert_eq!(traces.len(), 1, "{entry}");
+        assert_eq!(traces[0].0, 0, "{entry}");
+        assert!(!traces[0].1.is_constant(), "{entry}");
+    }
+    let engine = engine_for(Arch::Vgg16);
+    let qos = QosRequirements::with_fps(20.0).unwrap();
+    let mut scenario = ScenarioConfig {
+        kind: ScenarioKind::Sc { split: 13 },
+        hop_nets: vec![NetworkConfig::gigabit(Protocol::Udp, 0.0, 42)],
+        tiers: vec![DeviceProfile::edge_gpu(), DeviceProfile::server_gpu()],
+        scale: ModelScale::Slim,
+        frame_period_ns: 50_000_000,
+    };
+    scenario
+        .apply_traces(&parse_trace_arg(&suite_arg("handoff")).unwrap())
+        .unwrap();
+    let report = run_stream_with_queue(
+        &*engine,
+        &StreamConfig {
+            scenario,
+            clients: 1,
+            frames_per_client: 8,
+            batch: BatchPolicy::immediate(),
+        },
+        None,
+        &qos,
+        QueueKind::Calendar,
+    )
+    .unwrap();
+    assert_eq!(report.records.len(), 8);
+    assert!(report.mean_latency_ns > 0.0);
+}
+
+/// The acceptance bar of the adaptive controller, on the committed
+/// degrading entry (good -> bad -> good handoff whose rates are derived
+/// from VGG16's own latent volumetrics): both switch policies strictly
+/// beat the best static cut chain's deadline hit-rate, stay strictly
+/// below the zero-switchover-cost oracle, and the whole comparison is
+/// byte-identical across event-queue backends.
+#[test]
+fn committed_degrading_suite_adaptive_beats_static_best() {
+    let period: SimTime = 10_000_000; // 10 ms
+    let frames = 60usize;
+    let points = split_points(&Arch::Vgg16.full_network());
+    // Mirror the suite's calibration: d = the shallowest candidate of the
+    // smallest-latent group; the suite's good rate crosses the best
+    // *shallow* latent in period/2, its bad rate in 1.35 periods.
+    let n_cand = points.len() - 1;
+    let min_bytes =
+        (0..n_cand).map(|i| points[i].latent_bytes()).min().unwrap();
+    let d = (0..n_cand)
+        .find(|&i| points[i].latent_bytes() == min_bytes)
+        .unwrap();
+    let shallow_min_bytes =
+        (0..d).map(|i| points[i].latent_bytes()).min().unwrap();
+    let traces = parse_trace_arg(&suite_arg("degrading")).unwrap();
+    let segs = traces[0].1.segments();
+    assert_eq!(segs.len(), 3);
+    let rg = shallow_min_bytes as f64 * 8.0 / (0.5 * period as f64 / 1e9);
+    let rb = shallow_min_bytes as f64 * 8.0 / (1.35 * period as f64 / 1e9);
+    assert!((segs[0].rate_bps() - rg).abs() / rg < 1e-6);
+    assert!((segs[1].rate_bps() - rb).abs() / rb < 1e-6);
+    assert_eq!(segs[1].start_ns, (frames as u64 * period) * 2 / 5);
+    assert_eq!(segs[2].start_ns, (frames as u64 * period) * 7 / 10);
+    // Edge tuned so d's head runs at 1.02 x period (same drift the
+    // in-module scenario uses): deep is a poor static choice but an
+    // affordable mid-stream visit.
+    let (head_d, _) = points[d].split_compute();
+    let overhead = 10_000u64;
+    let macs =
+        head_d as f64 / ((1.02 * period as f64 - overhead as f64) / 1e9);
+    let base = NetworkConfig::parse("up@642252800+200000:udp").unwrap();
+    let mut cfg = AdaptiveConfig {
+        arch: Arch::Vgg16,
+        scale: ModelScale::Full,
+        tiers: vec![
+            DeviceProfile::parse(&format!("edge@{macs:e}+{overhead}"))
+                .unwrap(),
+            DeviceProfile::parse("srv@1e15+1000").unwrap(),
+        ],
+        hop_nets: vec![base.with_trace(traces[0].1.clone())],
+        frames,
+        frame_period_ns: period,
+        deadline_ns: period * 2,
+        controller: ControllerConfig {
+            window: 4,
+            check_period_ns: period / 2,
+            min_dwell_ns: 5 * period,
+            switch_margin: 0.1,
+        },
+        queue: QueueKind::Calendar,
+    };
+    let r = run_adaptive_comparison(&cfg).unwrap();
+    let sb = r.static_best_outcome();
+    assert!(
+        r.adaptive_drain.deadline_hit_rate > sb.deadline_hit_rate,
+        "drain {} vs static-best {} ({})",
+        r.adaptive_drain.deadline_hit_rate,
+        sb.deadline_hit_rate,
+        sb.label,
+    );
+    assert!(
+        r.adaptive_drop.deadline_hit_rate > sb.deadline_hit_rate,
+        "drop {} vs static-best {}",
+        r.adaptive_drop.deadline_hit_rate,
+        sb.deadline_hit_rate,
+    );
+    assert!(
+        r.oracle.deadline_hit_rate > r.adaptive_drain.deadline_hit_rate,
+        "oracle {} vs drain {}",
+        r.oracle.deadline_hit_rate,
+        r.adaptive_drain.deadline_hit_rate,
+    );
+    assert!(r.adaptive_drain.switches >= 1);
+    // One candidate enumeration serves every controller decision.
+    assert_eq!(r.chain_enumerations, 1);
+    assert!(r.chain_lookups as usize > r.candidates.len());
+    // Byte-identical across event-queue backends.
+    cfg.queue = QueueKind::LinearScan;
+    let r2 = run_adaptive_comparison(&cfg).unwrap();
+    let eq = |a: &PolicyOutcome, b: &PolicyOutcome| {
+        a.deadline_hit_rate == b.deadline_hit_rate
+            && a.mean_latency_ns == b.mean_latency_ns
+            && a.switches == b.switches
+            && a.dropped == b.dropped
+    };
+    assert!(eq(&r.adaptive_drain, &r2.adaptive_drain));
+    assert!(eq(&r.adaptive_drop, &r2.adaptive_drop));
+    assert!(eq(&r.oracle, &r2.oracle));
+    assert_eq!(r.static_best, r2.static_best);
+}
