@@ -1,6 +1,13 @@
-//! Bench: wall-clock speedup of the design-space sweep engine's worker
-//! pool over sequential execution of the same grid — and a determinism
-//! check that every thread count produces a byte-identical report.
+//! Bench: the sweep evaluation core.
+//!
+//! Three measurements, all with byte-identical-output checks:
+//!   1. wall-clock scaling of the work-stealing pool over sequential
+//!      execution of the same grid (1/2/4/8 threads);
+//!   2. work-stealing vs the retained fixed-wave scheduler on a skewed
+//!      job mix (one 32-client heavy job per wave of light jobs) — the
+//!      structural win of dropping the per-wave barrier;
+//!   3. the bound-guided prefilter's skip ratio and wall-clock saving on
+//!      a grid with provably QoS-infeasible far-latency points.
 //!
 //! Environment knobs (same contract as `netsim_micro`):
 //!   SEI_BENCH_QUICK=1      smaller grid / fewer frames
@@ -10,7 +17,8 @@ use std::path::Path;
 use std::time::Instant;
 
 use sei::coordinator::{
-    run_sweep, ScenarioKind, SweepMode, SweepSpec,
+    run_sweep, run_sweep_with, ScenarioKind, SweepMode, SweepScheduler,
+    SweepSpec,
 };
 use sei::netsim::transfer::Protocol;
 use sei::runtime::load_backend_for;
@@ -96,6 +104,105 @@ fn main() {
         "best speedup {best:.2}x over sequential on {cores} core(s)"
     );
 
+    // --- scheduler face-off on a skewed mix ----------------------------
+    // Eight client counts per scenario, the last 32x heavier: under the
+    // wave scheduler every wave of 8 contains exactly one heavy job, so
+    // seven workers idle at the barrier while it finishes; work stealing
+    // lets them run ahead into the next jobs and overlaps the heavies.
+    const SCHED_THREADS: usize = 8;
+    let mut skew = SweepSpec::new("sweep_skew");
+    skew.mode = SweepMode::Full;
+    skew.scenarios = vec![
+        ScenarioKind::Lc,
+        ScenarioKind::Rc,
+        ScenarioKind::Sc { split: 5 },
+        ScenarioKind::Sc { split: 11 },
+    ];
+    skew.clients = vec![1, 1, 1, 1, 1, 1, 1, 32];
+    skew.frames = if quick { 32 } else { 96 };
+    skew.frame_period_ns = 50_000_000;
+    skew.max_latency_ms = 50.0;
+    skew.min_accuracy = 0.9;
+    let skew_jobs = skew.expand().expect("skew spec").len();
+
+    let t0 = Instant::now();
+    let by_waves =
+        run_sweep_with(&skew, SCHED_THREADS, SweepScheduler::Waves, &factory)
+            .expect("waves");
+    let waves_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let by_stealing = run_sweep_with(
+        &skew,
+        SCHED_THREADS,
+        SweepScheduler::Stealing,
+        &factory,
+    )
+    .expect("stealing");
+    let stealing_s = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        by_waves.to_json().to_string(),
+        by_stealing.to_json().to_string(),
+        "schedulers must be output-equivalent"
+    );
+    let sched_speedup = waves_s / stealing_s;
+    let jobs_per_sec = skew_jobs as f64 / stealing_s;
+    println!(
+        "\nskewed mix ({skew_jobs} jobs, one 32-client heavy per wave of 8, \
+         {SCHED_THREADS} threads):\n\
+         waves    {waves_s:>7.3} s\n\
+         stealing {stealing_s:>7.3} s   speedup {sched_speedup:>5.2}x   \
+         ({jobs_per_sec:.2} jobs/s)"
+    );
+
+    // --- bound-guided prefilter ----------------------------------------
+    // A far-latency axis (200 ms of propagation against a 50 ms
+    // deadline) makes half the grid provably infeasible: every scenario
+    // here crosses the network, so each one's 200 ms twin is skipped and
+    // the ratio is exactly 1/2 (LC would stay local and dilute it).
+    // Frontier preservation is asserted by the integration tests; here
+    // we measure the ratio and the saving.
+    let mut pf = SweepSpec::new("sweep_prefilter");
+    pf.mode = SweepMode::Full;
+    pf.scenarios = vec![
+        ScenarioKind::Rc,
+        ScenarioKind::Sc { split: 5 },
+        ScenarioKind::Sc { split: 9 },
+        ScenarioKind::Sc { split: 11 },
+    ];
+    pf.protocols = vec![Protocol::Tcp, Protocol::Udp];
+    pf.latencies_us = vec![1.0, 200_000.0];
+    pf.frames = if quick { 48 } else { 192 };
+    pf.frame_period_ns = 50_000_000;
+    pf.max_latency_ms = 50.0;
+    pf.min_accuracy = 0.9;
+    let t0 = Instant::now();
+    let off = run_sweep(&pf, SCHED_THREADS, &factory).expect("prefilter off");
+    let off_s = t0.elapsed().as_secs_f64();
+    pf.prefilter = true;
+    let t0 = Instant::now();
+    let on = run_sweep(&pf, SCHED_THREADS, &factory).expect("prefilter on");
+    let on_s = t0.elapsed().as_secs_f64();
+    assert_eq!(off.skipped, 0, "prefilter off must simulate everything");
+    assert_eq!(
+        2 * on.skipped,
+        on.points.len(),
+        "exactly the 200 ms half of the grid must be skipped"
+    );
+    assert_eq!(
+        off.pareto, on.pareto,
+        "the prefilter must not move the Pareto frontier"
+    );
+    let skip_ratio = on.skipped as f64 / on.points.len() as f64;
+    let pf_speedup = off_s / on_s;
+    println!(
+        "\nprefilter ({} points, {} provably infeasible):\n\
+         off {off_s:>7.3} s\n\
+         on  {on_s:>7.3} s   speedup {pf_speedup:>5.2}x   \
+         (skip ratio {skip_ratio:.3})",
+        on.points.len(),
+        on.skipped
+    );
+
     if let Ok(path) = std::env::var("SEI_BENCH_JSON") {
         let entries: Vec<Json> = results
             .iter()
@@ -113,6 +220,29 @@ fn main() {
             ("cores", json::num(cores as f64)),
             ("grid_points", json::num(jobs as f64)),
             ("results", json::arr(entries)),
+            (
+                "scheduler",
+                json::obj(vec![
+                    ("threads", json::num(SCHED_THREADS as f64)),
+                    ("jobs", json::num(skew_jobs as f64)),
+                    ("heavy_clients", json::num(32.0)),
+                    ("waves_wall_s", json::num(waves_s)),
+                    ("stealing_wall_s", json::num(stealing_s)),
+                    ("stealing_speedup", json::num(sched_speedup)),
+                    ("stealing_jobs_per_sec", json::num(jobs_per_sec)),
+                ]),
+            ),
+            (
+                "prefilter",
+                json::obj(vec![
+                    ("points", json::num(on.points.len() as f64)),
+                    ("skipped", json::num(on.skipped as f64)),
+                    ("skip_ratio", json::num(skip_ratio)),
+                    ("off_wall_s", json::num(off_s)),
+                    ("on_wall_s", json::num(on_s)),
+                    ("speedup", json::num(pf_speedup)),
+                ]),
+            ),
         ]);
         std::fs::write(&path, doc.to_string()).expect("write bench json");
         println!("\nwrote {path}");

@@ -44,12 +44,12 @@
 //! no threads, event ties broken by sequence number identically across
 //! queue backends.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 
 use anyhow::{bail, Result};
 
 use crate::model::{
-    chain_costs, split_points, valid_cut_chains, Arch, Cut, DeviceProfile,
+    chain_costs, split_points, Arch, Cut, DeviceProfile,
     Network,
 };
 use crate::netsim::event::{EventQueue, QueueKind, SimTime};
@@ -132,56 +132,11 @@ pub struct AdaptiveConfig {
 // Candidate enumeration cache.
 // ---------------------------------------------------------------------------
 
-/// Memoized [`valid_cut_chains`] per (arch × scale × k): the controller
-/// re-evaluates the candidate set on every Check, and re-enumerating the
-/// k-subset lattice each time would make a decision O(enumeration)
-/// instead of O(candidates). The counters are observable so regression
-/// tests can pin "one enumeration, many lookups".
-pub struct ChainCache {
-    map: HashMap<(Arch, ModelScale, usize), Vec<Vec<usize>>>,
-    enumerations: u64,
-    lookups: u64,
-}
-
-impl Default for ChainCache {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl ChainCache {
-    pub fn new() -> Self {
-        ChainCache { map: HashMap::new(), enumerations: 0, lookups: 0 }
-    }
-
-    /// The candidate cut chains of `net` for `k` cuts, enumerating at
-    /// most once per (arch, scale, k).
-    pub fn chains(
-        &mut self,
-        arch: Arch,
-        scale: ModelScale,
-        k: usize,
-        net: &Network,
-    ) -> &[Vec<usize>] {
-        self.lookups += 1;
-        let key = (arch, scale, k);
-        if !self.map.contains_key(&key) {
-            self.enumerations += 1;
-            self.map.insert(key, valid_cut_chains(net, k));
-        }
-        self.map.get(&key).expect("just inserted")
-    }
-
-    /// How many times the k-subset lattice was actually enumerated.
-    pub fn enumerations(&self) -> u64 {
-        self.enumerations
-    }
-
-    /// How many candidate-set requests were served (cache hits + misses).
-    pub fn lookups(&self) -> u64 {
-        self.lookups
-    }
-}
+/// The memoized [`crate::model::valid_cut_chains`] cache was generalized
+/// out of this module into the model layer ([`crate::model::ChainCache`]) so the
+/// placement and co-design searches share it; the historical
+/// `coordinator::adaptive::ChainCache` path keeps working.
+pub use crate::model::ChainCache;
 
 /// The geometry/scale pair resolved to a concrete network, mirroring the
 /// scenario engine's resolution but without an [`InferenceBackend`]

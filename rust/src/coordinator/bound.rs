@@ -1,0 +1,167 @@
+//! Shared admissible analytic latency lower bound — the single place
+//! both searches reason about "how fast could this candidate possibly
+//! be" before paying for a discrete-event simulation.
+//!
+//! The bound charges exactly the work no schedule can avoid: each
+//! pipeline segment's compute time on its device
+//! ([`DeviceProfile::compute_ns`]) plus, per uplink hop, the payload's
+//! serialization at the link's bottleneck rate and its propagation
+//! latency. Everything else the closed-loop streaming engine models —
+//! queueing behind other frames or clients, protocol headers, ACK
+//! coupling, retransmits, jitter (uniform in `[0, jitter]`, so strictly
+//! additive), batching waits, and the downlink return — can only *add*
+//! latency, which is what makes the bound admissible: no simulated frame
+//! of the candidate ever finishes faster.
+//!
+//! Two consumers ride it:
+//!
+//! - the fleet placement search ([`super::placement`]) orders and prunes
+//!   candidates by [`latency_bound_ns`] over their [`ChainCosts`];
+//! - the sweep engine ([`super::sweep`]) optionally two-phases its grid
+//!   (`"prefilter": true`): [`job_bound_ns`] bounds a whole grid point,
+//!   and a point whose bound already exceeds the QoS deadline is
+//!   *provably* infeasible — every frame would miss, the deadline
+//!   hit-rate would be 0, below any valid `min_hit_rate` — so the full
+//!   simulation is skipped and the point reported as such.
+//!
+//! Points the bound cannot vouch for return `None` instead of a number:
+//! heterogeneous tenant mixes (per-tenant costs live inside the
+//! multi-tenant engine) and traced channels (a schedule may *improve*
+//! mid-run — e.g. a `congested>gigabit` recovery — so the initial
+//! channel is not a lower bound for the whole stream).
+
+use anyhow::Result;
+
+use super::scenario::{derive_hop_net, kind_costs};
+use super::sweep::{channel_preset, SweepJob, SweepSpec};
+use crate::model::{ChainCosts, DeviceProfile};
+use crate::netsim::event::SimTime;
+use crate::netsim::transfer::NetworkConfig;
+use crate::runtime::InferenceBackend;
+
+/// Admissible latency lower bound of one frame through a candidate
+/// placement: per-segment compute plus per-hop payload serialization at
+/// capacity and propagation latency. The simulator can only add to this
+/// (queueing, protocol headers, acks, retransmits, downlink).
+pub fn latency_bound_ns(
+    tiers: &[&DeviceProfile],
+    costs: &ChainCosts,
+    hop_nets: &[&NetworkConfig],
+) -> SimTime {
+    let mut t: SimTime = 0;
+    for (d, &ma) in tiers.iter().zip(&costs.seg_mult_adds) {
+        t = t.saturating_add(d.compute_ns(ma));
+    }
+    for (net, &bytes) in hop_nets.iter().zip(&costs.hop_bytes) {
+        t = t.saturating_add(hop_bound_ns(net, bytes));
+    }
+    t
+}
+
+/// The unavoidable cost of one payload crossing one hop: serialization
+/// at the link's bottleneck rate plus propagation latency (truncation
+/// rounds down — still a lower bound).
+fn hop_bound_ns(net: &NetworkConfig, bytes: u64) -> SimTime {
+    let rate = net.capacity_bps.min(net.interface_bps);
+    let wire = (bytes as f64 * 8.0 / rate * 1e9) as SimTime;
+    net.latency_ns.saturating_add(wire)
+}
+
+/// Admissible latency lower bound of one frame of a sweep grid point, or
+/// `None` when no sound bound exists for it (tenant-mix and traced
+/// points — see the module docs). Deterministic in `(spec, job)` and the
+/// backend manifest alone; channel seeds never enter the bound.
+pub fn job_bound_ns(
+    engine: &dyn InferenceBackend,
+    spec: &SweepSpec,
+    job: &SweepJob,
+) -> Result<Option<SimTime>> {
+    if job.mix.is_some() || job.trace.is_some() {
+        return Ok(None);
+    }
+    let tiers: Vec<DeviceProfile> = job
+        .tiers
+        .iter()
+        .map(|d| DeviceProfile::parse(d))
+        .collect::<Result<_>>()?;
+    let costs = kind_costs(engine, &job.kind, job.scale, tiers.len())?;
+    // The channel chain exactly as `run_job` derives it (the seed only
+    // shifts loss/jitter draws, which the bound ignores).
+    let nets: Vec<NetworkConfig> = if job.hop_nets.is_empty() {
+        let mut net = channel_preset(
+            &job.channel,
+            job.protocol,
+            job.loss,
+            spec.seed,
+        )?;
+        if let Some(us) = job.latency_us {
+            net.latency_ns = (us * 1000.0) as SimTime;
+        }
+        vec![net]
+    } else {
+        job.hop_nets
+            .iter()
+            .map(|s| NetworkConfig::parse(s))
+            .collect::<Result<_>>()?
+    };
+    let hop_nets: Vec<NetworkConfig> = (0..costs.hops())
+        .map(|h| derive_hop_net(&nets, h))
+        .collect();
+    // Devices executing each pipeline segment, mirroring the streaming
+    // engine's mapping: RC/SC on a longer chain bypass the middle tiers
+    // (first and last device only); MC segments are one-to-one.
+    let n_seg = costs.seg_mult_adds.len();
+    let mut t: SimTime = 0;
+    for (s, &ma) in costs.seg_mult_adds.iter().enumerate() {
+        let d = if s == 0 {
+            &tiers[0]
+        } else if s + 1 == n_seg {
+            tiers.last().expect("tier count validated by kind_costs")
+        } else {
+            &tiers[s]
+        };
+        t = t.saturating_add(d.compute_ns(ma));
+    }
+    for (net, &bytes) in hop_nets.iter().zip(&costs.up_bytes) {
+        t = t.saturating_add(hop_bound_ns(net, bytes));
+    }
+    Ok(Some(t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::load_backend_for;
+    use std::path::Path;
+
+    #[test]
+    fn job_bound_declines_mix_and_traced_points() {
+        let engine =
+            load_backend_for(Path::new("artifacts"), Default::default())
+                .unwrap();
+        let spec = SweepSpec::new("bound-unit");
+        let jobs = spec.expand().unwrap();
+        let mut traced = jobs[0].clone();
+        traced.trace = Some("hop0=gigabit>congested@2s".to_string());
+        assert!(job_bound_ns(&*engine, &spec, &traced).unwrap().is_none());
+    }
+
+    #[test]
+    fn job_bound_grows_with_propagation_latency() {
+        let engine =
+            load_backend_for(Path::new("artifacts"), Default::default())
+                .unwrap();
+        let spec = SweepSpec::new("bound-unit");
+        let jobs = spec.expand().unwrap();
+        let base = job_bound_ns(&*engine, &spec, &jobs[0])
+            .unwrap()
+            .expect("homogeneous untraced point has a bound");
+        let mut slow = jobs[0].clone();
+        slow.latency_us = Some(200_000.0);
+        let far = job_bound_ns(&*engine, &spec, &slow)
+            .unwrap()
+            .expect("homogeneous untraced point has a bound");
+        // 200 ms of one-way propagation must show up in full.
+        assert!(far >= base + 200_000_000, "{base} -> {far}");
+    }
+}

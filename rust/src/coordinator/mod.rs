@@ -7,6 +7,7 @@
 
 pub mod adaptive;
 pub mod batcher;
+pub mod bound;
 pub mod corruption;
 pub mod drr;
 pub mod hil;
@@ -14,6 +15,7 @@ pub mod placement;
 pub mod qos;
 pub mod saliency;
 pub mod scenario;
+pub mod search;
 pub mod serve;
 pub mod streaming;
 pub mod suggest;
@@ -24,6 +26,7 @@ pub use adaptive::{
     run_adaptive_comparison, AdaptiveConfig, AdaptiveReport, ChainCache,
     ControllerConfig, PolicyOutcome, SwitchPolicy,
 };
+pub use bound::{job_bound_ns, latency_bound_ns};
 pub use placement::{
     place, FleetDevice, FleetSpec, FleetStream, PlacementOutcome,
     PlacementPlan, StreamVerdict,
@@ -41,8 +44,12 @@ pub use streaming::{
     ClientSpec, Fairness, HeteroStreamReport, MultiStreamConfig,
     StreamConfig, StreamFrameRecord, StreamReport,
 };
-pub use suggest::{best, rank_configurations, suggest, Suggestion};
+pub use search::{run_search, SearchReport, SearchSpec};
+pub use suggest::{
+    best, rank_configurations, rank_configurations_cached, suggest,
+    Suggestion,
+};
 pub use sweep::{
-    pooled_scenario, run_sweep, ClientMix, SweepJob, SweepMode, SweepPoint,
-    SweepReport, SweepSpec,
+    pooled_scenario, run_sweep, run_sweep_with, ClientMix, EngineCache,
+    SweepJob, SweepMode, SweepPoint, SweepReport, SweepScheduler, SweepSpec,
 };

@@ -24,15 +24,16 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
+use super::bound::latency_bound_ns;
 use super::qos::QosRequirements;
 use super::scenario::{
     scenario_network, ModelScale, ScenarioConfig, ScenarioKind,
 };
-use super::streaming::{chain_tail_name, mid_exec_name};
+use super::streaming::chain_servable;
 use super::sweep::{self, BackendFactory};
 use crate::data::Dataset;
 use crate::model::{
-    chain_costs, split_points, valid_cut_chains, Arch, ChainCosts, Cut,
+    chain_costs, split_points, Arch, ChainCache, ChainCosts, Cut,
     DeviceProfile,
 };
 use crate::netsim::event::SimTime;
@@ -507,27 +508,6 @@ fn tier_chains(devices: &[FleetDevice], max_tiers: usize) -> Vec<Vec<usize>> {
     out
 }
 
-/// Admissible latency lower bound of one frame through the candidate:
-/// per-segment compute plus per-hop payload serialization at capacity
-/// and propagation latency. The simulator can only add to this
-/// (queueing, protocol headers, acks, retransmits, downlink).
-fn latency_bound_ns(
-    tiers: &[&DeviceProfile],
-    costs: &ChainCosts,
-    hop_nets: &[&NetworkConfig],
-) -> SimTime {
-    let mut t: SimTime = 0;
-    for (d, &ma) in tiers.iter().zip(&costs.seg_mult_adds) {
-        t = t.saturating_add(d.compute_ns(ma));
-    }
-    for (net, &bytes) in hop_nets.iter().zip(&costs.hop_bytes) {
-        let rate = net.capacity_bps.min(net.interface_bps);
-        let wire = (bytes as f64 * 8.0 / rate * 1e9) as SimTime;
-        t = t.saturating_add(net.latency_ns).saturating_add(wire);
-    }
-    t
-}
-
 /// Can a plan with per-frame latency >= `bound_ns` still satisfy the
 /// stream? (Latency only — accuracy is sampled, so no analytic bound on
 /// it is admissible.)
@@ -561,28 +541,21 @@ fn prunable(fleet: &FleetSpec, cand: &Candidate, inc: &Eval) -> bool {
             && (cand.bound_ns as f64) > inc.mean_latency_ns)
 }
 
-/// A cut chain is servable when the backend has (or can synthesize) the
-/// head, every mid segment and the chain tail at batch 1 — the same
-/// capability probe the suggest engine applies to MC candidates.
-fn chain_servable(engine: &dyn InferenceBackend, cuts: &[usize]) -> bool {
-    engine.executable(&format!("head_L{}_b1", cuts[0])).is_ok()
-        && cuts.windows(2).all(|w| {
-            engine.executable(&mid_exec_name(w[0], w[1], 1)).is_ok()
-        })
-        && engine.executable(&chain_tail_name(cuts, 1)).is_ok()
-}
-
 /// Enumerate the full candidate space (tier chains × servable cut chains
 /// × per-hop link assignments) with analytic bounds, in one fixed,
-/// thread-independent order.
+/// thread-independent order. Chain *enumeration* comes from the shared
+/// [`ChainCache`] (reusable across placement runs and the co-design
+/// search); the fleet-specific servability probe and cost layer are
+/// memoized locally per hop count.
 fn enumerate(
     fleet: &FleetSpec,
     engine: &dyn InferenceBackend,
     points: &[Cut],
+    cache: &mut ChainCache,
 ) -> Result<Vec<Candidate>> {
     let network = scenario_network(engine, ModelScale::Slim);
     let available = engine.manifest().available_splits();
-    // Cut chains and their costs per hop count, probed once.
+    // Servable cut chains and their costs per hop count, probed once.
     let mut chains_for: HashMap<usize, Vec<(Vec<usize>, ChainCosts)>> =
         HashMap::new();
     let mut cands = Vec::new();
@@ -595,15 +568,17 @@ fn enumerate(
                 }
                 std::collections::hash_map::Entry::Vacant(e) => {
                     let mut v = Vec::new();
-                    for cuts in valid_cut_chains(&network, k) {
+                    for cuts in
+                        cache.chains(fleet.arch, ModelScale::Slim, k, &network)
+                    {
                         if !cuts.iter().all(|c| available.contains(c)) {
                             continue;
                         }
-                        if !chain_servable(engine, &cuts) {
+                        if !chain_servable(engine, cuts) {
                             continue;
                         }
-                        let costs = chain_costs(points, &cuts)?;
-                        v.push((cuts, costs));
+                        let costs = chain_costs(points, cuts)?;
+                        v.push((cuts.clone(), costs));
                     }
                     e.insert(v)
                 }
@@ -710,34 +685,65 @@ fn evaluate(
     })
 }
 
-/// Evaluate one wave of candidates — inline on `engine` for a single
-/// slot, else on a scoped worker pool mirroring the sweep engine's
-/// determinism pattern (jobs pulled from a shared counter, results
-/// stored by wave index; backends are per-worker since they are not
-/// `Send`).
-fn evaluate_wave(
+/// Fold one evaluation into the incumbent under [`better`].
+fn absorb(incumbent: &mut Option<Eval>, ev: Eval) {
+    if incumbent.as_ref().map_or(true, |inc| better(&ev, inc)) {
+        *incumbent = Some(ev);
+    }
+}
+
+/// Run the branch-and-bound over `order` (candidate indices, ascending
+/// analytic bound) on a work-stealing pool: every worker claims the next
+/// candidate off a shared counter, prunes it at claim time against the
+/// shared incumbent, else simulates it and merges the result back.
+/// There is no wave barrier — while one worker simulates a heavy
+/// candidate, the others keep claiming, and every merged evaluation
+/// tightens the incumbent *immediately* for all subsequent claims.
+///
+/// Each claimed candidate is counted exactly once (pruned or evaluated),
+/// so `evaluated + pruned == order.len()` on success. Which candidates
+/// get pruned depends on evaluation timing, but the *winner* does not:
+/// the bound is admissible, so a pruned candidate provably loses to the
+/// incumbent that pruned it — and, [`better`] being a strict total
+/// order, to the final winner too.
+fn branch_and_bound(
     engine: &dyn InferenceBackend,
     dataset: &Dataset,
     fleet: &FleetSpec,
     cands: &[Candidate],
-    wave: &[usize],
+    order: &[usize],
     threads: usize,
     factory: &BackendFactory<'_>,
-) -> Result<Vec<Eval>> {
-    if threads <= 1 || wave.len() <= 1 {
-        return wave
-            .iter()
-            .map(|&ci| evaluate(engine, dataset, fleet, cands, ci))
-            .collect();
+) -> Result<(Option<Eval>, usize, usize)> {
+    let threads = threads.clamp(1, order.len().max(1));
+    if threads <= 1 {
+        let mut incumbent: Option<Eval> = None;
+        let (mut evaluated, mut pruned) = (0usize, 0usize);
+        for &ci in order {
+            if !fleet.exhaustive {
+                if let Some(inc) = &incumbent {
+                    if prunable(fleet, &cands[ci], inc) {
+                        pruned += 1;
+                        continue;
+                    }
+                }
+            }
+            absorb(
+                &mut incumbent,
+                evaluate(engine, dataset, fleet, cands, ci)?,
+            );
+            evaluated += 1;
+        }
+        return Ok((incumbent, evaluated, pruned));
     }
-    let workers = threads.min(wave.len());
-    let results: Mutex<Vec<Option<Eval>>> =
-        Mutex::new(vec![None; wave.len()]);
+    let incumbent: Mutex<Option<Eval>> = Mutex::new(None);
     let next = AtomicUsize::new(0);
+    let evaluated = AtomicUsize::new(0);
+    let pruned = AtomicUsize::new(0);
     let failed = AtomicBool::new(false);
     let error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
     std::thread::scope(|s| {
-        for _ in 0..workers {
+        for _ in 0..threads {
             s.spawn(|| {
                 let mut engine: Option<Box<dyn InferenceBackend>> = None;
                 loop {
@@ -745,34 +751,38 @@ fn evaluate_wave(
                         return;
                     }
                     let w = next.fetch_add(1, Ordering::Relaxed);
-                    if w >= wave.len() {
+                    if w >= order.len() {
                         return;
+                    }
+                    let ci = order[w];
+                    if !fleet.exhaustive {
+                        let inc = incumbent.lock().unwrap();
+                        if inc
+                            .as_ref()
+                            .is_some_and(|i| prunable(fleet, &cands[ci], i))
+                        {
+                            pruned.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
                     }
                     if engine.is_none() {
                         match factory(fleet.arch) {
                             Ok(e) => engine = Some(e),
                             Err(e) => {
-                                failed.store(true, Ordering::Relaxed);
-                                let mut slot = error.lock().unwrap();
-                                if slot.is_none() {
-                                    *slot = Some(e);
-                                }
-                                return;
+                                return sweep::record_failure(
+                                    &failed, &error, e,
+                                )
                             }
                         }
                     }
                     let eng = engine.as_deref().unwrap();
-                    match evaluate(eng, dataset, fleet, cands, wave[w]) {
+                    match evaluate(eng, dataset, fleet, cands, ci) {
                         Ok(ev) => {
-                            results.lock().unwrap()[w] = Some(ev);
+                            evaluated.fetch_add(1, Ordering::Relaxed);
+                            absorb(&mut incumbent.lock().unwrap(), ev);
                         }
                         Err(e) => {
-                            failed.store(true, Ordering::Relaxed);
-                            let mut slot = error.lock().unwrap();
-                            if slot.is_none() {
-                                *slot = Some(e);
-                            }
-                            return;
+                            return sweep::record_failure(&failed, &error, e)
                         }
                     }
                 }
@@ -782,39 +792,46 @@ fn evaluate_wave(
     if let Some(e) = error.into_inner().unwrap() {
         return Err(e);
     }
-    results
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .enumerate()
-        .map(|(w, ev)| {
-            ev.ok_or_else(|| {
-                anyhow::anyhow!("placement wave slot {w} missing")
-            })
-        })
-        .collect()
+    Ok((
+        incumbent.into_inner().unwrap(),
+        evaluated.into_inner(),
+        pruned.into_inner(),
+    ))
 }
 
 /// Search the fleet for the best placement plan.
 ///
-/// Candidates are visited in ascending analytic-bound order in waves of
-/// `threads`; between waves the incumbent absorbs every finished
-/// evaluation, and subsequent candidates it provably dominates are
-/// pruned. Because the bound is admissible and ties are
-/// broken by candidate index, the returned plan is identical for every
-/// `threads` value — and identical to exhaustive enumeration
+/// Candidates are visited in ascending analytic-bound order by a
+/// work-stealing pool of `threads` workers; every finished evaluation
+/// tightens the shared incumbent immediately, and later claims it
+/// provably dominates are pruned. Because the bound is admissible and
+/// ties are broken by candidate index, the returned plan is identical
+/// for every `threads` value — and identical to exhaustive enumeration
 /// ([`FleetSpec::exhaustive`]).
 pub fn place(
     fleet: &FleetSpec,
     threads: usize,
     factory: &BackendFactory<'_>,
 ) -> Result<PlacementOutcome> {
+    let mut cache = ChainCache::new();
+    place_cached(fleet, threads, factory, &mut cache)
+}
+
+/// [`place`] against a caller-owned [`ChainCache`], so repeated
+/// placements (and the co-design search) enumerate each
+/// arch × scale × hop-count chain set once.
+pub fn place_cached(
+    fleet: &FleetSpec,
+    threads: usize,
+    factory: &BackendFactory<'_>,
+    cache: &mut ChainCache,
+) -> Result<PlacementOutcome> {
     fleet.validate()?;
     let engine = factory(fleet.arch)?;
     let dataset = engine.dataset(&fleet.dataset)?;
     let network = scenario_network(&*engine, ModelScale::Slim);
     let points = split_points(&network);
-    let cands = enumerate(fleet, &*engine, &points)?;
+    let cands = enumerate(fleet, &*engine, &points, cache)?;
     if cands.is_empty() {
         bail!(
             "fleet '{}': no placement candidates (no servable cut chain \
@@ -826,39 +843,9 @@ pub fn place(
     let mut order: Vec<usize> = (0..cands.len()).collect();
     order.sort_by_key(|&i| (cands[i].bound_ns, i));
 
-    let threads = threads.max(1);
-    let mut incumbent: Option<Eval> = None;
-    let mut evaluated = 0usize;
-    let mut pruned = 0usize;
-    let mut pos = 0usize;
-    while pos < order.len() {
-        let mut wave = Vec::with_capacity(threads);
-        while pos < order.len() && wave.len() < threads {
-            let ci = order[pos];
-            pos += 1;
-            if !fleet.exhaustive {
-                if let Some(inc) = &incumbent {
-                    if prunable(fleet, &cands[ci], inc) {
-                        pruned += 1;
-                        continue;
-                    }
-                }
-            }
-            wave.push(ci);
-        }
-        if wave.is_empty() {
-            continue;
-        }
-        let evals = evaluate_wave(
-            &*engine, &dataset, fleet, &cands, &wave, threads, factory,
-        )?;
-        evaluated += evals.len();
-        for ev in evals {
-            if incumbent.as_ref().map_or(true, |inc| better(&ev, inc)) {
-                incumbent = Some(ev);
-            }
-        }
-    }
+    let (incumbent, evaluated, pruned) = branch_and_bound(
+        &*engine, &dataset, fleet, &cands, &order, threads, factory,
+    )?;
     let winner = incumbent.expect("non-empty candidate set was evaluated");
     let c = &cands[winner.cand];
     let names = &engine.manifest().model.layer_names;

@@ -143,43 +143,11 @@ impl std::fmt::Display for ScenarioKind {
     }
 }
 
-/// Which model scale's volumetrics/compute drive the simulation. The
-/// *architecture* is a separate axis, taken from the backend manifest
-/// ([`crate::runtime::Manifest::arch`]); the scale picks between that
-/// arch's trained slim geometry and its paper-scale (224x224, 1000-class)
-/// network.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum ModelScale {
-    /// The actual trained slim model (end-to-end serving).
-    Slim,
-    /// The arch's paper-scale network at 224x224 (Fig. 3/4 transfer sizes
-    /// and compute); accuracy is still measured on the slim artifacts with
-    /// the same loss fraction (corruption is scaled proportionally).
-    Full,
-}
-
-impl ModelScale {
-    /// Parse `"slim" | "full"` (case-insensitive; the historical
-    /// `"vgg16"` / `"vgg16-full"` spellings are accepted as aliases for
-    /// `full`).
-    pub fn parse(s: &str) -> Result<ModelScale> {
-        match s.to_ascii_lowercase().as_str() {
-            "slim" => Ok(ModelScale::Slim),
-            "full" | "vgg16" | "vgg16-full" => Ok(ModelScale::Full),
-            other => bail!(
-                "unknown model scale '{other}' (slim | full; 'vgg16' and \
-                 'vgg16-full' are accepted as aliases for full)"
-            ),
-        }
-    }
-
-    pub fn as_str(&self) -> &'static str {
-        match self {
-            ModelScale::Slim => "slim",
-            ModelScale::Full => "full",
-        }
-    }
-}
+/// Model-scale axis, re-exported from the model layer (it moved there so
+/// crate-wide caches like [`crate::model::ChainCache`] can key on it
+/// without depending on the coordinator); the historical
+/// `coordinator::scenario::ModelScale` path keeps working.
+pub use crate::model::ModelScale;
 
 /// Seed stride between the per-hop channels of a *replicated* tier chain:
 /// with a single `hop_nets` template, hop `h` simulates on

@@ -1,0 +1,493 @@
+//! Successive-halving arch × split co-design search (`sei search`) —
+//! the payoff of the bound-guided evaluation core: instead of simulating
+//! every grid point at full fidelity, the search spends a declared
+//! budget over *rungs* of increasing simulated-frame counts, halving the
+//! candidate set between rungs by the same (satisfied, latency,
+//! accuracy) order the placement search optimizes.
+//!
+//! A [`SearchSpec`] is a [`SweepSpec`] (all its axes: scenarios,
+//! architectures, protocols, channels, tier chains, client mixes, …)
+//! plus three search keys:
+//!
+//! ```json
+//! { "...all SweepSpec keys...",
+//!   "budget": 4096, "eta": 2, "rung_frames": [8, 24, 96] }
+//! ```
+//!
+//! - `rung_frames`: simulated frames per client at each rung, strictly
+//!   increasing; the last entry is the search's full fidelity.
+//! - `eta`: halving factor — `ceil(n / eta)` candidates survive a rung.
+//! - `budget`: total simulation allowance in frame-units (`frames ×
+//!   seeds_per_point × clients` per candidate per rung), consumed
+//!   greedily rung-by-rung in priority order with deterministic
+//!   truncation. `0` means unlimited — *every* candidate runs *every*
+//!   rung and no halving is applied, which makes the unlimited search an
+//!   exhaustive-sweep oracle: its winner equals the best point of a
+//!   plain [`run_sweep`](super::sweep::run_sweep) at final-rung
+//!   fidelity (a property the integration tests pin).
+//!
+//! Determinism: rung 0 is seeded by the ascending analytic bound
+//! ([`job_bound_ns`], unbounded points last, ties by grid index); later
+//! rungs inherit the previous rung's ranking; every evaluation runs on
+//! the deterministic work-stealing pool. The whole [`SearchReport`] —
+//! winner, rungs, costs — is byte-identical at any `--threads` value.
+
+use std::cmp::Ordering as CmpOrdering;
+
+use anyhow::{bail, Context, Result};
+
+use super::bound::job_bound_ns;
+use super::sweep::{
+    job_archs, point_json, run_jobs, BackendFactory, EngineCache, SweepJob,
+    SweepPoint, SweepScheduler, SweepSpec,
+};
+use crate::netsim::event::SimTime;
+use crate::util::json::{self, Json};
+
+/// The declarative input of `sei search`: a full sweep grid plus the
+/// successive-halving schedule (see the module docs for the JSON form).
+#[derive(Clone, Debug)]
+pub struct SearchSpec {
+    /// The design-space grid — every [`SweepSpec`] axis and QoS key.
+    pub sweep: SweepSpec,
+    /// Total frame-unit allowance; `0` = unlimited (exhaustive oracle).
+    pub budget: usize,
+    /// Halving factor (>= 2): `ceil(n / eta)` survive each rung.
+    pub eta: usize,
+    /// Frames per client at each rung, strictly increasing.
+    pub rung_frames: Vec<usize>,
+}
+
+impl SearchSpec {
+    /// A search over `sweep` with the default schedule: one rung at the
+    /// sweep's own frame count, `eta = 2`, unlimited budget.
+    pub fn new(sweep: SweepSpec) -> SearchSpec {
+        let rung_frames = vec![sweep.frames];
+        SearchSpec { sweep, budget: 0, eta: 2, rung_frames }
+    }
+
+    /// Parse the JSON form: the three search keys are split off and the
+    /// remainder must be a valid [`SweepSpec`] (unknown keys rejected
+    /// there, so typos still fail loudly).
+    pub fn from_json(text: &str) -> Result<SearchSpec> {
+        let j = Json::parse(text).context("search spec")?;
+        let Json::Obj(map) = &j else {
+            bail!("search spec must be a JSON object");
+        };
+        let mut grid = map.clone();
+        let budget = grid.remove("budget");
+        let eta = grid.remove("eta");
+        let rung_frames = grid.remove("rung_frames");
+        let sweep = SweepSpec::from_json(&Json::Obj(grid).to_string())?;
+        let mut spec = SearchSpec::new(sweep);
+        if let Some(v) = budget {
+            spec.budget = v.usize()?;
+        }
+        if let Some(v) = eta {
+            spec.eta = v.usize()?;
+        }
+        if let Some(v) = rung_frames {
+            spec.rung_frames = v
+                .arr()?
+                .iter()
+                .map(|f| f.usize())
+                .collect::<Result<_>>()?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.eta < 2 {
+            bail!(
+                "search spec '{}': eta must be >= 2, got {}",
+                self.sweep.name,
+                self.eta
+            );
+        }
+        if self.rung_frames.is_empty() {
+            bail!(
+                "search spec '{}': rung_frames must name at least one rung",
+                self.sweep.name
+            );
+        }
+        if self.rung_frames[0] == 0 {
+            bail!(
+                "search spec '{}': rung_frames must be >= 1",
+                self.sweep.name
+            );
+        }
+        if self.rung_frames.windows(2).any(|w| w[1] <= w[0]) {
+            bail!(
+                "search spec '{}': rung_frames must be strictly \
+                 increasing, got {:?}",
+                self.sweep.name,
+                self.rung_frames
+            );
+        }
+        Ok(())
+    }
+
+    /// The spec back as JSON (the sweep keys plus the three search keys;
+    /// key order is the object's sorted order, so this is deterministic).
+    pub fn to_json(&self) -> Json {
+        let Json::Obj(mut map) = self.sweep.to_json() else {
+            unreachable!("SweepSpec::to_json returns an object");
+        };
+        map.insert("budget".into(), json::num(self.budget as f64));
+        map.insert("eta".into(), json::num(self.eta as f64));
+        map.insert(
+            "rung_frames".into(),
+            json::arr(
+                self.rung_frames
+                    .iter()
+                    .map(|&f| json::num(f as f64))
+                    .collect(),
+            ),
+        );
+        Json::Obj(map)
+    }
+}
+
+/// What one rung of the search did.
+#[derive(Clone, Debug)]
+pub struct RungOutcome {
+    /// Frames per client simulated at this rung.
+    pub frames: usize,
+    /// Candidates that entered (fit the budget) at this rung.
+    pub entrants: usize,
+    /// Entrants the bound-guided prefilter skipped (no simulation).
+    pub skipped: usize,
+    /// Frame-units this rung consumed.
+    pub cost: usize,
+    /// Grid indices surviving into the next rung, best first.
+    pub survivors: Vec<usize>,
+}
+
+/// The result of [`run_search`]: the per-rung trace and the winning
+/// grid point at the highest fidelity it reached.
+#[derive(Clone, Debug)]
+pub struct SearchReport {
+    pub spec: SearchSpec,
+    pub rungs: Vec<RungOutcome>,
+    /// The winner's evaluation at the last rung it ran.
+    pub winner: SweepPoint,
+    /// Total frame-units consumed across all rungs.
+    pub total_cost: usize,
+    /// Candidates the budget never admitted to rung 0.
+    pub never_evaluated: usize,
+}
+
+impl SearchReport {
+    /// Machine-readable report (deterministic key order and formatting;
+    /// byte-identical at any thread count).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("spec", self.spec.to_json()),
+            (
+                "rungs",
+                json::arr(
+                    self.rungs
+                        .iter()
+                        .map(|r| {
+                            json::obj(vec![
+                                ("frames", json::num(r.frames as f64)),
+                                ("entrants", json::num(r.entrants as f64)),
+                                ("skipped", json::num(r.skipped as f64)),
+                                ("cost", json::num(r.cost as f64)),
+                                (
+                                    "survivors",
+                                    json::arr(
+                                        r.survivors
+                                            .iter()
+                                            .map(|&i| json::num(i as f64))
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("winner", point_json(&self.winner)),
+            ("total_cost", json::num(self.total_cost as f64)),
+            (
+                "never_evaluated",
+                json::num(self.never_evaluated as f64),
+            ),
+        ])
+    }
+
+    /// Human-readable rung trace and winner line.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "Search '{}' — {} rung(s), eta {}, budget {}\n\n",
+            self.spec.sweep.name,
+            self.spec.rung_frames.len(),
+            self.spec.eta,
+            if self.spec.budget == 0 {
+                "unlimited".to_string()
+            } else {
+                format!("{} frame-units", self.spec.budget)
+            },
+        );
+        for (r, rung) in self.rungs.iter().enumerate() {
+            out.push_str(&format!(
+                "rung {r}: {} frames x {} entrant(s) ({} prefilter-skipped) \
+                 -> {} survivor(s), cost {}\n",
+                rung.frames,
+                rung.entrants,
+                rung.skipped,
+                rung.survivors.len(),
+                rung.cost,
+            ));
+        }
+        if self.never_evaluated > 0 {
+            out.push_str(&format!(
+                "budget truncation: {} candidate(s) never admitted\n",
+                self.never_evaluated,
+            ));
+        }
+        let w = &self.winner;
+        out.push_str(&format!(
+            "\nwinner: #{} {} {} {} loss {:.1}% {} {}t — mean {:.2} ms, \
+             accuracy {}, QoS {} (total cost {})\n",
+            w.index,
+            w.kind,
+            w.arch.as_str(),
+            w.protocol,
+            w.loss * 100.0,
+            w.channel,
+            w.tiers.len(),
+            w.mean_latency_ns / 1e6,
+            w.accuracy
+                .map(|a| format!("{:.1}%", a * 100.0))
+                .unwrap_or_else(|| "—".to_string()),
+            match w.satisfies {
+                Some(true) => "ok",
+                Some(false) => "violated",
+                None => "—",
+            },
+            self.total_cost,
+        ));
+        out
+    }
+}
+
+/// QoS-first rank of an evaluated point: satisfied beats unknown beats
+/// violated — the same order the placement search optimizes.
+fn sat_rank(p: &SweepPoint) -> u8 {
+    match p.satisfies {
+        Some(true) => 2,
+        None => 1,
+        Some(false) => 0,
+    }
+}
+
+/// The search's strict total order over evaluated points: satisfaction
+/// rank, then lower mean latency, then higher accuracy (unmeasured
+/// worst), then lower grid index — the deterministic tie-break that
+/// makes every rung's ranking (hence the winner) independent of
+/// evaluation order and thread count.
+fn rank(a: &SweepPoint, b: &SweepPoint) -> CmpOrdering {
+    sat_rank(b)
+        .cmp(&sat_rank(a))
+        .then(
+            a.mean_latency_ns
+                .partial_cmp(&b.mean_latency_ns)
+                .unwrap_or(CmpOrdering::Equal),
+        )
+        .then(
+            b.accuracy
+                .unwrap_or(f64::NEG_INFINITY)
+                .partial_cmp(&a.accuracy.unwrap_or(f64::NEG_INFINITY))
+                .unwrap_or(CmpOrdering::Equal),
+        )
+        .then(a.index.cmp(&b.index))
+}
+
+/// Frame-units one candidate costs at a `frames`-fidelity rung.
+fn rung_cost(spec: &SweepSpec, job: &SweepJob, frames: usize) -> usize {
+    frames * spec.seeds_per_point * job.clients.max(1)
+}
+
+/// Run the successive-halving co-design search (see the module docs).
+/// Deterministic in `(spec, backend artifacts)` alone — `threads` only
+/// changes wall-clock time.
+pub fn run_search(
+    spec: &SearchSpec,
+    threads: usize,
+    factory: &BackendFactory<'_>,
+) -> Result<SearchReport> {
+    spec.validate()?;
+    let jobs = spec.sweep.expand()?;
+
+    // Rung-0 priority: ascending admissible bound — the candidates that
+    // could be fastest get first claim on the budget. Unbounded points
+    // (mixes, traces) sort last; ties and unbounded points order by grid
+    // index. The bound is analytic, so this costs no simulation budget.
+    let mut engines = EngineCache::new();
+    let mut bounds: Vec<SimTime> = Vec::with_capacity(jobs.len());
+    for job in &jobs {
+        engines.ensure(&job_archs(&spec.sweep, job), factory)?;
+        let b = job_bound_ns(engines.get(job.arch)?, &spec.sweep, job)?;
+        bounds.push(b.unwrap_or(SimTime::MAX));
+    }
+    let mut alive: Vec<usize> = (0..jobs.len()).collect();
+    alive.sort_by_key(|&i| (bounds[i], i));
+
+    let mut rungs: Vec<RungOutcome> = Vec::new();
+    let mut total_cost = 0usize;
+    let mut best: Option<SweepPoint> = None;
+    for (r, &rf) in spec.rung_frames.iter().enumerate() {
+        // Greedy budget admission in priority order: a candidate that
+        // does not fit stops the rung (deterministic truncation — no
+        // peeking past it, or the entrant set would depend on job sizes
+        // in fragile ways).
+        let mut entrants: Vec<usize> = Vec::new();
+        let mut cost = 0usize;
+        for &ci in &alive {
+            let c = rung_cost(&spec.sweep, &jobs[ci], rf);
+            if spec.budget > 0 && total_cost + cost + c > spec.budget {
+                break;
+            }
+            entrants.push(ci);
+            cost += c;
+        }
+        if entrants.is_empty() {
+            if r == 0 {
+                bail!(
+                    "search spec '{}': budget {} cannot afford a single \
+                     rung-0 evaluation (cheapest candidate costs {})",
+                    spec.sweep.name,
+                    spec.budget,
+                    alive
+                        .iter()
+                        .map(|&i| rung_cost(&spec.sweep, &jobs[i], rf))
+                        .min()
+                        .unwrap_or(0),
+                );
+            }
+            break;
+        }
+        let mut rspec = spec.sweep.clone();
+        rspec.frames = rf;
+        let entrant_jobs: Vec<SweepJob> =
+            entrants.iter().map(|&ci| jobs[ci].clone()).collect();
+        let mut points = run_jobs(
+            &rspec,
+            &entrant_jobs,
+            threads,
+            SweepScheduler::Stealing,
+            factory,
+        )?;
+        total_cost += cost;
+        points.sort_by(rank);
+        let skipped = points.iter().filter(|p| p.skipped).count();
+        // Unlimited budget disables halving: every rung re-measures the
+        // full candidate set at higher fidelity, so the final rung *is*
+        // an exhaustive sweep (the oracle property).
+        let keep = if spec.budget == 0 {
+            points.len()
+        } else {
+            points.len().div_ceil(spec.eta).max(1)
+        };
+        let survivors: Vec<usize> =
+            points.iter().take(keep).map(|p| p.index).collect();
+        best = Some(points[0].clone());
+        rungs.push(RungOutcome {
+            frames: rf,
+            entrants: entrants.len(),
+            skipped,
+            cost,
+            survivors: survivors.clone(),
+        });
+        alive = survivors;
+    }
+    let winner = best.expect("rung 0 evaluated at least one candidate");
+    // Rung 0 is the only admission gate (later rungs only shrink the
+    // set), so whatever its budget truncation left out was never seen.
+    let never_evaluated = jobs.len() - rungs[0].entrants;
+    Ok(SearchReport {
+        spec: spec.clone(),
+        rungs,
+        winner,
+        total_cost,
+        never_evaluated,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::load_backend_for;
+    use std::path::Path;
+
+    fn factory(
+        arch: crate::model::Arch,
+    ) -> Result<Box<dyn crate::runtime::InferenceBackend>> {
+        load_backend_for(Path::new("artifacts"), arch)
+    }
+
+    #[test]
+    fn search_spec_json_round_trip_and_validation() {
+        let text = r#"{"name": "s", "frames": 32,
+            "loss_rates": [0.0, 0.05],
+            "budget": 512, "eta": 3, "rung_frames": [4, 32]}"#;
+        let spec = SearchSpec::from_json(text).unwrap();
+        assert_eq!(spec.budget, 512);
+        assert_eq!(spec.eta, 3);
+        assert_eq!(spec.rung_frames, vec![4, 32]);
+        assert_eq!(spec.sweep.frames, 32);
+        // The search keys must not leak into the sweep grid...
+        let back = spec.to_json().to_string();
+        assert!(back.contains("\"rung_frames\""));
+        // ...and schedule mistakes fail loudly.
+        for bad in [
+            r#"{"name": "s", "rung_frames": [8, 8]}"#,
+            r#"{"name": "s", "eta": 1}"#,
+            r#"{"name": "s", "rung_frames": []}"#,
+            r#"{"name": "s", "not_a_key": 1}"#,
+        ] {
+            assert!(SearchSpec::from_json(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn unlimited_budget_keeps_every_candidate_every_rung() {
+        let mut sweep = SweepSpec::new("oracle");
+        sweep.loss_rates = vec![0.0, 0.04];
+        sweep.frames = 8;
+        let mut spec = SearchSpec::new(sweep);
+        spec.rung_frames = vec![2, 8];
+        let report = run_search(&spec, 1, &factory).unwrap();
+        let n = spec.sweep.expand().unwrap().len();
+        assert_eq!(report.rungs.len(), 2);
+        for rung in &report.rungs {
+            assert_eq!(rung.entrants, n);
+            assert_eq!(rung.survivors.len(), n);
+        }
+        assert_eq!(report.never_evaluated, 0);
+    }
+
+    #[test]
+    fn budget_truncation_is_deterministic_and_reported() {
+        let mut sweep = SweepSpec::new("tight");
+        sweep.loss_rates = vec![0.0, 0.02, 0.04, 0.08];
+        sweep.frames = 8;
+        let mut spec = SearchSpec::new(sweep);
+        spec.rung_frames = vec![2, 8];
+        // Room for exactly three rung-0 entrants (2 frames x 1 seed x
+        // 1 client each) and nothing more.
+        spec.budget = 6;
+        let a = run_search(&spec, 1, &factory).unwrap();
+        let b = run_search(&spec, 4, &factory).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert_eq!(a.rungs[0].entrants, 3);
+        assert_eq!(a.never_evaluated, 1);
+        assert_eq!(a.total_cost, 6);
+        // The second rung could not afford anyone: winner comes from
+        // rung 0.
+        assert_eq!(a.rungs.len(), 1);
+    }
+}

@@ -1412,6 +1412,23 @@ pub fn mid_exec_name(from: usize, to: usize, batch: usize) -> String {
     format!("mid_L{from}_L{to}_b{batch}")
 }
 
+/// A cut chain is servable when the backend has (or can synthesize) the
+/// head, every mid segment and the chain tail at batch 1 — the single
+/// capability probe shared by the suggest engine and the placement/search
+/// candidate enumerations (real AOT artifacts export single-split
+/// heads/tails only; on-demand chain synthesis is an analytic-backend
+/// capability).
+pub fn chain_servable(
+    engine: &dyn crate::runtime::InferenceBackend,
+    cuts: &[usize],
+) -> bool {
+    engine.executable(&format!("head_L{}_b1", cuts[0])).is_ok()
+        && cuts.windows(2).all(|w| {
+            engine.executable(&mid_exec_name(w[0], w[1], 1)).is_ok()
+        })
+        && engine.executable(&chain_tail_name(cuts, 1)).is_ok()
+}
+
 /// Resolve the execution profile of one `(kind, scale)` on `engine`,
 /// given precomputed costs: preload the executables this placement needs
 /// (full mode only) and the zero-logits fallback prediction.

@@ -9,11 +9,12 @@ use anyhow::Result;
 use super::qos::QosRequirements;
 use super::saliency::CsCurve;
 use super::scenario::{
-    ModelScale, ScenarioConfig, ScenarioKind, ScenarioReport,
+    scenario_network, ModelScale, ScenarioConfig, ScenarioKind,
+    ScenarioReport,
 };
 use super::sweep;
 use crate::data::Dataset;
-use crate::model::{ordered_chains, DeviceProfile};
+use crate::model::{ChainCache, DeviceProfile};
 use crate::netsim::transfer::NetworkConfig;
 use crate::runtime::InferenceBackend;
 
@@ -51,6 +52,24 @@ pub fn rank_configurations(
     min_layer: usize,
     n_tiers: usize,
 ) -> Vec<RankedConfig> {
+    rank_configurations_cached(
+        engine,
+        min_layer,
+        n_tiers,
+        &mut ChainCache::new(),
+    )
+}
+
+/// [`rank_configurations`] against a caller-owned [`ChainCache`], so
+/// repeated rankings (one per tier chain, as the placement and co-design
+/// searches issue them) enumerate the k-subset lattice at most once per
+/// (arch, scale, k).
+pub fn rank_configurations_cached(
+    engine: &dyn InferenceBackend,
+    min_layer: usize,
+    n_tiers: usize,
+    cache: &mut ChainCache,
+) -> Vec<RankedConfig> {
     let m = engine.manifest();
     let curve = CsCurve::from_manifest(m);
     let norm = curve.normalized();
@@ -86,7 +105,21 @@ pub fn rank_configurations(
     // hop (the constrained one).
     if n_tiers >= 3 {
         let k = n_tiers - 1;
-        for chain in ordered_chains(&available, k) {
+        // The memoized lattice covers every split id; restricting it to
+        // the manifest's exported ids reproduces
+        // `ordered_chains(&available, k)` element-for-element (same
+        // lexicographic order), while repeated rankings reuse one
+        // enumeration per (arch, scale, k).
+        let net = scenario_network(engine, ModelScale::Slim);
+        let chains: Vec<Vec<usize>> = cache
+            .chains(m.arch(), ModelScale::Slim, k, &net)
+            .iter()
+            .filter(|chain| {
+                chain.iter().all(|c| available.contains(c))
+            })
+            .cloned()
+            .collect();
+        for chain in chains {
             if !cands.contains(&chain[0]) {
                 continue;
             }
@@ -195,20 +228,7 @@ pub fn suggest(
         // the table rather than failing the LC/RC/SC baselines with it.
         // Genuine simulation failures below still propagate.
         if let ScenarioKind::Mc { cuts } = &rank.kind {
-            let servable = engine
-                .executable(&format!("head_L{}_b1", cuts[0]))
-                .is_ok()
-                && cuts.windows(2).all(|w| {
-                    engine
-                        .executable(&super::streaming::mid_exec_name(
-                            w[0], w[1], 1,
-                        ))
-                        .is_ok()
-                })
-                && engine
-                    .executable(&super::streaming::chain_tail_name(cuts, 1))
-                    .is_ok();
-            if !servable {
+            if !super::streaming::chain_servable(engine, cuts) {
                 continue;
             }
         }
@@ -251,6 +271,7 @@ pub fn best(suggestions: &[Suggestion]) -> Option<&Suggestion> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::ordered_chains;
     use crate::netsim::transfer::Protocol;
 
     fn fake_report(kind: ScenarioKind, acc: f64, lat: f64) -> ScenarioReport {

@@ -51,6 +51,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
 use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -187,6 +188,14 @@ pub struct SweepSpec {
     pub max_batch: usize,
     /// Server-side dynamic batching: deadline for a partial batch, µs.
     pub batch_wait_us: f64,
+    /// Bound-guided two-phase evaluation (default off): when the spec
+    /// sets a latency deadline, skip the full discrete-event run for
+    /// points whose admissible analytic lower bound
+    /// ([`super::bound::job_bound_ns`]) already exceeds it — such points
+    /// are *provably* QoS-infeasible (every frame would miss). Skipped
+    /// points stay in the report (flagged, latency columns carrying the
+    /// bound, no accuracy) and are counted in [`SweepReport::skipped`].
+    pub prefilter: bool,
 }
 
 /// One expanded grid point, in deterministic expansion order.
@@ -275,6 +284,7 @@ impl SweepSpec {
             min_hit_rate: 1.0,
             max_batch: 1,
             batch_wait_us: 0.0,
+            prefilter: false,
         }
     }
 
@@ -811,14 +821,14 @@ impl SweepSpec {
     /// the schema). The grid is validated eagerly, so an invalid spec
     /// fails here rather than inside a worker thread.
     pub fn from_json(text: &str) -> Result<SweepSpec> {
-        const KEYS: [&str; 29] = [
+        const KEYS: [&str; 30] = [
             "name", "mode", "scenarios", "protocols", "channels",
             "latencies_us", "loss_rates", "scales", "archs", "clients",
             "offered_fps", "tiers", "cut_chains", "client_mixes", "hop_nets",
             "traces", "edge", "server", "dataset", "frames",
             "seeds_per_point", "seed", "fps", "frame_period_ns",
             "max_latency_ms", "min_accuracy", "min_hit_rate", "max_batch",
-            "batch_wait_us",
+            "batch_wait_us", "prefilter",
         ];
         let j = Json::parse(text).context("parsing sweep spec")?;
         // A misspelled optional key must not silently fall back to its
@@ -980,6 +990,9 @@ impl SweepSpec {
         if let Some(v) = j.opt("mode") {
             spec.mode = SweepMode::parse(v.str()?)?;
         }
+        if let Some(v) = j.opt("prefilter") {
+            spec.prefilter = v.bool()?;
+        }
         spec.expand()?;
         Ok(spec)
     }
@@ -1123,6 +1136,7 @@ impl SweepSpec {
             ("min_hit_rate", json::num(self.min_hit_rate)),
             ("max_batch", json::num(self.max_batch as f64)),
             ("batch_wait_us", json::num(self.batch_wait_us)),
+            ("prefilter", Json::Bool(self.prefilter)),
         ])
     }
 }
@@ -1195,6 +1209,11 @@ pub struct SweepPoint {
     pub deadline_hit_rate: Option<f64>,
     /// QoS verdict; `None` when the spec sets no checkable constraint.
     pub satisfies: Option<bool>,
+    /// True when the bound-guided prefilter proved the point infeasible
+    /// and skipped its simulation: the latency columns then carry the
+    /// analytic lower bound (the simulation could only be slower),
+    /// `frames` is 0 and `accuracy` is `None`.
+    pub skipped: bool,
 }
 
 /// Run `cfg` once per seed and pool the frame records into one report —
@@ -1223,7 +1242,7 @@ pub fn pooled_scenario(
 /// The architectures a job touches: its own axis value, plus (for a
 /// tenant-mix point) every tenant's. Callers preload one backend per
 /// entry before dispatching the job.
-fn job_archs(spec: &SweepSpec, job: &SweepJob) -> Vec<Arch> {
+pub(crate) fn job_archs(spec: &SweepSpec, job: &SweepJob) -> Vec<Arch> {
     let mut archs = vec![job.arch];
     if let Some(m) = job.mix {
         for c in &spec.client_mixes[m].clients {
@@ -1235,14 +1254,50 @@ fn job_archs(spec: &SweepSpec, job: &SweepJob) -> Vec<Arch> {
     archs
 }
 
-fn engine_for<'e>(
-    engines: &'e HashMap<Arch, Box<dyn InferenceBackend>>,
-    arch: Arch,
-) -> Result<&'e dyn InferenceBackend> {
-    engines
-        .get(&arch)
-        .map(|e| &**e)
-        .ok_or_else(|| anyhow!("no backend loaded for {}", arch.as_str()))
+/// Per-worker, per-architecture backend cache: backends are not `Send`
+/// (executables are `Rc`-cached), so every worker owns one of these and
+/// loads each architecture at most once, however many jobs it steals.
+/// Shared by the sweep pool, the placement search and the co-design
+/// search — the manifest/engine construction cost is paid `archs ×
+/// workers` times per run, never per job.
+pub struct EngineCache {
+    map: HashMap<Arch, Box<dyn InferenceBackend>>,
+}
+
+impl Default for EngineCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EngineCache {
+    pub fn new() -> Self {
+        EngineCache { map: HashMap::new() }
+    }
+
+    /// Load (through `factory`) every architecture in `archs` that is
+    /// not cached yet.
+    pub fn ensure(
+        &mut self,
+        archs: &[Arch],
+        factory: &BackendFactory<'_>,
+    ) -> Result<()> {
+        for &arch in archs {
+            if !self.map.contains_key(&arch) {
+                self.map.insert(arch, factory(arch)?);
+            }
+        }
+        Ok(())
+    }
+
+    /// The cached backend for `arch`; an error names the architecture if
+    /// [`EngineCache::ensure`] was never called for it.
+    pub fn get(&self, arch: Arch) -> Result<&dyn InferenceBackend> {
+        self.map
+            .get(&arch)
+            .map(|e| &**e)
+            .ok_or_else(|| anyhow!("no backend loaded for {}", arch.as_str()))
+    }
 }
 
 /// Execute one expanded job against `engines` — which must hold a backend
@@ -1255,7 +1310,7 @@ fn engine_for<'e>(
 /// ([`pooled_hetero_stream`]: DRR fairness, admission control, indexed
 /// event calendar).
 fn run_job(
-    engines: &HashMap<Arch, Box<dyn InferenceBackend>>,
+    engines: &EngineCache,
     dataset: Option<&Dataset>,
     spec: &SweepSpec,
     job: &SweepJob,
@@ -1322,7 +1377,7 @@ fn run_job(
                 batch: spec.batch_policy(),
             };
             let r = pooled_stream(
-                engine_for(engines, job.arch)?,
+                engines.get(job.arch)?,
                 &cfg,
                 ds,
                 &seeds,
@@ -1344,7 +1399,7 @@ fn run_job(
             let refs: Vec<(Arch, &dyn InferenceBackend)> =
                 job_archs(spec, job)
                     .into_iter()
-                    .map(|a| Ok((a, engine_for(engines, a)?)))
+                    .map(|a| Ok((a, engines.get(a)?)))
                     .collect::<Result<_>>()?;
             let r = pooled_hetero_stream(&refs, &cfg, ds, &seeds, &qos)?;
             (r, Some(mix.name.clone()))
@@ -1378,6 +1433,68 @@ fn run_job(
         total_retransmits: r.total_retransmits,
         deadline_hit_rate: r.deadline_hit_rate,
         satisfies: r.qos_satisfied,
+        skipped: false,
+    })
+}
+
+/// The report entry of a prefilter-skipped point: the latency columns
+/// carry the admissible bound (every simulated frame would be at least
+/// this late), the deadline hit-rate is the proven 0, and the QoS
+/// verdict is the proven violation. No frames were simulated, so the
+/// throughput/queue/accuracy columns stay empty.
+fn skipped_point(job: &SweepJob, bound_ns: SimTime) -> SweepPoint {
+    SweepPoint {
+        index: job.index,
+        kind: job.kind.clone(),
+        protocol: job.protocol,
+        channel: job.channel.clone(),
+        latency_us: job.latency_us,
+        loss: job.loss,
+        scale: job.scale,
+        arch: job.arch,
+        clients: job.clients,
+        offered_fps: job.offered_fps,
+        tiers: job.tiers.clone(),
+        hop_nets: job.hop_nets.clone(),
+        trace: job.trace.clone(),
+        mix: None,
+        frames: 0,
+        accuracy: None,
+        mean_latency_ns: bound_ns as f64,
+        p95_latency_ns: bound_ns,
+        p99_latency_ns: bound_ns,
+        max_latency_ns: bound_ns,
+        throughput_fps: 0.0,
+        mean_queue_depth: 0.0,
+        max_queue_depth: 0,
+        mean_wire_bytes: 0.0,
+        total_retransmits: 0,
+        deadline_hit_rate: Some(0.0),
+        satisfies: Some(false),
+        skipped: true,
+    }
+}
+
+/// Bound-guided phase 1 of a two-phase evaluation: when the spec opts in
+/// and sets a deadline, return the skipped-point record for a job whose
+/// admissible analytic bound already proves the deadline unreachable
+/// (`None` = no proof, run the full simulation). The engine for
+/// `job.arch` must already be loaded in `engines`.
+fn prefiltered(
+    engines: &EngineCache,
+    spec: &SweepSpec,
+    job: &SweepJob,
+) -> Result<Option<SweepPoint>> {
+    if !spec.prefilter {
+        return Ok(None);
+    }
+    let Some(deadline) = spec.qos().max_latency_ns else {
+        return Ok(None);
+    };
+    let bound = super::bound::job_bound_ns(engines.get(job.arch)?, spec, job)?;
+    Ok(match bound {
+        Some(b) if b > deadline => Some(skipped_point(job, b)),
+        _ => None,
     })
 }
 
@@ -1397,6 +1514,11 @@ pub struct SweepReport {
     pub satisfied_accuracy: usize,
     /// Points meeting every stated constraint.
     pub satisfied_both: usize,
+    /// Points that ran the full discrete-event simulation.
+    pub evaluated: usize,
+    /// Points skipped by the bound-guided prefilter (their analytic
+    /// latency lower bound already proved the deadline unreachable).
+    pub skipped: usize,
 }
 
 impl SweepReport {
@@ -1405,6 +1527,7 @@ impl SweepReport {
         points: Vec<SweepPoint>,
     ) -> SweepReport {
         let qos = spec.qos();
+        let skipped = points.iter().filter(|p| p.skipped).count();
         let coords: Vec<(f64, f64)> = points
             .iter()
             .map(|p| (p.accuracy.unwrap_or(f64::NAN), p.mean_latency_ns))
@@ -1426,6 +1549,8 @@ impl SweepReport {
                 .iter()
                 .filter(|p| lat_ok(p) && acc_ok(p))
                 .count(),
+            evaluated: points.len() - skipped,
+            skipped,
             spec: spec.clone(),
             points,
         }
@@ -1451,6 +1576,8 @@ impl SweepReport {
                 json::num(self.satisfied_accuracy as f64),
             ),
             ("satisfied_both", json::num(self.satisfied_both as f64)),
+            ("evaluated", json::num(self.evaluated as f64)),
+            ("skipped", json::num(self.skipped as f64)),
             ("total_points", json::num(self.points.len() as f64)),
         ])
     }
@@ -1483,6 +1610,7 @@ impl SweepReport {
             "max_queue_depth",
             "deadline_hit_rate",
             "qos_satisfied",
+            "skipped",
             "pareto",
         ]);
         for (pos, p) in self.points.iter().enumerate() {
@@ -1514,6 +1642,7 @@ impl SweepReport {
                     .map(|r| format!("{r:.4}"))
                     .unwrap_or_default(),
                 p.satisfies.map(|s| s.to_string()).unwrap_or_default(),
+                p.skipped.to_string(),
                 // The frontier holds *positions* into `points` (== index
                 // for reports built by run_sweep, but not necessarily for
                 // caller-assembled ones).
@@ -1608,11 +1737,18 @@ impl SweepReport {
             self.satisfied_latency, self.satisfied_accuracy,
             self.satisfied_both,
         ));
+        if self.spec.prefilter {
+            out.push_str(&format!(
+                "prefilter: {} simulated · {} skipped (analytic bound \
+                 above the deadline — provably infeasible)\n",
+                self.evaluated, self.skipped,
+            ));
+        }
         out
     }
 }
 
-fn point_json(p: &SweepPoint) -> Json {
+pub(crate) fn point_json(p: &SweepPoint) -> Json {
     json::obj(vec![
         ("index", json::num(p.index as f64)),
         ("scenario", json::s(&p.kind.to_string())),
@@ -1665,6 +1801,7 @@ fn point_json(p: &SweepPoint) -> Json {
             "qos_satisfied",
             p.satisfies.map(Json::Bool).unwrap_or(Json::Null),
         ),
+        ("skipped", Json::Bool(p.skipped)),
     ])
 }
 
@@ -1686,7 +1823,7 @@ fn load_dataset(
     }
 }
 
-fn record_failure(
+pub(crate) fn record_failure(
     flag: &AtomicBool,
     slot: &Mutex<Option<anyhow::Error>>,
     e: anyhow::Error,
@@ -1698,10 +1835,179 @@ fn record_failure(
     }
 }
 
-/// Expand `spec` and execute every grid point on a pool of `threads`
-/// workers (clamped to the job count; `<= 1` runs inline). Workers pull
-/// jobs from a shared counter, open one backend per architecture they
-/// encounter, and store results by job index — so the returned
+/// How a parallel evaluation pool hands jobs to workers. Either way the
+/// results are keyed by job position, so the report is byte-identical;
+/// only wall-clock time differs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SweepScheduler {
+    /// Deterministic work stealing (the default): every worker claims
+    /// the next unclaimed job off a shared atomic counter the moment it
+    /// goes idle, and keeps its backend cache for the whole run. No
+    /// barrier — a skewed job mix never strands idle workers behind one
+    /// heavy job.
+    Stealing,
+    /// The pre-stealing fixed-wave pool, retained as the benchmark
+    /// baseline: jobs run in waves of `threads`, one per worker, with a
+    /// full barrier between waves and backends rebuilt each wave. Every
+    /// wave lasts as long as its slowest job.
+    Waves,
+}
+
+/// Execute `jobs` (already expanded from `spec`) on a pool of `threads`
+/// workers and return one [`SweepPoint`] per job, in slice order —
+/// whatever order workers finish in, results are keyed by position.
+/// `threads <= 1` runs inline with no pool at all.
+pub(crate) fn run_jobs(
+    spec: &SweepSpec,
+    jobs: &[SweepJob],
+    threads: usize,
+    scheduler: SweepScheduler,
+    factory: &BackendFactory<'_>,
+) -> Result<Vec<SweepPoint>> {
+    let threads = threads.clamp(1, jobs.len().max(1));
+    if threads <= 1 {
+        let mut engines = EngineCache::new();
+        // The synthetic datasets are arch-independent (asserted by the
+        // analytic backend's tests), so the first engine's dataset serves
+        // every grid point.
+        let mut dataset: Option<Dataset> = None;
+        let mut points = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            engines.ensure(&job_archs(spec, job), factory)?;
+            if dataset.is_none() && spec.mode == SweepMode::Full {
+                dataset = load_dataset(engines.get(job.arch)?, spec)?;
+            }
+            points.push(match prefiltered(&engines, spec, job)? {
+                Some(p) => p,
+                None => run_job(&engines, dataset.as_ref(), spec, job)?,
+            });
+        }
+        return Ok(points);
+    }
+
+    // The dataset is plain shareable data — load it once and hand every
+    // worker a reference; only the backends are per-worker (`Rc`-cached).
+    // Latency-only sweeps need no dataset, so skip the throwaway backend.
+    let dataset = match spec.mode {
+        SweepMode::Full => {
+            let engine = factory(spec.archs[0])?;
+            load_dataset(&*engine, spec)?
+        }
+        SweepMode::LatencyOnly => None,
+    };
+    let failed = AtomicBool::new(false);
+    let error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, SweepPoint)>();
+    {
+        let dataset = dataset.as_ref();
+        let (failed, error) = (&failed, &error);
+        // One worker's turn of duty: bound-check, then simulate. Each
+        // worker brings its own `Sender` clone and backend cache; only
+        // shared read-only state crosses threads by reference.
+        let work = |engines: &EngineCache,
+                    tx: &Sender<(usize, SweepPoint)>,
+                    i: usize| {
+            let point = prefiltered(engines, spec, &jobs[i])
+                .and_then(|skip| match skip {
+                    Some(p) => Ok(p),
+                    None => run_job(engines, dataset, spec, &jobs[i]),
+                });
+            match point {
+                // The receiver outlives the scope; send cannot fail.
+                Ok(p) => tx.send((i, p)).expect("sweep result receiver"),
+                Err(e) => record_failure(failed, error, e),
+            }
+        };
+        let work = &work;
+        match scheduler {
+            SweepScheduler::Stealing => {
+                let next = AtomicUsize::new(0);
+                let next = &next;
+                std::thread::scope(|s| {
+                    for _ in 0..threads {
+                        let tx = tx.clone();
+                        s.spawn(move || {
+                            let mut engines = EngineCache::new();
+                            loop {
+                                if failed.load(Ordering::Relaxed) {
+                                    return;
+                                }
+                                let i = next.fetch_add(1, Ordering::Relaxed);
+                                if i >= jobs.len() {
+                                    return;
+                                }
+                                match engines
+                                    .ensure(&job_archs(spec, &jobs[i]), factory)
+                                {
+                                    Ok(()) => work(&engines, &tx, i),
+                                    Err(e) => {
+                                        return record_failure(
+                                            failed, error, e,
+                                        )
+                                    }
+                                }
+                            }
+                        });
+                    }
+                });
+            }
+            SweepScheduler::Waves => {
+                for (w, wave) in jobs.chunks(threads).enumerate() {
+                    if failed.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    std::thread::scope(|s| {
+                        for o in 0..wave.len() {
+                            let tx = tx.clone();
+                            s.spawn(move || {
+                                let i = w * threads + o;
+                                let mut engines = EngineCache::new();
+                                match engines
+                                    .ensure(&job_archs(spec, &jobs[i]), factory)
+                                {
+                                    Ok(()) => work(&engines, &tx, i),
+                                    Err(e) => record_failure(failed, error, e),
+                                }
+                            });
+                        }
+                    });
+                }
+            }
+        }
+    }
+    drop(tx);
+    if let Some(e) = error.into_inner().unwrap() {
+        return Err(e);
+    }
+    let mut slots: Vec<Option<SweepPoint>> = vec![None; jobs.len()];
+    for (i, p) in rx {
+        slots[i] = Some(p);
+    }
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| p.ok_or_else(|| anyhow!("sweep point {i} missing")))
+        .collect()
+}
+
+/// [`run_sweep`] with an explicit scheduler — the wave scheduler exists
+/// for benchmark comparison; everything else should take the default.
+pub fn run_sweep_with(
+    spec: &SweepSpec,
+    threads: usize,
+    scheduler: SweepScheduler,
+    factory: &BackendFactory<'_>,
+) -> Result<SweepReport> {
+    let jobs = spec.expand()?;
+    let points = run_jobs(spec, &jobs, threads, scheduler, factory)?;
+    Ok(SweepReport::from_points(spec, points))
+}
+
+/// Expand `spec` and execute every grid point on a deterministic
+/// work-stealing pool of `threads` workers (clamped to the job count;
+/// `<= 1` runs inline). Workers claim jobs off a shared counter, open
+/// one backend per architecture they encounter (cached for the whole
+/// run), and results are keyed by job index — so the returned
 /// [`SweepReport`] is identical — byte-for-byte in its JSON/CSV forms —
 /// for every thread count.
 ///
@@ -1724,93 +2030,7 @@ pub fn run_sweep(
     threads: usize,
     factory: &BackendFactory<'_>,
 ) -> Result<SweepReport> {
-    let jobs = spec.expand()?;
-    let threads = threads.clamp(1, jobs.len().max(1));
-    if threads <= 1 {
-        let mut engines: HashMap<Arch, Box<dyn InferenceBackend>> =
-            HashMap::new();
-        // The synthetic datasets are arch-independent (asserted by the
-        // analytic backend's tests), so the first engine's dataset serves
-        // every grid point.
-        let mut dataset: Option<Dataset> = None;
-        let mut points = Vec::with_capacity(jobs.len());
-        for job in &jobs {
-            for arch in job_archs(spec, job) {
-                if !engines.contains_key(&arch) {
-                    engines.insert(arch, factory(arch)?);
-                }
-            }
-            if dataset.is_none() && spec.mode == SweepMode::Full {
-                let engine = engines.get(&job.arch).unwrap();
-                dataset = load_dataset(&**engine, spec)?;
-            }
-            points.push(run_job(&engines, dataset.as_ref(), spec, job)?);
-        }
-        return Ok(SweepReport::from_points(spec, points));
-    }
-
-    // The dataset is plain shareable data — load it once and hand every
-    // worker a reference; only the backends are per-worker (`Rc`-cached).
-    // Latency-only sweeps need no dataset, so skip the throwaway backend.
-    let dataset = match spec.mode {
-        SweepMode::Full => {
-            let engine = factory(spec.archs[0])?;
-            load_dataset(&*engine, spec)?
-        }
-        SweepMode::LatencyOnly => None,
-    };
-    let results: Mutex<Vec<Option<SweepPoint>>> =
-        Mutex::new(vec![None; jobs.len()]);
-    let next = AtomicUsize::new(0);
-    let failed = AtomicBool::new(false);
-    let error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| {
-                let mut engines: HashMap<Arch, Box<dyn InferenceBackend>> =
-                    HashMap::new();
-                loop {
-                    if failed.load(Ordering::Relaxed) {
-                        return;
-                    }
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= jobs.len() {
-                        return;
-                    }
-                    for arch in job_archs(spec, &jobs[i]) {
-                        if !engines.contains_key(&arch) {
-                            match factory(arch) {
-                                Ok(e) => {
-                                    engines.insert(arch, e);
-                                }
-                                Err(e) => {
-                                    return record_failure(&failed, &error, e)
-                                }
-                            }
-                        }
-                    }
-                    match run_job(&engines, dataset.as_ref(), spec, &jobs[i])
-                    {
-                        Ok(p) => results.lock().unwrap()[i] = Some(p),
-                        Err(e) => {
-                            return record_failure(&failed, &error, e)
-                        }
-                    }
-                }
-            });
-        }
-    });
-    if let Some(e) = error.into_inner().unwrap() {
-        return Err(e);
-    }
-    let points = results
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .enumerate()
-        .map(|(i, p)| p.ok_or_else(|| anyhow!("sweep point {i} missing")))
-        .collect::<Result<Vec<_>>>()?;
-    Ok(SweepReport::from_points(spec, points))
+    run_sweep_with(spec, threads, SweepScheduler::Stealing, factory)
 }
 
 #[cfg(test)]

@@ -6,6 +6,7 @@
 //!   suggest    rank + simulate configurations against QoS requirements
 //!   simulate   run one LC/RC/SC/MC scenario over the simulated channel(s)
 //!   sweep      run a declarative design-space grid on a worker pool
+//!   search     budgeted successive-halving arch x split co-design search
 //!   serve      stream the ICE-Lab workload through a configuration
 //!
 //! Every command works without built artifacts or XLA: the default build
@@ -19,7 +20,7 @@ use anyhow::{bail, Context, Result};
 
 use sei::coordinator::{
     self, ModelScale, QosRequirements, ScenarioConfig, ScenarioKind,
-    SweepSpec,
+    SearchSpec, SweepSpec,
 };
 use sei::model::{Arch, DeviceProfile};
 use sei::netsim::transfer::{NetworkConfig, Protocol};
@@ -51,6 +52,7 @@ fn main() -> ExitCode {
         "place" => cmd_place(&rest),
         "simulate" => cmd_simulate(&rest),
         "sweep" => cmd_sweep(&rest),
+        "search" => cmd_search(&rest),
         "serve" => cmd_serve(&rest),
         "hil-worker" => cmd_hil_worker(&rest),
         "hil-serve" => cmd_hil_serve(&rest),
@@ -82,6 +84,7 @@ commands:
   place      search a fleet inventory for the best placement plan
   simulate   run one LC/RC/SC/MC scenario over the simulated channel(s)
   sweep      run a design-space grid in parallel, with a Pareto report
+  search     successive-halving co-design search under a simulation budget
   serve      stream the ICE-Lab conveyor workload through a configuration
   hil-worker hardware-in-the-loop: serve a tail/full artifact on a socket
   hil-serve  run split serving against a real worker over localhost TCP
@@ -448,6 +451,54 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
             report.to_csv().write(p)?;
         }
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_search(args: &[String]) -> Result<()> {
+    let m = Command::new(
+        "search",
+        "successive-halving arch x split co-design search: sweep axes \
+         plus budget / eta / rung_frames (schema: ARCHITECTURE.md)",
+    )
+    .opt("artifacts", "artifacts", "artifacts directory")
+    .required("spec", "SearchSpec JSON file (SweepSpec + search keys)")
+    .opt("threads", "0", "worker threads (0 = all available cores; the \
+         report is identical at any count)")
+    .opt("out", "", "write the SearchReport as JSON")
+    .parse(args)?;
+    let spec_path = m.str("spec");
+    let text = std::fs::read_to_string(spec_path)
+        .with_context(|| format!("reading search spec '{spec_path}'"))?;
+    let spec = SearchSpec::from_json(&text)?;
+    let threads = match m.usize("threads")? {
+        0 => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        n => n,
+    };
+    let dir = PathBuf::from(m.str("artifacts"));
+    let factory = move |arch| load_backend_for(&dir, arch);
+    let candidates = spec.sweep.expand()?.len();
+    println!(
+        "search '{}': {candidates} candidates x {} rung(s) on {threads} \
+         thread(s)\n",
+        spec.sweep.name,
+        spec.rung_frames.len(),
+    );
+    let t0 = std::time::Instant::now();
+    let report = coordinator::run_search(&spec, threads, &factory)?;
+    print!("{}", report.render());
+    println!("\nsearched in {:.2}s", t0.elapsed().as_secs_f64());
+    if !m.str("out").is_empty() {
+        let p = Path::new(m.str("out"));
+        if let Some(parent) = p.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(p, report.to_json().to_string())?;
+        println!("wrote {}", m.str("out"));
     }
     Ok(())
 }

@@ -15,9 +15,12 @@
 //! block boundaries for ResNet/MobileNet), indexed `0..n` per arch. For
 //! VGG16 these coincide exactly with the 18 feature layers of Fig. 2.
 
+use std::collections::HashMap;
+
 use anyhow::{bail, Result};
 
 use super::layer::{Network, Shape};
+use super::{Arch, ModelScale};
 
 /// One valid cut: the head/tail partition after topological position
 /// `pos`, with the single crossing tensor and cumulative compute costs.
@@ -269,6 +272,59 @@ pub fn valid_cut_chains(net: &Network, k: usize) -> Vec<Vec<usize>> {
     let ids: Vec<usize> =
         (0..split_points(net).len().saturating_sub(1)).collect();
     ordered_chains(&ids, k)
+}
+
+/// Crate-wide memoization of [`valid_cut_chains`] per (arch × scale × k):
+/// the adaptive controller re-evaluates the candidate set on every Check,
+/// the placement search re-enumerates it per tier chain, and the budgeted
+/// co-design search per rung — re-enumerating the k-subset lattice each
+/// time would make every decision O(enumeration) instead of
+/// O(candidates). The counters are observable so regression tests can pin
+/// "one enumeration, many lookups".
+pub struct ChainCache {
+    map: HashMap<(Arch, ModelScale, usize), Vec<Vec<usize>>>,
+    enumerations: u64,
+    lookups: u64,
+}
+
+impl Default for ChainCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ChainCache {
+    pub fn new() -> Self {
+        ChainCache { map: HashMap::new(), enumerations: 0, lookups: 0 }
+    }
+
+    /// The candidate cut chains of `net` for `k` cuts, enumerating at
+    /// most once per (arch, scale, k).
+    pub fn chains(
+        &mut self,
+        arch: Arch,
+        scale: ModelScale,
+        k: usize,
+        net: &Network,
+    ) -> &[Vec<usize>] {
+        self.lookups += 1;
+        let key = (arch, scale, k);
+        if !self.map.contains_key(&key) {
+            self.enumerations += 1;
+            self.map.insert(key, valid_cut_chains(net, k));
+        }
+        self.map.get(&key).expect("just inserted")
+    }
+
+    /// How many times the k-subset lattice was actually enumerated.
+    pub fn enumerations(&self) -> u64 {
+        self.enumerations
+    }
+
+    /// How many candidate-set requests were served (cache hits + misses).
+    pub fn lookups(&self) -> u64 {
+        self.lookups
+    }
 }
 
 #[cfg(test)]

@@ -15,7 +15,7 @@ use anyhow::{bail, Result};
 
 pub use cut::{
     chain_costs, is_ordered_chain, ordered_chains, split_points,
-    valid_cut_chains, valid_cuts, ChainCosts, Cut,
+    valid_cut_chains, valid_cuts, ChainCache, ChainCosts, Cut,
 };
 pub use device::DeviceProfile;
 pub use layer::{Layer, LayerKind, Network, NetworkBuilder, Node, Shape};
@@ -118,6 +118,45 @@ impl Arch {
 impl std::fmt::Display for Arch {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(self.as_str())
+    }
+}
+
+/// Which model scale's volumetrics/compute drive a simulation. The
+/// *architecture* is a separate axis ([`Arch`]); the scale picks between
+/// that arch's trained slim geometry and its paper-scale (224x224,
+/// 1000-class) network. It lives in the model layer because it is half of
+/// the (arch, scale) pair that resolves to a concrete [`Network`] — the
+/// key every crate-wide memo cache ([`ChainCache`]) is indexed by.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelScale {
+    /// The actual trained slim model (end-to-end serving).
+    Slim,
+    /// The arch's paper-scale network at 224x224 (Fig. 3/4 transfer sizes
+    /// and compute); accuracy is still measured on the slim artifacts with
+    /// the same loss fraction (corruption is scaled proportionally).
+    Full,
+}
+
+impl ModelScale {
+    /// Parse `"slim" | "full"` (case-insensitive; the historical
+    /// `"vgg16"` / `"vgg16-full"` spellings are accepted as aliases for
+    /// `full`).
+    pub fn parse(s: &str) -> Result<ModelScale> {
+        match s.to_ascii_lowercase().as_str() {
+            "slim" => Ok(ModelScale::Slim),
+            "full" | "vgg16" | "vgg16-full" => Ok(ModelScale::Full),
+            other => bail!(
+                "unknown model scale '{other}' (slim | full; 'vgg16' and \
+                 'vgg16-full' are accepted as aliases for full)"
+            ),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelScale::Slim => "slim",
+            ModelScale::Full => "full",
+        }
     }
 }
 

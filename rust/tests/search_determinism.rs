@@ -1,0 +1,220 @@
+//! The evaluation core's headline guarantees, end to end:
+//!
+//! - the work-stealing sweep pool (and the retained wave baseline)
+//!   produce byte-identical reports at every thread count;
+//! - the bound-guided prefilter (`"prefilter": true`) never drops an
+//!   accuracy-vs-latency Pareto-frontier point — on the repo's own
+//!   `examples/specs/grid.json` and on a tightened variant engineered
+//!   so the prefilter provably fires;
+//! - the successive-halving co-design search (`sei search`) returns a
+//!   thread-count-invariant report whose unlimited-budget winner equals
+//!   the exhaustive sweep's best point at final-rung fidelity.
+
+use std::cmp::Ordering;
+use std::path::Path;
+
+use sei::coordinator::{
+    run_search, run_sweep, run_sweep_with, ScenarioKind, SearchSpec,
+    SweepPoint, SweepScheduler, SweepSpec,
+};
+use sei::model::Arch;
+use sei::netsim::transfer::Protocol;
+use sei::runtime::{load_backend_for, InferenceBackend};
+
+fn factory(arch: Arch) -> anyhow::Result<Box<dyn InferenceBackend>> {
+    // No artifacts directory in the test environment: this loads the
+    // hermetic analytic backend, which is bit-reproducible per seed.
+    load_backend_for(Path::new("artifacts"), arch)
+}
+
+/// The committed example grid, exactly as CI's smoke run uses it.
+fn grid_json_spec() -> SweepSpec {
+    let text = std::fs::read_to_string("../examples/specs/grid.json")
+        .expect("examples/specs/grid.json");
+    SweepSpec::from_json(&text).expect("grid.json parses")
+}
+
+/// A small programmatic grid for the search tests.
+fn search_grid() -> SweepSpec {
+    let mut spec = SweepSpec::new("codesign");
+    spec.scenarios = vec![
+        ScenarioKind::Lc,
+        ScenarioKind::Rc,
+        ScenarioKind::Sc { split: 5 },
+    ];
+    spec.protocols = vec![Protocol::Tcp, Protocol::Udp];
+    spec.loss_rates = vec![0.0, 0.05];
+    spec.archs = vec![Arch::Vgg16, Arch::ResNet18];
+    spec.frames = 24;
+    spec.frame_period_ns = 50_000_000;
+    spec.max_latency_ms = 50.0;
+    spec.min_accuracy = 0.9;
+    spec
+}
+
+/// The search's published ranking, replicated independently: QoS
+/// satisfaction rank, then mean latency, then accuracy (unmeasured
+/// worst), then grid index.
+fn search_rank(a: &SweepPoint, b: &SweepPoint) -> Ordering {
+    let sat = |p: &SweepPoint| match p.satisfies {
+        Some(true) => 2,
+        None => 1,
+        Some(false) => 0,
+    };
+    sat(b)
+        .cmp(&sat(a))
+        .then(a.mean_latency_ns.partial_cmp(&b.mean_latency_ns).unwrap())
+        .then(
+            b.accuracy
+                .unwrap_or(f64::NEG_INFINITY)
+                .partial_cmp(&a.accuracy.unwrap_or(f64::NEG_INFINITY))
+                .unwrap(),
+        )
+        .then(a.index.cmp(&b.index))
+}
+
+#[test]
+fn grid_json_report_is_identical_at_one_and_eight_threads() {
+    let mut spec = grid_json_spec();
+    spec.frames = 24; // keep the full 56-point grid, trim the runtime
+    let one = run_sweep(&spec, 1, &factory).unwrap();
+    let eight = run_sweep(&spec, 8, &factory).unwrap();
+    assert_eq!(
+        one.to_json().to_string(),
+        eight.to_json().to_string(),
+        "work-stealing sweep JSON must not depend on the thread count"
+    );
+    assert_eq!(
+        one.to_csv().to_string(),
+        eight.to_csv().to_string(),
+        "work-stealing sweep CSV must not depend on the thread count"
+    );
+}
+
+#[test]
+fn wave_scheduler_matches_work_stealing_byte_for_byte() {
+    let mut spec = grid_json_spec();
+    spec.frames = 16;
+    let stealing =
+        run_sweep_with(&spec, 4, SweepScheduler::Stealing, &factory).unwrap();
+    let waves =
+        run_sweep_with(&spec, 4, SweepScheduler::Waves, &factory).unwrap();
+    assert_eq!(
+        stealing.to_json().to_string(),
+        waves.to_json().to_string(),
+        "the retained wave baseline must stay output-equivalent"
+    );
+}
+
+#[test]
+fn prefilter_preserves_the_grid_json_frontier() {
+    let mut off = grid_json_spec();
+    off.frames = 24;
+    let mut on = off.clone();
+    on.prefilter = true;
+    let r_off = run_sweep(&off, 4, &factory).unwrap();
+    let r_on = run_sweep(&on, 4, &factory).unwrap();
+    assert_eq!(r_off.points.len(), r_on.points.len());
+    // Same frontier, point for point (positions == grid indices here).
+    assert_eq!(
+        r_off.pareto, r_on.pareto,
+        "prefilter must never change the Pareto frontier"
+    );
+    for &i in &r_on.pareto {
+        assert!(
+            !r_on.points[i].skipped,
+            "a frontier point must never be prefilter-skipped (index {i})"
+        );
+    }
+    assert_eq!(r_on.evaluated + r_on.skipped, r_on.points.len());
+}
+
+#[test]
+fn prefilter_fires_on_provably_infeasible_points_and_keeps_frontier() {
+    // Tighten the committed grid with a far-latency axis: every 200 ms
+    // point's analytic bound alone exceeds the 50 ms deadline (bound >=
+    // propagation latency), so the prefilter must skip it; and each such
+    // point is dominated by its 1 µs twin (identical loss process and
+    // accuracy, strictly larger latency), so the frontier provably
+    // cannot contain it.
+    let mut off = grid_json_spec();
+    off.frames = 16;
+    off.latencies_us = vec![1.0, 200_000.0];
+    let mut on = off.clone();
+    on.prefilter = true;
+    let r_off = run_sweep(&off, 4, &factory).unwrap();
+    let r_on = run_sweep(&on, 4, &factory).unwrap();
+    assert!(
+        r_on.skipped > 0,
+        "every 200 ms point must be provably skipped"
+    );
+    assert_eq!(
+        r_on.skipped,
+        r_on.points.iter().filter(|p| p.skipped).count()
+    );
+    for p in r_on.points.iter().filter(|p| p.skipped) {
+        assert_eq!(p.latency_us, Some(200_000.0));
+        assert_eq!(p.satisfies, Some(false));
+        assert_eq!(p.deadline_hit_rate, Some(0.0));
+        assert_eq!(p.frames, 0);
+        assert!(p.accuracy.is_none());
+        // The reported latency is the admissible bound: at least the
+        // 200 ms of propagation it provably contains.
+        assert!(p.mean_latency_ns >= 200e6);
+    }
+    // Skipping must not move the frontier.
+    assert_eq!(r_off.pareto, r_on.pareto);
+    // And the prefilter is deterministic: same skip set at any thread
+    // count.
+    let again = run_sweep(&on, 1, &factory).unwrap();
+    assert_eq!(
+        r_on.to_json().to_string(),
+        again.to_json().to_string()
+    );
+}
+
+#[test]
+fn search_report_is_invariant_across_thread_counts() {
+    let mut spec = SearchSpec::new(search_grid());
+    spec.rung_frames = vec![6, 24];
+    spec.eta = 2;
+    // A real halving run: enough budget for all of rung 0 but only part
+    // of rung 1.
+    let n = spec.sweep.expand().unwrap().len();
+    spec.budget = 6 * n + 24 * n.div_ceil(2);
+    let one = run_search(&spec, 1, &factory).unwrap();
+    let eight = run_search(&spec, 8, &factory).unwrap();
+    assert_eq!(
+        one.to_json().to_string(),
+        eight.to_json().to_string(),
+        "search report must not depend on the thread count"
+    );
+    assert_eq!(one.rungs.len(), 2);
+    assert!(one.rungs[1].entrants <= n.div_ceil(2));
+    assert!(one.total_cost <= spec.budget);
+}
+
+#[test]
+fn unlimited_budget_search_equals_the_exhaustive_sweep() {
+    let mut spec = SearchSpec::new(search_grid());
+    spec.rung_frames = vec![6, 24];
+    spec.budget = 0; // unlimited: no halving, final rung == full sweep
+    let report = run_search(&spec, 4, &factory).unwrap();
+
+    let mut sweep = search_grid();
+    sweep.frames = 24; // final-rung fidelity
+    let exhaustive = run_sweep(&sweep, 4, &factory).unwrap();
+    let best = exhaustive
+        .points
+        .iter()
+        .min_by(|a, b| search_rank(a, b))
+        .unwrap();
+    assert_eq!(
+        report.winner.index, best.index,
+        "unlimited-budget search must crown the exhaustive winner"
+    );
+    assert_eq!(report.winner.mean_latency_ns, best.mean_latency_ns);
+    assert_eq!(report.winner.accuracy, best.accuracy);
+    assert_eq!(report.winner.satisfies, best.satisfies);
+    assert_eq!(report.never_evaluated, 0);
+}
