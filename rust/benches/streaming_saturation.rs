@@ -10,12 +10,23 @@
 //!
 //! Part 2 measures the discrete-event core itself: a heterogeneous
 //! tenant population (archs × RC/SC placements, slow periodic sources so
-//! every pending stream keeps a timer in the event queue) is run once on
-//! the indexed event calendar and once on the retained linear-scan
-//! backend at 10⁴ streams, asserting the calendar sustains >= 10× the
-//! events/second; full mode additionally scales the calendar alone to
-//! 10⁵ streams. The events/second figures land in the JSON document that
-//! CI gates against `benches/baselines/streaming_events.json`.
+//! every pending stream keeps a timer in the event queue) is run on the
+//! hierarchical timing wheel, the indexed event calendar and the
+//! retained linear-scan backend at 10⁴ streams (asserting the calendar
+//! sustains >= 10× the linear scan and all backends process identical
+//! event counts), then scales calendar vs wheel to 10⁵ streams (CI gates
+//! the wheel at >= 3× the calendar there) and the wheel alone to 10⁶
+//! streams — all three scales run even under `SEI_BENCH_QUICK`. The
+//! events/second figures land in the JSON document that CI gates against
+//! `benches/baselines/streaming_events.json`.
+//!
+//! With `--features alloc-count` the bench instead runs the
+//! zero-allocation smoke: a counting global allocator wraps the system
+//! one, the same closed-loop stream is run at two frame counts, and the
+//! allocation-count difference must be a small constant — i.e. the
+//! steady-state serve loop performs zero heap allocations per frame
+//! after warm-up. (The counting allocator skews every timing figure, so
+//! the perf parts are skipped under that feature.)
 //!
 //! Part 3 runs the adaptive re-split comparison over the committed
 //! degrading trace (`examples/specs/trace_suite.json#degrading`): the
@@ -26,7 +37,7 @@
 //! not that the runner was slow.
 //!
 //! Environment knobs (same contract as `netsim_micro`):
-//!   SEI_BENCH_QUICK=1      fewer frames per point, skip the 10⁵ run
+//!   SEI_BENCH_QUICK=1      fewer frames per point in Part 1
 //!   SEI_BENCH_JSON=<path>  also write the results as machine-readable
 //!     JSON (CI uploads it as BENCH_streaming.json)
 
@@ -45,14 +56,22 @@ use sei::netsim::transfer::{NetworkConfig, Protocol};
 use sei::netsim::QueueKind;
 use sei::runtime::{load_backend, load_backend_for, InferenceBackend};
 use sei::util::json::{self, Json};
+use sei::util::rng::SplitMix64;
 
 /// A heterogeneous tenant population: architectures and placements cycle
 /// per client, every source is slow-periodic (so between its frames the
 /// stream parks exactly one pending Emit timer in the event queue — the
-/// regime where the linear next-event scan degenerates to O(streams) per
-/// pop) and emits two frames.
-fn mixed_clients(n: usize) -> Vec<ClientSpec> {
+/// regime where an unindexed next-event scan degenerates to O(streams)
+/// per pop) and emits two frames. `period_ns` sets the per-stream rate:
+/// 60 s keeps aggregate load far below every resource's capacity at 10⁵
+/// streams; the 10⁶ run stretches it to 600 s so admission still passes.
+/// Per-client weights come from one batched [`SplitMix64::fill`] pass —
+/// the fleet-scale seeding idiom (one generator walked n times, not n
+/// generators).
+fn mixed_clients(n: usize, period_ns: u64) -> Vec<ClientSpec> {
     let archs = [Arch::Vgg16, Arch::ResNet18, Arch::MobileNetV2];
+    let mut draws = vec![0u64; n];
+    SplitMix64(0xF1EE7).fill(&mut draws);
     (0..n)
         .map(|i| {
             let kind = if i % 2 == 0 {
@@ -63,12 +82,9 @@ fn mixed_clients(n: usize) -> Vec<ClientSpec> {
             let mut c = ClientSpec::new(kind);
             c.arch = archs[i % archs.len()];
             c.scale = ModelScale::Slim;
-            // 1 frame per minute per stream: aggregate load stays far
-            // below every resource's capacity even at 10⁵ streams, so
-            // admission keeps all of them.
-            c.frame_period_ns = 60_000_000_000;
+            c.frame_period_ns = period_ns;
             c.frames = 2;
-            c.weight = 1 + 3 * (i % 4 == 0) as u64;
+            c.weight = 1 + draws[i] % 4;
             c
         })
         .collect()
@@ -80,10 +96,11 @@ fn mixed_clients(n: usize) -> Vec<ClientSpec> {
 fn hetero_events_run(
     engines: &[(Arch, &dyn InferenceBackend)],
     n: usize,
+    period_ns: u64,
     queue: QueueKind,
 ) -> (u64, f64, usize) {
     let cfg = MultiStreamConfig {
-        clients: mixed_clients(n),
+        clients: mixed_clients(n, period_ns),
         hop_nets: vec![NetworkConfig::gigabit(Protocol::Udp, 0.0, 11)],
         tiers: vec![DeviceProfile::edge_gpu(), DeviceProfile::server_gpu()],
         batch: BatchPolicy::immediate(),
@@ -99,7 +116,109 @@ fn hetero_events_run(
     (events, events as f64 / wall.max(1e-9), report.admitted())
 }
 
+/// Counting global allocator for the `alloc-count` smoke: every
+/// allocation and reallocation bumps one relaxed atomic; frees are
+/// passed straight through. The absolute count is irrelevant — the smoke
+/// differences two runs, so only per-frame *growth* matters.
+#[cfg(feature = "alloc-count")]
+mod alloc_count {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+    pub fn allocs() -> u64 {
+        ALLOCS.load(Ordering::Relaxed)
+    }
+
+    struct Counting;
+
+    unsafe impl GlobalAlloc for Counting {
+        unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.alloc(l)
+        }
+
+        unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+            System.dealloc(p, l)
+        }
+
+        unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.realloc(p, l, n)
+        }
+    }
+
+    #[global_allocator]
+    static A: Counting = Counting;
+}
+
+/// Zero-allocation smoke: the closed-loop serve loop (wheel backend,
+/// lossless UDP, latency-only) must not allocate per frame in steady
+/// state. Doubling the frame count doubles the steady-state work while
+/// every setup cost (arenas, queues, lanes, report assembly) stays an
+/// identical O(1) number of allocations — so the count difference
+/// between the two runs bounds the per-frame allocation rate, and it
+/// must be a small constant, not O(frames).
+#[cfg(feature = "alloc-count")]
+fn alloc_smoke() {
+    let engine = load_backend(Path::new("artifacts")).expect("backend");
+    let qos = QosRequirements::none();
+    let run = |frames: usize| -> u64 {
+        let cfg = StreamConfig {
+            scenario: ScenarioConfig::two_tier(
+                ScenarioKind::Rc,
+                NetworkConfig::gigabit(Protocol::Udp, 0.0, 3),
+                DeviceProfile::edge_gpu(),
+                DeviceProfile::server_gpu(),
+                ModelScale::Slim,
+                10_000_000, // 100 FPS per client: comfortably underloaded
+            ),
+            clients: 8,
+            frames_per_client: frames,
+            batch: BatchPolicy::immediate(),
+        };
+        let before = alloc_count::allocs();
+        let r = sei::coordinator::run_stream_with_queue(
+            &*engine,
+            &cfg,
+            None,
+            &qos,
+            QueueKind::Wheel,
+        )
+        .expect("alloc smoke run");
+        let count = alloc_count::allocs() - before;
+        assert_eq!(r.frames, 8 * frames);
+        count
+    };
+    run(64); // warm-up: faults in code paths, sizes thread-local state
+    let base = run(256);
+    let double = run(512);
+    let growth = double.saturating_sub(base);
+    println!(
+        "=== alloc-count smoke: {base} allocs @ 256 frames/client, \
+         {double} @ 512, growth {growth} ==="
+    );
+    assert!(
+        growth <= 64,
+        "steady-state serve loop allocates per frame: doubling the frame \
+         count added {growth} allocations (expected a small constant)"
+    );
+}
+
 fn main() {
+    // Under the counting allocator every timing figure is skewed, so the
+    // alloc-count build runs only the zero-allocation smoke.
+    #[cfg(feature = "alloc-count")]
+    {
+        alloc_smoke();
+        return;
+    }
+    #[allow(unreachable_code)]
+    run_bench();
+}
+
+fn run_bench() {
     let quick = std::env::var("SEI_BENCH_QUICK").is_ok();
     let frames = if quick { 96 } else { 384 };
     let clients = 4usize;
@@ -190,15 +309,23 @@ fn main() {
     let engines: Vec<(Arch, &dyn InferenceBackend)> =
         backends.iter().map(|(a, b)| (*a, &**b)).collect();
 
+    let minute = 60_000_000_000u64;
     let n_quick = 10_000usize;
     println!(
-        "\n=== event calendar vs linear scan @ {n_quick} heterogeneous \
+        "\n=== wheel vs calendar vs linear scan @ {n_quick} heterogeneous \
          streams ==="
     );
     let (ev_cal, rate_cal, adm_cal) =
-        hetero_events_run(&engines, n_quick, QueueKind::Calendar);
+        hetero_events_run(&engines, n_quick, minute, QueueKind::Calendar);
     let (ev_lin, rate_lin, adm_lin) =
-        hetero_events_run(&engines, n_quick, QueueKind::LinearScan);
+        hetero_events_run(&engines, n_quick, minute, QueueKind::LinearScan);
+    let (ev_whl, rate_whl, adm_whl) =
+        hetero_events_run(&engines, n_quick, minute, QueueKind::Wheel);
+    println!(
+        "  wheel       {:>12} events  {:>14.0} events/s  ({adm_whl} \
+         admitted)",
+        ev_whl, rate_whl
+    );
     println!(
         "  calendar    {:>12} events  {:>14.0} events/s  ({adm_cal} \
          admitted)",
@@ -210,11 +337,15 @@ fn main() {
         ev_lin, rate_lin
     );
     let speedup = rate_cal / rate_lin.max(1e-9);
-    println!("  speedup     {speedup:>12.1}x");
+    println!("  calendar vs linear {speedup:>12.1}x");
     assert_eq!(adm_cal, n_quick, "all streams must be admitted");
     assert_eq!(
         ev_cal, ev_lin,
-        "both backends must process the same event count"
+        "calendar and linear scan must process the same event count"
+    );
+    assert_eq!(
+        ev_cal, ev_whl,
+        "wheel and calendar must process the same event count"
     );
     assert!(
         speedup >= 10.0,
@@ -222,23 +353,49 @@ fn main() {
          {n_quick} streams, got {speedup:.1}x"
     );
 
-    let full_scale = if quick {
-        None
-    } else {
-        let n_full = 100_000usize;
-        println!(
-            "\n=== event calendar @ {n_full} heterogeneous streams ==="
-        );
-        let (ev, rate, adm) =
-            hetero_events_run(&engines, n_full, QueueKind::Calendar);
-        println!(
-            "  calendar    {:>12} events  {:>14.0} events/s  ({adm} \
-             admitted)",
-            ev, rate
-        );
-        assert_eq!(adm, n_full, "all streams must be admitted");
-        Some((n_full, ev, rate))
-    };
+    // Calendar vs wheel at 10⁵ streams, wheel alone at 10⁶ — the CI-gated
+    // fleet-scale points. Both run under SEI_BENCH_QUICK too: quick mode
+    // trims Part 1's frame counts, but the scaling claim *is* this bench.
+    let n_large = 100_000usize;
+    println!(
+        "\n=== wheel vs calendar @ {n_large} heterogeneous streams ==="
+    );
+    let (ev_cal_l, rate_cal_l, adm_cal_l) =
+        hetero_events_run(&engines, n_large, minute, QueueKind::Calendar);
+    let (ev_whl_l, rate_whl_l, adm_whl_l) =
+        hetero_events_run(&engines, n_large, minute, QueueKind::Wheel);
+    let wheel_speedup_large = rate_whl_l / rate_cal_l.max(1e-9);
+    println!(
+        "  wheel       {:>12} events  {:>14.0} events/s  ({adm_whl_l} \
+         admitted)",
+        ev_whl_l, rate_whl_l
+    );
+    println!(
+        "  calendar    {:>12} events  {:>14.0} events/s  ({adm_cal_l} \
+         admitted)",
+        ev_cal_l, rate_cal_l
+    );
+    println!("  wheel vs calendar {wheel_speedup_large:>12.1}x");
+    assert_eq!(adm_cal_l, n_large, "all streams must be admitted");
+    assert_eq!(
+        ev_cal_l, ev_whl_l,
+        "wheel and calendar must process the same event count at 10^5"
+    );
+
+    // 10⁶ tenants: sources stretch to one frame per 10 minutes so the
+    // aggregate offered load (and therefore admission) matches the 10⁵
+    // point; the event population — one parked timer per pending stream —
+    // is 10× larger, which is the regime the wheel exists for.
+    let n_xl = 1_000_000usize;
+    println!("\n=== timing wheel @ {n_xl} heterogeneous streams ===");
+    let (ev_xl, rate_xl, adm_xl) =
+        hetero_events_run(&engines, n_xl, 10 * minute, QueueKind::Wheel);
+    println!(
+        "  wheel       {:>12} events  {:>14.0} events/s  ({adm_xl} \
+         admitted)",
+        ev_xl, rate_xl
+    );
+    assert_eq!(adm_xl, n_xl, "all 10^6 streams must be admitted");
 
     // ---- Part 3: adaptive re-splitting over the committed trace ----
     // Same calibration as tests/trace_semantics.rs: the degrading entry's
@@ -335,18 +492,21 @@ fn main() {
                 ])
             })
             .collect();
-        let mut events = vec![
+        let events = vec![
             ("streams", json::num(n_quick as f64)),
             ("calendar_events", json::num(ev_cal as f64)),
             ("calendar_events_per_sec", json::num(rate_cal)),
             ("linear_scan_events_per_sec", json::num(rate_lin)),
+            ("wheel_events_per_sec", json::num(rate_whl)),
             ("speedup", json::num(speedup)),
+            ("streams_large", json::num(n_large as f64)),
+            ("calendar_events_per_sec_large", json::num(rate_cal_l)),
+            ("wheel_events_per_sec_large", json::num(rate_whl_l)),
+            ("wheel_speedup_large", json::num(wheel_speedup_large)),
+            ("streams_xl", json::num(n_xl as f64)),
+            ("wheel_events_xl", json::num(ev_xl as f64)),
+            ("wheel_events_per_sec_xl", json::num(rate_xl)),
         ];
-        if let Some((n_full, ev, rate)) = full_scale {
-            events.push(("streams_full", json::num(n_full as f64)));
-            events.push(("calendar_events_full", json::num(ev as f64)));
-            events.push(("calendar_events_per_sec_full", json::num(rate)));
-        }
         let adaptive = json::obj(vec![
             ("trace", json::s("degrading")),
             ("frames", json::num(ad_frames as f64)),

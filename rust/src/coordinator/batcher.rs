@@ -89,6 +89,8 @@ impl Batch {
 pub struct Batcher {
     policy: BatchPolicy,
     queue: Vec<Request>,
+    /// Pooled storage for the next release (see [`Batcher::recycle`]).
+    spare: Vec<Request>,
     next_id: u64,
     pub batches_released: u64,
     pub requests_seen: u64,
@@ -99,10 +101,20 @@ impl Batcher {
         Batcher {
             policy,
             queue: Vec::new(),
+            spare: Vec::new(),
             next_id: 0,
             batches_released: 0,
             requests_seen: 0,
         }
+    }
+
+    /// Return a served batch's request storage to the pool: the next
+    /// release re-arms the pending queue with this capacity, so a
+    /// steady-state serve loop circulates a fixed set of `Vec`s instead
+    /// of allocating one per batch.
+    pub fn recycle(&mut self, mut spent: Vec<Request>) {
+        spent.clear();
+        self.spare = spent;
     }
 
     pub fn pending(&self) -> usize {
@@ -152,10 +164,11 @@ impl Batcher {
 
     fn release(&mut self, now: SimTime) -> Batch {
         self.batches_released += 1;
-        Batch {
-            requests: std::mem::take(&mut self.queue),
-            released_ns: now,
-        }
+        let requests = std::mem::replace(
+            &mut self.queue,
+            std::mem::take(&mut self.spare),
+        );
+        Batch { requests, released_ns: now }
     }
 }
 
@@ -174,7 +187,15 @@ pub struct DrrBatcher {
     policy: BatchPolicy,
     /// Pending requests in offer order, tagged with the offering client.
     queue: Vec<(usize, Request)>,
-    weights: Vec<u64>,
+    /// Persistent DRR scheduler reused across releases. A fully drained
+    /// [`super::drr::DrrQueue`] is back in its pristine state (ring
+    /// empty, deficits zeroed on departure), so one instance serves every
+    /// batch — a release costs O(batch), not O(clients): rebuilding the
+    /// per-client queue table per release is what made 10^6-tenant DRR
+    /// serving quadratic.
+    scratch: super::drr::DrrQueue<Request>,
+    /// Pooled storage for the next release (see [`DrrBatcher::recycle`]).
+    spare: Vec<Request>,
     next_id: u64,
     pub batches_released: u64,
     pub requests_seen: u64,
@@ -187,11 +208,19 @@ impl DrrBatcher {
         DrrBatcher {
             policy,
             queue: Vec::new(),
-            weights,
+            scratch: super::drr::DrrQueue::new(&weights, 1),
+            spare: Vec::new(),
             next_id: 0,
             batches_released: 0,
             requests_seen: 0,
         }
+    }
+
+    /// Return a served batch's request storage to the pool (same contract
+    /// as [`Batcher::recycle`]).
+    pub fn recycle(&mut self, mut spent: Vec<Request>) {
+        spent.clear();
+        self.spare = spent;
     }
 
     pub fn pending(&self) -> usize {
@@ -239,14 +268,15 @@ impl DrrBatcher {
         self.batches_released += 1;
         // Unit cost + quantum 1 turns DRR into weighted round robin over
         // the offering clients; ring order follows first appearance in the
-        // batch, so the ordering is deterministic.
-        let mut drr =
-            super::drr::DrrQueue::new(&self.weights, 1);
+        // batch, so the ordering is deterministic — and identical whether
+        // the scheduler is freshly built or reused after a full drain.
+        debug_assert!(self.scratch.is_empty());
         for (client, req) in self.queue.drain(..) {
-            drr.push(client, 1, req);
+            self.scratch.push(client, 1, req);
         }
-        let mut requests = Vec::with_capacity(drr.len());
-        while let Some(req) = drr.pop() {
+        let mut requests = std::mem::take(&mut self.spare);
+        requests.reserve(self.scratch.len());
+        while let Some(req) = self.scratch.pop() {
             requests.push(req);
         }
         Batch { requests, released_ns: now }
@@ -374,6 +404,54 @@ mod tests {
         let batch = b.offer(1, 3).expect("size trigger");
         let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 3, 1, 2]);
+    }
+
+    #[test]
+    fn recycled_storage_does_not_change_releases() {
+        // A batcher fed recycled request Vecs must release byte-identical
+        // batches to one that allocates fresh storage every time.
+        let policy = BatchPolicy::new(2, 1_000);
+        let mut plain = Batcher::new(policy);
+        let mut pooled = Batcher::new(policy);
+        let mut spent: Option<Vec<Request>> = None;
+        for t in 0..20u64 {
+            let a = plain.offer(t);
+            let b = pooled.offer(t);
+            match (a, b) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.requests, b.requests);
+                    assert_eq!(a.released_ns, b.released_ns);
+                    if let Some(v) = spent.take() {
+                        pooled.recycle(v);
+                    }
+                    spent = Some(b.requests);
+                }
+                (None, None) => {}
+                _ => panic!("release points diverged at t={t}"),
+            }
+        }
+        assert_eq!(plain.batches_released, pooled.batches_released);
+    }
+
+    #[test]
+    fn drr_scratch_reuse_is_identical_across_releases() {
+        // Two releases through the persistent scheduler: a fully drained
+        // DrrQueue is pristine, so the second batch must interleave
+        // exactly like the first.
+        let mut b = DrrBatcher::new(BatchPolicy::new(4, 1_000), vec![1, 1]);
+        let mut orders = Vec::new();
+        for round in 0..2u64 {
+            assert!(b.offer(0, round).is_none());
+            assert!(b.offer(0, round).is_none());
+            assert!(b.offer(0, round).is_none());
+            let batch = b.offer(1, round).expect("size trigger");
+            let pos: Vec<u64> =
+                batch.requests.iter().map(|r| r.id % 4).collect();
+            orders.push(pos);
+            b.recycle(batch.requests);
+        }
+        assert_eq!(orders[0], vec![0, 3, 1, 2]);
+        assert_eq!(orders[0], orders[1]);
     }
 
     #[test]

@@ -21,6 +21,14 @@ use std::collections::VecDeque;
 /// Items are `(cost, payload)` per client; `pop` returns payloads in DRR
 /// order. Deterministic: ring order is a pure function of the push/pop
 /// sequence, so simulations stay replayable.
+///
+/// **Reuse contract:** a fully drained queue is back in its pristine
+/// state — the ring is empty, every departing client's deficit is zeroed
+/// and `in_ring` cleared — so long-lived holders (the pooled
+/// [`super::batcher::DrrBatcher`] scratch, the per-resource lanes of the
+/// streaming engine) reuse one instance across rounds; its per-client
+/// `VecDeque`s keep their capacity, which is what makes the steady-state
+/// serve loop allocation-free.
 pub struct DrrQueue<T> {
     queues: Vec<VecDeque<(u64, T)>>,
     deficit: Vec<u64>,
@@ -61,6 +69,7 @@ impl<T> DrrQueue<T> {
     /// Enqueue `item` for `client` with the given service cost. A newly
     /// active client joins the back of the ring with zero deficit (credit
     /// never accumulates while idle).
+    #[inline]
     pub fn push(&mut self, client: usize, cost: u64, item: T) {
         self.queues[client].push_back((cost, item));
         self.len += 1;
@@ -72,6 +81,7 @@ impl<T> DrrQueue<T> {
     }
 
     /// Dequeue the next item in DRR order.
+    #[inline]
     pub fn pop(&mut self) -> Option<T> {
         if self.len == 0 {
             return None;
@@ -197,6 +207,29 @@ mod tests {
         let b = q.pop().unwrap();
         assert_eq!({ let mut v = vec![a, b]; v.sort(); v }, vec![7, 8]);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drained_queue_is_reusable() {
+        // The reuse contract the pooled DrrBatcher scratch depends on: a
+        // fully drained queue must behave exactly like a fresh one.
+        let mut fresh = DrrQueue::new(&[1, 2], 1);
+        let mut reused = DrrQueue::new(&[1, 2], 1);
+        // Dirty `reused` with an asymmetric round, then drain it.
+        for i in 0..5u32 {
+            reused.push(0, 1, i);
+        }
+        reused.push(1, 1, 99);
+        while reused.pop().is_some() {}
+        // Same workload into both: identical service order.
+        for q in [&mut fresh, &mut reused] {
+            for i in 0..4u32 {
+                q.push(i as usize % 2, 1, 10 + i);
+            }
+        }
+        let a: Vec<u32> = std::iter::from_fn(|| fresh.pop()).collect();
+        let b: Vec<u32> = std::iter::from_fn(|| reused.pop()).collect();
+        assert_eq!(a, b);
     }
 
     #[test]

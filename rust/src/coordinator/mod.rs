@@ -34,15 +34,19 @@ pub use placement::{
 pub use qos::QosRequirements;
 pub use saliency::CsCurve;
 pub use scenario::{
-    run_scenario, simulate_latency, ModelScale, ScenarioConfig, ScenarioKind,
-    ScenarioReport,
+    run_scenario, run_scenario_with_queue, simulate_latency, ModelScale,
+    ScenarioConfig, ScenarioKind, ScenarioReport,
 };
-pub use serve::{serve, serve_clients, HeteroServeReport, ServeReport};
+pub use serve::{
+    serve, serve_clients, serve_clients_latency, serve_with_queue,
+    HeteroServeReport, ServeReport,
+};
 pub use streaming::{
     parse_clients_spec, pooled_hetero_stream, pooled_stream,
-    run_hetero_stream, run_stream, run_stream_with_queue, ClientOutcome,
-    ClientSpec, Fairness, HeteroStreamReport, MultiStreamConfig,
-    StreamConfig, StreamFrameRecord, StreamReport,
+    pooled_stream_with_queue, run_hetero_stream, run_stream,
+    run_stream_with_queue, ClientOutcome, ClientSpec, Fairness,
+    HeteroStreamReport, MultiStreamConfig, StreamConfig, StreamFrameRecord,
+    StreamReport,
 };
 pub use search::{run_search, SearchReport, SearchSpec};
 pub use suggest::{

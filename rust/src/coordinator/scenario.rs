@@ -591,11 +591,34 @@ pub fn run_scenario(
     n_frames: usize,
     qos: &QosRequirements,
 ) -> Result<ScenarioReport> {
-    let stream = super::streaming::run_stream(
+    run_scenario_with_queue(
+        engine,
+        cfg,
+        dataset,
+        n_frames,
+        qos,
+        crate::netsim::event::QueueKind::Calendar,
+    )
+}
+
+/// [`run_scenario`] with an explicit event-queue backend (the `--queue`
+/// flag on `sei simulate` / `sei serve`). Results are byte-identical
+/// across backends by construction — wheel, calendar and linear scan all
+/// extract the event with the globally minimal `(time, seq)` key.
+pub fn run_scenario_with_queue(
+    engine: &dyn InferenceBackend,
+    cfg: &ScenarioConfig,
+    dataset: &Dataset,
+    n_frames: usize,
+    qos: &QosRequirements,
+    queue: crate::netsim::event::QueueKind,
+) -> Result<ScenarioReport> {
+    let stream = super::streaming::run_stream_with_queue(
         engine,
         &super::streaming::StreamConfig::single(cfg, n_frames),
         Some(dataset),
         qos,
+        queue,
     )?;
     ScenarioReport::from_records(cfg, stream.to_frame_records(), qos)
 }

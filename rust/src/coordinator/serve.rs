@@ -10,11 +10,13 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::qos::QosRequirements;
-use super::scenario::{run_scenario, ScenarioConfig, ScenarioReport};
+use super::scenario::{
+    run_scenario_with_queue, ScenarioConfig, ScenarioReport,
+};
 use super::streaming::{run_hetero_stream, HeteroStreamReport, MultiStreamConfig};
 use crate::data::Dataset;
 use crate::model::Arch;
-use crate::netsim::event::secs;
+use crate::netsim::event::{secs, QueueKind};
 use crate::runtime::InferenceBackend;
 
 #[derive(Clone, Debug)]
@@ -92,8 +94,21 @@ pub fn serve(
     n_frames: usize,
     qos: &QosRequirements,
 ) -> Result<ServeReport> {
+    serve_with_queue(engine, cfg, dataset, n_frames, qos, QueueKind::Calendar)
+}
+
+/// [`serve`] with an explicit event-queue backend (`--queue` on the CLI).
+pub fn serve_with_queue(
+    engine: &dyn InferenceBackend,
+    cfg: &ScenarioConfig,
+    dataset: &Dataset,
+    n_frames: usize,
+    qos: &QosRequirements,
+    queue: QueueKind,
+) -> Result<ServeReport> {
     let t0 = Instant::now();
-    let scenario = run_scenario(engine, cfg, dataset, n_frames, qos)?;
+    let scenario =
+        run_scenario_with_queue(engine, cfg, dataset, n_frames, qos, queue)?;
     let wall = t0.elapsed().as_secs_f64();
     let sim_secs = simulated_duration_secs(&scenario);
     let sim_fps = if sim_secs > 0.0 {
@@ -140,8 +155,29 @@ pub fn serve_clients(
     dataset: &Dataset,
     qos: &QosRequirements,
 ) -> Result<HeteroServeReport> {
+    serve_clients_mode(engines, cfg, Some(dataset), qos)
+}
+
+/// [`serve_clients`] in latency-only mode: no dataset and no per-frame
+/// inference, pure queueing/timing — the fleet-scale path, where a
+/// 10^6-tenant run would otherwise spend its wall time on millions of
+/// backend calls that cannot change any timing result.
+pub fn serve_clients_latency(
+    engines: &[(Arch, &dyn InferenceBackend)],
+    cfg: &MultiStreamConfig,
+    qos: &QosRequirements,
+) -> Result<HeteroServeReport> {
+    serve_clients_mode(engines, cfg, None, qos)
+}
+
+fn serve_clients_mode(
+    engines: &[(Arch, &dyn InferenceBackend)],
+    cfg: &MultiStreamConfig,
+    dataset: Option<&Dataset>,
+    qos: &QosRequirements,
+) -> Result<HeteroServeReport> {
     let t0 = Instant::now();
-    let report = run_hetero_stream(engines, cfg, Some(dataset), qos)?;
+    let report = run_hetero_stream(engines, cfg, dataset, qos)?;
     let wall = t0.elapsed().as_secs_f64();
     let frames = report.aggregate.frames;
     Ok(HeteroServeReport {

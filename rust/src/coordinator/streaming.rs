@@ -72,13 +72,19 @@
 //! Under overload the two engines deliberately diverge; that divergence
 //! is the bug this engine fixes.
 //!
-//! **Scale & multi-tenancy.** The event core runs on an indexed event
-//! calendar ([`EventQueue`] over a binary heap keyed by `(time, seq)`),
-//! replacing the linear next-event scan; the retained
-//! [`QueueKind::LinearScan`] backend stays available so the differential
-//! harness (`rust/tests/calendar_equivalence.rs`) can pin the two
-//! byte-identical. Frame state lives in a struct-of-arrays
-//! [`FrameArena`], seeded in one batched pass. On top of the same core,
+//! **Scale & multi-tenancy.** The event core runs on a pluggable
+//! [`EventQueue`] keyed by `(time, seq)`: a hierarchical timing wheel
+//! ([`QueueKind::Wheel`], O(1) amortized, the 10^6-stream default for
+//! benchmarks), an indexed binary-heap calendar, and the retained
+//! [`QueueKind::LinearScan`] — all three extract the globally minimal
+//! key, so the differential harness (`rust/tests/calendar_equivalence.rs`)
+//! pins them byte-identical. Frame state lives in a struct-of-arrays
+//! [`FrameArena`], seeded in one batched pass, with the model lanes
+//! (payload / prediction / label) committed only in full mode; the
+//! steady-state serve loop recycles batch request `Vec`s through the
+//! batcher pool ([`Batcher::recycle`]) and runs allocation-free after
+//! warm-up (asserted by the `alloc-count` smoke in
+//! `benches/streaming_saturation.rs`). On top of the same core,
 //! [`run_hetero_stream`] serves *heterogeneous* tenants — per-client
 //! architecture, placement, scale, rate, DRR weight and QoS — through
 //! one shared tier chain, with utilization-based admission control
@@ -90,7 +96,7 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::batcher::{Batch, BatchPolicy, Batcher, DrrBatcher};
+use super::batcher::{Batch, BatchPolicy, Batcher, DrrBatcher, Request};
 use super::corruption;
 use super::drr::DrrQueue;
 use super::qos::QosRequirements;
@@ -402,14 +408,28 @@ pub fn pooled_stream(
     seeds: &[u64],
     qos: &QosRequirements,
 ) -> Result<StreamReport> {
+    pooled_stream_with_queue(engine, cfg, dataset, seeds, qos,
+                             QueueKind::Calendar)
+}
+
+/// [`pooled_stream`] with an explicit event-queue backend (the sweep
+/// spec's `"queue"` key). Backend choice never changes results.
+pub fn pooled_stream_with_queue(
+    engine: &dyn InferenceBackend,
+    cfg: &StreamConfig,
+    dataset: Option<&Dataset>,
+    seeds: &[u64],
+    qos: &QosRequirements,
+    queue: QueueKind,
+) -> Result<StreamReport> {
     if seeds.is_empty() {
         bail!("pooled_stream needs at least one seed");
     }
     let mut reports = Vec::with_capacity(seeds.len());
+    let mut c = cfg.clone();
     for &seed in seeds {
-        let mut c = cfg.clone();
         c.scenario.set_base_seed(seed);
-        reports.push(run_stream(engine, &c, dataset, qos)?);
+        reports.push(run_stream_with_queue(engine, &c, dataset, qos, queue)?);
     }
     Ok(merge_stream_reports(
         cfg.clients,
@@ -449,18 +469,18 @@ fn merge_stream_reports(
             .map(|r| r.stats.max_queue_depth)
             .max()
             .unwrap_or(0),
+        // Saturating folds: at fleet scale (10^6 streams x many seeds) a
+        // wrapping `sum()` would silently produce a tiny bogus count in
+        // release builds; a pinned ceiling is at least visibly wrong.
         batches_released: reports
             .iter()
-            .map(|r| r.stats.batches_released)
-            .sum(),
+            .fold(0u64, |a, r| a.saturating_add(r.stats.batches_released)),
         batched_requests: reports
             .iter()
-            .map(|r| r.stats.batched_requests)
-            .sum(),
+            .fold(0u64, |a, r| a.saturating_add(r.stats.batched_requests)),
         events_processed: reports
             .iter()
-            .map(|r| r.stats.events_processed)
-            .sum(),
+            .fold(0u64, |a, r| a.saturating_add(r.stats.events_processed)),
     };
     let records: Vec<StreamFrameRecord> =
         reports.into_iter().flat_map(|r| r.records).collect();
@@ -670,8 +690,12 @@ pub fn pooled_hetero_stream(
         bail!("pooled_hetero_stream needs at least one seed");
     }
     let mut reports = Vec::with_capacity(seeds.len());
+    // One working copy, re-seeded per run: `set_base_seed` re-derives
+    // every hop from the base seed alone, so reusing the copy is
+    // byte-identical to cloning per seed — without duplicating a
+    // 10^6-entry client table once per seed.
+    let mut c = cfg.clone();
     for &seed in seeds {
-        let mut c = cfg.clone();
         c.set_base_seed(seed);
         reports.push(run_hetero_stream(engines, &c, dataset, qos)?.aggregate);
     }
@@ -742,9 +766,15 @@ struct FrameArena {
 
 impl FrameArena {
     /// Batched seeding: lay out every client's frames contiguously in
-    /// client order (`g = start[c] + f`) in one pass.
-    fn seeded(fpc: &[usize]) -> FrameArena {
+    /// client order (`g = start[c] + f`) in one pass. Latency-only runs
+    /// (`full = false`) never read or write `payload`/`pred`/`label`, so
+    /// those lanes stay empty instead of committing `total` dead entries
+    /// — at 10^6 streams that is the difference between the arena fitting
+    /// in cache-friendly timing lanes and dragging an unused model lane
+    /// through every miss.
+    fn seeded(fpc: &[usize], full: bool) -> FrameArena {
         let total: usize = fpc.iter().sum();
+        let model = if full { total } else { 0 };
         let mut owner = Vec::with_capacity(total);
         let mut fidx = Vec::with_capacity(total);
         for (c, &k) in fpc.iter().enumerate() {
@@ -761,9 +791,9 @@ impl FrameArena {
             wire_bytes: vec![0; total],
             retransmits: vec![0; total],
             corrupted: vec![false; total],
-            payload: vec![None; total],
-            pred: vec![None; total],
-            label: vec![0; total],
+            payload: vec![None; model],
+            pred: vec![None; model],
+            label: vec![0; model],
             owner,
             fidx,
         }
@@ -837,6 +867,17 @@ impl Front {
         match self {
             Front::Fifo(b) => b.poll(now),
             Front::Drr(b) => b.poll(now),
+        }
+    }
+
+    /// Return a served batch's spent request storage to the batcher pool
+    /// ([`Batcher::recycle`]): the steady-state serve loop then circulates
+    /// a fixed set of request `Vec`s between the batcher and the in-flight
+    /// batches instead of growing a fresh one per release.
+    fn recycle(&mut self, spent: Vec<Request>) {
+        match self {
+            Front::Fifo(b) => b.recycle(spent),
+            Front::Drr(b) => b.recycle(spent),
         }
     }
 
@@ -1149,12 +1190,14 @@ impl<'a> Sim<'a> {
                     && !res.lost_ranges().is_empty()
                 {
                     self.arena.corrupted[g] = true;
-                    if let Some(p) = self.arena.payload[g].as_mut() {
-                        corruption::corrupt_scaled(
-                            p,
-                            res.lost_ranges(),
-                            bytes,
-                        );
+                    if self.full_mode() {
+                        if let Some(p) = self.arena.payload[g].as_mut() {
+                            corruption::corrupt_scaled(
+                                p,
+                                res.lost_ranges(),
+                                bytes,
+                            );
+                        }
                     }
                 }
                 self.q.schedule(
@@ -1339,6 +1382,10 @@ impl<'a> Sim<'a> {
             let last_hop = self.hops_of(c) - 1;
             self.enqueue_xfer(Dir::Down, last_hop, g, t)?;
         }
+        // The batch is spent: hand its request storage back to the
+        // batcher pool so the next release reuses it instead of growing
+        // a fresh Vec (the serve loop's last per-batch allocation).
+        self.front.recycle(batch.requests);
         if let Some(next) = self.srv_q.pop_front() {
             self.dec_queued(next.len());
             self.start_srv(next, t)?;
@@ -1362,7 +1409,9 @@ impl<'a> Sim<'a> {
 
     fn complete(&mut self, g: usize, t: SimTime) {
         self.arena.completed_ns[g] = t;
-        self.arena.payload[g] = None;
+        if self.full_mode() {
+            self.arena.payload[g] = None;
+        }
         self.completed += 1;
         let c = self.client_of(g);
         // Closed-loop source: emit the next frame on completion.
@@ -1551,8 +1600,15 @@ fn simulate(
         setup,
         start,
         channels,
-        q: EventQueue::with_kind(setup.queue),
-        arena: FrameArena::seeded(&setup.fpc),
+        // Pending events are bounded by in-service items plus one armed
+        // source timer per client — O(clients), never O(frames) — so a
+        // small multiple of the client count pre-sizes the queue past
+        // any reallocation in the loop.
+        q: EventQueue::with_kind_and_capacity(
+            setup.queue,
+            4 * n_clients + 64,
+        ),
+        arena: FrameArena::seeded(&setup.fpc, setup.dataset.is_some()),
         next_frame: vec![0; n_clients],
         edge_q: vec![VecDeque::new(); n_clients],
         edge_busy: vec![false; n_clients],
@@ -1571,7 +1627,10 @@ fn simulate(
             .collect(),
         lane_busy: vec![false; n_lanes],
         front,
-        offered: Vec::new(),
+        // Every frame that reaches the batcher appends exactly one id
+        // mapping; reserving the worst case (all frames) keeps the hot
+        // loop free of growth reallocations.
+        offered: Vec::with_capacity(total),
         srv_q: VecDeque::new(),
         srv_busy: false,
         queued: 0,
@@ -1778,6 +1837,18 @@ fn admission_reasons(
     let mut lane_util = vec![0.0f64; 2 * hop_nets.len()];
     let mut mid_util = vec![0.0f64; tiers.len()];
     let mut srv_util = 0.0f64;
+    // Per-spec contribution buffers, hoisted out of the loop: a 10^6
+    // tenant pass reuses two buffers instead of allocating two fresh
+    // Vecs per client.
+    let mut lane_add = vec![0.0f64; lane_util.len()];
+    let mut mid_add = vec![0.0f64; mid_util.len()];
+    // Chunked fast path: `count`-expanded specs arrive as runs of
+    // identical consecutive clients, and a rejection leaves every shared
+    // utilization untouched — so once one client of a (profile, period)
+    // run is rejected, every directly following client of the same run
+    // gets the verbatim verdict without re-walking the resources. Any
+    // admission in between invalidates the cache (utilizations moved).
+    let mut rejected_run: Option<(usize, SimTime, String)> = None;
     let mut out = Vec::with_capacity(specs.len());
     for (c, spec) in specs.iter().enumerate() {
         let p = &profiles[prof[c]];
@@ -1789,26 +1860,34 @@ fn admission_reasons(
             out.push(None);
             continue;
         }
+        if let Some((rp, rper, verdict)) = &rejected_run {
+            if *rp == prof[c] && *rper == period {
+                out.push(Some(verdict.clone()));
+                continue;
+            }
+        }
         // Tier 0 is the client's own device, not a shared resource: the
         // stream starves itself when one frame's compute exceeds its
         // period.
         if !matches!(p.kind, ScenarioKind::Rc) {
             let s0 = tiers[0].compute_ns(costs.seg_mult_adds[0]);
             if s0 > period {
-                out.push(Some(format!(
+                let verdict = format!(
                     "rejected by admission control: tier-0 device '{}' \
                      needs {:.3} ms per frame, more than the {:.3} ms \
                      frame period",
                     tiers[0].name,
                     s0 as f64 / 1e6,
                     period as f64 / 1e6
-                )));
+                );
+                rejected_run = Some((prof[c], period, verdict.clone()));
+                out.push(Some(verdict));
                 continue;
             }
         }
         let lam = 1.0 / period as f64; // frames per ns
-        let mut lane_add = vec![0.0f64; lane_util.len()];
-        let mut mid_add = vec![0.0f64; mid_util.len()];
+        lane_add.fill(0.0);
+        mid_add.fill(0.0);
         let mut srv_add = 0.0f64;
         for h in 0..costs.hops() {
             let net = &hop_nets[h];
@@ -1864,9 +1943,14 @@ fn admission_reasons(
             ));
         }
         match reason {
-            Some(r) => out.push(Some(format!(
-                "rejected by admission control: {r} (> 1 at the bottleneck)"
-            ))),
+            Some(r) => {
+                let verdict = format!(
+                    "rejected by admission control: {r} (> 1 at the \
+                     bottleneck)"
+                );
+                rejected_run = Some((prof[c], period, verdict.clone()));
+                out.push(Some(verdict));
+            }
             None => {
                 for (l, add) in lane_add.iter().enumerate() {
                     lane_util[l] += add;
@@ -1875,6 +1959,7 @@ fn admission_reasons(
                     mid_util[tier] += add;
                 }
                 srv_util += srv_add;
+                rejected_run = None;
                 out.push(None);
             }
         }
@@ -2010,11 +2095,22 @@ pub fn run_hetero_stream(
         }
     }
 
-    // Resolve one profile per distinct (arch, kind, scale).
+    // Resolve one profile per distinct (arch, kind, scale). Chunked fast
+    // path: `count`-expanded specs arrive as runs of identical
+    // consecutive clients, so the common case reuses the previous
+    // client's index without re-scanning the key table (O(clients)
+    // total instead of O(clients x distinct profiles)).
     let mut profiles: Vec<Profile> = Vec::new();
     let mut keys: Vec<(Arch, ScenarioKind, ModelScale)> = Vec::new();
-    let mut prof = Vec::with_capacity(cfg.clients.len());
+    let mut prof: Vec<usize> = Vec::with_capacity(cfg.clients.len());
     for (i, spec) in cfg.clients.iter().enumerate() {
+        if let Some(&prev) = prof.last() {
+            let k = &keys[prev];
+            if k.0 == spec.arch && k.2 == spec.scale && k.1 == spec.kind {
+                prof.push(prev);
+                continue;
+            }
+        }
         let key = (spec.arch, spec.kind.clone(), spec.scale);
         let idx = match keys.iter().position(|k| *k == key) {
             Some(idx) => idx,
@@ -2522,6 +2618,61 @@ mod tests {
             lin.stats.events_processed
         );
         assert!(cal.stats.events_processed > 0);
+    }
+
+    #[test]
+    fn wheel_backend_matches_calendar_exactly() {
+        let eng = engine();
+        let cfg = StreamConfig {
+            scenario: scenario(150_000),
+            clients: 4,
+            frames_per_client: 10,
+            batch: BatchPolicy::new(4, 1_000_000),
+        };
+        let qos = QosRequirements::none();
+        let cal = run_stream_with_queue(
+            &*eng,
+            &cfg,
+            None,
+            &qos,
+            QueueKind::Calendar,
+        )
+        .unwrap();
+        let whl = run_stream_with_queue(
+            &*eng,
+            &cfg,
+            None,
+            &qos,
+            QueueKind::Wheel,
+        )
+        .unwrap();
+        assert_eq!(cal.records, whl.records);
+        assert_eq!(
+            cal.stats.events_processed,
+            whl.stats.events_processed
+        );
+        assert!(whl.stats.events_processed > 0);
+    }
+
+    #[test]
+    fn merged_event_counters_saturate_instead_of_wrapping() {
+        let eng = engine();
+        let cfg = StreamConfig {
+            scenario: scenario(150_000),
+            clients: 1,
+            frames_per_client: 2,
+            batch: BatchPolicy::immediate(),
+        };
+        let qos = QosRequirements::none();
+        let a = run_stream(&*eng, &cfg, None, &qos).unwrap();
+        let mut b = a.clone();
+        let mut c = a.clone();
+        b.stats.events_processed = u64::MAX - 5;
+        c.stats.events_processed = 100;
+        let merged = merge_stream_reports(1, 0.0, vec![b, c], &qos);
+        // A wrapping sum would report ~94 events; the saturating fold
+        // pins at the ceiling, which is visibly wrong instead of tiny.
+        assert_eq!(merged.stats.events_processed, u64::MAX);
     }
 
     fn hetero_cfg(clients: Vec<ClientSpec>) -> MultiStreamConfig {

@@ -62,8 +62,8 @@ use super::scenario::{
     run_scenario, ModelScale, ScenarioConfig, ScenarioKind, ScenarioReport,
 };
 use super::streaming::{
-    parse_client_entries, pooled_hetero_stream, pooled_stream, ClientSpec,
-    Fairness, MultiStreamConfig, StreamConfig,
+    parse_client_entries, pooled_hetero_stream, pooled_stream_with_queue,
+    ClientSpec, Fairness, MultiStreamConfig, StreamConfig,
 };
 use crate::data::Dataset;
 use crate::model::{Arch, DeviceProfile};
@@ -196,6 +196,10 @@ pub struct SweepSpec {
     /// points stay in the report (flagged, latency columns carrying the
     /// bound, no accuracy) and are counted in [`SweepReport::skipped`].
     pub prefilter: bool,
+    /// Event-queue backend every point simulates on (`"queue"` key:
+    /// `"wheel" | "calendar" | "linear"`). Purely a performance choice —
+    /// all backends pop events in the identical deterministic order.
+    pub queue: QueueKind,
 }
 
 /// One expanded grid point, in deterministic expansion order.
@@ -285,6 +289,7 @@ impl SweepSpec {
             max_batch: 1,
             batch_wait_us: 0.0,
             prefilter: false,
+            queue: QueueKind::Calendar,
         }
     }
 
@@ -821,14 +826,14 @@ impl SweepSpec {
     /// the schema). The grid is validated eagerly, so an invalid spec
     /// fails here rather than inside a worker thread.
     pub fn from_json(text: &str) -> Result<SweepSpec> {
-        const KEYS: [&str; 30] = [
+        const KEYS: [&str; 31] = [
             "name", "mode", "scenarios", "protocols", "channels",
             "latencies_us", "loss_rates", "scales", "archs", "clients",
             "offered_fps", "tiers", "cut_chains", "client_mixes", "hop_nets",
             "traces", "edge", "server", "dataset", "frames",
             "seeds_per_point", "seed", "fps", "frame_period_ns",
             "max_latency_ms", "min_accuracy", "min_hit_rate", "max_batch",
-            "batch_wait_us", "prefilter",
+            "batch_wait_us", "prefilter", "queue",
         ];
         let j = Json::parse(text).context("parsing sweep spec")?;
         // A misspelled optional key must not silently fall back to its
@@ -992,6 +997,14 @@ impl SweepSpec {
         }
         if let Some(v) = j.opt("prefilter") {
             spec.prefilter = v.bool()?;
+        }
+        if let Some(v) = j.opt("queue") {
+            let s = v.str()?;
+            spec.queue = QueueKind::parse(s).ok_or_else(|| {
+                anyhow!(
+                    "unknown queue backend '{s}' (wheel | calendar | linear)"
+                )
+            })?;
         }
         spec.expand()?;
         Ok(spec)
@@ -1376,12 +1389,13 @@ fn run_job(
                 frames_per_client: spec.frames,
                 batch: spec.batch_policy(),
             };
-            let r = pooled_stream(
+            let r = pooled_stream_with_queue(
                 engines.get(job.arch)?,
                 &cfg,
                 ds,
                 &seeds,
                 &qos,
+                spec.queue,
             )?;
             (r, None)
         }
@@ -1394,7 +1408,7 @@ fn run_job(
                 batch: spec.batch_policy(),
                 fairness: Fairness::Drr,
                 admission: true,
-                queue: QueueKind::Calendar,
+                queue: spec.queue,
             };
             let refs: Vec<(Arch, &dyn InferenceBackend)> =
                 job_archs(spec, job)

@@ -503,6 +503,16 @@ fn cmd_search(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Parse the shared `--queue` flag (event-queue backend selection).
+fn queue_kind_from(
+    m: &sei::util::cli::Matches,
+) -> Result<sei::netsim::QueueKind> {
+    let s = m.str("queue");
+    sei::netsim::QueueKind::parse(s).ok_or_else(|| {
+        anyhow::anyhow!("unknown queue backend '{s}' (wheel | calendar | linear)")
+    })
+}
+
 fn cmd_simulate(args: &[String]) -> Result<()> {
     let m = Command::new("simulate", "run one scenario")
         .opt("artifacts", "artifacts", "artifacts directory")
@@ -536,6 +546,9 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
              "on | off: run the adaptive re-split comparison (static-best \
               vs drain/drop controllers vs zero-cost oracle) over the \
               traced channels instead of one fixed configuration")
+        .opt("queue", "calendar",
+             "wheel | calendar | linear: event-queue backend (identical \
+              results; wheel is the O(1) fleet-scale path)")
         .opt("seed", "42", "simulation seed")
         .parse(args)?;
     let hop_nets = hop_nets_from(&m)?;
@@ -569,7 +582,7 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
                     .max_latency_ns
                     .unwrap_or(cfg.frame_period_ns * 2),
                 controller: Default::default(),
-                queue: sei::netsim::QueueKind::Calendar,
+                queue: queue_kind_from(&m)?,
             };
             let report = sei::coordinator::run_adaptive_comparison(&acfg)?;
             print!("{}", report.render());
@@ -579,8 +592,10 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     }
     let engine = backend_from(&m)?;
     let ds = engine.dataset(m.str("dataset"))?;
-    let report = coordinator::serve(&*engine, &cfg, &ds,
-                                    m.usize("frames")?, &qos)?;
+    let report = coordinator::serve_with_queue(
+        &*engine, &cfg, &ds, m.usize("frames")?, &qos,
+        queue_kind_from(&m)?,
+    )?;
     print!("{}", report.render(&qos));
     Ok(())
 }
@@ -627,6 +642,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("trace", "",
              "time-varying channel schedule (hop0=<chain>[,hop1=...], a \
               .json hop map, or file.json#entry — see `simulate --help`)")
+        .opt("queue", "calendar",
+             "wheel | calendar | linear: event-queue backend (identical \
+              results; wheel is the O(1) fleet-scale path)")
+        .opt("mode", "full",
+             "full | latency: latency skips per-frame inference — pure \
+              queueing/timing, the 10^6-tenant path (clients-spec mode)")
         .opt("seed", "42", "simulation seed")
         .parse(args)?;
     if let Some(path) =
@@ -668,8 +689,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             batch,
         };
         let t0 = std::time::Instant::now();
-        let report = sei::coordinator::run_stream(
-            &*engine, &stream_cfg, Some(&ice), &qos,
+        let report = sei::coordinator::run_stream_with_queue(
+            &*engine, &stream_cfg, Some(&ice), &qos, queue_kind_from(&m)?,
         )?;
         print!("{}", report.render(&qos));
         println!(
@@ -677,8 +698,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             t0.elapsed().as_secs_f64()
         );
     } else {
-        let report = coordinator::serve(&*engine, &cfg, &ice,
-                                        m.usize("frames")?, &qos)?;
+        let report = coordinator::serve_with_queue(
+            &*engine, &cfg, &ice, m.usize("frames")?, &qos,
+            queue_kind_from(&m)?,
+        )?;
         print!("{}", report.render(&qos));
     }
     Ok(())
@@ -715,7 +738,7 @@ fn serve_clients_from_spec(
         batch,
         fairness,
         admission,
-        queue: sei::netsim::QueueKind::Calendar,
+        queue: queue_kind_from(m)?,
     };
     let list = m.str("hop-nets");
     if list.is_empty() || !list.contains("seed=") {
@@ -740,13 +763,20 @@ fn serve_clients_from_spec(
     let engines: Vec<(Arch, &dyn InferenceBackend)> =
         backends.iter().map(|(a, b)| (*a, &**b)).collect();
     let qos = QosRequirements::with_fps(m.f64("fps")?)?;
-    let ice = backends[0].1.dataset("ice")?;
     println!(
         "ICE-Lab multi-tenant serving — platform {}",
         backends[0].1.platform()
     );
-    let report =
-        coordinator::serve_clients(&engines, &cfg, &ice, &qos)?;
+    let report = match m.str("mode") {
+        "full" => {
+            let ice = backends[0].1.dataset("ice")?;
+            coordinator::serve_clients(&engines, &cfg, &ice, &qos)?
+        }
+        "latency" => {
+            coordinator::serve_clients_latency(&engines, &cfg, &qos)?
+        }
+        other => bail!("unknown serve mode '{other}' (full | latency)"),
+    };
     print!("{}", report.render(&qos));
     Ok(())
 }

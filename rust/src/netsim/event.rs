@@ -3,16 +3,25 @@
 //! network simulator; this module is the equivalent kernel, generic over the
 //! event payload so the transport models and the scenario engine reuse it.
 //!
-//! Two interchangeable backends implement the same pop order:
+//! Three interchangeable backends implement the same pop order:
 //!
+//! * [`QueueKind::Wheel`] — a hierarchical timing wheel (multi-level
+//!   64-slot buckets over the full 64-bit time space, per-level occupancy
+//!   bitmaps, coarse levels cascading into finer ones). O(1) amortized
+//!   schedule/pop; the fast path for 10⁵–10⁶ pending events, where the
+//!   heap's cache-missing sift loops dominate the simulation.
 //! * [`QueueKind::Calendar`] — an indexed event calendar (binary heap keyed
 //!   on the packed `(time_ns, seq)` u128). O(log n) per operation; the
-//!   default, and the only sane choice at 10⁴–10⁶ pending events.
+//!   default.
 //! * [`QueueKind::LinearScan`] — the historical O(n)-per-pop next-event
-//!   scan, retained as a differential oracle: both backends select the
-//!   globally minimal packed key, so their pop sequences are identical by
-//!   construction and `tests/calendar_equivalence.rs` pins byte-identical
-//!   simulation output between them.
+//!   scan, retained as a differential oracle.
+//!
+//! All three backends select the globally minimal packed `(time, seq)` key
+//! — the key is unique because `seq` strictly increases — so their pop
+//! sequences are identical by construction and
+//! `tests/calendar_equivalence.rs` pins byte-identical simulation output
+//! between them. See `docs/ARCHITECTURE.md` for the wheel's bucket math
+//! and the determinism argument.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -30,14 +39,29 @@ pub fn from_secs(s: f64) -> SimTime {
     (s * NS_PER_SEC).round() as SimTime
 }
 
-/// Which event-queue backend an [`EventQueue`] uses. Both produce the same
-/// pop order (minimal `(time, seq)` key first); they differ only in cost.
+/// Which event-queue backend an [`EventQueue`] uses. All three produce the
+/// same pop order (minimal `(time, seq)` key first); they differ only in
+/// cost.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum QueueKind {
+    /// Hierarchical timing wheel: O(1) amortized schedule/pop.
+    Wheel,
     /// Indexed calendar: binary heap, O(log n) schedule/pop. Default.
     Calendar,
     /// Unindexed O(n) min-scan per pop. Oracle / baseline only.
     LinearScan,
+}
+
+impl QueueKind {
+    /// Parse a user-facing backend name (CLI `--queue`, sweep `"queue"`).
+    pub fn parse(s: &str) -> Option<QueueKind> {
+        match s {
+            "wheel" => Some(QueueKind::Wheel),
+            "calendar" => Some(QueueKind::Calendar),
+            "linear" | "linear-scan" => Some(QueueKind::LinearScan),
+            _ => None,
+        }
+    }
 }
 
 struct Entry<E> {
@@ -78,7 +102,166 @@ impl<E> PartialOrd for Entry<E> {
     }
 }
 
+/// Bits of simulated time per wheel level: 64 slots each.
+const SLOT_BITS: u32 = 6;
+const SLOTS: usize = 1 << SLOT_BITS;
+/// 11 levels × 6 bits = 66 bits ≥ the full 64-bit [`SimTime`] space, so
+/// the coarsest levels double as the overflow region: any schedulable
+/// time has a home bucket and far-future events simply park high up until
+/// a cascade carries them down.
+const LEVELS: usize = (SimTime::BITS as usize).div_ceil(SLOT_BITS as usize);
+
+/// One wheel bucket. `entries` retains its allocation across drain/reuse
+/// cycles (lazy bucket reuse): a drained bucket is reset to
+/// `sorted = false` with `entries.clear()`, keeping capacity.
+struct Bucket<E> {
+    entries: Vec<Entry<E>>,
+    /// Level-0 buckets are sorted by full key — *descending*, so draining
+    /// pops the minimum off the back — on first open. The sort is needed
+    /// because a cascade can append an *earlier-seq* entry after a
+    /// directly scheduled later-seq one, so raw insertion order is not
+    /// FIFO. While a bucket is open, a direct insert carries a strictly
+    /// larger seq than anything inside (same slot ⟹ same timestamp ⟹
+    /// larger packed key) and goes to the front; a cascade can never
+    /// target an open bucket (cascades fire only when level 0 is entirely
+    /// empty).
+    sorted: bool,
+}
+
+/// Hierarchical timing wheel over the packed `(time << 64) | seq` key.
+///
+/// Level `l` buckets times by bit group `[6l, 6l+6)`; an entry lives at
+/// the *highest* level where its time differs from the wheel `base` (level
+/// 0 if equal above bit 6). Invariants, relative to `base` (which only
+/// advances, and only to values ≤ every pending time):
+///
+/// * every pending time `t` satisfies `t >= base`, so at an entry's level
+///   the differing bit group of `t` is *greater* than `base`'s — lower
+///   slots at that level are provably empty, and the occupancy bitmap's
+///   `trailing_zeros` finds the earliest slot directly;
+/// * all entries at level `l` precede all entries at any level `m > l`
+///   (they agree with `base` on group `m` where the level-`m` entries
+///   exceed it), so the lowest non-empty level holds the global minimum;
+/// * a level-0 bucket holds exactly one timestamp (all higher groups are
+///   pinned to `base`), so after the one-time sort its drain order is the
+///   exact `(time, seq)` order.
+///
+/// Popping from a level-`l > 0` bucket advances `base` to the bucket's
+/// time prefix and redistributes its entries, each landing at a strictly
+/// lower level — so an entry cascades at most `LEVELS - 1` times over its
+/// lifetime and both operations are O(1) amortized.
+struct TimingWheel<E> {
+    buckets: Vec<Bucket<E>>,
+    /// Per-level slot-occupancy bitmaps; bit `s` set ⟺ bucket `(l, s)`
+    /// holds undrained entries.
+    occupied: [u64; LEVELS],
+    base: SimTime,
+    len: usize,
+    /// Scratch storage for cascades; capacity persists across pops.
+    spare: Vec<Entry<E>>,
+}
+
+impl<E> TimingWheel<E> {
+    fn new() -> Self {
+        TimingWheel {
+            buckets: (0..LEVELS * SLOTS)
+                .map(|_| Bucket { entries: Vec::new(), sorted: false })
+                .collect(),
+            occupied: [0; LEVELS],
+            base: 0,
+            len: 0,
+            spare: Vec::new(),
+        }
+    }
+
+    /// Level + slot of time `t` (`t >= self.base` always holds: the queue
+    /// clamps schedules to `now`, and `base` never exceeds pending times).
+    #[inline]
+    fn place(&self, t: SimTime) -> (usize, usize) {
+        let diff = t ^ self.base;
+        let level = if diff == 0 {
+            0
+        } else {
+            (63 - diff.leading_zeros()) as usize / SLOT_BITS as usize
+        };
+        let slot = ((t >> (SLOT_BITS * level as u32)) & (SLOTS as u64 - 1))
+            as usize;
+        (level, slot)
+    }
+
+    #[inline]
+    fn insert(&mut self, entry: Entry<E>) {
+        let (level, slot) = self.place(entry.time());
+        let bucket = &mut self.buckets[level * SLOTS + slot];
+        if bucket.sorted {
+            // Open (draining) level-0 bucket: same timestamp, strictly
+            // larger seq than everything inside — front of the descending
+            // order. Rare path: only an event scheduling another event at
+            // the *current* instant lands here.
+            bucket.entries.insert(0, entry);
+        } else {
+            bucket.entries.push(entry);
+        }
+        self.occupied[level] |= 1 << slot;
+    }
+
+    fn push(&mut self, entry: Entry<E>) {
+        self.insert(entry);
+        self.len += 1;
+    }
+
+    fn pop(&mut self) -> Option<Entry<E>> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            let level = (0..LEVELS)
+                .find(|&l| self.occupied[l] != 0)
+                .expect("len > 0 with empty wheel");
+            let slot = self.occupied[level].trailing_zeros() as usize;
+            if level == 0 {
+                let bucket = &mut self.buckets[slot];
+                if !bucket.sorted {
+                    bucket
+                        .entries
+                        .sort_unstable_by(|a, b| b.key.cmp(&a.key));
+                    bucket.sorted = true;
+                }
+                let entry =
+                    bucket.entries.pop().expect("occupied bucket empty");
+                if bucket.entries.is_empty() {
+                    bucket.sorted = false;
+                    self.occupied[0] &= !(1 << slot);
+                }
+                self.len -= 1;
+                return Some(entry);
+            }
+            // Cascade: advance `base` to the bucket's time prefix (groups
+            // above `level` from the old base, group `level` = slot, lower
+            // groups zero) and redistribute — every entry re-lands at a
+            // strictly lower level.
+            let above = SLOT_BITS * (level as u32 + 1);
+            let high = if above >= SimTime::BITS {
+                0
+            } else {
+                (self.base >> above) << above
+            };
+            self.base = high | ((slot as u64) << (SLOT_BITS * level as u32));
+            self.occupied[level] &= !(1 << slot);
+            let mut moved = std::mem::replace(
+                &mut self.buckets[level * SLOTS + slot].entries,
+                std::mem::take(&mut self.spare),
+            );
+            for entry in moved.drain(..) {
+                self.insert(entry);
+            }
+            self.spare = moved;
+        }
+    }
+}
+
 enum Backend<E> {
+    Wheel(TimingWheel<E>),
     Calendar(BinaryHeap<Entry<E>>),
     LinearScan(Vec<Entry<E>>),
 }
@@ -86,6 +269,7 @@ enum Backend<E> {
 impl<E> Backend<E> {
     fn len(&self) -> usize {
         match self {
+            Backend::Wheel(w) => w.len,
             Backend::Calendar(h) => h.len(),
             Backend::LinearScan(v) => v.len(),
         }
@@ -93,6 +277,7 @@ impl<E> Backend<E> {
 
     fn push(&mut self, entry: Entry<E>) {
         match self {
+            Backend::Wheel(w) => w.push(entry),
             Backend::Calendar(h) => h.push(entry),
             Backend::LinearScan(v) => v.push(entry),
         }
@@ -100,6 +285,7 @@ impl<E> Backend<E> {
 
     fn pop(&mut self) -> Option<Entry<E>> {
         match self {
+            Backend::Wheel(w) => w.pop(),
             Backend::Calendar(h) => h.pop(),
             Backend::LinearScan(v) => {
                 // O(n) scan for the minimal packed key. The key is unique
@@ -135,8 +321,23 @@ impl<E> EventQueue<E> {
         Self::with_kind(QueueKind::Calendar)
     }
 
+    /// Like [`EventQueue::with_kind`], but pre-sizes the backend for an
+    /// expected number of concurrently pending events, so steady-state
+    /// scheduling performs no backend growth allocations. The wheel sizes
+    /// itself lazily per bucket and ignores the hint.
+    pub fn with_kind_and_capacity(kind: QueueKind, cap: usize) -> Self {
+        let mut q = Self::with_kind(kind);
+        match &mut q.backend {
+            Backend::Wheel(_) => {}
+            Backend::Calendar(h) => h.reserve(cap),
+            Backend::LinearScan(v) => v.reserve(cap),
+        }
+        q
+    }
+
     pub fn with_kind(kind: QueueKind) -> Self {
         let backend = match kind {
+            QueueKind::Wheel => Backend::Wheel(TimingWheel::new()),
             QueueKind::Calendar => {
                 Backend::Calendar(BinaryHeap::with_capacity(64))
             }
@@ -279,41 +480,160 @@ mod tests {
         assert_eq!(q.processed(), 10);
     }
 
-    /// Differential pin at the kernel level: an interleaved schedule/pop
-    /// workload pops the identical `(time, payload)` sequence from both
-    /// backends. (The end-to-end pin lives in tests/calendar_equivalence.)
-    #[test]
-    fn backends_pop_identically() {
-        let mut a = EventQueue::with_kind(QueueKind::Calendar);
-        let mut b = EventQueue::with_kind(QueueKind::LinearScan);
-        // xorshift64 so the schedule is deterministic but unstructured.
-        let mut s: u64 = 0x5EED_CAFE;
-        let mut rnd = move || {
+    fn xorshift(seed: u64) -> impl FnMut() -> u64 {
+        let mut s = seed;
+        move || {
             s ^= s << 13;
             s ^= s >> 7;
             s ^= s << 17;
             s
-        };
+        }
+    }
+
+    /// Drive all three backends through the same interleaved schedule/pop
+    /// workload and assert identical `(time, payload)` pop sequences.
+    fn differential(seed: u64, iters: u64, mut dt: impl FnMut(u64) -> u64) {
+        let mut qs = [
+            EventQueue::with_kind(QueueKind::Wheel),
+            EventQueue::with_kind(QueueKind::Calendar),
+            EventQueue::with_kind(QueueKind::LinearScan),
+        ];
+        let mut rnd = xorshift(seed);
         let mut pending = 0usize;
-        for i in 0..500u64 {
-            let dt = rnd() % 1000;
-            a.schedule_in(dt, i);
-            b.schedule_in(dt, i);
+        for i in 0..iters {
+            // Absolute target with a saturating add so far-future offsets
+            // near u64::MAX cannot overflow the clock.
+            let t = qs[0].now().saturating_add(dt(rnd()));
+            for q in &mut qs {
+                q.schedule(t, i);
+            }
             pending += 1;
             // Interleave pops so the clocks advance mid-stream.
             if rnd() % 3 == 0 && pending > 0 {
-                assert_eq!(a.pop(), b.pop());
+                let [a, b, c] = &mut qs;
+                let x = a.pop();
+                assert_eq!(x, b.pop());
+                assert_eq!(x, c.pop());
                 pending -= 1;
             }
         }
         loop {
-            let (x, y) = (a.pop(), b.pop());
-            assert_eq!(x, y);
+            let [a, b, c] = &mut qs;
+            let x = a.pop();
+            assert_eq!(x, b.pop());
+            assert_eq!(x, c.pop());
             if x.is_none() {
                 break;
             }
         }
-        assert_eq!(a.processed(), b.processed());
-        assert_eq!(a.now(), b.now());
+        assert_eq!(qs[0].processed(), qs[1].processed());
+        assert_eq!(qs[0].processed(), qs[2].processed());
+        assert_eq!(qs[0].now(), qs[1].now());
+        assert_eq!(qs[0].now(), qs[2].now());
+    }
+
+    /// Differential pin at the kernel level: an interleaved schedule/pop
+    /// workload pops the identical `(time, payload)` sequence from all
+    /// backends. (The end-to-end pin lives in tests/calendar_equivalence.)
+    #[test]
+    fn backends_pop_identically() {
+        differential(0x5EED_CAFE, 500, |r| r % 1000);
+    }
+
+    /// Heavy same-time ties: only 8 distinct offsets over 500 events, so
+    /// wheel buckets hold long seq runs (including runs interleaved by
+    /// cascades) and FIFO-at-equal-times must still hold exactly.
+    #[test]
+    fn backends_agree_under_same_time_ties() {
+        differential(0xA11_50_71ED, 500, |r| (r % 8) * 250);
+    }
+
+    /// Far-future times: offsets up to 2^60 ns land in the wheel's
+    /// coarsest (overflow) levels and cascade down through many levels
+    /// before popping; mixture with near-term events keeps both regimes
+    /// active in one run.
+    #[test]
+    fn backends_agree_with_far_future_overflow_times() {
+        differential(0xFA_F07_0FF, 300, |r| {
+            let shift = (r >> 32) % 61; // 0..=60
+            (r & 0xFFFF) << shift
+        });
+    }
+
+    /// The wheel must survive the degenerate single-bucket regime: every
+    /// event at the exact same absolute time.
+    #[test]
+    fn wheel_drains_one_big_tie_bucket_in_seq_order() {
+        let mut q = EventQueue::with_kind(QueueKind::Wheel);
+        for i in 0..1000u64 {
+            q.schedule(7_777_777, i);
+        }
+        for i in 0..1000u64 {
+            assert_eq!(q.pop(), Some((7_777_777, i)));
+        }
+        assert_eq!(q.pop(), None);
+    }
+
+    /// An event scheduled at the *current* instant while its timestamp's
+    /// bucket is mid-drain must pop after every already-pending event at
+    /// that time (it has the larger seq), on all backends.
+    #[test]
+    fn schedule_at_now_while_draining_pops_last() {
+        for kind in
+            [QueueKind::Wheel, QueueKind::Calendar, QueueKind::LinearScan]
+        {
+            let mut q = EventQueue::with_kind(kind);
+            q.schedule(5, 0u64);
+            q.schedule(5, 1);
+            q.schedule(5, 2);
+            assert_eq!(q.pop(), Some((5, 0)));
+            q.schedule(5, 3); // same instant, bucket already open
+            assert_eq!(q.pop(), Some((5, 1)));
+            assert_eq!(q.pop(), Some((5, 2)));
+            assert_eq!(q.pop(), Some((5, 3)));
+            assert_eq!(q.pop(), None);
+        }
+    }
+
+    /// The processed counter is 64-bit end to end: feeding a queue whose
+    /// counter sits just below `u32::MAX` must carry past the 32-bit
+    /// boundary without wrapping. (Counter saturation at 10⁶-stream scale
+    /// — ~10⁷ events per run, ~400 runs to overflow u32 — is why.)
+    #[test]
+    fn processed_counter_is_u64_past_the_u32_boundary() {
+        let mut q = EventQueue::with_kind(QueueKind::Wheel);
+        q.processed = u32::MAX as u64 - 2;
+        for i in 0..6u64 {
+            q.schedule(i, i);
+        }
+        while q.pop().is_some() {}
+        assert_eq!(q.processed(), u32::MAX as u64 + 4);
+        assert!(q.processed() > u32::MAX as u64);
+    }
+
+    #[test]
+    fn queue_kind_parses_cli_names() {
+        assert_eq!(QueueKind::parse("wheel"), Some(QueueKind::Wheel));
+        assert_eq!(QueueKind::parse("calendar"), Some(QueueKind::Calendar));
+        assert_eq!(QueueKind::parse("linear"), Some(QueueKind::LinearScan));
+        assert_eq!(
+            QueueKind::parse("linear-scan"),
+            Some(QueueKind::LinearScan)
+        );
+        assert_eq!(QueueKind::parse("heap"), None);
+    }
+
+    /// Capacity pre-sizing must not change behaviour.
+    #[test]
+    fn with_capacity_matches_default_behaviour() {
+        for kind in
+            [QueueKind::Wheel, QueueKind::Calendar, QueueKind::LinearScan]
+        {
+            let mut q = EventQueue::<u64>::with_kind_and_capacity(kind, 1024);
+            q.schedule(3, 1);
+            q.schedule(1, 2);
+            assert_eq!(q.pop(), Some((1, 2)));
+            assert_eq!(q.pop(), Some((3, 1)));
+        }
     }
 }

@@ -83,10 +83,15 @@ impl LinkConfig {
     }
 
     /// Effective serialization rate.
+    #[inline]
     pub fn rate_bps(&self) -> f64 {
         self.capacity_bps.min(self.interface_bps)
     }
 
+    // Inlined: `send` is called once per packet on the untraced fast
+    // path, which at fleet scale is the single hottest call site of the
+    // whole simulator.
+    #[inline]
     pub fn serialization_ns(&self, bytes: u32) -> SimTime {
         ((bytes as f64 * 8.0 / self.rate_bps()) * NS_PER_SEC).round() as SimTime
     }
@@ -234,6 +239,7 @@ impl Link {
     }
 
     /// Sender-side queueing + serialization delay if a packet were sent now.
+    #[inline]
     pub fn backlog_ns(&self, now: SimTime) -> SimTime {
         self.busy_until.saturating_sub(now)
     }

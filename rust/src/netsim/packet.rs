@@ -87,16 +87,32 @@ impl Packet {
 }
 
 /// Split a message of `len` bytes into (offset, payload) segments of at
-/// most `max_payload` each.
-pub fn segment(len: u64, max_payload: u32) -> Vec<(u64, u32)> {
+/// most `max_payload` each, lazily. The UDP fast path walks this
+/// directly so the steady-state serve loop stays allocation-free; TCP
+/// collects it (retransmission needs random access).
+#[inline]
+pub fn segment_iter(
+    len: u64,
+    max_payload: u32,
+) -> impl Iterator<Item = (u64, u32)> {
     assert!(max_payload > 0);
-    let mut out = Vec::with_capacity(len.div_ceil(max_payload as u64) as usize);
     let mut off = 0u64;
-    while off < len {
+    std::iter::from_fn(move || {
+        if off >= len {
+            return None;
+        }
         let p = (len - off).min(max_payload as u64) as u32;
-        out.push((off, p));
+        let seg = (off, p);
         off += p as u64;
-    }
+        Some(seg)
+    })
+}
+
+/// [`segment_iter`], collected.
+pub fn segment(len: u64, max_payload: u32) -> Vec<(u64, u32)> {
+    let mut out =
+        Vec::with_capacity(len.div_ceil(max_payload as u64) as usize);
+    out.extend(segment_iter(len, max_payload));
     out
 }
 
@@ -139,6 +155,15 @@ mod tests {
                 assert_eq!(off, expect);
                 expect += p as u64;
             }
+        }
+    }
+
+    #[test]
+    fn segment_iter_matches_collected_segment() {
+        for len in [0u64, 1, 7, 1460, 1461, 2920, 99_999] {
+            let lazy: Vec<(u64, u32)> =
+                segment_iter(len, TCP_MSS).collect();
+            assert_eq!(lazy, segment(len, TCP_MSS), "len {len}");
         }
     }
 

@@ -7,7 +7,7 @@
 
 use super::event::SimTime;
 use super::link::Link;
-use super::packet::{segment, Packet, UDP_MAX_PAYLOAD};
+use super::packet::{segment_iter, Packet, UDP_MAX_PAYLOAD};
 
 #[derive(Clone, Debug)]
 pub struct UdpConfig {
@@ -63,7 +63,10 @@ pub fn send_message(
     let mut lost = Vec::new();
     let mut last_arrival = start;
     let mut last_tx = start;
-    for (offset, payload) in segment(len, cfg.max_payload) {
+    // Lazy segmentation: a lossless send performs zero heap allocations
+    // (`lost` stays an unallocated empty Vec), which the steady-state
+    // serve loop's `alloc-count` smoke depends on.
+    for (offset, payload) in segment_iter(len, cfg.max_payload) {
         let pkt = Packet::datagram(offset, payload, start);
         let out = link.send(start, pkt.wire_bytes());
         stats.datagrams_sent += 1;

@@ -6,6 +6,37 @@
 //! averaged over seeds). xoshiro256** is the standard small-state generator
 //! with excellent statistical properties.
 
+/// SplitMix64 (the reference seed-expansion generator): one add and two
+/// multiply-xorshift rounds per output, with the property that *any* seed
+/// — including 0 and consecutive integers — yields a decorrelated stream.
+///
+/// It seeds [`Rng`]'s xoshiro state, and it is the batched per-stream
+/// derivation pass for fleet-scale populations (the 10^6-stream builder
+/// in `benches/streaming_saturation`): deriving `n` per-entity values
+/// costs one `SplitMix64` walked `n` times ([`SplitMix64::fill`])
+/// instead of constructing `n` full generators.
+#[derive(Clone, Debug)]
+pub struct SplitMix64(pub u64);
+
+impl SplitMix64 {
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Fill `out` with one derived value per slot — the one-pass batched
+    /// seeding used for 10^6-stream populations.
+    pub fn fill(&mut self, out: &mut [u64]) {
+        for slot in out.iter_mut() {
+            *slot = self.next_u64();
+        }
+    }
+}
+
 /// xoshiro256** by Blackman & Vigna (public domain reference algorithm).
 #[derive(Clone, Debug)]
 pub struct Rng {
@@ -13,17 +44,12 @@ pub struct Rng {
 }
 
 impl Rng {
-    /// Seed via SplitMix64 so that similar seeds give unrelated streams.
+    /// Seed via [`SplitMix64`] so that similar seeds give unrelated
+    /// streams.
     pub fn new(seed: u64) -> Self {
-        let mut sm = seed;
-        let mut next = || {
-            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
-            let mut z = sm;
-            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-            z ^ (z >> 31)
-        };
-        let s = [next(), next(), next(), next()];
+        let mut sm = SplitMix64(seed);
+        let s =
+            [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()];
         Rng { s }
     }
 
@@ -99,6 +125,29 @@ impl Rng {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn splitmix_matches_reference_vectors() {
+        // Published SplitMix64 test vector (seed 0) — pins the extracted
+        // generator to the exact sequence the inline seeding always
+        // produced, so every seeded artifact stays byte-identical.
+        let mut sm = SplitMix64(0);
+        assert_eq!(sm.next_u64(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(sm.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(sm.next_u64(), 0x06C4_5D18_8009_454F);
+    }
+
+    #[test]
+    fn splitmix_fill_matches_sequential_draws() {
+        let mut a = SplitMix64(1234567);
+        let mut batch = [0u64; 8];
+        a.fill(&mut batch);
+        let mut b = SplitMix64(1234567);
+        for (i, &v) in batch.iter().enumerate() {
+            assert_eq!(v, b.next_u64(), "slot {i}");
+        }
+        assert_eq!(batch[0], 0x599E_D017_FB08_FC85);
+    }
 
     #[test]
     fn deterministic_for_seed() {

@@ -1,12 +1,13 @@
-//! Differential pin of the event-queue backends: the indexed event
-//! calendar (binary heap on the packed `(time, seq)` key) must reproduce
-//! the retained linear next-event scan **byte for byte** — identical
-//! `StreamFrameRecord` streams and identical processed-event counts —
-//! across randomized draws over architecture × transport × loss ×
-//! tier chain × scenario kind (including MC cut chains) × client count ×
-//! source period × batching × seed.
+//! Differential pin of the event-queue backends: the hierarchical timing
+//! wheel and the indexed event calendar (binary heap on the packed
+//! `(time, seq)` key) must reproduce the retained linear next-event scan
+//! **byte for byte** — identical `StreamFrameRecord` streams and
+//! identical processed-event counts — across randomized draws over
+//! architecture × transport × loss × tier chain × scenario kind
+//! (including MC cut chains) × client count × source period × batching ×
+//! seed.
 //!
-//! Both backends pop the event with the smallest packed key and every
+//! All backends pop the event with the smallest packed key and every
 //! key is unique (the sequence number breaks time ties), so any
 //! divergence is an ordering bug in one of them, not a modeling change.
 //! The suite also carries the `mc@[i] == sc@i` two-tier pin under both
@@ -134,14 +135,27 @@ fn randomized_draws_pin_calendar_to_linear_scan() {
             &*engines[ai], &cfg, dataset, &qos, QueueKind::LinearScan,
         )
         .unwrap();
+        let whl = run_stream_with_queue(
+            &*engines[ai], &cfg, dataset, &qos, QueueKind::Wheel,
+        )
+        .unwrap();
         assert_eq!(
             cal.records, lin.records,
             "draw {draw}: {kind} {} records diverged between backends",
             arch.as_str()
         );
         assert_eq!(
+            cal.records, whl.records,
+            "draw {draw}: {kind} {} wheel records diverged from calendar",
+            arch.as_str()
+        );
+        assert_eq!(
             cal.stats.events_processed, lin.stats.events_processed,
             "draw {draw}: processed-event counts diverged"
+        );
+        assert_eq!(
+            cal.stats.events_processed, whl.stats.events_processed,
+            "draw {draw}: wheel processed-event count diverged"
         );
         assert!(cal.stats.events_processed > 0, "draw {draw}: empty run");
         assert_eq!(cal.records.len(), clients * frames, "draw {draw}");
@@ -178,7 +192,11 @@ fn single_cut_mc_matches_sc_under_both_backends() {
         let sc = make(ScenarioKind::Sc { split });
         let mc = make(ScenarioKind::Mc { cuts: vec![split] });
         let mut reports = Vec::new();
-        for queue in [QueueKind::Calendar, QueueKind::LinearScan] {
+        for queue in [
+            QueueKind::Calendar,
+            QueueKind::LinearScan,
+            QueueKind::Wheel,
+        ] {
             for cfg in [&sc, &mc] {
                 reports.push(
                     run_stream_with_queue(
@@ -192,8 +210,8 @@ fn single_cut_mc_matches_sc_under_both_backends() {
                 );
             }
         }
-        // All four runs — {sc, mc@[split]} × {calendar, linear scan} —
-        // must produce the same record stream.
+        // All six runs — {sc, mc@[split]} × {calendar, linear scan,
+        // wheel} — must produce the same record stream.
         for r in &reports[1..] {
             assert_eq!(
                 reports[0].records, r.records,
